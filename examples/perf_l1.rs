@@ -1,0 +1,33 @@
+//! §Perf L1/L2 iteration harness: times every "perf"-experiment artifact
+//! against the shipped default on the scaled Table-1 baseline.
+use std::path::Path;
+use streamk::bench;
+use streamk::prop::Rng;
+use streamk::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(Manifest::load(Path::new("artifacts"))?)?;
+    let mut rng = Rng::new(31);
+    let a = rng.normal_f32_vec(960 * 1024);
+    let b = rng.normal_f32_vec(1024 * 1024);
+    let mut names: Vec<String> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|x| x.experiment == "perf")
+        .map(|x| x.name.clone())
+        .collect();
+    names.insert(0, "gemm_streamk_nopad_f32_960x1024x1024".into());
+    names.push("gemm_ref_nopad_f32_960x1024x1024".into());
+    names.push("gemm_tile_nopad_f32_960x1024x1024".into());
+    for name in names {
+        engine.warmup(&[&name])?;
+        let stats = bench::bench(1, 5, || {
+            bench::keep(engine.run_f32(&name, &[&a, &b]).unwrap());
+        });
+        println!("{name:<60} min {:>8.2} ms  ({:.3} TFLOP/s)",
+                 stats.min * 1e3,
+                 2.0 * 960.0 * 1024.0 * 1024.0 / stats.min / 1e12);
+    }
+    Ok(())
+}

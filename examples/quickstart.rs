@@ -1,0 +1,73 @@
+//! Quickstart: run one Stream-K GEMM through the full stack.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Loads the AOT-compiled Stream-K artifact (Pallas kernel → HLO text),
+//! executes it on the PJRT CPU client, and cross-checks the result
+//! against (a) the AOT reference-oracle artifact and (b) the pure-rust
+//! naive GEMM — the same three-way check the integration tests enforce.
+
+use std::path::Path;
+
+use streamk::faults::{error_rate, naive_gemm, Matrix};
+use streamk::prop::Rng;
+use streamk::runtime::{Engine, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let engine = Engine::new(Manifest::load(&dir)?)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // 1. Make a random 128x128x128 problem.
+    let mut rng = Rng::new(1);
+    let a = Matrix::random(128, 128, &mut rng);
+    let b = Matrix::random(128, 128, &mut rng);
+
+    // 2. Run it through the Stream-K artifact (8 simulated CUs).
+    let name = "gemm_streamk_nopad_f32_128x128x128_cu8";
+    let (outs, stats) = engine.run_f32(name, &[&a.data, &b.data])?;
+    println!(
+        "{name}\n  compile {:.3}s (cached afterwards), execute {:.6}s, {:.3} TFLOP/s",
+        stats.compile_s,
+        stats.execute_s,
+        stats.tflops()
+    );
+
+    // 3. Cross-check vs the jnp oracle artifact and naive rust GEMM.
+    let (oracle, _) =
+        engine.run_f32("gemm_ref_nopad_f32_128x128x128", &[&a.data, &b.data])?;
+    let vs_oracle = error_rate(&outs[0], &oracle[0], 1e-3);
+    let vs_naive = error_rate(&outs[0], &naive_gemm(&a, &b).data, 1e-2);
+    println!(
+        "  vs jnp oracle:  {} ({} / {} elements off)",
+        if vs_oracle.passed() { "OK" } else { "MISMATCH" },
+        vs_oracle.bad,
+        vs_oracle.total
+    );
+    println!(
+        "  vs naive rust:  {} (max rel err {:.2e})",
+        if vs_naive.passed() { "OK" } else { "MISMATCH" },
+        vs_naive.max_rel_err
+    );
+    anyhow::ensure!(vs_oracle.passed() && vs_naive.passed(), "numerics");
+
+    // 4. Show the schedule that artifact baked in.
+    let sched = streamk::decomp::build_schedule(
+        streamk::decomp::GemmShape::new(128, 128, 128),
+        streamk::decomp::BlockShape::default(),
+        8,
+    )?;
+    println!(
+        "\nschedule: {} tile(s) × {} k-iters on 8 CUs → dp_tiles={} \
+         sk_tiles={} split_tiles={}",
+        sched.grid.num_tiles(),
+        sched.grid.iters_per_tile,
+        sched.dp_tiles,
+        sched.sk_tiles,
+        sched.split_tiles.len()
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+//! Interactive-ish exploration of the Stream-K schedule and its
+//! simulated behaviour — the tool the report's authors needed when they
+//! were reverse-engineering CK ("it would take extensive learning the
+//! library or testing to even know what parameters are permissible").
+//!
+//! ```sh
+//! cargo run --release --example streamk_explorer -- --m 3840 --n 4096 --k 4096
+//! ```
+//!
+//! Prints the decomposition (DP/SK regions, per-CU segments, fixup
+//! schedule), the parameter-legality verdict for the chosen block, and
+//! the simulated MI200 comparison of all three decompositions.
+
+use streamk::cli::{Command, Opt};
+use streamk::decomp::{
+    build_schedule, occupancy, params, splitk, swizzle::Swizzle, tile,
+    BlockShape, GemmShape, TileGrid,
+};
+use streamk::gpu_sim::{gemm, Device, DeviceKind};
+
+fn main() -> anyhow::Result<()> {
+    let cmd = Command::new("streamk_explorer", "inspect a Stream-K schedule")
+        .opt(Opt::value("m", Some("3840"), "M"))
+        .opt(Opt::value("n", Some("4096"), "N"))
+        .opt(Opt::value("k", Some("4096"), "K"))
+        .opt(Opt::value("cus", Some("120"), "compute units"))
+        .opt(Opt::value("bm", Some("128"), "block M"))
+        .opt(Opt::value("bn", Some("128"), "block N"))
+        .opt(Opt::value("bk", Some("64"), "block K"))
+        .opt(Opt::flag("segments", "dump every CU's segment list"));
+    let args = cmd.parse_or_exit();
+    let shape = GemmShape::new(
+        args.usize("m")?,
+        args.usize("n")?,
+        args.usize("k")?,
+    );
+    let block = BlockShape::new(
+        args.usize("bm")?,
+        args.usize("bn")?,
+        args.usize("bk")?,
+    );
+    let cus = args.usize("cus")?;
+
+    // --- parameter legality (the BLK experiment's single-point view) ---
+    let kp = params::KernelParams::new(block, 4);
+    println!("== kernel parameters ==");
+    println!("block {}x{}x{}  VMEM {:.1} KiB  MXU util {:.0}%",
+             block.bm, block.bn, block.bk,
+             kp.vmem_bytes() as f64 / 1024.0,
+             kp.mxu_utilization() * 100.0);
+    match params::check(&kp) {
+        Ok(()) => println!("legal: yes"),
+        Err(reasons) => {
+            println!("legal: NO");
+            for r in &reasons {
+                println!("  - {r}");
+            }
+        }
+    }
+
+    // --- the schedule --------------------------------------------------
+    let sched = build_schedule(shape, block, cus)?;
+    let g = sched.grid;
+    println!("\n== stream-k schedule: {}x{}x{} on {cus} CUs ==",
+             shape.m, shape.n, shape.k);
+    println!("tiles {}x{} = {}  ({} k-iters each, {} total MAC iters)",
+             g.tiles_m, g.tiles_n, g.num_tiles(), g.iters_per_tile,
+             g.total_iters());
+    println!("data-parallel region : {} tiles ({} waves of {cus})",
+             sched.dp_tiles, sched.dp_tiles_per_cu);
+    println!("stream-k region      : {} tiles, {} iters split across {cus} CUs",
+             sched.sk_tiles, sched.sk_iters);
+    println!("split tiles (fixup)  : {} (max {} contributors)",
+             sched.split_tiles.len(), sched.max_contributors);
+    println!("partials workspace   : {} KiB (vs split-k's O(S·M·N))",
+             sched.partials_bytes() / 1024);
+    println!("utilization          : dp {:.1}%  stream-k {:.1}%",
+             sched.quantization_efficiency_dp() * 100.0,
+             sched.quantization_efficiency_sk() * 100.0);
+
+    if args.flag("segments") {
+        println!("\nper-CU segments (tile, k_start, k_len, kind):");
+        for cu in 0..sched.p {
+            let segs: Vec<String> = sched.segments[cu]
+                .iter()
+                .map(|s| {
+                    format!(
+                        "({}, {}, {}, {})",
+                        s.tile,
+                        s.k_start,
+                        s.k_len,
+                        if s.direct { "direct" } else { "partial" }
+                    )
+                })
+                .collect();
+            if !segs.is_empty() || sched.dp_tiles_per_cu > 0 {
+                println!("  cu{cu:>3}: {} dp tiles + {}",
+                         sched.dp_tiles_per_cu, segs.join(" "));
+            }
+        }
+    }
+
+    // --- simulated device comparison -----------------------------------
+    let dev = Device::preset(DeviceKind::Mi200).with_cus(cus.min(120));
+    let grid = TileGrid::new(shape, block.effective(shape));
+    let dp = gemm::simulate(
+        &dev, shape, grid,
+        tile::dp_assignment(grid, dev.num_cus, Swizzle::RowMajor),
+        block.effective(shape), 4,
+    );
+    let sk = gemm::simulate_streamk(&dev, &build_schedule(shape, block, dev.num_cus)?, 4);
+    let s4 = gemm::simulate(
+        &dev, shape, grid,
+        splitk::splitk_assignment(grid, dev.num_cus, 4),
+        block.effective(shape), 4,
+    );
+    println!("\n== simulated MI200 ({} CUs) ==", dev.num_cus);
+    println!("{:<14} {:>10} {:>10} {:>8}", "decomposition", "ms", "TFLOP/s", "util");
+    for (name, r) in [("tile (dp)", &dp), ("split-k s=4", &s4), ("stream-k", &sk)] {
+        println!("{:<14} {:>10.4} {:>10.2} {:>7.1}%",
+                 name, r.total_s * 1e3, r.tflops, r.utilization * 100.0);
+    }
+    println!("\nstream-k speedup vs tile: {:.3}x", dp.total_s / sk.total_s);
+
+    // --- quantization landscape around this problem ---------------------
+    println!("\n== utilization vs tiles (the Figure-1 sawtooth) ==");
+    let pts = occupancy::utilization_sweep(
+        block, cus, shape.n, shape.k,
+        (1..=24).map(|i| i * block.bm * (g.tiles_m / 12).max(1)),
+    );
+    for p in pts.iter().step_by(2) {
+        let bar = "#".repeat((p.dp_efficiency * 32.0) as usize);
+        println!("{:>6} tiles  dp {:>5.1}%  sk {:>5.1}%  |{bar}",
+                 p.num_tiles, p.dp_efficiency * 100.0, p.sk_efficiency * 100.0);
+    }
+    Ok(())
+}

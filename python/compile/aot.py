@@ -1,0 +1,213 @@
+"""AOT pipeline: lower every artifact variant to HLO text + manifest.json.
+
+Run once via ``make artifacts``; the rust runtime
+(``rust/src/runtime``) loads the manifest and compiles/executes the HLO on
+the PJRT CPU client. HLO *text* (not serialized proto) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which
+xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+Usage:
+    cd python && python -m compile.aot --out-dir ../artifacts [--full]
+
+``--full`` additionally emits the paper's exact Table-1 shapes
+(3840x4096x4096 etc.). The default set uses scaled shapes so that
+XLA-CPU compile + bench time stays laptop-scale; the scaling is recorded
+per-artifact in the manifest and EXPERIMENTS.md reports both.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from jax._src.lib import xla_client as xc
+
+from .model import GemmSpec, MlpSpec
+from .train import TrainSpec
+
+MANIFEST_VERSION = 2
+
+# ---------------------------------------------------------------------------
+# Artifact set (DESIGN.md §5 experiment index)
+# ---------------------------------------------------------------------------
+
+# Table 1 shapes — scaled (default) and exact (--full). The scale factor
+# keeps the schedule *regime* intact: base stays DP-dominant hybrid,
+# irregular stays ragged in every dim, small and medium are exact because
+# they are already tiny (medium is the report's bug shape).
+T1_SCALED = [
+    ("t1_base", 960, 1024, 1024),
+    ("t1_small", 3, 9, 9),
+    ("t1_irregular", 480, 500, 500),
+    ("t1_medium", 480, 512, 512),
+]
+T1_FULL = [
+    ("t1_base_full", 3840, 4096, 4096),
+    ("t1_small_full", 3, 9, 9),
+    ("t1_irregular_full", 1920, 2000, 2000),
+    ("t1_medium_full", 480, 512, 512),
+]
+
+
+def artifact_specs(full: bool = False):
+    """The complete artifact set, tagged with the experiment that uses it."""
+    specs = []  # (experiment, spec)
+
+    # Quickstart + integration-test artifacts (small, fast to compile).
+    specs.append(("quickstart", GemmSpec(128, 128, 128, algo="streamk", cus=8)))
+    specs.append(("quickstart", GemmSpec(128, 128, 128, algo="ref")))
+
+    # TAB1: padding study — streamk/tile x pad/nopad per shape + oracle.
+    shapes = T1_SCALED + (T1_FULL if full else [])
+    for (_tag, m, n, k) in shapes:
+        for algo in ("streamk", "tile"):
+            for pad in ("none", "physical"):
+                specs.append(("table1", GemmSpec(m, n, k, algo=algo, pad=pad)))
+        specs.append(("table1", GemmSpec(m, n, k, algo="ref")))
+
+    # SK-VS-DP: add split-k on the base shape (both pads).
+    m, n, k = T1_SCALED[0][1:]
+    for pad in ("none", "physical"):
+        specs.append(("skvsdp", GemmSpec(m, n, k, algo="splitk", pad=pad)))
+
+    # CUBUG: stream-k across CU counts (the report's broken parameter).
+    for cus in (1, 30, 60, 119):
+        specs.append(("cubug", GemmSpec(480, 512, 512, algo="streamk", cus=cus)))
+
+    # Precision claim: one stream-k config per precision.
+    specs.append(("precision", GemmSpec(256, 256, 256, dtype="bf16")))
+    specs.append(("precision", GemmSpec(256, 256, 256, dtype="bf16", algo="ref")))
+
+    # Fused-epilogue variants (ablation: in-kernel epilogue vs L2 epilogue).
+    specs.append(("epilogue", GemmSpec(256, 256, 256, epilogue="gelu")))
+    specs.append(("epilogue", GemmSpec(256, 256, 256, algo="ref", epilogue="gelu")))
+
+    # E2E: the MLP the coordinator serves (two batch sizes for the batcher).
+    specs.append(("e2e", MlpSpec(batch=8)))
+    specs.append(("e2e", MlpSpec(batch=32)))
+    specs.append(("e2e", MlpSpec(batch=128)))
+
+    # TRAIN: one SGD step, forward and backward all Stream-K.
+    specs.append(("train", TrainSpec()))
+
+    # PERF: L1 block-shape iteration on the scaled Table-1 baseline
+    # (EXPERIMENTS.md §Perf — structural knobs, since interpret-mode
+    # wallclock is not a TPU proxy but IS the CPU serving cost).
+    m, n, k = T1_SCALED[0][1:]
+    for bk in (32, 128, 256):
+        specs.append(("perf", GemmSpec(m, n, k, bk=bk)))
+    for bmn in (256,):
+        specs.append(("perf", GemmSpec(m, n, k, bm=bmn, bn=bmn)))
+    specs.append(("perf", GemmSpec(m, n, k, cus=30)))
+    specs.append(("perf", GemmSpec(m, n, k, cus=8)))
+    specs.append(("perf", GemmSpec(m, n, k, cus=8, bk=128)))
+    specs.append(("perf", GemmSpec(m, n, k, cus=120, bm=128, bn=256, bk=128)))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is LOAD-BEARING: the default HLO printer
+    # elides big literals as `constant({...})`, which the 0.5.1 text
+    # parser silently accepts — corrupting the baked Stream-K schedule
+    # metadata (every split tile then reads garbage segment tables; the
+    # symptom is NaN output, indistinguishable from the report's
+    # medium-matrix bug). See EXPERIMENTS.md §Interchange-gotcha.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def lower_spec(spec) -> str:
+    lowered = jax.jit(spec.fn()).lower(*spec.input_specs())
+    return to_hlo_text(lowered)
+
+
+def spec_manifest_entry(experiment: str, spec, file_name: str, elapsed: float):
+    entry = {
+        "name": spec.name(),
+        "file": file_name,
+        "experiment": experiment,
+        "kind": "mlp" if isinstance(spec, MlpSpec) else "gemm",
+        "flops": spec.flops(),
+        "lower_seconds": round(elapsed, 3),
+        "inputs": [
+            {"shape": list(s.shape), "dtype": spec.dtype}
+            for s in spec.input_specs()
+        ],
+        "outputs": [
+            {"shape": list(shape), "dtype": dt}
+            for (shape, dt) in spec.output_shapes()
+        ],
+    }
+    if isinstance(spec, GemmSpec):
+        entry.update(
+            m=spec.m, n=spec.n, k=spec.k, algo=spec.algo, pad=spec.pad,
+            dtype=spec.dtype, epilogue=spec.epilogue, cus=spec.cus,
+            bm=spec.bm, bn=spec.bn, bk=spec.bk, splits=spec.splits,
+        )
+    elif isinstance(spec, TrainSpec):
+        entry.update(
+            kind="train", batch=spec.batch, d_in=spec.d_in,
+            d_hidden=spec.d_hidden, d_out=spec.d_out, dtype=spec.dtype,
+            algo="streamk", cus=spec.cus, lr=spec.lr,
+        )
+    else:
+        entry.update(
+            batch=spec.batch, d_in=spec.d_in, d_hidden=spec.d_hidden,
+            d_out=spec.d_out, dtype=spec.dtype, algo=spec.algo, cus=spec.cus,
+        )
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the paper's exact Table-1 shapes")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name filter (substring)")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "artifacts": []}
+    specs = artifact_specs(full=args.full)
+    filters = args.only.split(",") if args.only else None
+
+    seen = set()
+    for experiment, spec in specs:
+        name = spec.name()
+        if name in seen:
+            continue
+        seen.add(name)
+        if filters and not any(f in name for f in filters):
+            continue
+        t0 = time.time()
+        hlo = lower_spec(spec)
+        elapsed = time.time() - t0
+        file_name = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, file_name), "w") as f:
+            f.write(hlo)
+        manifest["artifacts"].append(
+            spec_manifest_entry(experiment, spec, file_name, elapsed)
+        )
+        print(f"  lowered {name:55s} {len(hlo):>9d} chars  {elapsed:5.1f}s")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

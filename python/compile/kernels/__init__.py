@@ -1,0 +1,13 @@
+"""Pallas GEMM kernels: Stream-K (the paper) + tile-based and Split-K
+baselines, all checked against the pure-jnp oracle in ``ref``."""
+
+from .ref import gemm_ref  # noqa: F401
+from .splitk import splitk_gemm  # noqa: F401
+from .streamk import streamk_gemm  # noqa: F401
+from .tile_gemm import tile_gemm  # noqa: F401
+
+ALGORITHMS = {
+    "streamk": streamk_gemm,
+    "tile": tile_gemm,
+    "splitk": splitk_gemm,
+}

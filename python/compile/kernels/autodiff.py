@@ -1,0 +1,46 @@
+"""Differentiable Stream-K GEMM.
+
+`pallas_call` kernels do not get automatic differentiation; the classic
+treatment (and what every production Stream-K integration does) is a
+custom VJP in which **both backward matmuls are themselves Stream-K
+GEMMs**:
+
+    C  = A @ B
+    dA = dC @ Bᵀ        (an M×K GEMM with inner dim N)
+    dB = Aᵀ @ dC        (a K×N GEMM with inner dim M)
+
+so the training path exercises the same kernel three times per layer —
+the whole point of having one work-centric configuration per precision:
+the backward shapes (transposed, different aspect ratios) need no new
+kernel selection.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .streamk import streamk_gemm
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def streamk_gemm_ad(a, b, cus=120, bm=128, bn=128, bk=64, pad="none"):
+    """Stream-K GEMM with a Stream-K backward pass."""
+    return streamk_gemm(a, b, cus=cus, bm=bm, bn=bn, bk=bk, pad=pad)
+
+
+def _fwd(a, b, cus, bm, bn, bk, pad):
+    c = streamk_gemm(a, b, cus=cus, bm=bm, bn=bn, bk=bk, pad=pad)
+    return c, (a, b)
+
+
+def _bwd(cus, bm, bn, bk, pad, residuals, dc):
+    a, b = residuals
+    kw = dict(cus=cus, bm=bm, bn=bn, bk=bk, pad=pad)
+    da = streamk_gemm(dc, b.T, **kw)
+    db = streamk_gemm(a.T, dc, **kw)
+    return da, db
+
+
+streamk_gemm_ad.defvjp(_fwd, _bwd)

@@ -1,0 +1,127 @@
+"""Shared addressing/masking helpers for all Pallas GEMM kernels.
+
+Padding policies (DESIGN.md §5 TAB1 — what Table 1 actually varies):
+
+- ``pad="physical"``   — the CK ``MNKPadding``-style *materialized* pad:
+  A and B are copied into block-multiple buffers with ``jnp.pad`` before the
+  kernel runs, the kernel does no bounds handling at all, and C is sliced
+  back afterwards. This "artificially expands the problem size" (report
+  §Methodology) and pays the pad memcpy + inflated loads.
+
+- ``pad="none"``       — the no-padding variant the report measures: no
+  copies. Edge tiles in M/N are handled with the *clamped-overlap* trick
+  (the last tile is re-based at ``dim - block`` so its slice is always in
+  bounds; the overlap region is rewritten with bit-identical values), and
+  the K tail is handled with a ≥-mask against the intended k-offset so no
+  k-column is ever double-counted. This is the TPU analogue of CK's
+  predicated addressing: a couple of scalar ops + one elementwise select
+  per block instead of a physically inflated problem.
+
+Both policies produce bit-identical results; Table 1's benchmark contrasts
+their cost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 64
+
+PAD_POLICIES = ("none", "physical")
+
+
+def effective_blocks(m: int, n: int, k: int, bm: int, bn: int, bk: int):
+    """Shrink blocks for degenerate dims (dim < block) so the clamped-
+    overlap addressing below is always legal (slice size <= dim)."""
+    return min(bm, m), min(bn, n), min(bk, k)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def clamp_start(intended, limit):
+    """Clamped tile base: start of a slice of fixed block size within a
+    dim of size ``limit + block``; mirrors XLA dynamic-slice clamping but
+    done explicitly so stores use the same base as loads."""
+    return jnp.minimum(intended, limit)
+
+
+def load_a_block(a_ref, r0c, kg, ks_c, bm, bk, k_dim):
+    """Load A[r0c : r0c+bm, ks_c : ks_c+bk] masked so only the *intended*
+    k-columns [kg, kg+bk) ∩ [0, K) contribute."""
+    blk = a_ref[pl.ds(r0c, bm), pl.ds(ks_c, bk)]
+    if k_dim % bk == 0:
+        return blk.astype(jnp.float32)
+    mask = (ks_c + jax.lax.iota(jnp.int32, bk)[None, :]) >= kg
+    return jnp.where(mask, blk, 0).astype(jnp.float32)
+
+
+def load_b_block(b_ref, kg, ks_c, c0c, bk, bn, k_dim):
+    blk = b_ref[pl.ds(ks_c, bk), pl.ds(c0c, bn)]
+    if k_dim % bk == 0:
+        return blk.astype(jnp.float32)
+    mask = (ks_c + jax.lax.iota(jnp.int32, bk)[:, None]) >= kg
+    return jnp.where(mask, blk, 0).astype(jnp.float32)
+
+
+def k_accumulate(a_ref, b_ref, r0c, c0c, k_lo, k_len, bm, bn, bk, k_dim):
+    """Σ_{j∈[k_lo, k_lo+k_len)} A_blk(j) @ B_blk(j), f32 accumulator.
+
+    ``k_lo``/``k_len`` are in units of BK-iterations; a zero-trip loop
+    yields zeros (used to skip invalid schedule slots without branching).
+    """
+    k_limit = max(k_dim - bk, 0)
+
+    def body(j, acc):
+        kg = (k_lo + j) * bk
+        ks_c = clamp_start(kg, k_limit)
+        a_blk = load_a_block(a_ref, r0c, kg, ks_c, bm, bk, k_dim)
+        b_blk = load_b_block(b_ref, kg, ks_c, c0c, bk, bn, k_dim)
+        return acc + jax.lax.dot_general(
+            a_blk, b_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    init = jnp.zeros((bm, bn), jnp.float32)
+    return jax.lax.fori_loop(0, k_len, body, init)
+
+
+def apply_epilogue(acc, epilogue: str):
+    return _ref.apply_epilogue(acc, epilogue)
+
+
+def pad_operands(a, b, bm: int, bn: int, bk: int):
+    """``pad="physical"``: materialize block-multiple copies of A and B."""
+    m, k = a.shape
+    _, n = b.shape
+    mp, np_, kp = cdiv(m, bm) * bm, cdiv(n, bn) * bn, cdiv(k, bk) * bk
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n)))
+    return a_p, b_p, (mp, np_, kp)
+
+
+def whole(shape):
+    """BlockSpec for an un-blocked (whole-array) ref shared by all programs."""
+    return pl.BlockSpec(shape, lambda *_: (0,) * len(shape))
+
+
+def validate_pad(pad: str) -> None:
+    if pad not in PAD_POLICIES:
+        raise ValueError(f"pad must be one of {PAD_POLICIES}, got {pad!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def interpret() -> bool:
+    """All kernels run interpret=True: CPU PJRT cannot execute Mosaic
+    custom-calls (DESIGN.md §3). Central switch so a real-TPU build only
+    changes one line."""
+    return True

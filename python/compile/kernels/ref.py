@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracle for every GEMM kernel variant.
+
+This is the ground truth the pytest suite (and hypothesis sweeps) compare
+the Pallas kernels against; it is also lowered to its own artifact so the
+rust integration tests can cross-check kernel outputs end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gemm_ref(a, b, *, epilogue: str = "none", bias=None, acc_dtype=jnp.float32):
+    """C = epilogue(A @ B + bias), accumulated in ``acc_dtype``.
+
+    Matches the kernels' contract: accumulation always happens in f32
+    (the MXU accumulator dtype) regardless of the input dtype, and the
+    result is cast back to the input dtype.
+    """
+    out_dtype = a.dtype
+    c = jnp.matmul(
+        a.astype(acc_dtype), b.astype(acc_dtype),
+        preferred_element_type=acc_dtype,
+    )
+    if bias is not None:
+        c = c + bias.astype(acc_dtype)[None, :]
+    c = apply_epilogue(c, epilogue)
+    return c.astype(out_dtype)
+
+
+def apply_epilogue(c, epilogue: str):
+    """Shared epilogue menu (kernels import this to guarantee parity)."""
+    if epilogue == "none":
+        return c
+    if epilogue == "relu":
+        return jnp.maximum(c, 0.0)
+    if epilogue == "gelu":
+        # tanh-approximation GELU, the deep-learning default.
+        return (
+            0.5
+            * c
+            * (1.0 + jnp.tanh(0.7978845608028654 * (c + 0.044715 * c**3)))
+        )
+    raise ValueError(f"unknown epilogue {epilogue!r}")

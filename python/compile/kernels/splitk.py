@@ -1,0 +1,90 @@
+"""Fixed Split-K GEMM — the second baseline from Osama et al.
+
+The K loop of every output tile is cut into ``splits`` equal chunks, each
+computed by its own grid program into a partials buffer; a jnp reduction
+(XLA-fused) sums the chunks and applies the epilogue. Split-K fixes the
+quantization problem only when the split factor happens to match the
+leftover parallelism — the crossover `cargo bench --bench
+streamk_vs_baselines` sweeps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+from . import ref as _ref
+
+
+def _kernel(a_ref, b_ref, p_ref, *, m, n, k, bm, bn, bk, splits, ipt):
+    s = pl.program_id(0)
+    tm = pl.program_id(1)
+    tn = pl.program_id(2)
+    r0 = cm.clamp_start(tm * bm, max(m - bm, 0))
+    c0 = cm.clamp_start(tn * bn, max(n - bn, 0))
+    # Chunk s owns k-iterations [k_lo, k_hi): balanced split, sizes differ
+    # by at most one BK-step (same arithmetic as decomp::splitk in rust).
+    k_lo = (s * ipt) // splits
+    k_hi = ((s + 1) * ipt) // splits
+    acc = cm.k_accumulate(
+        a_ref, b_ref, r0, c0, k_lo, k_hi - k_lo, bm, bn, bk, k
+    )
+    p_ref[0, pl.ds(r0, bm), pl.ds(c0, bn)] = acc
+
+
+def splitk_gemm(
+    a,
+    b,
+    *,
+    splits: int = 4,
+    bm: int = cm.DEFAULT_BM,
+    bn: int = cm.DEFAULT_BN,
+    bk: int = cm.DEFAULT_BK,
+    pad: str = "none",
+    epilogue: str = "none",
+):
+    """C = epilogue(Σ_s partial_s) with a fixed K-split factor."""
+    cm.validate_pad(pad)
+    if splits < 1:
+        raise ValueError(f"splits must be >= 1, got {splits}")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    out_dtype = a.dtype
+
+    if pad == "physical":
+        a_run, b_run, _ = cm.pad_operands(a, b, bm, bn, bk)
+        mm, nn, kk = a_run.shape[0], b_run.shape[1], a_run.shape[1]
+    else:
+        a_run, b_run = a, b
+        mm, nn, kk = m, n, k
+
+    bm_e, bn_e, bk_e = cm.effective_blocks(mm, nn, kk, bm, bn, bk)
+    ipt = cm.cdiv(kk, bk_e)
+    splits = min(splits, ipt)  # never more chunks than k-iterations
+    grid = (splits, cm.cdiv(mm, bm_e), cm.cdiv(nn, bn_e))
+
+    kern = functools.partial(
+        _kernel, m=mm, n=nn, k=kk, bm=bm_e, bn=bn_e, bk=bk_e,
+        splits=splits, ipt=ipt,
+    )
+    # The partials buffer lives in f32 regardless of input dtype (MXU
+    # accumulator discipline) and is (splits, M, N) — the classic Split-K
+    # workspace cost Stream-K's 2-slot buffer avoids.
+    partials = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[cm.whole(a_run.shape), cm.whole(b_run.shape)],
+        out_specs=pl.BlockSpec(
+            (1, mm, nn), lambda s, tm, tn: (s, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((splits, mm, nn), jnp.float32),
+        interpret=cm.interpret(),
+    )(a_run, b_run)
+    c = _ref.apply_epilogue(jnp.sum(partials, axis=0), epilogue)
+    c = c.astype(out_dtype)
+    return c[:m, :n] if pad == "physical" else c

@@ -1,0 +1,251 @@
+"""Stream-K GEMM — the paper's work-centric decomposition, for TPU/Pallas.
+
+Two-phase, atomics-free formulation (DESIGN.md §3):
+
+**Phase 1** (grid = P programs, one per simulated CU): each program runs
+
+  1. its data-parallel quota — ``dp_tiles_per_cu`` whole tiles assigned in
+     wave order (tile = wave·P + p), full K loop, direct store; and
+  2. its Stream-K segment list — an even share of the MAC-iteration space
+     of the trailing ``P + (tiles mod P)`` tiles. Segments that cover a
+     tile's whole K range are stored directly; boundary fragments go to a
+     two-slot partials buffer ``partials[p, slot]``.
+
+**Phase 2** (grid = #split tiles): for every tile whose K range was cut by
+a CU boundary, sum the statically-known contributor fragments and store
+the finished tile (with epilogue).
+
+Everything data-dependent in CUDA Stream-K (tile ownership, fixup peers,
+flag spinning) is *static* here: the schedule is a pure function of
+(M, N, K, block, P) computed by ``partition.build_schedule`` at trace time
+and baked into the HLO as constant operands. The kernels contain no
+data-dependent control flow and no cross-program communication — the TPU
+sequential-grid analogue of Stream-K's persistent CTAs.
+
+The report's "compute unit bug" (CU-count parameter corrupting results)
+cannot happen by construction here: P is an explicit schedule parameter
+and the pytest/hypothesis suite sweeps it; the rust `faults` module
+re-creates the *buggy* mapping for the CUBUG experiment instead.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+from .. import partition
+
+# seg_meta column layout (int32): one row per (cu, segment slot).
+SEG_TILE, SEG_KSTART, SEG_KLEN, SEG_DIRECT, SEG_SLOT = range(5)
+# fix_meta column layout (int32): one row per (split tile, contributor slot).
+FIX_CU, FIX_SLOT, FIX_VALID = range(3)
+
+
+def _schedule_arrays(sched: partition.StreamKSchedule):
+    """Pack the schedule into dense int32 arrays for the kernels.
+
+    Invalid slots are encoded with k_len = 0 (phase 1) / valid = 0
+    (phase 2) so the kernels can loop to a uniform bound without
+    branching on a per-CU segment count.
+    """
+    p, smax = sched.p, max(sched.max_segments, 1)
+    seg = np.zeros((p, smax, 5), np.int32)
+    for cu, segs in enumerate(sched.segments):
+        for si, g in enumerate(segs):
+            seg[cu, si] = (
+                g.tile, g.k_start, g.k_len, int(g.direct), max(g.slot, 0)
+            )
+    cmax = max(sched.max_contributors, 1)
+    nsplit = len(sched.split_tiles)
+    fix_tile = np.zeros((max(nsplit, 1),), np.int32)
+    fix = np.zeros((max(nsplit, 1), cmax, 3), np.int32)
+    for ti, st in enumerate(sched.split_tiles):
+        fix_tile[ti] = st.tile
+        for ci, c in enumerate(st.contributors):
+            fix[ti, ci] = (c.cu, c.slot, 1)
+    return seg, fix_tile, fix
+
+
+def _phase1(
+    a_ref, b_ref, seg_ref, c_ref, part_ref,
+    *, m, n, k, bm, bn, bk, tiles_n, ipt, p_total,
+    dp_tiles_per_cu, smax, epilogue, out_dtype,
+):
+    p = pl.program_id(0)
+    r_lim = max(m - bm, 0)
+    c_lim = max(n - bn, 0)
+
+    def tile_addr(tile):
+        tm = tile // tiles_n
+        tn = tile % tiles_n
+        return (
+            cm.clamp_start(tm * bm, r_lim),
+            cm.clamp_start(tn * bn, c_lim),
+        )
+
+    def store_tile(tile, acc):
+        r0, c0 = tile_addr(tile)
+        c_ref[pl.ds(r0, bm), pl.ds(c0, bn)] = cm.apply_epilogue(
+            acc, epilogue
+        ).astype(out_dtype)
+
+    # --- data-parallel quota: whole tiles, wave-strided assignment -------
+    def dp_body(wave, _):
+        tile = wave * p_total + p
+        r0, c0 = tile_addr(tile)
+        acc = cm.k_accumulate(a_ref, b_ref, r0, c0, 0, ipt, bm, bn, bk, k)
+        store_tile(tile, acc)
+        return 0
+
+    if dp_tiles_per_cu > 0:
+        jax.lax.fori_loop(0, dp_tiles_per_cu, dp_body, 0)
+
+    # --- stream-k segments (≤ smax, k_len = 0 slots are no-ops) ----------
+    for s in range(smax):
+        meta = seg_ref[0, s]
+        tile = meta[SEG_TILE]
+        k_start = meta[SEG_KSTART]
+        k_len = meta[SEG_KLEN]
+        direct = meta[SEG_DIRECT]
+        slot = meta[SEG_SLOT]
+        r0, c0 = tile_addr(tile)
+        acc = cm.k_accumulate(
+            a_ref, b_ref, r0, c0, k_start, k_len, bm, bn, bk, k
+        )
+
+        @pl.when(jnp.logical_and(k_len > 0, direct == 1))
+        def _():
+            store_tile(tile, acc)
+
+        @pl.when(jnp.logical_and(k_len > 0, direct == 0))
+        def _():
+            part_ref[0, slot] = acc
+
+
+def _phase2(
+    part_ref, fixt_ref, fix_ref, cin_ref, c_ref,
+    *, m, n, bm, bn, tiles_n, cmax, epilogue, out_dtype,
+):
+    t = pl.program_id(0)
+
+    # Pass the phase-1 C through once (program 0), then overwrite the
+    # split tiles. With input_output_aliasing this copy is elided by XLA.
+    @pl.when(t == 0)
+    def _():
+        c_ref[...] = cin_ref[...]
+
+    tile = fixt_ref[0]
+    tm = tile // tiles_n
+    tn = tile % tiles_n
+    r0 = cm.clamp_start(tm * bm, max(m - bm, 0))
+    c0 = cm.clamp_start(tn * bn, max(n - bn, 0))
+
+    def body(ci, acc):
+        meta = fix_ref[0, ci]
+        cu = meta[FIX_CU]
+        slot = meta[FIX_SLOT]
+        valid = meta[FIX_VALID]
+        frag = part_ref[pl.ds(cu, 1), pl.ds(slot, 1)][0, 0]
+        return acc + jnp.where(valid > 0, frag, 0.0)
+
+    acc = jax.lax.fori_loop(0, cmax, body, jnp.zeros((bm, bn), jnp.float32))
+    c_ref[pl.ds(r0, bm), pl.ds(c0, bn)] = cm.apply_epilogue(
+        acc, epilogue
+    ).astype(out_dtype)
+
+
+def streamk_gemm(
+    a,
+    b,
+    *,
+    cus: int = 120,
+    bm: int = cm.DEFAULT_BM,
+    bn: int = cm.DEFAULT_BN,
+    bk: int = cm.DEFAULT_BK,
+    pad: str = "none",
+    epilogue: str = "none",
+):
+    """C = epilogue(A @ B) with the hybrid Stream-K schedule on ``cus``
+    simulated compute units.
+
+    One kernel *configuration* serves every shape at a given precision —
+    the storage/heuristics claim of the paper — because the schedule is
+    data, not code.
+    """
+    cm.validate_pad(pad)
+    if cus < 1:
+        raise ValueError(f"cus must be >= 1, got {cus}")
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    out_dtype = a.dtype
+
+    if pad == "physical":
+        a_run, b_run, _ = cm.pad_operands(a, b, bm, bn, bk)
+        mm, nn, kk = a_run.shape[0], b_run.shape[1], a_run.shape[1]
+    else:
+        a_run, b_run = a, b
+        mm, nn, kk = m, n, k
+
+    bm_e, bn_e, bk_e = cm.effective_blocks(mm, nn, kk, bm, bn, bk)
+    sched = partition.build_schedule(
+        mm, nn, kk, partition.BlockShape(bm_e, bn_e, bk_e), cus
+    )
+    seg_np, fixt_np, fix_np = _schedule_arrays(sched)
+    smax = seg_np.shape[1]
+    cmax = fix_np.shape[1]
+    nsplit = len(sched.split_tiles)
+
+    k1 = functools.partial(
+        _phase1, m=mm, n=nn, k=kk, bm=bm_e, bn=bn_e, bk=bk_e,
+        tiles_n=sched.tiles_n, ipt=sched.iters_per_tile, p_total=cus,
+        dp_tiles_per_cu=sched.dp_tiles_per_cu, smax=smax,
+        epilogue=epilogue, out_dtype=out_dtype,
+    )
+    c1, partials = pl.pallas_call(
+        k1,
+        grid=(cus,),
+        in_specs=[
+            cm.whole(a_run.shape),
+            cm.whole(b_run.shape),
+            pl.BlockSpec((1, smax, 5), lambda p: (p, 0, 0)),
+        ],
+        out_specs=[
+            cm.whole((mm, nn)),
+            pl.BlockSpec((1, 2, bm_e, bn_e), lambda p: (p, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((mm, nn), out_dtype),
+            jax.ShapeDtypeStruct((cus, 2, bm_e, bn_e), jnp.float32),
+        ],
+        interpret=cm.interpret(),
+    )(a_run, b_run, jnp.asarray(seg_np))
+
+    if nsplit == 0:
+        c = c1  # perfectly aligned schedule: no fixup pass needed at all
+    else:
+        k2_ = functools.partial(
+            _phase2, m=mm, n=nn, bm=bm_e, bn=bn_e, tiles_n=sched.tiles_n,
+            cmax=cmax, epilogue=epilogue, out_dtype=out_dtype,
+        )
+        c = pl.pallas_call(
+            k2_,
+            grid=(nsplit,),
+            in_specs=[
+                cm.whole(partials.shape),
+                pl.BlockSpec((1,), lambda t: (t,)),
+                pl.BlockSpec((1, cmax, 3), lambda t: (t, 0, 0)),
+                cm.whole((mm, nn)),
+            ],
+            out_specs=cm.whole((mm, nn)),
+            out_shape=jax.ShapeDtypeStruct((mm, nn), out_dtype),
+            input_output_aliases={3: 0},
+            interpret=cm.interpret(),
+        )(partials, jnp.asarray(fixt_np), jnp.asarray(fix_np), c1)
+    return c[:m, :n] if pad == "physical" else c

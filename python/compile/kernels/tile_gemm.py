@@ -1,0 +1,77 @@
+"""Conventional tile-based (data-parallel) GEMM — the paper's baseline.
+
+One grid program per output tile (the classic "one CTA per tile"
+decomposition of Figure 1). Each program owns its BM×BN tile and runs the
+full K loop. When the tile count does not divide the CU count, real
+hardware leaves CUs idle in the final wave — the quantization inefficiency
+Stream-K removes; `gpu_sim` models that effect, this kernel provides the
+numerics and the HLO artifact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+
+def _kernel(a_ref, b_ref, o_ref, *, m, n, k, bm, bn, bk, epilogue, out_dtype):
+    tm = pl.program_id(0)
+    tn = pl.program_id(1)
+    ipt = cm.cdiv(k, bk)
+    r0 = cm.clamp_start(tm * bm, max(m - bm, 0))
+    c0 = cm.clamp_start(tn * bn, max(n - bn, 0))
+    acc = cm.k_accumulate(a_ref, b_ref, r0, c0, 0, ipt, bm, bn, bk, k)
+    acc = cm.apply_epilogue(acc, epilogue)
+    o_ref[pl.ds(r0, bm), pl.ds(c0, bn)] = acc.astype(out_dtype)
+
+
+def tile_gemm(
+    a,
+    b,
+    *,
+    bm: int = cm.DEFAULT_BM,
+    bn: int = cm.DEFAULT_BN,
+    bk: int = cm.DEFAULT_BK,
+    pad: str = "none",
+    epilogue: str = "none",
+):
+    """C = epilogue(A @ B) with the conventional tile-per-program schedule.
+
+    ``pad`` selects the Table-1 policy: ``"physical"`` (materialized
+    block-multiple copies) or ``"none"`` (clamped-overlap edge handling).
+    """
+    cm.validate_pad(pad)
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch {k} vs {k2}"
+    out_dtype = a.dtype
+
+    if pad == "physical":
+        a_run, b_run, (mp, np_, _) = cm.pad_operands(a, b, bm, bn, bk)
+        mm, nn, kk = a_run.shape[0], b_run.shape[1], a_run.shape[1]
+    else:
+        a_run, b_run = a, b
+        mm, nn, kk = m, n, k
+        mp, np_ = m, n
+
+    bm_e, bn_e, bk_e = cm.effective_blocks(mm, nn, kk, bm, bn, bk)
+    grid = (cm.cdiv(mm, bm_e), cm.cdiv(nn, bn_e))
+
+    kern = functools.partial(
+        _kernel, m=mm, n=nn, k=kk, bm=bm_e, bn=bn_e, bk=bk_e,
+        epilogue=epilogue, out_dtype=out_dtype,
+    )
+    c = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[cm.whole(a_run.shape), cm.whole(b_run.shape)],
+        out_specs=cm.whole((mp, np_)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=cm.interpret(),
+    )(a_run, b_run)
+    return c[:m, :n] if pad == "physical" else c

@@ -1,0 +1,152 @@
+"""L2 — JAX compute graphs built on the L1 kernels.
+
+Everything here is *build-time only*: `aot.py` lowers these functions to
+HLO text once, and the rust coordinator executes the artifacts via PJRT.
+Nothing in this module may ever run on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ALGORITHMS, gemm_ref
+
+DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSpec:
+    """One GEMM artifact variant — the unit of AOT compilation.
+
+    Stream-K's 'single configuration per precision' claim shows up here:
+    `algo="streamk"` needs exactly one (bm, bn, bk) per dtype for every
+    problem shape, while tile-based libraries ship a config *per shape
+    class* (the kernel-selection-heuristics problem the paper describes).
+    """
+
+    m: int
+    n: int
+    k: int
+    algo: str = "streamk"          # streamk | tile | splitk | ref
+    dtype: str = "f32"
+    pad: str = "none"              # none | physical
+    epilogue: str = "none"         # none | relu | gelu
+    cus: int = 120                 # stream-k grid size (simulated CUs)
+    bm: int = 128
+    bn: int = 128
+    bk: int = 64
+    splits: int = 4                # split-k only
+
+    def name(self) -> str:
+        pad = "nopad" if self.pad == "none" else "pad"
+        base = f"gemm_{self.algo}_{pad}_{self.dtype}_{self.m}x{self.n}x{self.k}"
+        if self.epilogue != "none":
+            base += f"_{self.epilogue}"
+        if self.algo == "streamk" and self.cus != 120:
+            base += f"_cu{self.cus}"
+        if self.algo == "splitk":
+            base += f"_s{self.splits}"
+        if (self.bm, self.bn, self.bk) != (128, 128, 64):
+            base += f"_blk{self.bm}x{self.bn}x{self.bk}"
+        return base
+
+    def fn(self) -> Callable:
+        dt = DTYPES[self.dtype]
+
+        def run(a, b):
+            if self.algo == "ref":
+                return (gemm_ref(a, b, epilogue=self.epilogue),)
+            kw = dict(
+                bm=self.bm, bn=self.bn, bk=self.bk,
+                pad=self.pad, epilogue=self.epilogue,
+            )
+            if self.algo == "streamk":
+                kw["cus"] = self.cus
+            elif self.algo == "splitk":
+                kw["splits"] = self.splits
+            return (ALGORITHMS[self.algo](a, b, **kw),)
+
+        _ = dt
+        return run
+
+    def input_specs(self):
+        dt = DTYPES[self.dtype]
+        return (
+            jax.ShapeDtypeStruct((self.m, self.k), dt),
+            jax.ShapeDtypeStruct((self.k, self.n), dt),
+        )
+
+    def output_shapes(self):
+        return [((self.m, self.n), self.dtype)]
+
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """Two-layer MLP forward pass — the end-to-end serving workload.
+
+    y = (gelu(x @ W1 + b1)) @ W2 + b2, both matmuls through the Stream-K
+    kernel. This is what `examples/serve_mlp.rs` batches and serves.
+    """
+
+    batch: int = 32
+    d_in: int = 256
+    d_hidden: int = 512
+    d_out: int = 256
+    dtype: str = "f32"
+    algo: str = "streamk"
+    cus: int = 120
+    bm: int = 128
+    bn: int = 128
+    bk: int = 64
+
+    def name(self) -> str:
+        return (
+            f"mlp_{self.algo}_{self.dtype}_"
+            f"b{self.batch}_{self.d_in}x{self.d_hidden}x{self.d_out}"
+        )
+
+    def fn(self) -> Callable:
+        gemm = ALGORITHMS[self.algo]
+        kw = dict(bm=self.bm, bn=self.bn, bk=self.bk, pad="none")
+        if self.algo == "streamk":
+            kw["cus"] = self.cus
+
+        def run(x, w1, b1, w2, b2):
+            h = gemm(x, w1, **kw)
+            h = jax.nn.gelu(h + b1[None, :], approximate=True)
+            y = gemm(h, w2, **kw)
+            return (y + b2[None, :],)
+
+        return run
+
+    def ref_fn(self) -> Callable:
+        def run(x, w1, b1, w2, b2):
+            h = jax.nn.gelu(x @ w1 + b1[None, :], approximate=True)
+            return (h @ w2 + b2[None, :],)
+
+        return run
+
+    def input_specs(self):
+        dt = DTYPES[self.dtype]
+        return (
+            jax.ShapeDtypeStruct((self.batch, self.d_in), dt),
+            jax.ShapeDtypeStruct((self.d_in, self.d_hidden), dt),
+            jax.ShapeDtypeStruct((self.d_hidden,), dt),
+            jax.ShapeDtypeStruct((self.d_hidden, self.d_out), dt),
+            jax.ShapeDtypeStruct((self.d_out,), dt),
+        )
+
+    def output_shapes(self):
+        return [((self.batch, self.d_out), self.dtype)]
+
+    def flops(self) -> int:
+        return 2 * self.batch * (
+            self.d_in * self.d_hidden + self.d_hidden * self.d_out
+        )

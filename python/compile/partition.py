@@ -1,0 +1,312 @@
+"""Stream-K partition math — the Python mirror of ``rust/src/decomp``.
+
+Everything here is *static*: given (M, N, K, block shape, CU count) the
+entire Stream-K schedule — which CU processes which MAC iterations, which
+output tiles are written directly and which need fixup, and who contributes
+what k-range to each split tile — is a pure function computed at trace time.
+The Pallas kernels bake the resulting index arrays into the lowered HLO, so
+the runtime kernel contains no data-dependent control flow and needs no
+atomics (TPU adaptation of Stream-K's spin-lock fixup; DESIGN.md §3).
+
+The Rust side (``decomp::streamk``) implements the identical math; the two
+are kept bit-identical by the golden-file parity test over
+``testdata/partition_cases.json``.
+
+Hybrid schedule (Osama et al. §4.4, "Stream-K + data-parallel"):
+with ``t`` output tiles and ``P`` CUs, let ``w = t // P`` (full waves) and
+``r = t % P``. The first ``dp_tiles = max(w - 1, 0) * P`` tiles are plain
+data-parallel (each CU owns whole tiles, no fixup); the trailing
+``sk_tiles = t - dp_tiles`` (= ``P + r`` when ``w >= 1``, else ``r`` == all
+tiles) have their MAC-iteration space split *evenly* across all P CUs.
+This bounds the per-CU segment count at 3 and the partial buffer at two
+BM×BN slots per CU while eliminating the quantization inefficiency of the
+final partial wave — the whole point of Stream-K.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import List
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division (matches rust `decomp::cdiv`)."""
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockShape:
+    bm: int = 128
+    bn: int = 128
+    bk: int = 64
+
+    def flops_per_iter(self) -> int:
+        return 2 * self.bm * self.bn * self.bk
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    """A contiguous run of MAC iterations a CU spends inside one tile."""
+
+    tile: int        # linear tile id (row-major over (tiles_m, tiles_n))
+    k_start: int     # first k-iteration (unit: BK blocks) within the tile
+    k_len: int       # number of k-iterations
+    direct: bool     # covers the tile's FULL k range -> CU writes C itself
+    slot: int        # partial-buffer slot (0|1) when not direct, else -1
+
+
+@dataclasses.dataclass(frozen=True)
+class Contributor:
+    cu: int
+    slot: int
+    k_start: int
+    k_len: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SplitTile:
+    tile: int
+    contributors: List[Contributor]
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamKSchedule:
+    """Complete static Stream-K schedule for one GEMM problem."""
+
+    m: int
+    n: int
+    k: int
+    block: BlockShape
+    p: int                      # CU / grid-program count
+    tiles_m: int
+    tiles_n: int
+    num_tiles: int
+    iters_per_tile: int
+    total_iters: int
+    dp_tiles: int               # tiles [0, dp_tiles) are data-parallel
+    sk_tiles: int               # tiles [dp_tiles, num_tiles) are stream-k
+    sk_iters: int               # sk_tiles * iters_per_tile
+    dp_tiles_per_cu: int        # uniform: dp_tiles / p (exact)
+    cu_sk_start: List[int]      # per-CU sk-iteration range [start, end)
+    cu_sk_end: List[int]
+    segments: List[List[Segment]]   # per CU, ordered by iteration
+    split_tiles: List[SplitTile]    # tiles needing the fixup pass
+    max_segments: int           # max len(segments[p]) — kernel unroll bound
+    max_contributors: int       # max contributors of any split tile
+
+    # ---- derived helpers used by kernels, benches and the simulator ----
+
+    def tile_rc(self, tile: int) -> tuple[int, int]:
+        return tile // self.tiles_n, tile % self.tiles_n
+
+    def direct_tiles(self, cu: int) -> List[int]:
+        """DP tiles owned by `cu` (strided assignment, wave order)."""
+        return [cu + w * self.p for w in range(self.dp_tiles_per_cu)]
+
+    def quantization_efficiency_dp(self) -> float:
+        """Utilization of a pure data-parallel schedule (Figure 1)."""
+        if self.num_tiles == 0:
+            return 1.0
+        waves = cdiv(self.num_tiles, self.p)
+        return self.num_tiles / (waves * self.p)
+
+    def quantization_efficiency_sk(self) -> float:
+        """Utilization of this hybrid Stream-K schedule: the DP part is
+        full waves by construction; the SK part splits evenly, so the
+        imbalance is at most one MAC iteration per CU."""
+        if self.total_iters == 0:
+            return 1.0
+        per_cu_max = max(
+            self.dp_tiles_per_cu * self.iters_per_tile
+            + (self.cu_sk_end[p] - self.cu_sk_start[p])
+            for p in range(self.p)
+        )
+        return self.total_iters / (per_cu_max * self.p) if per_cu_max else 1.0
+
+
+def build_schedule(
+    m: int, n: int, k: int, block: BlockShape = BlockShape(), p: int = 120
+) -> StreamKSchedule:
+    """Construct the hybrid Stream-K schedule. Pure, total, deterministic."""
+    if min(m, n, k) < 1 or p < 1:
+        raise ValueError(f"degenerate problem m={m} n={n} k={k} p={p}")
+    tiles_m = cdiv(m, block.bm)
+    tiles_n = cdiv(n, block.bn)
+    num_tiles = tiles_m * tiles_n
+    ipt = cdiv(k, block.bk)
+    total_iters = num_tiles * ipt
+
+    w, r = divmod(num_tiles, p)
+    dp_tiles = max(w - 1, 0) * p
+    sk_tiles = num_tiles - dp_tiles
+    sk_iters = sk_tiles * ipt
+    dp_tiles_per_cu = dp_tiles // p
+
+    # Even split of the SK iteration space (balanced: sizes differ by <=1).
+    cu_start = [dp_tiles * ipt + (cu * sk_iters) // p for cu in range(p)]
+    cu_end = [dp_tiles * ipt + ((cu + 1) * sk_iters) // p for cu in range(p)]
+
+    segments: List[List[Segment]] = []
+    # slot bookkeeping: fragments[tile] -> list[(cu, slot, k_start, k_len)]
+    fragments: dict[int, List[Contributor]] = {}
+    for cu in range(p):
+        segs: List[Segment] = []
+        it, end = cu_start[cu], cu_end[cu]
+        n_partials = 0
+        while it < end:
+            tile = it // ipt
+            tile_end = (tile + 1) * ipt
+            seg_end = min(end, tile_end)
+            k_start = it - tile * ipt
+            k_len = seg_end - it
+            direct = k_len == ipt
+            if direct:
+                slot = -1
+            else:
+                slot = n_partials
+                n_partials += 1
+                assert slot <= 1, "hybrid schedule bounds partials at 2/CU"
+                fragments.setdefault(tile, []).append(
+                    Contributor(cu=cu, slot=slot, k_start=k_start, k_len=k_len)
+                )
+            segs.append(
+                Segment(tile=tile, k_start=k_start, k_len=k_len,
+                        direct=direct, slot=slot)
+            )
+            it = seg_end
+        segments.append(segs)
+
+    split_tiles = [
+        SplitTile(tile=t, contributors=sorted(cs, key=lambda c: c.k_start))
+        for t, cs in sorted(fragments.items())
+    ]
+    # Invariant: contributors of a split tile partition [0, ipt).
+    for st in split_tiles:
+        cov = 0
+        for c in st.contributors:
+            assert c.k_start == cov, (st, "non-contiguous fixup coverage")
+            cov += c.k_len
+        assert cov == ipt, (st, "fixup does not cover the tile")
+
+    return StreamKSchedule(
+        m=m, n=n, k=k, block=block, p=p,
+        tiles_m=tiles_m, tiles_n=tiles_n, num_tiles=num_tiles,
+        iters_per_tile=ipt, total_iters=total_iters,
+        dp_tiles=dp_tiles, sk_tiles=sk_tiles, sk_iters=sk_iters,
+        dp_tiles_per_cu=dp_tiles_per_cu,
+        cu_sk_start=cu_start, cu_sk_end=cu_end,
+        segments=segments, split_tiles=split_tiles,
+        max_segments=max((len(s) for s in segments), default=0),
+        max_contributors=max(
+            (len(st.contributors) for st in split_tiles), default=0
+        ),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Analytical helpers shared with the report's methodology section.
+# ---------------------------------------------------------------------------
+
+def arithmetic_intensity(
+    m: int, n: int, k: int, bytes_per_elem: int = 4
+) -> float:
+    """FLOPs per byte of minimum HBM traffic for C = A@B.
+
+    The report measured AI = 1337 for its 30840x4096x4096 f16 workload;
+    ``cargo bench --bench arith_intensity`` reproduces that row with the
+    same formula (rust `decomp::intensity`).
+    """
+    flops = 2.0 * m * n * k
+    bytes_moved = bytes_per_elem * (m * k + k * n + m * n)
+    return flops / bytes_moved
+
+
+def padded_shape(m: int, n: int, k: int, block: BlockShape) -> tuple[int, int, int]:
+    return (
+        cdiv(m, block.bm) * block.bm,
+        cdiv(n, block.bn) * block.bn,
+        cdiv(k, block.bk) * block.bk,
+    )
+
+
+def padding_overhead(m: int, n: int, k: int, block: BlockShape) -> float:
+    """Fraction of extra A/B elements materialized by the padded variant —
+    the 'artificially expanding the problem size' cost the report measures
+    in Table 1."""
+    mp, np_, kp = padded_shape(m, n, k, block)
+    real = m * k + k * n
+    padded = mp * kp + kp * np_
+    return padded / real - 1.0
+
+
+# ---------------------------------------------------------------------------
+# Golden-file export for the rust parity test.
+# ---------------------------------------------------------------------------
+
+def schedule_to_json(s: StreamKSchedule) -> dict:
+    return {
+        "m": s.m, "n": s.n, "k": s.k,
+        "bm": s.block.bm, "bn": s.block.bn, "bk": s.block.bk, "p": s.p,
+        "tiles_m": s.tiles_m, "tiles_n": s.tiles_n,
+        "num_tiles": s.num_tiles, "iters_per_tile": s.iters_per_tile,
+        "total_iters": s.total_iters, "dp_tiles": s.dp_tiles,
+        "sk_tiles": s.sk_tiles, "dp_tiles_per_cu": s.dp_tiles_per_cu,
+        "cu_sk_start": s.cu_sk_start, "cu_sk_end": s.cu_sk_end,
+        "segments": [
+            [
+                {"tile": g.tile, "k_start": g.k_start, "k_len": g.k_len,
+                 "direct": g.direct, "slot": g.slot}
+                for g in segs
+            ]
+            for segs in s.segments
+        ],
+        "split_tiles": [
+            {
+                "tile": st.tile,
+                "contributors": [
+                    {"cu": c.cu, "slot": c.slot,
+                     "k_start": c.k_start, "k_len": c.k_len}
+                    for c in st.contributors
+                ],
+            }
+            for st in s.split_tiles
+        ],
+        "max_segments": s.max_segments,
+        "max_contributors": s.max_contributors,
+    }
+
+
+PARITY_CASES = [
+    # (m, n, k, bm, bn, bk, p) — chosen to hit every schedule regime:
+    (3840, 4096, 4096, 128, 128, 64, 120),   # Table 1 baseline
+    (3, 9, 9, 128, 128, 64, 120),            # Table 1 small (sub-one-tile)
+    (1920, 2000, 2000, 128, 128, 64, 120),   # Table 1 irregular
+    (480, 512, 512, 128, 128, 64, 120),      # Table 1 medium (the bug shape)
+    (256, 256, 8192, 128, 128, 64, 8),       # deep-K, few tiles (split-K-like)
+    (4096, 4096, 64, 128, 128, 64, 120),     # shallow-K, many tiles
+    (128, 128, 128, 128, 128, 64, 1),        # single CU
+    (129, 129, 129, 128, 128, 64, 120),      # +1 ragged everywhere
+    (512, 512, 512, 64, 64, 32, 104),        # MI100-ish CU count
+    (960, 1024, 1024, 128, 128, 64, 120),    # scaled Table-1 baseline
+]
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../testdata/partition_cases.json")
+    args = ap.parse_args()
+    cases = []
+    for (m, n, k, bm, bn, bk, p) in PARITY_CASES:
+        s = build_schedule(m, n, k, BlockShape(bm, bn, bk), p)
+        cases.append(schedule_to_json(s))
+    with open(args.out, "w") as f:
+        json.dump(cases, f, indent=1, sort_keys=True)
+    print(f"wrote {len(cases)} parity cases to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

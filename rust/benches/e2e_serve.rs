@@ -1,0 +1,132 @@
+//! E2E — coordinator serving benchmark: throughput/latency of the full
+//! stack (router → dynamic batcher → engine thread → PJRT) under a
+//! synthetic MLP request stream, swept over batching policies, plus the
+//! overload/shedding behaviour. This regenerates the serving-side
+//! numbers recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo bench --bench e2e_serve`
+
+use std::path::Path;
+
+use streamk::bench::Table;
+use streamk::config::Settings;
+use streamk::coordinator::Coordinator;
+use streamk::exec::Stopwatch;
+use streamk::prop::Rng;
+use streamk::runtime::{spawn_engine, Manifest};
+
+const REQUESTS: usize = 120;
+
+fn run_stream(settings: &Settings, requests: usize) -> (f64, u64, f64, f64, f64) {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir).expect("run `make artifacts`");
+    let (engine, _join) = spawn_engine(manifest).expect("engine");
+    engine
+        .warmup(&[
+            "mlp_streamk_f32_b8_256x512x256",
+            "mlp_streamk_f32_b32_256x512x256",
+            "mlp_streamk_f32_b128_256x512x256",
+        ])
+        .expect("warmup");
+    let coord = Coordinator::start(engine, settings);
+    let handle = coord.handle.clone();
+    let mut rng = Rng::new(0xBEEF);
+    let sw = Stopwatch::start();
+    let waiters: Vec<_> = (0..requests)
+        .map(|i| {
+            let rows = if i % 13 == 0 { 8 } else { *rng.choose(&[1usize, 2, 4]) };
+            handle.submit_mlp(rows, rng.normal_f32_vec(rows * 256))
+        })
+        .collect();
+    let mut ok = 0usize;
+    for w in waiters {
+        if w.recv().map(|r| r.result.is_ok()).unwrap_or(false) {
+            ok += 1;
+        }
+    }
+    let wall = sw.elapsed_secs();
+    assert_eq!(ok, requests, "all requests must succeed");
+    let snap = handle.metrics().snapshot();
+    coord.shutdown();
+    (
+        requests as f64 / wall,
+        snap.batches,
+        snap.mean_batch_rows,
+        snap.e2e.quantile_us(0.50) / 1e3,
+        snap.e2e.quantile_us(0.95) / 1e3,
+    )
+}
+
+fn main() {
+    println!("== 1. batching policy sweep ({REQUESTS} MLP requests) ==\n");
+    let mut t = Table::new(&[
+        "max_batch", "window µs", "req/s", "batches", "mean rows",
+        "p50 ms", "p95 ms",
+    ]);
+    for (max_batch, window_us) in [
+        (1usize, 0u64),      // no batching (batch size 1)
+        (8, 200),
+        (32, 200),
+        (32, 2000),
+        (128, 2000),
+    ] {
+        let settings = Settings {
+            workers: 2,
+            max_batch,
+            batch_window_us: window_us,
+            ..Settings::default()
+        };
+        let (rps, batches, rows, p50, p95) = run_stream(&settings, REQUESTS);
+        t.row(&[
+            max_batch.to_string(),
+            window_us.to_string(),
+            format!("{rps:.1}"),
+            batches.to_string(),
+            format!("{rows:.1}"),
+            format!("{p50:.2}"),
+            format!("{p95:.2}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nexpected shape: throughput rises with batch size (one \
+         executable launch amortized over more rows), p95 rises with the \
+         window — the classic batching latency/throughput trade.\n"
+    );
+
+    println!("== 2. overload / load-shedding ==\n");
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let manifest = Manifest::load(&dir).expect("artifacts");
+    let (engine, _join) = spawn_engine(manifest).expect("engine");
+    engine
+        .warmup(&["gemm_streamk_nopad_f32_128x128x128_cu8"])
+        .unwrap();
+    let settings = Settings { workers: 1, queue_cap: 4, ..Settings::default() };
+    let coord = Coordinator::start(engine, &settings);
+    let mut shed = 0usize;
+    let mut accepted = Vec::new();
+    for _ in 0..200 {
+        match coord.handle.try_submit_gemm(
+            128,
+            128,
+            128,
+            vec![1.0; 128 * 128],
+            vec![1.0; 128 * 128],
+        ) {
+            Some(w) => accepted.push(w),
+            None => shed += 1,
+        }
+    }
+    for w in accepted {
+        let _ = w.recv();
+    }
+    let snap = coord.handle.metrics().snapshot();
+    println!(
+        "200 burst submissions, queue_cap=4: {} accepted+done, {shed} shed \
+         (metrics agree: {})",
+        snap.completed, snap.shed
+    );
+    assert_eq!(snap.shed as usize, shed);
+    coord.shutdown();
+    println!("\ne2e_serve OK");
+}

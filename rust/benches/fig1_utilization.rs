@@ -1,0 +1,98 @@
+//! FIG1 — regenerates Figure 1: CU utilization of the conventional
+//! tile-based decomposition vs Stream-K.
+//!
+//! The paper's figure shows a partial final wave leaving 25% of the
+//! device idle (75% utilization). We print (a) that canonical example
+//! with per-CU bars, (b) the utilization sweep over tile counts (the
+//! sawtooth), and (c) simulated-device utilization for the Table-1
+//! shapes. Run: `cargo bench --bench fig1_utilization`.
+
+use streamk::bench::{fmt_pct, Table};
+use streamk::decomp::{occupancy, swizzle::Swizzle, tile, BlockShape, GemmShape, TileGrid};
+use streamk::gpu_sim::{gemm, Device, DeviceKind};
+
+fn main() {
+    println!("== FIG1(a): the canonical example — 3 tiles on 4 CUs ==\n");
+    let load = occupancy::dp_cu_load(3, 4);
+    for (cu, l) in load.iter().enumerate() {
+        let bar = "█".repeat((l * 30.0) as usize);
+        println!("  CU{cu}: {bar:<30} {:.0}%", l * 100.0);
+    }
+    let dp = occupancy::dp_efficiency(3, 4);
+    let sk = occupancy::sk_efficiency(
+        GemmShape::new(3 * 128, 128, 4096),
+        BlockShape::default(),
+        4,
+    );
+    println!("\n  conventional tile output utilization: {}", fmt_pct(dp));
+    println!("  stream-k utilization (same problem):  {}", fmt_pct(sk));
+    println!("  paper reports: 75% for the conventional example\n");
+    assert!((dp - 0.75).abs() < 1e-9, "Figure-1 anchor point must be 75%");
+
+    println!("== FIG1(b): utilization vs tile count, 120 CUs (sawtooth) ==\n");
+    let mut t = Table::new(&["tiles", "waves", "dp util", "sk util"]);
+    let pts = occupancy::utilization_sweep(
+        BlockShape::default(),
+        120,
+        4096,
+        4096,
+        (1..=16).map(|i| i * 30 * 128 / 8), // tiles_m sweep → 30..480 tiles... m values
+    );
+    for p in &pts {
+        t.row(&[
+            p.num_tiles.to_string(),
+            format!("{:.2}", p.waves),
+            fmt_pct(p.dp_efficiency),
+            fmt_pct(p.sk_efficiency),
+        ]);
+    }
+    t.print();
+    let worst = pts
+        .iter()
+        .min_by(|a, b| a.dp_efficiency.total_cmp(&b.dp_efficiency))
+        .unwrap();
+    println!(
+        "\n  worst dp point: {} tiles at {} — stream-k holds {}\n",
+        worst.num_tiles,
+        fmt_pct(worst.dp_efficiency),
+        fmt_pct(worst.sk_efficiency)
+    );
+
+    println!("== FIG1(c): simulated MI200 utilization, Table-1 shapes ==\n");
+    let dev = Device::preset(DeviceKind::Mi200);
+    let mut t = Table::new(&["shape", "tiles", "dp util", "sk util", "sk speedup"]);
+    for (m, n, k) in [
+        (3840usize, 4096usize, 4096usize),
+        (3968, 4096, 4096), // +1 tile row: the quantization cliff
+        (3, 9, 9),
+        (1920, 2000, 2000),
+        (480, 512, 512),
+    ] {
+        let shape = GemmShape::new(m, n, k);
+        let block = BlockShape::default().effective(shape);
+        let grid = TileGrid::new(shape, block);
+        let dp = gemm::simulate(
+            &dev,
+            shape,
+            grid,
+            tile::dp_assignment(grid, dev.num_cus, Swizzle::RowMajor),
+            block,
+            4,
+        );
+        let sched =
+            streamk::decomp::build_schedule(shape, block, dev.num_cus).unwrap();
+        let sk = gemm::simulate_streamk(&dev, &sched, 4);
+        t.row(&[
+            format!("{m}x{n}x{k}"),
+            grid.num_tiles().to_string(),
+            fmt_pct(dp.utilization),
+            fmt_pct(sk.utilization),
+            format!("{:.3}x", dp.total_s / sk.total_s),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nexpected shape (paper): dp sawtooths and dips below 80% off \
+         full waves; stream-k stays ~flat near 100% and never loses."
+    );
+}

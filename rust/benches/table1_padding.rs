@@ -1,0 +1,171 @@
+//! TAB1 — regenerates Table 1: padded vs no-padding Stream-K across the
+//! paper's matrix sizes, reporting ms / TFLOPs / GB/s and the no-padding
+//! improvement, exactly the paper's rows.
+//!
+//! Two sections:
+//!  1. **measured** — the AOT Pallas artifacts on CPU PJRT, scaled shapes
+//!     (the default artifact set keeps XLA-CPU time laptop-scale; the
+//!     `--full` artifacts add the exact 3840x4096x4096 rows when built
+//!     with `python -m compile.aot --full`).
+//!  2. **simulated MI200** — the analytical padding cost on the modeled
+//!     device at the paper's exact shapes, for direct comparison with
+//!     Table 1's absolute numbers.
+//!
+//! Run: `cargo bench --bench table1_padding`
+
+use std::path::Path;
+
+use streamk::bench::{self, Table};
+use streamk::decomp::{BlockShape, GemmShape};
+use streamk::faults::error_rate;
+use streamk::gpu_sim::{gemm, Device, DeviceKind};
+use streamk::prop::Rng;
+use streamk::runtime::{Engine, Manifest};
+
+const ITERS: usize = 7;
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("run `make artifacts` first");
+        std::process::exit(1);
+    };
+    let engine = Engine::new(manifest).expect("pjrt");
+    let mut rng = Rng::new(1337);
+
+    println!("== Table 1 (measured, CPU PJRT, scaled shapes) ==\n");
+    let mut t = Table::new(&[
+        "Test", "ms", "TFLOPs", "GB/s", "M", "N", "K",
+    ]);
+    let mut improvements = Vec::new();
+
+    // Every table1 streamk shape present in the manifest, nopad+pad pairs.
+    let shapes: Vec<(usize, usize, usize)> = {
+        let mut v: Vec<_> = engine
+            .manifest()
+            .artifacts
+            .iter()
+            .filter(|a| a.experiment == "table1" && a.algo == "streamk")
+            .map(|a| (a.m, a.n, a.k))
+            .collect();
+        v.sort();
+        v.dedup();
+        v
+    };
+
+    for (m, n, k) in shapes {
+        let shape = GemmShape::new(m, n, k);
+        let a = rng.normal_f32_vec(m * k);
+        let b = rng.normal_f32_vec(k * n);
+        let mut row_times = Vec::new();
+        for (label, pad) in [("", "physical"), (" (NP)", "none")] {
+            let name = format!(
+                "gemm_streamk_{}_f32_{m}x{n}x{k}",
+                if pad == "none" { "nopad" } else { "pad" }
+            );
+            engine.warmup(&[&name]).expect("warmup");
+            let stats = bench::bench(1, ITERS, || {
+                bench::keep(engine.run_f32(&name, &[&a, &b]).expect("run"));
+            });
+            let bytes = 4.0 * (m * k + k * n + m * n) as f64;
+            t.row(&[
+                format!("{m}x{n}x{k}{label}"),
+                bench::fmt_ms(stats.min),
+                bench::fmt_tflops(shape.flops(), stats.min),
+                bench::fmt_gbps(bytes, stats.min),
+                m.to_string(),
+                n.to_string(),
+                k.to_string(),
+            ]);
+            // min-of-N: the report disregarded "suspicious results
+            // during times of heavy shared use of the cluster"; min is
+            // the principled version of that on a noisy shared box.
+            row_times.push(stats.min);
+        }
+        let imp = row_times[0] / row_times[1] - 1.0;
+        improvements.push(imp);
+        t.row(&[
+            "No Padding Improvement".into(),
+            format!("{:.1}%", imp * 100.0),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]);
+
+        // Correctness gate per shape — the paper's medium matrix showed
+        // 99% errors in CK; ours must be exact under both policies.
+        let pad_name = format!("gemm_streamk_pad_f32_{m}x{n}x{k}");
+        let nopad_name = format!("gemm_streamk_nopad_f32_{m}x{n}x{k}");
+        let ref_name = format!("gemm_ref_nopad_f32_{m}x{n}x{k}");
+        let (pv, _) = engine.run_f32(&pad_name, &[&a, &b]).unwrap();
+        let (nv, _) = engine.run_f32(&nopad_name, &[&a, &b]).unwrap();
+        let (rv, _) = engine.run_f32(&ref_name, &[&a, &b]).unwrap();
+        let ep = error_rate(&pv[0], &rv[0], 1e-3);
+        let en = error_rate(&nv[0], &rv[0], 1e-3);
+        assert!(
+            ep.passed() && en.passed(),
+            "{m}x{n}x{k}: pad {:.1}% / nopad {:.1}% errors (paper's \
+             medium-matrix bug class — must be 0 here)",
+            ep.rate * 100.0,
+            en.rate * 100.0
+        );
+    }
+    let avg = improvements.iter().sum::<f64>() / improvements.len() as f64;
+    t.row(&[
+        "Average No Padding Improvement".into(),
+        format!("{:.1}%", avg * 100.0),
+        String::new(), String::new(), String::new(), String::new(), String::new(),
+    ]);
+    t.print();
+    println!(
+        "\n(paper: 0.2%–3% per shape, 0.6% average on MI200; CPU-PJRT \
+         magnifies the padding memcpy so larger percentages are expected, \
+         the *sign and ordering* are the reproduced result)\n"
+    );
+    println!("correctness: all shapes 0% element errors under both \
+              policies (CK's 480x512x512 showed 99% errors)\n");
+
+    println!("== Table 1 (simulated MI200, paper's exact shapes) ==\n");
+    let dev = Device::preset(DeviceKind::Mi200);
+    let mut t = Table::new(&["Test", "ms", "TFLOPs", "M", "N", "K"]);
+    for (m, n, k) in [
+        (3840usize, 4096usize, 4096usize),
+        (3, 9, 9),
+        (1920, 2000, 2000),
+        (480, 512, 512),
+    ] {
+        let shape = GemmShape::new(m, n, k);
+        let block = BlockShape::default().effective(shape);
+        for (label, padded) in [("", true), (" (NP)", false)] {
+            let sched =
+                streamk::decomp::build_schedule(shape, block, dev.num_cus)
+                    .unwrap();
+            let mut r = gemm::simulate_streamk(&dev, &sched, 4);
+            if padded {
+                // physical padding adds the pad memcpy of A and B plus
+                // inflated streaming reads — model as extra HBM time.
+                let mp = m.div_ceil(block.bm) * block.bm;
+                let np_ = n.div_ceil(block.bn) * block.bn;
+                let kp = k.div_ceil(block.bk) * block.bk;
+                let extra_bytes =
+                    4.0 * ((mp * kp + kp * np_) + (mp * kp - m * k) + (kp * np_ - k * n)) as f64;
+                r.total_s += extra_bytes / dev.hbm_bw;
+            }
+            t.row(&[
+                format!("{m}x{n}x{k}{label}"),
+                format!("{:.3}", r.total_s * 1e3),
+                format!("{:.2}", shape.flops() as f64 / r.total_s / 1e12),
+                m.to_string(),
+                n.to_string(),
+                k.to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\npaper's measured row (baseline): 1.446 ms / 89.07 TFLOPs padded, \
+         1.443 ms / 89.26 TFLOPs unpadded (0.2%)"
+    );
+}

@@ -1,0 +1,190 @@
+//! Shared bench harness (criterion substitute — DESIGN.md §2).
+//!
+//! Every `rust/benches/*.rs` binary (harness = false) uses this:
+//! warmup + timed iterations with robust stats, aligned table printing
+//! matching the paper's rows, and JSON dumps for EXPERIMENTS.md.
+
+pub mod workload;
+
+use crate::exec::Stopwatch;
+use crate::json::{obj, Value};
+
+/// Timing statistics over bench iterations (seconds).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).expect("finite"));
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+            / n as f64;
+        Self {
+            iters: n,
+            mean,
+            median: samples[n / 2],
+            min: samples[0],
+            max: samples[n - 1],
+            stddev: var.sqrt(),
+        }
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        self.mean * 1e3
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("iters", self.iters.into()),
+            ("mean_s", self.mean.into()),
+            ("median_s", self.median.into()),
+            ("min_s", self.min.into()),
+            ("max_s", self.max.into()),
+            ("stddev_s", self.stddev.into()),
+        ])
+    }
+}
+
+/// Run `f` for `warmup` untimed + `iters` timed iterations.
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let samples = (0..iters)
+        .map(|_| {
+            let sw = Stopwatch::start();
+            f();
+            sw.elapsed_secs()
+        })
+        .collect();
+    Stats::from_samples(samples)
+}
+
+/// Keep a value alive past the optimizer (std::hint::black_box wrapper,
+/// named for bench readability).
+pub fn keep<T>(value: T) -> T {
+    std::hint::black_box(value)
+}
+
+/// Fixed-width table printer: the benches print paper-style rows.
+pub struct Table {
+    headers: Vec<String>,
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Self {
+            widths: headers.iter().map(|h| h.len()).collect(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let line = |cells: &[String], widths: &[usize]| {
+            let mut s = String::new();
+            for (c, w) in cells.iter().zip(widths) {
+                s.push_str(&format!("| {c:>w$} ", w = w));
+            }
+            s.push('|');
+            println!("{s}");
+        };
+        line(&self.headers, &self.widths);
+        let sep: Vec<String> =
+            self.widths.iter().map(|w| "-".repeat(*w)).collect();
+        line(&sep, &self.widths);
+        for r in &self.rows {
+            line(r, &self.widths);
+        }
+    }
+}
+
+/// Format helpers shared by the bench binaries.
+pub fn fmt_ms(s: f64) -> String {
+    format!("{:.3}", s * 1e3)
+}
+
+pub fn fmt_tflops(flops: u64, s: f64) -> String {
+    format!("{:.2}", flops as f64 / s / 1e12)
+}
+
+pub fn fmt_gbps(bytes: f64, s: f64) -> String {
+    format!("{:.2}", bytes / s / 1e9)
+}
+
+pub fn fmt_pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+/// Append a JSON record for EXPERIMENTS.md bookkeeping.
+pub fn dump_json(path: &str, record: Value) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+    {
+        let _ = writeln!(f, "{record}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_of_known_samples() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.iters, 5);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2.0f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut n = 0;
+        let s = bench(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(s.iters, 5);
+        assert!(s.min >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "ms"]);
+        t.row(&["a".into(), "1.0".into()]);
+        t.row(&["longer-name".into(), "10.25".into()]);
+        t.print(); // visual; correctness is the no-panic + width logic
+        assert_eq!(t.widths[0], "longer-name".len());
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(fmt_ms(0.001446), "1.446");
+        assert_eq!(fmt_pct(0.75), "75.0%");
+        assert_eq!(fmt_tflops(2_000_000_000_000, 1.0), "2.00");
+    }
+}

@@ -1,0 +1,210 @@
+//! Synthetic workload generation for the serving benches — the
+//! "automated benchmarking tools … integrated and continuous performance
+//! monitoring" infrastructure the report lists as future work.
+//!
+//! Generates deterministic request traces: arrival processes (closed
+//! loop, Poisson open loop, bursts) over a mix of request classes, so
+//! every bench and example can replay the exact same stream.
+
+use crate::prop::Rng;
+
+/// One synthetic request to replay.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEntry {
+    /// Offset from trace start, seconds (0 for closed-loop traces).
+    pub at_s: f64,
+    /// Rows of MLP activations (or GEMM M dim for gemm classes).
+    pub rows: usize,
+}
+
+/// Arrival process shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrival {
+    /// Submit as fast as the queue accepts.
+    ClosedLoop,
+    /// Poisson with the given mean rate (requests/second).
+    Poisson { rate: f64 },
+    /// Quiet base rate with periodic bursts of `burst` back-to-back
+    /// requests every `period_s`.
+    Bursty { rate: f64, burst: usize, period_s: f64 },
+}
+
+/// Request-size mix: (rows, weight) pairs.
+#[derive(Debug, Clone)]
+pub struct SizeMix(pub Vec<(usize, f64)>);
+
+impl SizeMix {
+    /// The serving examples' default: mostly single rows, some batches.
+    pub fn inference_default() -> Self {
+        SizeMix(vec![(1, 0.55), (2, 0.2), (4, 0.15), (8, 0.1)])
+    }
+
+    fn sample(&self, rng: &mut Rng) -> usize {
+        let total: f64 = self.0.iter().map(|(_, w)| w).sum();
+        let mut u = rng.f64_unit() * total;
+        for &(rows, w) in &self.0 {
+            if u < w {
+                return rows;
+            }
+            u -= w;
+        }
+        self.0.last().expect("non-empty mix").0
+    }
+}
+
+/// Generate a deterministic trace of `n` requests.
+pub fn generate(
+    seed: u64,
+    n: usize,
+    arrival: Arrival,
+    mix: &SizeMix,
+) -> Vec<TraceEntry> {
+    assert!(!mix.0.is_empty(), "empty size mix");
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0f64;
+    let mut since_burst = 0.0f64;
+    while out.len() < n {
+        match arrival {
+            Arrival::ClosedLoop => {
+                out.push(TraceEntry { at_s: 0.0, rows: mix.sample(&mut rng) });
+            }
+            Arrival::Poisson { rate } => {
+                assert!(rate > 0.0);
+                // exponential inter-arrival via inverse CDF
+                t += -rng.f64_unit().max(1e-12).ln() / rate;
+                out.push(TraceEntry { at_s: t, rows: mix.sample(&mut rng) });
+            }
+            Arrival::Bursty { rate, burst, period_s } => {
+                assert!(rate > 0.0 && burst > 0 && period_s > 0.0);
+                let dt = -rng.f64_unit().max(1e-12).ln() / rate;
+                t += dt;
+                since_burst += dt;
+                out.push(TraceEntry { at_s: t, rows: mix.sample(&mut rng) });
+                if since_burst >= period_s {
+                    since_burst = 0.0;
+                    for _ in 0..burst {
+                        if out.len() >= n {
+                            break;
+                        }
+                        out.push(TraceEntry {
+                            at_s: t,
+                            rows: mix.sample(&mut rng),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Summary statistics of a trace (used by bench reports).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub requests: usize,
+    pub total_rows: usize,
+    pub mean_rows: f64,
+    pub duration_s: f64,
+    pub mean_rate: f64,
+}
+
+pub fn stats(trace: &[TraceEntry]) -> TraceStats {
+    let requests = trace.len();
+    let total_rows: usize = trace.iter().map(|e| e.rows).sum();
+    let duration_s = trace.last().map(|e| e.at_s).unwrap_or(0.0);
+    TraceStats {
+        requests,
+        total_rows,
+        mean_rows: if requests == 0 {
+            0.0
+        } else {
+            total_rows as f64 / requests as f64
+        },
+        duration_s,
+        mean_rate: if duration_s > 0.0 {
+            requests as f64 / duration_s
+        } else {
+            f64::INFINITY
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mix = SizeMix::inference_default();
+        let a = generate(7, 50, Arrival::Poisson { rate: 100.0 }, &mix);
+        let b = generate(7, 50, Arrival::Poisson { rate: 100.0 }, &mix);
+        assert_eq!(a, b);
+        let c = generate(8, 50, Arrival::Poisson { rate: 100.0 }, &mix);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn poisson_rate_approximately_honored() {
+        let mix = SizeMix(vec![(1, 1.0)]);
+        let trace = generate(1, 4000, Arrival::Poisson { rate: 250.0 }, &mix);
+        let s = stats(&trace);
+        assert!(
+            (s.mean_rate - 250.0).abs() / 250.0 < 0.1,
+            "rate {}",
+            s.mean_rate
+        );
+        // arrivals strictly increasing
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn closed_loop_has_zero_offsets() {
+        let mix = SizeMix::inference_default();
+        let trace = generate(2, 20, Arrival::ClosedLoop, &mix);
+        assert!(trace.iter().all(|e| e.at_s == 0.0));
+        assert_eq!(trace.len(), 20);
+    }
+
+    #[test]
+    fn bursts_produce_duplicate_timestamps() {
+        let mix = SizeMix(vec![(1, 1.0)]);
+        let trace = generate(
+            3,
+            200,
+            Arrival::Bursty { rate: 50.0, burst: 8, period_s: 0.1 },
+            &mix,
+        );
+        let mut max_same = 0;
+        let mut run = 1;
+        for w in trace.windows(2) {
+            if w[1].at_s == w[0].at_s {
+                run += 1;
+                max_same = max_same.max(run);
+            } else {
+                run = 1;
+            }
+        }
+        assert!(max_same >= 8, "burst run {max_same}");
+    }
+
+    #[test]
+    fn prop_mix_weights_respected() {
+        prop::check("size mix sampling", 10, |rng| {
+            let heavy = rng.usize_in(2, 16);
+            let mix = SizeMix(vec![(1, 9.0), (heavy, 1.0)]);
+            let trace =
+                generate(rng.next_u64(), 3000, Arrival::ClosedLoop, &mix);
+            let ones =
+                trace.iter().filter(|e| e.rows == 1).count() as f64 / 3000.0;
+            prop::ensure(
+                (ones - 0.9).abs() < 0.05,
+                format!("P(rows=1) = {ones}"),
+            )
+        });
+    }
+}

@@ -1,0 +1,265 @@
+//! Declarative command-line parser (clap substitute — DESIGN.md §2).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated `--help` text. Used by the
+//! `streamk` binary, every example, and every bench harness.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Opt {
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: false, default: None, help }
+    }
+
+    pub fn value(
+        name: &'static str,
+        default: Option<&'static str>,
+        help: &'static str,
+    ) -> Self {
+        Self { name, takes_value: true, default, help }
+    }
+}
+
+/// A parsed command line.
+#[derive(Debug, Default, PartialEq)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum CliError {
+    #[error("unknown option --{0} (try --help)")]
+    Unknown(String),
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("invalid value {value:?} for --{name}: {msg}")]
+    Invalid { name: String, value: String, msg: String },
+    #[error("help requested")]
+    Help,
+}
+
+/// Command definition: name + options; renders its own usage text.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, o: Opt) -> Self {
+        self.opts.push(o);
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}\n", self.name, self.about);
+        let _ = writeln!(s, "options:");
+        for o in &self.opts {
+            let arg = if o.takes_value { format!("--{} <v>", o.name) } else { format!("--{}", o.name) };
+            let def = o
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:<26} {}{def}", o.help);
+        }
+        s
+    }
+
+    /// Parse an argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let (true, Some(d)) = (o.takes_value, o.default) {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(raw) = it.next() {
+            if raw == "--help" || raw == "-h" {
+                return Err(CliError::Help);
+            }
+            if let Some(body) = raw.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| CliError::Unknown(name.clone()))?;
+                if spec.takes_value {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError::MissingValue(name.clone()))?,
+                    };
+                    args.values.insert(name, v);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError::Invalid {
+                            name: name.clone(),
+                            value: inline.unwrap(),
+                            msg: "flag does not take a value".into(),
+                        });
+                    }
+                    args.flags.push(name);
+                }
+            } else {
+                args.positional.push(raw.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`, printing usage and exiting on `--help`
+    /// or error. Convenience wrapper for binaries.
+    pub fn parse_or_exit(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError::Help) => {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            Err(e) => {
+                eprintln!("error: {e}\n\n{}", self.usage());
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("option --{name} has no value/default"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::Invalid {
+            name: name.into(),
+            value: v.into(),
+            msg: "expected unsigned integer".into(),
+        })
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self.str(name);
+        v.parse().map_err(|_| CliError::Invalid {
+            name: name.into(),
+            value: v.into(),
+            msg: "expected number".into(),
+        })
+    }
+
+    /// Comma-separated usize list, e.g. `--cus 1,30,120`.
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        self.str(name)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim().parse().map_err(|_| CliError::Invalid {
+                    name: name.into(),
+                    value: s.into(),
+                    msg: "expected comma-separated unsigned integers".into(),
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("t", "test")
+            .opt(Opt::value("n", Some("4"), "count"))
+            .opt(Opt::flag("verbose", "chatty"))
+            .opt(Opt::value("name", None, "a name"))
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = cmd().parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 4);
+        assert!(!a.flag("verbose"));
+
+        let a = cmd().parse(&argv(&["--n", "9", "--verbose"])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 9);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax_and_positionals() {
+        let a = cmd().parse(&argv(&["--n=12", "pos1", "pos2"])).unwrap();
+        assert_eq!(a.usize("n").unwrap(), 12);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert_eq!(
+            cmd().parse(&argv(&["--bogus"])),
+            Err(CliError::Unknown("bogus".into()))
+        );
+        assert_eq!(
+            cmd().parse(&argv(&["--name"])),
+            Err(CliError::MissingValue("name".into()))
+        );
+        assert!(matches!(
+            cmd().parse(&argv(&["--n", "x"])).unwrap().usize("n"),
+            Err(CliError::Invalid { .. })
+        ));
+        assert_eq!(cmd().parse(&argv(&["--help"])), Err(CliError::Help));
+    }
+
+    #[test]
+    fn usize_list() {
+        let c = Command::new("t", "t").opt(Opt::value("cus", Some("1,2,3"), ""));
+        let a = c.parse(&argv(&[])).unwrap();
+        assert_eq!(a.usize_list("cus").unwrap(), vec![1, 2, 3]);
+        let a = c.parse(&argv(&["--cus", "10, 20"])).unwrap();
+        assert_eq!(a.usize_list("cus").unwrap(), vec![10, 20]);
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cmd().usage();
+        assert!(u.contains("--n"));
+        assert!(u.contains("--verbose"));
+    }
+}

@@ -1,0 +1,243 @@
+//! Layered runtime configuration: defaults < JSON config file < CLI
+//! overrides. The config system every launcher-shaped binary in the repo
+//! shares (`streamk serve`, examples, benches).
+
+use crate::cli::Args;
+use crate::json::{self, Value};
+use std::path::{Path, PathBuf};
+
+/// Coordinator/server settings (see `coordinator` for the semantics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Settings {
+    /// Directory with `manifest.json` + `*.hlo.txt` (from `make artifacts`).
+    pub artifacts_dir: PathBuf,
+    /// Simulated CU count used by schedules and the GPU simulator.
+    pub cus: usize,
+    /// Worker threads executing PJRT computations.
+    pub workers: usize,
+    /// Pending-request queue capacity (backpressure beyond this).
+    pub queue_cap: usize,
+    /// Dynamic batcher: max requests folded into one executable launch.
+    pub max_batch: usize,
+    /// Dynamic batcher: how long to wait for stragglers (microseconds).
+    pub batch_window_us: u64,
+    /// Default padding policy for artifact routing ("none" | "physical").
+    pub pad_policy: String,
+    /// Default algorithm for artifact routing.
+    pub algo: String,
+}
+
+impl Default for Settings {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            cus: 120, // MI200-class device, as in the report
+            workers: 2,
+            queue_cap: 256,
+            max_batch: 16,
+            batch_window_us: 200,
+            pad_policy: "none".into(),
+            algo: "streamk".into(),
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("cannot read config {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("config {path}: {source}")]
+    Json {
+        path: String,
+        #[source]
+        source: json::JsonError,
+    },
+    #[error("config key {key:?}: {msg}")]
+    Bad { key: String, msg: String },
+}
+
+impl Settings {
+    /// Apply a JSON config file on top of `self`.
+    pub fn load_file(mut self, path: &Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path).map_err(|source| {
+            ConfigError::Io { path: path.display().to_string(), source }
+        })?;
+        let v = json::parse(&text).map_err(|source| ConfigError::Json {
+            path: path.display().to_string(),
+            source,
+        })?;
+        self.apply_json(&v)?;
+        Ok(self)
+    }
+
+    pub fn apply_json(&mut self, v: &Value) -> Result<(), ConfigError> {
+        let fields = match v {
+            Value::Obj(f) => f,
+            _ => {
+                return Err(ConfigError::Bad {
+                    key: "<root>".into(),
+                    msg: "config root must be an object".into(),
+                })
+            }
+        };
+        for (key, val) in fields {
+            self.set(key, val)?;
+        }
+        Ok(())
+    }
+
+    fn set(&mut self, key: &str, val: &Value) -> Result<(), ConfigError> {
+        let bad = |msg: &str| ConfigError::Bad { key: key.into(), msg: msg.into() };
+        match key {
+            "artifacts_dir" => {
+                self.artifacts_dir =
+                    PathBuf::from(val.as_str().ok_or_else(|| bad("want string"))?)
+            }
+            "cus" => self.cus = val.as_usize().ok_or_else(|| bad("want usize"))?,
+            "workers" => {
+                self.workers = val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
+            "queue_cap" => {
+                self.queue_cap = val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
+            "max_batch" => {
+                self.max_batch = val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
+            "batch_window_us" => {
+                self.batch_window_us =
+                    val.as_i64().ok_or_else(|| bad("want integer"))? as u64
+            }
+            "pad_policy" => {
+                self.pad_policy =
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string()
+            }
+            "algo" => {
+                self.algo =
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string()
+            }
+            other => {
+                return Err(ConfigError::Bad {
+                    key: other.into(),
+                    msg: "unknown config key".into(),
+                })
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply CLI overrides (only options the command actually defines).
+    pub fn apply_cli(mut self, args: &Args) -> Result<Self, ConfigError> {
+        let as_bad = |key: &str, v: &str| ConfigError::Bad {
+            key: key.into(),
+            msg: format!("invalid value {v:?}"),
+        };
+        if let Some(v) = args.get("artifacts") {
+            self.artifacts_dir = PathBuf::from(v);
+        }
+        let parse_usize = |key: &str| -> Result<Option<usize>, ConfigError> {
+            match args.get(key) {
+                Some(v) => v.parse().map(Some).map_err(|_| as_bad(key, v)),
+                None => Ok(None),
+            }
+        };
+        if let Some(v) = parse_usize("cus")? {
+            self.cus = v;
+        }
+        if let Some(v) = parse_usize("workers")? {
+            self.workers = v;
+        }
+        if let Some(v) = parse_usize("queue-cap")? {
+            self.queue_cap = v;
+        }
+        if let Some(v) = parse_usize("max-batch")? {
+            self.max_batch = v;
+        }
+        if let Some(v) = args.get("batch-window-us") {
+            self.batch_window_us = v.parse().map_err(|_| as_bad("batch-window-us", v))?;
+        }
+        if let Some(v) = args.get("pad") {
+            self.pad_policy = v.to_string();
+        }
+        if let Some(v) = args.get("algo") {
+            self.algo = v.to_string();
+        }
+        self.validate()?;
+        Ok(self)
+    }
+
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let bad = |key: &str, msg: &str| {
+            Err(ConfigError::Bad { key: key.into(), msg: msg.into() })
+        };
+        if self.cus == 0 {
+            return bad("cus", "must be positive");
+        }
+        if self.workers == 0 {
+            return bad("workers", "must be positive");
+        }
+        if self.max_batch == 0 {
+            return bad("max_batch", "must be positive");
+        }
+        if !matches!(self.pad_policy.as_str(), "none" | "physical") {
+            return bad("pad_policy", "must be 'none' or 'physical'");
+        }
+        if !matches!(self.algo.as_str(), "streamk" | "tile" | "splitk" | "ref") {
+            return bad("algo", "must be streamk|tile|splitk|ref");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cli::{Command, Opt};
+
+    #[test]
+    fn file_layer_overrides_defaults() {
+        let mut s = Settings::default();
+        let v = json::parse(
+            r#"{"cus": 64, "pad_policy": "physical", "max_batch": 4}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.cus, 64);
+        assert_eq!(s.pad_policy, "physical");
+        assert_eq!(s.max_batch, 4);
+        assert_eq!(s.workers, Settings::default().workers); // untouched
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut s = Settings::default();
+        let v = json::parse(r#"{"cuss": 64}"#).unwrap();
+        assert!(s.apply_json(&v).is_err());
+    }
+
+    #[test]
+    fn cli_layer_wins() {
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("cus", None, ""))
+            .opt(Opt::value("pad", None, ""));
+        let args = cmd
+            .parse(&["--cus".into(), "8".into(), "--pad".into(), "physical".into()])
+            .unwrap();
+        let s = Settings::default().apply_cli(&args).unwrap();
+        assert_eq!(s.cus, 8);
+        assert_eq!(s.pad_policy, "physical");
+    }
+
+    #[test]
+    fn validation_catches_nonsense() {
+        let mut s = Settings::default();
+        s.cus = 0;
+        assert!(s.validate().is_err());
+        let mut s = Settings::default();
+        s.pad_policy = "maybe".into();
+        assert!(s.validate().is_err());
+    }
+}

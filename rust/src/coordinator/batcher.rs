@@ -1,0 +1,181 @@
+//! Dynamic batching of MLP requests.
+//!
+//! Requests arriving within `window` are folded into one executable
+//! launch (up to `max_batch` rows), padded to the smallest compiled
+//! batch size. The Stream-K connection: because one kernel config serves
+//! every shape, the batcher only needs the *batch* dimension menu, not a
+//! per-shape kernel zoo.
+
+use super::request::MlpRequest;
+use crate::exec::{Receiver, Stopwatch};
+use std::time::Duration;
+
+/// A group of requests to run as one launch.
+pub struct BatchPlan {
+    pub requests: Vec<MlpRequest>,
+    pub total_rows: usize,
+}
+
+/// Collects requests from a channel into batch plans.
+pub struct Batcher {
+    pub max_batch: usize,
+    pub window: Duration,
+    /// Request that did not fit in the previous batch.
+    pending: Option<MlpRequest>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, window: Duration) -> Self {
+        assert!(max_batch > 0);
+        Self { max_batch, window, pending: None }
+    }
+
+    /// Block for the next batch: waits for one request, then keeps
+    /// draining until the window closes, the batch is full, or the
+    /// channel empties at window end. A batch never exceeds `max_batch`
+    /// rows (unless a single oversized request arrives, which is passed
+    /// through alone for the router to reject). Returns `None` when the
+    /// channel is disconnected and fully drained.
+    pub fn next_batch(&mut self, rx: &Receiver<MlpRequest>) -> Option<BatchPlan> {
+        let first = match self.pending.take() {
+            Some(req) => req,
+            None => rx.recv().ok()?,
+        };
+        let mut rows = first.rows;
+        let mut requests = vec![first];
+        let sw = Stopwatch::start();
+        while rows < self.max_batch {
+            let remaining = self
+                .window
+                .checked_sub(sw.elapsed())
+                .unwrap_or(Duration::ZERO);
+            if remaining.is_zero() {
+                break;
+            }
+            match rx.try_recv() {
+                Ok(req) => {
+                    if rows + req.rows > self.max_batch {
+                        // Doesn't fit: hold it for the next batch.
+                        self.pending = Some(req);
+                        break;
+                    }
+                    rows += req.rows;
+                    requests.push(req);
+                }
+                Err(_) => std::thread::sleep(Duration::from_micros(20)),
+            }
+        }
+        Some(BatchPlan { requests, total_rows: rows })
+    }
+}
+
+impl BatchPlan {
+    /// Pack all requests' rows into one contiguous activation buffer of
+    /// `batch` rows (zero-padded tail). Returns the buffer and each
+    /// request's row offset.
+    pub fn pack(&self, d_in: usize, batch: usize) -> (Vec<f32>, Vec<usize>) {
+        assert!(batch >= self.total_rows, "batch too small for plan");
+        let mut x = vec![0.0f32; batch * d_in];
+        let mut offsets = Vec::with_capacity(self.requests.len());
+        let mut row = 0usize;
+        for req in &self.requests {
+            assert_eq!(req.x.len(), req.rows * d_in, "request row width");
+            x[row * d_in..(row + req.rows) * d_in].copy_from_slice(&req.x);
+            offsets.push(row);
+            row += req.rows;
+        }
+        (x, offsets)
+    }
+
+    /// Split a packed output buffer back into per-request slices.
+    pub fn unpack(
+        &self,
+        y: &[f32],
+        d_out: usize,
+        offsets: &[usize],
+    ) -> Vec<Vec<f32>> {
+        self.requests
+            .iter()
+            .zip(offsets)
+            .map(|(req, &off)| {
+                y[off * d_out..(off + req.rows) * d_out].to_vec()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ReplyTo;
+    use crate::exec::bounded;
+
+    fn req(id: u64, rows: usize, d_in: usize, fill: f32) -> MlpRequest {
+        let (reply, _rx) = ReplyTo::pair();
+        MlpRequest { id, rows, x: vec![fill; rows * d_in], reply }
+    }
+
+    #[test]
+    fn batches_waiting_requests_together() {
+        let (tx, rx) = bounded(16);
+        assert!(tx.send(req(1, 2, 4, 1.0)).is_ok());
+        assert!(tx.send(req(2, 3, 4, 2.0)).is_ok());
+        let mut b = Batcher::new(16, Duration::from_millis(5));
+        let plan = b.next_batch(&rx).unwrap();
+        assert_eq!(plan.requests.len(), 2);
+        assert_eq!(plan.total_rows, 5);
+    }
+
+    #[test]
+    fn overflow_request_deferred_to_next_batch() {
+        let (tx, rx) = bounded(16);
+        assert!(tx.send(req(1, 3, 1, 1.0)).is_ok());
+        assert!(tx.send(req(2, 3, 1, 2.0)).is_ok()); // 3+3 > max_batch=4
+        let mut b = Batcher::new(4, Duration::from_millis(5));
+        let plan = b.next_batch(&rx).unwrap();
+        assert_eq!(plan.total_rows, 3);
+        assert_eq!(plan.requests[0].id, 1);
+        let plan2 = b.next_batch(&rx).unwrap();
+        assert_eq!(plan2.requests[0].id, 2);
+        drop(tx);
+    }
+
+    #[test]
+    fn disconnected_returns_none() {
+        let (tx, rx) = bounded::<MlpRequest>(4);
+        drop(tx);
+        let mut b = Batcher::new(8, Duration::from_millis(1));
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let (tx, rx) = bounded(16);
+        assert!(tx.send(req(1, 2, 3, 1.0)).is_ok());
+        assert!(tx.send(req(2, 1, 3, 2.0)).is_ok());
+        let mut b = Batcher::new(8, Duration::from_millis(5));
+        let plan = b.next_batch(&rx).unwrap();
+        let (x, offsets) = plan.pack(3, 8);
+        assert_eq!(x.len(), 24);
+        assert_eq!(&x[0..6], &[1.0; 6]);
+        assert_eq!(&x[6..9], &[2.0; 3]);
+        assert_eq!(&x[9..], &[0.0; 15]); // padding
+        // fake output: row r filled with r
+        let y: Vec<f32> = (0..8).flat_map(|r| vec![r as f32; 2]).collect();
+        let outs = plan.unpack(&y, 2, &offsets);
+        assert_eq!(outs[0], vec![0.0, 0.0, 1.0, 1.0]);
+        assert_eq!(outs[1], vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn respects_window_even_when_starved() {
+        let (tx, rx) = bounded(4);
+        assert!(tx.send(req(1, 1, 2, 0.5)).is_ok());
+        let mut b = Batcher::new(64, Duration::from_millis(2));
+        let sw = crate::exec::Stopwatch::start();
+        let plan = b.next_batch(&rx).unwrap();
+        assert_eq!(plan.requests.len(), 1);
+        assert!(sw.elapsed_secs() < 0.5, "window not honored");
+        drop(tx);
+    }
+}

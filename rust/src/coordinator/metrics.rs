@@ -1,0 +1,254 @@
+//! Serving metrics: counters, latency histograms, throughput.
+//!
+//! The report's future-work item on "integrating automated benchmarking
+//! tools … integrated and continuous performance monitoring" — these are
+//! the hooks. Snapshots serialize to JSON for the bench harness and the
+//! `streamk serve --metrics-out` flag.
+
+use crate::json::{obj, Value};
+use std::sync::Mutex;
+
+/// Log₂-bucketed latency histogram (µs buckets from 1µs to ~17min).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Histogram {
+    buckets: Vec<u64>, // bucket i: [2^i, 2^{i+1}) µs
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+const BUCKETS: usize = 30;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: vec![0; BUCKETS], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+}
+
+impl Histogram {
+    pub fn record_secs(&mut self, secs: f64) {
+        let us = (secs * 1e6).max(0.0);
+        let idx = (us.max(1.0).log2() as usize).min(BUCKETS - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from the bucket upper bounds.
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return (1u64 << (i + 1)) as f64;
+            }
+        }
+        self.max_us
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("count", (self.count as usize).into()),
+            ("mean_us", self.mean_us().into()),
+            ("p50_us", self.quantile_us(0.5).into()),
+            ("p95_us", self.quantile_us(0.95).into()),
+            ("p99_us", self.quantile_us(0.99).into()),
+            ("max_us", self.max_us.into()),
+        ])
+    }
+}
+
+/// Shared coordinator metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    requests: u64,
+    completed: u64,
+    failed: u64,
+    shed: u64,
+    batches: u64,
+    batched_rows: u64,
+    queue: Histogram,
+    execute: Histogram,
+    e2e: Histogram,
+    flops: f64,
+    started: Option<std::time::Instant>,
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub batches: u64,
+    pub mean_batch_rows: f64,
+    pub queue: Histogram,
+    pub execute: Histogram,
+    pub e2e: Histogram,
+    pub elapsed_s: f64,
+    pub throughput_rps: f64,
+    pub tflops: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_submit(&self) {
+        let mut m = self.inner.lock().expect("metrics");
+        m.requests += 1;
+        m.started.get_or_insert_with(std::time::Instant::now);
+    }
+
+    pub fn on_shed(&self) {
+        self.inner.lock().expect("metrics").shed += 1;
+    }
+
+    pub fn on_complete(&self, queue_s: f64, execute_s: f64, flops: u64) {
+        let mut m = self.inner.lock().expect("metrics");
+        m.completed += 1;
+        m.queue.record_secs(queue_s);
+        m.execute.record_secs(execute_s);
+        m.e2e.record_secs(queue_s + execute_s);
+        m.flops += flops as f64;
+    }
+
+    pub fn on_fail(&self) {
+        self.inner.lock().expect("metrics").failed += 1;
+    }
+
+    pub fn on_batch(&self, rows: usize) {
+        let mut m = self.inner.lock().expect("metrics");
+        m.batches += 1;
+        m.batched_rows += rows as u64;
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().expect("metrics");
+        let elapsed_s = m
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0);
+        MetricsSnapshot {
+            requests: m.requests,
+            completed: m.completed,
+            failed: m.failed,
+            shed: m.shed,
+            batches: m.batches,
+            mean_batch_rows: if m.batches == 0 {
+                0.0
+            } else {
+                m.batched_rows as f64 / m.batches as f64
+            },
+            queue: m.queue.clone(),
+            execute: m.execute.clone(),
+            e2e: m.e2e.clone(),
+            elapsed_s,
+            throughput_rps: if elapsed_s > 0.0 {
+                m.completed as f64 / elapsed_s
+            } else {
+                0.0
+            },
+            tflops: if elapsed_s > 0.0 {
+                m.flops / elapsed_s / 1e12
+            } else {
+                0.0
+            },
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("requests", (self.requests as usize).into()),
+            ("completed", (self.completed as usize).into()),
+            ("failed", (self.failed as usize).into()),
+            ("shed", (self.shed as usize).into()),
+            ("batches", (self.batches as usize).into()),
+            ("mean_batch_rows", self.mean_batch_rows.into()),
+            ("elapsed_s", self.elapsed_s.into()),
+            ("throughput_rps", self.throughput_rps.into()),
+            ("tflops", self.tflops.into()),
+            ("queue", self.queue.to_json()),
+            ("execute", self.execute.to_json()),
+            ("e2e", self.e2e.to_json()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_monotone() {
+        let mut h = Histogram::default();
+        for i in 1..=1000 {
+            h.record_secs(i as f64 * 1e-6);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
+        assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn lifecycle_counting() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_submit();
+        }
+        for _ in 0..8 {
+            m.on_complete(1e-4, 2e-4, 1000);
+        }
+        m.on_fail();
+        m.on_shed();
+        m.on_batch(4);
+        m.on_batch(8);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 10);
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.failed, 1);
+        assert_eq!(s.shed, 1);
+        assert!((s.mean_batch_rows - 6.0).abs() < 1e-12);
+        assert_eq!(s.e2e.count(), 8);
+        // json serializes without panicking and with the right keys
+        let j = s.to_json();
+        assert_eq!(j.u("completed").unwrap(), 8);
+        assert!(j.get("e2e").unwrap().get("p95_us").is_some());
+    }
+}

@@ -1,0 +1,23 @@
+//! The serving coordinator — L3's request path.
+//!
+//! vLLM-router-shaped pipeline, with GEMM/MLP computations instead of
+//! LLM decoding:
+//!
+//! ```text
+//! client → [bounded queue] → router (shape→artifact) → dynamic batcher
+//!        → worker pool → PJRT engine → reply channels → metrics
+//! ```
+//!
+//! Python never appears here: the engine executes AOT artifacts only.
+
+mod batcher;
+mod metrics;
+mod request;
+mod router;
+mod service;
+
+pub use batcher::{BatchPlan, Batcher};
+pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use request::{GemmRequest, GemmResponse, MlpRequest, MlpResponse, ReplyTo};
+pub use router::{RouteError, Router};
+pub use service::{mlp_params, Coordinator, CoordinatorHandle, MlpParams};

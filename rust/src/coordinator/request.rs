@@ -1,0 +1,79 @@
+//! Request/response types flowing through the coordinator.
+
+use crate::exec::{bounded, Receiver, Sender};
+
+/// Reply channel: a one-shot built on the bounded channel.
+pub struct ReplyTo<T> {
+    tx: Sender<T>,
+}
+
+impl<T> ReplyTo<T> {
+    /// Create the (reply-sender, waiter) pair for one request.
+    pub fn pair() -> (Self, Receiver<T>) {
+        let (tx, rx) = bounded(1);
+        (Self { tx }, rx)
+    }
+
+    pub fn send(self, value: T) {
+        // A dropped waiter is not an error (client gave up).
+        let _ = self.tx.send(value);
+    }
+}
+
+/// One GEMM to execute: C = A·B on the routed artifact.
+pub struct GemmRequest {
+    pub id: u64,
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub a: Vec<f32>,
+    pub b: Vec<f32>,
+    pub reply: ReplyTo<GemmResponse>,
+}
+
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// Which artifact served it (observability: the router's decision).
+    pub artifact: String,
+    pub queue_s: f64,
+    pub execute_s: f64,
+}
+
+/// One MLP inference request: `rows` activations of width `d_in`.
+pub struct MlpRequest {
+    pub id: u64,
+    pub rows: usize,
+    pub x: Vec<f32>,
+    pub reply: ReplyTo<MlpResponse>,
+}
+
+#[derive(Debug)]
+pub struct MlpResponse {
+    pub id: u64,
+    pub result: Result<Vec<f32>, String>,
+    /// Batch the request was folded into (batcher observability).
+    pub batched_as: usize,
+    pub queue_s: f64,
+    pub execute_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_roundtrip() {
+        let (reply, rx) = ReplyTo::pair();
+        reply.send(42u32);
+        assert_eq!(rx.recv().unwrap(), 42);
+    }
+
+    #[test]
+    fn dropped_waiter_is_fine() {
+        let (reply, rx) = ReplyTo::pair();
+        drop(rx);
+        reply.send(1u32); // must not panic
+    }
+}

@@ -1,0 +1,147 @@
+//! Shape→artifact routing.
+//!
+//! Stream-K's library-size claim lives here: with the work-centric
+//! kernel, *one* configuration per precision serves every shape, so the
+//! routing table is the artifact manifest itself — no kernel-selection
+//! heuristics (the report's "complex kernel selection heuristics"
+//! problem) beyond exact shape lookup + policy fallbacks.
+
+use crate::runtime::Manifest;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RouteError {
+    #[error(
+        "no artifact for gemm {m}x{n}x{k} algo={algo} pad={pad} dtype={dtype}; \
+         add the shape to python/compile/aot.py and re-run `make artifacts`"
+    )]
+    NoArtifact {
+        m: usize,
+        n: usize,
+        k: usize,
+        algo: String,
+        pad: String,
+        dtype: String,
+    },
+    #[error("no MLP artifact with batch >= {rows} (largest is {largest})")]
+    BatchTooLarge { rows: usize, largest: usize },
+}
+
+/// The routing policy: preferred algorithm + padding, with fallbacks.
+#[derive(Debug, Clone)]
+pub struct Router {
+    pub algo: String,
+    pub pad: String,
+    pub dtype: String,
+}
+
+impl Router {
+    pub fn new(algo: &str, pad: &str, dtype: &str) -> Self {
+        Self { algo: algo.into(), pad: pad.into(), dtype: dtype.into() }
+    }
+
+    /// Route a GEMM shape to an artifact name.
+    ///
+    /// Fallback chain: exact (algo, pad) → other pad policy → the `ref`
+    /// oracle artifact (always correct, never fast) → error.
+    pub fn route_gemm(
+        &self,
+        manifest: &Manifest,
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Result<String, RouteError> {
+        let other_pad = if self.pad == "none" { "physical" } else { "none" };
+        for (algo, pad) in [
+            (self.algo.as_str(), self.pad.as_str()),
+            (self.algo.as_str(), other_pad),
+            ("ref", "none"),
+        ] {
+            if let Some(a) = manifest.find_gemm(m, n, k, algo, pad, &self.dtype)
+            {
+                return Ok(a.name.clone());
+            }
+        }
+        Err(RouteError::NoArtifact {
+            m,
+            n,
+            k,
+            algo: self.algo.clone(),
+            pad: self.pad.clone(),
+            dtype: self.dtype.clone(),
+        })
+    }
+
+    /// Route an MLP batch: the smallest compiled batch ≥ `rows`
+    /// (requests are padded up to it by the batcher).
+    pub fn route_mlp(
+        &self,
+        manifest: &Manifest,
+        rows: usize,
+    ) -> Result<(String, usize), RouteError> {
+        let mut candidates: Vec<(usize, &str)> = manifest
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "mlp" && a.dtype == self.dtype)
+            .map(|a| (a.batch, a.name.as_str()))
+            .collect();
+        candidates.sort();
+        let largest = candidates.last().map(|&(b, _)| b).unwrap_or(0);
+        candidates
+            .into_iter()
+            .find(|&(b, _)| b >= rows)
+            .map(|(b, name)| (name.to_string(), b))
+            .ok_or(RouteError::BatchTooLarge { rows, largest })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn routes_table1_shapes() {
+        let Some(m) = manifest() else { return };
+        let r = Router::new("streamk", "none", "f32");
+        let name = r.route_gemm(&m, 960, 1024, 1024).unwrap();
+        assert_eq!(name, "gemm_streamk_nopad_f32_960x1024x1024");
+        // padded policy routes to the padded artifact
+        let r = Router::new("tile", "physical", "f32");
+        let name = r.route_gemm(&m, 960, 1024, 1024).unwrap();
+        assert_eq!(name, "gemm_tile_pad_f32_960x1024x1024");
+    }
+
+    #[test]
+    fn falls_back_to_ref_then_errors() {
+        let Some(m) = manifest() else { return };
+        // 256x256x256 gelu exists only as streamk+ref; splitk falls back.
+        let r = Router::new("splitk", "none", "bf16");
+        let name = r.route_gemm(&m, 256, 256, 256).unwrap();
+        assert_eq!(name, "gemm_ref_nopad_bf16_256x256x256");
+        // a shape with no artifact at all errors with guidance
+        let err = r.route_gemm(&m, 7, 7, 7).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn mlp_smallest_fitting_batch() {
+        let Some(m) = manifest() else { return };
+        let r = Router::new("streamk", "none", "f32");
+        assert_eq!(r.route_mlp(&m, 1).unwrap().1, 8);
+        assert_eq!(r.route_mlp(&m, 8).unwrap().1, 8);
+        assert_eq!(r.route_mlp(&m, 9).unwrap().1, 32);
+        assert_eq!(r.route_mlp(&m, 100).unwrap().1, 128);
+        assert_eq!(
+            r.route_mlp(&m, 1000),
+            Err(RouteError::BatchTooLarge { rows: 1000, largest: 128 })
+        );
+    }
+}

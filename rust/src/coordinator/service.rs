@@ -1,0 +1,382 @@
+//! The coordinator service: queue → route → (batch) → execute → reply.
+
+use super::batcher::Batcher;
+use super::metrics::Metrics;
+use super::request::{
+    GemmRequest, GemmResponse, MlpRequest, MlpResponse, ReplyTo,
+};
+use super::router::Router;
+use crate::config::Settings;
+use crate::exec::{bounded, CancelToken, Receiver, Sender, Stopwatch};
+use crate::runtime::EngineHandle;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+enum Work {
+    Gemm(GemmRequest, Instant),
+    Mlp(MlpRequest, Instant),
+    /// Sentinel: the receiving worker exits its loop. `shutdown` sends
+    /// one per worker so teardown never depends on every cloned
+    /// [`CoordinatorHandle`] being dropped first.
+    Shutdown,
+}
+
+/// Client handle: submit requests, read metrics. Cloneable; the service
+/// shuts down when all handles are dropped and the queue drains.
+#[derive(Clone)]
+pub struct CoordinatorHandle {
+    tx: Sender<Work>,
+    metrics: Arc<Metrics>,
+    next_id: Arc<AtomicU64>,
+}
+
+/// The running coordinator.
+pub struct Coordinator {
+    pub handle: CoordinatorHandle,
+    cancel: CancelToken,
+    workers: Vec<JoinHandle<()>>,
+    worker_count: usize,
+}
+
+impl Coordinator {
+    /// Start the service over a warmed engine. `settings.workers` threads
+    /// consume the queue; GEMMs execute directly, MLP requests flow
+    /// through a per-worker dynamic batcher.
+    pub fn start(engine: EngineHandle, settings: &Settings) -> Self {
+        let (tx, rx) = bounded::<Work>(settings.queue_cap);
+        let metrics = Arc::new(Metrics::new());
+        let cancel = CancelToken::new();
+        let router = Router::new(&settings.algo, &settings.pad_policy, "f32");
+
+        // MLP requests are funneled to a single batching thread so
+        // concurrent small requests coalesce; GEMM work fans out across
+        // the remaining workers.
+        let (mlp_tx, mlp_rx) = bounded::<MlpRequest>(settings.queue_cap);
+        let mut workers = Vec::new();
+        {
+            let engine = engine.clone();
+            let metrics = metrics.clone();
+            let router = router.clone();
+            let batcher = Batcher::new(
+                settings.max_batch,
+                Duration::from_micros(settings.batch_window_us),
+            );
+            workers.push(
+                std::thread::Builder::new()
+                    .name("streamk-mlp-batcher".into())
+                    .spawn(move || {
+                        mlp_batch_loop(engine, metrics, router, batcher, mlp_rx)
+                    })
+                    .expect("spawn batcher"),
+            );
+        }
+        for i in 0..settings.workers {
+            let rx = rx.clone();
+            let engine = engine.clone();
+            let metrics = metrics.clone();
+            let router = router.clone();
+            let mlp_tx = mlp_tx.clone();
+            let cancel = cancel.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("streamk-coord-{i}"))
+                    .spawn(move || {
+                        worker_loop(engine, metrics, router, rx, mlp_tx, cancel)
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        drop(mlp_tx); // batcher exits when all workers are gone
+
+        Coordinator {
+            handle: CoordinatorHandle {
+                tx,
+                metrics,
+                next_id: Arc::new(AtomicU64::new(1)),
+            },
+            cancel,
+            workers,
+            worker_count: settings.workers,
+        }
+    }
+
+    /// Graceful shutdown: drain queued work, then join all threads.
+    /// Safe even when clones of [`Coordinator::handle`] are still alive:
+    /// one shutdown sentinel per worker ends each loop after the queue
+    /// ahead of it has been processed.
+    pub fn shutdown(mut self) {
+        for _ in 0..self.worker_count {
+            let _ = self.handle.tx.send(Work::Shutdown);
+        }
+        drop(self.handle);
+        for w in self.workers.drain(..) {
+            w.join().expect("coordinator worker panicked");
+        }
+    }
+
+    /// Abort: cancel in-flight batching loops (queue is not drained).
+    pub fn abort(self) {
+        self.cancel.cancel();
+        self.shutdown();
+    }
+}
+
+impl CoordinatorHandle {
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    fn id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit a GEMM; blocks on a full queue (backpressure).
+    pub fn submit_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Receiver<GemmResponse> {
+        let (reply, waiter) = ReplyTo::pair();
+        let req = GemmRequest { id: self.id(), m, n, k, a, b, reply };
+        self.metrics.on_submit();
+        if self.tx.send(Work::Gemm(req, Instant::now())).is_err() {
+            self.metrics.on_fail();
+        }
+        waiter
+    }
+
+    /// Submit a GEMM without blocking; sheds load when the queue is full
+    /// (returns `None`).
+    pub fn try_submit_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    ) -> Option<Receiver<GemmResponse>> {
+        let (reply, waiter) = ReplyTo::pair();
+        let req = GemmRequest { id: self.id(), m, n, k, a, b, reply };
+        match self.tx.try_send(Work::Gemm(req, Instant::now())) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Some(waiter)
+            }
+            Err(_) => {
+                self.metrics.on_shed();
+                None
+            }
+        }
+    }
+
+    /// Submit `rows` MLP activations of width d_in.
+    pub fn submit_mlp(&self, rows: usize, x: Vec<f32>) -> Receiver<MlpResponse> {
+        let (reply, waiter) = ReplyTo::pair();
+        let req = MlpRequest { id: self.id(), rows, x, reply };
+        self.metrics.on_submit();
+        if self.tx.send(Work::Mlp(req, Instant::now())).is_err() {
+            self.metrics.on_fail();
+        }
+        waiter
+    }
+}
+
+fn worker_loop(
+    engine: EngineHandle,
+    metrics: Arc<Metrics>,
+    router: Router,
+    rx: Receiver<Work>,
+    mlp_tx: Sender<MlpRequest>,
+    cancel: CancelToken,
+) {
+    while let Ok(work) = rx.recv() {
+        if cancel.is_cancelled() {
+            break;
+        }
+        match work {
+            Work::Gemm(req, enqueued) => {
+                let queue_s = enqueued.elapsed().as_secs_f64();
+                handle_gemm(&engine, &metrics, &router, req, queue_s);
+            }
+            Work::Mlp(req, _enqueued) => {
+                // Forward to the batching thread; it owns timing.
+                if mlp_tx.send(req).is_err() {
+                    metrics.on_fail();
+                }
+            }
+            Work::Shutdown => break,
+        }
+    }
+}
+
+fn handle_gemm(
+    engine: &EngineHandle,
+    metrics: &Metrics,
+    router: &Router,
+    req: GemmRequest,
+    queue_s: f64,
+) {
+    let GemmRequest { id, m, n, k, a, b, reply } = req;
+    let routed = router.route_gemm(engine.manifest(), m, n, k);
+    match routed {
+        Ok(artifact) => {
+            let sw = Stopwatch::start();
+            match engine.run_f32(&artifact, vec![Arc::new(a), Arc::new(b)]) {
+                Ok((mut outs, stats)) => {
+                    let execute_s = sw.elapsed_secs();
+                    metrics.on_complete(queue_s, execute_s, stats.flops);
+                    reply.send(GemmResponse {
+                        id,
+                        result: Ok(outs.swap_remove(0)),
+                        artifact,
+                        queue_s,
+                        execute_s,
+                    });
+                }
+                Err(e) => {
+                    metrics.on_fail();
+                    reply.send(GemmResponse {
+                        id,
+                        result: Err(e.to_string()),
+                        artifact,
+                        queue_s,
+                        execute_s: 0.0,
+                    });
+                }
+            }
+        }
+        Err(e) => {
+            metrics.on_fail();
+            reply.send(GemmResponse {
+                id,
+                result: Err(e.to_string()),
+                artifact: String::new(),
+                queue_s,
+                execute_s: 0.0,
+            });
+        }
+    }
+}
+
+/// MLP weights are baked into the artifact? No — the MLP artifacts take
+/// (x, w1, b1, w2, b2); the service holds one parameter set, uploaded at
+/// start via [`MlpParams`]. Defaults to a deterministic pseudo-random
+/// init so examples/benches run out of the box.
+pub struct MlpParams {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    pub w1: Arc<Vec<f32>>,
+    pub b1: Arc<Vec<f32>>,
+    pub w2: Arc<Vec<f32>>,
+    pub b2: Arc<Vec<f32>>,
+}
+
+impl MlpParams {
+    pub fn deterministic(d_in: usize, d_hidden: usize, d_out: usize) -> Self {
+        let mut rng = crate::prop::Rng::new(0x5EED);
+        let scale_1 = (2.0 / d_in as f64).sqrt() as f32;
+        let scale_2 = (2.0 / d_hidden as f64).sqrt() as f32;
+        Self {
+            d_in,
+            d_hidden,
+            d_out,
+            w1: Arc::new(
+                rng.normal_f32_vec(d_in * d_hidden)
+                    .iter()
+                    .map(|v| v * scale_1)
+                    .collect(),
+            ),
+            b1: Arc::new(vec![0.01; d_hidden]),
+            w2: Arc::new(
+                rng.normal_f32_vec(d_hidden * d_out)
+                    .iter()
+                    .map(|v| v * scale_2)
+                    .collect(),
+            ),
+            b2: Arc::new(vec![0.01; d_out]),
+        }
+    }
+}
+
+static MLP_PARAMS: std::sync::OnceLock<MlpParams> = std::sync::OnceLock::new();
+
+/// The MLP parameter set served by every coordinator in this process.
+pub fn mlp_params() -> &'static MlpParams {
+    MLP_PARAMS.get_or_init(|| MlpParams::deterministic(256, 512, 256))
+}
+
+fn mlp_batch_loop(
+    engine: EngineHandle,
+    metrics: Arc<Metrics>,
+    router: Router,
+    mut batcher: Batcher,
+    rx: Receiver<MlpRequest>,
+) {
+    let params = mlp_params();
+    while let Some(plan) = batcher.next_batch(&rx) {
+        let sw = Stopwatch::start();
+        metrics.on_batch(plan.total_rows);
+        let routed = router.route_mlp(engine.manifest(), plan.total_rows);
+        let (artifact, batch) = match routed {
+            Ok(v) => v,
+            Err(e) => {
+                for req in plan.requests {
+                    metrics.on_fail();
+                    req.reply.send(MlpResponse {
+                        id: req.id,
+                        result: Err(e.to_string()),
+                        batched_as: 0,
+                        queue_s: 0.0,
+                        execute_s: 0.0,
+                    });
+                }
+                continue;
+            }
+        };
+        let (x, offsets) = plan.pack(params.d_in, batch);
+        let run = engine.run_f32(
+            &artifact,
+            vec![
+                Arc::new(x),
+                params.w1.clone(),
+                params.b1.clone(),
+                params.w2.clone(),
+                params.b2.clone(),
+            ],
+        );
+        let execute_s = sw.elapsed_secs();
+        match run {
+            Ok((outs, stats)) => {
+                let split = plan.unpack(&outs[0], params.d_out, &offsets);
+                for (req, y) in plan.requests.into_iter().zip(split) {
+                    metrics.on_complete(0.0, execute_s, stats.flops);
+                    req.reply.send(MlpResponse {
+                        id: req.id,
+                        result: Ok(y),
+                        batched_as: batch,
+                        queue_s: 0.0,
+                        execute_s,
+                    });
+                }
+            }
+            Err(e) => {
+                for req in plan.requests {
+                    metrics.on_fail();
+                    req.reply.send(MlpResponse {
+                        id: req.id,
+                        result: Err(e.to_string()),
+                        batched_as: batch,
+                        queue_s: 0.0,
+                        execute_s,
+                    });
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! GEMM work decomposition — the paper's core subject.
+//!
+//! Three decompositions over the same MAC-iteration space
+//! (`tiles × k-iterations`):
+//!
+//! - [`tile`] — conventional data-parallel: one workgroup per output
+//!   tile (Figure 1's quantization-inefficient baseline);
+//! - [`splitk`] — fixed K-split: each tile's K loop cut into a constant
+//!   number of chunks;
+//! - [`streamk`] — the work-centric hybrid: even MAC-iteration split
+//!   across CUs with a two-slot partial buffer and a static fixup
+//!   schedule. Bit-identical to `python/compile/partition.py`
+//!   (enforced by `tests/partition_parity.rs`).
+//!
+//! Plus the report's analytical tools: [`occupancy`] (Figure 1),
+//! [`intensity`] (the AI=1337 measurement), [`params`] (the block-size
+//! legality space CK made impenetrable), and [`swizzle`] (Block2CTile
+//! mappings, where the report located the compute-unit bug).
+
+pub mod intensity;
+pub mod occupancy;
+pub mod params;
+pub mod splitk;
+pub mod streamk;
+pub mod swizzle;
+pub mod tile;
+
+pub use streamk::{
+    build_schedule, build_weighted_schedule, Contributor, Segment, SplitTile,
+    StreamKSchedule,
+};
+
+/// Ceiling division.
+#[inline]
+pub fn cdiv(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// GEMM problem shape: `C[m,n] = A[m,k] @ B[k,n]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(m: usize, n: usize, k: usize) -> Self {
+        Self { m, n, k }
+    }
+
+    /// Multiply–accumulate FLOPs (2·M·N·K).
+    pub fn flops(&self) -> u64 {
+        2 * self.m as u64 * self.n as u64 * self.k as u64
+    }
+
+    pub fn is_degenerate(&self) -> bool {
+        self.m == 0 || self.n == 0 || self.k == 0
+    }
+}
+
+/// Kernel tile shape (BM × BN output tile, BK-deep MAC step).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockShape {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+}
+
+impl Default for BlockShape {
+    /// The single Stream-K configuration per precision (f32): MXU-aligned
+    /// 128×128 tile, 64-deep MAC step.
+    fn default() -> Self {
+        Self { bm: 128, bn: 128, bk: 64 }
+    }
+}
+
+impl BlockShape {
+    pub fn new(bm: usize, bn: usize, bk: usize) -> Self {
+        Self { bm, bn, bk }
+    }
+
+    /// Shrink to the problem (`dim < block` ⇒ block = dim), mirroring
+    /// `kernels/common.py::effective_blocks`.
+    pub fn effective(&self, shape: GemmShape) -> BlockShape {
+        BlockShape {
+            bm: self.bm.min(shape.m.max(1)),
+            bn: self.bn.min(shape.n.max(1)),
+            bk: self.bk.min(shape.k.max(1)),
+        }
+    }
+
+    pub fn flops_per_iter(&self) -> u64 {
+        2 * self.bm as u64 * self.bn as u64 * self.bk as u64
+    }
+}
+
+/// Tile grid derived from a shape and block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileGrid {
+    pub tiles_m: usize,
+    pub tiles_n: usize,
+    pub iters_per_tile: usize,
+}
+
+impl TileGrid {
+    pub fn new(shape: GemmShape, block: BlockShape) -> Self {
+        Self {
+            tiles_m: cdiv(shape.m, block.bm),
+            tiles_n: cdiv(shape.n, block.bn),
+            iters_per_tile: cdiv(shape.k, block.bk),
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        self.tiles_m * self.tiles_n
+    }
+
+    pub fn total_iters(&self) -> usize {
+        self.num_tiles() * self.iters_per_tile
+    }
+
+    /// Linear tile id → (row, col) under the default row-major mapping.
+    pub fn tile_rc(&self, tile: usize) -> (usize, usize) {
+        (tile / self.tiles_n, tile % self.tiles_n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cdiv_basics() {
+        assert_eq!(cdiv(10, 3), 4);
+        assert_eq!(cdiv(9, 3), 3);
+        assert_eq!(cdiv(1, 128), 1);
+    }
+
+    #[test]
+    fn tile_grid_matches_table1_baseline() {
+        let g = TileGrid::new(
+            GemmShape::new(3840, 4096, 4096),
+            BlockShape::default(),
+        );
+        assert_eq!((g.tiles_m, g.tiles_n), (30, 32));
+        assert_eq!(g.num_tiles(), 960);
+        assert_eq!(g.iters_per_tile, 64);
+        assert_eq!(g.total_iters(), 61_440);
+    }
+
+    #[test]
+    fn effective_blocks_shrink() {
+        let b = BlockShape::default().effective(GemmShape::new(3, 9, 9));
+        assert_eq!((b.bm, b.bn, b.bk), (3, 9, 9));
+    }
+
+    #[test]
+    fn flops() {
+        assert_eq!(GemmShape::new(2, 3, 4).flops(), 48);
+        assert_eq!(BlockShape::new(2, 3, 4).flops_per_iter(), 48);
+    }
+}

@@ -1,0 +1,161 @@
+//! Quantization-efficiency / occupancy analysis — Figure 1's arithmetic.
+//!
+//! A data-parallel launch of `t` tiles on `p` CUs runs in `ceil(t/p)`
+//! waves; the last wave is partially filled, idling `p·ceil(t/p) − t`
+//! CUs. The report's Figure 1 shows 75% utilization; Stream-K's flat
+//! near-100% line is the paper's headline.
+
+use super::{cdiv, BlockShape, GemmShape, TileGrid};
+
+/// Utilization of a pure data-parallel launch: `t / (p·ceil(t/p))`.
+pub fn dp_efficiency(num_tiles: usize, p: usize) -> f64 {
+    if num_tiles == 0 || p == 0 {
+        return 1.0;
+    }
+    let waves = cdiv(num_tiles, p);
+    num_tiles as f64 / (waves * p) as f64
+}
+
+/// Utilization of the hybrid Stream-K schedule for the same problem.
+pub fn sk_efficiency(shape: GemmShape, block: BlockShape, p: usize) -> f64 {
+    match super::build_schedule(shape, block, p) {
+        Ok(s) => s.quantization_efficiency_sk(),
+        Err(_) => 1.0,
+    }
+}
+
+/// Per-CU busy ratios for a DP launch — the bar heights of Figure 1.
+/// CU `i` executes `ceil((t - i) / p)` tiles.
+pub fn dp_cu_load(num_tiles: usize, p: usize) -> Vec<f64> {
+    let waves = cdiv(num_tiles.max(1), p.max(1));
+    (0..p)
+        .map(|i| {
+            let tiles_i = if i < num_tiles % p || num_tiles % p == 0 {
+                waves
+            } else {
+                waves - 1
+            };
+            // When t < p some CUs run zero tiles.
+            let tiles_i = if num_tiles <= i { 0 } else { tiles_i };
+            tiles_i as f64 / waves as f64
+        })
+        .collect()
+}
+
+/// One row of the FIG1 utilization sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UtilizationPoint {
+    pub shape: GemmShape,
+    pub num_tiles: usize,
+    pub waves: f64,
+    pub dp_efficiency: f64,
+    pub sk_efficiency: f64,
+}
+
+/// Sweep output-tile counts around multiples of `p` — the sawtooth of
+/// the conventional decomposition vs Stream-K's flat line.
+pub fn utilization_sweep(
+    block: BlockShape,
+    p: usize,
+    n: usize,
+    k: usize,
+    m_values: impl IntoIterator<Item = usize>,
+) -> Vec<UtilizationPoint> {
+    m_values
+        .into_iter()
+        .map(|m| {
+            let shape = GemmShape::new(m, n, k);
+            let grid = TileGrid::new(shape, block.effective(shape));
+            UtilizationPoint {
+                shape,
+                num_tiles: grid.num_tiles(),
+                waves: grid.num_tiles() as f64 / p as f64,
+                dp_efficiency: dp_efficiency(grid.num_tiles(), p),
+                sk_efficiency: sk_efficiency(shape, block, p),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn figure1_example_75_percent() {
+        // 3 tiles on 4 CUs -> one wave at 75% occupancy.
+        assert!((dp_efficiency(3, 4) - 0.75).abs() < 1e-12);
+        // Stream-K on the same problem stays near-perfect.
+        let sk = sk_efficiency(
+            GemmShape::new(3 * 128, 128, 4096),
+            BlockShape::default(),
+            4,
+        );
+        assert!(sk > 0.99, "sk={sk}");
+    }
+
+    #[test]
+    fn full_waves_are_perfect() {
+        assert_eq!(dp_efficiency(240, 120), 1.0);
+        assert_eq!(dp_efficiency(120, 120), 1.0);
+    }
+
+    #[test]
+    fn worst_case_one_extra_tile() {
+        // 121 tiles on 120 CUs: 2 waves, ~50.4% utilization.
+        let e = dp_efficiency(121, 120);
+        assert!((e - 121.0 / 240.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cu_load_shape() {
+        let load = dp_cu_load(3, 4);
+        assert_eq!(load, vec![1.0, 1.0, 1.0, 0.0]);
+        let load = dp_cu_load(6, 4);
+        assert_eq!(load, vec![1.0, 1.0, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn prop_sk_always_at_least_dp() {
+        prop::check("sk >= dp efficiency", 80, |rng| {
+            let m = rng.usize_in(1, 4000);
+            let n = rng.usize_in(1, 2000);
+            let k = rng.usize_in(1, 2000);
+            let p = rng.usize_in(1, 200);
+            let shape = GemmShape::new(m, n, k);
+            let block = BlockShape::default();
+            let grid = TileGrid::new(shape, block.effective(shape));
+            let dp = dp_efficiency(grid.num_tiles(), p);
+            let sk = sk_efficiency(shape, block, p);
+            prop::ensure(
+                sk >= dp - 1e-9,
+                format!("sk {sk} < dp {dp} for {shape:?} p={p}"),
+            )
+        });
+    }
+
+    #[test]
+    fn sweep_produces_sawtooth() {
+        let pts = utilization_sweep(
+            BlockShape::default(),
+            120,
+            4096,
+            4096,
+            (1..=40).map(|i| i * 128),
+        );
+        assert_eq!(pts.len(), 40);
+        // DP efficiency dips right after each full-wave point...
+        // (tiles = 32·i, so the first full-wave point is 480 = 4 waves)
+        let full_wave = pts.iter().find(|p| p.num_tiles == 480).unwrap();
+        assert_eq!(full_wave.dp_efficiency, 1.0);
+        // ...while SK stays near 1 everywhere (±1 MAC-iteration
+        // imbalance costs ~5% at the smallest sweep point).
+        assert!(pts.iter().all(|p| p.sk_efficiency > 0.9));
+        assert!(pts
+            .iter()
+            .filter(|p| p.num_tiles >= 120)
+            .all(|p| p.sk_efficiency > 0.97));
+        assert!(pts.iter().any(|p| p.dp_efficiency < 0.9));
+    }
+}

@@ -1,0 +1,240 @@
+//! Kernel-parameter legality — the space the report could not explore.
+//!
+//! CK's Stream-K kernel has ~15 interdependent template parameters; the
+//! report found "the vast majority of block/hyperparameter adjustments"
+//! failed to compile, and the one config that did compile (1024 threads,
+//! 16×16 per XDL) threw floating-point errors at runtime. This module
+//! makes that implicit constraint system *explicit*: a legality predicate
+//! over the TPU-adapted parameter space, with human-readable reasons.
+//! `cargo bench --bench blocksize_sweep` prints the legality matrix (the
+//! BLK experiment).
+
+use super::BlockShape;
+
+/// Full kernel parameter point (TPU adaptation of CK's template params —
+/// DESIGN.md §3 maps threadblock/XDL/LDS onto grid/MXU/VMEM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KernelParams {
+    pub block: BlockShape,
+    /// Elements per vector lane pack (CK's kpack / ABlockTransfer widths).
+    pub kpack: usize,
+    /// MXU tile the inner product maps to (CK's "M/N per XDL").
+    pub mxu_m: usize,
+    pub mxu_n: usize,
+    /// f32=4, bf16=2.
+    pub bytes_per_elem: usize,
+    /// Double-buffer the HBM→VMEM stream (doubles VMEM footprint).
+    pub double_buffer: bool,
+}
+
+impl KernelParams {
+    pub fn new(block: BlockShape, bytes_per_elem: usize) -> Self {
+        Self {
+            block,
+            kpack: 8,
+            mxu_m: 128,
+            mxu_n: 128,
+            bytes_per_elem,
+            double_buffer: true,
+        }
+    }
+
+    /// VMEM bytes the kernel holds resident: A-block + B-block (possibly
+    /// double-buffered) + f32 accumulator + two partial slots.
+    pub fn vmem_bytes(&self) -> usize {
+        let BlockShape { bm, bn, bk } = self.block;
+        let stream = (bm * bk + bk * bn) * self.bytes_per_elem;
+        let stream = if self.double_buffer { 2 * stream } else { stream };
+        let acc = bm * bn * 4;
+        let partials = 2 * bm * bn * 4;
+        stream + acc + partials
+    }
+
+    /// Estimated MXU utilization from tile alignment: how much of each
+    /// systolic-array pass is real data.
+    pub fn mxu_utilization(&self) -> f64 {
+        let fill = |dim: usize, mxu: usize| -> f64 {
+            let packed = dim.min(mxu);
+            packed as f64 / mxu as f64
+        };
+        fill(self.block.bm, self.mxu_m) * fill(self.block.bn, self.mxu_n)
+    }
+}
+
+/// TPU-v4-class budget used by the legality predicate.
+pub const VMEM_BUDGET_BYTES: usize = 16 * 1024 * 1024;
+/// Sublane granularity for f32 (8) — second-minor dim alignment.
+pub const SUBLANE: usize = 8;
+/// Lane granularity (128) — minor dim alignment.
+pub const LANE: usize = 128;
+
+/// Why a parameter point is illegal. CK surfaces these as opaque template
+/// instantiation failures; we name them.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Illegal {
+    ZeroDim,
+    VmemOverflow { need: usize, budget: usize },
+    LaneMisaligned { dim: &'static str, value: usize },
+    SublaneMisaligned { dim: &'static str, value: usize },
+    KpackMisaligned { bk: usize, kpack: usize },
+    MxuUnderfilled { util_pct: usize },
+    /// CK's 1024-thread/16×16-XDL failure mode: accumulator rows per MXU
+    /// pass exceed what the tile provides, producing the FP errors the
+    /// report saw. We reject the combination statically.
+    MxuTileMismatch { bm: usize, bn: usize, mxu_m: usize, mxu_n: usize },
+}
+
+impl std::fmt::Display for Illegal {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Illegal::ZeroDim => write!(f, "zero block dimension"),
+            Illegal::VmemOverflow { need, budget } => {
+                write!(f, "VMEM overflow: need {need} B > budget {budget} B")
+            }
+            Illegal::LaneMisaligned { dim, value } => {
+                write!(f, "{dim}={value} not a multiple of {LANE} lanes")
+            }
+            Illegal::SublaneMisaligned { dim, value } => {
+                write!(f, "{dim}={value} not a multiple of {SUBLANE} sublanes")
+            }
+            Illegal::KpackMisaligned { bk, kpack } => {
+                write!(f, "bk={bk} not divisible by kpack={kpack}")
+            }
+            Illegal::MxuUnderfilled { util_pct } => {
+                write!(f, "MXU utilization {util_pct}% below 25% floor")
+            }
+            Illegal::MxuTileMismatch { bm, bn, mxu_m, mxu_n } => write!(
+                f,
+                "block {bm}x{bn} smaller than MXU tile {mxu_m}x{mxu_n} \
+                 (CK's 16x16-per-XDL runtime-FP-error mode)"
+            ),
+        }
+    }
+}
+
+/// The legality predicate: `Ok(())` iff a real-TPU lowering of this point
+/// would compile and run. (Interpret-mode accepts anything; this encodes
+/// the Mosaic constraints so exploration happens *before* a TPU build.)
+pub fn check(p: &KernelParams) -> Result<(), Vec<Illegal>> {
+    let mut errs = Vec::new();
+    let BlockShape { bm, bn, bk } = p.block;
+    if bm == 0 || bn == 0 || bk == 0 {
+        errs.push(Illegal::ZeroDim);
+        return Err(errs);
+    }
+    if bn % LANE != 0 {
+        errs.push(Illegal::LaneMisaligned { dim: "bn", value: bn });
+    }
+    if bk % LANE != 0 && bk % p.kpack != 0 {
+        errs.push(Illegal::KpackMisaligned { bk, kpack: p.kpack });
+    }
+    if bm % SUBLANE != 0 {
+        errs.push(Illegal::SublaneMisaligned { dim: "bm", value: bm });
+    }
+    let need = p.vmem_bytes();
+    if need > VMEM_BUDGET_BYTES {
+        errs.push(Illegal::VmemOverflow { need, budget: VMEM_BUDGET_BYTES });
+    }
+    if bm < p.mxu_m && bn < p.mxu_n && (p.mxu_m > 16 || p.mxu_n > 16) {
+        errs.push(Illegal::MxuTileMismatch {
+            bm,
+            bn,
+            mxu_m: p.mxu_m,
+            mxu_n: p.mxu_n,
+        });
+    }
+    let util = p.mxu_utilization();
+    if util < 0.25 {
+        errs.push(Illegal::MxuUnderfilled {
+            util_pct: (util * 100.0) as usize,
+        });
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+/// Enumerate the default exploration grid (the BLK bench's axes).
+pub fn exploration_grid() -> Vec<KernelParams> {
+    let mut out = Vec::new();
+    for &bm in &[16usize, 32, 64, 128, 256, 512] {
+        for &bn in &[16usize, 32, 64, 128, 256, 512] {
+            for &bk in &[8usize, 16, 32, 64, 128] {
+                for &db in &[false, true] {
+                    let mut p =
+                        KernelParams::new(BlockShape::new(bm, bn, bk), 4);
+                    p.double_buffer = db;
+                    out.push(p);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_legal() {
+        let p = KernelParams::new(BlockShape::default(), 4);
+        assert_eq!(check(&p), Ok(()));
+        assert!(p.vmem_bytes() <= VMEM_BUDGET_BYTES);
+        assert_eq!(p.mxu_utilization(), 1.0);
+    }
+
+    #[test]
+    fn report_1024_thread_16x16_config_rejected() {
+        // The config the report got to compile but which threw FP errors:
+        // block 16x16 per XDL against a full-size MXU tile.
+        let p = KernelParams::new(BlockShape::new(16, 16, 64), 4);
+        let errs = check(&p).unwrap_err();
+        assert!(
+            errs.iter()
+                .any(|e| matches!(e, Illegal::MxuTileMismatch { .. })),
+            "{errs:?}"
+        );
+    }
+
+    #[test]
+    fn vmem_overflow_detected() {
+        let p = KernelParams::new(BlockShape::new(1024, 1024, 512), 4);
+        let errs = check(&p).unwrap_err();
+        assert!(errs
+            .iter()
+            .any(|e| matches!(e, Illegal::VmemOverflow { .. })));
+    }
+
+    #[test]
+    fn misalignment_reasons_are_specific() {
+        let p = KernelParams::new(BlockShape::new(100, 100, 60), 4);
+        let errs = check(&p).unwrap_err();
+        let text: Vec<String> = errs.iter().map(|e| e.to_string()).collect();
+        assert!(text.iter().any(|t| t.contains("lanes")), "{text:?}");
+        assert!(text.iter().any(|t| t.contains("sublanes")), "{text:?}");
+    }
+
+    #[test]
+    fn majority_of_grid_is_illegal_like_ck() {
+        // The report: "we could not get the vast majority of
+        // block/hyperparameter adjustments to compile".
+        let grid = exploration_grid();
+        let legal = grid.iter().filter(|p| check(p).is_ok()).count();
+        assert!(legal * 2 < grid.len(), "{legal}/{} legal", grid.len());
+        assert!(legal > 0);
+    }
+
+    #[test]
+    fn double_buffer_doubles_stream_footprint() {
+        let mut p = KernelParams::new(BlockShape::default(), 4);
+        p.double_buffer = false;
+        let single = p.vmem_bytes();
+        p.double_buffer = true;
+        let double = p.vmem_bytes();
+        let stream = (128 * 64 + 64 * 128) * 4;
+        assert_eq!(double - single, stream);
+    }
+}

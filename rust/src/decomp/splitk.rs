@@ -1,0 +1,124 @@
+//! Fixed Split-K decomposition — the second baseline. Each tile's K loop
+//! is cut into `splits` balanced chunks; chunk (tile, s) is an
+//! independent workgroup, and a reduction pass sums the `splits` partial
+//! C buffers.
+
+use super::tile::WorkItem;
+use super::TileGrid;
+
+/// Per-CU work list for a Split-K launch of `tiles × splits` workgroups,
+/// wave-strided like a real grid dispatch.
+pub fn splitk_assignment(
+    grid: TileGrid,
+    p: usize,
+    splits: usize,
+) -> Vec<Vec<WorkItem>> {
+    assert!(p > 0);
+    let splits = splits.clamp(1, grid.iters_per_tile.max(1));
+    let ipt = grid.iters_per_tile;
+    let mut cus = vec![Vec::new(); p];
+    let mut wg = 0usize;
+    for tile in 0..grid.num_tiles() {
+        for s in 0..splits {
+            let k_lo = s * ipt / splits;
+            let k_hi = (s + 1) * ipt / splits;
+            cus[wg % p].push(WorkItem {
+                tile,
+                k_iters: k_hi - k_lo,
+                partial: splits > 1,
+            });
+            wg += 1;
+        }
+    }
+    cus
+}
+
+/// Extra HBM traffic of the reduction pass, in C-sized buffers: Split-K
+/// writes `splits` partial Cs and reads them back once.
+pub fn reduction_traffic_factor(splits: usize) -> f64 {
+    if splits <= 1 {
+        0.0
+    } else {
+        2.0 * splits as f64
+    }
+}
+
+/// Effective parallelism: workgroups available vs CUs.
+pub fn splitk_efficiency(grid: TileGrid, p: usize, splits: usize) -> f64 {
+    let splits = splits.clamp(1, grid.iters_per_tile.max(1));
+    super::occupancy::dp_efficiency(grid.num_tiles() * splits, p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{BlockShape, GemmShape};
+    use crate::prop;
+
+    fn grid(tm: usize, tn: usize, ipt: usize) -> TileGrid {
+        TileGrid::new(
+            GemmShape::new(tm * 128, tn * 128, ipt * 64),
+            BlockShape::default(),
+        )
+    }
+
+    #[test]
+    fn chunks_partition_k() {
+        let g = grid(1, 1, 10);
+        let cus = splitk_assignment(g, 3, 4);
+        let total: usize =
+            cus.iter().flatten().map(|w| w.k_iters).sum();
+        assert_eq!(total, 10);
+        assert!(cus.iter().flatten().all(|w| w.partial));
+    }
+
+    #[test]
+    fn splits_clamped_to_depth() {
+        let g = grid(2, 2, 2); // only 2 k-iters
+        let cus = splitk_assignment(g, 4, 100);
+        let per_tile: usize =
+            cus.iter().flatten().filter(|w| w.tile == 0).count();
+        assert_eq!(per_tile, 2);
+    }
+
+    #[test]
+    fn split1_equals_dp_shape() {
+        let g = grid(3, 3, 4);
+        let cus = splitk_assignment(g, 4, 1);
+        assert!(cus.iter().flatten().all(|w| !w.partial && w.k_iters == 4));
+        assert_eq!(
+            cus.iter().flatten().count(),
+            g.num_tiles()
+        );
+    }
+
+    #[test]
+    fn prop_splitk_covers_all_iterations() {
+        prop::check("splitk covers iter space", 60, |rng| {
+            let g = grid(
+                rng.usize_in(1, 12),
+                rng.usize_in(1, 12),
+                rng.usize_in(1, 40),
+            );
+            let p = rng.usize_in(1, 64);
+            let splits = rng.usize_in(1, 12);
+            let cus = splitk_assignment(g, p, splits);
+            let mut per_tile = vec![0usize; g.num_tiles()];
+            for w in cus.iter().flatten() {
+                per_tile[w.tile] += w.k_iters;
+            }
+            prop::ensure(
+                per_tile.iter().all(|&it| it == g.iters_per_tile),
+                "tile k coverage broken",
+            )
+        });
+    }
+
+    #[test]
+    fn efficiency_improves_with_splits_on_small_grids() {
+        let g = grid(2, 2, 16); // 4 tiles on 120 CUs: 3.3% DP efficiency
+        let e1 = splitk_efficiency(g, 120, 1);
+        let e8 = splitk_efficiency(g, 120, 8);
+        assert!(e8 > e1 * 5.0, "e1={e1} e8={e8}");
+    }
+}

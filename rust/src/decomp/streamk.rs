@@ -1,0 +1,483 @@
+//! The hybrid Stream-K schedule — rust twin of
+//! `python/compile/partition.py` (kept bit-identical by the parity test).
+//!
+//! See the python module docstring for the algorithm; briefly: with `t`
+//! tiles and `P` CUs, the first `max(t/P - 1, 0)·P` tiles are plain
+//! data-parallel waves and the trailing `P + t mod P` tiles have their
+//! MAC-iteration space split evenly across all `P` CUs, bounding per-CU
+//! partial fragments at 2 and eliminating the final-wave quantization
+//! loss.
+
+use super::{BlockShape, GemmShape, TileGrid};
+
+/// A contiguous run of MAC iterations one CU spends inside one tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Segment {
+    /// Linear tile id (row-major over the tile grid).
+    pub tile: usize,
+    /// First k-iteration (in BK units) within the tile.
+    pub k_start: usize,
+    /// Number of k-iterations.
+    pub k_len: usize,
+    /// Covers the tile's full K range → direct store, no fixup.
+    pub direct: bool,
+    /// Partial-buffer slot (0|1) when `!direct`, else unused.
+    pub slot: usize,
+}
+
+/// One CU's contribution to a split tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Contributor {
+    pub cu: usize,
+    pub slot: usize,
+    pub k_start: usize,
+    pub k_len: usize,
+}
+
+/// A tile whose K range is split across CUs; finished by the fixup pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SplitTile {
+    pub tile: usize,
+    pub contributors: Vec<Contributor>,
+}
+
+/// Complete static Stream-K schedule for one GEMM problem.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamKSchedule {
+    pub shape: GemmShape,
+    pub block: BlockShape,
+    /// CU / grid-program count.
+    pub p: usize,
+    pub grid: TileGrid,
+    /// Tiles `[0, dp_tiles)` are data-parallel full waves.
+    pub dp_tiles: usize,
+    /// Tiles `[dp_tiles, num_tiles)` are stream-k.
+    pub sk_tiles: usize,
+    pub sk_iters: usize,
+    /// Uniform whole tiles per CU in the DP region.
+    pub dp_tiles_per_cu: usize,
+    /// Per-CU SK iteration range `[start, end)` in global iteration ids.
+    pub cu_sk_start: Vec<usize>,
+    pub cu_sk_end: Vec<usize>,
+    /// Per-CU segments, ordered by iteration.
+    pub segments: Vec<Vec<Segment>>,
+    /// Tiles needing the fixup pass, ascending tile id.
+    pub split_tiles: Vec<SplitTile>,
+    pub max_segments: usize,
+    pub max_contributors: usize,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ScheduleError {
+    #[error("degenerate problem {0:?}")]
+    Degenerate(String),
+}
+
+/// Construct the hybrid Stream-K schedule. Pure and total for all
+/// non-degenerate inputs; must stay in lock-step with
+/// `partition.build_schedule` in python.
+pub fn build_schedule(
+    shape: GemmShape,
+    block: BlockShape,
+    p: usize,
+) -> Result<StreamKSchedule, ScheduleError> {
+    build_schedule_inner(shape, block, p, None)
+}
+
+/// Weighted variant for the Block2Time balancer: the whole iteration
+/// space is treated as stream-k (no DP region) and CU `i` receives a
+/// share of iterations proportional to `weights[i]` (its predicted
+/// speed). `weights` must be positive. Not mirrored in python — the
+/// Pallas kernel always uses the even split; this feeds the simulator.
+pub fn build_weighted_schedule(
+    shape: GemmShape,
+    block: BlockShape,
+    weights: &[f64],
+) -> Result<StreamKSchedule, ScheduleError> {
+    if weights.is_empty() || weights.iter().any(|&w| !(w > 0.0)) {
+        return Err(ScheduleError::Degenerate(format!(
+            "bad weights {weights:?}"
+        )));
+    }
+    build_schedule_inner(shape, block, weights.len(), Some(weights))
+}
+
+fn build_schedule_inner(
+    shape: GemmShape,
+    block: BlockShape,
+    p: usize,
+    weights: Option<&[f64]>,
+) -> Result<StreamKSchedule, ScheduleError> {
+    if shape.is_degenerate() || p == 0 {
+        return Err(ScheduleError::Degenerate(format!("{shape:?} p={p}")));
+    }
+    let block = block.effective(shape);
+    let grid = TileGrid::new(shape, block);
+    let num_tiles = grid.num_tiles();
+    let ipt = grid.iters_per_tile;
+
+    let w = if weights.is_some() { 0 } else { num_tiles / p };
+    let dp_tiles = w.saturating_sub(1) * p;
+    let sk_tiles = num_tiles - dp_tiles;
+    let sk_iters = sk_tiles * ipt;
+    let dp_tiles_per_cu = dp_tiles / p;
+
+    let base = dp_tiles * ipt;
+    let (cu_sk_start, cu_sk_end) = match weights {
+        None => (
+            (0..p).map(|cu| base + (cu * sk_iters) / p).collect(),
+            (0..p).map(|cu| base + ((cu + 1) * sk_iters) / p).collect(),
+        ),
+        Some(ws) => {
+            // Largest-remainder apportionment of sk_iters by weight:
+            // deterministic, sums exactly, every boundary monotone.
+            let total_w: f64 = ws.iter().sum();
+            let mut cuts = Vec::with_capacity(p + 1);
+            let mut acc = 0.0;
+            cuts.push(0usize);
+            for &wi in ws.iter().take(p - 1) {
+                acc += wi;
+                cuts.push(
+                    ((acc / total_w) * sk_iters as f64).round() as usize,
+                );
+            }
+            cuts.push(sk_iters);
+            for i in 1..cuts.len() {
+                if cuts[i] < cuts[i - 1] {
+                    cuts[i] = cuts[i - 1];
+                }
+            }
+            (
+                (0..p).map(|cu| base + cuts[cu]).collect::<Vec<_>>(),
+                (0..p).map(|cu| base + cuts[cu + 1]).collect::<Vec<_>>(),
+            )
+        }
+    };
+
+    let mut segments: Vec<Vec<Segment>> = Vec::with_capacity(p);
+    // tile -> contributors, gathered in CU order then sorted by k_start.
+    let mut fragments: Vec<(usize, Contributor)> = Vec::new();
+    for cu in 0..p {
+        let mut segs = Vec::new();
+        let (mut it, end) = (cu_sk_start[cu], cu_sk_end[cu]);
+        let mut n_partials = 0usize;
+        while it < end {
+            let tile = it / ipt;
+            let tile_end = (tile + 1) * ipt;
+            let seg_end = end.min(tile_end);
+            let k_start = it - tile * ipt;
+            let k_len = seg_end - it;
+            let direct = k_len == ipt;
+            let slot = if direct {
+                usize::MAX
+            } else {
+                let s = n_partials;
+                n_partials += 1;
+                debug_assert!(s <= 1, "hybrid schedule bounds partials at 2/CU");
+                fragments.push((
+                    tile,
+                    Contributor { cu, slot: s, k_start, k_len },
+                ));
+                s
+            };
+            segs.push(Segment {
+                tile,
+                k_start,
+                k_len,
+                direct,
+                slot: if direct { 0 } else { slot },
+            });
+            it = seg_end;
+        }
+        segments.push(segs);
+    }
+
+    fragments.sort_by_key(|(tile, c)| (*tile, c.k_start));
+    let mut split_tiles: Vec<SplitTile> = Vec::new();
+    for (tile, c) in fragments {
+        match split_tiles.last_mut() {
+            Some(st) if st.tile == tile => st.contributors.push(c),
+            _ => split_tiles.push(SplitTile { tile, contributors: vec![c] }),
+        }
+    }
+    // Invariant: each split tile's contributors partition [0, ipt).
+    for st in &split_tiles {
+        let mut cov = 0;
+        for c in &st.contributors {
+            debug_assert_eq!(c.k_start, cov, "non-contiguous fixup coverage");
+            cov += c.k_len;
+        }
+        debug_assert_eq!(cov, ipt, "fixup does not cover tile {}", st.tile);
+    }
+
+    let max_segments = segments.iter().map(Vec::len).max().unwrap_or(0);
+    let max_contributors =
+        split_tiles.iter().map(|s| s.contributors.len()).max().unwrap_or(0);
+
+    Ok(StreamKSchedule {
+        shape,
+        block,
+        p,
+        grid,
+        dp_tiles,
+        sk_tiles,
+        sk_iters,
+        dp_tiles_per_cu,
+        cu_sk_start,
+        cu_sk_end,
+        segments,
+        split_tiles,
+        max_segments,
+        max_contributors,
+    })
+}
+
+impl StreamKSchedule {
+    /// DP tiles owned by `cu` (wave-strided assignment).
+    pub fn direct_tiles(&self, cu: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.dp_tiles_per_cu).map(move |wave| wave * self.p + cu)
+    }
+
+    /// Total MAC iterations CU `cu` executes (DP quota + SK share).
+    pub fn cu_iters(&self, cu: usize) -> usize {
+        self.dp_tiles_per_cu * self.grid.iters_per_tile
+            + (self.cu_sk_end[cu] - self.cu_sk_start[cu])
+    }
+
+    /// Utilization of a pure data-parallel schedule (Figure 1's metric).
+    pub fn quantization_efficiency_dp(&self) -> f64 {
+        super::occupancy::dp_efficiency(self.grid.num_tiles(), self.p)
+    }
+
+    /// Utilization of this hybrid schedule (bounded by ±1 MAC iteration
+    /// of imbalance per CU).
+    pub fn quantization_efficiency_sk(&self) -> f64 {
+        let max_iters =
+            (0..self.p).map(|cu| self.cu_iters(cu)).max().unwrap_or(0);
+        if max_iters == 0 {
+            return 1.0;
+        }
+        self.grid.total_iters() as f64 / (max_iters * self.p) as f64
+    }
+
+    /// Workspace bytes for the partials buffer (P × 2 × BM × BN × f32) —
+    /// the fixed-size Stream-K workspace vs Split-K's O(S·M·N).
+    pub fn partials_bytes(&self) -> usize {
+        self.p * 2 * self.block.bm * self.block.bn * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    fn sched(m: usize, n: usize, k: usize, p: usize) -> StreamKSchedule {
+        build_schedule(GemmShape::new(m, n, k), BlockShape::default(), p)
+            .expect("valid schedule")
+    }
+
+    #[test]
+    fn table1_baseline_regimes() {
+        let s = sched(3840, 4096, 4096, 120);
+        assert_eq!(s.grid.num_tiles(), 960);
+        assert_eq!(s.dp_tiles, 840);
+        assert_eq!(s.sk_tiles, 120);
+        assert_eq!(s.dp_tiles_per_cu, 7);
+        // 960 % 120 == 0 and sk split is tile-aligned: no fixup needed.
+        assert!(s.split_tiles.is_empty());
+        assert!(s.quantization_efficiency_sk() > 0.999);
+    }
+
+    #[test]
+    fn small_matrix_single_iteration() {
+        let s = sched(3, 9, 9, 120);
+        assert_eq!(s.grid.num_tiles(), 1);
+        assert_eq!(s.grid.iters_per_tile, 1);
+        assert_eq!(s.dp_tiles, 0);
+        // one CU does the single iteration, the rest idle
+        let busy: Vec<usize> =
+            (0..120).filter(|&cu| s.cu_iters(cu) > 0).collect();
+        assert_eq!(busy.len(), 1);
+        assert!(s.split_tiles.is_empty());
+    }
+
+    #[test]
+    fn ragged_shape_has_fixups() {
+        // 64 tiles on 120 CUs: pure-SK regime, shares are not
+        // tile-aligned, so fixup tiles must exist.
+        let s = sched(1000, 1000, 1000, 120);
+        assert!(s.grid.num_tiles() > 0);
+        assert!(!s.split_tiles.is_empty());
+        // every split tile is in the SK region
+        for st in &s.split_tiles {
+            assert!(st.tile >= s.dp_tiles);
+        }
+    }
+
+    #[test]
+    fn single_cu_degenerates_to_serial() {
+        let s = sched(512, 512, 512, 1);
+        assert_eq!(s.cu_iters(0), s.grid.total_iters());
+        assert!(s.split_tiles.is_empty()); // one CU never splits a tile
+    }
+
+    #[test]
+    fn rejects_degenerate() {
+        assert!(build_schedule(
+            GemmShape::new(0, 1, 1),
+            BlockShape::default(),
+            4
+        )
+        .is_err());
+        assert!(build_schedule(
+            GemmShape::new(1, 1, 1),
+            BlockShape::default(),
+            0
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn weighted_schedule_follows_weights() {
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let ws = vec![1.0, 1.0, 2.0, 4.0];
+        let s = build_weighted_schedule(shape, BlockShape::default(), &ws)
+            .unwrap();
+        assert_eq!(s.dp_tiles, 0);
+        let sizes: Vec<usize> =
+            (0..4).map(|cu| s.cu_sk_end[cu] - s.cu_sk_start[cu]).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), s.grid.total_iters());
+        // CU 3 gets ~4x CU 0's share.
+        let r = sizes[3] as f64 / sizes[0] as f64;
+        assert!((r - 4.0).abs() < 0.2, "ratio {r}");
+        // Still at most 2 partial fragments per CU.
+        for segs in &s.segments {
+            assert!(segs.iter().filter(|g| !g.direct).count() <= 2);
+        }
+    }
+
+    #[test]
+    fn weighted_rejects_bad_weights() {
+        let shape = GemmShape::new(128, 128, 128);
+        assert!(build_weighted_schedule(shape, BlockShape::default(), &[])
+            .is_err());
+        assert!(build_weighted_schedule(
+            shape,
+            BlockShape::default(),
+            &[1.0, 0.0]
+        )
+        .is_err());
+        assert!(build_weighted_schedule(
+            shape,
+            BlockShape::default(),
+            &[1.0, f64::NAN]
+        )
+        .is_err());
+    }
+
+    /// Exhaustive invariants over random problems — the rust twin of
+    /// python's `test_schedule_invariants`.
+    #[test]
+    fn prop_schedule_invariants() {
+        prop::check("streamk-schedule-invariants", 120, |rng| {
+            let m = rng.usize_in(1, 3000);
+            let n = rng.usize_in(1, 3000);
+            let k = rng.usize_in(1, 3000);
+            let p = *rng.choose(&[1usize, 2, 7, 64, 104, 120, 301]);
+            let bm = *rng.choose(&[32usize, 128]);
+            let bn = *rng.choose(&[32usize, 128]);
+            let bk = *rng.choose(&[16usize, 64]);
+            let s = build_schedule(
+                GemmShape::new(m, n, k),
+                BlockShape::new(bm, bn, bk),
+                p,
+            )
+            .map_err(|e| e.to_string())?;
+            let ipt = s.grid.iters_per_tile;
+
+            // Every MAC iteration assigned exactly once.
+            let total = s.grid.total_iters();
+            let mut owned = vec![false; total];
+            let mut claim = |it: usize| -> prop::CaseResult {
+                if owned[it] {
+                    return Err(format!("iteration {it} double-assigned"));
+                }
+                owned[it] = true;
+                Ok(())
+            };
+            for cu in 0..p {
+                for tile in s.direct_tiles(cu) {
+                    for j in 0..ipt {
+                        claim(tile * ipt + j)?;
+                    }
+                }
+                for g in &s.segments[cu] {
+                    for j in 0..g.k_len {
+                        claim(g.tile * ipt + g.k_start + j)?;
+                    }
+                }
+            }
+            prop::ensure(
+                owned.iter().all(|&o| o),
+                "some iteration unassigned",
+            )?;
+
+            // Balanced SK split.
+            let sizes: Vec<usize> = (0..p)
+                .map(|cu| s.cu_sk_end[cu] - s.cu_sk_start[cu])
+                .collect();
+            let (mn, mx) = (
+                *sizes.iter().min().unwrap(),
+                *sizes.iter().max().unwrap(),
+            );
+            prop::ensure(mx - mn <= 1, format!("imbalance {mn}..{mx}"))?;
+            prop::ensure_eq(
+                sizes.iter().sum::<usize>(),
+                s.sk_iters,
+                "sk iters total",
+            )?;
+
+            // Partial slots bounded at 2 per CU; segments bounded at 4.
+            prop::ensure(s.max_segments <= 4, "max_segments > 4")?;
+            for segs in &s.segments {
+                let partials =
+                    segs.iter().filter(|g| !g.direct).count();
+                prop::ensure(partials <= 2, "more than 2 partials")?;
+            }
+
+            // Split tiles ∪ direct SK tiles == SK region, disjoint.
+            let mut kind = vec![0u8; s.grid.num_tiles()]; // 1=direct 2=split
+            for segs in &s.segments {
+                for g in segs.iter().filter(|g| g.direct) {
+                    if kind[g.tile] != 0 {
+                        return Err(format!("tile {} double kind", g.tile));
+                    }
+                    kind[g.tile] = 1;
+                }
+            }
+            for st in &s.split_tiles {
+                if kind[st.tile] != 0 {
+                    return Err(format!("tile {} double kind", st.tile));
+                }
+                kind[st.tile] = 2;
+                let mut cov = 0;
+                for c in &st.contributors {
+                    prop::ensure_eq(c.k_start, cov, "contig coverage")?;
+                    cov += c.k_len;
+                }
+                prop::ensure_eq(cov, ipt, "full coverage")?;
+            }
+            for t in s.dp_tiles..s.grid.num_tiles() {
+                prop::ensure(kind[t] != 0, format!("sk tile {t} unhandled"))?;
+            }
+
+            // Hybrid never worse than pure DP.
+            prop::ensure(
+                s.quantization_efficiency_sk()
+                    >= s.quantization_efficiency_dp() - 1e-12,
+                "hybrid worse than DP",
+            )
+        });
+    }
+}

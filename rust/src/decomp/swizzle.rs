@@ -1,0 +1,143 @@
+//! Block2CTile mappings — linear tile id → (row, col) grid coordinates.
+//!
+//! This is exactly the layer where the report located CK's "compute unit
+//! bug" (`Block2CTileMap` mis-mapping when a sub-maximal CU count is
+//! passed). Each mapping here is a *verified bijection* over the tile
+//! grid for every CU count (property-tested below); the deliberately
+//! buggy CK-like variant lives in `faults::buggy_block2ctile` for the
+//! CUBUG experiment.
+
+use super::TileGrid;
+
+/// Tile-order strategies for DP-region assignment and cache locality.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Swizzle {
+    /// tile = r·tiles_n + c (the kernels' native order).
+    RowMajor,
+    /// tile = c·tiles_m + r.
+    ColMajor,
+    /// Group `g` consecutive rows; walk columns within the group before
+    /// advancing — CUTLASS/CK's "swizzled" raster that keeps concurrent
+    /// tiles sharing B-operand columns in cache.
+    GroupedRows(usize),
+}
+
+impl Swizzle {
+    /// Map a linear tile id to (row, col). Total and bijective for any
+    /// grid and any `0 <= tile < num_tiles`.
+    pub fn tile_rc(&self, grid: TileGrid, tile: usize) -> (usize, usize) {
+        let (tm, tn) = (grid.tiles_m, grid.tiles_n);
+        debug_assert!(tile < tm * tn);
+        match *self {
+            Swizzle::RowMajor => (tile / tn, tile % tn),
+            Swizzle::ColMajor => (tile % tm, tile / tm),
+            Swizzle::GroupedRows(g) => {
+                let g = g.clamp(1, tm.max(1));
+                let full_group_tiles = g * tn;
+                let group = tile / full_group_tiles;
+                let rows_before = group * g;
+                let rows_here = g.min(tm - rows_before.min(tm));
+                let within = tile - group * full_group_tiles;
+                let r = rows_before + within % rows_here.max(1);
+                let c = within / rows_here.max(1);
+                (r, c)
+            }
+        }
+    }
+
+    /// Inverse mapping (used by tests and the simulator's heatmaps).
+    pub fn rc_tile(&self, grid: TileGrid, r: usize, c: usize) -> usize {
+        let (tm, tn) = (grid.tiles_m, grid.tiles_n);
+        debug_assert!(r < tm && c < tn);
+        match *self {
+            Swizzle::RowMajor => r * tn + c,
+            Swizzle::ColMajor => c * tm + r,
+            Swizzle::GroupedRows(g) => {
+                let g = g.clamp(1, tm.max(1));
+                let group = r / g;
+                let rows_before = group * g;
+                let rows_here = g.min(tm - rows_before);
+                group * g * tn + c * rows_here + (r - rows_before)
+            }
+        }
+    }
+}
+
+/// Locality score: mean L2-reuse distance proxy — how many distinct
+/// B-operand column strips the first `window` tiles touch. Lower is
+/// better; used by the blocksize/swizzle ablation bench.
+pub fn bcol_working_set(swizzle: Swizzle, grid: TileGrid, window: usize) -> usize {
+    let mut seen = std::collections::HashSet::new();
+    for t in 0..window.min(grid.num_tiles()) {
+        let (_r, c) = swizzle.tile_rc(grid, t);
+        seen.insert(c);
+    }
+    seen.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{BlockShape, GemmShape};
+    use crate::prop;
+
+    fn grid(tm: usize, tn: usize) -> TileGrid {
+        TileGrid::new(
+            GemmShape::new(tm * 128, tn * 128, 64),
+            BlockShape::default(),
+        )
+    }
+
+    #[test]
+    fn row_major_is_native_order() {
+        let g = grid(3, 4);
+        assert_eq!(Swizzle::RowMajor.tile_rc(g, 0), (0, 0));
+        assert_eq!(Swizzle::RowMajor.tile_rc(g, 5), (1, 1));
+        assert_eq!(Swizzle::RowMajor.tile_rc(g, 11), (2, 3));
+    }
+
+    #[test]
+    fn grouped_rows_walks_groups_first() {
+        let g = grid(4, 3);
+        let s = Swizzle::GroupedRows(2);
+        let order: Vec<(usize, usize)> =
+            (0..12).map(|t| s.tile_rc(g, t)).collect();
+        // first group: rows 0..2, column-major within the group
+        assert_eq!(&order[..6], &[(0, 0), (1, 0), (0, 1), (1, 1), (0, 2), (1, 2)]);
+        assert_eq!(order[6], (2, 0));
+    }
+
+    #[test]
+    fn prop_all_swizzles_are_bijections() {
+        prop::check("swizzle bijection", 100, |rng| {
+            let tm = rng.usize_in(1, 40);
+            let tn = rng.usize_in(1, 40);
+            let g = grid(tm, tn);
+            let s = match rng.usize_in(0, 2) {
+                0 => Swizzle::RowMajor,
+                1 => Swizzle::ColMajor,
+                _ => Swizzle::GroupedRows(rng.usize_in(1, 9)),
+            };
+            let mut seen = vec![false; tm * tn];
+            for t in 0..tm * tn {
+                let (r, c) = s.tile_rc(g, t);
+                prop::ensure(r < tm && c < tn, format!("{s:?} oob {r},{c}"))?;
+                let lin = r * tn + c;
+                prop::ensure(!seen[lin], format!("{s:?} collides at {r},{c}"))?;
+                seen[lin] = true;
+                // inverse round-trips
+                prop::ensure_eq(s.rc_tile(g, r, c), t, "inverse")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn grouped_rows_improves_bcol_locality() {
+        let g = grid(16, 16);
+        let w = 16; // one wave of 16 CUs
+        let row = bcol_working_set(Swizzle::RowMajor, g, w);
+        let grouped = bcol_working_set(Swizzle::GroupedRows(4), g, w);
+        assert!(grouped < row, "grouped {grouped} !< row {row}");
+    }
+}

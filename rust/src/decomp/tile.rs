@@ -1,0 +1,101 @@
+//! Conventional data-parallel (tile-per-workgroup) decomposition — the
+//! baseline Stream-K displaces. Produces the per-CU work lists the GPU
+//! simulator replays.
+
+use super::swizzle::Swizzle;
+use super::TileGrid;
+
+/// One unit of CU work: an output tile plus how many BK-deep MAC
+/// iterations it runs there (always the full tile depth for DP).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub tile: usize,
+    pub k_iters: usize,
+    /// True when the result is a partial needing a later reduction.
+    pub partial: bool,
+}
+
+/// Wave-strided DP assignment: CU `i` runs tiles `i, i+p, i+2p, …` in
+/// swizzled raster order. Mirrors how a GPU dispatches a grid of
+/// workgroups round-robin across CUs.
+pub fn dp_assignment(
+    grid: TileGrid,
+    p: usize,
+    swizzle: Swizzle,
+) -> Vec<Vec<WorkItem>> {
+    assert!(p > 0);
+    let mut cus = vec![Vec::new(); p];
+    for t in 0..grid.num_tiles() {
+        // raster position t maps to tile id via the swizzle
+        let (r, c) = swizzle.tile_rc(grid, t);
+        let tile = r * grid.tiles_n + c;
+        cus[t % p].push(WorkItem {
+            tile,
+            k_iters: grid.iters_per_tile,
+            partial: false,
+        });
+    }
+    cus
+}
+
+/// Number of waves a DP launch needs (`ceil(tiles / p)`).
+pub fn dp_waves(grid: TileGrid, p: usize) -> usize {
+    super::cdiv(grid.num_tiles(), p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{BlockShape, GemmShape};
+    use crate::prop;
+
+    fn grid(tm: usize, tn: usize, ipt: usize) -> TileGrid {
+        TileGrid::new(
+            GemmShape::new(tm * 128, tn * 128, ipt * 64),
+            BlockShape::default(),
+        )
+    }
+
+    #[test]
+    fn strided_assignment() {
+        let g = grid(2, 3, 4);
+        let cus = dp_assignment(g, 4, Swizzle::RowMajor);
+        assert_eq!(cus.len(), 4);
+        assert_eq!(cus[0].iter().map(|w| w.tile).collect::<Vec<_>>(), vec![0, 4]);
+        assert_eq!(cus[1].iter().map(|w| w.tile).collect::<Vec<_>>(), vec![1, 5]);
+        assert_eq!(cus[2].iter().map(|w| w.tile).collect::<Vec<_>>(), vec![2]);
+        assert!(cus.iter().flatten().all(|w| w.k_iters == 4 && !w.partial));
+    }
+
+    #[test]
+    fn prop_every_tile_assigned_once() {
+        prop::check("dp assignment covers tiles", 60, |rng| {
+            let g = grid(rng.usize_in(1, 30), rng.usize_in(1, 30), 2);
+            let p = rng.usize_in(1, 130);
+            let sw = *rng.choose(&[
+                Swizzle::RowMajor,
+                Swizzle::ColMajor,
+                Swizzle::GroupedRows(3),
+            ]);
+            let cus = dp_assignment(g, p, sw);
+            let mut seen = vec![false; g.num_tiles()];
+            for w in cus.iter().flatten() {
+                prop::ensure(!seen[w.tile], format!("tile {} twice", w.tile))?;
+                seen[w.tile] = true;
+            }
+            prop::ensure(seen.iter().all(|&s| s), "tile missing")?;
+            // per-CU tile counts differ by at most one (strided round robin)
+            let counts: Vec<usize> = cus.iter().map(Vec::len).collect();
+            let (mn, mx) =
+                (*counts.iter().min().unwrap(), *counts.iter().max().unwrap());
+            prop::ensure(mx - mn <= 1, "unbalanced stride")
+        });
+    }
+
+    #[test]
+    fn waves() {
+        assert_eq!(dp_waves(grid(2, 3, 1), 4), 2);
+        assert_eq!(dp_waves(grid(2, 2, 1), 4), 1);
+        assert_eq!(dp_waves(grid(11, 11, 1), 120), 2);
+    }
+}

@@ -1,0 +1,105 @@
+//! Fixed-size worker pool. Jobs are `FnOnce` closures; shutdown is
+//! graceful (drains the queue) and happens on drop.
+
+use super::channel::{bounded, Sender};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+pub struct ThreadPool {
+    tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `threads` workers sharing a queue of `queue_cap` pending jobs
+    /// (senders block beyond that — built-in backpressure).
+    pub fn new(threads: usize, queue_cap: usize) -> Self {
+        assert!(threads > 0, "thread pool needs at least one worker");
+        let (tx, rx) = bounded::<Job>(queue_cap.max(1));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("streamk-worker-{i}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { tx: Some(tx), workers }
+    }
+
+    /// Submit a job; blocks when the queue is full. Returns `false` if the
+    /// pool is already shut down.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, job: F) -> bool {
+        match &self.tx {
+            Some(tx) => tx.send(Box::new(job)).is_ok(),
+            None => false,
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.tx.as_ref().map_or(0, |tx| tx.len())
+    }
+
+    /// Drain the queue and join all workers.
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closes the channel; workers exit after draining
+        for w in self.workers.drain(..) {
+            w.join().expect("worker panicked");
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn runs_all_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(4, 16);
+            for _ in 0..100 {
+                let c = counter.clone();
+                assert!(pool.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }));
+            }
+            // drop -> shutdown -> drain
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn submit_after_shutdown_fails() {
+        let mut pool = ThreadPool::new(1, 4);
+        pool.shutdown();
+        assert!(!pool.submit(|| {}));
+    }
+
+    #[test]
+    fn single_worker_is_sequential() {
+        let order = Arc::new(std::sync::Mutex::new(Vec::new()));
+        {
+            let pool = ThreadPool::new(1, 32);
+            for i in 0..20 {
+                let order = order.clone();
+                pool.submit(move || order.lock().unwrap().push(i));
+            }
+        }
+        assert_eq!(*order.lock().unwrap(), (0..20).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,190 @@
+//! Injectable recreations of the report's two CK bugs.
+//!
+//! Both are *mechanism-level* reconstructions: plausible, minimal code
+//! defects that produce exactly the observable the report describes, so
+//! the CUBUG/MEDBUG benches can show the symptom and the validator can
+//! catch it — and so the tests can prove the *fixed* path (the plain
+//! executor) never exhibits it.
+
+use super::exec::{execute_schedule, Matrix};
+use crate::decomp::{Contributor, StreamKSchedule};
+
+/// Which defect to inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// None — the fixed implementation.
+    None,
+    /// The compute-unit bug: the Block2CTile mapping is computed with the
+    /// *hardware* CU count (120 on the MI200) while the launch uses the
+    /// user-requested count. Segments land on the wrong tiles whenever
+    /// `cus != hw_cus` — matching the report: default CU count works,
+    /// any sub-maximal value corrupts the output.
+    CuMapping { hw_cus: usize },
+    /// The medium-matrix bug: the fixup pass allocates a fixed two-entry
+    /// contributor table per split tile (CK's two-CTA assumption) and
+    /// silently drops further contributors. Only shapes whose
+    /// (tiles, ipt, P) produce ≥3-way split tiles corrupt — 480×512×512
+    /// is such a shape at the CK defaults; most Table-1 shapes are not.
+    FixupOverflow,
+}
+
+/// Executor wrapper that applies a [`Fault`] to the schedule before
+/// running it.
+pub struct FaultyExecutor {
+    pub fault: Fault,
+}
+
+impl FaultyExecutor {
+    pub fn new(fault: Fault) -> Self {
+        Self { fault }
+    }
+
+    /// Run A·B under the injected fault.
+    pub fn run(&self, a: &Matrix, b: &Matrix, sched: &StreamKSchedule) -> Matrix {
+        match self.fault {
+            Fault::None => execute_schedule(a, b, sched),
+            Fault::CuMapping { hw_cus } => {
+                let broken = inject_cu_mapping_bug(sched, hw_cus);
+                execute_schedule(a, b, &broken)
+            }
+            Fault::FixupOverflow => {
+                let broken = inject_fixup_overflow(sched);
+                execute_schedule(a, b, &broken)
+            }
+        }
+    }
+}
+
+/// Recreate the CU bug: re-map every SK segment's tile through a stride
+/// computed with `hw_cus` instead of `sched.p`. Identity when
+/// `sched.p == hw_cus` (the report: full-CU runs were fine).
+fn inject_cu_mapping_bug(sched: &StreamKSchedule, hw_cus: usize) -> StreamKSchedule {
+    let mut broken = sched.clone();
+    if sched.p == hw_cus {
+        return broken;
+    }
+    let tiles = sched.grid.num_tiles();
+    let remap = |tile: usize| -> usize {
+        // CK's Block2CTileMap composes a block id with the launch grid;
+        // with the wrong grid stride the affine map walks off the raster.
+        (tile * hw_cus / sched.p.max(1)) % tiles
+    };
+    for segs in &mut broken.segments {
+        for seg in segs {
+            seg.tile = remap(seg.tile);
+        }
+    }
+    for st in &mut broken.split_tiles {
+        st.tile = remap(st.tile);
+    }
+    broken
+}
+
+/// Recreate the medium-matrix bug: truncate every split tile's
+/// contributor list to two entries.
+fn inject_fixup_overflow(sched: &StreamKSchedule) -> StreamKSchedule {
+    let mut broken = sched.clone();
+    for st in &mut broken.split_tiles {
+        st.contributors.truncate(2);
+        let _: &Vec<Contributor> = &st.contributors;
+    }
+    broken
+}
+
+/// Does this schedule trigger the FixupOverflow bug? (≥3-way split tile.)
+pub fn shape_triggers_fixup_overflow(sched: &StreamKSchedule) -> bool {
+    sched.max_contributors >= 3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{build_schedule, BlockShape, GemmShape};
+    use crate::faults::validate::error_rate;
+    use crate::faults::exec::naive_gemm;
+    use crate::prop;
+
+    fn run_case(
+        m: usize,
+        n: usize,
+        k: usize,
+        p: usize,
+        block: BlockShape,
+        fault: Fault,
+    ) -> f64 {
+        let mut rng = prop::Rng::new(99);
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let sched =
+            build_schedule(GemmShape::new(m, n, k), block, p).unwrap();
+        let got = FaultyExecutor::new(fault).run(&a, &b, &sched);
+        let want = naive_gemm(&a, &b);
+        error_rate(&got.data, &want.data, 1e-3).rate
+    }
+
+    const BLK: BlockShape = BlockShape { bm: 16, bn: 16, bk: 8 };
+
+    #[test]
+    fn cu_bug_clean_at_full_cus() {
+        // The report: default (full) CU count works fine.
+        let e = run_case(96, 96, 64, 120, BLK, Fault::CuMapping { hw_cus: 120 });
+        assert_eq!(e, 0.0);
+    }
+
+    #[test]
+    fn cu_bug_corrupts_submaximal_cus() {
+        // The report: any explicit sub-maximal CU count corrupts.
+        let e = run_case(96, 96, 64, 30, BLK, Fault::CuMapping { hw_cus: 120 });
+        assert!(e > 0.3, "error rate {e}");
+        // and the fixed path is clean at the same CU count
+        let fixed = run_case(96, 96, 64, 30, BLK, Fault::None);
+        assert_eq!(fixed, 0.0);
+    }
+
+    #[test]
+    fn fixup_overflow_silent_on_two_way_splits() {
+        // A shape whose split tiles all have <= 2 contributors.
+        let sched = build_schedule(
+            GemmShape::new(96, 96, 64),
+            BLK,
+            4,
+        )
+        .unwrap();
+        if sched.max_contributors <= 2 {
+            let e = run_case(96, 96, 64, 4, BLK, Fault::FixupOverflow);
+            assert_eq!(e, 0.0);
+        }
+    }
+
+    #[test]
+    fn fixup_overflow_corrupts_medium_matrix() {
+        // The scaled 480x512x512 analogue: blocks scaled 1:8 like the
+        // problem, giving deep multi-contributor split tiles.
+        let shape = GemmShape::new(60, 64, 64);
+        let sched = build_schedule(shape, BlockShape::new(16, 16, 2), 120)
+            .unwrap();
+        assert!(
+            shape_triggers_fixup_overflow(&sched),
+            "case must have >=3-way splits (max={})",
+            sched.max_contributors
+        );
+        let e = run_case(60, 64, 64, 120, BlockShape::new(16, 16, 2),
+                         Fault::FixupOverflow);
+        assert!(e > 0.5, "error rate {e} — the report saw 99%");
+        let fixed = run_case(60, 64, 64, 120, BlockShape::new(16, 16, 2),
+                             Fault::None);
+        assert_eq!(fixed, 0.0);
+    }
+
+    #[test]
+    fn prop_fixed_path_never_corrupts() {
+        prop::check("Fault::None is always clean", 20, |rng| {
+            let m = rng.usize_in(1, 60);
+            let n = rng.usize_in(1, 60);
+            let k = rng.usize_in(1, 60);
+            let p = *rng.choose(&[1usize, 13, 120]);
+            let e = run_case(m, n, k, p, BLK, Fault::None);
+            prop::ensure(e == 0.0, format!("{m}x{n}x{k} p={p}: rate {e}"))
+        });
+    }
+}

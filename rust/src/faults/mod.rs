@@ -1,0 +1,23 @@
+//! Fault injection + output validation — the report's two bugs, made
+//! reproducible.
+//!
+//! The report observed (1) the **compute-unit bug**: CK's Stream-K branch
+//! corrupted results whenever a sub-maximal CU count was passed, traced
+//! as far as the `Block2CTile` mapping but never isolated; and (2) the
+//! **medium-matrix bug**: 480×512×512 produced "99% errors" padded or
+//! not. This module contains
+//!
+//! - [`exec`] — a pure-rust executor that runs a Stream-K schedule over
+//!   real f32 matrices (a third, independent implementation of the
+//!   semantics, cross-checked against naive GEMM and — via the parity
+//!   golden file — against the Pallas kernels);
+//! - [`bugs`] — *injectable* recreations of both bug mechanisms;
+//! - [`validate`] — the element-error-rate metric the report quotes.
+
+pub mod bugs;
+pub mod exec;
+pub mod validate;
+
+pub use bugs::{Fault, FaultyExecutor};
+pub use exec::{execute_schedule, naive_gemm, Matrix};
+pub use validate::{error_rate, ErrorReport};

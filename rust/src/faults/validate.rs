@@ -1,0 +1,90 @@
+//! Output validation — the report's "99% errors" metric.
+//!
+//! CK's examples validate GEMM output element-wise against a host
+//! reference and report the fraction exceeding tolerance; that fraction
+//! is what the report quotes for the medium-matrix bug. Same metric here.
+
+/// Element-wise comparison summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReport {
+    pub total: usize,
+    pub bad: usize,
+    /// Fraction of elements exceeding tolerance — "99% errors" ⇒ 0.99.
+    pub rate: f64,
+    pub max_abs_err: f64,
+    pub max_rel_err: f64,
+}
+
+impl ErrorReport {
+    /// CK's pass/fail line.
+    pub fn passed(&self) -> bool {
+        self.bad == 0
+    }
+}
+
+/// Compare `got` vs `want` with a mixed absolute/relative tolerance:
+/// an element fails when `|g - w| > tol · max(|w|, 1)`.
+pub fn error_rate(got: &[f32], want: &[f32], tol: f32) -> ErrorReport {
+    assert_eq!(got.len(), want.len(), "shape mismatch");
+    assert!(tol > 0.0);
+    let mut bad = 0usize;
+    let mut max_abs = 0.0f64;
+    let mut max_rel = 0.0f64;
+    for (&g, &w) in got.iter().zip(want) {
+        let abs = (g - w).abs() as f64;
+        let rel = abs / (w.abs() as f64).max(1.0);
+        max_abs = max_abs.max(abs);
+        max_rel = max_rel.max(rel);
+        if abs > (tol * w.abs().max(1.0)) as f64 {
+            bad += 1;
+        }
+    }
+    let total = got.len();
+    ErrorReport {
+        total,
+        bad,
+        rate: if total == 0 { 0.0 } else { bad as f64 / total as f64 },
+        max_abs_err: max_abs,
+        max_rel_err: max_rel,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_passes() {
+        let r = error_rate(&[1.0, 2.0, 3.0], &[1.0, 2.0, 3.0], 1e-5);
+        assert!(r.passed());
+        assert_eq!(r.rate, 0.0);
+    }
+
+    #[test]
+    fn detects_99_percent_errors() {
+        let want = vec![1.0f32; 100];
+        let mut got = vec![5.0f32; 100];
+        got[0] = 1.0;
+        let r = error_rate(&got, &want, 1e-3);
+        assert_eq!(r.bad, 99);
+        assert!((r.rate - 0.99).abs() < 1e-12);
+        assert!(!r.passed());
+        assert!((r.max_abs_err - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn relative_tolerance_scales_with_magnitude() {
+        // 0.1 absolute error on a 1e6 value is fine at 1e-3 rel tol...
+        let r = error_rate(&[1e6 + 0.1], &[1e6], 1e-3);
+        assert!(r.passed());
+        // ...but not on a value of 1.
+        let r = error_rate(&[1.1], &[1.0], 1e-3);
+        assert!(!r.passed());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let _ = error_rate(&[1.0], &[1.0, 2.0], 1e-3);
+    }
+}

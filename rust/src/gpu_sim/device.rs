@@ -1,0 +1,138 @@
+//! Device models: an MI200-like accelerator and variants.
+
+/// Built-in device presets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceKind {
+    /// MI250X single die: 110 CUs in hardware; the report's examples used
+    /// 120 (MI200-family max), which we keep for fidelity to Table 1.
+    Mi200,
+    /// MI100: 120 CUs at lower clock/bandwidth.
+    Mi100,
+}
+
+/// A simulated accelerator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Device {
+    pub name: String,
+    pub num_cus: usize,
+    /// Peak MAC-FLOP/s per CU (f32-equivalent matrix throughput).
+    pub flops_per_cu: f64,
+    /// HBM bandwidth shared by all CUs (bytes/s).
+    pub hbm_bw: f64,
+    /// Fixed kernel-launch overhead (seconds).
+    pub launch_overhead: f64,
+    /// Per-MAC-iteration fixed cost (software pipelining, address
+    /// generation, LDS/VMEM turnaround): what makes small BK blocks
+    /// amortize worse. Zero for idealized custom devices.
+    pub iter_overhead: f64,
+    /// Per-CU relative speed (1.0 = nominal). Heterogeneity models
+    /// thermal throttling / shared-cluster noise; drives Block2Time.
+    pub cu_speed: Vec<f64>,
+}
+
+impl Device {
+    pub fn preset(kind: DeviceKind) -> Self {
+        match kind {
+            // 45 TFLOP/s fp32 matrix ÷ 120 CUs, 1.6 TB/s, ~6 µs launch,
+            // ~150 ns of fixed work per MAC iteration.
+            DeviceKind::Mi200 => Self::uniform(
+                "mi200", 120, 45.0e12 / 120.0, 1.6e12, 6.0e-6,
+            )
+            .with_iter_overhead(150.0e-9),
+            DeviceKind::Mi100 => Self::uniform(
+                "mi100", 120, 23.0e12 / 120.0, 1.2e12, 6.0e-6,
+            )
+            .with_iter_overhead(180.0e-9),
+        }
+    }
+
+    pub fn uniform(
+        name: &str,
+        num_cus: usize,
+        flops_per_cu: f64,
+        hbm_bw: f64,
+        launch_overhead: f64,
+    ) -> Self {
+        assert!(num_cus > 0);
+        Self {
+            name: name.to_string(),
+            num_cus,
+            flops_per_cu,
+            hbm_bw,
+            launch_overhead,
+            iter_overhead: 0.0,
+            cu_speed: vec![1.0; num_cus],
+        }
+    }
+
+    pub fn with_iter_overhead(mut self, seconds: f64) -> Self {
+        assert!(seconds >= 0.0);
+        self.iter_overhead = seconds;
+        self
+    }
+
+    /// Restrict to the first `cus` CUs — the report's CLI "Compute Units"
+    /// parameter (the one that triggered the CK bug).
+    pub fn with_cus(mut self, cus: usize) -> Self {
+        assert!(cus > 0 && cus <= self.num_cus, "cus {cus} out of range");
+        self.num_cus = cus;
+        self.cu_speed.truncate(cus);
+        self
+    }
+
+    /// Inject heterogeneity: CU `i` runs at `speeds[i]`× nominal.
+    pub fn with_speeds(mut self, speeds: Vec<f64>) -> Self {
+        assert_eq!(speeds.len(), self.num_cus);
+        assert!(speeds.iter().all(|&s| s > 0.0));
+        self.cu_speed = speeds;
+        self
+    }
+
+    /// Deterministic "shared cluster" throttling pattern used by the
+    /// Block2Time bench: every `stride`-th CU runs at `factor`× speed.
+    pub fn with_throttled(mut self, stride: usize, factor: f64) -> Self {
+        assert!(stride > 0 && factor > 0.0);
+        for (i, s) in self.cu_speed.iter_mut().enumerate() {
+            if i % stride == 0 {
+                *s = factor;
+            }
+        }
+        self
+    }
+
+    pub fn peak_flops(&self) -> f64 {
+        self.flops_per_cu * self.cu_speed.iter().sum::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets() {
+        let d = Device::preset(DeviceKind::Mi200);
+        assert_eq!(d.num_cus, 120);
+        assert!((d.peak_flops() - 45.0e12).abs() / 45.0e12 < 1e-12);
+    }
+
+    #[test]
+    fn with_cus_truncates() {
+        let d = Device::preset(DeviceKind::Mi200).with_cus(30);
+        assert_eq!(d.num_cus, 30);
+        assert_eq!(d.cu_speed.len(), 30);
+        assert!((d.peak_flops() - 45.0e12 / 4.0).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn with_cus_rejects_oversubscription() {
+        let _ = Device::preset(DeviceKind::Mi200).with_cus(121);
+    }
+
+    #[test]
+    fn throttling_pattern() {
+        let d = Device::uniform("t", 8, 1.0, 1.0, 0.0).with_throttled(4, 0.5);
+        assert_eq!(d.cu_speed, vec![0.5, 1.0, 1.0, 1.0, 0.5, 1.0, 1.0, 1.0]);
+    }
+}

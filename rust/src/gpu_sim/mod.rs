@@ -1,0 +1,20 @@
+//! GPU occupancy/timing simulator — the hardware substitute.
+//!
+//! The report's experiments ran on an AMD MI200 (120 CUs). We have no
+//! MI200; the decomposition phenomena the paper studies (quantization
+//! cliffs, padding overhead, CU sweeps, Block2Time balancing) are
+//! *schedule* properties, so a two-resource roofline simulator over the
+//! per-CU work lists reproduces their shape faithfully (DESIGN.md §2).
+//!
+//! Model: a kernel launch completes at
+//! `max(slowest-CU compute time, total HBM traffic / bandwidth) + launch
+//! overhead`; per-CU busy time gives the utilization bars of Figure 1.
+//! CUs can be heterogeneous (per-CU speed factors) to exercise the
+//! Block2Time predictive balancer.
+
+pub mod device;
+pub mod gemm;
+pub mod xfer;
+
+pub use device::{Device, DeviceKind};
+pub use gemm::{simulate, LaunchStats, SimResult};

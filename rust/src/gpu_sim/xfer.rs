@@ -1,0 +1,108 @@
+//! Host↔device transfer model — the report's hipMemcpy future-work item.
+//!
+//! `time(bytes) = base_latency + bytes / bw`, with pinned-memory and
+//! chunked-overlap variants. The MEMCPY bench sweeps sizes and prints the
+//! latency/bandwidth curve plus the overlap crossover; the real-PJRT
+//! counterpart is measured in the same bench for comparison.
+
+/// Transfer link presets (seconds, bytes/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Link {
+    pub base_latency: f64,
+    pub bandwidth: f64,
+}
+
+/// PCIe 4.0 x16 pageable-memory host→device (the hipMemcpy default).
+pub const PCIE4_PAGEABLE: Link =
+    Link { base_latency: 10.0e-6, bandwidth: 12.0e9 };
+/// PCIe 4.0 x16 with pinned host memory.
+pub const PCIE4_PINNED: Link =
+    Link { base_latency: 8.0e-6, bandwidth: 24.0e9 };
+
+impl Link {
+    pub fn time(&self, bytes: usize) -> f64 {
+        self.base_latency + bytes as f64 / self.bandwidth
+    }
+
+    /// Effective bandwidth at a given size (the classic latency-limited
+    /// small-transfer curve).
+    pub fn effective_bw(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.time(bytes)
+    }
+
+    /// Chunked transfer overlapped with compute of `compute_s`:
+    /// pipeline fill + max(stream, compute) per chunk.
+    pub fn overlapped_time(
+        &self,
+        bytes: usize,
+        chunks: usize,
+        compute_s: f64,
+    ) -> f64 {
+        let chunks = chunks.max(1);
+        let chunk_bytes = bytes.div_ceil(chunks);
+        let chunk_xfer = self.time(chunk_bytes);
+        let chunk_compute = compute_s / chunks as f64;
+        chunk_xfer + (chunks - 1) as f64 * chunk_xfer.max(chunk_compute)
+            + chunk_compute
+    }
+}
+
+/// GEMM operand bytes that must cross the link once per problem.
+pub fn gemm_h2d_bytes(m: usize, n: usize, k: usize, bpe: usize) -> usize {
+    (m * k + k * n) * bpe
+}
+
+pub fn gemm_d2h_bytes(m: usize, n: usize, bpe: usize) -> usize {
+    m * n * bpe
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_dominates_small_transfers() {
+        let t_small = PCIE4_PAGEABLE.time(64);
+        assert!((t_small - PCIE4_PAGEABLE.base_latency).abs() < 1e-6);
+        assert!(PCIE4_PAGEABLE.effective_bw(64) < 0.01 * PCIE4_PAGEABLE.bandwidth);
+    }
+
+    #[test]
+    fn bandwidth_dominates_large_transfers() {
+        let bytes = 1 << 30;
+        let eff = PCIE4_PAGEABLE.effective_bw(bytes);
+        assert!(eff > 0.99 * PCIE4_PAGEABLE.bandwidth);
+    }
+
+    #[test]
+    fn pinned_beats_pageable() {
+        for bytes in [1usize << 10, 1 << 20, 1 << 28] {
+            assert!(PCIE4_PINNED.time(bytes) < PCIE4_PAGEABLE.time(bytes));
+        }
+    }
+
+    #[test]
+    fn overlap_hides_transfer_behind_compute() {
+        let bytes = 1 << 26; // 64 MiB, ~5.6 ms on pageable
+        let compute = 0.02; // 20 ms of compute
+        let serial = PCIE4_PAGEABLE.time(bytes) + compute;
+        let overlapped = PCIE4_PAGEABLE.overlapped_time(bytes, 8, compute);
+        assert!(overlapped < serial);
+        // Can't beat compute alone + one chunk of fill.
+        assert!(overlapped > compute);
+    }
+
+    #[test]
+    fn too_many_chunks_pay_latency() {
+        let bytes = 1 << 16; // small transfer
+        let few = PCIE4_PAGEABLE.overlapped_time(bytes, 2, 0.0);
+        let many = PCIE4_PAGEABLE.overlapped_time(bytes, 64, 0.0);
+        assert!(many > few); // 64 latencies vs 2
+    }
+
+    #[test]
+    fn gemm_traffic() {
+        assert_eq!(gemm_h2d_bytes(2, 3, 4, 4), (8 + 12) * 4);
+        assert_eq!(gemm_d2h_bytes(2, 3, 4), 24);
+    }
+}

@@ -1,0 +1,202 @@
+//! Minimal JSON support (serde substitute — see DESIGN.md §2).
+//!
+//! Parses and writes the subset of JSON the project uses everywhere:
+//! the artifact manifest, partition-parity golden files, configs, and
+//! metric dumps. Numbers are kept as `f64` with an `i64` fast path,
+//! objects preserve insertion order (stable round-trips for golden
+//! files), and parse errors carry line/column context.
+
+mod parse;
+mod write;
+
+pub use parse::parse;
+pub use write::to_string_pretty;
+
+use std::fmt;
+
+/// A JSON document node.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    /// All JSON numbers; integers round-trip exactly up to 2^53.
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    /// Insertion-ordered object (duplicate keys: last wins on lookup).
+    Obj(Vec<(String, Value)>),
+}
+
+/// Error produced by [`parse`] or by the typed accessors.
+#[derive(Debug, thiserror::Error)]
+pub enum JsonError {
+    #[error("json parse error at line {line}, col {col}: {msg}")]
+    Parse { line: usize, col: usize, msg: String },
+    #[error("json: {0}")]
+    Access(String),
+}
+
+impl Value {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        match self {
+            Value::Obj(fields) => {
+                fields.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v)
+            }
+            _ => None,
+        }
+    }
+
+    /// Typed lookup that reports *which* key was missing/mistyped.
+    pub fn expect(&self, key: &str) -> Result<&Value, JsonError> {
+        self.get(key)
+            .ok_or_else(|| JsonError::Access(format!("missing key {key:?}")))
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e15 => {
+                Some(*n as i64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// `obj.u("x")?`-style typed helpers used by manifest parsing.
+    pub fn u(&self, key: &str) -> Result<usize, JsonError> {
+        self.expect(key)?.as_usize().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not a usize"))
+        })
+    }
+
+    pub fn i(&self, key: &str) -> Result<i64, JsonError> {
+        self.expect(key)?.as_i64().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not an integer"))
+        })
+    }
+
+    pub fn f(&self, key: &str) -> Result<f64, JsonError> {
+        self.expect(key)?.as_f64().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not a number"))
+        })
+    }
+
+    pub fn s(&self, key: &str) -> Result<&str, JsonError> {
+        self.expect(key)?.as_str().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not a string"))
+        })
+    }
+
+    pub fn b(&self, key: &str) -> Result<bool, JsonError> {
+        self.expect(key)?.as_bool().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not a bool"))
+        })
+    }
+
+    pub fn arr(&self, key: &str) -> Result<&[Value], JsonError> {
+        self.expect(key)?.as_arr().ok_or_else(|| {
+            JsonError::Access(format!("key {key:?} is not an array"))
+        })
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&write::to_string(self))
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+
+/// Convenience constructor for ordered objects.
+pub fn obj(fields: Vec<(&str, Value)>) -> Value {
+    Value::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": 3, "b": "x", "c": [1, 2], "d": true}"#).unwrap();
+        assert_eq!(v.u("a").unwrap(), 3);
+        assert_eq!(v.s("b").unwrap(), "x");
+        assert_eq!(v.arr("c").unwrap().len(), 2);
+        assert!(v.b("d").unwrap());
+        assert!(v.u("missing").is_err());
+        assert!(v.u("b").is_err());
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let v = parse(r#"{"a": 1, "a": 2}"#).unwrap();
+        assert_eq!(v.u("a").unwrap(), 2);
+    }
+
+    #[test]
+    fn i64_boundaries() {
+        assert_eq!(Value::Num(-3.0).as_i64(), Some(-3));
+        assert_eq!(Value::Num(3.5).as_i64(), None);
+        assert_eq!(Value::Num(-3.0).as_usize(), None);
+    }
+}

@@ -1,0 +1,29 @@
+//! # streamk — Stream-K work-centric GEMM decomposition framework
+//!
+//! Reproduction of *"Stream-K Optimization and Exploration"* (2024), built on
+//! Osama et al.'s Stream-K (PPoPP 2023). Three layers:
+//!
+//! - **L1** (build-time Python): Pallas GEMM kernels — Stream-K, conventional
+//!   tile-based, and Split-K — lowered AOT to HLO text.
+//! - **L2** (build-time Python): JAX compute graphs (GEMM + epilogues, MLP)
+//!   that call the kernels.
+//! - **L3** (this crate): the runtime — partition math ([`decomp`]), a
+//!   GPU-occupancy simulator ([`gpu_sim`]), the Block2Time predictive load
+//!   balancer ([`predict`]), a PJRT artifact runtime ([`runtime`]), and the
+//!   serving coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: `make artifacts` lowers everything
+//! once; the rust binary is self-contained afterwards.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod decomp;
+pub mod exec;
+pub mod faults;
+pub mod gpu_sim;
+pub mod json;
+pub mod predict;
+pub mod prop;
+pub mod runtime;

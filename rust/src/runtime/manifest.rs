@@ -1,0 +1,234 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.
+
+use super::RuntimeError;
+use crate::json::{self, Value};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one input/output tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub experiment: String,
+    /// "gemm" | "mlp".
+    pub kind: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub flops: u64,
+    /// GEMM-only fields (0 / empty for other kinds).
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub algo: String,
+    pub pad: String,
+    pub dtype: String,
+    pub cus: usize,
+    pub epilogue: String,
+    /// MLP-only.
+    pub batch: usize,
+}
+
+/// The parsed manifest with name- and shape-indexed lookups.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+    by_name: HashMap<String, usize>,
+}
+
+fn tensor_list(v: &[Value]) -> Result<Vec<TensorMeta>, RuntimeError> {
+    v.iter()
+        .map(|t| {
+            let shape = t
+                .arr("shape")?
+                .iter()
+                .map(|d| {
+                    d.as_usize().ok_or_else(|| {
+                        crate::json::JsonError::Access(
+                            "shape dim not usize".into(),
+                        )
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(TensorMeta { shape, dtype: t.s("dtype")?.to_string() })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, RuntimeError> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|_| {
+            RuntimeError::MissingManifest(dir.display().to_string())
+        })?;
+        let root = json::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in root.arr("artifacts")? {
+            artifacts.push(ArtifactMeta {
+                name: a.s("name")?.to_string(),
+                file: a.s("file")?.to_string(),
+                experiment: a.s("experiment")?.to_string(),
+                kind: a.s("kind")?.to_string(),
+                inputs: tensor_list(a.arr("inputs")?)?,
+                outputs: tensor_list(a.arr("outputs")?)?,
+                flops: a.i("flops")? as u64,
+                m: a.get("m").and_then(Value::as_usize).unwrap_or(0),
+                n: a.get("n").and_then(Value::as_usize).unwrap_or(0),
+                k: a.get("k").and_then(Value::as_usize).unwrap_or(0),
+                algo: a
+                    .get("algo")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
+                pad: a
+                    .get("pad")
+                    .and_then(Value::as_str)
+                    .unwrap_or("none")
+                    .to_string(),
+                dtype: a
+                    .get("dtype")
+                    .and_then(Value::as_str)
+                    .unwrap_or("f32")
+                    .to_string(),
+                cus: a.get("cus").and_then(Value::as_usize).unwrap_or(0),
+                epilogue: a
+                    .get("epilogue")
+                    .and_then(Value::as_str)
+                    .unwrap_or("none")
+                    .to_string(),
+                batch: a.get("batch").and_then(Value::as_usize).unwrap_or(0),
+            });
+        }
+        let by_name = artifacts
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.name.clone(), i))
+            .collect();
+        Ok(Self { dir: dir.to_path_buf(), artifacts, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta, RuntimeError> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.artifacts[i])
+            .ok_or_else(|| RuntimeError::UnknownArtifact(name.to_string()))
+    }
+
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+
+    /// All artifacts of one experiment tag (DESIGN.md §5 index).
+    pub fn by_experiment(&self, exp: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.experiment == exp).collect()
+    }
+
+    /// Find a GEMM artifact by routing key. This is the coordinator's
+    /// shape→executable lookup.
+    pub fn find_gemm(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        algo: &str,
+        pad: &str,
+        dtype: &str,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.kind == "gemm"
+                && a.m == m
+                && a.n == n
+                && a.k == k
+                && a.algo == algo
+                && a.pad == pad
+                && a.dtype == dtype
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("streamk-manifest-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "artifacts": [
+        {"name": "gemm_streamk_nopad_f32_8x8x8", "file": "g.hlo.txt",
+         "experiment": "quickstart", "kind": "gemm", "flops": 1024,
+         "inputs": [{"shape": [8, 8], "dtype": "f32"},
+                     {"shape": [8, 8], "dtype": "f32"}],
+         "outputs": [{"shape": [8, 8], "dtype": "f32"}],
+         "m": 8, "n": 8, "k": 8, "algo": "streamk", "pad": "none",
+         "dtype": "f32", "cus": 4}
+      ]
+    }"#;
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = tmpdir("load");
+        write_manifest(&dir, SAMPLE);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("gemm_streamk_nopad_f32_8x8x8").unwrap();
+        assert_eq!(a.inputs[0].elements(), 64);
+        assert_eq!(a.cus, 4);
+        assert!(m.get("nope").is_err());
+        assert!(m.find_gemm(8, 8, 8, "streamk", "none", "f32").is_some());
+        assert!(m.find_gemm(8, 8, 9, "streamk", "none", "f32").is_none());
+        assert_eq!(m.by_experiment("quickstart").len(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_guides_to_make() {
+        let err = Manifest::load(Path::new("/definitely/not/here")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Integration: when `make artifacts` has run, the real manifest
+        // must parse and contain the experiment index entries.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.artifacts.len() >= 20);
+        for exp in ["quickstart", "table1", "cubug", "e2e"] {
+            assert!(!m.by_experiment(exp).is_empty(), "experiment {exp}");
+        }
+        // every referenced HLO file exists
+        for a in &m.artifacts {
+            assert!(m.hlo_path(a).exists(), "{}", a.file);
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! PJRT artifact runtime: loads `artifacts/manifest.json` + HLO text
+//! produced by `make artifacts`, compiles on the PJRT CPU client, caches
+//! executables, and runs them from the coordinator's hot path.
+//!
+//! Python is *never* involved here — the HLO text is the complete
+//! interchange (DESIGN.md §4, aot.py header for the why-text rationale).
+
+mod engine;
+mod manifest;
+mod thread;
+
+pub use engine::{Engine, ExecStats};
+pub use manifest::{ArtifactMeta, Manifest, TensorMeta};
+pub use thread::{spawn_engine, EngineHandle};
+
+/// Serializes PJRT client creation/teardown across test threads: two CPU
+/// clients constructed or destroyed concurrently in one process can
+/// segfault inside xla_extension 0.5.1. Tests that create an [`Engine`]
+/// hold this for their whole body.
+#[doc(hidden)]
+pub fn pjrt_test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    match LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+use thiserror::Error;
+
+#[derive(Debug, Error)]
+pub enum RuntimeError {
+    #[error("artifact dir {0}: run `make artifacts` first")]
+    MissingManifest(String),
+    #[error("manifest: {0}")]
+    Manifest(#[from] crate::json::JsonError),
+    #[error("io {path}: {source}")]
+    Io {
+        path: String,
+        #[source]
+        source: std::io::Error,
+    },
+    #[error("unknown artifact {0:?}")]
+    UnknownArtifact(String),
+    #[error("artifact {name}: expected {expected} inputs, got {got}")]
+    ArityMismatch { name: String, expected: usize, got: usize },
+    #[error("artifact {name} input {index}: expected {expected} elements, got {got}")]
+    ShapeMismatch {
+        name: String,
+        index: usize,
+        expected: usize,
+        got: usize,
+    },
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,169 @@
+//! Engine thread: the PJRT execution stream.
+//!
+//! The `xla` crate's client/executable types are `!Send` (Rc + raw
+//! pointers), and a CPU PJRT device is a single execution stream anyway —
+//! so all PJRT work runs on one dedicated thread that owns the [`Engine`],
+//! and the rest of the system talks to it through the cloneable,
+//! thread-safe [`EngineHandle`]. This mirrors a real deployment: one
+//! device stream, many coordinator threads feeding it.
+
+use super::{Engine, ExecStats, Manifest, RuntimeError};
+use crate::exec::{bounded, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+type ExecResult = Result<(Vec<Vec<f32>>, ExecStats), RuntimeError>;
+
+enum Msg {
+    Run {
+        name: String,
+        inputs: Vec<Arc<Vec<f32>>>,
+        reply: Sender<ExecResult>,
+    },
+    Warmup {
+        names: Vec<String>,
+        reply: Sender<Result<f64, RuntimeError>>,
+    },
+}
+
+/// Cloneable, `Send` handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: Sender<Msg>,
+    manifest: Manifest,
+}
+
+/// Spawn the engine thread over an artifact directory.
+pub fn spawn_engine(
+    manifest: Manifest,
+) -> Result<(EngineHandle, JoinHandle<()>), RuntimeError> {
+    let (tx, rx) = bounded::<Msg>(64);
+    let manifest_clone = manifest.clone();
+    // The Engine (and its PJRT client) is created *on* the engine thread;
+    // failures surface through a handshake channel.
+    let (ready_tx, ready_rx) = bounded::<Result<(), String>>(1);
+    let join = std::thread::Builder::new()
+        .name("streamk-engine".into())
+        .spawn(move || {
+            let engine = match Engine::new(manifest_clone) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e.to_string()));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Run { name, inputs, reply } => {
+                        let refs: Vec<&[f32]> =
+                            inputs.iter().map(|v| v.as_slice()).collect();
+                        let _ = reply.send(engine.run_f32(&name, &refs));
+                    }
+                    Msg::Warmup { names, reply } => {
+                        let refs: Vec<&str> =
+                            names.iter().map(String::as_str).collect();
+                        let _ = reply.send(engine.warmup(&refs));
+                    }
+                }
+            }
+        })
+        .expect("spawn engine thread");
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok((EngineHandle { tx, manifest }, join)),
+        Ok(Err(e)) => Err(RuntimeError::Xla(e)),
+        Err(_) => Err(RuntimeError::Xla("engine thread died at startup".into())),
+    }
+}
+
+impl EngineHandle {
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact; blocks until the engine thread replies.
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: Vec<Arc<Vec<f32>>>,
+    ) -> ExecResult {
+        let (reply, waiter) = bounded(1);
+        self.tx
+            .send(Msg::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?;
+        waiter
+            .recv()
+            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?
+    }
+
+    /// Convenience for plain slices (copies into Arc buffers).
+    pub fn run_slices(
+        &self,
+        name: &str,
+        inputs: &[&[f32]],
+    ) -> ExecResult {
+        self.run_f32(
+            name,
+            inputs.iter().map(|s| Arc::new(s.to_vec())).collect(),
+        )
+    }
+
+    /// Pre-compile artifacts on the engine thread.
+    pub fn warmup(&self, names: &[&str]) -> Result<f64, RuntimeError> {
+        let (reply, waiter) = bounded(1);
+        self.tx
+            .send(Msg::Warmup {
+                names: names.iter().map(|s| s.to_string()).collect(),
+                reply,
+            })
+            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?;
+        waiter
+            .recv()
+            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn handle_is_send_and_concurrent() {
+        let _guard = crate::runtime::pjrt_test_lock();
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // run `make artifacts` for the full test
+        }
+        let manifest = Manifest::load(&dir).unwrap();
+        let (handle, join) = spawn_engine(manifest).unwrap();
+        handle
+            .warmup(&["gemm_streamk_nopad_f32_128x128x128_cu8"])
+            .unwrap();
+        let mut threads = Vec::new();
+        for t in 0..3 {
+            let h = handle.clone();
+            threads.push(std::thread::spawn(move || {
+                let a = Arc::new(vec![1.0f32; 128 * 128]);
+                let b = Arc::new(vec![t as f32; 128 * 128]);
+                let (outs, _) = h
+                    .run_f32(
+                        "gemm_streamk_nopad_f32_128x128x128_cu8",
+                        vec![a, b],
+                    )
+                    .unwrap();
+                // C = ones @ (t * ones): every element is 128 * t.
+                assert!(outs[0]
+                    .iter()
+                    .all(|&v| (v - 128.0 * t as f32).abs() < 1e-3));
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        drop(handle);
+        join.join().unwrap();
+    }
+}

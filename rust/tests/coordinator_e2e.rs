@@ -1,0 +1,170 @@
+//! End-to-end integration: engine thread + coordinator + real PJRT
+//! artifacts. Checks numerics against the pure-rust naive GEMM, batching
+//! behaviour, load shedding, and metrics accounting.
+//!
+//! Skipped (with a message) until `make artifacts` has produced the
+//! artifact directory.
+
+use std::path::Path;
+
+use streamk::config::Settings;
+use streamk::coordinator::Coordinator;
+use streamk::faults::{error_rate, naive_gemm, Matrix};
+use streamk::prop::Rng;
+use streamk::runtime::{pjrt_test_lock, spawn_engine, Manifest};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipped: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&dir).unwrap())
+}
+
+#[test]
+fn gemm_requests_roundtrip_with_correct_numerics() {
+    let _guard = pjrt_test_lock();
+    let Some(manifest) = manifest() else { return };
+    let (engine, _join) = spawn_engine(manifest).unwrap();
+    let settings = Settings { workers: 2, ..Settings::default() };
+    let coord = Coordinator::start(engine, &settings);
+
+    let mut rng = Rng::new(2024);
+    let (m, n, k) = (128, 128, 128);
+    let mut waiters = Vec::new();
+    let mut expected = Vec::new();
+    for _ in 0..6 {
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        expected.push(naive_gemm(&a, &b));
+        waiters.push(coord.handle.submit_gemm(
+            m,
+            n,
+            k,
+            a.data.clone(),
+            b.data.clone(),
+        ));
+    }
+    for (w, want) in waiters.into_iter().zip(&expected) {
+        let resp = w.recv().expect("response");
+        let got = resp.result.expect("gemm ok");
+        let rep = error_rate(&got, &want.data, 1e-2);
+        assert!(rep.passed(), "artifact {}: {rep:?}", resp.artifact);
+        assert_eq!(resp.artifact, "gemm_streamk_nopad_f32_128x128x128_cu8");
+    }
+
+    let snap = coord.handle.metrics().snapshot();
+    assert_eq!(snap.completed, 6);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.throughput_rps > 0.0);
+    coord.shutdown();
+}
+
+#[test]
+fn unroutable_shape_fails_gracefully() {
+    let _guard = pjrt_test_lock();
+    let Some(manifest) = manifest() else { return };
+    let (engine, _join) = spawn_engine(manifest).unwrap();
+    let coord = Coordinator::start(engine, &Settings::default());
+    let w = coord.handle.submit_gemm(7, 7, 7, vec![0.0; 49], vec![0.0; 49]);
+    let resp = w.recv().unwrap();
+    let err = resp.result.unwrap_err();
+    assert!(err.contains("make artifacts"), "{err}");
+    let snap = coord.handle.metrics().snapshot();
+    assert_eq!(snap.failed, 1);
+    coord.shutdown();
+}
+
+#[test]
+fn mlp_requests_batch_and_match_direct_execution() {
+    let _guard = pjrt_test_lock();
+    let Some(manifest) = manifest() else { return };
+    let (engine, _join) = spawn_engine(manifest).unwrap();
+    engine
+        .warmup(&[
+            "mlp_streamk_f32_b8_256x512x256",
+            "mlp_streamk_f32_b32_256x512x256",
+        ])
+        .unwrap();
+    let settings = Settings {
+        workers: 2,
+        max_batch: 16,
+        batch_window_us: 3000,
+        ..Settings::default()
+    };
+    let coord = Coordinator::start(engine.clone(), &settings);
+
+    let mut rng = Rng::new(7);
+    let reqs: Vec<(usize, Vec<f32>)> = (0..8)
+        .map(|i| {
+            let rows = 1 + (i % 3);
+            (rows, rng.normal_f32_vec(rows * 256))
+        })
+        .collect();
+    let waiters: Vec<_> = reqs
+        .iter()
+        .map(|(rows, x)| coord.handle.submit_mlp(*rows, x.clone()))
+        .collect();
+
+    // Direct single-request execution through the same artifact as oracle.
+    let params = streamk::coordinator::mlp_params();
+    for ((rows, x), w) in reqs.iter().zip(waiters) {
+        let resp = w.recv().unwrap();
+        let got = resp.result.expect("mlp ok");
+        assert_eq!(got.len(), rows * 256);
+        assert!(resp.batched_as >= *rows);
+
+        let mut padded = vec![0.0f32; 8 * 256];
+        padded[..x.len()].copy_from_slice(x);
+        let (outs, _) = engine
+            .run_slices(
+                "mlp_streamk_f32_b8_256x512x256",
+                &[&padded, &params.w1, &params.b1, &params.w2, &params.b2],
+            )
+            .unwrap();
+        let rep = error_rate(&got, &outs[0][..rows * 256], 1e-2);
+        assert!(rep.passed(), "{rep:?}");
+    }
+    let snap = coord.handle.metrics().snapshot();
+    assert_eq!(snap.completed, 8);
+    assert!(snap.batches >= 1);
+    // the window should have folded at least two requests somewhere
+    assert!(snap.mean_batch_rows > 1.0, "{}", snap.mean_batch_rows);
+    coord.shutdown();
+}
+
+#[test]
+fn try_submit_sheds_load_when_saturated() {
+    let _guard = pjrt_test_lock();
+    let Some(manifest) = manifest() else { return };
+    let (engine, _join) = spawn_engine(manifest).unwrap();
+    let settings = Settings {
+        workers: 1,
+        queue_cap: 2,
+        ..Settings::default()
+    };
+    let coord = Coordinator::start(engine, &settings);
+    let mut shed = 0;
+    let mut accepted = Vec::new();
+    for _ in 0..50 {
+        match coord.handle.try_submit_gemm(
+            128,
+            128,
+            128,
+            vec![1.0; 128 * 128],
+            vec![1.0; 128 * 128],
+        ) {
+            Some(w) => accepted.push(w),
+            None => shed += 1,
+        }
+    }
+    for w in accepted {
+        let resp = w.recv().unwrap();
+        assert!(resp.result.is_ok());
+    }
+    let snap = coord.handle.metrics().snapshot();
+    assert_eq!(snap.shed as usize, shed);
+    assert_eq!(snap.completed + snap.shed, 50);
+    coord.shutdown();
+}

@@ -1,0 +1,110 @@
+//! Three-way semantic cross-check of the Stream-K implementation:
+//!
+//!   1. the Pallas kernel, AOT-lowered and executed through PJRT
+//!      (what production serves);
+//!   2. the pure-rust schedule executor (`faults::exec`), driven by the
+//!      rust schedule;
+//!   3. naive triple-loop GEMM (ground truth).
+//!
+//! If (1) and (2) both match (3) on the same problems, the Python and
+//! Rust halves of the system agree on Stream-K's semantics end to end.
+
+use std::path::Path;
+
+use streamk::decomp::{build_schedule, BlockShape, GemmShape};
+use streamk::faults::{error_rate, execute_schedule, naive_gemm, Matrix};
+use streamk::prop::Rng;
+use streamk::runtime::{pjrt_test_lock, Engine, Manifest};
+
+fn engine() -> Option<Engine> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipped: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::new(Manifest::load(&dir).unwrap()).unwrap())
+}
+
+#[test]
+fn all_three_implementations_agree() {
+    let _guard = pjrt_test_lock();
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(77);
+
+    // Every streamk artifact with a CU count is a distinct schedule
+    // regime; check them all (table1 shapes + the cubug sweep set).
+    let names: Vec<String> = engine
+        .manifest()
+        .artifacts
+        .iter()
+        .filter(|a| {
+            a.algo == "streamk"
+                && a.dtype == "f32"
+                && a.kind == "gemm"
+                && a.epilogue == "none"
+                && a.flops < 400_000_000 // keep debug-profile CPU time sane
+        })
+        .map(|a| a.name.clone())
+        .collect();
+    assert!(names.len() >= 6, "expected several streamk artifacts");
+
+    for name in names {
+        let meta = engine.manifest().get(&name).unwrap().clone();
+        let (m, n, k) = (meta.m, meta.n, meta.k);
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+
+        let want = naive_gemm(&a, &b);
+
+        // (1) PJRT artifact
+        let (outs, _) = engine.run_f32(&name, &[&a.data, &b.data]).unwrap();
+        let rep = error_rate(&outs[0], &want.data, 1e-2);
+        assert!(rep.passed(), "{name} PJRT: {rep:?}");
+
+        // (2) rust schedule executor on the same schedule parameters
+        let sched = build_schedule(
+            GemmShape::new(m, n, k),
+            BlockShape::new(128, 128, 64),
+            meta.cus,
+        )
+        .unwrap();
+        let got = execute_schedule(&a, &b, &sched);
+        let rep = error_rate(&got.data, &want.data, 1e-2);
+        assert!(rep.passed(), "{name} rust executor: {rep:?}");
+    }
+}
+
+#[test]
+fn bf16_artifact_matches_its_ref_within_precision() {
+    let _guard = pjrt_test_lock();
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(3);
+    let a = rng.normal_f32_vec(256 * 256);
+    let b = rng.normal_f32_vec(256 * 256);
+    let (sk, _) = engine
+        .run_f32("gemm_streamk_nopad_bf16_256x256x256", &[&a, &b])
+        .unwrap();
+    let (rf, _) = engine
+        .run_f32("gemm_ref_nopad_bf16_256x256x256", &[&a, &b])
+        .unwrap();
+    // both sides quantize to bf16; agree to bf16 tolerance
+    let rep = error_rate(&sk[0], &rf[0], 3e-2);
+    assert!(rep.passed(), "{rep:?}");
+}
+
+#[test]
+fn fused_gelu_epilogue_matches_ref() {
+    let _guard = pjrt_test_lock();
+    let Some(engine) = engine() else { return };
+    let mut rng = Rng::new(4);
+    let a = rng.normal_f32_vec(256 * 256);
+    let b = rng.normal_f32_vec(256 * 256);
+    let (sk, _) = engine
+        .run_f32("gemm_streamk_nopad_f32_256x256x256_gelu", &[&a, &b])
+        .unwrap();
+    let (rf, _) = engine
+        .run_f32("gemm_ref_nopad_f32_256x256x256_gelu", &[&a, &b])
+        .unwrap();
+    let rep = error_rate(&sk[0], &rf[0], 1e-3);
+    assert!(rep.passed(), "{rep:?}");
+}

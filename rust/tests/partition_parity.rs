@@ -1,0 +1,121 @@
+//! Cross-language parity: the rust Stream-K schedule must be
+//! bit-identical to the python one (`python/compile/partition.py`) over
+//! the golden cases in `testdata/partition_cases.json`.
+//!
+//! The Pallas kernels bake the *python* schedule into the HLO artifacts
+//! while the simulator/coordinator reason with the *rust* schedule — any
+//! divergence here means the two halves of the system disagree about who
+//! computes what.
+
+use std::path::Path;
+
+use streamk::decomp::{build_schedule, BlockShape, GemmShape};
+use streamk::json::{self, Value};
+
+fn golden() -> Option<Vec<Value>> {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("testdata/partition_cases.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    match json::parse(&text).expect("golden file parses") {
+        Value::Arr(cases) => Some(cases),
+        _ => panic!("golden root must be an array"),
+    }
+}
+
+#[test]
+fn schedules_match_python_bit_for_bit() {
+    let Some(cases) = golden() else {
+        eprintln!("skipped: run `make artifacts` to generate the golden file");
+        return;
+    };
+    assert!(cases.len() >= 10, "expected the full parity case set");
+    for case in &cases {
+        let (m, n, k) = (
+            case.u("m").unwrap(),
+            case.u("n").unwrap(),
+            case.u("k").unwrap(),
+        );
+        let block = BlockShape::new(
+            case.u("bm").unwrap(),
+            case.u("bn").unwrap(),
+            case.u("bk").unwrap(),
+        );
+        let p = case.u("p").unwrap();
+        let ctx = format!("{m}x{n}x{k} block {block:?} p={p}");
+        let s = build_schedule(GemmShape::new(m, n, k), block, p)
+            .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+
+        assert_eq!(s.grid.tiles_m, case.u("tiles_m").unwrap(), "{ctx}");
+        assert_eq!(s.grid.tiles_n, case.u("tiles_n").unwrap(), "{ctx}");
+        assert_eq!(s.grid.num_tiles(), case.u("num_tiles").unwrap(), "{ctx}");
+        assert_eq!(
+            s.grid.iters_per_tile,
+            case.u("iters_per_tile").unwrap(),
+            "{ctx}"
+        );
+        assert_eq!(s.grid.total_iters(), case.u("total_iters").unwrap(), "{ctx}");
+        assert_eq!(s.dp_tiles, case.u("dp_tiles").unwrap(), "{ctx}");
+        assert_eq!(s.sk_tiles, case.u("sk_tiles").unwrap(), "{ctx}");
+        assert_eq!(
+            s.dp_tiles_per_cu,
+            case.u("dp_tiles_per_cu").unwrap(),
+            "{ctx}"
+        );
+        assert_eq!(s.max_segments, case.u("max_segments").unwrap(), "{ctx}");
+        assert_eq!(
+            s.max_contributors,
+            case.u("max_contributors").unwrap(),
+            "{ctx}"
+        );
+
+        let starts = case.arr("cu_sk_start").unwrap();
+        let ends = case.arr("cu_sk_end").unwrap();
+        assert_eq!(starts.len(), s.p, "{ctx}");
+        for cu in 0..s.p {
+            assert_eq!(
+                s.cu_sk_start[cu],
+                starts[cu].as_usize().unwrap(),
+                "{ctx} cu={cu}"
+            );
+            assert_eq!(
+                s.cu_sk_end[cu],
+                ends[cu].as_usize().unwrap(),
+                "{ctx} cu={cu}"
+            );
+        }
+
+        let segs = case.arr("segments").unwrap();
+        for cu in 0..s.p {
+            let py_segs = segs[cu].as_arr().unwrap();
+            assert_eq!(py_segs.len(), s.segments[cu].len(), "{ctx} cu={cu}");
+            for (g, pg) in s.segments[cu].iter().zip(py_segs) {
+                assert_eq!(g.tile, pg.u("tile").unwrap(), "{ctx} cu={cu}");
+                assert_eq!(g.k_start, pg.u("k_start").unwrap(), "{ctx}");
+                assert_eq!(g.k_len, pg.u("k_len").unwrap(), "{ctx}");
+                assert_eq!(g.direct, pg.b("direct").unwrap(), "{ctx}");
+                // python encodes direct slots as -1; rust keeps 0
+                if !g.direct {
+                    assert_eq!(
+                        g.slot as i64,
+                        pg.i("slot").unwrap(),
+                        "{ctx} cu={cu}"
+                    );
+                }
+            }
+        }
+
+        let splits = case.arr("split_tiles").unwrap();
+        assert_eq!(splits.len(), s.split_tiles.len(), "{ctx}");
+        for (st, ps) in s.split_tiles.iter().zip(splits) {
+            assert_eq!(st.tile, ps.u("tile").unwrap(), "{ctx}");
+            let pcs = ps.arr("contributors").unwrap();
+            assert_eq!(pcs.len(), st.contributors.len(), "{ctx}");
+            for (c, pc) in st.contributors.iter().zip(pcs) {
+                assert_eq!(c.cu, pc.u("cu").unwrap(), "{ctx}");
+                assert_eq!(c.slot, pc.u("slot").unwrap(), "{ctx}");
+                assert_eq!(c.k_start, pc.u("k_start").unwrap(), "{ctx}");
+                assert_eq!(c.k_len, pc.u("k_len").unwrap(), "{ctx}");
+            }
+        }
+    }
+}
