@@ -14,11 +14,24 @@
 //! Run: `cargo bench --bench blocksize_sweep`
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use streamk::bench::Table;
-use streamk::decomp::params::{check, exploration_grid, Illegal, KernelParams};
+use streamk::decomp::params::{check, exploration_grid, KernelParams};
 use streamk::decomp::{build_schedule, BlockShape, GemmShape};
+use streamk::exec::Stopwatch;
 use streamk::gpu_sim::{gemm, Device, DeviceKind};
+
+/// Wall budget for the whole section-3 sweep — the paper's sweep "got
+/// stuck" on pathological parameter points; ours checks the clock
+/// *before* each point, so one slow point can overshoot by at most its
+/// own runtime and everything after it is skipped with a diagnostic
+/// instead of hanging the sweep. Completed measurements are always
+/// kept (a slow host must not change which configs get ranked).
+const SWEEP_BUDGET: Duration = Duration::from_secs(60);
+/// A single point slower than this gets called out by name — the
+/// diagnostic the paper's runs never produced.
+const SLOW_POINT: Duration = Duration::from_secs(5);
 
 fn main() {
     println!("== 1. legality over the exploration grid ==\n");
@@ -30,24 +43,7 @@ fn main() {
             Ok(()) => legal.push(*p),
             Err(errs) => {
                 for e in errs {
-                    let key = match e {
-                        Illegal::ZeroDim => "zero block dimension",
-                        Illegal::VmemOverflow { .. } => "VMEM overflow",
-                        Illegal::LaneMisaligned { .. } => {
-                            "minor dim not lane-aligned (128)"
-                        }
-                        Illegal::SublaneMisaligned { .. } => {
-                            "second-minor dim not sublane-aligned (8)"
-                        }
-                        Illegal::KpackMisaligned { .. } => "kpack misaligned",
-                        Illegal::MxuUnderfilled { .. } => {
-                            "MXU utilization below 25% floor"
-                        }
-                        Illegal::MxuTileMismatch { .. } => {
-                            "block smaller than MXU tile (CK 16x16-per-XDL FP-error mode)"
-                        }
-                    };
-                    *reasons.entry(key.to_string()).or_default() += 1;
+                    *reasons.entry(e.label().to_string()).or_default() += 1;
                 }
             }
         }
@@ -85,15 +81,47 @@ fn main() {
     println!("\n== 3. simulated perf of every legal point (Table-1 baseline) ==\n");
     let dev = Device::preset(DeviceKind::Mi200);
     let shape = GemmShape::new(3840, 4096, 4096);
-    let mut rows: Vec<(f64, KernelParams, f64, f64)> = legal
-        .iter()
-        .map(|p| {
-            let sched =
-                build_schedule(shape, p.block, dev.num_cus).unwrap();
-            let r = gemm::simulate_streamk(&dev, &sched, p.bytes_per_elem);
-            (r.total_s, *p, r.tflops, r.utilization)
-        })
-        .collect();
+    let sweep_sw = Stopwatch::start();
+    let mut skipped = 0usize;
+    let mut rows: Vec<(f64, KernelParams, f64, f64)> = Vec::new();
+    for p in &legal {
+        // Budget guard *before* each point: once the sweep budget is
+        // spent, remaining points print a diagnostic and are skipped —
+        // the paper's "process getting stuck" symptom, made impossible.
+        if sweep_sw.elapsed() > SWEEP_BUDGET {
+            skipped += 1;
+            continue;
+        }
+        let point_sw = Stopwatch::start();
+        let sched = build_schedule(shape, p.block, dev.num_cus).unwrap();
+        let r = gemm::simulate_streamk(&dev, &sched, p.bytes_per_elem);
+        if point_sw.elapsed() > SLOW_POINT {
+            eprintln!(
+                "  [slow] point {}x{}x{} dbuf={} took {:.2}s (> {:?}) — \
+                 result kept, but this point is pathological",
+                p.block.bm,
+                p.block.bn,
+                p.block.bk,
+                p.double_buffer,
+                point_sw.elapsed_secs(),
+                SLOW_POINT,
+            );
+        }
+        rows.push((r.total_s, *p, r.tflops, r.utilization));
+    }
+    if skipped > 0 {
+        println!(
+            "({skipped} of {} legal points skipped: sweep exceeded its \
+             {SWEEP_BUDGET:?} budget after {:.2}s — diagnostic instead of \
+             a hang)\n",
+            legal.len(),
+            sweep_sw.elapsed_secs()
+        );
+    }
+    assert!(
+        !rows.is_empty(),
+        "the sweep budget expired before the first point — raise SWEEP_BUDGET"
+    );
     rows.sort_by(|a, b| a.0.total_cmp(&b.0));
     let mut t = Table::new(&[
         "block", "dbuf", "VMEM KiB", "MXU util", "sim ms", "sim TFLOP/s",

@@ -127,6 +127,25 @@ fn main() {
         snap.completed, snap.shed
     );
     assert_eq!(snap.shed as usize, shed);
+
+    println!("\n== 3. tuner cache effectiveness (GEMM path) ==\n");
+    let total = snap.tuner_hits + snap.tuner_misses;
+    println!(
+        "tuner consults {total}: {} hits / {} misses ({:.1}% hit rate) | \
+         background tunes {} (mean {:.1} ms, p95 {:.1} ms)",
+        snap.tuner_hits,
+        snap.tuner_misses,
+        if total > 0 {
+            snap.tuner_hits as f64 / total as f64 * 100.0
+        } else {
+            0.0
+        },
+        snap.tunes,
+        snap.tune.mean_us() / 1e3,
+        snap.tune.quantile_us(0.95) / 1e3,
+    );
+    // every accepted GEMM consulted the cache exactly once
+    assert_eq!(total, snap.completed + snap.failed);
     coord.shutdown();
     println!("\ne2e_serve OK");
 }

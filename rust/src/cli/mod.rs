@@ -38,32 +38,54 @@ pub struct Args {
     pub positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
-    #[error("unknown option --{0} (try --help)")]
     Unknown(String),
-    #[error("option --{0} requires a value")]
     MissingValue(String),
-    #[error("invalid value {value:?} for --{name}: {msg}")]
     Invalid { name: String, value: String, msg: String },
-    #[error("help requested")]
     Help,
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => {
+                write!(f, "unknown option --{name} (try --help)")
+            }
+            CliError::MissingValue(name) => {
+                write!(f, "option --{name} requires a value")
+            }
+            CliError::Invalid { name, value, msg } => {
+                write!(f, "invalid value {value:?} for --{name}: {msg}")
+            }
+            CliError::Help => write!(f, "help requested"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Command definition: name + options; renders its own usage text.
 pub struct Command {
     pub name: &'static str,
     pub about: &'static str,
     pub opts: Vec<Opt>,
+    pub examples: Vec<&'static str>,
 }
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {
-        Self { name, about, opts: Vec::new() }
+        Self { name, about, opts: Vec::new(), examples: Vec::new() }
     }
 
     pub fn opt(mut self, o: Opt) -> Self {
         self.opts.push(o);
+        self
+    }
+
+    /// Add a quickstart line rendered under `examples:` in `--help`.
+    pub fn example(mut self, line: &'static str) -> Self {
+        self.examples.push(line);
         self
     }
 
@@ -78,6 +100,12 @@ impl Command {
                 .map(|d| format!(" [default: {d}]"))
                 .unwrap_or_default();
             let _ = writeln!(s, "  {arg:<26} {}{def}", o.help);
+        }
+        if !self.examples.is_empty() {
+            let _ = writeln!(s, "\nexamples:");
+            for ex in &self.examples {
+                let _ = writeln!(s, "  {ex}");
+            }
         }
         s
     }
@@ -261,5 +289,18 @@ mod tests {
         let u = cmd().usage();
         assert!(u.contains("--n"));
         assert!(u.contains("--verbose"));
+        assert!(!u.contains("examples:"));
+    }
+
+    #[test]
+    fn usage_renders_examples_section() {
+        let u = Command::new("t", "test")
+            .opt(Opt::value("n", Some("4"), "count"))
+            .example("t --n 9")
+            .example("t --n 9 --out x.json")
+            .usage();
+        assert!(u.contains("examples:"));
+        assert!(u.contains("  t --n 9\n"));
+        assert!(u.contains("  t --n 9 --out x.json\n"));
     }
 }

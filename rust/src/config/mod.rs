@@ -25,6 +25,14 @@ pub struct Settings {
     pub pad_policy: String,
     /// Default algorithm for artifact routing.
     pub algo: String,
+    /// Persistent tuner-cache file (None = in-memory only).
+    pub tuner_cache: Option<PathBuf>,
+    /// Tune shape buckets in the background when the cache misses.
+    pub tune_on_miss: bool,
+    /// Wall-clock budget for one tune run (the anti-"stuck" guard).
+    pub tune_budget_ms: u64,
+    /// Candidates promoted from predicted ranking to measurement.
+    pub tune_top_k: usize,
 }
 
 impl Default for Settings {
@@ -38,26 +46,45 @@ impl Default for Settings {
             batch_window_us: 200,
             pad_policy: "none".into(),
             algo: "streamk".into(),
+            tuner_cache: None,
+            tune_on_miss: true,
+            tune_budget_ms: 250,
+            tune_top_k: 8,
         }
     }
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("cannot read config {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
-    #[error("config {path}: {source}")]
-    Json {
-        path: String,
-        #[source]
-        source: json::JsonError,
-    },
-    #[error("config key {key:?}: {msg}")]
+    Io { path: String, source: std::io::Error },
+    Json { path: String, source: json::JsonError },
     Bad { key: String, msg: String },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io { path, source } => {
+                write!(f, "cannot read config {path}: {source}")
+            }
+            ConfigError::Json { path, source } => {
+                write!(f, "config {path}: {source}")
+            }
+            ConfigError::Bad { key, msg } => {
+                write!(f, "config key {key:?}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io { source, .. } => Some(source),
+            ConfigError::Json { source, .. } => Some(source),
+            ConfigError::Bad { .. } => None,
+        }
+    }
 }
 
 impl Settings {
@@ -119,6 +146,27 @@ impl Settings {
                 self.algo =
                     val.as_str().ok_or_else(|| bad("want string"))?.to_string()
             }
+            "tuner_cache" => {
+                self.tuner_cache = Some(PathBuf::from(
+                    val.as_str().ok_or_else(|| bad("want string"))?,
+                ))
+            }
+            "tune_on_miss" => {
+                self.tune_on_miss =
+                    val.as_bool().ok_or_else(|| bad("want bool"))?
+            }
+            "tune_budget_ms" => {
+                // as_usize (not as_i64) so a negative value is rejected
+                // instead of wrapping to a near-infinite budget.
+                self.tune_budget_ms = val
+                    .as_usize()
+                    .ok_or_else(|| bad("want non-negative integer"))?
+                    as u64
+            }
+            "tune_top_k" => {
+                self.tune_top_k =
+                    val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
             other => {
                 return Err(ConfigError::Bad {
                     key: other.into(),
@@ -165,6 +213,19 @@ impl Settings {
         if let Some(v) = args.get("algo") {
             self.algo = v.to_string();
         }
+        if let Some(v) = args.get("tuner-cache") {
+            self.tuner_cache = Some(PathBuf::from(v));
+        }
+        if args.flag("no-tune-on-miss") {
+            self.tune_on_miss = false;
+        }
+        if let Some(v) = args.get("tune-budget-ms") {
+            self.tune_budget_ms =
+                v.parse().map_err(|_| as_bad("tune-budget-ms", v))?;
+        }
+        if let Some(v) = parse_usize("tune-top-k")? {
+            self.tune_top_k = v;
+        }
         self.validate()?;
         Ok(self)
     }
@@ -187,6 +248,12 @@ impl Settings {
         }
         if !matches!(self.algo.as_str(), "streamk" | "tile" | "splitk" | "ref") {
             return bad("algo", "must be streamk|tile|splitk|ref");
+        }
+        if self.tune_budget_ms == 0 {
+            return bad("tune_budget_ms", "must be positive");
+        }
+        if self.tune_top_k == 0 {
+            return bad("tune_top_k", "must be positive");
         }
         Ok(())
     }
@@ -239,5 +306,50 @@ mod tests {
         let mut s = Settings::default();
         s.pad_policy = "maybe".into();
         assert!(s.validate().is_err());
+        let mut s = Settings::default();
+        s.tune_budget_ms = 0;
+        assert!(s.validate().is_err());
+        let mut s = Settings::default();
+        s.tune_top_k = 0;
+        assert!(s.validate().is_err());
+        // a negative JSON budget must be rejected, not wrap via `as u64`
+        let mut s = Settings::default();
+        let v = json::parse(r#"{"tune_budget_ms": -1}"#).unwrap();
+        assert!(s.apply_json(&v).is_err());
+        assert_eq!(s.tune_budget_ms, Settings::default().tune_budget_ms);
+    }
+
+    #[test]
+    fn tuner_keys_layer_like_the_rest() {
+        let mut s = Settings::default();
+        assert!(s.tune_on_miss);
+        let v = json::parse(
+            r#"{"tuner_cache": "/tmp/tc.json", "tune_on_miss": false,
+                "tune_budget_ms": 500, "tune_top_k": 4}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.tuner_cache, Some(PathBuf::from("/tmp/tc.json")));
+        assert!(!s.tune_on_miss);
+        assert_eq!(s.tune_budget_ms, 500);
+        assert_eq!(s.tune_top_k, 4);
+
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("tune-budget-ms", None, ""))
+            .opt(Opt::flag("no-tune-on-miss", ""))
+            .opt(Opt::value("tuner-cache", None, ""));
+        let args = cmd
+            .parse(&[
+                "--tune-budget-ms".into(),
+                "900".into(),
+                "--no-tune-on-miss".into(),
+                "--tuner-cache".into(),
+                "c.json".into(),
+            ])
+            .unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.tune_budget_ms, 900);
+        assert!(!s.tune_on_miss);
+        assert_eq!(s.tuner_cache, Some(PathBuf::from("c.json")));
     }
 }

@@ -89,9 +89,12 @@ struct Inner {
     shed: u64,
     batches: u64,
     batched_rows: u64,
+    tuner_hits: u64,
+    tuner_misses: u64,
     queue: Histogram,
     execute: Histogram,
     e2e: Histogram,
+    tune: Histogram,
     flops: f64,
     started: Option<std::time::Instant>,
 }
@@ -105,9 +108,15 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub batches: u64,
     pub mean_batch_rows: f64,
+    /// Tuner-cache effectiveness on the GEMM request path.
+    pub tuner_hits: u64,
+    pub tuner_misses: u64,
+    /// Completed background tunes (count + duration distribution).
+    pub tunes: u64,
     pub queue: Histogram,
     pub execute: Histogram,
     pub e2e: Histogram,
+    pub tune: Histogram,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
     pub tflops: f64,
@@ -147,6 +156,19 @@ impl Metrics {
         m.batched_rows += rows as u64;
     }
 
+    pub fn on_tuner_hit(&self) {
+        self.inner.lock().expect("metrics").tuner_hits += 1;
+    }
+
+    pub fn on_tuner_miss(&self) {
+        self.inner.lock().expect("metrics").tuner_misses += 1;
+    }
+
+    /// A background tune finished in `secs`.
+    pub fn on_tune(&self, secs: f64) {
+        self.inner.lock().expect("metrics").tune.record_secs(secs);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics");
         let elapsed_s = m
@@ -164,9 +186,13 @@ impl Metrics {
             } else {
                 m.batched_rows as f64 / m.batches as f64
             },
+            tuner_hits: m.tuner_hits,
+            tuner_misses: m.tuner_misses,
+            tunes: m.tune.count(),
             queue: m.queue.clone(),
             execute: m.execute.clone(),
             e2e: m.e2e.clone(),
+            tune: m.tune.clone(),
             elapsed_s,
             throughput_rps: if elapsed_s > 0.0 {
                 m.completed as f64 / elapsed_s
@@ -191,12 +217,16 @@ impl MetricsSnapshot {
             ("shed", (self.shed as usize).into()),
             ("batches", (self.batches as usize).into()),
             ("mean_batch_rows", self.mean_batch_rows.into()),
+            ("tuner_hits", (self.tuner_hits as usize).into()),
+            ("tuner_misses", (self.tuner_misses as usize).into()),
+            ("tunes", (self.tunes as usize).into()),
             ("elapsed_s", self.elapsed_s.into()),
             ("throughput_rps", self.throughput_rps.into()),
             ("tflops", self.tflops.into()),
             ("queue", self.queue.to_json()),
             ("execute", self.execute.to_json()),
             ("e2e", self.e2e.to_json()),
+            ("tune", self.tune.to_json()),
         ])
     }
 }
@@ -250,5 +280,25 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.u("completed").unwrap(), 8);
         assert!(j.get("e2e").unwrap().get("p95_us").is_some());
+    }
+
+    #[test]
+    fn tuner_counters() {
+        let m = Metrics::new();
+        m.on_tuner_hit();
+        m.on_tuner_hit();
+        m.on_tuner_miss();
+        m.on_tune(0.05);
+        let s = m.snapshot();
+        assert_eq!(s.tuner_hits, 2);
+        assert_eq!(s.tuner_misses, 1);
+        assert_eq!(s.tunes, 1);
+        assert_eq!(s.tune.count(), 1);
+        assert!(s.tune.mean_us() > 0.0);
+        let j = s.to_json();
+        assert_eq!(j.u("tuner_hits").unwrap(), 2);
+        assert_eq!(j.u("tuner_misses").unwrap(), 1);
+        assert_eq!(j.u("tunes").unwrap(), 1);
+        assert!(j.get("tune").unwrap().get("p95_us").is_some());
     }
 }

@@ -4,11 +4,17 @@
 //! LLM decoding:
 //!
 //! ```text
-//! client → [bounded queue] → router (shape→artifact) → dynamic batcher
-//!        → worker pool → PJRT engine → reply channels → metrics
+//! client → [bounded queue] → router (shape→artifact, tuner-cache
+//!        consult) → dynamic batcher → worker pool → PJRT engine
+//!        → reply channels → metrics
+//!                                  ↘ tuner miss → background tune
 //! ```
 //!
 //! Python never appears here: the engine executes AOT artifacts only.
+//! The per-shape tuner ([`crate::tuner`]) sits beside the router: a
+//! cache hit steers the routing policy, a miss falls back to defaults
+//! and schedules a background tune so the next request in that shape
+//! bucket is served tuned.
 
 mod batcher;
 mod metrics;

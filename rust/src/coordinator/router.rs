@@ -8,12 +8,8 @@
 
 use crate::runtime::Manifest;
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RouteError {
-    #[error(
-        "no artifact for gemm {m}x{n}x{k} algo={algo} pad={pad} dtype={dtype}; \
-         add the shape to python/compile/aot.py and re-run `make artifacts`"
-    )]
     NoArtifact {
         m: usize,
         n: usize,
@@ -22,9 +18,27 @@ pub enum RouteError {
         pad: String,
         dtype: String,
     },
-    #[error("no MLP artifact with batch >= {rows} (largest is {largest})")]
     BatchTooLarge { rows: usize, largest: usize },
 }
+
+impl std::fmt::Display for RouteError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RouteError::NoArtifact { m, n, k, algo, pad, dtype } => write!(
+                f,
+                "no artifact for gemm {m}x{n}x{k} algo={algo} pad={pad} \
+                 dtype={dtype}; add the shape to python/compile/aot.py and \
+                 re-run `make artifacts`"
+            ),
+            RouteError::BatchTooLarge { rows, largest } => write!(
+                f,
+                "no MLP artifact with batch >= {rows} (largest is {largest})"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RouteError {}
 
 /// The routing policy: preferred algorithm + padding, with fallbacks.
 #[derive(Debug, Clone)]
@@ -50,9 +64,26 @@ impl Router {
         n: usize,
         k: usize,
     ) -> Result<String, RouteError> {
-        let other_pad = if self.pad == "none" { "physical" } else { "none" };
+        self.route_gemm_with(manifest, m, n, k, None)
+    }
+
+    /// Like [`Router::route_gemm`], but a tuner-cache hit can override
+    /// the preferred padding policy: the tuned pad is tried first, then
+    /// the normal fallback chain. A tuned preference never *removes*
+    /// fallbacks — a cache entry for a shape whose tuned artifact was
+    /// never compiled still routes somewhere correct.
+    pub fn route_gemm_with(
+        &self,
+        manifest: &Manifest,
+        m: usize,
+        n: usize,
+        k: usize,
+        pad_override: Option<&str>,
+    ) -> Result<String, RouteError> {
+        let preferred = pad_override.unwrap_or(self.pad.as_str());
+        let other_pad = if preferred == "none" { "physical" } else { "none" };
         for (algo, pad) in [
-            (self.algo.as_str(), self.pad.as_str()),
+            (self.algo.as_str(), preferred),
             (self.algo.as_str(), other_pad),
             ("ref", "none"),
         ] {
@@ -129,6 +160,21 @@ mod tests {
         // a shape with no artifact at all errors with guidance
         let err = r.route_gemm(&m, 7, 7, 7).unwrap_err();
         assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn tuned_pad_override_flips_preference() {
+        let Some(m) = manifest() else { return };
+        let r = Router::new("streamk", "none", "f32");
+        // tuner said "physical" for this bucket → the padded artifact wins
+        let name = r
+            .route_gemm_with(&m, 960, 1024, 1024, Some("physical"))
+            .unwrap();
+        assert_eq!(name, "gemm_streamk_pad_f32_960x1024x1024");
+        // override matching the default changes nothing
+        let name =
+            r.route_gemm_with(&m, 960, 1024, 1024, Some("none")).unwrap();
+        assert_eq!(name, "gemm_streamk_nopad_f32_960x1024x1024");
     }
 
     #[test]

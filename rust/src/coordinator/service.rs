@@ -7,12 +7,22 @@ use super::request::{
 };
 use super::router::Router;
 use crate::config::Settings;
+use crate::decomp::GemmShape;
 use crate::exec::{bounded, CancelToken, Receiver, Sender, Stopwatch};
+use crate::gpu_sim::{Device, DeviceKind};
 use crate::runtime::EngineHandle;
+use crate::tuner::{Budget, DeviceFingerprint, TuneOptions, Tuner};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// In-memory LRU entries the serving tuner cache holds.
+const TUNER_CACHE_CAPACITY: usize = 256;
+/// Pending background tune requests beyond which misses are dropped
+/// (tuning is best-effort; the request path never waits on it).
+const TUNE_QUEUE_CAP: usize = 32;
 
 enum Work {
     Gemm(GemmRequest, Instant),
@@ -38,6 +48,13 @@ pub struct Coordinator {
     cancel: CancelToken,
     workers: Vec<JoinHandle<()>>,
     worker_count: usize,
+    tuner: Arc<Tuner>,
+    tune_tx: Option<Sender<GemmShape>>,
+    /// Tells the tuner thread to fast-drain (skip queued tunes) at
+    /// shutdown — background tuning is speculative and must never
+    /// extend process exit by queue-depth × budget.
+    tune_stop: CancelToken,
+    tuner_cache_path: Option<PathBuf>,
 }
 
 impl Coordinator {
@@ -49,6 +66,43 @@ impl Coordinator {
         let metrics = Arc::new(Metrics::new());
         let cancel = CancelToken::new();
         let router = Router::new(&settings.algo, &settings.pad_policy, "f32");
+
+        // Per-shape tuner: the router consults its cache on every GEMM;
+        // misses fall back to defaults and (when enabled) enqueue a
+        // background tune so the *next* request in that bucket hits.
+        let dev = Device::preset(DeviceKind::Mi200)
+            .with_cus(settings.cus.min(120));
+        let opts = TuneOptions {
+            top_k: settings.tune_top_k,
+            budget: Budget::from_millis(settings.tune_budget_ms),
+            bytes_per_elem: 4,
+        };
+        let tuner = Arc::new(Tuner::new(dev, opts, TUNER_CACHE_CAPACITY));
+        if let Some(path) = &settings.tuner_cache {
+            match tuner.load_cache(path) {
+                Ok(n) if n > 0 => {
+                    let usable = tuner.matching_entries();
+                    if usable == 0 {
+                        eprintln!(
+                            "tuner: WARNING: {} holds {n} entries but none \
+                             match this device fingerprint ({}) — cache was \
+                             tuned for a different device/cus; serving will \
+                             re-tune from scratch",
+                            path.display(),
+                            DeviceFingerprint::of(tuner.device()).as_str(),
+                        );
+                    } else {
+                        eprintln!(
+                            "tuner: warmed {usable}/{n} entries from {}",
+                            path.display()
+                        );
+                    }
+                }
+                Ok(_) => {}
+                Err(e) => eprintln!("tuner: starting cold ({e})"),
+            }
+        }
+        let (tune_tx, tune_rx) = bounded::<GemmShape>(TUNE_QUEUE_CAP);
 
         // MLP requests are funneled to a single batching thread so
         // concurrent small requests coalesce; GEMM work fans out across
@@ -72,6 +126,23 @@ impl Coordinator {
                     .expect("spawn batcher"),
             );
         }
+        // Background tune-on-miss worker: drains the miss queue, tunes
+        // each bucket once, and inserts into the shared cache. Exits
+        // when every sender (the workers + the coordinator) is gone.
+        let tune_stop = CancelToken::new();
+        if settings.tune_on_miss {
+            let tuner = tuner.clone();
+            let metrics = metrics.clone();
+            let stop = tune_stop.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name("streamk-tuner".into())
+                    .spawn(move || tune_loop(tuner, metrics, tune_rx, stop))
+                    .expect("spawn tuner"),
+            );
+        } else {
+            drop(tune_rx); // workers' try_send sheds harmlessly
+        }
         for i in 0..settings.workers {
             let rx = rx.clone();
             let engine = engine.clone();
@@ -79,11 +150,16 @@ impl Coordinator {
             let router = router.clone();
             let mlp_tx = mlp_tx.clone();
             let cancel = cancel.clone();
+            let tuner = tuner.clone();
+            let tune_tx = tune_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("streamk-coord-{i}"))
                     .spawn(move || {
-                        worker_loop(engine, metrics, router, rx, mlp_tx, cancel)
+                        worker_loop(
+                            engine, metrics, router, rx, mlp_tx, cancel,
+                            tuner, tune_tx,
+                        )
                     })
                     .expect("spawn worker"),
             );
@@ -99,7 +175,16 @@ impl Coordinator {
             cancel,
             workers,
             worker_count: settings.workers,
+            tuner,
+            tune_tx: Some(tune_tx),
+            tune_stop,
+            tuner_cache_path: settings.tuner_cache.clone(),
         }
+    }
+
+    /// The shared tuner (observability / tests).
+    pub fn tuner(&self) -> &Arc<Tuner> {
+        &self.tuner
     }
 
     /// Graceful shutdown: drain queued work, then join all threads.
@@ -111,8 +196,19 @@ impl Coordinator {
             let _ = self.handle.tx.send(Work::Shutdown);
         }
         drop(self.handle);
+        // Queued tunes are speculative: tell the tuner thread to
+        // fast-drain instead of spending queue-depth × budget on shapes
+        // no request will ever use, then release the coordinator's tune
+        // sender so its channel disconnects once the workers exit.
+        self.tune_stop.cancel();
+        drop(self.tune_tx.take());
         for w in self.workers.drain(..) {
             w.join().expect("coordinator worker panicked");
+        }
+        if let Some(path) = &self.tuner_cache_path {
+            if let Err(e) = self.tuner.store_cache(path) {
+                eprintln!("tuner: cache not persisted: {e}");
+            }
         }
     }
 
@@ -186,6 +282,7 @@ impl CoordinatorHandle {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     engine: EngineHandle,
     metrics: Arc<Metrics>,
@@ -193,6 +290,8 @@ fn worker_loop(
     rx: Receiver<Work>,
     mlp_tx: Sender<MlpRequest>,
     cancel: CancelToken,
+    tuner: Arc<Tuner>,
+    tune_tx: Sender<GemmShape>,
 ) {
     while let Ok(work) = rx.recv() {
         if cancel.is_cancelled() {
@@ -201,7 +300,10 @@ fn worker_loop(
         match work {
             Work::Gemm(req, enqueued) => {
                 let queue_s = enqueued.elapsed().as_secs_f64();
-                handle_gemm(&engine, &metrics, &router, req, queue_s);
+                handle_gemm(
+                    &engine, &metrics, &router, &tuner, &tune_tx, req,
+                    queue_s,
+                );
             }
             Work::Mlp(req, _enqueued) => {
                 // Forward to the batching thread; it owns timing.
@@ -218,11 +320,32 @@ fn handle_gemm(
     engine: &EngineHandle,
     metrics: &Metrics,
     router: &Router,
+    tuner: &Arc<Tuner>,
+    tune_tx: &Sender<GemmShape>,
     req: GemmRequest,
     queue_s: f64,
 ) {
     let GemmRequest { id, m, n, k, a, b, reply } = req;
-    let routed = router.route_gemm(engine.manifest(), m, n, k);
+    // Consult the tuning cache for this shape's bucket. A hit steers
+    // routing (tuned pad policy first); a miss enqueues a background
+    // tune without ever blocking the request.
+    let shape = GemmShape::new(m, n, k);
+    let tuned = if shape.is_degenerate() { None } else { tuner.lookup(shape) };
+    let pad_override = match &tuned {
+        Some(cfg) => {
+            metrics.on_tuner_hit();
+            Some(cfg.pad.as_str())
+        }
+        None => {
+            metrics.on_tuner_miss();
+            if !shape.is_degenerate() {
+                let _ = tune_tx.try_send(shape); // best-effort; shed on full
+            }
+            None
+        }
+    };
+    let routed =
+        router.route_gemm_with(engine.manifest(), m, n, k, pad_override);
     match routed {
         Ok(artifact) => {
             let sw = Stopwatch::start();
@@ -260,6 +383,148 @@ fn handle_gemm(
                 execute_s: 0.0,
             });
         }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::faults::{error_rate, naive_gemm, Matrix};
+    use crate::prop::Rng;
+    use crate::runtime::{spawn_engine, Manifest};
+    use std::path::PathBuf;
+
+    /// Minimal manifest the interpreter backend can serve — no HLO files
+    /// needed, so the coordinator+tuner path is testable without
+    /// `make artifacts`.
+    fn test_manifest(tag: &str) -> (Manifest, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "streamk-service-test-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 2,
+              "artifacts": [
+                {"name": "gemm_streamk_nopad_f32_64x64x64",
+                 "file": "unused.hlo.txt", "experiment": "test",
+                 "kind": "gemm", "flops": 524288,
+                 "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                             {"shape": [64, 64], "dtype": "f32"}],
+                 "outputs": [{"shape": [64, 64], "dtype": "f32"}],
+                 "m": 64, "n": 64, "k": 64, "algo": "streamk",
+                 "pad": "none", "dtype": "f32", "cus": 8}
+              ]
+            }"#,
+        )
+        .unwrap();
+        (Manifest::load(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn gemm_path_consults_tuner_and_tunes_in_background() {
+        let (manifest, dir) = test_manifest("tuner");
+        let (engine, _join) = spawn_engine(manifest).unwrap();
+        let cache_path = dir.join("tuner_cache.json");
+        let settings = Settings {
+            workers: 2,
+            tuner_cache: Some(cache_path.clone()),
+            ..Settings::default()
+        };
+        let coord = Coordinator::start(engine, &settings);
+
+        let mut rng = Rng::new(99);
+        let a = Matrix::random(64, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let want = naive_gemm(&a, &b);
+        let w = coord.handle.submit_gemm(
+            64,
+            64,
+            64,
+            a.data.clone(),
+            b.data.clone(),
+        );
+        let resp = w.recv().unwrap();
+        let got = resp.result.expect("gemm ok");
+        assert!(error_rate(&got, &want.data, 1e-3).passed());
+        assert_eq!(resp.artifact, "gemm_streamk_nopad_f32_64x64x64");
+
+        // first request missed the cold cache
+        let snap = coord.handle.metrics().snapshot();
+        assert_eq!(snap.tuner_misses, 1);
+        assert_eq!(snap.tuner_hits, 0);
+
+        // the background worker tunes the bucket; wait for it
+        let sw = Stopwatch::start();
+        while coord.tuner().is_empty() && sw.elapsed_secs() < 30.0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!coord.tuner().is_empty(), "background tune never landed");
+
+        // the next request in the same bucket hits
+        let w = coord.handle.submit_gemm(
+            64,
+            64,
+            64,
+            a.data.clone(),
+            b.data.clone(),
+        );
+        assert!(w.recv().unwrap().result.is_ok());
+        let snap = coord.handle.metrics().snapshot();
+        assert_eq!(snap.tuner_hits, 1);
+        assert!(snap.tunes >= 1);
+        assert!(snap.tune.mean_us() > 0.0);
+
+        // shutdown persists the cache...
+        coord.shutdown();
+        assert!(cache_path.exists(), "cache must persist on shutdown");
+
+        // ...and a fresh coordinator warms from it: first request hits.
+        let (manifest, _) = test_manifest("tuner");
+        let (engine, _join) = spawn_engine(manifest).unwrap();
+        let coord = Coordinator::start(engine, &settings);
+        let w = coord.handle.submit_gemm(
+            64,
+            64,
+            64,
+            a.data.clone(),
+            b.data.clone(),
+        );
+        assert!(w.recv().unwrap().result.is_ok());
+        let snap = coord.handle.metrics().snapshot();
+        assert_eq!(snap.tuner_hits, 1);
+        assert_eq!(snap.tuner_misses, 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn tune_on_miss_disabled_still_serves() {
+        let (manifest, dir) = test_manifest("no-tune");
+        let (engine, _join) = spawn_engine(manifest).unwrap();
+        let settings = Settings {
+            workers: 1,
+            tune_on_miss: false,
+            ..Settings::default()
+        };
+        let coord = Coordinator::start(engine, &settings);
+        let w = coord.handle.submit_gemm(
+            64,
+            64,
+            64,
+            vec![1.0; 64 * 64],
+            vec![1.0; 64 * 64],
+        );
+        let resp = w.recv().unwrap();
+        let out = resp.result.unwrap();
+        assert!(out.iter().all(|&v| (v - 64.0).abs() < 1e-3));
+        let snap = coord.handle.metrics().snapshot();
+        assert_eq!(snap.tuner_misses, 1);
+        assert_eq!(snap.tunes, 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
 
@@ -309,6 +574,31 @@ static MLP_PARAMS: std::sync::OnceLock<MlpParams> = std::sync::OnceLock::new();
 /// The MLP parameter set served by every coordinator in this process.
 pub fn mlp_params() -> &'static MlpParams {
     MLP_PARAMS.get_or_init(|| MlpParams::deterministic(256, 512, 256))
+}
+
+/// Background tune-on-miss worker: one tune per bucket, re-checked
+/// against the cache so a burst of misses for one bucket tunes once.
+/// On `stop` it keeps draining the channel but skips the tuning work,
+/// so shutdown latency is bounded by at most one in-flight tune.
+fn tune_loop(
+    tuner: Arc<Tuner>,
+    metrics: Arc<Metrics>,
+    rx: Receiver<GemmShape>,
+    stop: CancelToken,
+) {
+    while let Ok(shape) = rx.recv() {
+        if stop.is_cancelled() {
+            continue; // fast-drain: shutting down
+        }
+        if tuner.lookup(shape).is_some() {
+            continue; // raced: an earlier queued miss already tuned this
+        }
+        let sw = Stopwatch::start();
+        match tuner.tune_and_insert(shape) {
+            Ok(_) => metrics.on_tune(sw.elapsed_secs()),
+            Err(e) => eprintln!("tuner: {shape:?}: {e}"),
+        }
+    }
 }
 
 fn mlp_batch_loop(

@@ -84,6 +84,30 @@ pub enum Illegal {
     MxuTileMismatch { bm: usize, bn: usize, mxu_m: usize, mxu_n: usize },
 }
 
+impl Illegal {
+    /// Short stable label for aggregation (legality matrices, tuner
+    /// pruning stats). The `Display` impl carries the specifics.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Illegal::ZeroDim => "zero block dimension",
+            Illegal::VmemOverflow { .. } => "VMEM overflow",
+            Illegal::LaneMisaligned { .. } => {
+                "minor dim not lane-aligned (128)"
+            }
+            Illegal::SublaneMisaligned { .. } => {
+                "second-minor dim not sublane-aligned (8)"
+            }
+            Illegal::KpackMisaligned { .. } => "kpack misaligned",
+            Illegal::MxuUnderfilled { .. } => {
+                "MXU utilization below 25% floor"
+            }
+            Illegal::MxuTileMismatch { .. } => {
+                "block smaller than MXU tile (CK 16x16-per-XDL FP-error mode)"
+            }
+        }
+    }
+}
+
 impl std::fmt::Display for Illegal {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -158,13 +182,21 @@ pub fn check(p: &KernelParams) -> Result<(), Vec<Illegal>> {
 
 /// Enumerate the default exploration grid (the BLK bench's axes).
 pub fn exploration_grid() -> Vec<KernelParams> {
+    exploration_grid_bpe(4)
+}
+
+/// The same grid at an arbitrary element width (bf16 doubles the VMEM
+/// headroom, so its legal set is larger) — the tuner's block axes.
+pub fn exploration_grid_bpe(bytes_per_elem: usize) -> Vec<KernelParams> {
     let mut out = Vec::new();
     for &bm in &[16usize, 32, 64, 128, 256, 512] {
         for &bn in &[16usize, 32, 64, 128, 256, 512] {
             for &bk in &[8usize, 16, 32, 64, 128] {
                 for &db in &[false, true] {
-                    let mut p =
-                        KernelParams::new(BlockShape::new(bm, bn, bk), 4);
+                    let mut p = KernelParams::new(
+                        BlockShape::new(bm, bn, bk),
+                        bytes_per_elem,
+                    );
                     p.double_buffer = db;
                     out.push(p);
                 }

@@ -67,11 +67,22 @@ pub struct StreamKSchedule {
     pub max_contributors: usize,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ScheduleError {
-    #[error("degenerate problem {0:?}")]
     Degenerate(String),
 }
+
+impl std::fmt::Display for ScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ScheduleError::Degenerate(what) => {
+                write!(f, "degenerate problem {what:?}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ScheduleError {}
 
 /// Construct the hybrid Stream-K schedule. Pure and total for all
 /// non-degenerate inputs; must stay in lock-step with

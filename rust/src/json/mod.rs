@@ -28,13 +28,24 @@ pub enum Value {
 }
 
 /// Error produced by [`parse`] or by the typed accessors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum JsonError {
-    #[error("json parse error at line {line}, col {col}: {msg}")]
     Parse { line: usize, col: usize, msg: String },
-    #[error("json: {0}")]
     Access(String),
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { line, col, msg } => {
+                write!(f, "json parse error at line {line}, col {col}: {msg}")
+            }
+            JsonError::Access(msg) => write!(f, "json: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Value {
     pub fn get(&self, key: &str) -> Option<&Value> {

@@ -9,8 +9,9 @@
 //!   that call the kernels.
 //! - **L3** (this crate): the runtime — partition math ([`decomp`]), a
 //!   GPU-occupancy simulator ([`gpu_sim`]), the Block2Time predictive load
-//!   balancer ([`predict`]), a PJRT artifact runtime ([`runtime`]), and the
-//!   serving coordinator ([`coordinator`]).
+//!   balancer ([`predict`]), a legality-pruned autotuner with a persistent
+//!   per-shape config cache ([`tuner`]), a PJRT artifact runtime
+//!   ([`runtime`]), and the serving coordinator ([`coordinator`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers everything
 //! once; the rust binary is self-contained afterwards.
@@ -27,3 +28,4 @@ pub mod json;
 pub mod predict;
 pub mod prop;
 pub mod runtime;
+pub mod tuner;

@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   serve      run the serving coordinator on a synthetic request stream
+//!   tune       warm the per-shape tuning cache offline
 //!   sim        simulate a GEMM decomposition on the modeled GPU
 //!   sweep      CU-count utilization sweep (Figure-1 style, text plot)
 //!   route      show the router's artifact decision for a shape
@@ -20,6 +21,7 @@ use streamk::decomp::{
 };
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::runtime::{spawn_engine, Manifest};
+use streamk::tuner::{Budget, TuneOptions, Tuner, TABLE1_SUITE};
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -30,6 +32,7 @@ fn main() {
     let sub = argv.remove(0);
     let code = match sub.as_str() {
         "serve" => cmd_serve(&argv),
+        "tune" => cmd_tune(&argv),
         "sim" => cmd_sim(&argv),
         "sweep" => cmd_sweep(&argv),
         "route" => cmd_route(&argv),
@@ -50,7 +53,12 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|sim|sweep|route|intensity|info> [options]\n\
+     usage: streamk <serve|tune|sim|sweep|route|intensity|info> [options]\n\
+     \n\
+     tune quickstart:\n\
+       streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
+       streamk tune --m 1920 --n 2000 --k 2000           # one shape, print only\n\
+       streamk serve --tuner-cache tuner_cache.json      # serve with warm cache\n\
      \n\
      run a subcommand with --help for its options"
         .to_string()
@@ -84,7 +92,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::value("max-batch", Some("16"), "dynamic batcher limit"))
         .opt(Opt::value("algo", Some("streamk"), "routing algorithm"))
         .opt(Opt::value("pad", Some("none"), "padding policy"))
-        .opt(Opt::value("metrics-out", None, "write metrics JSON here"));
+        .opt(Opt::value("metrics-out", None, "write metrics JSON here"))
+        .opt(Opt::value("tuner-cache", None, "persistent tuner cache file"))
+        .opt(Opt::flag("no-tune-on-miss", "disable background tuning"))
+        .opt(Opt::value("tune-budget-ms", None, "per-tune wall budget"))
+        .opt(Opt::value("tune-top-k", None, "measured candidates per tune"))
+        .example("streamk serve --requests 256 --max-batch 32")
+        .example("streamk serve --tuner-cache tuner_cache.json");
     let args = parse_or_exit(&cmd, argv);
     let settings = match Settings::default().apply_cli(&args) {
         Ok(s) => s,
@@ -148,6 +162,112 @@ fn cmd_serve(argv: &[String]) -> i32 {
     }
     coord.shutdown();
     if ok == requests {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_tune(argv: &[String]) -> i32 {
+    let cmd = shape_opts(Command::new(
+        "streamk tune",
+        "search the legal kernel-parameter space for shapes and warm the \
+         per-shape tuning cache",
+    ))
+    .opt(Opt::flag("suite", "tune the paper's Table-1 shape suite"))
+    .opt(Opt::value("cus", Some("120"), "compute units"))
+    .opt(Opt::value("budget-ms", Some("250"), "wall budget per tune"))
+    .opt(Opt::value("top-k", Some("8"), "measured candidates per tune"))
+    .opt(Opt::value("bytes", Some("4"), "bytes per element (4=f32, 2=bf16)"))
+    .opt(Opt::value("cache", None, "tuner cache file to warm (load+merge+store)"))
+    .example("streamk tune --suite --cache tuner_cache.json")
+    .example("streamk tune --m 1920 --n 2000 --k 2000 --budget-ms 500")
+    .example("streamk serve --tuner-cache tuner_cache.json   # then serve warm");
+    let args = parse_or_exit(&cmd, argv);
+    let cus = args.usize("cus").unwrap().clamp(1, 120);
+    let opts = TuneOptions {
+        top_k: args.usize("top-k").unwrap().max(1),
+        budget: Budget::from_millis(args.usize("budget-ms").unwrap() as u64),
+        bytes_per_elem: args.usize("bytes").unwrap(),
+    };
+    let dev = Device::preset(DeviceKind::Mi200).with_cus(cus);
+    let tuner = Tuner::new(dev, opts, 256);
+
+    let cache_path = args.get("cache").map(Path::new);
+    if let Some(path) = cache_path {
+        match tuner.load_cache(path) {
+            Ok(n) if n > 0 => println!("loaded {n} cached entries from {}", path.display()),
+            Ok(_) => {}
+            Err(e) => {
+                eprintln!("warning: {e}; starting from an empty cache");
+            }
+        }
+    }
+
+    let shapes: Vec<(usize, usize, usize)> = if args.flag("suite") {
+        TABLE1_SUITE.to_vec()
+    } else {
+        vec![(
+            args.usize("m").unwrap(),
+            args.usize("n").unwrap(),
+            args.usize("k").unwrap(),
+        )]
+    };
+
+    // `tuned at` is the shape the times were measured at: the pow2
+    // bucket representative, which the cache entry serves — not the
+    // requested shape itself.
+    let mut t = streamk::bench::Table::new(&[
+        "shape", "tuned at", "default ms", "tuned ms", "speedup", "block",
+        "dbuf", "pad", "cus", "legal/total", "measured", "tune ms",
+    ]);
+    let mut failures = 0;
+    for &(m, n, k) in &shapes {
+        match tuner.tune_and_insert(GemmShape::new(m, n, k)) {
+            Ok(r) => {
+                let blk = r.best.params.block;
+                t.row(&[
+                    format!("{m}x{n}x{k}"),
+                    format!("{}x{}x{}", r.shape.m, r.shape.n, r.shape.k),
+                    format!("{:.4}", r.default_s * 1e3),
+                    format!("{:.4}", r.best.measured_s * 1e3),
+                    format!("{:.3}x", r.speedup()),
+                    format!("{}x{}x{}", blk.bm, blk.bn, blk.bk),
+                    r.best.params.double_buffer.to_string(),
+                    r.best.pad.as_str().to_string(),
+                    r.best.cus.to_string(),
+                    format!("{}/{}", r.space.legal, r.space.total),
+                    format!(
+                        "{}{}",
+                        r.measured,
+                        if r.budget_exhausted { " (budget)" } else { "" }
+                    ),
+                    format!("{:.1}", r.elapsed_s * 1e3),
+                ]);
+            }
+            Err(e) => {
+                eprintln!("tune {m}x{n}x{k}: {e}");
+                failures += 1;
+            }
+        }
+    }
+    t.print();
+    println!(
+        "\n(legality pruning named every rejected point up front — the \
+         space the report probed by hand until it \"got stuck\"; each tune \
+         is budget-bounded and can never hang)"
+    );
+
+    if let Some(path) = cache_path {
+        match tuner.store_cache(path) {
+            Ok(()) => println!("cache written to {}", path.display()),
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
+            }
+        }
+    }
+    if failures == 0 {
         0
     } else {
         1

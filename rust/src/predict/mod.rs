@@ -32,19 +32,43 @@ impl CostModel {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FitError {
-    #[error("need at least two samples with distinct x, got {0}")]
     Underdetermined(usize),
-    #[error("fit produced non-finite coefficients")]
     NonFinite,
+    /// A sample contained a NaN/∞ observation (clock glitch, dead CU);
+    /// rejected up-front so the OLS sums never silently poison.
+    NonFiniteSample { index: usize },
 }
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::Underdetermined(n) => {
+                write!(f, "need at least two samples with distinct x, got {n}")
+            }
+            FitError::NonFinite => {
+                write!(f, "fit produced non-finite coefficients")
+            }
+            FitError::NonFiniteSample { index } => {
+                write!(f, "sample {index} is NaN or infinite")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
 
 /// Ordinary least squares on (iters, seconds) samples.
 pub fn fit(samples: &[(usize, f64)]) -> Result<CostModel, FitError> {
     let n = samples.len();
     if n < 2 {
         return Err(FitError::Underdetermined(n));
+    }
+    if let Some(index) =
+        samples.iter().position(|&(_, y)| !y.is_finite())
+    {
+        return Err(FitError::NonFiniteSample { index });
     }
     let xs: Vec<f64> = samples.iter().map(|&(x, _)| x as f64).collect();
     let ys: Vec<f64> = samples.iter().map(|&(_, y)| y).collect();
@@ -149,6 +173,34 @@ mod tests {
             fit(&[(5, 1.0), (5, 2.0)]),
             Err(FitError::Underdetermined(2))
         );
+    }
+
+    #[test]
+    fn fit_rejects_all_equal_x() {
+        // Vertical line: infinitely many slopes fit. Must not return a
+        // model (and must not divide by zero).
+        let samples: Vec<(usize, f64)> =
+            (0..10).map(|i| (100, 1.0 + i as f64)).collect();
+        assert_eq!(fit(&samples), Err(FitError::Underdetermined(10)));
+    }
+
+    #[test]
+    fn fit_rejects_non_finite_samples() {
+        assert_eq!(
+            fit(&[(10, 1.0), (20, f64::NAN), (30, 3.0)]),
+            Err(FitError::NonFiniteSample { index: 1 })
+        );
+        assert_eq!(
+            fit(&[(10, f64::INFINITY), (20, 2.0)]),
+            Err(FitError::NonFiniteSample { index: 0 })
+        );
+        assert_eq!(
+            fit(&[(10, 1.0), (20, f64::NEG_INFINITY)]),
+            Err(FitError::NonFiniteSample { index: 1 })
+        );
+        // error text is actionable
+        let e = fit(&[(1, f64::NAN), (2, 1.0)]).unwrap_err();
+        assert!(e.to_string().contains("sample 0"));
     }
 
     #[test]

@@ -1,8 +1,17 @@
-//! PJRT execution engine: compile cache + typed execute.
+//! Execution engine: compile cache + typed execute.
+//!
+//! Two interchangeable backends behind one API:
+//!
+//! - **PJRT** (`--features pjrt`): compiles the AOT HLO text on the XLA
+//!   CPU client — what production serves.
+//! - **Interpreter** (default): executes artifacts directly from their
+//!   manifest metadata (gemm → naive triple-loop + epilogue, mlp →
+//!   gelu two-layer) with identical numerics. Keeps the whole serving
+//!   stack — router, batcher, tuner, benches — runnable on a machine
+//!   without the xla_extension toolchain.
 
 use super::{ArtifactMeta, Manifest, RuntimeError};
 use crate::exec::Stopwatch;
-use std::collections::HashMap;
 use std::sync::Mutex;
 
 /// Timing of one execution.
@@ -23,21 +32,44 @@ impl ExecStats {
     }
 }
 
-/// The engine owns the PJRT client and a name-keyed executable cache.
-/// Compilation happens once per artifact (lazily or via [`warmup`]);
+/// The engine owns the backend and a name-keyed executable cache.
+/// Compilation happens once per artifact (lazily or via [`Engine::warmup`]);
 /// execution is thread-safe behind per-call locking of the cache map
-/// (PJRT executions themselves run without holding the lock).
+/// (executions themselves run without holding the lock).
 pub struct Engine {
     manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    #[cfg(feature = "pjrt")]
+    cache: Mutex<
+        std::collections::HashMap<
+            String,
+            std::sync::Arc<xla::PjRtLoadedExecutable>,
+        >,
+    >,
+    #[cfg(not(feature = "pjrt"))]
+    cache: Mutex<std::collections::HashSet<String>>,
 }
 
 impl Engine {
-    /// Create a CPU-PJRT engine over an artifact directory.
+    /// Create an engine over an artifact directory.
     pub fn new(manifest: Manifest) -> Result<Self, RuntimeError> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { manifest, client, cache: Mutex::new(HashMap::new()) })
+        #[cfg(feature = "pjrt")]
+        {
+            let client = xla::PjRtClient::cpu()?;
+            Ok(Self {
+                manifest,
+                client,
+                cache: Mutex::new(std::collections::HashMap::new()),
+            })
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            Ok(Self {
+                manifest,
+                cache: Mutex::new(std::collections::HashSet::new()),
+            })
+        }
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -45,10 +77,18 @@ impl Engine {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "interp".to_string()
+        }
     }
 
     /// Compile (or fetch the cached executable for) an artifact.
+    #[cfg(feature = "pjrt")]
     pub fn load(
         &self,
         name: &str,
@@ -70,6 +110,16 @@ impl Engine {
         Ok(exe)
     }
 
+    /// Validate + mark an artifact loaded (interpreter backend: there is
+    /// nothing to compile, but the cache semantics — warmup, compile_s
+    /// accounting — stay identical to PJRT).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<(), RuntimeError> {
+        let _ = self.manifest.get(name)?;
+        self.cache.lock().expect("cache").insert(name.to_string());
+        Ok(())
+    }
+
     /// Pre-compile a set of artifacts (the serve path calls this at
     /// startup so request latency excludes compilation).
     pub fn warmup(&self, names: &[&str]) -> Result<f64, RuntimeError> {
@@ -81,7 +131,14 @@ impl Engine {
     }
 
     pub fn is_cached(&self, name: &str) -> bool {
-        self.cache.lock().expect("cache").contains_key(name)
+        #[cfg(feature = "pjrt")]
+        {
+            self.cache.lock().expect("cache").contains_key(name)
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            self.cache.lock().expect("cache").contains(name)
+        }
     }
 
     /// Execute artifact `name` on f32 host buffers (converted to the
@@ -96,16 +153,28 @@ impl Engine {
 
         let sw = Stopwatch::start();
         let was_cached = self.is_cached(name);
+        #[cfg(feature = "pjrt")]
         let exe = self.load(name)?;
+        #[cfg(not(feature = "pjrt"))]
+        self.load(name)?;
         let compile_s = if was_cached { 0.0 } else { sw.elapsed_secs() };
 
-        let literals = build_literals(&meta, inputs)?;
-        let sw = Stopwatch::start();
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let execute_s = sw.elapsed_secs();
+        #[cfg(feature = "pjrt")]
+        let (outputs, execute_s) = {
+            let literals = build_literals(&meta, inputs)?;
+            let sw = Stopwatch::start();
+            let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+                .to_literal_sync()?;
+            let execute_s = sw.elapsed_secs();
+            (unpack_outputs(&meta, result)?, execute_s)
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let (outputs, execute_s) = {
+            let sw = Stopwatch::start();
+            let outputs = interpret(&meta, inputs)?;
+            (outputs, sw.elapsed_secs())
+        };
 
-        let outputs = unpack_outputs(&meta, result)?;
         Ok((outputs, ExecStats { compile_s, execute_s, flops: meta.flops }))
     }
 
@@ -135,6 +204,7 @@ impl Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn build_literals(
     meta: &ArtifactMeta,
     inputs: &[&[f32]],
@@ -150,7 +220,7 @@ fn build_literals(
                 "f32" => lit,
                 "bf16" => lit.convert(xla::PrimitiveType::Bf16)?,
                 other => {
-                    return Err(RuntimeError::Xla(format!(
+                    return Err(RuntimeError::Backend(format!(
                         "unsupported input dtype {other}"
                     )))
                 }
@@ -160,6 +230,7 @@ fn build_literals(
         .collect()
 }
 
+#[cfg(feature = "pjrt")]
 fn unpack_outputs(
     meta: &ArtifactMeta,
     result: xla::Literal,
@@ -168,7 +239,7 @@ fn unpack_outputs(
     let mut result = result;
     let parts = result.decompose_tuple()?;
     if parts.len() != meta.outputs.len() {
-        return Err(RuntimeError::Xla(format!(
+        return Err(RuntimeError::Backend(format!(
             "artifact {}: expected {} outputs, tuple has {}",
             meta.name,
             meta.outputs.len(),
@@ -183,7 +254,7 @@ fn unpack_outputs(
                 "f32" => lit,
                 "bf16" => lit.convert(xla::PrimitiveType::F32)?,
                 other => {
-                    return Err(RuntimeError::Xla(format!(
+                    return Err(RuntimeError::Backend(format!(
                         "unsupported output dtype {other}"
                     )))
                 }
@@ -191,6 +262,144 @@ fn unpack_outputs(
             Ok(lit.to_vec::<f32>()?)
         })
         .collect()
+}
+
+// ---------------------------------------------------------------------
+// Interpreter backend
+// ---------------------------------------------------------------------
+
+/// Row-major `C[m,n] += A[m,k] @ B[k,n]` with f32 accumulation — the
+/// same accumulation order/width as the naive ground-truth executor.
+/// No zero-skip shortcut: `0.0 * Inf` must stay NaN so non-finite
+/// inputs propagate exactly as the PJRT backend would.
+#[cfg(not(feature = "pjrt"))]
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        for l in 0..k {
+            let av = a[i * k + l];
+            let brow = &b[l * n..(l + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cv, bv) in crow.iter_mut().zip(brow) {
+                *cv += av * bv;
+            }
+        }
+    }
+    c
+}
+
+/// jax.nn.gelu(approximate=True): the tanh approximation the MLP graph
+/// lowers (`model.py`).
+#[cfg(not(feature = "pjrt"))]
+fn gelu(x: f32) -> f32 {
+    let x = x as f64;
+    let inner = (2.0 / std::f64::consts::PI).sqrt()
+        * (x + 0.044715 * x * x * x);
+    (0.5 * x * (1.0 + inner.tanh())) as f32
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn apply_epilogue(c: &mut [f32], epilogue: &str) -> Result<(), RuntimeError> {
+    match epilogue {
+        "" | "none" => {}
+        "relu" => c.iter_mut().for_each(|v| *v = v.max(0.0)),
+        "gelu" => c.iter_mut().for_each(|v| *v = gelu(*v)),
+        other => {
+            return Err(RuntimeError::Backend(format!(
+                "interp: unsupported epilogue {other:?}"
+            )))
+        }
+    }
+    Ok(())
+}
+
+/// Execute one artifact from its metadata. Semantics mirror
+/// `python/compile/model.py`: gemm is `C = epilogue(A @ B)`, mlp is
+/// `y = gelu(x @ W1 + b1) @ W2 + b2`.
+///
+/// A malformed manifest (wrong arity for the kind, disagreeing inner
+/// dimensions) must come back as a typed `Backend` error — never a
+/// panic, which would kill the engine thread and take the whole
+/// coordinator down with "engine thread gone".
+#[cfg(not(feature = "pjrt"))]
+fn interpret(
+    meta: &ArtifactMeta,
+    inputs: &[&[f32]],
+) -> Result<Vec<Vec<f32>>, RuntimeError> {
+    let bad = |msg: String| {
+        RuntimeError::Backend(format!("interp: artifact {}: {msg}", meta.name))
+    };
+    let want_arity = |n: usize| -> Result<(), RuntimeError> {
+        if meta.inputs.len() != n || inputs.len() != n {
+            return Err(bad(format!(
+                "kind {:?} needs exactly {n} inputs, manifest declares {}",
+                meta.kind,
+                meta.inputs.len()
+            )));
+        }
+        Ok(())
+    };
+    let dims2 = |i: usize| -> Result<(usize, usize), RuntimeError> {
+        let shape = &meta.inputs[i].shape;
+        if shape.len() != 2 {
+            return Err(bad(format!("input {i} is not rank-2")));
+        }
+        Ok((shape[0], shape[1]))
+    };
+    let dims1 = |i: usize| -> Result<usize, RuntimeError> {
+        let shape = &meta.inputs[i].shape;
+        if shape.len() != 1 {
+            return Err(bad(format!("input {i} is not rank-1")));
+        }
+        Ok(shape[0])
+    };
+    let agree = |what: &str, a: usize, b: usize| -> Result<(), RuntimeError> {
+        if a != b {
+            return Err(bad(format!("{what} disagree: {a} vs {b}")));
+        }
+        Ok(())
+    };
+    match meta.kind.as_str() {
+        "gemm" => {
+            want_arity(2)?;
+            let (m, k) = dims2(0)?;
+            let (k2, n) = dims2(1)?;
+            agree("A cols / B rows", k, k2)?;
+            let mut c = matmul(inputs[0], inputs[1], m, k, n);
+            apply_epilogue(&mut c, &meta.epilogue)?;
+            Ok(vec![c])
+        }
+        "mlp" => {
+            // inputs: x [b, d_in], w1 [d_in, d_h], b1 [d_h],
+            //         w2 [d_h, d_out], b2 [d_out]
+            want_arity(5)?;
+            let (batch, d_in) = dims2(0)?;
+            let (w1_rows, d_h) = dims2(1)?;
+            let (w2_rows, d_out) = dims2(3)?;
+            agree("x cols / w1 rows", d_in, w1_rows)?;
+            agree("w1 cols / b1 len", d_h, dims1(2)?)?;
+            agree("w1 cols / w2 rows", d_h, w2_rows)?;
+            agree("w2 cols / b2 len", d_out, dims1(4)?)?;
+            let (x, w1, b1, w2, b2) =
+                (inputs[0], inputs[1], inputs[2], inputs[3], inputs[4]);
+            let mut h = matmul(x, w1, batch, d_in, d_h);
+            for r in 0..batch {
+                for c in 0..d_h {
+                    h[r * d_h + c] = gelu(h[r * d_h + c] + b1[c]);
+                }
+            }
+            let mut y = matmul(&h, w2, batch, d_h, d_out);
+            for r in 0..batch {
+                for c in 0..d_out {
+                    y[r * d_out + c] += b2[c];
+                }
+            }
+            Ok(vec![y])
+        }
+        other => Err(RuntimeError::Backend(format!(
+            "interp: unsupported artifact kind {other:?}"
+        ))),
+    }
 }
 
 #[cfg(test)]
@@ -245,5 +454,99 @@ mod tests {
             engine.run_f32("bogus", &[]),
             Err(RuntimeError::UnknownArtifact(_))
         ));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn interp_gemm_matches_naive() {
+        use crate::faults::{naive_gemm, Matrix};
+        let meta = ArtifactMeta {
+            name: "t".into(),
+            file: "t.hlo.txt".into(),
+            experiment: "test".into(),
+            kind: "gemm".into(),
+            inputs: vec![
+                super::super::TensorMeta {
+                    shape: vec![5, 7],
+                    dtype: "f32".into(),
+                },
+                super::super::TensorMeta {
+                    shape: vec![7, 3],
+                    dtype: "f32".into(),
+                },
+            ],
+            outputs: vec![super::super::TensorMeta {
+                shape: vec![5, 3],
+                dtype: "f32".into(),
+            }],
+            flops: 0,
+            m: 5,
+            n: 3,
+            k: 7,
+            algo: "ref".into(),
+            pad: "none".into(),
+            dtype: "f32".into(),
+            cus: 0,
+            epilogue: "none".into(),
+            batch: 0,
+        };
+        let mut rng = crate::prop::Rng::new(3);
+        let a = Matrix::random(5, 7, &mut rng);
+        let b = Matrix::random(7, 3, &mut rng);
+        let got = interpret(&meta, &[&a.data, &b.data]).unwrap();
+        let want = naive_gemm(&a, &b);
+        for (g, w) in got[0].iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-5, "{g} vs {w}");
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn interp_rejects_malformed_manifest_without_panicking() {
+        use super::super::TensorMeta;
+        let t2 = |r: usize, c: usize| TensorMeta {
+            shape: vec![r, c],
+            dtype: "f32".into(),
+        };
+        let base = ArtifactMeta {
+            name: "bad".into(),
+            file: "x".into(),
+            experiment: "test".into(),
+            kind: "mlp".into(),
+            inputs: vec![t2(2, 4), t2(4, 8)], // only 2 of 5 mlp inputs
+            outputs: vec![t2(2, 4)],
+            flops: 0,
+            m: 0,
+            n: 0,
+            k: 0,
+            algo: String::new(),
+            pad: "none".into(),
+            dtype: "f32".into(),
+            cus: 0,
+            epilogue: "none".into(),
+            batch: 2,
+        };
+        let x = vec![0.0f32; 8];
+        let w = vec![0.0f32; 32];
+        let err = interpret(&base, &[&x, &w]).unwrap_err();
+        assert!(err.to_string().contains("exactly 5 inputs"), "{err}");
+
+        // gemm whose inner dims disagree: typed error, no OOB slice
+        let mut gemm = base.clone();
+        gemm.kind = "gemm".into();
+        gemm.inputs = vec![t2(2, 4), t2(3, 8)]; // A cols 4 != B rows 3
+        let a = vec![0.0f32; 8];
+        let b = vec![0.0f32; 24];
+        let err = interpret(&gemm, &[&a, &b]).unwrap_err();
+        assert!(err.to_string().contains("disagree"), "{err}");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn interp_gelu_is_odd_around_large_values() {
+        // gelu(x) → x for large x, → 0 for very negative x.
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        assert_eq!(gelu(0.0), 0.0);
     }
 }

@@ -26,37 +26,72 @@ pub fn pjrt_test_lock() -> std::sync::MutexGuard<'static, ()> {
     }
 }
 
-use thiserror::Error;
-
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("artifact dir {0}: run `make artifacts` first")]
     MissingManifest(String),
-    #[error("manifest: {0}")]
-    Manifest(#[from] crate::json::JsonError),
-    #[error("io {path}: {source}")]
-    Io {
-        path: String,
-        #[source]
-        source: std::io::Error,
-    },
-    #[error("unknown artifact {0:?}")]
+    Manifest(crate::json::JsonError),
+    Io { path: String, source: std::io::Error },
     UnknownArtifact(String),
-    #[error("artifact {name}: expected {expected} inputs, got {got}")]
     ArityMismatch { name: String, expected: usize, got: usize },
-    #[error("artifact {name} input {index}: expected {expected} elements, got {got}")]
     ShapeMismatch {
         name: String,
         index: usize,
         expected: usize,
         got: usize,
     },
-    #[error("xla: {0}")]
-    Xla(String),
+    /// Execution-backend failure (PJRT/XLA when built with `--features
+    /// pjrt`, the in-tree interpreter otherwise).
+    Backend(String),
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::MissingManifest(dir) => {
+                write!(f, "artifact dir {dir}: run `make artifacts` first")
+            }
+            RuntimeError::Manifest(e) => write!(f, "manifest: {e}"),
+            RuntimeError::Io { path, source } => {
+                write!(f, "io {path}: {source}")
+            }
+            RuntimeError::UnknownArtifact(name) => {
+                write!(f, "unknown artifact {name:?}")
+            }
+            RuntimeError::ArityMismatch { name, expected, got } => write!(
+                f,
+                "artifact {name}: expected {expected} inputs, got {got}"
+            ),
+            RuntimeError::ShapeMismatch { name, index, expected, got } => {
+                write!(
+                    f,
+                    "artifact {name} input {index}: expected {expected} \
+                     elements, got {got}"
+                )
+            }
+            RuntimeError::Backend(msg) => write!(f, "backend: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Manifest(e) => Some(e),
+            RuntimeError::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::json::JsonError> for RuntimeError {
+    fn from(e: crate::json::JsonError) -> Self {
+        RuntimeError::Manifest(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
-        RuntimeError::Xla(e.to_string())
+        RuntimeError::Backend(e.to_string())
     }
 }

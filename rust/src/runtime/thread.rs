@@ -73,8 +73,8 @@ pub fn spawn_engine(
         .expect("spawn engine thread");
     match ready_rx.recv() {
         Ok(Ok(())) => Ok((EngineHandle { tx, manifest }, join)),
-        Ok(Err(e)) => Err(RuntimeError::Xla(e)),
-        Err(_) => Err(RuntimeError::Xla("engine thread died at startup".into())),
+        Ok(Err(e)) => Err(RuntimeError::Backend(e)),
+        Err(_) => Err(RuntimeError::Backend("engine thread died at startup".into())),
     }
 }
 
@@ -92,10 +92,10 @@ impl EngineHandle {
         let (reply, waiter) = bounded(1);
         self.tx
             .send(Msg::Run { name: name.to_string(), inputs, reply })
-            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?;
+            .map_err(|_| RuntimeError::Backend("engine thread gone".into()))?;
         waiter
             .recv()
-            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?
+            .map_err(|_| RuntimeError::Backend("engine thread gone".into()))?
     }
 
     /// Convenience for plain slices (copies into Arc buffers).
@@ -118,10 +118,10 @@ impl EngineHandle {
                 names: names.iter().map(|s| s.to_string()).collect(),
                 reply,
             })
-            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?;
+            .map_err(|_| RuntimeError::Backend("engine thread gone".into()))?;
         waiter
             .recv()
-            .map_err(|_| RuntimeError::Xla("engine thread gone".into()))?
+            .map_err(|_| RuntimeError::Backend("engine thread gone".into()))?
     }
 }
 

@@ -1,0 +1,397 @@
+//! Persistent per-shape tuning cache with an in-memory LRU front.
+//!
+//! Keyed by `(ShapeBucket, bytes_per_elem, DeviceFingerprint)`;
+//! serialized through the
+//! in-tree `json` module with an explicit format version — a mismatched
+//! version is *rejected*, never reinterpreted, because a stale entry
+//! that silently deserializes into the wrong field is exactly the class
+//! of corruption the report's CU bug taught us to fear.
+
+use super::fingerprint::{DeviceFingerprint, ShapeBucket};
+use super::search::TunedConfig;
+use super::space::PadPolicy;
+use crate::decomp::params::KernelParams;
+use crate::decomp::BlockShape;
+use crate::json::{self, obj, Value};
+use std::path::Path;
+
+/// Bump on any change to the entry layout.
+pub const CACHE_VERSION: u64 = 1;
+
+#[derive(Debug)]
+pub enum CacheError {
+    Io { path: String, source: std::io::Error },
+    Json(json::JsonError),
+    VersionMismatch { found: u64, want: u64 },
+    BadEntry(String),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Io { path, source } => {
+                write!(f, "tuner cache {path}: {source}")
+            }
+            CacheError::Json(e) => write!(f, "tuner cache: {e}"),
+            CacheError::VersionMismatch { found, want } => write!(
+                f,
+                "tuner cache version {found} != {want}; re-tune (the cache \
+                 format changed and stale entries are rejected, not guessed)"
+            ),
+            CacheError::BadEntry(msg) => {
+                write!(f, "tuner cache entry: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+impl From<json::JsonError> for CacheError {
+    fn from(e: json::JsonError) -> Self {
+        CacheError::Json(e)
+    }
+}
+
+/// Full cache key: shape bucket × element width × device. The element
+/// width matters — bf16 has twice the VMEM headroom and half the
+/// traffic of f32, so a config tuned at one width must never be served
+/// at another. The device fingerprint stays the suffix (see
+/// [`TuningCache::count_for`]).
+fn composite_key(
+    bucket: &ShapeBucket,
+    bytes_per_elem: usize,
+    dev: &DeviceFingerprint,
+) -> String {
+    format!("{}@bpe{}@{}", bucket.key(), bytes_per_elem, dev.as_str())
+}
+
+/// The cache proper: MRU-ordered entries, bounded by `capacity`.
+#[derive(Debug, Clone)]
+pub struct TuningCache {
+    capacity: usize,
+    /// Most-recently-used first. Linear scan is fine at serving-cache
+    /// sizes (hundreds); the composite key keeps lookups exact.
+    entries: Vec<(String, TunedConfig)>,
+}
+
+impl TuningCache {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "cache capacity must be positive");
+        Self { capacity, entries: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Entries keyed to one device fingerprint — a persisted cache can
+    /// hold entries for several devices, and a warm-load that matches
+    /// none of them is worth warning about.
+    pub fn count_for(&self, dev: &DeviceFingerprint) -> usize {
+        let suffix = format!("@{}", dev.as_str());
+        self.entries.iter().filter(|(k, _)| k.ends_with(&suffix)).count()
+    }
+
+    /// Lookup; a hit is promoted to most-recently-used.
+    pub fn get(
+        &mut self,
+        bucket: &ShapeBucket,
+        bytes_per_elem: usize,
+        dev: &DeviceFingerprint,
+    ) -> Option<TunedConfig> {
+        let key = composite_key(bucket, bytes_per_elem, dev);
+        let idx = self.entries.iter().position(|(k, _)| *k == key)?;
+        let entry = self.entries.remove(idx);
+        let cfg = entry.1;
+        self.entries.insert(0, entry);
+        Some(cfg)
+    }
+
+    /// Insert/overwrite at most-recently-used; evicts the LRU tail.
+    pub fn insert(
+        &mut self,
+        bucket: &ShapeBucket,
+        bytes_per_elem: usize,
+        dev: &DeviceFingerprint,
+        cfg: TunedConfig,
+    ) {
+        let key = composite_key(bucket, bytes_per_elem, dev);
+        self.entries.retain(|(k, _)| *k != key);
+        self.entries.insert(0, (key, cfg));
+        self.entries.truncate(self.capacity);
+    }
+
+    pub fn to_json(&self) -> Value {
+        let entries: Vec<Value> = self
+            .entries
+            .iter()
+            .map(|(key, c)| {
+                obj(vec![
+                    ("key", key.as_str().into()),
+                    ("bm", c.params.block.bm.into()),
+                    ("bn", c.params.block.bn.into()),
+                    ("bk", c.params.block.bk.into()),
+                    ("kpack", c.params.kpack.into()),
+                    ("mxu_m", c.params.mxu_m.into()),
+                    ("mxu_n", c.params.mxu_n.into()),
+                    ("bytes_per_elem", c.params.bytes_per_elem.into()),
+                    ("double_buffer", c.params.double_buffer.into()),
+                    ("pad", c.pad.as_str().into()),
+                    ("cus", c.cus.into()),
+                    ("predicted_s", c.predicted_s.into()),
+                    ("measured_s", c.measured_s.into()),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("version", (CACHE_VERSION as usize).into()),
+            ("entries", Value::Arr(entries)),
+        ])
+    }
+
+    pub fn from_json(v: &Value, capacity: usize) -> Result<Self, CacheError> {
+        let found = v.u("version").map_err(CacheError::Json)? as u64;
+        if found != CACHE_VERSION {
+            return Err(CacheError::VersionMismatch {
+                found,
+                want: CACHE_VERSION,
+            });
+        }
+        let mut cache = Self::new(capacity);
+        let mut parsed = Vec::new();
+        for e in v.arr("entries").map_err(CacheError::Json)? {
+            let key = e.s("key").map_err(CacheError::Json)?.to_string();
+            let pad_str = e.s("pad").map_err(CacheError::Json)?;
+            let pad = PadPolicy::parse(pad_str).ok_or_else(|| {
+                CacheError::BadEntry(format!("unknown pad policy {pad_str:?}"))
+            })?;
+            let block = BlockShape::new(
+                e.u("bm").map_err(CacheError::Json)?,
+                e.u("bn").map_err(CacheError::Json)?,
+                e.u("bk").map_err(CacheError::Json)?,
+            );
+            let mut params = KernelParams::new(
+                block,
+                e.u("bytes_per_elem").map_err(CacheError::Json)?,
+            );
+            params.kpack = e.u("kpack").map_err(CacheError::Json)?;
+            params.mxu_m = e.u("mxu_m").map_err(CacheError::Json)?;
+            params.mxu_n = e.u("mxu_n").map_err(CacheError::Json)?;
+            params.double_buffer =
+                e.b("double_buffer").map_err(CacheError::Json)?;
+            let cfg = TunedConfig {
+                params,
+                pad,
+                cus: e.u("cus").map_err(CacheError::Json)?,
+                predicted_s: e.f("predicted_s").map_err(CacheError::Json)?,
+                measured_s: e.f("measured_s").map_err(CacheError::Json)?,
+            };
+            parsed.push((key, cfg));
+        }
+        // File order is MRU-first; inserting via the Vec directly keeps
+        // it (an insert() loop would reverse it).
+        parsed.truncate(capacity);
+        cache.entries = parsed;
+        Ok(cache)
+    }
+
+    /// Load `path`, or an empty cache when the file does not exist.
+    /// A version mismatch or parse failure is an error — the caller
+    /// decides whether to discard (serve path) or abort (CLI).
+    pub fn load(path: &Path, capacity: usize) -> Result<Self, CacheError> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(Self::new(capacity))
+            }
+            Err(source) => {
+                return Err(CacheError::Io {
+                    path: path.display().to_string(),
+                    source,
+                })
+            }
+        };
+        let v = json::parse(&text)?;
+        Self::from_json(&v, capacity)
+    }
+
+    /// Persist to `path` (pretty JSON, stable ordering).
+    pub fn store(&self, path: &Path) -> Result<(), CacheError> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(|source| {
+                    CacheError::Io {
+                        path: path.display().to_string(),
+                        source,
+                    }
+                })?;
+            }
+        }
+        std::fs::write(path, json::to_string_pretty(&self.to_json()))
+            .map_err(|source| CacheError::Io {
+                path: path.display().to_string(),
+                source,
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::GemmShape;
+    use std::path::PathBuf;
+
+    fn fp() -> DeviceFingerprint {
+        DeviceFingerprint("test-cu120-gf375-bw1600-lo6.0-io150".into())
+    }
+
+    fn cfg(bm: usize, measured: f64) -> TunedConfig {
+        TunedConfig {
+            params: KernelParams::new(BlockShape::new(bm, 128, 64), 4),
+            pad: PadPolicy::None,
+            cus: 120,
+            predicted_s: measured * 0.9,
+            measured_s: measured,
+        }
+    }
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "streamk-tuner-cache-{tag}-{}.json",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn lru_front_evicts_oldest() {
+        let mut c = TuningCache::new(2);
+        let (b1, b2, b3) = (
+            ShapeBucket::of(GemmShape::new(100, 100, 100)),
+            ShapeBucket::of(GemmShape::new(1000, 1000, 1000)),
+            ShapeBucket::of(GemmShape::new(4000, 4000, 4000)),
+        );
+        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
+        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        // touch b1 so b2 becomes LRU
+        assert!(c.get(&b1, 4, &fp()).is_some());
+        c.insert(&b3, 4, &fp(), cfg(64, 3.0));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&b2, 4, &fp()).is_none(), "b2 must be evicted");
+        assert!(c.get(&b1, 4, &fp()).is_some());
+        assert!(c.get(&b3, 4, &fp()).is_some());
+    }
+
+    #[test]
+    fn same_bucket_different_device_are_distinct() {
+        let mut c = TuningCache::new(8);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let other = DeviceFingerprint("mi100-cu120".into());
+        c.insert(&b, 4, &fp(), cfg(128, 1.0));
+        assert!(c.get(&b, 4, &other).is_none());
+        c.insert(&b, 4, &other, cfg(256, 2.0));
+        assert_eq!(c.get(&b, 4, &fp()).unwrap().params.block.bm, 128);
+        assert_eq!(c.get(&b, 4, &other).unwrap().params.block.bm, 256);
+    }
+
+    #[test]
+    fn same_bucket_different_dtype_are_distinct() {
+        // A config tuned at bf16 (bpe=2) must never be served for f32
+        // lookups — the legal set and traffic model differ.
+        let mut c = TuningCache::new(8);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        c.insert(&b, 2, &fp(), cfg(256, 1.0));
+        assert!(c.get(&b, 4, &fp()).is_none());
+        c.insert(&b, 4, &fp(), cfg(128, 2.0));
+        assert_eq!(c.get(&b, 2, &fp()).unwrap().params.block.bm, 256);
+        assert_eq!(c.get(&b, 4, &fp()).unwrap().params.block.bm, 128);
+    }
+
+    #[test]
+    fn round_trip_through_disk() {
+        let mut c = TuningCache::new(8);
+        let b1 = ShapeBucket::of(GemmShape::new(3840, 4096, 4096));
+        let b2 = ShapeBucket::of(GemmShape::new(480, 512, 512));
+        let mut special = cfg(256, 1.5e-3);
+        special.pad = PadPolicy::Physical;
+        special.params.double_buffer = false;
+        special.cus = 60;
+        c.insert(&b1, 4, &fp(), cfg(128, 2.5e-3));
+        c.insert(&b2, 4, &fp(), special);
+
+        let path = tmpfile("roundtrip");
+        c.store(&path).unwrap();
+        let mut back = TuningCache::load(&path, 8).unwrap();
+        assert_eq!(back.len(), 2);
+        // b2 was inserted last → MRU, survives as-is with every field
+        let got = back.get(&b2, 4, &fp()).unwrap();
+        assert_eq!(got, special);
+        let got1 = back.get(&b1, 4, &fp()).unwrap();
+        assert_eq!(got1.params.block.bm, 128);
+        assert!((got1.measured_s - 2.5e-3).abs() < 1e-12);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let path = tmpfile("version");
+        std::fs::write(
+            &path,
+            r#"{"version": 999, "entries": []}"#,
+        )
+        .unwrap();
+        let err = TuningCache::load(&path, 4).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheError::VersionMismatch { found: 999, want: CACHE_VERSION }
+        ));
+        assert!(err.to_string().contains("re-tune"));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_empty_cache() {
+        let c = TuningCache::load(
+            Path::new("/definitely/not/here/cache.json"),
+            4,
+        );
+        // nonexistent *file* in an existing tempdir → empty; here the
+        // parent also doesn't exist, which still surfaces as NotFound
+        assert!(c.unwrap().is_empty());
+    }
+
+    #[test]
+    fn bad_entry_rejected_with_reason() {
+        let path = tmpfile("bad-entry");
+        std::fs::write(
+            &path,
+            r#"{"version": 1, "entries": [{"key": "k", "bm": 128, "bn": 128,
+               "bk": 64, "kpack": 8, "mxu_m": 128, "mxu_n": 128,
+               "bytes_per_elem": 4, "double_buffer": true,
+               "pad": "diagonal", "cus": 120,
+               "predicted_s": 0.1, "measured_s": 0.1}]}"#,
+        )
+        .unwrap();
+        let err = TuningCache::load(&path, 4).unwrap_err();
+        assert!(err.to_string().contains("diagonal"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn load_respects_capacity() {
+        let mut c = TuningCache::new(16);
+        for i in 1..=10usize {
+            let b = ShapeBucket::of(GemmShape::new(i * 128, 128, 128));
+            c.insert(&b, 4, &fp(), cfg(128, i as f64));
+        }
+        let path = tmpfile("capacity");
+        c.store(&path).unwrap();
+        let back = TuningCache::load(&path, 3).unwrap();
+        assert_eq!(back.len(), 3);
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,130 @@
+//! Cache keys: shape buckets and device fingerprints.
+//!
+//! A tuned configuration transfers between problems that land in the
+//! same performance regime, not just between identical shapes — so the
+//! cache keys a power-of-two bucket of the GEMM shape. The device half
+//! of the key captures everything the simulator's timing depends on;
+//! two devices with the same fingerprint are interchangeable for tuning
+//! purposes.
+
+use crate::decomp::GemmShape;
+use crate::gpu_sim::Device;
+
+fn ceil_pow2(x: usize) -> usize {
+    x.max(1).next_power_of_two()
+}
+
+/// Power-of-two bucketed GEMM shape — the shape half of the cache key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ShapeBucket {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl ShapeBucket {
+    pub fn of(shape: GemmShape) -> Self {
+        Self {
+            m: ceil_pow2(shape.m),
+            n: ceil_pow2(shape.n),
+            k: ceil_pow2(shape.k),
+        }
+    }
+
+    /// Stable text form used in the persistent cache file.
+    pub fn key(&self) -> String {
+        format!("{}x{}x{}", self.m, self.n, self.k)
+    }
+
+    pub fn parse(text: &str) -> Option<Self> {
+        let mut it = text.split('x');
+        let m = it.next()?.parse().ok()?;
+        let n = it.next()?.parse().ok()?;
+        let k = it.next()?.parse().ok()?;
+        if it.next().is_some() {
+            return None;
+        }
+        Some(Self { m, n, k })
+    }
+
+    /// A representative shape for tuning this bucket: the bucket's upper
+    /// corner (the worst case the tuned config must still win on).
+    pub fn representative(&self) -> GemmShape {
+        GemmShape::new(self.m, self.n, self.k)
+    }
+}
+
+/// Everything the simulated timing depends on, folded into a stable
+/// string. Heterogeneity (per-CU speeds) is intentionally excluded: it
+/// is transient (thermal / shared-cluster noise) and handled online by
+/// the Block2Time balancer, not by the persistent cache.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DeviceFingerprint(pub String);
+
+impl DeviceFingerprint {
+    pub fn of(dev: &Device) -> Self {
+        Self(format!(
+            "{}-cu{}-gf{:.0}-bw{:.0}-lo{:.1}-io{:.0}",
+            dev.name,
+            dev.num_cus,
+            dev.flops_per_cu / 1e9,
+            dev.hbm_bw / 1e9,
+            dev.launch_overhead * 1e6,
+            dev.iter_overhead * 1e9,
+        ))
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::DeviceKind;
+
+    #[test]
+    fn buckets_round_up_to_pow2() {
+        let b = ShapeBucket::of(GemmShape::new(3840, 4096, 4096));
+        assert_eq!((b.m, b.n, b.k), (4096, 4096, 4096));
+        let b = ShapeBucket::of(GemmShape::new(3, 9, 9));
+        assert_eq!((b.m, b.n, b.k), (4, 16, 16));
+        // exact powers stay put; zero clamps to 1
+        let b = ShapeBucket::of(GemmShape::new(128, 1, 0));
+        assert_eq!((b.m, b.n, b.k), (128, 1, 1));
+    }
+
+    #[test]
+    fn nearby_shapes_share_a_bucket() {
+        let a = ShapeBucket::of(GemmShape::new(1920, 2000, 2000));
+        let b = ShapeBucket::of(GemmShape::new(2048, 1100, 1500));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn key_round_trips() {
+        let b = ShapeBucket::of(GemmShape::new(480, 512, 512));
+        assert_eq!(ShapeBucket::parse(&b.key()), Some(b));
+        assert_eq!(ShapeBucket::parse("1x2"), None);
+        assert_eq!(ShapeBucket::parse("1x2x3x4"), None);
+        assert_eq!(ShapeBucket::parse("axbxc"), None);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_devices_not_noise() {
+        let mi200 = Device::preset(DeviceKind::Mi200);
+        let mi100 = Device::preset(DeviceKind::Mi100);
+        assert_ne!(DeviceFingerprint::of(&mi200), DeviceFingerprint::of(&mi100));
+        assert_ne!(
+            DeviceFingerprint::of(&mi200),
+            DeviceFingerprint::of(&mi200.clone().with_cus(60))
+        );
+        // throttling (transient heterogeneity) does NOT change the key
+        let throttled = mi200.clone().with_throttled(2, 0.5);
+        assert_eq!(
+            DeviceFingerprint::of(&mi200),
+            DeviceFingerprint::of(&throttled)
+        );
+    }
+}

@@ -1,0 +1,194 @@
+//! Autotuner — the systematic exploration the report could not run.
+//!
+//! The paper's parameter study ended with "adjusting the block size and
+//! parameters led to the process getting stuck, indicating a need for
+//! further tuning". This subsystem is that further tuning, built from
+//! the two prerequisites the repo already had:
+//!
+//! - [`space`] — the `KernelParams` × padding × grid-size search space,
+//!   pruned up front by `decomp::params::check` so illegal points are
+//!   *never visited* (CK surfaced them as opaque template failures; we
+//!   name them and skip them);
+//! - [`search`] — two-phase search: Block2Time-predicted ranking
+//!   ([`crate::predict`]) of the legal candidates, then measured
+//!   refinement of the top-K on [`crate::gpu_sim`], under a hard
+//!   iteration/time budget so no configuration can ever "get stuck";
+//! - [`cache`] — a persistent, versioned tuning cache keyed by
+//!   ([`ShapeBucket`], [`DeviceFingerprint`]) with an in-memory LRU
+//!   front, serialized through the in-tree `json` module;
+//! - [`fingerprint`] — the cache keys.
+//!
+//! The serving coordinator consults a shared [`Tuner`] per incoming
+//! GEMM shape (hit → tuned routing policy, miss → defaults + a
+//! background tune), and `streamk tune` warms the cache offline.
+//! `cargo bench --bench tuner_gain` demonstrates tuned-vs-default
+//! speedups across the Table-1 shape suite.
+
+pub mod cache;
+pub mod fingerprint;
+pub mod search;
+pub mod space;
+
+pub use cache::{CacheError, TuningCache, CACHE_VERSION};
+pub use fingerprint::{DeviceFingerprint, ShapeBucket};
+pub use search::{
+    measure, tune, Budget, TuneError, TuneOptions, TuneReport, TunedConfig,
+};
+pub use space::{enumerate, Candidate, PadPolicy, SpaceStats};
+
+use crate::decomp::GemmShape;
+use crate::gpu_sim::Device;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// The paper's Table-1 shape suite — the canonical tuning/bench targets
+/// (baseline, small, large uneven, medium).
+pub const TABLE1_SUITE: &[(usize, usize, usize)] = &[
+    (3840, 4096, 4096),
+    (3, 9, 9),
+    (1920, 2000, 2000),
+    (480, 512, 512),
+];
+
+/// Thread-safe tuner handle: the cache plus the device it tunes for.
+/// This is what the coordinator shares between the router (lookups) and
+/// the background tune-on-miss worker (inserts).
+pub struct Tuner {
+    dev: Device,
+    opts: TuneOptions,
+    fingerprint: DeviceFingerprint,
+    capacity: usize,
+    cache: Mutex<TuningCache>,
+}
+
+impl Tuner {
+    pub fn new(dev: Device, opts: TuneOptions, capacity: usize) -> Self {
+        let fingerprint = DeviceFingerprint::of(&dev);
+        Self {
+            dev,
+            opts,
+            fingerprint,
+            capacity,
+            cache: Mutex::new(TuningCache::new(capacity)),
+        }
+    }
+
+    pub fn device(&self) -> &Device {
+        &self.dev
+    }
+
+    pub fn options(&self) -> &TuneOptions {
+        &self.opts
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.lock().expect("tuner cache").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cached entries usable by *this* tuner (matching its device
+    /// fingerprint). A loaded cache with `len() > 0` but
+    /// `matching_entries() == 0` was tuned for a different device.
+    pub fn matching_entries(&self) -> usize {
+        self.cache
+            .lock()
+            .expect("tuner cache")
+            .count_for(&self.fingerprint)
+    }
+
+    /// Cache lookup for a shape (bucketed, at this tuner's element
+    /// width). `None` is a miss.
+    pub fn lookup(&self, shape: GemmShape) -> Option<TunedConfig> {
+        let bucket = ShapeBucket::of(shape);
+        self.cache.lock().expect("tuner cache").get(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+        )
+    }
+
+    /// Tune the shape's bucket (at its representative, so the result is
+    /// valid for everything that maps there) and insert the winner.
+    /// The cache lock is NOT held during the search — lookups proceed
+    /// concurrently while a tune runs.
+    pub fn tune_and_insert(
+        &self,
+        shape: GemmShape,
+    ) -> Result<TuneReport, TuneError> {
+        let bucket = ShapeBucket::of(shape);
+        let report = tune(bucket.representative(), &self.dev, &self.opts)?;
+        self.cache.lock().expect("tuner cache").insert(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+            report.best,
+        );
+        Ok(report)
+    }
+
+    /// Replace the in-memory cache with the persisted one at `path`
+    /// (bounded by the capacity this tuner was built with). Version
+    /// mismatches come back as errors; the caller chooses between
+    /// discarding (serve path warms from empty) and aborting.
+    pub fn load_cache(&self, path: &Path) -> Result<usize, CacheError> {
+        let loaded = TuningCache::load(path, self.capacity)?;
+        let n = loaded.len();
+        *self.cache.lock().expect("tuner cache") = loaded;
+        Ok(n)
+    }
+
+    pub fn store_cache(&self, path: &Path) -> Result<(), CacheError> {
+        self.cache.lock().expect("tuner cache").store(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::DeviceKind;
+
+    fn tuner() -> Tuner {
+        Tuner::new(
+            Device::preset(DeviceKind::Mi200),
+            TuneOptions::default(),
+            8,
+        )
+    }
+
+    #[test]
+    fn miss_then_tune_then_hit() {
+        let t = tuner();
+        let shape = GemmShape::new(480, 512, 512);
+        assert!(t.lookup(shape).is_none());
+        let report = t.tune_and_insert(shape).unwrap();
+        let hit = t.lookup(shape).expect("tuned shape must hit");
+        assert_eq!(hit, report.best);
+        // a different shape in the same pow2 bucket also hits
+        let neighbor = GemmShape::new(400, 500, 300);
+        assert!(t.lookup(neighbor).is_some());
+        // a different bucket still misses
+        assert!(t.lookup(GemmShape::new(4000, 4000, 4000)).is_none());
+    }
+
+    #[test]
+    fn persist_and_reload_via_handle() {
+        let t = tuner();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        t.tune_and_insert(shape).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "streamk-tuner-handle-{}.json",
+            std::process::id()
+        ));
+        t.store_cache(&path).unwrap();
+
+        let fresh = tuner();
+        assert!(fresh.lookup(shape).is_none());
+        let n = fresh.load_cache(&path).unwrap();
+        assert_eq!(n, 1);
+        assert!(fresh.lookup(shape).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

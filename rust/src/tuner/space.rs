@@ -1,0 +1,215 @@
+//! The tuning search space, legality-pruned up front.
+//!
+//! The report probed CK's ~15 interdependent template parameters by hand
+//! until the build broke ("we could not get the vast majority … to
+//! compile"). Here the space is explicit — `KernelParams` block axes ×
+//! padding policy × grid size — and every point is screened by
+//! `decomp::params::check` *before* anything is built or measured, so
+//! illegal points are never visited and every rejection carries a named
+//! reason.
+
+use crate::decomp::params::{check, exploration_grid_bpe, KernelParams};
+use crate::decomp::GemmShape;
+use std::collections::BTreeMap;
+
+/// Artifact padding policy, as a typed axis (the router's "none" /
+/// "physical" strings).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PadPolicy {
+    None,
+    Physical,
+}
+
+impl PadPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PadPolicy::None => "none",
+            PadPolicy::Physical => "physical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "none" => Some(PadPolicy::None),
+            "physical" => Some(PadPolicy::Physical),
+            _ => None,
+        }
+    }
+}
+
+/// One legal point of the search space.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Candidate {
+    pub params: KernelParams,
+    pub pad: PadPolicy,
+    /// Grid size: how many CUs the schedule is built for.
+    pub cus: usize,
+}
+
+/// What the up-front pruning removed, by named reason.
+///
+/// Two levels of accounting: *block points* (distinct `KernelParams`,
+/// where legality lives) and *candidates* (legal blocks × pad × grid
+/// variants, where dedup lives). Invariants:
+/// `illegal_blocks + legal_blocks == block_points` and
+/// `legal + deduped == total`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SpaceStats {
+    /// Distinct `KernelParams` grid points enumerated.
+    pub block_points: usize,
+    /// Block points the legality predicate rejected (counted once per
+    /// block, however many reasons it carries).
+    pub illegal_blocks: usize,
+    /// Rejection counts keyed by `Illegal::label()`, once per block
+    /// point per reason (a block can carry several reasons, so these
+    /// sum to ≥ `illegal_blocks`).
+    pub pruned: BTreeMap<&'static str, usize>,
+    /// Candidate points: legal blocks × pad × grid-size variants.
+    pub total: usize,
+    /// Candidates that survived effective-block dedup.
+    pub legal: usize,
+    /// Candidates dropped because their *effective* block (after
+    /// shrinking to the problem) duplicates an earlier candidate —
+    /// booked separately so the legality table is not blamed for
+    /// dedup collapse.
+    pub deduped: usize,
+}
+
+/// Grid-size axis: the full device plus halvings (the report's CLI
+/// "Compute Units" parameter — the one that triggered the CK bug — is
+/// worth tuning because small problems can prefer fewer CUs to fewer
+/// fixup fragments).
+fn grid_sizes(dev_cus: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut c = dev_cus;
+    while c >= 1 && out.len() < 3 {
+        out.push(c);
+        c /= 2;
+    }
+    out
+}
+
+/// Enumerate the legality-pruned candidate list for one problem.
+///
+/// Block points whose effective block (after shrinking to the problem)
+/// is identical are deduplicated so tiny shapes don't measure the same
+/// point dozens of times.
+pub fn enumerate(
+    shape: GemmShape,
+    dev_cus: usize,
+    bytes_per_elem: usize,
+) -> (Vec<Candidate>, SpaceStats) {
+    let mut stats = SpaceStats::default();
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let grids = grid_sizes(dev_cus);
+    for params in exploration_grid_bpe(bytes_per_elem) {
+        // Legality depends only on the block parameters: check once per
+        // grid point, count each rejection reason once per grid point.
+        stats.block_points += 1;
+        if let Err(errs) = check(&params) {
+            stats.illegal_blocks += 1;
+            for e in errs {
+                *stats.pruned.entry(e.label()).or_default() += 1;
+            }
+            continue;
+        }
+        for pad in [PadPolicy::None, PadPolicy::Physical] {
+            for &cus in &grids {
+                stats.total += 1;
+                let eff_block = params.block.effective(shape);
+                if seen.insert((eff_block, params.double_buffer, pad, cus)) {
+                    stats.legal += 1;
+                    out.push(Candidate { params, pad, cus });
+                } else {
+                    stats.deduped += 1;
+                }
+            }
+        }
+    }
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::BlockShape;
+
+    #[test]
+    fn pruning_removes_the_majority_like_ck() {
+        let (cands, stats) =
+            enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        assert!(stats.block_points > 0);
+        assert!(!cands.is_empty());
+        // the report: "the vast majority … fail to compile" — of the
+        // *block* space, which is where legality lives
+        assert!(
+            stats.illegal_blocks * 2 > stats.block_points,
+            "{stats:?}"
+        );
+        // every named rejection reason accounts for at least one block
+        assert!(!stats.pruned.is_empty());
+        // reasons are counted once per block, so no reason can exceed
+        // the number of illegal blocks
+        for (reason, n) in &stats.pruned {
+            assert!(*n <= stats.illegal_blocks, "{reason}: {n}");
+        }
+        // the candidate books balance
+        assert_eq!(stats.legal + stats.deduped, stats.total, "{stats:?}");
+        assert_eq!(
+            stats.total,
+            (stats.block_points - stats.illegal_blocks) * 6,
+            "legal blocks × 2 pads × 3 grid sizes"
+        );
+        assert_eq!(stats.legal, cands.len());
+        // no illegal point survives
+        for c in &cands {
+            assert!(check(&c.params).is_ok());
+        }
+    }
+
+    #[test]
+    fn dedup_is_booked_separately_from_legality() {
+        // Tiny shape: nearly every legal candidate collapses by dedup;
+        // the gap must show up in `deduped`, not be blamed on legality.
+        let (_, stats) = enumerate(GemmShape::new(3, 9, 9), 120, 4);
+        assert!(stats.deduped > 0, "{stats:?}");
+        assert_eq!(stats.legal + stats.deduped, stats.total);
+        // the big shape has no dedup at all (all effective blocks distinct)
+        let (_, big) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        assert_eq!(big.deduped, 0, "{big:?}");
+    }
+
+    #[test]
+    fn report_16x16_config_is_never_visited() {
+        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        assert!(cands
+            .iter()
+            .all(|c| c.params.block != BlockShape::new(16, 16, 64)));
+    }
+
+    #[test]
+    fn tiny_shape_deduplicates_effective_blocks() {
+        let tiny = GemmShape::new(3, 9, 9);
+        let big = GemmShape::new(3840, 4096, 4096);
+        let (t, _) = enumerate(tiny, 120, 4);
+        let (b, _) = enumerate(big, 120, 4);
+        // every legal block shrinks to (3,9,9): far fewer distinct points
+        assert!(t.len() < b.len(), "{} vs {}", t.len(), b.len());
+    }
+
+    #[test]
+    fn grid_axis_halves_from_device() {
+        assert_eq!(grid_sizes(120), vec![120, 60, 30]);
+        assert_eq!(grid_sizes(1), vec![1]);
+        assert_eq!(grid_sizes(5), vec![5, 2, 1]);
+    }
+
+    #[test]
+    fn pad_policy_round_trips() {
+        for p in [PadPolicy::None, PadPolicy::Physical] {
+            assert_eq!(PadPolicy::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(PadPolicy::parse("maybe"), None);
+    }
+}
