@@ -1,0 +1,141 @@
+//! FLEET — Block2Time-guided placement vs round-robin on a
+//! heterogeneous 4-device fleet, plus the online re-tuning loop.
+//!
+//! The acceptance demonstration for the fleet subsystem:
+//! (1) on a skewed shape mix over four devices spanning a ~4× speed
+//! range, completion-time-predicted placement beats round-robin
+//! makespan by a wide margin; (2) the feedback loop measurably
+//! tightens at least one cache entry's predicted-vs-measured drift
+//! over the simulated traffic run.
+//!
+//! Run: `cargo bench --bench fleet_throughput`
+//! CI smoke: `cargo bench --bench fleet_throughput -- --test`
+
+use streamk::bench::Table;
+use streamk::fleet::{
+    demo_fleet_devices, gen_trace, run_trace, warm, Fleet, PlacementPolicy,
+    ShapeMix,
+};
+use streamk::tuner::{Budget, StalenessPolicy, TuneOptions};
+
+fn main() {
+    // `cargo bench --bench fleet_throughput -- --test` forwards
+    // `--test`; cargo itself may inject `--bench`, which is ignored
+    // like every other unknown flag (harness = false).
+    let quick = std::env::args().skip(1).any(|a| a == "--test");
+    let (budget_ms, requests) = if quick { (50u64, 80usize) } else { (250, 400) };
+
+    let opts = TuneOptions {
+        top_k: 8,
+        budget: Budget::from_millis(budget_ms),
+        bytes_per_elem: 4,
+    };
+    // High drift threshold: this bench demonstrates the *blending* half
+    // of the loop, so re-tunes must not reset predictions mid-series
+    // (`streamk fleet --drift-pct` exercises the re-validation half).
+    let staleness = StalenessPolicy { max_drift: 10.0, ..Default::default() };
+    let fleet = Fleet::new(demo_fleet_devices(), opts, staleness, 256);
+
+    println!("== 1. the fleet ==\n");
+    let mut t = Table::new(&["device", "cus", "peak TF/s", "hbm GB/s"]);
+    for d in fleet.devices() {
+        t.row(&[
+            d.name.clone(),
+            d.device().num_cus.to_string(),
+            format!("{:.1}", d.device().peak_flops() / 1e12),
+            format!("{:.0}", d.device().hbm_bw / 1e9),
+        ]);
+    }
+    t.print();
+
+    let mix = ShapeMix::skewed_default();
+    let tuned = warm(&fleet, &mix.shapes());
+    println!(
+        "\nwarmed {tuned} (device × bucket) cache entries under a \
+         {budget_ms}ms budget each\n"
+    );
+
+    let trace = gen_trace(42, requests, &mix);
+    let rr = run_trace(&fleet, &trace, PlacementPolicy::RoundRobin, false);
+    let b2t = run_trace(&fleet, &trace, PlacementPolicy::Block2Time, true);
+
+    println!("== 2. placement: round-robin vs Block2Time-guided ==\n");
+    let mut t = Table::new(&[
+        "device", "rr reqs", "rr busy ms", "fleet reqs", "fleet busy ms",
+    ]);
+    for (i, d) in fleet.devices().iter().enumerate() {
+        t.row(&[
+            d.name.clone(),
+            rr.device_requests[i].to_string(),
+            format!("{:.3}", rr.device_busy_s[i] * 1e3),
+            b2t.device_requests[i].to_string(),
+            format!("{:.3}", b2t.device_busy_s[i] * 1e3),
+        ]);
+    }
+    t.print();
+    let speedup = rr.makespan_s / b2t.makespan_s.max(1e-12);
+    println!(
+        "\nmakespan: rr {:.3} ms | fleet {:.3} ms | speedup {speedup:.3}x",
+        rr.makespan_s * 1e3,
+        b2t.makespan_s * 1e3,
+    );
+    println!(
+        "throughput: rr {:.2} TFLOP/s | fleet {:.2} TFLOP/s",
+        rr.throughput_tflops(),
+        b2t.throughput_tflops(),
+    );
+
+    // Acceptance 1: predicted placement must beat round-robin clearly.
+    assert!(
+        b2t.makespan_s < rr.makespan_s * 0.95,
+        "fleet placement must beat round-robin: {} vs {}",
+        b2t.makespan_s,
+        rr.makespan_s
+    );
+    // Every device pulled its weight under both policies.
+    assert!(
+        b2t.device_requests.iter().all(|&c| c > 0),
+        "a fleet member starved: {:?}",
+        b2t.device_requests
+    );
+    assert_eq!(b2t.fallback_placements, 0, "warm caches: no fallbacks");
+
+    println!("\n== 3. the online feedback loop ==\n");
+    let mut series: Vec<_> =
+        b2t.drift.iter().filter(|s| s.drifts.len() >= 3).collect();
+    series.sort_by(|a, b| b.drifts[0].total_cmp(&a.drifts[0]));
+    let mut t = Table::new(&[
+        "device", "bucket", "obs", "first drift", "last drift",
+    ]);
+    for s in series.iter().take(6) {
+        t.row(&[
+            s.device.to_string(),
+            s.bucket.clone(),
+            s.drifts.len().to_string(),
+            format!("{:.1}%", s.drifts[0] * 100.0),
+            format!("{:.1}%", s.drifts.last().unwrap() * 100.0),
+        ]);
+    }
+    t.print();
+
+    // Acceptance 2: the loop measurably tightens at least one entry's
+    // predicted-vs-measured drift over the run.
+    let best = series
+        .first()
+        .expect("a repeated (device, bucket) series must exist");
+    let (first, last) = (best.drifts[0], *best.drifts.last().unwrap());
+    assert!(
+        last < first,
+        "online feedback must tighten drift: {first} -> {last}"
+    );
+    println!(
+        "\nfeedback tightened device {} bucket {} from {:.1}% to {:.1}% \
+         drift over {} observations",
+        best.device,
+        best.bucket,
+        first * 100.0,
+        last * 100.0,
+        best.drifts.len(),
+    );
+    println!("\nfleet_throughput OK ({speedup:.3}x over round-robin)");
+}

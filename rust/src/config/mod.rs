@@ -33,6 +33,14 @@ pub struct Settings {
     pub tune_budget_ms: u64,
     /// Candidates promoted from predicted ranking to measurement.
     pub tune_top_k: usize,
+    /// Staleness: relative drift (percent) between a cached prediction
+    /// and measured latency beyond which the entry is re-validated.
+    pub tune_drift_pct: u64,
+    /// Staleness: cache entries untouched longer than this age out.
+    pub cache_max_age_s: u64,
+    /// Heterogeneous fleet spec (`mi200,mi200x0.5,mi100:60`); `None`
+    /// serves the classic single-device coordinator.
+    pub fleet: Option<String>,
 }
 
 impl Default for Settings {
@@ -50,6 +58,9 @@ impl Default for Settings {
             tune_on_miss: true,
             tune_budget_ms: 250,
             tune_top_k: 8,
+            tune_drift_pct: 50,
+            cache_max_age_s: 7 * 24 * 3600,
+            fleet: None,
         }
     }
 }
@@ -167,6 +178,23 @@ impl Settings {
                 self.tune_top_k =
                     val.as_usize().ok_or_else(|| bad("want usize"))?
             }
+            "tune_drift_pct" => {
+                self.tune_drift_pct = val
+                    .as_usize()
+                    .ok_or_else(|| bad("want non-negative integer"))?
+                    as u64
+            }
+            "cache_max_age_s" => {
+                self.cache_max_age_s = val
+                    .as_usize()
+                    .ok_or_else(|| bad("want non-negative integer"))?
+                    as u64
+            }
+            "fleet" => {
+                self.fleet = Some(
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
+                )
+            }
             other => {
                 return Err(ConfigError::Bad {
                     key: other.into(),
@@ -226,6 +254,17 @@ impl Settings {
         if let Some(v) = parse_usize("tune-top-k")? {
             self.tune_top_k = v;
         }
+        if let Some(v) = args.get("drift-pct") {
+            self.tune_drift_pct =
+                v.parse().map_err(|_| as_bad("drift-pct", v))?;
+        }
+        if let Some(v) = args.get("cache-max-age-s") {
+            self.cache_max_age_s =
+                v.parse().map_err(|_| as_bad("cache-max-age-s", v))?;
+        }
+        if let Some(v) = args.get("fleet") {
+            self.fleet = Some(v.to_string());
+        }
         self.validate()?;
         Ok(self)
     }
@@ -255,7 +294,38 @@ impl Settings {
         if self.tune_top_k == 0 {
             return bad("tune_top_k", "must be positive");
         }
+        if self.tune_drift_pct == 0 {
+            return bad("tune_drift_pct", "must be positive");
+        }
+        if self.cache_max_age_s == 0 {
+            return bad("cache_max_age_s", "must be positive");
+        }
+        if let Some(spec) = &self.fleet {
+            if let Err(e) = crate::gpu_sim::Device::parse_fleet_spec(spec) {
+                return bad("fleet", &e);
+            }
+        }
         Ok(())
+    }
+
+    /// The fleet devices this configuration asks for: the parsed
+    /// `fleet` spec, or the classic single device preset. Errors (not
+    /// panics) on a malformed spec — settings layered through
+    /// `apply_json`/`load_file` alone have not run [`Settings::validate`].
+    pub fn fleet_devices(
+        &self,
+    ) -> Result<Vec<crate::gpu_sim::Device>, ConfigError> {
+        use crate::gpu_sim::{Device, DeviceKind};
+        match &self.fleet {
+            Some(spec) => {
+                Device::parse_fleet_spec(spec).map_err(|msg| {
+                    ConfigError::Bad { key: "fleet".into(), msg }
+                })
+            }
+            None => Ok(vec![
+                Device::preset(DeviceKind::Mi200).with_cus(self.cus.min(120)),
+            ]),
+        }
     }
 }
 
@@ -317,6 +387,61 @@ mod tests {
         let v = json::parse(r#"{"tune_budget_ms": -1}"#).unwrap();
         assert!(s.apply_json(&v).is_err());
         assert_eq!(s.tune_budget_ms, Settings::default().tune_budget_ms);
+        // staleness knobs must be positive
+        let mut s = Settings::default();
+        s.tune_drift_pct = 0;
+        assert!(s.validate().is_err());
+        let mut s = Settings::default();
+        s.cache_max_age_s = 0;
+        assert!(s.validate().is_err());
+        // a malformed fleet spec is caught at validation time
+        let mut s = Settings::default();
+        s.fleet = Some("h100".into());
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_keys_layer_and_resolve_devices() {
+        let mut s = Settings::default();
+        assert_eq!(
+            s.fleet_devices().unwrap().len(),
+            1,
+            "default is single-device"
+        );
+        let v = json::parse(
+            r#"{"fleet": "mi200,mi200x0.5,mi100:60",
+                "tune_drift_pct": 25, "cache_max_age_s": 3600}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.tune_drift_pct, 25);
+        assert_eq!(s.cache_max_age_s, 3600);
+        s.validate().unwrap();
+        let devices = s.fleet_devices().unwrap();
+        assert_eq!(devices.len(), 3);
+        assert_eq!(devices[2].num_cus, 60);
+
+        // a bad spec that skipped validate() (apply_json-only layering)
+        // must error, not panic
+        let mut bad = Settings::default();
+        bad.apply_json(&json::parse(r#"{"fleet": "h100"}"#).unwrap())
+            .unwrap();
+        assert!(bad.fleet_devices().is_err());
+
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("fleet", None, ""))
+            .opt(Opt::value("drift-pct", None, ""));
+        let args = cmd
+            .parse(&[
+                "--fleet".into(),
+                "mi100,mi100".into(),
+                "--drift-pct".into(),
+                "75".into(),
+            ])
+            .unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.tune_drift_pct, 75);
+        assert_eq!(s.fleet_devices().unwrap().len(), 2);
     }
 
     #[test]

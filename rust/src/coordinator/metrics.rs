@@ -91,6 +91,13 @@ struct Inner {
     batched_rows: u64,
     tuner_hits: u64,
     tuner_misses: u64,
+    /// Fleet placements per device index (grown on demand).
+    placements: Vec<u64>,
+    /// Placements that took the least-loaded fallback (no prediction).
+    placement_fallbacks: u64,
+    /// Entries whose measured latency drifted past the staleness
+    /// policy and were sent back for re-tuning.
+    drift_revalidations: u64,
     queue: Histogram,
     execute: Histogram,
     e2e: Histogram,
@@ -113,6 +120,11 @@ pub struct MetricsSnapshot {
     pub tuner_misses: u64,
     /// Completed background tunes (count + duration distribution).
     pub tunes: u64,
+    /// Fleet placements per device index (empty until the first
+    /// placement lands).
+    pub placements: Vec<u64>,
+    pub placement_fallbacks: u64,
+    pub drift_revalidations: u64,
     pub queue: Histogram,
     pub execute: Histogram,
     pub e2e: Histogram,
@@ -164,6 +176,24 @@ impl Metrics {
         self.inner.lock().expect("metrics").tuner_misses += 1;
     }
 
+    /// A request was placed on fleet device `device`.
+    pub fn on_place(&self, device: usize, fallback: bool) {
+        let mut m = self.inner.lock().expect("metrics");
+        if m.placements.len() <= device {
+            m.placements.resize(device + 1, 0);
+        }
+        m.placements[device] += 1;
+        if fallback {
+            m.placement_fallbacks += 1;
+        }
+    }
+
+    /// A cache entry drifted past the staleness policy and was sent
+    /// back for background re-tuning.
+    pub fn on_drift_revalidate(&self) {
+        self.inner.lock().expect("metrics").drift_revalidations += 1;
+    }
+
     /// A background tune finished in `secs`.
     pub fn on_tune(&self, secs: f64) {
         self.inner.lock().expect("metrics").tune.record_secs(secs);
@@ -189,6 +219,9 @@ impl Metrics {
             tuner_hits: m.tuner_hits,
             tuner_misses: m.tuner_misses,
             tunes: m.tune.count(),
+            placements: m.placements.clone(),
+            placement_fallbacks: m.placement_fallbacks,
+            drift_revalidations: m.drift_revalidations,
             queue: m.queue.clone(),
             execute: m.execute.clone(),
             e2e: m.e2e.clone(),
@@ -220,6 +253,23 @@ impl MetricsSnapshot {
             ("tuner_hits", (self.tuner_hits as usize).into()),
             ("tuner_misses", (self.tuner_misses as usize).into()),
             ("tunes", (self.tunes as usize).into()),
+            (
+                "placements",
+                Value::Arr(
+                    self.placements
+                        .iter()
+                        .map(|&c| (c as usize).into())
+                        .collect(),
+                ),
+            ),
+            (
+                "placement_fallbacks",
+                (self.placement_fallbacks as usize).into(),
+            ),
+            (
+                "drift_revalidations",
+                (self.drift_revalidations as usize).into(),
+            ),
             ("elapsed_s", self.elapsed_s.into()),
             ("throughput_rps", self.throughput_rps.into()),
             ("tflops", self.tflops.into()),
@@ -280,6 +330,24 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.u("completed").unwrap(), 8);
         assert!(j.get("e2e").unwrap().get("p95_us").is_some());
+    }
+
+    #[test]
+    fn fleet_placement_counters() {
+        let m = Metrics::new();
+        m.on_place(2, false); // device index seen first grows the vec
+        m.on_place(0, false);
+        m.on_place(2, true);
+        m.on_drift_revalidate();
+        let s = m.snapshot();
+        assert_eq!(s.placements, vec![1, 0, 2]);
+        assert_eq!(s.placement_fallbacks, 1);
+        assert_eq!(s.drift_revalidations, 1);
+        let j = s.to_json();
+        let arr = j.get("placements").unwrap();
+        assert_eq!(arr.as_arr().unwrap().len(), 3);
+        assert_eq!(j.u("placement_fallbacks").unwrap(), 1);
+        assert_eq!(j.u("drift_revalidations").unwrap(), 1);
     }
 
     #[test]

@@ -1,20 +1,28 @@
 //! The serving coordinator — L3's request path.
 //!
 //! vLLM-router-shaped pipeline, with GEMM/MLP computations instead of
-//! LLM decoding:
+//! LLM decoding. Since the fleet refactor the coordinator serves N
+//! devices, not one:
 //!
 //! ```text
-//! client → [bounded queue] → router (shape→artifact, tuner-cache
-//!        consult) → dynamic batcher → worker pool → PJRT engine
-//!        → reply channels → metrics
-//!                                  ↘ tuner miss → background tune
+//! client → [bounded queue] → fleet scheduler (lowest Block2Time-
+//!        predicted completion; least-loaded fallback)
+//!        → router (shape→artifact, per-device tuner-cache consult,
+//!          nearest-CU build) → dynamic batcher (MLP) → worker pool
+//!        → engine[device]  ── one engine per fleet device
+//!        → reply channels → metrics (per-device placements)
+//!             ↘ measured latency → fleet.observe()
+//!                 ├ blends the cached prediction toward reality
+//!                 ├ tuner miss       → background tune (Miss)
+//!                 └ drift > policy   → background re-tune (Revalidate)
 //! ```
 //!
-//! Python never appears here: the engine executes AOT artifacts only.
-//! The per-shape tuner ([`crate::tuner`]) sits beside the router: a
+//! Python never appears here: the engines execute AOT artifacts only.
+//! Each fleet device owns a per-shape tuner ([`crate::tuner`]): a
 //! cache hit steers the routing policy, a miss falls back to defaults
 //! and schedules a background tune so the next request in that shape
-//! bucket is served tuned.
+//! bucket is served tuned — and the measured latency of every
+//! completion feeds the online Block2Time loop ([`crate::fleet`]).
 
 mod batcher;
 mod metrics;

@@ -80,6 +80,40 @@ impl Router {
         k: usize,
         pad_override: Option<&str>,
     ) -> Result<String, RouteError> {
+        self.route_gemm_chain(manifest, m, n, k, pad_override, None)
+    }
+
+    /// Fleet-aware routing: like [`Router::route_gemm_with`], but when
+    /// several artifacts serve the same routing key the one compiled
+    /// for the CU count nearest the placed device wins — a 60-CU
+    /// device should not launch a 120-CU grid when a closer build
+    /// exists. With one artifact per key this is exactly
+    /// [`Router::route_gemm_with`].
+    pub fn route_gemm_fleet(
+        &self,
+        manifest: &Manifest,
+        m: usize,
+        n: usize,
+        k: usize,
+        pad_override: Option<&str>,
+        device_cus: usize,
+    ) -> Result<String, RouteError> {
+        self.route_gemm_chain(manifest, m, n, k, pad_override, Some(device_cus))
+    }
+
+    /// The one fallback chain both GEMM routes share: exact
+    /// (algo, pad) → other pad policy → the `ref` oracle → error.
+    /// `device_cus` switches the per-key lookup between first-match
+    /// and nearest-CU selection.
+    fn route_gemm_chain(
+        &self,
+        manifest: &Manifest,
+        m: usize,
+        n: usize,
+        k: usize,
+        pad_override: Option<&str>,
+        device_cus: Option<usize>,
+    ) -> Result<String, RouteError> {
         let preferred = pad_override.unwrap_or(self.pad.as_str());
         let other_pad = if preferred == "none" { "physical" } else { "none" };
         for (algo, pad) in [
@@ -87,8 +121,12 @@ impl Router {
             (self.algo.as_str(), other_pad),
             ("ref", "none"),
         ] {
-            if let Some(a) = manifest.find_gemm(m, n, k, algo, pad, &self.dtype)
-            {
+            let found = match device_cus {
+                Some(cus) => manifest
+                    .find_gemm_for_cus(m, n, k, algo, pad, &self.dtype, cus),
+                None => manifest.find_gemm(m, n, k, algo, pad, &self.dtype),
+            };
+            if let Some(a) = found {
                 return Ok(a.name.clone());
             }
         }
@@ -175,6 +213,54 @@ mod tests {
         let name =
             r.route_gemm_with(&m, 960, 1024, 1024, Some("none")).unwrap();
         assert_eq!(name, "gemm_streamk_nopad_f32_960x1024x1024");
+    }
+
+    #[test]
+    fn fleet_route_prefers_nearest_cus_build() {
+        // Inline manifest with the same routing key at two CU counts.
+        let dir = std::env::temp_dir().join(format!(
+            "streamk-router-fleet-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{
+              "version": 2,
+              "artifacts": [
+                {"name": "gemm_streamk_nopad_f32_64x64x64_cu8",
+                 "file": "a.hlo.txt", "experiment": "t", "kind": "gemm",
+                 "flops": 524288,
+                 "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                             {"shape": [64, 64], "dtype": "f32"}],
+                 "outputs": [{"shape": [64, 64], "dtype": "f32"}],
+                 "m": 64, "n": 64, "k": 64, "algo": "streamk",
+                 "pad": "none", "dtype": "f32", "cus": 8},
+                {"name": "gemm_streamk_nopad_f32_64x64x64_cu120",
+                 "file": "b.hlo.txt", "experiment": "t", "kind": "gemm",
+                 "flops": 524288,
+                 "inputs": [{"shape": [64, 64], "dtype": "f32"},
+                             {"shape": [64, 64], "dtype": "f32"}],
+                 "outputs": [{"shape": [64, 64], "dtype": "f32"}],
+                 "m": 64, "n": 64, "k": 64, "algo": "streamk",
+                 "pad": "none", "dtype": "f32", "cus": 120}
+              ]
+            }"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let r = Router::new("streamk", "none", "f32");
+        assert_eq!(
+            r.route_gemm_fleet(&m, 64, 64, 64, None, 120).unwrap(),
+            "gemm_streamk_nopad_f32_64x64x64_cu120"
+        );
+        assert_eq!(
+            r.route_gemm_fleet(&m, 64, 64, 64, None, 16).unwrap(),
+            "gemm_streamk_nopad_f32_64x64x64_cu8"
+        );
+        // single-artifact keys behave exactly like route_gemm_with
+        assert!(r.route_gemm_fleet(&m, 7, 7, 7, None, 120).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,4 +1,13 @@
-//! The coordinator service: queue → route → (batch) → execute → reply.
+//! The coordinator service: queue → place (fleet) → route → (batch) →
+//! execute → observe → reply.
+//!
+//! Since the fleet refactor the coordinator no longer assumes a single
+//! engine: [`Coordinator::start_fleet`] takes one engine per fleet
+//! device, every GEMM/MLP is placed by the fleet scheduler (lowest
+//! Block2Time-predicted completion time), and each measured latency is
+//! folded back into the owning device's tuner cache — drift past the
+//! staleness policy schedules a background re-tune.
+//! [`Coordinator::start`] is the single-device special case.
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
@@ -9,16 +18,20 @@ use super::router::Router;
 use crate::config::Settings;
 use crate::decomp::GemmShape;
 use crate::exec::{bounded, CancelToken, Receiver, Sender, Stopwatch};
+use crate::fleet::Fleet;
 use crate::gpu_sim::{Device, DeviceKind};
 use crate::runtime::EngineHandle;
-use crate::tuner::{Budget, DeviceFingerprint, TuneOptions, Tuner};
+use crate::tuner::{
+    Budget, DeviceFingerprint, Observation, StalenessPolicy, TuneOptions,
+    Tuner,
+};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// In-memory LRU entries the serving tuner cache holds.
+/// In-memory LRU entries each device's serving tuner cache holds.
 const TUNER_CACHE_CAPACITY: usize = 256;
 /// Pending background tune requests beyond which misses are dropped
 /// (tuning is best-effort; the request path never waits on it).
@@ -31,6 +44,15 @@ enum Work {
     /// one per worker so teardown never depends on every cloned
     /// [`CoordinatorHandle`] being dropped first.
     Shutdown,
+}
+
+/// One background tuning job for a specific fleet device.
+enum TuneJob {
+    /// Cache miss: tune unless a queued duplicate already landed.
+    Miss { device: usize, shape: GemmShape },
+    /// Staleness: measured latency drifted past policy — re-tune even
+    /// though an entry exists.
+    Revalidate { device: usize, shape: GemmShape },
 }
 
 /// Client handle: submit requests, read metrics. Cloneable; the service
@@ -48,8 +70,8 @@ pub struct Coordinator {
     cancel: CancelToken,
     workers: Vec<JoinHandle<()>>,
     worker_count: usize,
-    tuner: Arc<Tuner>,
-    tune_tx: Option<Sender<GemmShape>>,
+    fleet: Arc<Fleet>,
+    tune_tx: Option<Sender<TuneJob>>,
     /// Tells the tuner thread to fast-drain (skip queued tunes) at
     /// shutdown — background tuning is speculative and must never
     /// extend process exit by queue-depth × budget.
@@ -58,42 +80,72 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the service over a warmed engine. `settings.workers` threads
-    /// consume the queue; GEMMs execute directly, MLP requests flow
-    /// through a per-worker dynamic batcher.
+    /// Start the service over one warmed engine — the single-device
+    /// fleet special case (device preset/CU count from `settings`).
     pub fn start(engine: EngineHandle, settings: &Settings) -> Self {
+        let dev = Device::preset(DeviceKind::Mi200)
+            .with_cus(settings.cus.min(120));
+        Self::start_fleet(vec![engine], vec![dev], settings)
+    }
+
+    /// Start the service over a heterogeneous fleet: one engine per
+    /// device. `settings.workers` threads consume the queue; GEMMs are
+    /// placed per request, MLP requests flow through one dynamic
+    /// batcher whose batches are placed as a unit.
+    pub fn start_fleet(
+        engines: Vec<EngineHandle>,
+        devices: Vec<Device>,
+        settings: &Settings,
+    ) -> Self {
+        assert!(!engines.is_empty(), "fleet needs at least one engine");
+        assert_eq!(
+            engines.len(),
+            devices.len(),
+            "one engine per fleet device"
+        );
         let (tx, rx) = bounded::<Work>(settings.queue_cap);
         let metrics = Arc::new(Metrics::new());
         let cancel = CancelToken::new();
         let router = Router::new(&settings.algo, &settings.pad_policy, "f32");
 
-        // Per-shape tuner: the router consults its cache on every GEMM;
-        // misses fall back to defaults and (when enabled) enqueue a
-        // background tune so the *next* request in that bucket hits.
-        let dev = Device::preset(DeviceKind::Mi200)
-            .with_cus(settings.cus.min(120));
+        // Per-device tuners under the fleet: the scheduler consults the
+        // caches on every GEMM; misses fall back to defaults and (when
+        // enabled) enqueue a background tune so the *next* request in
+        // that bucket hits; measured latencies feed the staleness loop.
         let opts = TuneOptions {
             top_k: settings.tune_top_k,
             budget: Budget::from_millis(settings.tune_budget_ms),
             bytes_per_elem: 4,
         };
-        let tuner = Arc::new(Tuner::new(dev, opts, TUNER_CACHE_CAPACITY));
+        let staleness = StalenessPolicy {
+            max_age_s: settings.cache_max_age_s,
+            max_drift: settings.tune_drift_pct as f64 / 100.0,
+            ..StalenessPolicy::default()
+        };
+        let fleet = Arc::new(Fleet::new(
+            devices,
+            opts,
+            staleness,
+            TUNER_CACHE_CAPACITY,
+        ));
         if let Some(path) = &settings.tuner_cache {
-            match tuner.load_cache(path) {
-                Ok(n) if n > 0 => {
-                    let usable = tuner.matching_entries();
+            match fleet.load_cache(path) {
+                Ok((usable, total)) if total > 0 => {
                     if usable == 0 {
                         eprintln!(
-                            "tuner: WARNING: {} holds {n} entries but none \
-                             match this device fingerprint ({}) — cache was \
-                             tuned for a different device/cus; serving will \
-                             re-tune from scratch",
+                            "tuner: WARNING: {} holds {total} entries but \
+                             none match any fleet device fingerprint \
+                             (e.g. {}) — cache was tuned for different \
+                             devices/cus; serving will re-tune from scratch",
                             path.display(),
-                            DeviceFingerprint::of(tuner.device()).as_str(),
+                            DeviceFingerprint::of(
+                                fleet.device(0).tuner.device()
+                            )
+                            .as_str(),
                         );
                     } else {
                         eprintln!(
-                            "tuner: warmed {usable}/{n} entries from {}",
+                            "tuner: warmed {usable}/{total} entries from {}",
                             path.display()
                         );
                     }
@@ -102,7 +154,7 @@ impl Coordinator {
                 Err(e) => eprintln!("tuner: starting cold ({e})"),
             }
         }
-        let (tune_tx, tune_rx) = bounded::<GemmShape>(TUNE_QUEUE_CAP);
+        let (tune_tx, tune_rx) = bounded::<TuneJob>(TUNE_QUEUE_CAP);
 
         // MLP requests are funneled to a single batching thread so
         // concurrent small requests coalesce; GEMM work fans out across
@@ -110,9 +162,10 @@ impl Coordinator {
         let (mlp_tx, mlp_rx) = bounded::<MlpRequest>(settings.queue_cap);
         let mut workers = Vec::new();
         {
-            let engine = engine.clone();
+            let engines = engines.clone();
             let metrics = metrics.clone();
             let router = router.clone();
+            let fleet = fleet.clone();
             let batcher = Batcher::new(
                 settings.max_batch,
                 Duration::from_micros(settings.batch_window_us),
@@ -121,23 +174,26 @@ impl Coordinator {
                 std::thread::Builder::new()
                     .name("streamk-mlp-batcher".into())
                     .spawn(move || {
-                        mlp_batch_loop(engine, metrics, router, batcher, mlp_rx)
+                        mlp_batch_loop(
+                            engines, metrics, router, fleet, batcher, mlp_rx,
+                        )
                     })
                     .expect("spawn batcher"),
             );
         }
-        // Background tune-on-miss worker: drains the miss queue, tunes
-        // each bucket once, and inserts into the shared cache. Exits
-        // when every sender (the workers + the coordinator) is gone.
+        // Background tune worker: drains miss/re-validate jobs, tunes
+        // on the owning device's tuner, and inserts into that device's
+        // cache. Exits when every sender (the workers + the
+        // coordinator) is gone.
         let tune_stop = CancelToken::new();
         if settings.tune_on_miss {
-            let tuner = tuner.clone();
+            let fleet = fleet.clone();
             let metrics = metrics.clone();
             let stop = tune_stop.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name("streamk-tuner".into())
-                    .spawn(move || tune_loop(tuner, metrics, tune_rx, stop))
+                    .spawn(move || tune_loop(fleet, metrics, tune_rx, stop))
                     .expect("spawn tuner"),
             );
         } else {
@@ -145,20 +201,20 @@ impl Coordinator {
         }
         for i in 0..settings.workers {
             let rx = rx.clone();
-            let engine = engine.clone();
+            let engines = engines.clone();
             let metrics = metrics.clone();
             let router = router.clone();
             let mlp_tx = mlp_tx.clone();
             let cancel = cancel.clone();
-            let tuner = tuner.clone();
+            let fleet = fleet.clone();
             let tune_tx = tune_tx.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("streamk-coord-{i}"))
                     .spawn(move || {
                         worker_loop(
-                            engine, metrics, router, rx, mlp_tx, cancel,
-                            tuner, tune_tx,
+                            engines, metrics, router, rx, mlp_tx, cancel,
+                            fleet, tune_tx,
                         )
                     })
                     .expect("spawn worker"),
@@ -175,16 +231,21 @@ impl Coordinator {
             cancel,
             workers,
             worker_count: settings.workers,
-            tuner,
+            fleet,
             tune_tx: Some(tune_tx),
             tune_stop,
             tuner_cache_path: settings.tuner_cache.clone(),
         }
     }
 
-    /// The shared tuner (observability / tests).
+    /// Device 0's tuner (single-device observability / tests).
     pub fn tuner(&self) -> &Arc<Tuner> {
-        &self.tuner
+        &self.fleet.device(0).tuner
+    }
+
+    /// The fleet behind this coordinator.
+    pub fn fleet(&self) -> &Arc<Fleet> {
+        &self.fleet
     }
 
     /// Graceful shutdown: drain queued work, then join all threads.
@@ -206,7 +267,7 @@ impl Coordinator {
             w.join().expect("coordinator worker panicked");
         }
         if let Some(path) = &self.tuner_cache_path {
-            if let Err(e) = self.tuner.store_cache(path) {
+            if let Err(e) = self.fleet.store_cache(path) {
                 eprintln!("tuner: cache not persisted: {e}");
             }
         }
@@ -284,14 +345,14 @@ impl CoordinatorHandle {
 
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
-    engine: EngineHandle,
+    engines: Vec<EngineHandle>,
     metrics: Arc<Metrics>,
     router: Router,
     rx: Receiver<Work>,
     mlp_tx: Sender<MlpRequest>,
     cancel: CancelToken,
-    tuner: Arc<Tuner>,
-    tune_tx: Sender<GemmShape>,
+    fleet: Arc<Fleet>,
+    tune_tx: Sender<TuneJob>,
 ) {
     while let Ok(work) = rx.recv() {
         if cancel.is_cancelled() {
@@ -301,7 +362,7 @@ fn worker_loop(
             Work::Gemm(req, enqueued) => {
                 let queue_s = enqueued.elapsed().as_secs_f64();
                 handle_gemm(
-                    &engine, &metrics, &router, &tuner, &tune_tx, req,
+                    &engines, &metrics, &router, &fleet, &tune_tx, req,
                     queue_s,
                 );
             }
@@ -317,20 +378,27 @@ fn worker_loop(
 }
 
 fn handle_gemm(
-    engine: &EngineHandle,
+    engines: &[EngineHandle],
     metrics: &Metrics,
     router: &Router,
-    tuner: &Arc<Tuner>,
-    tune_tx: &Sender<GemmShape>,
+    fleet: &Arc<Fleet>,
+    tune_tx: &Sender<TuneJob>,
     req: GemmRequest,
     queue_s: f64,
 ) {
     let GemmRequest { id, m, n, k, a, b, reply } = req;
-    // Consult the tuning cache for this shape's bucket. A hit steers
-    // routing (tuned pad policy first); a miss enqueues a background
-    // tune without ever blocking the request.
     let shape = GemmShape::new(m, n, k);
-    let tuned = if shape.is_degenerate() { None } else { tuner.lookup(shape) };
+    // Fleet placement: lowest Block2Time-predicted completion time
+    // given predicted work in flight; least-loaded fallback. Never
+    // blocks, never panics on poisoned predictions.
+    let placement = fleet.place_gemm(shape);
+    let device = placement.device;
+    let fdev = fleet.device(device);
+    metrics.on_place(device, placement.fallback);
+    // Consult the owning device's tuning cache for this shape's
+    // bucket. A hit steers routing (tuned pad policy first); a miss
+    // enqueues a background tune without ever blocking the request.
+    let tuned = if shape.is_degenerate() { None } else { fdev.tuner.lookup(shape) };
     let pad_override = match &tuned {
         Some(cfg) => {
             metrics.on_tuner_hit();
@@ -339,19 +407,38 @@ fn handle_gemm(
         None => {
             metrics.on_tuner_miss();
             if !shape.is_degenerate() {
-                let _ = tune_tx.try_send(shape); // best-effort; shed on full
+                // best-effort; shed on full
+                let _ = tune_tx.try_send(TuneJob::Miss { device, shape });
             }
             None
         }
     };
-    let routed =
-        router.route_gemm_with(engine.manifest(), m, n, k, pad_override);
+    let engine = &engines[device];
+    let routed = router.route_gemm_fleet(
+        engine.manifest(),
+        m,
+        n,
+        k,
+        pad_override,
+        fdev.device().num_cus,
+    );
     match routed {
         Ok(artifact) => {
             let sw = Stopwatch::start();
             match engine.run_f32(&artifact, vec![Arc::new(a), Arc::new(b)]) {
                 Ok((mut outs, stats)) => {
                     let execute_s = sw.elapsed_secs();
+                    fleet.complete(&placement);
+                    // Online Block2Time loop: fold the measured latency
+                    // into the owning device's cache; drift past policy
+                    // schedules a background re-tune.
+                    if let Observation::Drifted { .. } =
+                        fleet.observe(device, shape, execute_s)
+                    {
+                        metrics.on_drift_revalidate();
+                        let _ = tune_tx
+                            .try_send(TuneJob::Revalidate { device, shape });
+                    }
                     metrics.on_complete(queue_s, execute_s, stats.flops);
                     reply.send(GemmResponse {
                         id,
@@ -362,6 +449,7 @@ fn handle_gemm(
                     });
                 }
                 Err(e) => {
+                    fleet.complete(&placement);
                     metrics.on_fail();
                     reply.send(GemmResponse {
                         id,
@@ -374,6 +462,7 @@ fn handle_gemm(
             }
         }
         Err(e) => {
+            fleet.complete(&placement);
             metrics.on_fail();
             reply.send(GemmResponse {
                 id,
@@ -455,6 +544,8 @@ mod tests {
         let snap = coord.handle.metrics().snapshot();
         assert_eq!(snap.tuner_misses, 1);
         assert_eq!(snap.tuner_hits, 0);
+        // single-device fleet: everything placed on device 0
+        assert_eq!(snap.placements, vec![1]);
 
         // the background worker tunes the bucket; wait for it
         let sw = Stopwatch::start();
@@ -476,6 +567,8 @@ mod tests {
         assert_eq!(snap.tuner_hits, 1);
         assert!(snap.tunes >= 1);
         assert!(snap.tune.mean_us() > 0.0);
+        // the hit's measured latency was folded into the cache
+        assert!(coord.tuner().lookup(GemmShape::new(64, 64, 64)).is_some());
 
         // shutdown persists the cache...
         coord.shutdown();
@@ -523,6 +616,66 @@ mod tests {
         let snap = coord.handle.metrics().snapshot();
         assert_eq!(snap.tuner_misses, 1);
         assert_eq!(snap.tunes, 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fleet_places_on_the_predicted_fastest_engine() {
+        // Two engines over the same manifest behind a 2-device fleet
+        // where device 1 (MI200) is strictly faster than device 0
+        // (MI100). With one worker (no requests in flight at placement
+        // time), every GEMM must deterministically land on device 1 —
+        // the non-zero engine index, which also proves the multi-engine
+        // path actually routes off engine 0.
+        let (manifest, dir) = test_manifest("fleet");
+        let (engine_a, _ja) = spawn_engine(manifest.clone()).unwrap();
+        let (engine_b, _jb) = spawn_engine(manifest).unwrap();
+        let settings = Settings {
+            workers: 1,
+            tune_on_miss: false,
+            ..Settings::default()
+        };
+        let devices = vec![
+            Device::preset(DeviceKind::Mi100),
+            Device::preset(DeviceKind::Mi200),
+        ];
+        let coord = Coordinator::start_fleet(
+            vec![engine_a, engine_b],
+            devices,
+            &settings,
+        );
+
+        let requests = 12u64;
+        let waiters: Vec<_> = (0..requests)
+            .map(|_| {
+                coord.handle.submit_gemm(
+                    64,
+                    64,
+                    64,
+                    vec![1.0; 64 * 64],
+                    vec![1.0; 64 * 64],
+                )
+            })
+            .collect();
+        for w in waiters {
+            let resp = w.recv().unwrap();
+            let out = resp.result.expect("gemm ok");
+            assert!(out.iter().all(|&v| (v - 64.0).abs() < 1e-3));
+            assert_eq!(resp.artifact, "gemm_streamk_nopad_f32_64x64x64");
+        }
+        let snap = coord.handle.metrics().snapshot();
+        assert_eq!(snap.completed, requests);
+        assert_eq!(
+            snap.placements,
+            vec![0, requests],
+            "every placement goes to the faster device"
+        );
+        assert_eq!(snap.placement_fallbacks, 0);
+        // queue accounting drained
+        for i in 0..2 {
+            assert_eq!(coord.fleet().device(i).queue_depth(), 0);
+        }
         coord.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -576,25 +729,40 @@ pub fn mlp_params() -> &'static MlpParams {
     MLP_PARAMS.get_or_init(|| MlpParams::deterministic(256, 512, 256))
 }
 
-/// Background tune-on-miss worker: one tune per bucket, re-checked
-/// against the cache so a burst of misses for one bucket tunes once.
+/// Background tune worker, fleet-aware: a `Miss` tunes once per bucket
+/// per device (re-checked against that device's cache so a burst of
+/// misses tunes once); a `Revalidate` always re-tunes — the entry
+/// exists but its measurements drifted past the staleness policy.
 /// On `stop` it keeps draining the channel but skips the tuning work,
 /// so shutdown latency is bounded by at most one in-flight tune.
 fn tune_loop(
-    tuner: Arc<Tuner>,
+    fleet: Arc<Fleet>,
     metrics: Arc<Metrics>,
-    rx: Receiver<GemmShape>,
+    rx: Receiver<TuneJob>,
     stop: CancelToken,
 ) {
-    while let Ok(shape) = rx.recv() {
+    while let Ok(job) = rx.recv() {
         if stop.is_cancelled() {
             continue; // fast-drain: shutting down
         }
-        if tuner.lookup(shape).is_some() {
+        let (device, shape, revalidate) = match job {
+            TuneJob::Miss { device, shape } => (device, shape, false),
+            TuneJob::Revalidate { device, shape } => (device, shape, true),
+        };
+        let tuner = &fleet.device(device).tuner;
+        if !revalidate && tuner.lookup(shape).is_some() {
             continue; // raced: an earlier queued miss already tuned this
         }
         let sw = Stopwatch::start();
-        match tuner.tune_and_insert(shape) {
+        // Re-validation carries the serving observations over so the
+        // refreshed entry's prediction stays in measured-latency terms
+        // and the drift that triggered it does not immediately recur.
+        let result = if revalidate {
+            tuner.retune_keeping_observations(shape)
+        } else {
+            tuner.tune_and_insert(shape)
+        };
+        match result {
             Ok(_) => metrics.on_tune(sw.elapsed_secs()),
             Err(e) => eprintln!("tuner: {shape:?}: {e}"),
         }
@@ -602,9 +770,10 @@ fn tune_loop(
 }
 
 fn mlp_batch_loop(
-    engine: EngineHandle,
+    engines: Vec<EngineHandle>,
     metrics: Arc<Metrics>,
     router: Router,
+    fleet: Arc<Fleet>,
     mut batcher: Batcher,
     rx: Receiver<MlpRequest>,
 ) {
@@ -612,10 +781,25 @@ fn mlp_batch_loop(
     while let Some(plan) = batcher.next_batch(&rx) {
         let sw = Stopwatch::start();
         metrics.on_batch(plan.total_rows);
+        // Place the whole batch as one unit, priced as its equivalent
+        // GEMM: the two layers cost 2·rows·d_hidden·(d_in + d_out)
+        // FLOPs, which is exactly the GEMM
+        // (rows × d_hidden × (d_in+d_out)) — pricing only one layer
+        // would under-count in-flight work 2× at the default square
+        // 256×512×256 MLP and skew placement.
+        let eq_shape = GemmShape::new(
+            plan.total_rows.max(1),
+            params.d_hidden,
+            params.d_in + params.d_out,
+        );
+        let placement = fleet.place_gemm(eq_shape);
+        metrics.on_place(placement.device, placement.fallback);
+        let engine = &engines[placement.device];
         let routed = router.route_mlp(engine.manifest(), plan.total_rows);
         let (artifact, batch) = match routed {
             Ok(v) => v,
             Err(e) => {
+                fleet.complete(&placement);
                 for req in plan.requests {
                     metrics.on_fail();
                     req.reply.send(MlpResponse {
@@ -641,8 +825,13 @@ fn mlp_batch_loop(
             ],
         );
         let execute_s = sw.elapsed_secs();
+        fleet.complete(&placement);
         match run {
             Ok((outs, stats)) => {
+                // Feed the feedback loop; MLP buckets are rarely tuned,
+                // so this is usually a no-op (NoEntry). Revalidation is
+                // the GEMM path's job — the batcher stays simple.
+                let _ = fleet.observe(placement.device, eq_shape, execute_s);
                 let split = plan.unpack(&outs[0], params.d_out, &offsets);
                 for (req, y) in plan.requests.into_iter().zip(split) {
                     metrics.on_complete(0.0, execute_s, stats.flops);

@@ -1,0 +1,96 @@
+//! The online re-tuning feedback loop — measured serving latencies
+//! flow back into the owning device's tuner cache.
+//!
+//! This is the full Block2Time loop the ROADMAP asked for: offline
+//! `tune` seeds the per-device predictions, the scheduler spends them,
+//! and every *measured* completion refines them ([`Tuner::observe`]
+//! blends the cached prediction toward reality). The staleness policy
+//! rides along: entries whose measurements drift past the policy come
+//! back as [`Observation::Drifted`] so the caller can schedule a full
+//! re-tune, and entries nothing touches age out on the next sweep.
+
+use super::registry::Fleet;
+use crate::decomp::GemmShape;
+use crate::tuner::{Observation, SweepReport};
+
+impl Fleet {
+    /// Fold one measured request latency for `shape` into device
+    /// `idx`'s cache. Non-finite measurements are rejected inside
+    /// [`crate::tuner::Tuner::observe`]; a [`Observation::Drifted`]
+    /// return is the caller's cue to re-tune that bucket on that
+    /// device (the coordinator enqueues a background re-tune, the
+    /// simulator re-tunes inline).
+    pub fn observe(
+        &self,
+        idx: usize,
+        shape: GemmShape,
+        measured_s: f64,
+    ) -> Observation {
+        self.device(idx).tuner.observe(shape, measured_s)
+    }
+
+    /// Apply the staleness policy (age-out + drift flags) to every
+    /// device's cache; one report per device, in registry order.
+    pub fn sweep_stale(&self) -> Vec<SweepReport> {
+        self.devices().iter().map(|d| d.tuner.sweep_stale()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::{Device, DeviceKind};
+    use crate::tuner::TuneOptions;
+
+    fn fleet() -> Fleet {
+        Fleet::from_devices(
+            vec![
+                Device::preset(DeviceKind::Mi200),
+                Device::preset(DeviceKind::Mi100),
+            ],
+            TuneOptions::default(),
+        )
+    }
+
+    #[test]
+    fn observation_lands_in_the_owning_device_only() {
+        let f = fleet();
+        let shape = GemmShape::new(480, 512, 512);
+        f.device(0).tuner.tune_and_insert(shape).unwrap();
+        f.device(1).tuner.tune_and_insert(shape).unwrap();
+        let before_other = f.device(1).tuner.lookup(shape).unwrap();
+
+        let real = f.device(0).tuner.lookup(shape).unwrap().predicted_s * 1.3;
+        assert!(matches!(
+            f.observe(0, shape, real),
+            Observation::Updated { .. }
+        ));
+        let owner = f.device(0).tuner.lookup(shape).unwrap();
+        assert_eq!(owner.observed_n, 1);
+        let other = f.device(1).tuner.lookup(shape).unwrap();
+        assert_eq!(other.observed_n, 0);
+        assert_eq!(other.predicted_s, before_other.predicted_s);
+    }
+
+    #[test]
+    fn observe_without_entry_is_a_no_op() {
+        let f = fleet();
+        assert_eq!(
+            f.observe(1, GemmShape::new(480, 512, 512), 1e-3),
+            Observation::NoEntry
+        );
+    }
+
+    #[test]
+    fn sweep_reports_per_device() {
+        let f = fleet();
+        f.device(0)
+            .tuner
+            .tune_and_insert(GemmShape::new(480, 512, 512))
+            .unwrap();
+        let reports = f.sweep_stale();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].fresh, 1);
+        assert_eq!(reports[1].fresh, 0);
+    }
+}

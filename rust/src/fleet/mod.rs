@@ -1,0 +1,52 @@
+//! Heterogeneous fleet — multi-device scheduling between the
+//! coordinator and the per-device engines.
+//!
+//! The paper frames the Stream-K decomposition as hardware-dependent
+//! and names Block2Time's promise as "enhancing runtime predictions and
+//! optimizing load balancing … across multiple and various hardware
+//! configurations". PR 1 closed that loop *offline* for one device;
+//! this subsystem closes it *online* across a fleet:
+//!
+//! ```text
+//!                 ┌────────────────── fleet ──────────────────┐
+//! client → queue →│ scheduler: argmin_d (in-flight_d + pred_d)│
+//!                 │   pred_d = per-device tuner cache         │
+//!                 │            (Block2Time, refined online)   │
+//!                 │            → roofline prior → least-loaded│
+//!                 └─────┬──────────────┬──────────────┬───────┘
+//!                   device 0       device 1  …    device N-1
+//!                   (engine +      (engine +       (engine +
+//!                    tuner cache)   tuner cache)    tuner cache)
+//!                       └──── measured latency ──────┘
+//!                              ↓ observe()
+//!                   blend prediction toward reality;
+//!                   drift > policy → background re-tune;
+//!                   untouched entries age out
+//! ```
+//!
+//! - [`registry`] — the device registry: N simulated devices with
+//!   distinct fingerprints (CU count, per-CU speed, HBM bandwidth — the
+//!   `gpu_sim` heterogeneity hooks), each owning its own
+//!   [`crate::tuner::Tuner`] cache;
+//! - [`scheduler`] — cost-aware placement: lowest Block2Time-predicted
+//!   completion time given current per-device predicted work-in-flight,
+//!   falling back to least-loaded when no prediction exists; poisoned
+//!   (NaN/∞) predictions are quarantined, never crash placement;
+//! - [`feedback`] — the online re-tuning loop: measured request
+//!   latencies fold back into the owning device's cache
+//!   ([`crate::tuner::Tuner::observe`]), with staleness handling
+//!   (drift → re-validate, untouched → age out);
+//! - [`sim`] — deterministic fleet traffic simulation shared by
+//!   `streamk fleet` and `cargo bench --bench fleet_throughput`
+//!   (Block2Time-guided placement vs round-robin on a skewed mix).
+
+pub mod feedback;
+pub mod registry;
+pub mod scheduler;
+pub mod sim;
+
+pub use registry::{demo_fleet_devices, Fleet, FleetDevice};
+pub use scheduler::Placement;
+pub use sim::{
+    gen_trace, run_trace, warm, PlacementPolicy, ShapeMix, SimReport,
+};

@@ -1,0 +1,226 @@
+//! The device registry: who is in the fleet, and each member's
+//! per-device tuner cache.
+//!
+//! Every registered device gets its own [`Tuner`] (and therefore its
+//! own [`crate::tuner::DeviceFingerprint`]-keyed cache slice): a config
+//! tuned for the 120-CU MI200 must never steer the binned 60-CU MI100,
+//! which is exactly the multi-device gap the PR-1 ROADMAP named. All
+//! per-device caches persist into *one* file — entries carry the
+//! fingerprint in their key, so a merged file warm-loads correctly on
+//! any fleet member.
+
+use crate::gpu_sim::{Device, DeviceKind};
+use crate::tuner::{
+    CacheError, StalenessPolicy, TuneOptions, Tuner, TuningCache,
+};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Scheduler bookkeeping for one device (see `scheduler.rs`).
+#[derive(Debug, Default)]
+pub(super) struct QueueState {
+    /// Predicted seconds of placed-but-not-completed work.
+    pub in_flight_s: f64,
+    /// Placed-but-not-completed request count (the least-loaded
+    /// fallback's load signal — robust even when predictions are
+    /// unavailable or poisoned).
+    pub depth: usize,
+}
+
+/// One fleet member: a simulated device plus its private tuner cache
+/// and scheduler queue state.
+pub struct FleetDevice {
+    pub id: usize,
+    /// Display name (`mi200#0`); the cache key uses the fingerprint,
+    /// not this.
+    pub name: String,
+    pub tuner: Arc<Tuner>,
+    pub(super) queue: Mutex<QueueState>,
+}
+
+impl FleetDevice {
+    pub fn device(&self) -> &Device {
+        self.tuner.device()
+    }
+
+    /// Predicted seconds of work currently placed on this device.
+    pub fn in_flight_s(&self) -> f64 {
+        self.queue.lock().expect("fleet queue").in_flight_s
+    }
+
+    /// Requests currently placed on this device.
+    pub fn queue_depth(&self) -> usize {
+        self.queue.lock().expect("fleet queue").depth
+    }
+}
+
+/// The fleet: device registry + (via `scheduler`/`feedback` impls)
+/// placement and the online re-tuning loop.
+pub struct Fleet {
+    devices: Vec<FleetDevice>,
+    bytes_per_elem: usize,
+}
+
+impl Fleet {
+    /// Register `devices` as the fleet, each with its own tuner cache
+    /// of `cache_capacity` entries under the given staleness policy.
+    pub fn new(
+        devices: Vec<Device>,
+        opts: TuneOptions,
+        staleness: StalenessPolicy,
+        cache_capacity: usize,
+    ) -> Self {
+        assert!(!devices.is_empty(), "a fleet needs at least one device");
+        let devices = devices
+            .into_iter()
+            .enumerate()
+            .map(|(id, dev)| {
+                let name = format!("{}#{id}", dev.name);
+                FleetDevice {
+                    id,
+                    name,
+                    tuner: Arc::new(
+                        Tuner::new(dev, opts, cache_capacity)
+                            .with_staleness(staleness),
+                    ),
+                    queue: Mutex::new(QueueState::default()),
+                }
+            })
+            .collect();
+        Self { devices, bytes_per_elem: opts.bytes_per_elem }
+    }
+
+    /// Convenience constructor with the default staleness policy.
+    pub fn from_devices(devices: Vec<Device>, opts: TuneOptions) -> Self {
+        Self::new(devices, opts, StalenessPolicy::default(), 256)
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn device(&self, idx: usize) -> &FleetDevice {
+        &self.devices[idx]
+    }
+
+    pub fn devices(&self) -> &[FleetDevice] {
+        &self.devices
+    }
+
+    pub fn bytes_per_elem(&self) -> usize {
+        self.bytes_per_elem
+    }
+
+    /// Warm every device's cache from one merged file. Each tuner loads
+    /// the full file and serves only the entries matching its own
+    /// fingerprint. Returns (usable entries across the fleet, total
+    /// entries in the file).
+    pub fn load_cache(&self, path: &Path) -> Result<(usize, usize), CacheError> {
+        let mut usable = 0;
+        let mut total = 0;
+        for d in &self.devices {
+            total = d.tuner.load_cache(path)?;
+            usable += d.tuner.matching_entries();
+        }
+        Ok((usable, total))
+    }
+
+    /// Persist every device's cache into one merged file. Devices that
+    /// share a fingerprint (identical hardware) share entries; the
+    /// lower-id device's copy wins, which is fine — same hardware,
+    /// interchangeable configs.
+    pub fn store_cache(&self, path: &Path) -> Result<(), CacheError> {
+        let capacity = self
+            .devices
+            .iter()
+            .map(|d| d.tuner.len())
+            .sum::<usize>()
+            .max(1);
+        let mut merged = TuningCache::new(capacity);
+        for d in &self.devices {
+            merged.absorb(&d.tuner.cache_snapshot());
+        }
+        merged.store(path)
+    }
+}
+
+/// The 4-device heterogeneous demo fleet used by `streamk fleet` and
+/// the `fleet_throughput` bench: a full MI200, a power-binned MI200 at
+/// half throughput, a full MI100, and a 60-CU MI100 — four distinct
+/// fingerprints spanning a ~4× speed range.
+pub fn demo_fleet_devices() -> Vec<Device> {
+    vec![
+        Device::preset(DeviceKind::Mi200),
+        Device::preset(DeviceKind::Mi200)
+            .with_flops_scale(0.5)
+            .renamed("mi200b"),
+        Device::preset(DeviceKind::Mi100),
+        Device::preset(DeviceKind::Mi100).with_cus(60).renamed("mi100h"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::GemmShape;
+    use crate::tuner::DeviceFingerprint;
+
+    fn fleet() -> Fleet {
+        Fleet::from_devices(demo_fleet_devices(), TuneOptions::default())
+    }
+
+    #[test]
+    fn demo_fleet_has_distinct_fingerprints() {
+        let f = fleet();
+        assert_eq!(f.len(), 4);
+        let mut prints: Vec<String> = f
+            .devices()
+            .iter()
+            .map(|d| DeviceFingerprint::of(d.device()).as_str().to_string())
+            .collect();
+        prints.sort();
+        prints.dedup();
+        assert_eq!(prints.len(), 4, "fingerprints must be distinct");
+    }
+
+    #[test]
+    fn per_device_caches_are_isolated() {
+        let f = fleet();
+        let shape = GemmShape::new(480, 512, 512);
+        f.device(0).tuner.tune_and_insert(shape).unwrap();
+        assert!(f.device(0).tuner.lookup(shape).is_some());
+        for idx in 1..f.len() {
+            assert!(
+                f.device(idx).tuner.lookup(shape).is_none(),
+                "device {idx} must not see device 0's entries"
+            );
+        }
+    }
+
+    #[test]
+    fn merged_cache_round_trips_across_the_fleet() {
+        let f = fleet();
+        let shape = GemmShape::new(480, 512, 512);
+        // two devices tune the same bucket: entries differ per device
+        f.device(0).tuner.tune_and_insert(shape).unwrap();
+        f.device(2).tuner.tune_and_insert(shape).unwrap();
+        let path = std::env::temp_dir().join(format!(
+            "streamk-fleet-cache-{}.json",
+            std::process::id()
+        ));
+        f.store_cache(&path).unwrap();
+
+        let fresh = fleet();
+        let (usable, total) = fresh.load_cache(&path).unwrap();
+        assert_eq!(total, 2);
+        assert_eq!(usable, 2);
+        assert!(fresh.device(0).tuner.lookup(shape).is_some());
+        assert!(fresh.device(1).tuner.lookup(shape).is_none());
+        assert!(fresh.device(2).tuner.lookup(shape).is_some());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -1,0 +1,293 @@
+//! Cost-aware placement: which device should run this request?
+//!
+//! Completion estimate per device = predicted work already in flight
+//! there + the Block2Time-predicted execution time of this request on
+//! that device. The execution prediction comes, in order, from:
+//!
+//! 1. the device's tuner cache (offline-tuned, *refined online* by the
+//!    feedback loop — the freshest signal);
+//! 2. a roofline prior (`max(flops/peak, bytes/bw) + launch overhead`)
+//!    when the bucket was never tuned on that device — a cold device
+//!    still competes instead of starving;
+//! 3. nothing — when even the prior is unusable (degenerate shape),
+//!    placement falls back to least-loaded by queue depth.
+//!
+//! Poisoned numbers never propagate: a NaN/∞ cached prediction is
+//! skipped in favor of the prior, a non-finite score disqualifies the
+//! candidate, and non-finite in-flight accounting self-heals to zero.
+
+use super::registry::Fleet;
+use crate::decomp::GemmShape;
+use crate::gpu_sim::Device;
+
+/// One placement decision. Hand it back to [`Fleet::complete`] when the
+/// request finishes so the in-flight accounting drains.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Placement {
+    pub device: usize,
+    /// The execution-time prediction the decision was based on
+    /// (`None` on the least-loaded fallback path).
+    pub predicted_s: Option<f64>,
+    /// True when no device had a usable prediction and the scheduler
+    /// fell back to least-loaded.
+    pub fallback: bool,
+}
+
+/// Roofline prior: the two-resource bound the simulator itself obeys.
+fn roofline(dev: &Device, shape: GemmShape, bpe: usize) -> Option<f64> {
+    if shape.is_degenerate() {
+        return None;
+    }
+    let flops = shape.flops() as f64;
+    let bytes =
+        ((shape.m * shape.k + shape.k * shape.n + shape.m * shape.n) * bpe)
+            as f64;
+    let t = (flops / dev.peak_flops()).max(bytes / dev.hbm_bw)
+        + dev.launch_overhead;
+    (t.is_finite() && t > 0.0).then_some(t)
+}
+
+impl Fleet {
+    /// Block2Time-predicted execution seconds of `shape` on device
+    /// `idx`: cached (online-refined) prediction when present and
+    /// finite, roofline prior otherwise, `None` when neither is usable.
+    pub fn predict_exec(&self, idx: usize, shape: GemmShape) -> Option<f64> {
+        if shape.is_degenerate() {
+            return None;
+        }
+        let d = self.device(idx);
+        // peek, not lookup: pricing a shape on every device must not
+        // mark entries as "in use" on devices that never serve it
+        // (that would defeat the age-out half of the staleness policy)
+        if let Some(cfg) = d.tuner.peek(shape) {
+            if cfg.predicted_s.is_finite() && cfg.predicted_s > 0.0 {
+                return Some(cfg.predicted_s);
+            }
+            // poisoned entry: quarantine, fall through to the prior
+        }
+        roofline(d.device(), shape, self.bytes_per_elem())
+    }
+
+    /// Place one GEMM: lowest predicted completion time, least-loaded
+    /// fallback. Always returns a valid device index; never panics on
+    /// poisoned predictions.
+    pub fn place_gemm(&self, shape: GemmShape) -> Placement {
+        let mut best: Option<(f64, usize, f64)> = None; // (score, idx, pred)
+        for idx in 0..self.len() {
+            let Some(pred) = self.predict_exec(idx, shape) else {
+                continue;
+            };
+            let score = self.device(idx).in_flight_s() + pred;
+            if !score.is_finite() {
+                continue;
+            }
+            let better = match &best {
+                Some((s, _, _)) => score < *s,
+                None => true,
+            };
+            if better {
+                best = Some((score, idx, pred));
+            }
+        }
+        let placement = match best {
+            Some((_, idx, pred)) => {
+                Placement { device: idx, predicted_s: Some(pred), fallback: false }
+            }
+            None => Placement {
+                device: self.least_loaded(),
+                predicted_s: None,
+                fallback: true,
+            },
+        };
+        let mut q = self
+            .device(placement.device)
+            .queue
+            .lock()
+            .expect("fleet queue");
+        q.depth += 1;
+        if let Some(pred) = placement.predicted_s {
+            q.in_flight_s += pred;
+        }
+        if !q.in_flight_s.is_finite() {
+            q.in_flight_s = 0.0; // self-heal poisoned accounting
+        }
+        placement
+    }
+
+    /// Drain one placement's contribution to the queue accounting.
+    pub fn complete(&self, placement: &Placement) {
+        let mut q = self
+            .device(placement.device)
+            .queue
+            .lock()
+            .expect("fleet queue");
+        q.depth = q.depth.saturating_sub(1);
+        if let Some(pred) = placement.predicted_s {
+            q.in_flight_s -= pred;
+        }
+        if !(q.in_flight_s.is_finite() && q.in_flight_s > 0.0) {
+            q.in_flight_s = 0.0;
+        }
+        if q.depth == 0 {
+            // no outstanding work: cancel accumulated rounding residue
+            q.in_flight_s = 0.0;
+        }
+    }
+
+    /// The least-loaded device: fewest outstanding requests, ties by
+    /// predicted in-flight seconds (non-finite treated as saturated),
+    /// then by index for determinism.
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_key = (usize::MAX, f64::INFINITY);
+        for (idx, d) in self.devices().iter().enumerate() {
+            let q = d.queue.lock().expect("fleet queue");
+            let inflight =
+                if q.in_flight_s.is_finite() { q.in_flight_s } else { f64::INFINITY };
+            let key = (q.depth, inflight);
+            if key.0 < best_key.0
+                || (key.0 == best_key.0 && key.1 < best_key.1)
+            {
+                best_key = key;
+                best = idx;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::Fleet;
+    use crate::gpu_sim::{Device, DeviceKind};
+    use crate::prop;
+    use crate::tuner::TuneOptions;
+
+    fn two_device_fleet(speed_ratio: f64) -> Fleet {
+        Fleet::from_devices(
+            vec![
+                Device::preset(DeviceKind::Mi200)
+                    .with_flops_scale(speed_ratio)
+                    .renamed("fast"),
+                Device::preset(DeviceKind::Mi200),
+            ],
+            TuneOptions::default(),
+        )
+    }
+
+    #[test]
+    fn twice_as_fast_device_gets_about_twice_the_work() {
+        // Property: under uniform traffic of a compute-bound shape, a
+        // 2× device should end up with ~2× the placements — the greedy
+        // completion-time rule equalizes predicted finish times.
+        prop::check("2x device gets ~2x work", 10, |rng| {
+            let fleet = two_device_fleet(2.0);
+            let m = rng.usize_in(1500, 2500);
+            let shape = GemmShape::new(m, 2048, 2048);
+            let mut counts = [0usize; 2];
+            let mut placements = Vec::new();
+            for _ in 0..300 {
+                let p = fleet.place_gemm(shape);
+                counts[p.device] += 1;
+                placements.push(p);
+            }
+            for p in &placements {
+                fleet.complete(p);
+            }
+            let ratio = counts[0] as f64 / counts[1].max(1) as f64;
+            prop::ensure(
+                (1.6..=2.4).contains(&ratio),
+                format!("placement ratio {ratio} ({counts:?})"),
+            )
+        });
+    }
+
+    #[test]
+    fn equal_devices_split_evenly() {
+        let fleet = two_device_fleet(1.0);
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let mut counts = [0usize; 2];
+        for _ in 0..100 {
+            counts[fleet.place_gemm(shape).device] += 1;
+        }
+        assert!(
+            counts[0].abs_diff(counts[1]) <= 2,
+            "near-even split expected: {counts:?}"
+        );
+    }
+
+    #[test]
+    fn poisoned_cached_prediction_never_crashes_or_starves_placement() {
+        let fleet = two_device_fleet(1.0);
+        let shape = GemmShape::new(512, 512, 512);
+        // Poison device 0's cache entry for this bucket with NaN / ∞.
+        let report = fleet.device(0).tuner.tune_and_insert(shape).unwrap();
+        for poison in [f64::NAN, f64::INFINITY, -1.0] {
+            let mut bad = report.best;
+            bad.predicted_s = poison;
+            fleet.device(0).tuner.insert_config(shape, bad);
+            let mut counts = [0usize; 2];
+            let mut placements = Vec::new();
+            for _ in 0..50 {
+                let p = fleet.place_gemm(shape);
+                assert!(p.device < fleet.len());
+                counts[p.device] += 1;
+                placements.push(p);
+            }
+            for p in &placements {
+                fleet.complete(p);
+            }
+            // the poisoned device falls back to its roofline prior and
+            // still takes a fair share — no blackhole, no starvation
+            assert!(counts[0] > 5 && counts[1] > 5, "{poison}: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shape_falls_back_to_least_loaded() {
+        let fleet = two_device_fleet(1.0);
+        // load device 0 with one outstanding request
+        let busy = fleet.place_gemm(GemmShape::new(1024, 1024, 1024));
+        assert_eq!(busy.device, 0, "first placement is deterministic");
+        let p = fleet.place_gemm(GemmShape::new(0, 4, 4));
+        assert!(p.fallback);
+        assert_eq!(p.predicted_s, None);
+        assert_eq!(p.device, 1, "least-loaded device takes the fallback");
+        fleet.complete(&busy);
+        fleet.complete(&p);
+        assert_eq!(fleet.device(0).queue_depth(), 0);
+        assert!(fleet.device(0).in_flight_s() == 0.0);
+    }
+
+    #[test]
+    fn cached_prediction_beats_roofline_prior_when_present() {
+        let fleet = two_device_fleet(1.0);
+        let shape = GemmShape::new(1920, 2000, 2000);
+        fleet.device(0).tuner.tune_and_insert(shape).unwrap();
+        let cached = fleet.predict_exec(0, shape).unwrap();
+        let prior = fleet.predict_exec(1, shape).unwrap();
+        let exact =
+            fleet.device(0).tuner.lookup(shape).unwrap().predicted_s;
+        assert_eq!(cached, exact, "cache entry must drive the estimate");
+        assert!(prior > 0.0 && prior.is_finite());
+    }
+
+    #[test]
+    fn completion_drains_accounting() {
+        let fleet = two_device_fleet(1.0);
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let ps: Vec<Placement> =
+            (0..10).map(|_| fleet.place_gemm(shape)).collect();
+        let depth: usize =
+            (0..2).map(|i| fleet.device(i).queue_depth()).sum();
+        assert_eq!(depth, 10);
+        for p in &ps {
+            fleet.complete(p);
+        }
+        for i in 0..2 {
+            assert_eq!(fleet.device(i).queue_depth(), 0);
+            assert_eq!(fleet.device(i).in_flight_s(), 0.0);
+        }
+    }
+}

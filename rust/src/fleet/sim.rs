@@ -1,0 +1,340 @@
+//! Deterministic fleet traffic simulation — the harness behind
+//! `streamk fleet` and `cargo bench --bench fleet_throughput`.
+//!
+//! A trace of GEMM requests (skewed shape mix, seeded) is placed on the
+//! fleet under a policy (Block2Time-guided vs round-robin), each
+//! request's execution time is *measured* on the owning simulated
+//! device ([`crate::tuner::measure`], using that device's tuned config
+//! when cached), and — when feedback is on — folded back through the
+//! online re-tuning loop. The report captures everything the bench
+//! tables and acceptance checks need: makespan, per-device load, and
+//! the per-entry predicted-vs-measured drift series that demonstrates
+//! the loop tightening.
+
+use super::registry::Fleet;
+use super::scheduler::Placement;
+use crate::decomp::params::KernelParams;
+use crate::decomp::{BlockShape, GemmShape};
+use crate::prop::Rng;
+use crate::tuner::{measure, Candidate, Observation, PadPolicy, ShapeBucket};
+use std::collections::BTreeMap;
+
+/// Weighted GEMM shape classes — the request-size mix.
+#[derive(Debug, Clone)]
+pub struct ShapeMix(pub Vec<(GemmShape, f64)>);
+
+impl ShapeMix {
+    /// The skewed serving mix: mostly small/medium shapes, a heavy
+    /// tail of large ones. None sits on its pow2 bucket representative,
+    /// so cached predictions start visibly off and the feedback loop
+    /// has real drift to close.
+    pub fn skewed_default() -> Self {
+        ShapeMix(vec![
+            (GemmShape::new(480, 512, 512), 0.45),
+            (GemmShape::new(1920, 2000, 2000), 0.30),
+            (GemmShape::new(960, 1024, 1024), 0.15),
+            (GemmShape::new(3840, 4096, 4096), 0.10),
+        ])
+    }
+
+    /// The distinct shapes in the mix (cache-warming targets).
+    pub fn shapes(&self) -> Vec<GemmShape> {
+        self.0.iter().map(|&(s, _)| s).collect()
+    }
+
+    fn sample(&self, rng: &mut Rng) -> GemmShape {
+        let total: f64 = self.0.iter().map(|(_, w)| w).sum();
+        let mut u = rng.f64_unit() * total;
+        for &(shape, w) in &self.0 {
+            if u < w {
+                return shape;
+            }
+            u -= w;
+        }
+        self.0.last().expect("non-empty mix").0
+    }
+}
+
+/// Generate a deterministic trace of `n` requests from the mix.
+pub fn gen_trace(seed: u64, n: usize, mix: &ShapeMix) -> Vec<GemmShape> {
+    assert!(!mix.0.is_empty(), "empty shape mix");
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| mix.sample(&mut rng)).collect()
+}
+
+/// How requests are assigned to devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// The fleet scheduler: lowest Block2Time-predicted completion.
+    Block2Time,
+    /// The baseline: device `i % N` for request `i`.
+    RoundRobin,
+}
+
+/// Drift of one cache entry over the run: the relative gap between the
+/// cached prediction and each successive measurement on that device.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftSeries {
+    pub device: usize,
+    pub bucket: String,
+    pub drifts: Vec<f64>,
+}
+
+/// Everything one simulated traffic run produced.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub policy: PlacementPolicy,
+    pub requests: usize,
+    /// Completion time of the most-loaded device (closed-loop burst).
+    pub makespan_s: f64,
+    pub total_flops: f64,
+    pub tflops: f64,
+    pub device_busy_s: Vec<f64>,
+    pub device_requests: Vec<u64>,
+    /// Placements that took the least-loaded fallback path.
+    pub fallback_placements: u64,
+    /// Buckets re-tuned because observations drifted past policy.
+    pub revalidations: u64,
+    /// Per-(device, bucket) drift trajectories (feedback runs only).
+    pub drift: Vec<DriftSeries>,
+}
+
+impl SimReport {
+    /// Fleet throughput in TFLOP/s at the makespan.
+    pub fn throughput_tflops(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.total_flops / self.makespan_s / 1e12
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Warm every device's cache for every distinct bucket in `shapes`.
+/// Returns the number of tunes performed.
+pub fn warm(fleet: &Fleet, shapes: &[GemmShape]) -> usize {
+    let mut tuned = 0;
+    for d in fleet.devices() {
+        let mut seen = Vec::new();
+        for &shape in shapes {
+            let bucket = ShapeBucket::of(shape);
+            if seen.contains(&bucket) {
+                continue;
+            }
+            seen.push(bucket);
+            if d.tuner.tune_and_insert(shape).is_ok() {
+                tuned += 1;
+            }
+        }
+    }
+    tuned
+}
+
+/// Run one closed-loop trace (a burst: every request outstanding at
+/// once) under `policy`. Execution times are measured per request on
+/// the placed device's simulator; with `feedback` on, each measurement
+/// is folded back into the owning cache and drift-flagged buckets are
+/// re-tuned inline.
+pub fn run_trace(
+    fleet: &Fleet,
+    trace: &[GemmShape],
+    policy: PlacementPolicy,
+    feedback: bool,
+) -> SimReport {
+    let n = fleet.len();
+    let mut busy = vec![0.0f64; n];
+    let mut counts = vec![0u64; n];
+    let mut total_flops = 0.0f64;
+    let mut fallbacks = 0u64;
+    let mut revalidations = 0u64;
+    let mut drift_map: BTreeMap<(usize, String), Vec<f64>> = BTreeMap::new();
+    let mut placements: Vec<Placement> = Vec::with_capacity(trace.len());
+
+    for (i, &shape) in trace.iter().enumerate() {
+        let placement = match policy {
+            PlacementPolicy::Block2Time => fleet.place_gemm(shape),
+            PlacementPolicy::RoundRobin => Placement {
+                device: i % n,
+                predicted_s: None,
+                fallback: false,
+            },
+        };
+        if placement.fallback {
+            fallbacks += 1;
+        }
+        let idx = placement.device;
+        let fdev = fleet.device(idx);
+        // Execute with the device's tuned config when cached, else the
+        // one-config-per-precision default — same rule for both
+        // policies, so the comparison isolates *placement*.
+        let cand = match fdev.tuner.lookup(shape) {
+            Some(cfg) => Candidate {
+                params: cfg.params,
+                pad: cfg.pad,
+                cus: cfg.cus,
+            },
+            None => Candidate {
+                params: KernelParams::new(
+                    BlockShape::default(),
+                    fleet.bytes_per_elem(),
+                ),
+                pad: PadPolicy::None,
+                cus: fdev.device().num_cus,
+            },
+        };
+        if policy == PlacementPolicy::Block2Time {
+            placements.push(placement);
+        }
+        let Some(exec_s) = measure(fdev.device(), shape, &cand) else {
+            continue; // unbuildable schedule: request dropped
+        };
+        busy[idx] += exec_s;
+        counts[idx] += 1;
+        total_flops += shape.flops() as f64;
+
+        if feedback {
+            match fleet.observe(idx, shape, exec_s) {
+                Observation::Updated { drift } => {
+                    drift_map
+                        .entry((idx, ShapeBucket::of(shape).key()))
+                        .or_default()
+                        .push(drift);
+                }
+                Observation::Drifted { drift } => {
+                    drift_map
+                        .entry((idx, ShapeBucket::of(shape).key()))
+                        .or_default()
+                        .push(drift);
+                    revalidations += 1;
+                    // observation-carrying re-tune: refreshes the
+                    // config without resetting the learned latency
+                    let _ = fdev.tuner.retune_keeping_observations(shape);
+                }
+                Observation::NoEntry | Observation::Rejected => {}
+            }
+        }
+    }
+    // Drain the scheduler accounting so back-to-back runs on the same
+    // fleet start clean.
+    for p in &placements {
+        fleet.complete(p);
+    }
+
+    let makespan_s = busy.iter().cloned().fold(0.0f64, f64::max);
+    SimReport {
+        policy,
+        requests: trace.len(),
+        makespan_s,
+        total_flops,
+        tflops: if makespan_s > 0.0 {
+            total_flops / makespan_s / 1e12
+        } else {
+            0.0
+        },
+        device_busy_s: busy,
+        device_requests: counts,
+        fallback_placements: fallbacks,
+        revalidations,
+        drift: drift_map
+            .into_iter()
+            .map(|((device, bucket), drifts)| DriftSeries {
+                device,
+                bucket,
+                drifts,
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::registry::demo_fleet_devices;
+    use crate::tuner::{Budget, StalenessPolicy, TuneOptions};
+
+    fn quick_fleet() -> Fleet {
+        let opts = TuneOptions {
+            top_k: 4,
+            budget: Budget::from_millis(50),
+            bytes_per_elem: 4,
+        };
+        // High drift threshold: unit tests exercise the blending, the
+        // revalidation path is covered in tuner::tests.
+        let staleness =
+            StalenessPolicy { max_drift: 10.0, ..Default::default() };
+        Fleet::new(demo_fleet_devices(), opts, staleness, 64)
+    }
+
+    #[test]
+    fn trace_is_deterministic_per_seed() {
+        let mix = ShapeMix::skewed_default();
+        assert_eq!(gen_trace(7, 40, &mix), gen_trace(7, 40, &mix));
+        assert_ne!(gen_trace(7, 40, &mix), gen_trace(8, 40, &mix));
+    }
+
+    #[test]
+    fn skewed_mix_weights_respected() {
+        let mix = ShapeMix::skewed_default();
+        let trace = gen_trace(3, 2000, &mix);
+        let small = trace
+            .iter()
+            .filter(|s| **s == GemmShape::new(480, 512, 512))
+            .count() as f64
+            / 2000.0;
+        assert!((small - 0.45).abs() < 0.05, "P(small) = {small}");
+    }
+
+    #[test]
+    fn fleet_placement_beats_round_robin_on_heterogeneous_fleet() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        let trace = gen_trace(42, 80, &mix);
+        let rr = run_trace(&fleet, &trace, PlacementPolicy::RoundRobin, false);
+        let b2t = run_trace(&fleet, &trace, PlacementPolicy::Block2Time, false);
+        assert_eq!(rr.requests, b2t.requests);
+        assert!(
+            b2t.makespan_s < rr.makespan_s * 0.95,
+            "fleet {} vs rr {}",
+            b2t.makespan_s,
+            rr.makespan_s
+        );
+        // every device participated under both policies
+        assert!(b2t.device_requests.iter().all(|&c| c > 0));
+        assert!(rr.device_requests.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn feedback_tightens_drift_over_the_run() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        let trace = gen_trace(7, 120, &mix);
+        let report =
+            run_trace(&fleet, &trace, PlacementPolicy::Block2Time, true);
+        let best = report
+            .drift
+            .iter()
+            .filter(|s| s.drifts.len() >= 3)
+            .max_by(|a, b| a.drifts[0].total_cmp(&b.drifts[0]))
+            .expect("at least one repeated (device, bucket) series");
+        let (first, last) =
+            (best.drifts[0], *best.drifts.last().unwrap());
+        assert!(
+            last < first,
+            "feedback must tighten drift: {first} -> {last} ({best:?})"
+        );
+    }
+
+    #[test]
+    fn scheduler_state_drains_between_runs() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        let trace = gen_trace(1, 30, &mix);
+        run_trace(&fleet, &trace, PlacementPolicy::Block2Time, false);
+        for d in fleet.devices() {
+            assert_eq!(d.queue_depth(), 0);
+            assert_eq!(d.in_flight_s(), 0.0);
+        }
+    }
+}

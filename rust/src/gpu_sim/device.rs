@@ -100,6 +100,84 @@ impl Device {
         self
     }
 
+    /// Scale every CU's throughput by `factor` — models a binned /
+    /// power-capped part of the same family. Distinct fingerprint
+    /// (flops enters the fingerprint), so fleet caches never mix the
+    /// fast and slow bins.
+    pub fn with_flops_scale(mut self, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor.is_finite(), "bad scale {factor}");
+        self.flops_per_cu *= factor;
+        self
+    }
+
+    pub fn renamed(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    /// Parse one fleet device spec: `<kind>[:<cus>][x<scale>]`, e.g.
+    /// `mi200`, `mi100:60`, `mi200x0.5`, `mi200:96x0.75`. Kinds are the
+    /// built-in presets.
+    pub fn parse_spec(spec: &str) -> Result<Self, String> {
+        let (head, scale) = match spec.split_once('x') {
+            Some((h, s)) => {
+                let f: f64 = s
+                    .parse()
+                    .map_err(|_| format!("bad speed scale in {spec:?}"))?;
+                if !(f > 0.0 && f.is_finite()) {
+                    return Err(format!("bad speed scale in {spec:?}"));
+                }
+                (h, f)
+            }
+            None => (spec, 1.0),
+        };
+        let (kind_str, cus) = match head.split_once(':') {
+            Some((k, c)) => {
+                let n: usize = c
+                    .parse()
+                    .map_err(|_| format!("bad CU count in {spec:?}"))?;
+                (k, Some(n))
+            }
+            None => (head, None),
+        };
+        let mut dev = match kind_str {
+            "mi200" => Device::preset(DeviceKind::Mi200),
+            "mi100" => Device::preset(DeviceKind::Mi100),
+            other => {
+                return Err(format!(
+                    "unknown device kind {other:?} (want mi200|mi100)"
+                ))
+            }
+        };
+        if let Some(n) = cus {
+            if n == 0 || n > dev.num_cus {
+                return Err(format!(
+                    "cus {n} out of range 1..={} for {kind_str}",
+                    dev.num_cus
+                ));
+            }
+            dev = dev.with_cus(n);
+        }
+        if scale != 1.0 {
+            dev = dev.with_flops_scale(scale);
+        }
+        Ok(dev)
+    }
+
+    /// Parse a comma-separated fleet spec list (`mi200,mi200x0.5,mi100`).
+    pub fn parse_fleet_spec(specs: &str) -> Result<Vec<Self>, String> {
+        let devices: Vec<Self> = specs
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(Self::parse_spec)
+            .collect::<Result<_, _>>()?;
+        if devices.is_empty() {
+            return Err("empty fleet spec".to_string());
+        }
+        Ok(devices)
+    }
+
     pub fn peak_flops(&self) -> f64 {
         self.flops_per_cu * self.cu_speed.iter().sum::<f64>()
     }
@@ -134,5 +212,34 @@ mod tests {
     fn throttling_pattern() {
         let d = Device::uniform("t", 8, 1.0, 1.0, 0.0).with_throttled(4, 0.5);
         assert_eq!(d.cu_speed, vec![0.5, 1.0, 1.0, 1.0, 0.5, 1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn flops_scale_halves_peak() {
+        let d = Device::preset(DeviceKind::Mi200).with_flops_scale(0.5);
+        assert!((d.peak_flops() - 22.5e12).abs() / 22.5e12 < 1e-12);
+    }
+
+    #[test]
+    fn spec_parsing_round_trips_the_fleet_forms() {
+        let d = Device::parse_spec("mi200").unwrap();
+        assert_eq!((d.name.as_str(), d.num_cus), ("mi200", 120));
+        let d = Device::parse_spec("mi100:60").unwrap();
+        assert_eq!((d.name.as_str(), d.num_cus), ("mi100", 60));
+        let d = Device::parse_spec("mi200x0.5").unwrap();
+        assert!((d.peak_flops() - 22.5e12).abs() < 1.0);
+        let d = Device::parse_spec("mi200:96x0.75").unwrap();
+        assert_eq!(d.num_cus, 96);
+        assert!((d.flops_per_cu - 0.75 * 45.0e12 / 120.0).abs() < 1.0);
+
+        for bad in ["", "h100", "mi200:0", "mi200:121", "mi200x0",
+                    "mi200xfast", "mi200:many"] {
+            assert!(Device::parse_spec(bad).is_err(), "{bad:?}");
+        }
+
+        let fleet =
+            Device::parse_fleet_spec("mi200, mi200x0.5 ,mi100:60").unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert!(Device::parse_fleet_spec("  ,").is_err());
     }
 }

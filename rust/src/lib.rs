@@ -10,8 +10,9 @@
 //! - **L3** (this crate): the runtime — partition math ([`decomp`]), a
 //!   GPU-occupancy simulator ([`gpu_sim`]), the Block2Time predictive load
 //!   balancer ([`predict`]), a legality-pruned autotuner with a persistent
-//!   per-shape config cache ([`tuner`]), a PJRT artifact runtime
-//!   ([`runtime`]), and the serving coordinator ([`coordinator`]).
+//!   per-shape config cache ([`tuner`]), a heterogeneous multi-device
+//!   serving layer ([`fleet`]), a PJRT artifact runtime ([`runtime`]),
+//!   and the serving coordinator ([`coordinator`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers everything
 //! once; the rust binary is self-contained afterwards.
@@ -23,6 +24,7 @@ pub mod coordinator;
 pub mod decomp;
 pub mod exec;
 pub mod faults;
+pub mod fleet;
 pub mod gpu_sim;
 pub mod json;
 pub mod predict;

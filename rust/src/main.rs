@@ -2,7 +2,8 @@
 //!
 //! Subcommands:
 //!   serve      run the serving coordinator on a synthetic request stream
-//!   tune       warm the per-shape tuning cache offline
+//!   fleet      simulate heterogeneous multi-device fleet scheduling
+//!   tune       warm or re-validate the per-shape tuning cache offline
 //!   sim        simulate a GEMM decomposition on the modeled GPU
 //!   sweep      CU-count utilization sweep (Figure-1 style, text plot)
 //!   route      show the router's artifact decision for a shape
@@ -19,9 +20,14 @@ use streamk::coordinator::{Coordinator, Router};
 use streamk::decomp::{
     build_schedule, intensity, occupancy, BlockShape, GemmShape, TileGrid,
 };
+use streamk::fleet::{
+    gen_trace, run_trace, warm, Fleet, PlacementPolicy, ShapeMix,
+};
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::runtime::{spawn_engine, Manifest};
-use streamk::tuner::{Budget, TuneOptions, Tuner, TABLE1_SUITE};
+use streamk::tuner::{
+    Budget, StalenessPolicy, TuneOptions, Tuner, TABLE1_SUITE,
+};
 
 fn main() {
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
@@ -32,6 +38,7 @@ fn main() {
     let sub = argv.remove(0);
     let code = match sub.as_str() {
         "serve" => cmd_serve(&argv),
+        "fleet" => cmd_fleet(&argv),
         "tune" => cmd_tune(&argv),
         "sim" => cmd_sim(&argv),
         "sweep" => cmd_sweep(&argv),
@@ -53,12 +60,13 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|tune|sim|sweep|route|intensity|info> [options]\n\
+     usage: streamk <serve|fleet|tune|sim|sweep|route|intensity|info> [options]\n\
      \n\
      tune quickstart:\n\
        streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
-       streamk tune --m 1920 --n 2000 --k 2000           # one shape, print only\n\
+       streamk tune --revalidate --cache tuner_cache.json # staleness sweep\n\
        streamk serve --tuner-cache tuner_cache.json      # serve with warm cache\n\
+       streamk fleet --requests 200                      # heterogeneous fleet sim\n\
      \n\
      run a subcommand with --help for its options"
         .to_string()
@@ -97,8 +105,13 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::flag("no-tune-on-miss", "disable background tuning"))
         .opt(Opt::value("tune-budget-ms", None, "per-tune wall budget"))
         .opt(Opt::value("tune-top-k", None, "measured candidates per tune"))
+        .opt(Opt::value("fleet", None, "fleet spec, e.g. mi200,mi200x0.5"))
+        .opt(Opt::value("drift-pct", None, "re-validate past this drift %"))
+        .opt(Opt::value("cache-max-age-s", None, "age out entries older than"))
         .example("streamk serve --requests 256 --max-batch 32")
-        .example("streamk serve --tuner-cache tuner_cache.json");
+        .example("streamk serve --tuner-cache tuner_cache.json")
+        .example("streamk serve --fleet mi200,mi100 --requests 256")
+        .example("streamk serve --artifacts examples/minimal_artifacts  # no make artifacts");
     let args = parse_or_exit(&cmd, argv);
     let settings = match Settings::default().apply_cli(&args) {
         Ok(s) => s,
@@ -116,16 +129,41 @@ fn cmd_serve(argv: &[String]) -> i32 {
             return 1;
         }
     };
-    let (engine, _engine_thread) =
-        spawn_engine(manifest).expect("pjrt engine");
-    let warm = engine
-        .warmup(&["mlp_streamk_f32_b8_256x512x256",
-                   "mlp_streamk_f32_b32_256x512x256",
-                   "mlp_streamk_f32_b128_256x512x256"])
-        .expect("warmup");
-    println!("warmup: compiled MLP artifacts in {warm:.2}s");
+    // One engine per fleet device (single device without --fleet).
+    let devices = match settings.fleet_devices() {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let mut engines = Vec::new();
+    let mut engine_threads = Vec::new();
+    for _ in 0..devices.len() {
+        let (engine, join) =
+            spawn_engine(manifest.clone()).expect("pjrt engine");
+        let warmed = engine
+            .warmup(&["mlp_streamk_f32_b8_256x512x256",
+                       "mlp_streamk_f32_b32_256x512x256",
+                       "mlp_streamk_f32_b128_256x512x256"])
+            .expect("warmup");
+        println!("warmup: compiled MLP artifacts in {warmed:.2}s");
+        engines.push(engine);
+        engine_threads.push(join);
+    }
+    if devices.len() > 1 {
+        println!(
+            "fleet: {} devices ({})",
+            devices.len(),
+            devices
+                .iter()
+                .map(|d| d.name.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
 
-    let coord = Coordinator::start(engine, &settings);
+    let coord = Coordinator::start_fleet(engines, devices, &settings);
     let handle = coord.handle.clone();
     let mut rng = streamk::prop::Rng::new(42);
     let mut waiters = Vec::new();
@@ -175,13 +213,17 @@ fn cmd_tune(argv: &[String]) -> i32 {
          per-shape tuning cache",
     ))
     .opt(Opt::flag("suite", "tune the paper's Table-1 shape suite"))
+    .opt(Opt::flag("revalidate", "staleness pass over the cache instead of tuning: age out untouched entries, re-tune drifted ones"))
     .opt(Opt::value("cus", Some("120"), "compute units"))
     .opt(Opt::value("budget-ms", Some("250"), "wall budget per tune"))
     .opt(Opt::value("top-k", Some("8"), "measured candidates per tune"))
     .opt(Opt::value("bytes", Some("4"), "bytes per element (4=f32, 2=bf16)"))
     .opt(Opt::value("cache", None, "tuner cache file to warm (load+merge+store)"))
+    .opt(Opt::value("drift-pct", Some("50"), "re-validate past this drift %"))
+    .opt(Opt::value("max-age-s", Some("604800"), "age out entries older than"))
     .example("streamk tune --suite --cache tuner_cache.json")
     .example("streamk tune --m 1920 --n 2000 --k 2000 --budget-ms 500")
+    .example("streamk tune --revalidate --cache tuner_cache.json")
     .example("streamk serve --tuner-cache tuner_cache.json   # then serve warm");
     let args = parse_or_exit(&cmd, argv);
     let cus = args.usize("cus").unwrap().clamp(1, 120);
@@ -190,8 +232,13 @@ fn cmd_tune(argv: &[String]) -> i32 {
         budget: Budget::from_millis(args.usize("budget-ms").unwrap() as u64),
         bytes_per_elem: args.usize("bytes").unwrap(),
     };
+    let staleness = StalenessPolicy {
+        max_drift: args.usize("drift-pct").unwrap() as f64 / 100.0,
+        max_age_s: args.usize("max-age-s").unwrap() as u64,
+        ..StalenessPolicy::default()
+    };
     let dev = Device::preset(DeviceKind::Mi200).with_cus(cus);
-    let tuner = Tuner::new(dev, opts, 256);
+    let tuner = Tuner::new(dev, opts, 256).with_staleness(staleness);
 
     let cache_path = args.get("cache").map(Path::new);
     if let Some(path) = cache_path {
@@ -200,6 +247,33 @@ fn cmd_tune(argv: &[String]) -> i32 {
             Ok(_) => {}
             Err(e) => {
                 eprintln!("warning: {e}; starting from an empty cache");
+            }
+        }
+    }
+
+    if args.flag("revalidate") {
+        let Some(path) = cache_path else {
+            eprintln!("error: --revalidate needs --cache <file>");
+            return 2;
+        };
+        let report = tuner.revalidate();
+        println!(
+            "revalidate: {} checked | {} aged out | {} re-tuned | \
+             {} refreshed | {} skipped",
+            report.checked,
+            report.aged_out,
+            report.retuned,
+            report.refreshed,
+            report.skipped
+        );
+        match tuner.store_cache(path) {
+            Ok(()) => {
+                println!("cache written to {}", path.display());
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("error: {e}");
+                return 1;
             }
         }
     }
@@ -272,6 +346,115 @@ fn cmd_tune(argv: &[String]) -> i32 {
     } else {
         1
     }
+}
+
+fn cmd_fleet(argv: &[String]) -> i32 {
+    let cmd = Command::new(
+        "streamk fleet",
+        "simulate heterogeneous fleet serving: Block2Time-guided placement \
+         vs round-robin on a skewed synthetic trace, with the online \
+         re-tuning feedback loop",
+    )
+    .opt(Opt::value(
+        "devices",
+        Some("mi200,mi200x0.5,mi100,mi100:60"),
+        "fleet spec: <kind>[:<cus>][x<scale>], comma-separated",
+    ))
+    .opt(Opt::value("requests", Some("200"), "synthetic trace length"))
+    .opt(Opt::value("seed", Some("42"), "trace seed"))
+    .opt(Opt::value("budget-ms", Some("250"), "wall budget per tune"))
+    .opt(Opt::value("top-k", Some("8"), "measured candidates per tune"))
+    .opt(Opt::value("drift-pct", Some("50"), "re-validate past this drift %"))
+    .opt(Opt::flag("no-warm", "skip the offline cache warm-up (cold start)"))
+    .opt(Opt::flag("no-feedback", "disable the online re-tuning loop"))
+    .example("streamk fleet --requests 400")
+    .example("streamk fleet --devices mi200,mi100 --no-warm");
+    let args = parse_or_exit(&cmd, argv);
+    let devices = match Device::parse_fleet_spec(args.str("devices")) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 2;
+        }
+    };
+    let opts = TuneOptions {
+        top_k: args.usize("top-k").unwrap().max(1),
+        budget: Budget::from_millis(args.usize("budget-ms").unwrap() as u64),
+        bytes_per_elem: 4,
+    };
+    let staleness = StalenessPolicy {
+        max_drift: args.usize("drift-pct").unwrap() as f64 / 100.0,
+        ..StalenessPolicy::default()
+    };
+    let fleet = Fleet::new(devices, opts, staleness, 256);
+    let mix = ShapeMix::skewed_default();
+    if !args.flag("no-warm") {
+        let tuned = warm(&fleet, &mix.shapes());
+        println!(
+            "warm: {tuned} tunes across {} devices × {} shape buckets\n",
+            fleet.len(),
+            mix.shapes().len()
+        );
+    }
+    let n = args.usize("requests").unwrap();
+    let trace = gen_trace(args.usize("seed").unwrap() as u64, n, &mix);
+
+    let rr = run_trace(&fleet, &trace, PlacementPolicy::RoundRobin, false);
+    let b2t = run_trace(
+        &fleet,
+        &trace,
+        PlacementPolicy::Block2Time,
+        !args.flag("no-feedback"),
+    );
+
+    let mut t = streamk::bench::Table::new(&[
+        "device", "cus", "peak TF/s", "rr reqs", "rr busy ms", "fleet reqs",
+        "fleet busy ms",
+    ]);
+    for (i, d) in fleet.devices().iter().enumerate() {
+        t.row(&[
+            d.name.clone(),
+            d.device().num_cus.to_string(),
+            format!("{:.1}", d.device().peak_flops() / 1e12),
+            rr.device_requests[i].to_string(),
+            format!("{:.3}", rr.device_busy_s[i] * 1e3),
+            b2t.device_requests[i].to_string(),
+            format!("{:.3}", b2t.device_busy_s[i] * 1e3),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nmakespan: round-robin {:.3} ms | fleet {:.3} ms | speedup {:.3}x",
+        rr.makespan_s * 1e3,
+        b2t.makespan_s * 1e3,
+        rr.makespan_s / b2t.makespan_s.max(1e-12),
+    );
+    println!(
+        "throughput: round-robin {:.2} TFLOP/s | fleet {:.2} TFLOP/s",
+        rr.throughput_tflops(),
+        b2t.throughput_tflops(),
+    );
+    println!(
+        "placements: {} fallback | re-validations {}",
+        b2t.fallback_placements, b2t.revalidations
+    );
+    if let Some(best) = b2t
+        .drift
+        .iter()
+        .filter(|s| s.drifts.len() >= 2)
+        .max_by(|a, b| a.drifts[0].total_cmp(&b.drifts[0]))
+    {
+        println!(
+            "feedback: device {} bucket {} drift {:.1}% -> {:.1}% over {} \
+             observations (the online Block2Time loop tightening)",
+            best.device,
+            best.bucket,
+            best.drifts[0] * 100.0,
+            best.drifts.last().unwrap() * 100.0,
+            best.drifts.len(),
+        );
+    }
+    0
 }
 
 fn cmd_sim(argv: &[String]) -> i32 {

@@ -160,6 +160,41 @@ impl Manifest {
                 && a.dtype == dtype
         })
     }
+
+    /// Fleet-aware variant of [`Manifest::find_gemm`]: among all
+    /// artifacts matching the routing key, prefer the one compiled for
+    /// the CU count closest to `device_cus` (artifacts without a `cus`
+    /// annotation rank last). With one artifact per key this degrades
+    /// to [`Manifest::find_gemm`].
+    pub fn find_gemm_for_cus(
+        &self,
+        m: usize,
+        n: usize,
+        k: usize,
+        algo: &str,
+        pad: &str,
+        dtype: &str,
+        device_cus: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == "gemm"
+                    && a.m == m
+                    && a.n == n
+                    && a.k == k
+                    && a.algo == algo
+                    && a.pad == pad
+                    && a.dtype == dtype
+            })
+            .min_by_key(|a| {
+                if a.cus == 0 {
+                    usize::MAX
+                } else {
+                    a.cus.abs_diff(device_cus)
+                }
+            })
+    }
 }
 
 #[cfg(test)]

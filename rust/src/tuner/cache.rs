@@ -6,6 +6,13 @@
 //! version is *rejected*, never reinterpreted, because a stale entry
 //! that silently deserializes into the wrong field is exactly the class
 //! of corruption the report's CU bug taught us to fear.
+//!
+//! Entries are no longer immortal (the PR-1 ROADMAP gap): each carries
+//! creation/last-use timestamps plus an EWMA of *observed* serving
+//! latencies, and [`TuningCache::sweep_stale`] implements the staleness
+//! policy — untouched entries age out, and entries whose observed time
+//! drifts too far from the cached prediction are flagged for
+//! re-validation.
 
 use super::fingerprint::{DeviceFingerprint, ShapeBucket};
 use super::search::TunedConfig;
@@ -16,7 +23,52 @@ use crate::json::{self, obj, Value};
 use std::path::Path;
 
 /// Bump on any change to the entry layout.
-pub const CACHE_VERSION: u64 = 1;
+/// v2: staleness timestamps + observed-latency EWMA per entry.
+pub const CACHE_VERSION: u64 = 2;
+
+/// Seconds since the Unix epoch (0 when the clock is unset/behind).
+pub fn now_epoch_s() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::SystemTime::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0)
+}
+
+/// When a cache entry stops being trusted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StalenessPolicy {
+    /// Entries untouched (no lookup/insert/observe) longer than this
+    /// are aged out of the cache entirely.
+    pub max_age_s: u64,
+    /// Relative drift |predicted − observed| / observed beyond which an
+    /// entry is flagged for re-validation (a fresh tune).
+    pub max_drift: f64,
+    /// Observations required before drift can flag re-validation — one
+    /// noisy sample must not trigger a re-tune.
+    pub min_observations: u64,
+}
+
+impl Default for StalenessPolicy {
+    fn default() -> Self {
+        Self {
+            max_age_s: 7 * 24 * 3600,
+            max_drift: 0.5,
+            min_observations: 3,
+        }
+    }
+}
+
+/// What one staleness sweep did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SweepReport {
+    /// Entries dropped because they were untouched past `max_age_s`.
+    pub aged_out: usize,
+    /// Keys of surviving entries whose observed latency drifted past
+    /// `max_drift` — the caller should re-tune these buckets.
+    pub drifted: Vec<String>,
+    /// Entries kept and within policy.
+    pub fresh: usize,
+}
 
 #[derive(Debug)]
 pub enum CacheError {
@@ -66,13 +118,33 @@ fn composite_key(
     format!("{}@bpe{}@{}", bucket.key(), bytes_per_elem, dev.as_str())
 }
 
+/// Inverse of [`composite_key`] (used by re-validation, which walks the
+/// persisted entries back to tunable buckets).
+pub fn split_key(key: &str) -> Option<(ShapeBucket, usize, &str)> {
+    let (bucket_str, rest) = key.split_once("@bpe")?;
+    let (bpe_str, dev) = rest.split_once('@')?;
+    let bucket = ShapeBucket::parse(bucket_str)?;
+    let bpe = bpe_str.parse().ok()?;
+    Some((bucket, bpe, dev))
+}
+
+/// One cached config plus its staleness bookkeeping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheEntry {
+    pub cfg: TunedConfig,
+    /// Epoch seconds when the entry was (re-)tuned.
+    pub created_s: u64,
+    /// Epoch seconds of the last lookup/insert/observe.
+    pub last_used_s: u64,
+}
+
 /// The cache proper: MRU-ordered entries, bounded by `capacity`.
 #[derive(Debug, Clone)]
 pub struct TuningCache {
     capacity: usize,
     /// Most-recently-used first. Linear scan is fine at serving-cache
     /// sizes (hundreds); the composite key keeps lookups exact.
-    entries: Vec<(String, TunedConfig)>,
+    entries: Vec<(String, CacheEntry)>,
 }
 
 impl TuningCache {
@@ -97,7 +169,36 @@ impl TuningCache {
         self.entries.iter().filter(|(k, _)| k.ends_with(&suffix)).count()
     }
 
-    /// Lookup; a hit is promoted to most-recently-used.
+    /// (key, config) pairs for one device fingerprint, MRU first —
+    /// the re-validation walk.
+    pub fn entries_for(
+        &self,
+        dev: &DeviceFingerprint,
+    ) -> Vec<(String, TunedConfig)> {
+        let suffix = format!("@{}", dev.as_str());
+        self.entries
+            .iter()
+            .filter(|(k, _)| k.ends_with(&suffix))
+            .map(|(k, e)| (k.clone(), e.cfg))
+            .collect()
+    }
+
+    /// Read-only lookup: no MRU promotion, no timestamp refresh. The
+    /// fleet scheduler probes every device's cache on every placement;
+    /// only the device that actually serves the request should count
+    /// as a touch, or the age-out policy could never fire for
+    /// actively-probed buckets on devices that stopped serving them.
+    pub fn peek(
+        &self,
+        bucket: &ShapeBucket,
+        bytes_per_elem: usize,
+        dev: &DeviceFingerprint,
+    ) -> Option<TunedConfig> {
+        let key = composite_key(bucket, bytes_per_elem, dev);
+        self.entries.iter().find(|(k, _)| *k == key).map(|(_, e)| e.cfg)
+    }
+
+    /// Lookup; a hit is promoted to most-recently-used and touched.
     pub fn get(
         &mut self,
         bucket: &ShapeBucket,
@@ -106,8 +207,9 @@ impl TuningCache {
     ) -> Option<TunedConfig> {
         let key = composite_key(bucket, bytes_per_elem, dev);
         let idx = self.entries.iter().position(|(k, _)| *k == key)?;
-        let entry = self.entries.remove(idx);
-        let cfg = entry.1;
+        let mut entry = self.entries.remove(idx);
+        entry.1.last_used_s = now_epoch_s();
+        let cfg = entry.1.cfg;
         self.entries.insert(0, entry);
         Some(cfg)
     }
@@ -121,8 +223,77 @@ impl TuningCache {
         cfg: TunedConfig,
     ) {
         let key = composite_key(bucket, bytes_per_elem, dev);
+        let now = now_epoch_s();
         self.entries.retain(|(k, _)| *k != key);
-        self.entries.insert(0, (key, cfg));
+        self.entries.insert(
+            0,
+            (key, CacheEntry { cfg, created_s: now, last_used_s: now }),
+        );
+        self.entries.truncate(self.capacity);
+    }
+
+    /// Mutate an entry in place (promoted to MRU and touched). Returns
+    /// `false` on a miss. This is the observed-latency update path:
+    /// the closure sees the live `TunedConfig`, not a copy.
+    pub fn update<F: FnOnce(&mut TunedConfig)>(
+        &mut self,
+        bucket: &ShapeBucket,
+        bytes_per_elem: usize,
+        dev: &DeviceFingerprint,
+        f: F,
+    ) -> bool {
+        let key = composite_key(bucket, bytes_per_elem, dev);
+        let Some(idx) = self.entries.iter().position(|(k, _)| *k == key)
+        else {
+            return false;
+        };
+        let mut entry = self.entries.remove(idx);
+        entry.1.last_used_s = now_epoch_s();
+        f(&mut entry.1.cfg);
+        self.entries.insert(0, entry);
+        true
+    }
+
+    /// Apply the staleness policy at time `now_s`: drop entries
+    /// untouched past `max_age_s`, and report (but keep) entries whose
+    /// observed latency drifted past `max_drift` so the caller can
+    /// re-tune them. Entries with too few observations never drift.
+    pub fn sweep_stale(
+        &mut self,
+        now_s: u64,
+        policy: &StalenessPolicy,
+    ) -> SweepReport {
+        let before = self.entries.len();
+        self.entries.retain(|(_, e)| {
+            now_s.saturating_sub(e.last_used_s) <= policy.max_age_s
+        });
+        let mut report = SweepReport {
+            aged_out: before - self.entries.len(),
+            ..SweepReport::default()
+        };
+        for (key, e) in &self.entries {
+            if e.cfg.observed_n >= policy.min_observations
+                && entry_drift(&e.cfg)
+                    .map(|d| d > policy.max_drift)
+                    .unwrap_or(true)
+            {
+                report.drifted.push(key.clone());
+            } else {
+                report.fresh += 1;
+            }
+        }
+        report
+    }
+
+    /// Merge another cache's entries into this one (skipping keys this
+    /// cache already holds, which are assumed fresher). Used by the
+    /// fleet to persist every device's per-device cache into one file.
+    pub fn absorb(&mut self, other: &TuningCache) {
+        for (key, entry) in &other.entries {
+            if !self.entries.iter().any(|(k, _)| k == key) {
+                self.entries.push((key.clone(), entry.clone()));
+            }
+        }
         self.entries.truncate(self.capacity);
     }
 
@@ -130,7 +301,8 @@ impl TuningCache {
         let entries: Vec<Value> = self
             .entries
             .iter()
-            .map(|(key, c)| {
+            .map(|(key, e)| {
+                let c = &e.cfg;
                 obj(vec![
                     ("key", key.as_str().into()),
                     ("bm", c.params.block.bm.into()),
@@ -145,6 +317,10 @@ impl TuningCache {
                     ("cus", c.cus.into()),
                     ("predicted_s", c.predicted_s.into()),
                     ("measured_s", c.measured_s.into()),
+                    ("observed_s", c.observed_s.into()),
+                    ("observed_n", (c.observed_n as usize).into()),
+                    ("created_s", (e.created_s as usize).into()),
+                    ("last_used_s", (e.last_used_s as usize).into()),
                 ])
             })
             .collect();
@@ -190,8 +366,17 @@ impl TuningCache {
                 cus: e.u("cus").map_err(CacheError::Json)?,
                 predicted_s: e.f("predicted_s").map_err(CacheError::Json)?,
                 measured_s: e.f("measured_s").map_err(CacheError::Json)?,
+                observed_s: e.f("observed_s").map_err(CacheError::Json)?,
+                observed_n: e.u("observed_n").map_err(CacheError::Json)?
+                    as u64,
             };
-            parsed.push((key, cfg));
+            let entry = CacheEntry {
+                cfg,
+                created_s: e.u("created_s").map_err(CacheError::Json)? as u64,
+                last_used_s: e.u("last_used_s").map_err(CacheError::Json)?
+                    as u64,
+            };
+            parsed.push((key, entry));
         }
         // File order is MRU-first; inserting via the Vec directly keeps
         // it (an insert() loop would reverse it).
@@ -240,6 +425,23 @@ impl TuningCache {
     }
 }
 
+/// Relative drift between a cached prediction and the observed EWMA.
+/// `None` when the entry has no observations yet; non-finite values
+/// (a poisoned entry) come back as `None` from the comparison's point
+/// of view — callers treat that as "re-validate".
+pub fn entry_drift(cfg: &TunedConfig) -> Option<f64> {
+    if cfg.observed_n == 0 {
+        return None;
+    }
+    if !(cfg.observed_s.is_finite()
+        && cfg.observed_s > 0.0
+        && cfg.predicted_s.is_finite())
+    {
+        return None;
+    }
+    Some((cfg.predicted_s - cfg.observed_s).abs() / cfg.observed_s)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +459,8 @@ mod tests {
             cus: 120,
             predicted_s: measured * 0.9,
             measured_s: measured,
+            observed_s: 0.0,
+            observed_n: 0,
         }
     }
 
@@ -320,6 +524,8 @@ mod tests {
         special.pad = PadPolicy::Physical;
         special.params.double_buffer = false;
         special.cus = 60;
+        special.observed_s = 1.4e-3;
+        special.observed_n = 5;
         c.insert(&b1, 4, &fp(), cfg(128, 2.5e-3));
         c.insert(&b2, 4, &fp(), special);
 
@@ -354,6 +560,24 @@ mod tests {
     }
 
     #[test]
+    fn v1_cache_rejected_not_guessed() {
+        // The PR-1 format had no staleness fields; a v1 file must be
+        // rejected by version, never partially parsed.
+        let path = tmpfile("v1");
+        std::fs::write(
+            &path,
+            r#"{"version": 1, "entries": []}"#,
+        )
+        .unwrap();
+        let err = TuningCache::load(&path, 4).unwrap_err();
+        assert!(matches!(
+            err,
+            CacheError::VersionMismatch { found: 1, want: CACHE_VERSION }
+        ));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn missing_file_is_empty_cache() {
         let c = TuningCache::load(
             Path::new("/definitely/not/here/cache.json"),
@@ -369,11 +593,12 @@ mod tests {
         let path = tmpfile("bad-entry");
         std::fs::write(
             &path,
-            r#"{"version": 1, "entries": [{"key": "k", "bm": 128, "bn": 128,
+            r#"{"version": 2, "entries": [{"key": "k", "bm": 128, "bn": 128,
                "bk": 64, "kpack": 8, "mxu_m": 128, "mxu_n": 128,
                "bytes_per_elem": 4, "double_buffer": true,
                "pad": "diagonal", "cus": 120,
-               "predicted_s": 0.1, "measured_s": 0.1}]}"#,
+               "predicted_s": 0.1, "measured_s": 0.1, "observed_s": 0.0,
+               "observed_n": 0, "created_s": 1, "last_used_s": 1}]}"#,
         )
         .unwrap();
         let err = TuningCache::load(&path, 4).unwrap_err();
@@ -393,5 +618,134 @@ mod tests {
         let back = TuningCache::load(&path, 3).unwrap();
         assert_eq!(back.len(), 3);
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn key_splits_back_into_parts() {
+        let b = ShapeBucket::of(GemmShape::new(480, 512, 512));
+        let key = composite_key(&b, 4, &fp());
+        let (bucket, bpe, dev) = split_key(&key).unwrap();
+        assert_eq!(bucket, b);
+        assert_eq!(bpe, 4);
+        assert_eq!(dev, fp().as_str());
+        assert!(split_key("garbage").is_none());
+        assert!(split_key("1x2x3@bpeX@dev").is_none());
+    }
+
+    #[test]
+    fn peek_does_not_promote_or_touch() {
+        let mut c = TuningCache::new(2);
+        let (b1, b2, b3) = (
+            ShapeBucket::of(GemmShape::new(100, 100, 100)),
+            ShapeBucket::of(GemmShape::new(1000, 1000, 1000)),
+            ShapeBucket::of(GemmShape::new(4000, 4000, 4000)),
+        );
+        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
+        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        // peeking the LRU entry must NOT rescue it from eviction
+        assert_eq!(c.peek(&b1, 4, &fp()).unwrap().params.block.bm, 128);
+        c.insert(&b3, 4, &fp(), cfg(64, 3.0));
+        assert!(c.peek(&b1, 4, &fp()).is_none(), "b1 stayed LRU");
+        assert!(c.peek(&b2, 4, &fp()).is_some());
+    }
+
+    #[test]
+    fn update_mutates_in_place_and_touches() {
+        let mut c = TuningCache::new(4);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        c.insert(&b, 4, &fp(), cfg(128, 1.0));
+        assert!(c.update(&b, 4, &fp(), |cfg| {
+            cfg.observed_s = 0.8;
+            cfg.observed_n = 1;
+        }));
+        let got = c.get(&b, 4, &fp()).unwrap();
+        assert_eq!(got.observed_n, 1);
+        assert!((got.observed_s - 0.8).abs() < 1e-12);
+        // miss → false, nothing inserted
+        let other = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
+        assert!(!c.update(&other, 4, &fp(), |_| unreachable!()));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn sweep_ages_out_untouched_entries() {
+        let mut c = TuningCache::new(8);
+        let b1 = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let b2 = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
+        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
+        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        let policy = StalenessPolicy { max_age_s: 100, ..Default::default() };
+        // "now" far in the future: everything ages out
+        let report = c.sweep_stale(now_epoch_s() + 1000, &policy);
+        assert_eq!(report.aged_out, 2);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn sweep_flags_drifted_entries_but_keeps_them() {
+        let mut c = TuningCache::new(8);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let mut drifty = cfg(128, 1.0e-3);
+        drifty.predicted_s = 1.0e-3;
+        drifty.observed_s = 3.0e-3; // 67% off
+        drifty.observed_n = 5;
+        c.insert(&b, 4, &fp(), drifty);
+        let fresh_b = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
+        let mut ok = cfg(256, 2.0e-3);
+        ok.predicted_s = 2.0e-3;
+        ok.observed_s = 2.1e-3;
+        ok.observed_n = 5;
+        c.insert(&fresh_b, 4, &fp(), ok);
+
+        let report = c.sweep_stale(now_epoch_s(), &StalenessPolicy::default());
+        assert_eq!(report.aged_out, 0);
+        assert_eq!(report.drifted.len(), 1);
+        assert!(report.drifted[0].starts_with("512x512x512@"));
+        assert_eq!(report.fresh, 1);
+        assert_eq!(c.len(), 2, "drifted entries are kept for re-tune");
+    }
+
+    #[test]
+    fn sweep_needs_min_observations_before_drift() {
+        let mut c = TuningCache::new(8);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let mut noisy = cfg(128, 1.0e-3);
+        noisy.observed_s = 9.0e-3;
+        noisy.observed_n = 1; // below min_observations
+        c.insert(&b, 4, &fp(), noisy);
+        let report = c.sweep_stale(now_epoch_s(), &StalenessPolicy::default());
+        assert!(report.drifted.is_empty());
+        assert_eq!(report.fresh, 1);
+    }
+
+    #[test]
+    fn absorb_merges_disjoint_entries() {
+        let mut a = TuningCache::new(8);
+        let mut b = TuningCache::new(8);
+        let bucket = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let other_dev = DeviceFingerprint("mi100-cu60".into());
+        a.insert(&bucket, 4, &fp(), cfg(128, 1.0));
+        b.insert(&bucket, 4, &other_dev, cfg(256, 2.0));
+        // overlapping key: a's copy wins
+        b.insert(&bucket, 4, &fp(), cfg(64, 9.0));
+        a.absorb(&b);
+        assert_eq!(a.len(), 2);
+        assert_eq!(a.get(&bucket, 4, &fp()).unwrap().params.block.bm, 128);
+        assert_eq!(
+            a.get(&bucket, 4, &other_dev).unwrap().params.block.bm,
+            256
+        );
+    }
+
+    #[test]
+    fn entry_drift_semantics() {
+        let mut c = cfg(128, 1.0e-3);
+        assert_eq!(entry_drift(&c), None, "no observations yet");
+        c.predicted_s = 1.0e-3;
+        c.observed_s = 2.0e-3;
+        c.observed_n = 4;
+        assert!((entry_drift(&c).unwrap() - 0.5).abs() < 1e-12);
+        c.predicted_s = f64::NAN;
+        assert_eq!(entry_drift(&c), None, "poisoned prediction");
     }
 }

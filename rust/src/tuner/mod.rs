@@ -8,28 +8,37 @@
 //! - [`space`] — the `KernelParams` × padding × grid-size search space,
 //!   pruned up front by `decomp::params::check` so illegal points are
 //!   *never visited* (CK surfaced them as opaque template failures; we
-//!   name them and skip them);
+//!   name them and skip them); grid-size candidates are occupancy-guided
+//!   ([`crate::decomp::occupancy`]), not naive halvings;
 //! - [`search`] — two-phase search: Block2Time-predicted ranking
 //!   ([`crate::predict`]) of the legal candidates, then measured
 //!   refinement of the top-K on [`crate::gpu_sim`], under a hard
 //!   iteration/time budget so no configuration can ever "get stuck";
 //! - [`cache`] — a persistent, versioned tuning cache keyed by
 //!   ([`ShapeBucket`], [`DeviceFingerprint`]) with an in-memory LRU
-//!   front, serialized through the in-tree `json` module;
+//!   front and a staleness policy (age-out + drift re-validation),
+//!   serialized through the in-tree `json` module;
 //! - [`fingerprint`] — the cache keys.
 //!
-//! The serving coordinator consults a shared [`Tuner`] per incoming
-//! GEMM shape (hit → tuned routing policy, miss → defaults + a
-//! background tune), and `streamk tune` warms the cache offline.
+//! The serving coordinator consults one [`Tuner`] per fleet device
+//! (hit → tuned routing policy, miss → defaults + a background tune),
+//! and `streamk tune` warms or re-validates the cache offline. The
+//! online half of the Block2Time loop is [`Tuner::observe`]: measured
+//! serving latencies are folded back into the cached predictions, so
+//! the fleet scheduler's completion estimates tighten as traffic flows.
 //! `cargo bench --bench tuner_gain` demonstrates tuned-vs-default
-//! speedups across the Table-1 shape suite.
+//! speedups; `cargo bench --bench fleet_throughput` demonstrates the
+//! cross-device loop.
 
 pub mod cache;
 pub mod fingerprint;
 pub mod search;
 pub mod space;
 
-pub use cache::{CacheError, TuningCache, CACHE_VERSION};
+pub use cache::{
+    entry_drift, now_epoch_s, CacheError, StalenessPolicy, SweepReport,
+    TuningCache, CACHE_VERSION,
+};
 pub use fingerprint::{DeviceFingerprint, ShapeBucket};
 pub use search::{
     measure, tune, Budget, TuneError, TuneOptions, TuneReport, TunedConfig,
@@ -50,12 +59,53 @@ pub const TABLE1_SUITE: &[(usize, usize, usize)] = &[
     (480, 512, 512),
 ];
 
+/// EWMA weight of one new serving observation in `observed_s`.
+const OBSERVE_ALPHA: f64 = 0.3;
+/// How far one observation pulls the cached prediction toward the
+/// measured latency — the online Block2Time re-tuning step. Geometric:
+/// after k same-valued observations the prediction error shrinks by
+/// (1 − PREDICT_BLEND)^k.
+const PREDICT_BLEND: f64 = 0.25;
+
+/// Outcome of folding one measured serving latency into the cache.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Observation {
+    /// Measurement was NaN/∞/non-positive — discarded before it could
+    /// poison the entry (a clock glitch must not steer placement).
+    Rejected,
+    /// No cache entry for this shape bucket (nothing to refine).
+    NoEntry,
+    /// Entry updated; `drift` is the relative gap between the cached
+    /// prediction and this measurement, *before* the update.
+    Updated { drift: f64 },
+    /// Drift exceeded the staleness policy after enough observations —
+    /// the caller should re-tune this bucket.
+    Drifted { drift: f64 },
+}
+
+/// What one offline re-validation pass (`streamk tune --revalidate`) did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RevalidateReport {
+    /// Entries dropped by the age-out half of the staleness policy.
+    pub aged_out: usize,
+    /// Entries probed against a fresh measurement.
+    pub checked: usize,
+    /// Entries whose fresh probe drifted past policy → re-tuned.
+    pub retuned: usize,
+    /// Entries within policy; their `measured_s` was refreshed.
+    pub refreshed: usize,
+    /// Entries skipped (other element width, unparseable key, or a
+    /// re-tune failure).
+    pub skipped: usize,
+}
+
 /// Thread-safe tuner handle: the cache plus the device it tunes for.
 /// This is what the coordinator shares between the router (lookups) and
-/// the background tune-on-miss worker (inserts).
+/// the background tune-on-miss worker (inserts) — one per fleet device.
 pub struct Tuner {
     dev: Device,
     opts: TuneOptions,
+    staleness: StalenessPolicy,
     fingerprint: DeviceFingerprint,
     capacity: usize,
     cache: Mutex<TuningCache>,
@@ -67,10 +117,17 @@ impl Tuner {
         Self {
             dev,
             opts,
+            staleness: StalenessPolicy::default(),
             fingerprint,
             capacity,
             cache: Mutex::new(TuningCache::new(capacity)),
         }
+    }
+
+    /// Override the staleness policy (age-out horizon, drift threshold).
+    pub fn with_staleness(mut self, policy: StalenessPolicy) -> Self {
+        self.staleness = policy;
+        self
     }
 
     pub fn device(&self) -> &Device {
@@ -79,6 +136,14 @@ impl Tuner {
 
     pub fn options(&self) -> &TuneOptions {
         &self.opts
+    }
+
+    pub fn staleness(&self) -> &StalenessPolicy {
+        &self.staleness
+    }
+
+    pub fn fingerprint(&self) -> &DeviceFingerprint {
+        &self.fingerprint
     }
 
     pub fn len(&self) -> usize {
@@ -110,6 +175,19 @@ impl Tuner {
         )
     }
 
+    /// Read-only lookup: no MRU promotion, no last-used refresh. The
+    /// fleet scheduler uses this to price a shape on every device
+    /// without marking entries as "in use" on devices that never serve
+    /// the request (which would defeat age-out).
+    pub fn peek(&self, shape: GemmShape) -> Option<TunedConfig> {
+        let bucket = ShapeBucket::of(shape);
+        self.cache.lock().expect("tuner cache").peek(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+        )
+    }
+
     /// Tune the shape's bucket (at its representative, so the result is
     /// valid for everything that maps there) and insert the winner.
     /// The cache lock is NOT held during the search — lookups proceed
@@ -127,6 +205,182 @@ impl Tuner {
             report.best,
         );
         Ok(report)
+    }
+
+    /// Re-tune a drifted bucket while carrying the serving
+    /// observations over. The fresh search picks the *config* (params,
+    /// pad, grid), but the *prediction* keeps the online-learned
+    /// latency: the search's simulated estimate lives in simulator
+    /// units that need not agree with measured serving latency, so
+    /// restoring it would make the very next observation drift again —
+    /// an endless re-tune cycle. With the observation EWMA carried
+    /// over, drift after a re-validation is small by construction and
+    /// the loop converges.
+    pub fn retune_keeping_observations(
+        &self,
+        shape: GemmShape,
+    ) -> Result<TuneReport, TuneError> {
+        let bucket = ShapeBucket::of(shape);
+        let previous = self.cache.lock().expect("tuner cache").peek(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+        );
+        let report = self.tune_and_insert(shape)?;
+        if let Some(old) = previous {
+            if old.observed_n > 0
+                && old.observed_s.is_finite()
+                && old.observed_s > 0.0
+            {
+                self.cache.lock().expect("tuner cache").update(
+                    &bucket,
+                    self.opts.bytes_per_elem,
+                    &self.fingerprint,
+                    |cfg| {
+                        cfg.observed_s = old.observed_s;
+                        cfg.observed_n = old.observed_n;
+                        cfg.predicted_s = old.observed_s;
+                    },
+                );
+            }
+        }
+        Ok(report)
+    }
+
+    /// Insert a configuration directly (fleet cache transplants, tests).
+    pub fn insert_config(&self, shape: GemmShape, cfg: TunedConfig) {
+        let bucket = ShapeBucket::of(shape);
+        self.cache.lock().expect("tuner cache").insert(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+            cfg,
+        );
+    }
+
+    /// Fold one *measured* serving latency for `shape` back into the
+    /// cache — the online half of the Block2Time loop. Updates the
+    /// observation EWMA and blends the cached prediction toward the
+    /// measurement; reports [`Observation::Drifted`] when the staleness
+    /// policy says the entry needs a full re-tune.
+    pub fn observe(&self, shape: GemmShape, measured_s: f64) -> Observation {
+        if !(measured_s.is_finite() && measured_s > 0.0) {
+            return Observation::Rejected;
+        }
+        let bucket = ShapeBucket::of(shape);
+        let mut drift = f64::INFINITY;
+        let mut observations = 0u64;
+        let updated = self.cache.lock().expect("tuner cache").update(
+            &bucket,
+            self.opts.bytes_per_elem,
+            &self.fingerprint,
+            |cfg| {
+                drift = if cfg.predicted_s.is_finite() && cfg.predicted_s > 0.0
+                {
+                    (cfg.predicted_s - measured_s).abs() / measured_s
+                } else {
+                    f64::INFINITY // poisoned prediction: maximal drift
+                };
+                cfg.observed_n += 1;
+                cfg.observed_s = if cfg.observed_n == 1
+                    || !cfg.observed_s.is_finite()
+                {
+                    measured_s
+                } else {
+                    (1.0 - OBSERVE_ALPHA) * cfg.observed_s
+                        + OBSERVE_ALPHA * measured_s
+                };
+                cfg.predicted_s =
+                    if cfg.predicted_s.is_finite() && cfg.predicted_s > 0.0 {
+                        (1.0 - PREDICT_BLEND) * cfg.predicted_s
+                            + PREDICT_BLEND * measured_s
+                    } else {
+                        measured_s
+                    };
+                observations = cfg.observed_n;
+            },
+        );
+        if !updated {
+            return Observation::NoEntry;
+        }
+        if observations >= self.staleness.min_observations
+            && drift > self.staleness.max_drift
+        {
+            Observation::Drifted { drift }
+        } else {
+            Observation::Updated { drift }
+        }
+    }
+
+    /// Apply the age-out half of the staleness policy now and report
+    /// which surviving entries have drifted (by observation EWMA).
+    pub fn sweep_stale(&self) -> SweepReport {
+        self.cache
+            .lock()
+            .expect("tuner cache")
+            .sweep_stale(now_epoch_s(), &self.staleness)
+    }
+
+    /// Offline re-validation (`streamk tune --revalidate`): age out
+    /// untouched entries, then probe every surviving entry of this
+    /// device with a fresh measurement; entries whose stored
+    /// `measured_s` drifted past policy are re-tuned, the rest get
+    /// their measurement refreshed. Never holds the cache lock across
+    /// a probe or a tune.
+    pub fn revalidate(&self) -> RevalidateReport {
+        let mut report = RevalidateReport::default();
+        let entries = {
+            let mut cache = self.cache.lock().expect("tuner cache");
+            report.aged_out =
+                cache.sweep_stale(now_epoch_s(), &self.staleness).aged_out;
+            cache.entries_for(&self.fingerprint)
+        };
+        for (key, cfg) in entries {
+            let Some((bucket, bpe, _)) = cache::split_key(&key) else {
+                report.skipped += 1;
+                continue;
+            };
+            if bpe != self.opts.bytes_per_elem {
+                report.skipped += 1;
+                continue;
+            }
+            report.checked += 1;
+            let cand =
+                Candidate { params: cfg.params, pad: cfg.pad, cus: cfg.cus };
+            let fresh = measure(&self.dev, bucket.representative(), &cand);
+            let stale = match fresh {
+                Some(t)
+                    if cfg.measured_s.is_finite() && cfg.measured_s > 0.0 =>
+                {
+                    (t - cfg.measured_s).abs() / cfg.measured_s
+                        > self.staleness.max_drift
+                }
+                // unmeasurable config or poisoned entry: re-tune
+                _ => true,
+            };
+            if stale {
+                match self.tune_and_insert(bucket.representative()) {
+                    Ok(_) => report.retuned += 1,
+                    Err(_) => report.skipped += 1,
+                }
+            } else {
+                let t = fresh.expect("non-stale implies a fresh probe");
+                self.cache.lock().expect("tuner cache").update(
+                    &bucket,
+                    bpe,
+                    &self.fingerprint,
+                    |c| c.measured_s = t,
+                );
+                report.refreshed += 1;
+            }
+        }
+        report
+    }
+
+    /// A copy of the current cache contents (the fleet merges these for
+    /// single-file persistence).
+    pub fn cache_snapshot(&self) -> TuningCache {
+        self.cache.lock().expect("tuner cache").clone()
     }
 
     /// Replace the in-memory cache with the persisted one at `path`
@@ -190,5 +444,166 @@ mod tests {
         assert_eq!(n, 1);
         assert!(fresh.lookup(shape).is_some());
         std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn observe_without_entry_reports_no_entry() {
+        let t = tuner();
+        assert_eq!(
+            t.observe(GemmShape::new(480, 512, 512), 1.0e-3),
+            Observation::NoEntry
+        );
+    }
+
+    #[test]
+    fn observe_rejects_poisoned_measurements() {
+        let t = tuner();
+        let shape = GemmShape::new(480, 512, 512);
+        t.tune_and_insert(shape).unwrap();
+        let before = t.lookup(shape).unwrap();
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.0] {
+            assert_eq!(t.observe(shape, bad), Observation::Rejected);
+        }
+        let after = t.lookup(shape).unwrap();
+        assert_eq!(after.observed_n, 0, "rejected samples never land");
+        assert_eq!(after.predicted_s, before.predicted_s);
+    }
+
+    #[test]
+    fn observations_tighten_the_prediction() {
+        let t = tuner();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        t.tune_and_insert(shape).unwrap();
+        let p0 = t.lookup(shape).unwrap().predicted_s;
+        // serve a constant "real" latency 40% above the prediction
+        let real = p0 * 1.4;
+        let mut last_drift = f64::INFINITY;
+        for i in 1..=6u64 {
+            match t.observe(shape, real) {
+                Observation::Updated { drift } => {
+                    assert!(
+                        drift < last_drift,
+                        "drift must shrink: {drift} vs {last_drift}"
+                    );
+                    last_drift = drift;
+                }
+                other => panic!("observation {i}: unexpected {other:?}"),
+            }
+        }
+        let cfg = t.lookup(shape).unwrap();
+        assert_eq!(cfg.observed_n, 6);
+        assert!((cfg.observed_s - real).abs() / real < 0.05);
+        // prediction converged toward reality
+        assert!((cfg.predicted_s - real).abs() < (p0 - real).abs());
+    }
+
+    #[test]
+    fn heavy_drift_flags_revalidation_after_min_observations() {
+        let t = tuner().with_staleness(StalenessPolicy {
+            max_drift: 0.5,
+            min_observations: 2,
+            ..Default::default()
+        });
+        let shape = GemmShape::new(480, 512, 512);
+        t.tune_and_insert(shape).unwrap();
+        let p0 = t.lookup(shape).unwrap().predicted_s;
+        let real = p0 * 10.0; // 90% off
+        // first observation: under min_observations, never flags
+        assert!(matches!(
+            t.observe(shape, real),
+            Observation::Updated { .. }
+        ));
+        // second observation crosses min_observations while the blended
+        // prediction is still 67% off → flagged for re-tune
+        assert!(matches!(
+            t.observe(shape, real),
+            Observation::Drifted { drift } if drift > 0.5
+        ));
+    }
+
+    #[test]
+    fn retune_after_drift_converges_instead_of_cycling() {
+        // Serving latencies live in different units than the
+        // simulator's estimate (wall-clock vs modeled seconds). A
+        // plain re-tune would restore the simulated prediction and
+        // drift again on the very next observation; the
+        // observation-carrying re-tune must come back within policy.
+        let t = tuner().with_staleness(StalenessPolicy {
+            max_drift: 0.5,
+            min_observations: 2,
+            ..Default::default()
+        });
+        let shape = GemmShape::new(480, 512, 512);
+        t.tune_and_insert(shape).unwrap();
+        let real = t.lookup(shape).unwrap().predicted_s * 1e4; // other units
+        assert!(matches!(
+            t.observe(shape, real),
+            Observation::Updated { .. }
+        ));
+        assert!(matches!(
+            t.observe(shape, real),
+            Observation::Drifted { .. }
+        ));
+        t.retune_keeping_observations(shape).unwrap();
+        let cfg = t.lookup(shape).unwrap();
+        assert_eq!(cfg.observed_n, 2, "observations survive the re-tune");
+        // prediction now sits at the observed latency, so the next
+        // observation is within policy — the cycle is broken
+        assert!(matches!(
+            t.observe(shape, real),
+            Observation::Updated { drift } if drift < 0.5
+        ));
+    }
+
+    #[test]
+    fn peek_is_read_only() {
+        let t = tuner();
+        let shape = GemmShape::new(480, 512, 512);
+        assert!(t.peek(shape).is_none());
+        t.tune_and_insert(shape).unwrap();
+        assert_eq!(t.peek(shape), t.lookup(shape));
+    }
+
+    #[test]
+    fn revalidate_retunes_entries_that_drifted_from_fresh_probe() {
+        let t = tuner();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        t.tune_and_insert(shape).unwrap();
+        let good = t.lookup(shape).unwrap();
+
+        // Poison the stored measurement (as if the device changed under
+        // us): revalidate must catch it against the fresh probe.
+        let mut poisoned = good;
+        poisoned.measured_s = good.measured_s * 100.0;
+        t.insert_config(shape, poisoned);
+
+        let report = t.revalidate();
+        assert_eq!(report.checked, 1);
+        assert_eq!(report.retuned, 1);
+        assert_eq!(report.refreshed, 0);
+        let back = t.lookup(shape).unwrap();
+        assert!(
+            (back.measured_s - good.measured_s).abs()
+                < good.measured_s * 0.5,
+            "re-tune restored a sane measurement: {} vs {}",
+            back.measured_s,
+            good.measured_s
+        );
+
+        // a second pass finds nothing to do but a refresh
+        let report = t.revalidate();
+        assert_eq!(report.checked, 1);
+        assert_eq!(report.retuned, 0);
+        assert_eq!(report.refreshed, 1);
+    }
+
+    #[test]
+    fn snapshot_is_a_copy() {
+        let t = tuner();
+        t.tune_and_insert(GemmShape::new(480, 512, 512)).unwrap();
+        let snap = t.cache_snapshot();
+        assert_eq!(snap.len(), 1);
+        t.tune_and_insert(GemmShape::new(4000, 4000, 4000)).unwrap();
+        assert_eq!(snap.len(), 1, "snapshot must not alias the live cache");
     }
 }

@@ -54,6 +54,11 @@ impl Default for TuneOptions {
 }
 
 /// The winning configuration for one (shape bucket, device) key.
+///
+/// `predicted_s` starts as the Block2Time model's estimate and is
+/// *refined online*: every measured serving latency folded back through
+/// [`crate::tuner::Tuner::observe`] blends it toward reality, so the
+/// fleet scheduler's completion estimates tighten as traffic flows.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TunedConfig {
     pub params: crate::decomp::params::KernelParams,
@@ -61,6 +66,11 @@ pub struct TunedConfig {
     pub cus: usize,
     pub predicted_s: f64,
     pub measured_s: f64,
+    /// EWMA of measured request latencies observed while serving
+    /// (0.0 until `observed_n > 0`).
+    pub observed_s: f64,
+    /// How many serving observations have been folded in.
+    pub observed_n: u64,
 }
 
 /// Everything a tune run did, for observability and the bench tables.
@@ -278,6 +288,8 @@ pub fn tune(
         cus: default_cand.cus,
         predicted_s: predicted(&model, dev, shape, &default_cand),
         measured_s: default_s,
+        observed_s: 0.0,
+        observed_n: 0,
     });
     let mut measured = 1; // the default baseline above
     let mut skipped = 0;
@@ -306,6 +318,8 @@ pub fn tune(
                 cus: cand.cus,
                 predicted_s: *pred,
                 measured_s: t,
+                observed_s: 0.0,
+                observed_n: 0,
             });
         }
     }

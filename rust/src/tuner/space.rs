@@ -8,8 +8,9 @@
 //! illegal points are never visited and every rejection carries a named
 //! reason.
 
+use crate::decomp::occupancy::dp_efficiency;
 use crate::decomp::params::{check, exploration_grid_bpe, KernelParams};
-use crate::decomp::GemmShape;
+use crate::decomp::{GemmShape, TileGrid};
 use std::collections::BTreeMap;
 
 /// Artifact padding policy, as a typed axis (the router's "none" /
@@ -75,17 +76,35 @@ pub struct SpaceStats {
     pub deduped: usize,
 }
 
-/// Grid-size axis: the full device plus halvings (the report's CLI
-/// "Compute Units" parameter — the one that triggered the CK bug — is
-/// worth tuning because small problems can prefer fewer CUs to fewer
-/// fixup fragments).
-fn grid_sizes(dev_cus: usize) -> Vec<usize> {
-    let mut out = Vec::new();
-    let mut c = dev_cus;
-    while c >= 1 && out.len() < 3 {
-        out.push(c);
-        c /= 2;
+/// Grid-size axis, occupancy-guided (the report's CLI "Compute Units"
+/// parameter — the one that triggered the CK bug — is worth tuning
+/// because small problems can prefer fewer CUs to fewer fixup
+/// fragments). Instead of naive halvings from the device CU count,
+/// candidates come from the tile count of *this* problem at *this*
+/// block:
+///
+/// - the full device (Stream-K's home turf — near-perfect occupancy by
+///   construction);
+/// - `min(tiles, dev_cus)` — never launch more CUs than output tiles,
+///   the pure idle-CU cap;
+/// - the largest grid ≤ that cap with the best data-parallel wave
+///   efficiency ([`dp_efficiency`]): full waves mean zero fixup
+///   fragments, which is exactly where small problems win.
+fn grid_sizes(tiles: usize, dev_cus: usize) -> Vec<usize> {
+    let cap = tiles.clamp(1, dev_cus);
+    let mut best = (0.0f64, 1usize);
+    for c in 1..=cap {
+        let e = dp_efficiency(tiles, c);
+        // ties go to the larger grid: same occupancy, more parallelism
+        if e >= best.0 {
+            best = (e, c);
+        }
     }
+    let mut out = vec![dev_cus, cap, best.1];
+    out.retain({
+        let mut seen = std::collections::HashSet::new();
+        move |c| seen.insert(*c)
+    });
     out
 }
 
@@ -102,7 +121,6 @@ pub fn enumerate(
     let mut stats = SpaceStats::default();
     let mut out = Vec::new();
     let mut seen = std::collections::HashSet::new();
-    let grids = grid_sizes(dev_cus);
     for params in exploration_grid_bpe(bytes_per_elem) {
         // Legality depends only on the block parameters: check once per
         // grid point, count each rejection reason once per grid point.
@@ -114,10 +132,13 @@ pub fn enumerate(
             }
             continue;
         }
+        // Grid candidates depend on the tile count, which depends on
+        // the (effective) block — occupancy guidance is per block point.
+        let eff_block = params.block.effective(shape);
+        let tiles = TileGrid::new(shape, eff_block).num_tiles();
         for pad in [PadPolicy::None, PadPolicy::Physical] {
-            for &cus in &grids {
+            for &cus in &grid_sizes(tiles, dev_cus) {
                 stats.total += 1;
-                let eff_block = params.block.effective(shape);
                 if seen.insert((eff_block, params.double_buffer, pad, cus)) {
                     stats.legal += 1;
                     out.push(Candidate { params, pad, cus });
@@ -156,11 +177,11 @@ mod tests {
         }
         // the candidate books balance
         assert_eq!(stats.legal + stats.deduped, stats.total, "{stats:?}");
-        assert_eq!(
-            stats.total,
-            (stats.block_points - stats.illegal_blocks) * 6,
-            "legal blocks × 2 pads × 3 grid sizes"
-        );
+        // grid candidates are occupancy-guided and per-block (1..=3 of
+        // them), so the totals are bounded, not fixed
+        let legal_blocks = stats.block_points - stats.illegal_blocks;
+        assert!(stats.total >= legal_blocks * 2, "{stats:?}");
+        assert!(stats.total <= legal_blocks * 6, "{stats:?}");
         assert_eq!(stats.legal, cands.len());
         // no illegal point survives
         for c in &cands {
@@ -199,10 +220,38 @@ mod tests {
     }
 
     #[test]
-    fn grid_axis_halves_from_device() {
-        assert_eq!(grid_sizes(120), vec![120, 60, 30]);
-        assert_eq!(grid_sizes(1), vec![1]);
-        assert_eq!(grid_sizes(5), vec![5, 2, 1]);
+    fn grid_axis_is_occupancy_guided() {
+        // 960 tiles on a 120-CU device: 8 exact waves — the full device
+        // is already the occupancy optimum, one candidate suffices.
+        assert_eq!(grid_sizes(960, 120), vec![120]);
+        // 3 tiles: cap at the tile count (no idle CUs); 3 CUs is also
+        // the best full-wave grid.
+        assert_eq!(grid_sizes(3, 120), vec![120, 3]);
+        // 961 tiles: 961 = 31², so 31 CUs runs perfectly full waves
+        // where the naive 120-CU launch idles 119 CUs in the last wave.
+        assert_eq!(grid_sizes(961, 120), vec![120, 31]);
+        // degenerate corners
+        assert_eq!(grid_sizes(1, 1), vec![1]);
+        assert_eq!(grid_sizes(0, 120), vec![120, 1]);
+        // every candidate is launchable: within [1, dev_cus]
+        for tiles in [1usize, 7, 31, 120, 960, 961, 5000] {
+            for c in grid_sizes(tiles, 120) {
+                assert!((1..=120).contains(&c), "tiles={tiles} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn occupancy_guided_grid_beats_naive_halving_on_awkward_tiles() {
+        // The case halving can't reach: 961 tiles. Naive halvings
+        // {120, 60, 30} all leave a ragged last wave; the occupancy
+        // scan finds the divisor grid.
+        use crate::decomp::occupancy::dp_efficiency;
+        let best = *grid_sizes(961, 120).last().unwrap();
+        assert!(dp_efficiency(961, best) > 0.999, "best={best}");
+        for naive in [120usize, 60, 30] {
+            assert!(dp_efficiency(961, naive) < 0.98, "naive={naive}");
+        }
     }
 
     #[test]
