@@ -4,7 +4,12 @@
 //! overload/shedding behaviour. This regenerates the serving-side
 //! numbers recorded in EXPERIMENTS.md §E2E.
 //!
-//! Run: `cargo bench --bench e2e_serve`
+//! Run: `cargo bench --bench e2e_serve` (needs `make artifacts`)
+//! CI smoke: `cargo bench --bench e2e_serve -- --test` — runs a
+//! repeated-shape GEMM trace through the full coordinator over the
+//! checked-in `examples/minimal_artifacts` manifest and asserts the
+//! plan cache's zero-rebuild hot path: >90% hit rate and zero schedule
+//! builds once warm.
 
 use std::path::Path;
 
@@ -16,6 +21,83 @@ use streamk::prop::Rng;
 use streamk::runtime::{spawn_engine, Manifest};
 
 const REQUESTS: usize = 120;
+
+/// Plan-cache smoke over the interpreter-backend coordinator: no
+/// `make artifacts` needed, so this runs in CI.
+fn run_smoke() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("minimal_artifacts");
+    let manifest = Manifest::load(&dir).expect("checked-in minimal manifest");
+    let (engine, _join) = spawn_engine(manifest).expect("engine");
+    // tune-on-miss off: the smoke isolates the plan cache's serving
+    // counters from background tuner traffic.
+    let settings = Settings {
+        workers: 2,
+        tune_on_miss: false,
+        ..Settings::default()
+    };
+    let coord = Coordinator::start(engine, &settings);
+    let handle = coord.handle.clone();
+
+    let gemm = |handle: &streamk::coordinator::CoordinatorHandle| {
+        let w = handle.submit_gemm(
+            128,
+            128,
+            128,
+            vec![1.0; 128 * 128],
+            vec![1.0; 128 * 128],
+        );
+        let resp = w.recv().expect("gemm reply");
+        let out = resp.result.expect("gemm ok");
+        assert!(
+            out.iter().all(|&v| (v - 128.0).abs() < 1e-2),
+            "ones x ones must give k"
+        );
+    };
+
+    // Warm touch: the first request builds the shape's plans (one for
+    // the placement prior's grid, one for the artifact's CU grid).
+    gemm(&handle);
+    let warm = handle.metrics().snapshot().plan;
+    assert!(warm.builds > 0, "cold request must build plans");
+
+    // Repeated-shape trace: every subsequent request must be pure hits.
+    let repeats = 49usize;
+    for _ in 0..repeats {
+        gemm(&handle);
+    }
+    let snap = handle.metrics().snapshot();
+    let plan = snap.plan;
+    println!(
+        "smoke: {} requests | plan cache {} hits / {} misses \
+         ({:.1}% hit rate) | {} builds ({:.2} ms total) | {} entries",
+        repeats + 1,
+        plan.hits,
+        plan.misses,
+        plan.hit_rate() * 100.0,
+        plan.builds,
+        plan.build_time_s * 1e3,
+        plan.entries,
+    );
+    assert_eq!(
+        plan.builds, warm.builds,
+        "hit path must not rebuild schedules"
+    );
+    assert!(
+        plan.hits >= warm.hits + repeats as u64,
+        "every repeated request must hit the plan cache"
+    );
+    assert!(
+        plan.hit_rate() > 0.9,
+        "repeated-shape trace must exceed 90% hit rate: {:.3}",
+        plan.hit_rate()
+    );
+    assert_eq!(snap.completed, repeats as u64 + 1);
+    coord.shutdown();
+    println!("e2e_serve smoke OK ({:.1}% plan hit rate)", plan.hit_rate() * 100.0);
+}
 
 fn run_stream(settings: &Settings, requests: usize) -> (f64, u64, f64, f64, f64) {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -58,6 +140,13 @@ fn run_stream(settings: &Settings, requests: usize) -> (f64, u64, f64, f64, f64)
 }
 
 fn main() {
+    // `cargo bench --bench e2e_serve -- --test` forwards `--test`;
+    // cargo itself may inject `--bench`, ignored like every other
+    // unknown flag (harness = false).
+    if std::env::args().skip(1).any(|a| a == "--test") {
+        run_smoke();
+        return;
+    }
     println!("== 1. batching policy sweep ({REQUESTS} MLP requests) ==\n");
     let mut t = Table::new(&[
         "max_batch", "window µs", "req/s", "batches", "mean rows",

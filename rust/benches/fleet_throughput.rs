@@ -11,10 +11,11 @@
 //! Run: `cargo bench --bench fleet_throughput`
 //! CI smoke: `cargo bench --bench fleet_throughput -- --test`
 
+use streamk::bench::workload::Arrival;
 use streamk::bench::Table;
 use streamk::fleet::{
-    demo_fleet_devices, gen_trace, run_trace, warm, Fleet, PlacementPolicy,
-    ShapeMix,
+    demo_fleet_devices, gen_open_trace, gen_trace, run_trace, run_trace_open,
+    warm, Fleet, PlacementPolicy, ShapeMix,
 };
 use streamk::tuner::{Budget, StalenessPolicy, TuneOptions};
 
@@ -137,5 +138,64 @@ fn main() {
         last * 100.0,
         best.drifts.len(),
     );
+
+    println!("\n== 4. open-loop arrivals (queueing delay visible) ==\n");
+    // Offered load at ~1.5× round-robin's sustained closed-loop rate:
+    // rr's slow devices queue throughout the run, completion-time
+    // placement drains strictly faster — the queueing delay the
+    // closed-loop burst comparison could never show.
+    let rate = 1.5 * requests as f64 / rr.makespan_s.max(1e-12);
+    let open = gen_open_trace(
+        7,
+        requests,
+        &mix,
+        Arrival::Poisson { rate },
+    );
+    let rr_o = run_trace_open(&fleet, &open, PlacementPolicy::RoundRobin, false);
+    let b2t_o = run_trace_open(&fleet, &open, PlacementPolicy::Block2Time, false);
+    let mut t = Table::new(&[
+        "policy", "makespan ms", "queue mean ms", "queue p95 ms", "TFLOP/s",
+    ]);
+    for r in [&rr_o, &b2t_o] {
+        t.row(&[
+            format!("{:?}", r.policy),
+            format!("{:.3}", r.makespan_s * 1e3),
+            format!("{:.3}", r.queue_delay_mean_s * 1e3),
+            format!("{:.3}", r.queue_delay_p95_s * 1e3),
+            format!("{:.2}", r.throughput_tflops()),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(Poisson {rate:.0} req/s over {requests} requests; arrivals via \
+         bench::workload::Arrival)"
+    );
+    // Acceptance 3: with arrival times in play, placement must cut both
+    // the makespan and the queueing delay.
+    assert!(
+        b2t_o.makespan_s < rr_o.makespan_s,
+        "open loop: fleet placement must beat round-robin: {} vs {}",
+        b2t_o.makespan_s,
+        rr_o.makespan_s
+    );
+    assert!(
+        b2t_o.queue_delay_mean_s < rr_o.queue_delay_mean_s,
+        "open loop: placement must cut queueing delay: {} vs {}",
+        b2t_o.queue_delay_mean_s,
+        rr_o.queue_delay_mean_s
+    );
+    assert!(rr_o.queue_delay_p95_s > 0.0, "overloaded rr must queue");
+
+    let plan = streamk::plan::global().stats();
+    println!(
+        "\nplan cache: {} hits / {} misses ({:.1}% hit rate) | {} builds \
+         ({:.2} ms total build time)",
+        plan.hits,
+        plan.misses,
+        plan.hit_rate() * 100.0,
+        plan.builds,
+        plan.build_time_s * 1e3,
+    );
+
     println!("\nfleet_throughput OK ({speedup:.3}x over round-robin)");
 }

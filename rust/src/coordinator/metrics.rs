@@ -115,6 +115,12 @@ pub struct MetricsSnapshot {
     pub shed: u64,
     pub batches: u64,
     pub mean_batch_rows: f64,
+    /// Process-wide plan-cache counters (hits/misses/builds/build time)
+    /// at snapshot time — the zero-rebuild hot path's effectiveness.
+    /// Shared by the fleet scheduler, the tuner and the interpreter
+    /// runtime, so this reflects every schedule the process priced or
+    /// executed.
+    pub plan: crate::plan::PlanCacheStats,
     /// Tuner-cache effectiveness on the GEMM request path.
     pub tuner_hits: u64,
     pub tuner_misses: u64,
@@ -216,6 +222,7 @@ impl Metrics {
             } else {
                 m.batched_rows as f64 / m.batches as f64
             },
+            plan: crate::plan::global().stats(),
             tuner_hits: m.tuner_hits,
             tuner_misses: m.tuner_misses,
             tunes: m.tune.count(),
@@ -270,6 +277,7 @@ impl MetricsSnapshot {
                 "drift_revalidations",
                 (self.drift_revalidations as usize).into(),
             ),
+            ("plan", self.plan.to_json()),
             ("elapsed_s", self.elapsed_s.into()),
             ("throughput_rps", self.throughput_rps.into()),
             ("tflops", self.tflops.into()),
@@ -330,6 +338,10 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.u("completed").unwrap(), 8);
         assert!(j.get("e2e").unwrap().get("p95_us").is_some());
+        // plan-cache counters are surfaced (values are process-global,
+        // so only their presence is asserted here)
+        assert!(j.get("plan").unwrap().get("hit_rate").is_some());
+        assert!(j.get("plan").unwrap().get("builds").is_some());
     }
 
     #[test]

@@ -166,6 +166,7 @@ impl Coordinator {
             let metrics = metrics.clone();
             let router = router.clone();
             let fleet = fleet.clone();
+            let tune_tx = tune_tx.clone();
             let batcher = Batcher::new(
                 settings.max_batch,
                 Duration::from_micros(settings.batch_window_us),
@@ -176,6 +177,7 @@ impl Coordinator {
                     .spawn(move || {
                         mlp_batch_loop(
                             engines, metrics, router, fleet, batcher, mlp_rx,
+                            tune_tx,
                         )
                     })
                     .expect("spawn batcher"),
@@ -504,7 +506,17 @@ mod tests {
                              {"shape": [64, 64], "dtype": "f32"}],
                  "outputs": [{"shape": [64, 64], "dtype": "f32"}],
                  "m": 64, "n": 64, "k": 64, "algo": "streamk",
-                 "pad": "none", "dtype": "f32", "cus": 8}
+                 "pad": "none", "dtype": "f32", "cus": 8},
+                {"name": "mlp_streamk_f32_b8_256x512x256",
+                 "file": "unused.hlo.txt", "experiment": "test",
+                 "kind": "mlp", "flops": 4194304,
+                 "inputs": [{"shape": [8, 256], "dtype": "f32"},
+                             {"shape": [256, 512], "dtype": "f32"},
+                             {"shape": [512], "dtype": "f32"},
+                             {"shape": [512, 256], "dtype": "f32"},
+                             {"shape": [256], "dtype": "f32"}],
+                 "outputs": [{"shape": [8, 256], "dtype": "f32"}],
+                 "dtype": "f32", "batch": 8}
               ]
             }"#,
         )
@@ -589,6 +601,57 @@ mod tests {
         let snap = coord.handle.metrics().snapshot();
         assert_eq!(snap.tuner_hits, 1);
         assert_eq!(snap.tuner_misses, 0);
+        coord.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mlp_batches_fold_into_the_tune_on_miss_queue() {
+        // The batcher's GEMM-equivalent bucket must flow through the
+        // same background tune queue as GEMM misses (the PR-2 ROADMAP
+        // gap: MLP observations used to be fire-and-forget NoEntry).
+        let (manifest, dir) = test_manifest("mlp-tune");
+        let (engine, _join) = spawn_engine(manifest).unwrap();
+        let settings = Settings { workers: 1, ..Settings::default() };
+        let coord = Coordinator::start(engine, &settings);
+
+        let rows = 2usize;
+        let w = coord.handle.submit_mlp(rows, vec![0.1; rows * 256]);
+        assert!(w.recv().unwrap().result.is_ok());
+
+        // The MLP-equivalent GEMM shape the batch was priced as.
+        let params = mlp_params();
+        let eq_shape = GemmShape::new(
+            rows,
+            params.d_hidden,
+            params.d_in + params.d_out,
+        );
+        // The background worker tunes that bucket; wait for it.
+        let sw = Stopwatch::start();
+        while coord.tuner().lookup(eq_shape).is_none()
+            && sw.elapsed_secs() < 30.0
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(
+            coord.tuner().lookup(eq_shape).is_some(),
+            "MLP bucket never reached the tune queue"
+        );
+        // A second batch of the same size now observes a live entry.
+        let w = coord.handle.submit_mlp(rows, vec![0.2; rows * 256]);
+        assert!(w.recv().unwrap().result.is_ok());
+        let sw = Stopwatch::start();
+        loop {
+            let cfg = coord.tuner().lookup(eq_shape).expect("entry stays");
+            if cfg.observed_n >= 1 || sw.elapsed_secs() > 30.0 {
+                assert!(
+                    cfg.observed_n >= 1,
+                    "second batch must fold an observation into the entry"
+                );
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
         coord.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
@@ -776,6 +839,7 @@ fn mlp_batch_loop(
     fleet: Arc<Fleet>,
     mut batcher: Batcher,
     rx: Receiver<MlpRequest>,
+    tune_tx: Sender<TuneJob>,
 ) {
     let params = mlp_params();
     while let Some(plan) = batcher.next_batch(&rx) {
@@ -828,10 +892,29 @@ fn mlp_batch_loop(
         fleet.complete(&placement);
         match run {
             Ok((outs, stats)) => {
-                // Feed the feedback loop; MLP buckets are rarely tuned,
-                // so this is usually a no-op (NoEntry). Revalidation is
-                // the GEMM path's job — the batcher stays simple.
-                let _ = fleet.observe(placement.device, eq_shape, execute_s);
+                // Feed the feedback loop with the batch's GEMM-equivalent
+                // bucket. The batcher participates in the same
+                // tune-on-miss / drift-revalidation queue as the GEMM
+                // path: an untuned MLP bucket schedules a background
+                // tune so future placements of that batch size are
+                // priced from a real entry, and a drifted one re-tunes.
+                match fleet.observe(placement.device, eq_shape, execute_s) {
+                    Observation::NoEntry => {
+                        // best-effort; shed on full
+                        let _ = tune_tx.try_send(TuneJob::Miss {
+                            device: placement.device,
+                            shape: eq_shape,
+                        });
+                    }
+                    Observation::Drifted { .. } => {
+                        metrics.on_drift_revalidate();
+                        let _ = tune_tx.try_send(TuneJob::Revalidate {
+                            device: placement.device,
+                            shape: eq_shape,
+                        });
+                    }
+                    Observation::Updated { .. } | Observation::Rejected => {}
+                }
                 let split = plan.unpack(&outs[0], params.d_out, &offsets);
                 for (req, y) in plan.requests.into_iter().zip(split) {
                     metrics.on_complete(0.0, execute_s, stats.flops);

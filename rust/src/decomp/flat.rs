@@ -1,0 +1,356 @@
+//! Flattened (CSR-style) Stream-K schedule — the zero-rebuild serving
+//! representation.
+//!
+//! [`super::StreamKSchedule`] nests its work lists (`Vec<Vec<Segment>>`,
+//! `Vec<SplitTile>` each owning a `Vec<Contributor>`), which is the right
+//! shape for *construction* but the wrong shape for *serving*: every
+//! simulated launch, every tuner measurement, and every fleet placement
+//! that replays the schedule walks (and historically rebuilt) a pile of
+//! small heap allocations. [`FlatSchedule`] stores the same schedule as
+//! four contiguous arenas plus per-CU / per-tile offset arrays, so
+//! consumers iterate plain slices and a cached plan can be replayed with
+//! zero allocation.
+//!
+//! The flattening is *bit-identical* to the nested form: every
+//! [`WorkItem`], [`Segment`] and [`Contributor`] round-trips exactly
+//! (property-tested below), and the per-CU work items reproduce, element
+//! for element, the lists `gpu_sim::gemm::simulate_streamk` used to build
+//! inline — including the fixup launch's round-robin CU assignment — so
+//! simulated timings are unchanged.
+
+use super::streamk::{Contributor, Segment, StreamKSchedule};
+use super::tile::WorkItem;
+use super::TileGrid;
+
+/// One Stream-K schedule as contiguous arenas + CSR offsets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatSchedule {
+    /// CU / grid-program count.
+    pub p: usize,
+    pub grid: TileGrid,
+    /// Uniform whole tiles per CU in the DP region (wave-strided:
+    /// CU `c` owns tiles `c, c+p, …`).
+    pub dp_tiles_per_cu: usize,
+    /// Phase-1 work items (DP quota then SK segments), grouped by CU.
+    pub items: Vec<WorkItem>,
+    /// `items[item_offsets[cu]..item_offsets[cu + 1]]` is CU `cu`'s list.
+    pub item_offsets: Vec<usize>,
+    /// SK segments (with k-ranges — what the executors need), by CU.
+    pub segments: Vec<Segment>,
+    pub seg_offsets: Vec<usize>,
+    /// Fixup-launch work items, grouped by CU (empty ⇒ no fixup launch).
+    pub fixup_items: Vec<WorkItem>,
+    pub fixup_offsets: Vec<usize>,
+    /// Tiles needing the fixup pass, ascending tile id.
+    pub split_tiles: Vec<usize>,
+    /// Contributors per split tile, in fixup-sum order.
+    pub contributors: Vec<Contributor>,
+    pub contrib_offsets: Vec<usize>,
+}
+
+impl FlatSchedule {
+    /// Flatten a nested schedule. Pure restructuring — no work item is
+    /// added, dropped, or reordered.
+    pub fn from_schedule(s: &StreamKSchedule) -> Self {
+        let p = s.p;
+        let ipt = s.grid.iters_per_tile;
+
+        // Phase-1 items: exactly the per-CU lists the simulator replays
+        // (DP quota first, then the SK segments, in segment order).
+        let mut items = Vec::new();
+        let mut item_offsets = Vec::with_capacity(p + 1);
+        let mut segments = Vec::new();
+        let mut seg_offsets = Vec::with_capacity(p + 1);
+        item_offsets.push(0);
+        seg_offsets.push(0);
+        for cu in 0..p {
+            for tile in s.direct_tiles(cu) {
+                items.push(WorkItem { tile, k_iters: ipt, partial: false });
+            }
+            for g in &s.segments[cu] {
+                items.push(WorkItem {
+                    tile: g.tile,
+                    k_iters: g.k_len,
+                    partial: !g.direct,
+                });
+                segments.push(*g);
+            }
+            item_offsets.push(items.len());
+            seg_offsets.push(segments.len());
+        }
+
+        // Fixup items: split tile `i` lands on CU `i % p` (one store item
+        // plus one partial-read item per contributor) — the same
+        // round-robin grouping the simulator's fixup launch used, so the
+        // per-CU byte-accumulation order is unchanged.
+        let mut split_tiles = Vec::with_capacity(s.split_tiles.len());
+        let mut contributors = Vec::new();
+        let mut contrib_offsets = Vec::with_capacity(s.split_tiles.len() + 1);
+        contrib_offsets.push(0);
+        let mut fix_nested: Vec<Vec<WorkItem>> = vec![Vec::new(); p];
+        for (i, st) in s.split_tiles.iter().enumerate() {
+            split_tiles.push(st.tile);
+            contributors.extend_from_slice(&st.contributors);
+            contrib_offsets.push(contributors.len());
+            let cu = i % p;
+            fix_nested[cu].push(WorkItem {
+                tile: st.tile,
+                k_iters: 0,
+                partial: false,
+            });
+            for _ in &st.contributors {
+                fix_nested[cu].push(WorkItem {
+                    tile: st.tile,
+                    k_iters: 0,
+                    partial: true,
+                });
+            }
+        }
+        let (mut fixup_items, mut fixup_offsets) = (Vec::new(), Vec::new());
+        if !split_tiles.is_empty() {
+            fixup_offsets.push(0);
+            for cu_items in &fix_nested {
+                fixup_items.extend_from_slice(cu_items);
+                fixup_offsets.push(fixup_items.len());
+            }
+        }
+
+        Self {
+            p,
+            grid: s.grid,
+            dp_tiles_per_cu: s.dp_tiles_per_cu,
+            items,
+            item_offsets,
+            segments,
+            seg_offsets,
+            fixup_items,
+            fixup_offsets,
+            split_tiles,
+            contributors,
+            contrib_offsets,
+        }
+    }
+
+    /// Phase-1 work items of one CU.
+    #[inline]
+    pub fn cu_items(&self, cu: usize) -> &[WorkItem] {
+        &self.items[self.item_offsets[cu]..self.item_offsets[cu + 1]]
+    }
+
+    /// SK segments of one CU (k-range detail).
+    #[inline]
+    pub fn cu_segments(&self, cu: usize) -> &[Segment] {
+        &self.segments[self.seg_offsets[cu]..self.seg_offsets[cu + 1]]
+    }
+
+    /// Fixup-launch items of one CU (empty slice when no fixup launch).
+    #[inline]
+    pub fn cu_fixup_items(&self, cu: usize) -> &[WorkItem] {
+        if self.fixup_offsets.is_empty() {
+            return &[];
+        }
+        &self.fixup_items[self.fixup_offsets[cu]..self.fixup_offsets[cu + 1]]
+    }
+
+    /// Contributors of split tile `i` (index into [`Self::split_tiles`]).
+    #[inline]
+    pub fn tile_contributors(&self, i: usize) -> &[Contributor] {
+        &self.contributors[self.contrib_offsets[i]..self.contrib_offsets[i + 1]]
+    }
+
+    /// DP tiles owned by `cu` (wave-strided), mirroring
+    /// [`StreamKSchedule::direct_tiles`].
+    pub fn direct_tiles(&self, cu: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.dp_tiles_per_cu).map(move |wave| wave * self.p + cu)
+    }
+
+    /// Whether a fixup launch exists.
+    #[inline]
+    pub fn has_fixup(&self) -> bool {
+        !self.split_tiles.is_empty()
+    }
+
+    /// Total phase-1 work items.
+    pub fn num_items(&self) -> usize {
+        self.items.len()
+    }
+
+    /// Reconstruct the nested per-CU phase-1 work lists (tests; the
+    /// round-trip the flattening must survive bit-identically).
+    pub fn nested_items(&self) -> Vec<Vec<WorkItem>> {
+        (0..self.p).map(|cu| self.cu_items(cu).to_vec()).collect()
+    }
+
+    /// Reconstruct the nested per-CU fixup work lists.
+    pub fn nested_fixup_items(&self) -> Vec<Vec<WorkItem>> {
+        (0..self.p).map(|cu| self.cu_fixup_items(cu).to_vec()).collect()
+    }
+
+    /// Reconstruct the nested per-CU segment lists.
+    pub fn nested_segments(&self) -> Vec<Vec<Segment>> {
+        (0..self.p).map(|cu| self.cu_segments(cu).to_vec()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{build_schedule, BlockShape, GemmShape};
+    use crate::prop;
+
+    /// The nested per-CU work list `simulate_streamk` historically built
+    /// inline — the reference the flat form must reproduce exactly.
+    fn reference_items(s: &StreamKSchedule) -> Vec<Vec<WorkItem>> {
+        (0..s.p)
+            .map(|cu| {
+                let mut items: Vec<WorkItem> = s
+                    .direct_tiles(cu)
+                    .map(|tile| WorkItem {
+                        tile,
+                        k_iters: s.grid.iters_per_tile,
+                        partial: false,
+                    })
+                    .collect();
+                items.extend(s.segments[cu].iter().map(|g| WorkItem {
+                    tile: g.tile,
+                    k_iters: g.k_len,
+                    partial: !g.direct,
+                }));
+                items
+            })
+            .collect()
+    }
+
+    fn reference_fixup(s: &StreamKSchedule) -> Vec<Vec<WorkItem>> {
+        let mut fix: Vec<Vec<WorkItem>> = vec![Vec::new(); s.p];
+        for (i, st) in s.split_tiles.iter().enumerate() {
+            fix[i % s.p].push(WorkItem {
+                tile: st.tile,
+                k_iters: 0,
+                partial: false,
+            });
+            for _ in &st.contributors {
+                fix[i % s.p].push(WorkItem {
+                    tile: st.tile,
+                    k_iters: 0,
+                    partial: true,
+                });
+            }
+        }
+        fix
+    }
+
+    #[test]
+    fn flatten_matches_nested_on_known_shapes() {
+        for (m, n, k, p) in [
+            (3840usize, 4096usize, 4096usize, 120usize), // Table-1 baseline
+            (1000, 1000, 1000, 120),                     // ragged, fixups
+            (3, 9, 9, 120),                              // tiny
+            (512, 512, 512, 1),                          // serial
+        ] {
+            let s = build_schedule(
+                GemmShape::new(m, n, k),
+                BlockShape::default(),
+                p,
+            )
+            .unwrap();
+            let f = FlatSchedule::from_schedule(&s);
+            assert_eq!(f.nested_items(), reference_items(&s));
+            assert_eq!(f.nested_segments(), s.segments);
+            if s.split_tiles.is_empty() {
+                assert!(!f.has_fixup());
+                assert!(f.fixup_items.is_empty());
+            } else {
+                assert_eq!(f.nested_fixup_items(), reference_fixup(&s));
+            }
+        }
+    }
+
+    /// Satellite acceptance: the flat schedule round-trips bit-identically
+    /// — every Segment / WorkItem / Contributor equal — over random
+    /// problems, blocks and CU counts.
+    #[test]
+    fn prop_flat_round_trips_bit_identically() {
+        prop::check("flat schedule round-trip", 120, |rng| {
+            let m = rng.usize_in(1, 3000);
+            let n = rng.usize_in(1, 3000);
+            let k = rng.usize_in(1, 3000);
+            let p = *rng.choose(&[1usize, 2, 7, 64, 104, 120, 301]);
+            let bm = *rng.choose(&[32usize, 128]);
+            let bn = *rng.choose(&[32usize, 128]);
+            let bk = *rng.choose(&[16usize, 64]);
+            let s = build_schedule(
+                GemmShape::new(m, n, k),
+                BlockShape::new(bm, bn, bk),
+                p,
+            )
+            .map_err(|e| e.to_string())?;
+            let f = FlatSchedule::from_schedule(&s);
+
+            prop::ensure_eq(f.p, s.p, "p")?;
+            prop::ensure_eq(f.dp_tiles_per_cu, s.dp_tiles_per_cu, "dp/cu")?;
+            // phase-1 items == the simulator's historical nested lists
+            prop::ensure(
+                f.nested_items() == reference_items(&s),
+                "phase-1 items differ",
+            )?;
+            // segments round-trip (slice views, then nested)
+            for cu in 0..s.p {
+                prop::ensure(
+                    f.cu_segments(cu) == s.segments[cu].as_slice(),
+                    format!("cu {cu} segments differ"),
+                )?;
+            }
+            // split tiles + contributors round-trip
+            prop::ensure_eq(
+                f.split_tiles.len(),
+                s.split_tiles.len(),
+                "split tile count",
+            )?;
+            for (i, st) in s.split_tiles.iter().enumerate() {
+                prop::ensure_eq(f.split_tiles[i], st.tile, "split tile id")?;
+                prop::ensure(
+                    f.tile_contributors(i) == st.contributors.as_slice(),
+                    format!("tile {} contributors differ", st.tile),
+                )?;
+            }
+            // fixup grouping == the simulator's historical round-robin
+            prop::ensure(
+                f.nested_fixup_items() == reference_fixup(&s),
+                "fixup items differ",
+            )?;
+            // offsets are monotone CSR rows covering the arenas
+            prop::ensure_eq(f.item_offsets.len(), s.p + 1, "item offsets")?;
+            prop::ensure_eq(
+                *f.item_offsets.last().unwrap(),
+                f.items.len(),
+                "item arena covered",
+            )?;
+            prop::ensure(
+                f.item_offsets.windows(2).all(|w| w[0] <= w[1]),
+                "item offsets monotone",
+            )?;
+            prop::ensure(
+                f.seg_offsets.windows(2).all(|w| w[0] <= w[1]),
+                "seg offsets monotone",
+            )
+        });
+    }
+
+    #[test]
+    fn direct_tiles_match_nested() {
+        let s = build_schedule(
+            GemmShape::new(3840, 4096, 4096),
+            BlockShape::default(),
+            120,
+        )
+        .unwrap();
+        let f = FlatSchedule::from_schedule(&s);
+        for cu in [0usize, 7, 119] {
+            assert_eq!(
+                f.direct_tiles(cu).collect::<Vec<_>>(),
+                s.direct_tiles(cu).collect::<Vec<_>>()
+            );
+        }
+    }
+}

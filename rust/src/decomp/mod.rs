@@ -12,11 +12,17 @@
 //!   schedule. Bit-identical to `python/compile/partition.py`
 //!   (enforced by `tests/partition_parity.rs`).
 //!
+//! [`flat`] re-expresses a built schedule as contiguous CSR-style arenas
+//! ([`FlatSchedule`]) — the zero-allocation serving form consumed by the
+//! simulator, the plan cache ([`crate::plan`]), and the interpreter
+//! runtime.
+//!
 //! Plus the report's analytical tools: [`occupancy`] (Figure 1),
 //! [`intensity`] (the AI=1337 measurement), [`params`] (the block-size
 //! legality space CK made impenetrable), and [`swizzle`] (Block2CTile
 //! mappings, where the report located the compute-unit bug).
 
+pub mod flat;
 pub mod intensity;
 pub mod occupancy;
 pub mod params;
@@ -25,6 +31,7 @@ pub mod streamk;
 pub mod swizzle;
 pub mod tile;
 
+pub use flat::FlatSchedule;
 pub use streamk::{
     build_schedule, build_weighted_schedule, Contributor, Segment, SplitTile,
     StreamKSchedule,

@@ -61,6 +61,41 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Scatter `jobs` over a temporary pool of `threads` workers and gather
+/// the results in job order — the one scatter/gather loop the offline
+/// sweeps share (fleet cache warm-up, `tune --suite`, parallel plan
+/// construction). `threads` is clamped to the job count.
+pub fn pool_map<T, R, F>(threads: usize, jobs: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send + 'static,
+    R: Send + 'static,
+    F: Fn(T) -> R + Send + Sync + 'static,
+{
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let n = jobs.len();
+    let threads = threads.clamp(1, n);
+    let pool = ThreadPool::new(threads, n);
+    let (tx, rx) = super::channel::bounded(n);
+    let f = std::sync::Arc::new(f);
+    for (i, job) in jobs.into_iter().enumerate() {
+        let f = f.clone();
+        let tx = tx.clone();
+        pool.submit(move || {
+            let _ = tx.send((i, f(job)));
+        });
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    while let Ok((i, r)) = rx.recv() {
+        out[i] = Some(r);
+    }
+    out.into_iter()
+        .map(|slot| slot.expect("every pool job reports"))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +123,16 @@ mod tests {
         let mut pool = ThreadPool::new(1, 4);
         pool.shutdown();
         assert!(!pool.submit(|| {}));
+    }
+
+    #[test]
+    fn pool_map_preserves_order_and_runs_everything() {
+        let out = pool_map(4, (0..50).collect(), |x: i32| x * 3);
+        assert_eq!(out, (0..50).map(|x| x * 3).collect::<Vec<_>>());
+        let empty: Vec<i32> = pool_map(4, Vec::new(), |x: i32| x);
+        assert!(empty.is_empty());
+        // more threads than jobs is fine (clamped)
+        assert_eq!(pool_map(16, vec![7], |x: i32| x + 1), vec![8]);
     }
 
     #[test]

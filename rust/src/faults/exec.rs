@@ -7,7 +7,7 @@
 //! corruption (not just schedule diffs), and doubles as a semantic
 //! cross-check of `decomp::build_schedule`.
 
-use crate::decomp::StreamKSchedule;
+use crate::decomp::{BlockShape, FlatSchedule, GemmShape, StreamKSchedule};
 
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -166,6 +166,131 @@ pub fn execute_schedule(
     c
 }
 
+// ---------------------------------------------------------------------
+// Flat-schedule executor (the runtime's consumer)
+// ---------------------------------------------------------------------
+
+/// Like [`accumulate_segment`] but over raw row-major slices and a
+/// [`FlatSchedule`], and — deliberately — *without* the `av == 0.0`
+/// skip: the interpreter runtime routes through this, and `0.0 * Inf`
+/// must stay NaN so non-finite inputs propagate exactly as the PJRT
+/// backend would.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_segment_flat(
+    a: &[f32],
+    b: &[f32],
+    shape: GemmShape,
+    flat: &FlatSchedule,
+    blk: BlockShape,
+    tile: usize,
+    k_start: usize,
+    k_len: usize,
+    acc: &mut [f32],
+) {
+    let (tm, tn) = flat.grid.tile_rc(tile);
+    let r0 = (tm * blk.bm).min(shape.m.saturating_sub(blk.bm));
+    let c0 = (tn * blk.bn).min(shape.n.saturating_sub(blk.bn));
+    let k_dim = shape.k;
+    for j in k_start..k_start + k_len {
+        let kg = j * blk.bk;
+        let ks = kg.min(k_dim.saturating_sub(blk.bk));
+        for r in 0..blk.bm {
+            for kk in 0..blk.bk {
+                let kcol = ks + kk;
+                if kcol < kg || kcol >= k_dim {
+                    continue; // the >=-mask of the nopad policy
+                }
+                let av = a[(r0 + r) * k_dim + kcol];
+                let brow = &b[kcol * shape.n..kcol * shape.n + shape.n];
+                for cc in 0..blk.bn {
+                    acc[r * blk.bn + cc] += av * brow[c0 + cc];
+                }
+            }
+        }
+    }
+}
+
+fn store_tile_flat(
+    c: &mut [f32],
+    shape: GemmShape,
+    flat: &FlatSchedule,
+    blk: BlockShape,
+    tile: usize,
+    acc: &[f32],
+) {
+    let (tm, tn) = flat.grid.tile_rc(tile);
+    let r0 = (tm * blk.bm).min(shape.m.saturating_sub(blk.bm));
+    let c0 = (tn * blk.bn).min(shape.n.saturating_sub(blk.bn));
+    for r in 0..blk.bm {
+        for cc in 0..blk.bn {
+            c[(r0 + r) * shape.n + c0 + cc] = acc[r * blk.bn + cc];
+        }
+    }
+}
+
+/// Execute a *flattened* Stream-K schedule over row-major f32 slices —
+/// the executor the interpreter runtime drives from the plan cache.
+/// Phase 1 walks each CU's segment slice (DP quota then SK segments),
+/// the fixup pass sums split-tile contributors; semantics identical to
+/// [`execute_schedule`] except that zero operands are *not* skipped
+/// (see [`accumulate_segment_flat`]).
+pub fn execute_flat(
+    a: &[f32],
+    b: &[f32],
+    shape: GemmShape,
+    flat: &FlatSchedule,
+    blk: BlockShape,
+) -> Vec<f32> {
+    assert_eq!(a.len(), shape.m * shape.k, "A shape");
+    assert_eq!(b.len(), shape.k * shape.n, "B shape");
+    let mut c = vec![0.0f32; shape.m * shape.n];
+    // partials[cu][slot]
+    let mut partials =
+        vec![vec![vec![0.0f32; blk.bm * blk.bn]; 2]; flat.p];
+
+    for cu in 0..flat.p {
+        for tile in flat.direct_tiles(cu) {
+            let mut acc = vec![0.0f32; blk.bm * blk.bn];
+            accumulate_segment_flat(
+                a,
+                b,
+                shape,
+                flat,
+                blk,
+                tile,
+                0,
+                flat.grid.iters_per_tile,
+                &mut acc,
+            );
+            store_tile_flat(&mut c, shape, flat, blk, tile, &acc);
+        }
+        for seg in flat.cu_segments(cu) {
+            let mut acc = vec![0.0f32; blk.bm * blk.bn];
+            accumulate_segment_flat(
+                a, b, shape, flat, blk, seg.tile, seg.k_start, seg.k_len,
+                &mut acc,
+            );
+            if seg.direct {
+                store_tile_flat(&mut c, shape, flat, blk, seg.tile, &acc);
+            } else {
+                partials[cu][seg.slot] = acc;
+            }
+        }
+    }
+
+    for (i, &tile) in flat.split_tiles.iter().enumerate() {
+        let mut acc = vec![0.0f32; blk.bm * blk.bn];
+        for contrib in flat.tile_contributors(i) {
+            let frag = &partials[contrib.cu][contrib.slot];
+            for (dst, src) in acc.iter_mut().zip(frag) {
+                *dst += *src;
+            }
+        }
+        store_tile_flat(&mut c, shape, flat, blk, tile, &acc);
+    }
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -198,6 +323,63 @@ mod tests {
         check(3, 9, 9, 120); // Table-1 small
         check(48, 64, 80, 1); // serial
         check(64, 64, 64, 7); // aligned, odd CU count
+    }
+
+    #[test]
+    fn flat_executor_matches_nested_executor_and_naive() {
+        use crate::decomp::FlatSchedule;
+        for (m, n, k, p) in [
+            (96usize, 102usize, 100usize, 12usize), // ragged hybrid
+            (3, 9, 9, 120),
+            (48, 64, 80, 1),
+            (64, 64, 64, 7),
+        ] {
+            let mut rng = prop::Rng::new((m + n * 3 + k * 7 + p) as u64);
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let sched = build_schedule(
+                GemmShape::new(m, n, k),
+                BlockShape::new(16, 16, 8),
+                p,
+            )
+            .unwrap();
+            let flat = FlatSchedule::from_schedule(&sched);
+            let got = execute_flat(
+                &a.data,
+                &b.data,
+                sched.shape,
+                &flat,
+                sched.block,
+            );
+            let want = naive_gemm(&a, &b);
+            for (i, (g, w)) in got.iter().zip(&want.data).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-3 * w.abs().max(1.0),
+                    "{m}x{n}x{k} p={p} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_executor_propagates_non_finite_inputs() {
+        use crate::decomp::FlatSchedule;
+        // 0·Inf must stay NaN (the interpreter's PJRT-parity contract);
+        // the nested executor's zero-skip would lose it.
+        let m = 8;
+        let mut a = Matrix::zeros(m, m);
+        a.set(0, 0, f32::INFINITY);
+        let b = Matrix::zeros(m, m); // all zeros → Inf * 0 = NaN
+        let sched = build_schedule(
+            GemmShape::new(m, m, m),
+            BlockShape::new(8, 8, 8),
+            2,
+        )
+        .unwrap();
+        let flat = FlatSchedule::from_schedule(&sched);
+        let got =
+            execute_flat(&a.data, &b.data, sched.shape, &flat, sched.block);
+        assert!(got[0].is_nan(), "0*Inf must propagate as NaN, got {}", got[0]);
     }
 
     #[test]

@@ -19,5 +19,5 @@ pub mod exec;
 pub mod validate;
 
 pub use bugs::{Fault, FaultyExecutor};
-pub use exec::{execute_schedule, naive_gemm, Matrix};
+pub use exec::{execute_flat, execute_schedule, naive_gemm, Matrix};
 pub use validate::{error_rate, ErrorReport};

@@ -48,5 +48,6 @@ pub mod sim;
 pub use registry::{demo_fleet_devices, Fleet, FleetDevice};
 pub use scheduler::Placement;
 pub use sim::{
-    gen_trace, run_trace, warm, PlacementPolicy, ShapeMix, SimReport,
+    gen_open_trace, gen_trace, run_trace, run_trace_open, warm, OpenReport,
+    PlacementPolicy, ShapeMix, SimReport, TimedRequest,
 };

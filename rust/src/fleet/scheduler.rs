@@ -6,11 +6,19 @@
 //!
 //! 1. the device's tuner cache (offline-tuned, *refined online* by the
 //!    feedback loop — the freshest signal);
-//! 2. a roofline prior (`max(flops/peak, bytes/bw) + launch overhead`)
-//!    when the bucket was never tuned on that device — a cold device
-//!    still competes instead of starving;
-//! 3. nothing — when even the prior is unusable (degenerate shape),
-//!    placement falls back to least-loaded by queue depth.
+//! 2. a plan-backed simulated prior: the default one-config-per-precision
+//!    kernel's cached [`crate::plan::Plan`] priced on this device — a
+//!    cold device competes with a quantization-aware estimate, and the
+//!    shared plan cache means a repeated shape never re-runs
+//!    decomposition (first touch builds, every later placement replays);
+//! 3. an analytic roofline (`max(flops/peak, bytes/bw) + launch
+//!    overhead`) — defense in depth only: for every non-degenerate
+//!    shape on a sanely constructed [`Device`] the plan prior exists
+//!    and is finite, so this tier is reached only if a hand-built
+//!    device carries pathological parameters (e.g. zero/∞ bandwidth)
+//!    that poison the simulated estimate;
+//! 4. nothing — when the shape is degenerate, placement falls back to
+//!    least-loaded by queue depth.
 //!
 //! Poisoned numbers never propagate: a NaN/∞ cached prediction is
 //! skipped in favor of the prior, a non-finite score disqualifies the
@@ -50,7 +58,8 @@ fn roofline(dev: &Device, shape: GemmShape, bpe: usize) -> Option<f64> {
 impl Fleet {
     /// Block2Time-predicted execution seconds of `shape` on device
     /// `idx`: cached (online-refined) prediction when present and
-    /// finite, roofline prior otherwise, `None` when neither is usable.
+    /// finite, then the plan-backed simulated prior, then the analytic
+    /// roofline, `None` when nothing is usable.
     pub fn predict_exec(&self, idx: usize, shape: GemmShape) -> Option<f64> {
         if shape.is_degenerate() {
             return None;
@@ -65,7 +74,25 @@ impl Fleet {
             }
             // poisoned entry: quarantine, fall through to the prior
         }
-        roofline(d.device(), shape, self.bytes_per_elem())
+        // Plan-backed prior: the default kernel's flattened schedule,
+        // memoized process-wide — untuned buckets are priced by the
+        // same model the simulator measures with, and the hot path
+        // never rebuilds a schedule for a shape it has seen.
+        let dev = d.device();
+        if let Ok(plan) = crate::plan::global().get_or_build(
+            shape,
+            crate::decomp::BlockShape::default(),
+            self.bytes_per_elem(),
+            dev.num_cus,
+        ) {
+            let t = plan.time_on(dev);
+            if t.is_finite() && t > 0.0 {
+                return Some(t);
+            }
+        }
+        // Defensive only — see tier 3 in the module docs: unreachable
+        // unless a hand-built Device's parameters poison the plan time.
+        roofline(dev, shape, self.bytes_per_elem())
     }
 
     /// Place one GEMM: lowest predicted completion time, least-loaded
@@ -160,17 +187,27 @@ impl Fleet {
 mod tests {
     use super::*;
     use crate::fleet::registry::Fleet;
-    use crate::gpu_sim::{Device, DeviceKind};
+    use crate::gpu_sim::Device;
     use crate::prop;
     use crate::tuner::TuneOptions;
 
+    /// Two MI200-class devices with a generous HBM (1000× nominal) so
+    /// the plan-backed prior stays *compute*-bound: the 2×-work
+    /// property below is a statement about compute scaling, and the
+    /// simulated prior — unlike the old whole-problem roofline —
+    /// correctly charges Stream-K's per-iteration block re-streaming,
+    /// which would make a stock MI200 bandwidth-bound here.
     fn two_device_fleet(speed_ratio: f64) -> Fleet {
         Fleet::from_devices(
             vec![
-                Device::preset(DeviceKind::Mi200)
-                    .with_flops_scale(speed_ratio)
-                    .renamed("fast"),
-                Device::preset(DeviceKind::Mi200),
+                Device::uniform(
+                    "fast",
+                    120,
+                    speed_ratio * 45.0e12 / 120.0,
+                    1.6e15,
+                    6.0e-6,
+                ),
+                Device::uniform("base", 120, 45.0e12 / 120.0, 1.6e15, 6.0e-6),
             ],
             TuneOptions::default(),
         )
@@ -238,8 +275,8 @@ mod tests {
             for p in &placements {
                 fleet.complete(p);
             }
-            // the poisoned device falls back to its roofline prior and
-            // still takes a fair share — no blackhole, no starvation
+            // the poisoned device falls back to the plan-backed prior
+            // and still takes a fair share — no blackhole, no starvation
             assert!(counts[0] > 5 && counts[1] > 5, "{poison}: {counts:?}");
         }
     }
@@ -261,7 +298,7 @@ mod tests {
     }
 
     #[test]
-    fn cached_prediction_beats_roofline_prior_when_present() {
+    fn cached_prediction_beats_the_prior_when_present() {
         let fleet = two_device_fleet(1.0);
         let shape = GemmShape::new(1920, 2000, 2000);
         fleet.device(0).tuner.tune_and_insert(shape).unwrap();

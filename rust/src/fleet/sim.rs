@@ -13,11 +13,16 @@
 
 use super::registry::Fleet;
 use super::scheduler::Placement;
+use crate::bench::workload::{Arrival, SizeMix};
 use crate::decomp::params::KernelParams;
 use crate::decomp::{BlockShape, GemmShape};
+use crate::exec::pool_map;
 use crate::prop::Rng;
-use crate::tuner::{measure, Candidate, Observation, PadPolicy, ShapeBucket};
+use crate::tuner::{
+    measure, Candidate, Observation, PadPolicy, ShapeBucket, Tuner,
+};
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 /// Weighted GEMM shape classes — the request-size mix.
 #[derive(Debug, Clone)]
@@ -42,7 +47,9 @@ impl ShapeMix {
         self.0.iter().map(|&(s, _)| s).collect()
     }
 
-    fn sample(&self, rng: &mut Rng) -> GemmShape {
+    /// Draw one shape by weight (public: the open-loop trace generator
+    /// composes this with `bench::workload` arrival processes).
+    pub fn sample(&self, rng: &mut Rng) -> GemmShape {
         let total: f64 = self.0.iter().map(|(_, w)| w).sum();
         let mut u = rng.f64_unit() * total;
         for &(shape, w) in &self.0 {
@@ -111,9 +118,14 @@ impl SimReport {
 }
 
 /// Warm every device's cache for every distinct bucket in `shapes`.
-/// Returns the number of tunes performed.
+/// The (device × bucket) tune jobs are independent, so they fan out
+/// over an [`crate::exec::ThreadPool`] — a 4-device fleet warms in
+/// roughly one tune's wall time per bucket instead of `devices ×
+/// buckets`. Every job shares the process-wide plan cache, so repeated
+/// candidate grids across devices measure against already-flattened
+/// schedules. Returns the number of tunes performed.
 pub fn warm(fleet: &Fleet, shapes: &[GemmShape]) -> usize {
-    let mut tuned = 0;
+    let mut jobs: Vec<(Arc<Tuner>, GemmShape)> = Vec::new();
     for d in fleet.devices() {
         let mut seen = Vec::new();
         for &shape in shapes {
@@ -122,12 +134,36 @@ pub fn warm(fleet: &Fleet, shapes: &[GemmShape]) -> usize {
                 continue;
             }
             seen.push(bucket);
-            if d.tuner.tune_and_insert(shape).is_ok() {
-                tuned += 1;
-            }
+            jobs.push((d.tuner.clone(), shape));
         }
     }
-    tuned
+    pool_map(4, jobs, |(tuner, shape)| {
+        tuner.tune_and_insert(shape).is_ok()
+    })
+    .into_iter()
+    .filter(|&ok| ok)
+    .count()
+}
+
+/// The execution config both replay loops share: the device's tuned
+/// config when cached, else the one-config-per-precision default —
+/// the same rule for every policy, so comparisons isolate *placement*.
+fn tuned_candidate(fleet: &Fleet, idx: usize, shape: GemmShape) -> Candidate {
+    match fleet.device(idx).tuner.lookup(shape) {
+        Some(cfg) => Candidate {
+            params: cfg.params,
+            pad: cfg.pad,
+            cus: cfg.cus,
+        },
+        None => Candidate {
+            params: KernelParams::new(
+                BlockShape::default(),
+                fleet.bytes_per_elem(),
+            ),
+            pad: PadPolicy::None,
+            cus: fleet.device(idx).device().num_cus,
+        },
+    }
 }
 
 /// Run one closed-loop trace (a burst: every request outstanding at
@@ -164,24 +200,7 @@ pub fn run_trace(
         }
         let idx = placement.device;
         let fdev = fleet.device(idx);
-        // Execute with the device's tuned config when cached, else the
-        // one-config-per-precision default — same rule for both
-        // policies, so the comparison isolates *placement*.
-        let cand = match fdev.tuner.lookup(shape) {
-            Some(cfg) => Candidate {
-                params: cfg.params,
-                pad: cfg.pad,
-                cus: cfg.cus,
-            },
-            None => Candidate {
-                params: KernelParams::new(
-                    BlockShape::default(),
-                    fleet.bytes_per_elem(),
-                ),
-                pad: PadPolicy::None,
-                cus: fdev.device().num_cus,
-            },
-        };
+        let cand = tuned_candidate(fleet, idx, shape);
         if policy == PlacementPolicy::Block2Time {
             placements.push(placement);
         }
@@ -243,6 +262,166 @@ pub fn run_trace(
                 drifts,
             })
             .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Open-loop traffic (timed arrivals → queueing delay is visible)
+// ---------------------------------------------------------------------
+
+/// A timed request: arrival offset (seconds from trace start) + shape.
+pub type TimedRequest = (f64, GemmShape);
+
+/// Generate a deterministic *open-loop* trace: arrival times from a
+/// [`bench::workload::Arrival`](crate::bench::workload::Arrival) process,
+/// shapes from the weighted mix. Closed-loop arrivals all land at t=0.
+pub fn gen_open_trace(
+    seed: u64,
+    n: usize,
+    mix: &ShapeMix,
+    arrival: Arrival,
+) -> Vec<TimedRequest> {
+    assert!(!mix.0.is_empty(), "empty shape mix");
+    // The workload module owns the arrival process; one unit-row mix
+    // strips its size dimension, leaving pure timestamps.
+    let times =
+        crate::bench::workload::generate(seed, n, arrival, &SizeMix(vec![(1, 1.0)]));
+    let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
+    times
+        .into_iter()
+        .map(|e| (e.at_s, mix.sample(&mut rng)))
+        .collect()
+}
+
+/// Everything one open-loop run produced. Unlike the closed-loop
+/// [`SimReport`], the makespan here includes *queueing*: a request that
+/// arrives while its device is busy waits, and that wait is reported.
+#[derive(Debug, Clone)]
+pub struct OpenReport {
+    pub policy: PlacementPolicy,
+    pub requests: usize,
+    /// Completion time of the last request (from trace start).
+    pub makespan_s: f64,
+    pub total_flops: f64,
+    pub device_busy_s: Vec<f64>,
+    pub device_requests: Vec<u64>,
+    /// Mean seconds requests spent queued before starting.
+    pub queue_delay_mean_s: f64,
+    /// 95th-percentile queueing delay.
+    pub queue_delay_p95_s: f64,
+}
+
+impl OpenReport {
+    pub fn throughput_tflops(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.total_flops / self.makespan_s / 1e12
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Replay a timed trace as an event simulation: each request arrives at
+/// its timestamp, is placed (earliest predicted completion under
+/// Block2Time — current backlog + [`Fleet::predict_exec`] — or `i % n`
+/// round-robin), queues until its device frees up, then runs for its
+/// *measured* simulator time. With `feedback` on, measurements fold
+/// back through the online re-tuning loop exactly as in the closed
+/// loop.
+pub fn run_trace_open(
+    fleet: &Fleet,
+    trace: &[TimedRequest],
+    policy: PlacementPolicy,
+    feedback: bool,
+) -> OpenReport {
+    let n = fleet.len();
+    let mut free = vec![0.0f64; n];
+    let mut busy = vec![0.0f64; n];
+    let mut counts = vec![0u64; n];
+    let mut delays: Vec<f64> = Vec::with_capacity(trace.len());
+    let mut total_flops = 0.0f64;
+    let mut makespan = 0.0f64;
+
+    for (i, &(at_s, shape)) in trace.iter().enumerate() {
+        let idx = match policy {
+            PlacementPolicy::RoundRobin => i % n,
+            PlacementPolicy::Block2Time => {
+                // earliest predicted completion given each device's
+                // simulated backlog; least-backlogged fallback when no
+                // device has a usable prediction
+                let mut best: Option<(f64, usize)> = None;
+                for d in 0..n {
+                    let Some(pred) = fleet.predict_exec(d, shape) else {
+                        continue;
+                    };
+                    let fin = free[d].max(at_s) + pred;
+                    if fin.is_finite()
+                        && best.map_or(true, |(b, _)| fin < b)
+                    {
+                        best = Some((fin, d));
+                    }
+                }
+                match best {
+                    Some((_, d)) => d,
+                    None => {
+                        let mut least = 0;
+                        for d in 1..n {
+                            if free[d] < free[least] {
+                                least = d;
+                            }
+                        }
+                        least
+                    }
+                }
+            }
+        };
+        let cand = tuned_candidate(fleet, idx, shape);
+        let Some(exec_s) = measure(fleet.device(idx).device(), shape, &cand)
+        else {
+            continue; // unbuildable schedule: request dropped
+        };
+        let start = free[idx].max(at_s);
+        delays.push(start - at_s);
+        free[idx] = start + exec_s;
+        makespan = makespan.max(free[idx]);
+        busy[idx] += exec_s;
+        counts[idx] += 1;
+        total_flops += shape.flops() as f64;
+        if feedback {
+            if let Observation::Drifted { .. } =
+                fleet.observe(idx, shape, exec_s)
+            {
+                let _ = fleet
+                    .device(idx)
+                    .tuner
+                    .retune_keeping_observations(shape);
+            }
+        }
+    }
+
+    delays.sort_by(|a, b| a.total_cmp(b));
+    let mean = if delays.is_empty() {
+        0.0
+    } else {
+        delays.iter().sum::<f64>() / delays.len() as f64
+    };
+    let p95 = if delays.is_empty() {
+        0.0
+    } else {
+        let idx = ((delays.len() as f64 * 0.95).ceil() as usize)
+            .clamp(1, delays.len())
+            - 1;
+        delays[idx]
+    };
+    OpenReport {
+        policy,
+        requests: trace.len(),
+        makespan_s: makespan,
+        total_flops,
+        device_busy_s: busy,
+        device_requests: counts,
+        queue_delay_mean_s: mean,
+        queue_delay_p95_s: p95,
     }
 }
 
@@ -324,6 +503,80 @@ mod tests {
             last < first,
             "feedback must tighten drift: {first} -> {last} ({best:?})"
         );
+    }
+
+    #[test]
+    fn open_trace_is_deterministic_and_time_ordered() {
+        let mix = ShapeMix::skewed_default();
+        let a = gen_open_trace(7, 50, &mix, Arrival::Poisson { rate: 100.0 });
+        let b = gen_open_trace(7, 50, &mix, Arrival::Poisson { rate: 100.0 });
+        assert_eq!(a, b);
+        assert_ne!(
+            a,
+            gen_open_trace(8, 50, &mix, Arrival::Poisson { rate: 100.0 })
+        );
+        for w in a.windows(2) {
+            assert!(w[1].0 >= w[0].0, "arrivals must be non-decreasing");
+        }
+    }
+
+    #[test]
+    fn trickle_arrivals_have_no_queueing_delay() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        // One request per simulated minute: every device idles between
+        // arrivals, so queueing delay must vanish and the makespan is
+        // paced by the arrival process, not the fleet.
+        let trace =
+            gen_open_trace(5, 12, &mix, Arrival::Poisson { rate: 1.0 / 60.0 });
+        let r =
+            run_trace_open(&fleet, &trace, PlacementPolicy::Block2Time, false);
+        assert_eq!(r.requests, 12);
+        assert!(
+            r.queue_delay_p95_s < 1e-9,
+            "idle fleet must not queue: p95 {}",
+            r.queue_delay_p95_s
+        );
+        assert!(r.makespan_s >= trace.last().unwrap().0);
+    }
+
+    #[test]
+    fn open_loop_surfaces_queueing_that_placement_reduces() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        // Offered load at 2× what round-robin sustains on this skewed
+        // fleet: rr's queues grow throughout the run, while
+        // completion-time placement drains strictly faster.
+        let closed = run_trace(
+            &fleet,
+            &gen_trace(42, 60, &mix),
+            PlacementPolicy::RoundRobin,
+            false,
+        );
+        let rate = 2.0 * 60.0 / closed.makespan_s;
+        let trace = gen_open_trace(9, 120, &mix, Arrival::Poisson { rate });
+        let rr =
+            run_trace_open(&fleet, &trace, PlacementPolicy::RoundRobin, false);
+        let b2t =
+            run_trace_open(&fleet, &trace, PlacementPolicy::Block2Time, false);
+        assert_eq!(rr.requests, b2t.requests);
+        assert!(
+            b2t.makespan_s < rr.makespan_s,
+            "placement must shorten the open-loop makespan: {} vs {}",
+            b2t.makespan_s,
+            rr.makespan_s
+        );
+        assert!(
+            b2t.queue_delay_mean_s < rr.queue_delay_mean_s,
+            "placement must cut queueing: {} vs {}",
+            b2t.queue_delay_mean_s,
+            rr.queue_delay_mean_s
+        );
+        // round-robin at this rate visibly queues — the delay the
+        // closed-loop report could never show
+        assert!(rr.queue_delay_p95_s > 0.0);
     }
 
     #[test]

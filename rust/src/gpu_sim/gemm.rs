@@ -2,7 +2,9 @@
 
 use super::device::Device;
 use crate::decomp::tile::WorkItem;
-use crate::decomp::{BlockShape, GemmShape, StreamKSchedule, TileGrid};
+use crate::decomp::{
+    BlockShape, FlatSchedule, GemmShape, StreamKSchedule, TileGrid,
+};
 
 /// Timing breakdown of one simulated kernel launch.
 #[derive(Debug, Clone, PartialEq)]
@@ -30,8 +32,9 @@ pub struct SimResult {
 }
 
 /// Per-item HBM traffic: one A block + one B block per MAC iteration,
-/// one C tile store per item (partial or final).
-fn item_bytes(item: &WorkItem, block: BlockShape, bpe: usize) -> f64 {
+/// one C tile store per item (partial or final). Public so the plan
+/// cache can precompute launch invariants at plan-build time.
+pub fn item_bytes(item: &WorkItem, block: BlockShape, bpe: usize) -> f64 {
     let stream =
         item.k_iters * (block.bm * block.bk + block.bk * block.bn) * bpe;
     // Partials are written (and later re-read) in f32.
@@ -39,14 +42,14 @@ fn item_bytes(item: &WorkItem, block: BlockShape, bpe: usize) -> f64 {
     (stream + store) as f64
 }
 
-fn item_flops(item: &WorkItem, block: BlockShape) -> f64 {
+pub fn item_flops(item: &WorkItem, block: BlockShape) -> f64 {
     item.k_iters as f64 * block.flops_per_iter() as f64
 }
 
 /// Fraction of each systolic-array pass holding real data — blocks
 /// smaller than the MXU tile waste the remainder (the report's
 /// 16x16-per-XDL failure is the extreme of this).
-fn mxu_fill(block: BlockShape, bpe: usize) -> f64 {
+pub fn mxu_fill(block: BlockShape, bpe: usize) -> f64 {
     crate::decomp::params::KernelParams::new(block, bpe)
         .mxu_utilization()
         .max(1e-3)
@@ -88,60 +91,84 @@ pub fn simulate_launch(
     }
 }
 
-/// Simulate a full Stream-K execution: phase-1 launch + (if any split
-/// tiles) the fixup launch.
+/// Simulate one launch over a flattened (CSR) per-CU work arena —
+/// same math as [`simulate_launch`], consuming slices instead of
+/// nested Vecs. `offsets` has one row per CU plus the end sentinel.
+pub fn simulate_launch_flat(
+    dev: &Device,
+    items: &[WorkItem],
+    offsets: &[usize],
+    block: BlockShape,
+    bpe: usize,
+) -> LaunchStats {
+    assert_eq!(offsets.len(), dev.num_cus + 1, "offset row per CU");
+    let mut cu_busy = vec![0.0; dev.num_cus];
+    let mut bytes = 0.0;
+    let fill = mxu_fill(block, bpe);
+    for cu in 0..dev.num_cus {
+        let speed = dev.flops_per_cu * dev.cu_speed[cu] * fill;
+        for item in &items[offsets[cu]..offsets[cu + 1]] {
+            cu_busy[cu] += item_flops(item, block) / speed
+                + item.k_iters as f64 * dev.iter_overhead;
+            bytes += item_bytes(item, block, bpe);
+        }
+    }
+    let compute_span =
+        cu_busy.iter().cloned().fold(0.0f64, f64::max);
+    let mem_span = bytes / dev.hbm_bw;
+    let memory_bound = mem_span > compute_span;
+    LaunchStats {
+        time_s: compute_span.max(mem_span) + dev.launch_overhead,
+        cu_busy,
+        bytes,
+        memory_bound,
+    }
+}
+
+/// Simulate a full Stream-K execution from its flattened schedule:
+/// phase-1 launch + (if any split tiles) the fixup launch.
+pub fn simulate_flat(
+    dev: &Device,
+    shape: GemmShape,
+    flat: &FlatSchedule,
+    block: BlockShape,
+    bpe: usize,
+) -> SimResult {
+    assert_eq!(dev.num_cus, flat.p, "schedule built for different CU count");
+    let mut launches = vec![simulate_launch_flat(
+        dev,
+        &flat.items,
+        &flat.item_offsets,
+        block,
+        bpe,
+    )];
+    // Fixup: each split tile re-reads its contributors' partials
+    // (modeled as `partial` C-tile traffic) and writes the final tile.
+    // Tiny traffic-dominated launch.
+    if flat.has_fixup() {
+        launches.push(simulate_launch_flat(
+            dev,
+            &flat.fixup_items,
+            &flat.fixup_offsets,
+            block,
+            bpe,
+        ));
+    }
+    finish(dev, shape, launches)
+}
+
+/// Simulate a full Stream-K execution: flattens the nested schedule
+/// once and replays it through [`simulate_flat`]. Hot paths should
+/// cache the [`FlatSchedule`] (see [`crate::plan`]) instead of
+/// re-flattening per call.
 pub fn simulate_streamk(
     dev: &Device,
     sched: &StreamKSchedule,
     bpe: usize,
 ) -> SimResult {
     assert_eq!(dev.num_cus, sched.p, "schedule built for different CU count");
-    let block = sched.block;
-    // Phase 1: DP quota + SK segments per CU.
-    let work: Vec<Vec<WorkItem>> = (0..sched.p)
-        .map(|cu| {
-            let mut items: Vec<WorkItem> = sched
-                .direct_tiles(cu)
-                .map(|tile| WorkItem {
-                    tile,
-                    k_iters: sched.grid.iters_per_tile,
-                    partial: false,
-                })
-                .collect();
-            items.extend(sched.segments[cu].iter().map(|g| WorkItem {
-                tile: g.tile,
-                k_iters: g.k_len,
-                partial: !g.direct,
-            }));
-            items
-        })
-        .collect();
-    let mut launches = vec![simulate_launch(dev, &work, block, bpe)];
-
-    // Fixup: each split tile re-reads its contributors' partials and
-    // writes the final tile. Tiny traffic-dominated launch.
-    if !sched.split_tiles.is_empty() {
-        let mut fix_work: Vec<Vec<WorkItem>> = vec![Vec::new(); sched.p];
-        for (i, st) in sched.split_tiles.iter().enumerate() {
-            // k_iters=0: fixup does no MAC work, only the tile store...
-            fix_work[i % sched.p].push(WorkItem {
-                tile: st.tile,
-                k_iters: 0,
-                partial: false,
-            });
-            // ...plus reading contributor partials, modeled as extra C
-            // tiles of traffic via `partial` items.
-            for _ in &st.contributors {
-                fix_work[i % sched.p].push(WorkItem {
-                    tile: st.tile,
-                    k_iters: 0,
-                    partial: true,
-                });
-            }
-        }
-        launches.push(simulate_launch(dev, &fix_work, block, bpe));
-    }
-    finish(dev, sched.shape, launches)
+    let flat = FlatSchedule::from_schedule(sched);
+    simulate_flat(dev, sched.shape, &flat, sched.block, bpe)
 }
 
 /// Simulate a data-parallel or split-k execution from its assignment.

@@ -17,4 +17,7 @@ pub mod gemm;
 pub mod xfer;
 
 pub use device::{Device, DeviceKind};
-pub use gemm::{simulate, LaunchStats, SimResult};
+pub use gemm::{
+    simulate, simulate_flat, simulate_launch_flat, simulate_streamk,
+    LaunchStats, SimResult,
+};

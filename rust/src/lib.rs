@@ -9,10 +9,12 @@
 //!   that call the kernels.
 //! - **L3** (this crate): the runtime — partition math ([`decomp`]), a
 //!   GPU-occupancy simulator ([`gpu_sim`]), the Block2Time predictive load
-//!   balancer ([`predict`]), a legality-pruned autotuner with a persistent
-//!   per-shape config cache ([`tuner`]), a heterogeneous multi-device
-//!   serving layer ([`fleet`]), a PJRT artifact runtime ([`runtime`]),
-//!   and the serving coordinator ([`coordinator`]).
+//!   balancer ([`predict`]), a sharded plan cache over flattened Stream-K
+//!   schedules ([`plan`] — the zero-rebuild serving hot path), a
+//!   legality-pruned autotuner with a persistent per-shape config cache
+//!   ([`tuner`]), a heterogeneous multi-device serving layer ([`fleet`]),
+//!   a PJRT artifact runtime ([`runtime`]), and the serving coordinator
+//!   ([`coordinator`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers everything
 //! once; the rust binary is self-contained afterwards.
@@ -27,6 +29,7 @@ pub mod faults;
 pub mod fleet;
 pub mod gpu_sim;
 pub mod json;
+pub mod plan;
 pub mod predict;
 pub mod prop;
 pub mod runtime;

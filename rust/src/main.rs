@@ -4,6 +4,7 @@
 //!   serve      run the serving coordinator on a synthetic request stream
 //!   fleet      simulate heterogeneous multi-device fleet scheduling
 //!   tune       warm or re-validate the per-shape tuning cache offline
+//!   plan       inspect the flattened Stream-K plan + plan-cache behaviour
 //!   sim        simulate a GEMM decomposition on the modeled GPU
 //!   sweep      CU-count utilization sweep (Figure-1 style, text plot)
 //!   route      show the router's artifact decision for a shape
@@ -14,19 +15,23 @@
 
 use std::path::Path;
 
+use streamk::bench::workload::Arrival;
 use streamk::cli::{Command, Opt};
 use streamk::config::Settings;
 use streamk::coordinator::{Coordinator, Router};
 use streamk::decomp::{
     build_schedule, intensity, occupancy, BlockShape, GemmShape, TileGrid,
 };
+use streamk::exec::Stopwatch;
 use streamk::fleet::{
-    gen_trace, run_trace, warm, Fleet, PlacementPolicy, ShapeMix,
+    gen_open_trace, gen_trace, run_trace, run_trace_open, warm, Fleet,
+    PlacementPolicy, ShapeMix,
 };
 use streamk::gpu_sim::{self, Device, DeviceKind};
+use streamk::plan::PlanCacheStats;
 use streamk::runtime::{spawn_engine, Manifest};
 use streamk::tuner::{
-    Budget, StalenessPolicy, TuneOptions, Tuner, TABLE1_SUITE,
+    tune_many, Budget, StalenessPolicy, TuneOptions, Tuner, TABLE1_SUITE,
 };
 
 fn main() {
@@ -40,6 +45,7 @@ fn main() {
         "serve" => cmd_serve(&argv),
         "fleet" => cmd_fleet(&argv),
         "tune" => cmd_tune(&argv),
+        "plan" => cmd_plan(&argv),
         "sim" => cmd_sim(&argv),
         "sweep" => cmd_sweep(&argv),
         "route" => cmd_route(&argv),
@@ -60,16 +66,32 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|fleet|tune|sim|sweep|route|intensity|info> [options]\n\
+     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|intensity|info> [options]\n\
      \n\
-     tune quickstart:\n\
+     quickstart:\n\
        streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
        streamk tune --revalidate --cache tuner_cache.json # staleness sweep\n\
        streamk serve --tuner-cache tuner_cache.json      # serve with warm cache\n\
        streamk fleet --requests 200                      # heterogeneous fleet sim\n\
+       streamk fleet --open-rate 500                     # open-loop arrivals\n\
+       streamk plan --m 1920 --n 2000 --k 2000           # inspect a cached plan\n\
      \n\
      run a subcommand with --help for its options"
         .to_string()
+}
+
+fn plan_stats_line(s: &PlanCacheStats) -> String {
+    format!(
+        "plan cache: {} hits / {} misses ({:.1}% hit rate) | {} builds \
+         ({:.2} ms total build time) | {} entries | {} evictions",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0,
+        s.builds,
+        s.build_time_s * 1e3,
+        s.entries,
+        s.evictions,
+    )
 }
 
 fn parse_or_exit(cmd: &Command, argv: &[String]) -> streamk::cli::Args {
@@ -190,6 +212,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         snap.e2e.quantile_us(0.95) / 1e3,
         snap.throughput_rps,
     );
+    println!("{}", plan_stats_line(&snap.plan));
     if let Some(path) = args.get("metrics-out") {
         std::fs::write(
             path,
@@ -295,9 +318,18 @@ fn cmd_tune(argv: &[String]) -> i32 {
         "shape", "tuned at", "default ms", "tuned ms", "speedup", "block",
         "dbuf", "pad", "cus", "legal/total", "measured", "tune ms",
     ]);
+    // The suite fans the independent tune jobs out over the worker
+    // pool (single-shape runs stay inline); rows print in input order.
+    let tuner = std::sync::Arc::new(tuner);
+    let gemm_shapes: Vec<GemmShape> = shapes
+        .iter()
+        .map(|&(m, n, k)| GemmShape::new(m, n, k))
+        .collect();
+    let threads = if args.flag("suite") { 4 } else { 1 };
     let mut failures = 0;
-    for &(m, n, k) in &shapes {
-        match tuner.tune_and_insert(GemmShape::new(m, n, k)) {
+    for (shape, result) in tune_many(&tuner, &gemm_shapes, threads) {
+        let (m, n, k) = (shape.m, shape.n, shape.k);
+        match result {
             Ok(r) => {
                 let blk = r.best.params.block;
                 t.row(&[
@@ -348,6 +380,106 @@ fn cmd_tune(argv: &[String]) -> i32 {
     }
 }
 
+fn cmd_plan(argv: &[String]) -> i32 {
+    let cmd = shape_opts(Command::new(
+        "streamk plan",
+        "inspect the flattened Stream-K plan for a shape and demonstrate \
+         the plan cache's zero-rebuild hit path",
+    ))
+    .opt(Opt::value("cus", Some("120"), "compute units"))
+    .opt(Opt::value("bytes", Some("4"), "bytes per element (4=f32, 2=bf16)"))
+    .opt(Opt::value("repeats", Some("1000"), "cached lookups to time"))
+    .example("streamk plan --m 1920 --n 2000 --k 2000")
+    .example("streamk plan --m 3840 --n 4096 --k 4096 --cus 60");
+    let args = parse_or_exit(&cmd, argv);
+    let shape = GemmShape::new(
+        args.usize("m").unwrap(),
+        args.usize("n").unwrap(),
+        args.usize("k").unwrap(),
+    );
+    let cus = args.usize("cus").unwrap().clamp(1, 120);
+    let bpe = args.usize("bytes").unwrap();
+    let repeats = args.usize("repeats").unwrap().max(1);
+    let cache = streamk::plan::global();
+
+    let sw = Stopwatch::start();
+    let plan = match cache.get_or_build(shape, BlockShape::default(), bpe, cus)
+    {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot plan {shape:?}: {e}");
+            return 1;
+        }
+    };
+    let build_s = sw.elapsed_secs();
+
+    let flat = &plan.flat;
+    let blk = plan.key.block;
+    println!(
+        "plan {}x{}x{} @ {bpe}B/elem on {cus} CUs (block {}x{}x{})",
+        shape.m, shape.n, shape.k, blk.bm, blk.bn, blk.bk
+    );
+    println!(
+        "  grid: {}x{} tiles x {} k-iters | {} phase-1 work items | \
+         {} sk segments | {} split tiles ({} contributors)",
+        flat.grid.tiles_m,
+        flat.grid.tiles_n,
+        flat.grid.iters_per_tile,
+        flat.num_items(),
+        flat.segments.len(),
+        flat.split_tiles.len(),
+        flat.contributors.len(),
+    );
+    let per_cu: Vec<usize> =
+        (0..flat.p).map(|cu| flat.cu_items(cu).len()).collect();
+    println!(
+        "  per-CU items: min {} / max {} | dp tiles/cu {} | \
+         partials workspace {} B",
+        per_cu.iter().min().unwrap(),
+        per_cu.iter().max().unwrap(),
+        flat.dp_tiles_per_cu,
+        plan.partials_bytes(),
+    );
+    println!(
+        "  launch invariants: {:.3e} flops | {:.3e} B phase-1 | \
+         {:.3e} B fixup | mxu fill {:.2}",
+        plan.flops, plan.bytes, plan.fixup_bytes, plan.mxu_fill,
+    );
+
+    let dev = Device::preset(DeviceKind::Mi200).with_cus(cus);
+    let sim = plan.simulate(&dev);
+    println!(
+        "  on mi200/{cus}: {:.3} ms | {:.2} TFLOP/s | utilization {:.1}% | \
+         {} launches",
+        sim.total_s * 1e3,
+        sim.tflops,
+        sim.utilization * 100.0,
+        sim.launches.len(),
+    );
+
+    // The demonstration: the hit path replays the cached plan with no
+    // schedule rebuild — time `repeats` cached lookups + replays.
+    let sw = Stopwatch::start();
+    let mut acc = 0.0f64;
+    for _ in 0..repeats {
+        let p = cache
+            .get_or_build(shape, BlockShape::default(), bpe, cus)
+            .expect("cached plan");
+        acc += p.time_on(&dev);
+    }
+    let hit_s = sw.elapsed_secs() / repeats as f64;
+    std::hint::black_box(acc);
+    println!(
+        "  cold build+price: {:.1} µs | cached hit+price: {:.3} µs \
+         ({:.0}x) over {repeats} lookups",
+        build_s * 1e6,
+        hit_s * 1e6,
+        build_s / hit_s.max(1e-12),
+    );
+    println!("{}", plan_stats_line(&cache.stats()));
+    0
+}
+
 fn cmd_fleet(argv: &[String]) -> i32 {
     let cmd = Command::new(
         "streamk fleet",
@@ -367,8 +499,14 @@ fn cmd_fleet(argv: &[String]) -> i32 {
     .opt(Opt::value("drift-pct", Some("50"), "re-validate past this drift %"))
     .opt(Opt::flag("no-warm", "skip the offline cache warm-up (cold start)"))
     .opt(Opt::flag("no-feedback", "disable the online re-tuning loop"))
+    .opt(Opt::value(
+        "open-rate",
+        Some("0"),
+        "open-loop Poisson arrivals at this req/s (0 = closed loop only)",
+    ))
     .example("streamk fleet --requests 400")
-    .example("streamk fleet --devices mi200,mi100 --no-warm");
+    .example("streamk fleet --devices mi200,mi100 --no-warm")
+    .example("streamk fleet --open-rate 500   # queueing delay visible");
     let args = parse_or_exit(&cmd, argv);
     let devices = match Device::parse_fleet_spec(args.str("devices")) {
         Ok(d) => d,
@@ -454,6 +592,38 @@ fn cmd_fleet(argv: &[String]) -> i32 {
             best.drifts.len(),
         );
     }
+
+    let open_rate = args.f64("open-rate").unwrap_or(0.0);
+    if open_rate > 0.0 {
+        let open = gen_open_trace(
+            args.usize("seed").unwrap() as u64 ^ 0x5EED,
+            n,
+            &mix,
+            Arrival::Poisson { rate: open_rate },
+        );
+        let rr_o =
+            run_trace_open(&fleet, &open, PlacementPolicy::RoundRobin, false);
+        let b2t_o =
+            run_trace_open(&fleet, &open, PlacementPolicy::Block2Time, false);
+        println!(
+            "\nopen loop (Poisson {open_rate:.0} req/s, {n} requests):"
+        );
+        let mut t = streamk::bench::Table::new(&[
+            "policy", "makespan ms", "queue mean ms", "queue p95 ms",
+            "TFLOP/s",
+        ]);
+        for r in [&rr_o, &b2t_o] {
+            t.row(&[
+                format!("{:?}", r.policy),
+                format!("{:.3}", r.makespan_s * 1e3),
+                format!("{:.3}", r.queue_delay_mean_s * 1e3),
+                format!("{:.3}", r.queue_delay_p95_s * 1e3),
+                format!("{:.2}", r.throughput_tflops()),
+            ]);
+        }
+        t.print();
+    }
+    println!("\n{}", plan_stats_line(&streamk::plan::global().stats()));
     0
 }
 

@@ -1,0 +1,375 @@
+//! Sharded, LRU-bounded plan cache with hit/miss/build-time counters.
+//!
+//! Shape-keyed plan reuse is the serving hot path's whole point: after
+//! first touch, a repeated shape costs one shard lock + one slice scan —
+//! no decomposition, no allocation. Sharding (key-hash → shard) keeps
+//! the coordinator's worker threads, the background tuner, and the
+//! fleet scheduler from serializing on one mutex; each shard is its own
+//! MRU-ordered list bounded at `capacity / shards` entries.
+//!
+//! Counters are lock-free atomics so the metrics snapshot never
+//! contends with the request path. [`global`] is the process-wide
+//! instance every subsystem shares.
+
+use super::{Plan, PlanKey};
+use crate::decomp::streamk::ScheduleError;
+use crate::decomp::{BlockShape, GemmShape};
+use crate::exec::{pool_map, Stopwatch};
+use crate::json::{obj, Value};
+use std::collections::hash_map::DefaultHasher;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default process-wide cache: plenty for every (shape bucket × config ×
+/// grid) combination a serving process sees, small enough to be
+/// negligible memory.
+const GLOBAL_CAPACITY: usize = 2048;
+const GLOBAL_SHARDS: usize = 8;
+
+/// One shard: MRU-first entries. Linear scan is fine at per-shard sizes
+/// (hundreds); the key compare is a handful of integer equalities.
+struct Shard {
+    entries: Vec<(PlanKey, Arc<Plan>)>,
+}
+
+/// Sharded LRU plan cache. Cheap to share (`Arc<PlanCache>`); all
+/// methods take `&self`.
+pub struct PlanCache {
+    shards: Vec<Mutex<Shard>>,
+    per_shard_capacity: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    builds: AtomicU64,
+    build_ns: AtomicU64,
+    evictions: AtomicU64,
+}
+
+/// Point-in-time counter snapshot (serialized into the coordinator
+/// metrics and the `streamk serve` / `streamk fleet` reports).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub builds: u64,
+    /// Total wall seconds spent constructing plans (cold path only).
+    pub build_time_s: f64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl PlanCacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    /// Hit fraction in [0, 1]; 1.0 when no lookups happened yet.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            1.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("hits", (self.hits as usize).into()),
+            ("misses", (self.misses as usize).into()),
+            ("hit_rate", self.hit_rate().into()),
+            ("builds", (self.builds as usize).into()),
+            ("build_time_s", self.build_time_s.into()),
+            ("evictions", (self.evictions as usize).into()),
+            ("entries", self.entries.into()),
+        ])
+    }
+}
+
+impl PlanCache {
+    /// A cache of at most `capacity` plans spread over `shards` shards.
+    pub fn new(capacity: usize, shards: usize) -> Self {
+        assert!(capacity > 0 && shards > 0, "positive capacity and shards");
+        let shards = shards.min(capacity);
+        Self {
+            shards: (0..shards)
+                .map(|_| Mutex::new(Shard { entries: Vec::new() }))
+                .collect(),
+            per_shard_capacity: capacity.div_ceil(shards),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+            build_ns: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_for(&self, key: &PlanKey) -> &Mutex<Shard> {
+        let mut h = DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// The memoized lookup: a hit returns the shared plan (promoted to
+    /// MRU); a miss builds it outside the shard lock, so concurrent
+    /// lookups of *other* keys in the same shard proceed while the
+    /// decomposition runs. Two threads racing on the same cold key may
+    /// both build; the first insert wins and both get equivalent plans
+    /// (builds are deterministic).
+    pub fn get_or_build(
+        &self,
+        shape: GemmShape,
+        block: BlockShape,
+        bytes_per_elem: usize,
+        cus: usize,
+    ) -> Result<Arc<Plan>, ScheduleError> {
+        let key = PlanKey::new(shape, block, bytes_per_elem, cus);
+        let shard = self.shard_for(&key);
+        {
+            let mut s = shard.lock().expect("plan shard");
+            if let Some(idx) =
+                s.entries.iter().position(|(k, _)| *k == key)
+            {
+                let entry = s.entries.remove(idx);
+                let plan = entry.1.clone();
+                s.entries.insert(0, entry);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(plan);
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+
+        let sw = Stopwatch::start();
+        let plan = Arc::new(Plan::build(key)?);
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        self.build_ns.fetch_add(
+            (sw.elapsed_secs() * 1e9) as u64,
+            Ordering::Relaxed,
+        );
+
+        let mut s = shard.lock().expect("plan shard");
+        if let Some(idx) = s.entries.iter().position(|(k, _)| *k == key) {
+            // lost the build race: the winner's plan is canonical
+            let entry = s.entries.remove(idx);
+            let winner = entry.1.clone();
+            s.entries.insert(0, entry);
+            return Ok(winner);
+        }
+        s.entries.insert(0, (key, plan.clone()));
+        if s.entries.len() > self.per_shard_capacity {
+            s.entries.truncate(self.per_shard_capacity);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(plan)
+    }
+
+    /// Read-only probe (no promotion, no counter movement). Tests and
+    /// the `streamk plan` inspector use this to see cache state without
+    /// perturbing it.
+    pub fn peek(
+        &self,
+        shape: GemmShape,
+        block: BlockShape,
+        bytes_per_elem: usize,
+        cus: usize,
+    ) -> Option<Arc<Plan>> {
+        let key = PlanKey::new(shape, block, bytes_per_elem, cus);
+        let s = self.shard_for(&key).lock().expect("plan shard");
+        s.entries
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, p)| p.clone())
+    }
+
+    /// Cached plans across all shards.
+    pub fn len(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().expect("plan shard").entries.len())
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            builds: self.builds.load(Ordering::Relaxed),
+            build_time_s: self.build_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            evictions: self.evictions.load(Ordering::Relaxed),
+            entries: self.len(),
+        }
+    }
+
+}
+
+/// Build every missing plan in `keys` concurrently over an
+/// [`crate::exec::ThreadPool`] — cold-start warm-up for serving and the
+/// benches. Returns how many plans were built (keys already cached or
+/// unbuildable count as 0).
+pub fn warm_parallel(
+    cache: &Arc<PlanCache>,
+    keys: &[PlanKey],
+    threads: usize,
+) -> usize {
+    let before = cache.stats().builds;
+    let shared = cache.clone();
+    pool_map(threads, keys.to_vec(), move |key: PlanKey| {
+        let _ = shared.get_or_build(
+            key.shape,
+            key.block,
+            key.bytes_per_elem,
+            key.cus,
+        );
+    });
+    (cache.stats().builds - before) as usize
+}
+
+static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+
+/// The process-wide plan cache shared by the coordinator, the fleet
+/// scheduler, the tuner, and the interpreter runtime.
+pub fn global() -> &'static Arc<PlanCache> {
+    GLOBAL.get_or_init(|| {
+        Arc::new(PlanCache::new(GLOBAL_CAPACITY, GLOBAL_SHARDS))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: usize, cus: usize) -> PlanKey {
+        PlanKey::new(GemmShape::new(m, 512, 512), BlockShape::default(), 4, cus)
+    }
+
+    #[test]
+    fn hit_after_miss_returns_the_same_plan() {
+        let cache = PlanCache::new(16, 2);
+        let shape = GemmShape::new(480, 512, 512);
+        let a = cache
+            .get_or_build(shape, BlockShape::default(), 4, 120)
+            .unwrap();
+        let b = cache
+            .get_or_build(shape, BlockShape::default(), 4, 120)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "hit must share the cached plan");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.builds), (1, 1, 1));
+        assert!(s.build_time_s >= 0.0);
+        assert_eq!(s.entries, 1);
+        assert!(s.hit_rate() > 0.49 && s.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn distinct_grids_get_distinct_plans() {
+        let cache = PlanCache::new(16, 4);
+        let shape = GemmShape::new(1000, 1000, 1000);
+        let a = cache
+            .get_or_build(shape, BlockShape::default(), 4, 120)
+            .unwrap();
+        let b = cache
+            .get_or_build(shape, BlockShape::default(), 4, 60)
+            .unwrap();
+        assert_eq!(a.key.cus, 120);
+        assert_eq!(b.key.cus, 60);
+        assert_eq!(cache.stats().builds, 2);
+    }
+
+    /// Satellite acceptance: LRU eviction at the shard bound.
+    #[test]
+    fn lru_evicts_oldest_within_a_shard() {
+        // One shard, capacity 2: the third insert must evict the LRU.
+        let cache = PlanCache::new(2, 1);
+        let (k1, k2, k3) = (key(128, 8), key(256, 8), key(384, 8));
+        for k in [k1, k2] {
+            cache
+                .get_or_build(k.shape, k.block, k.bytes_per_elem, k.cus)
+                .unwrap();
+        }
+        // touch k1 so k2 becomes LRU
+        cache
+            .get_or_build(k1.shape, k1.block, k1.bytes_per_elem, k1.cus)
+            .unwrap();
+        cache
+            .get_or_build(k3.shape, k3.block, k3.bytes_per_elem, k3.cus)
+            .unwrap();
+        assert_eq!(cache.len(), 2);
+        assert!(cache.peek(k2.shape, k2.block, 4, 8).is_none(), "k2 evicted");
+        assert!(cache.peek(k1.shape, k1.block, 4, 8).is_some());
+        assert!(cache.peek(k3.shape, k3.block, 4, 8).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    /// Satellite acceptance: one cache shared across threads — every
+    /// thread sees the same plan, the key builds once (or, under a
+    /// cold-start race, at most once per racer with one canonical
+    /// winner), and the steady state is all hits.
+    #[test]
+    fn cross_thread_sharing_builds_once_and_hits_after() {
+        let cache = Arc::new(PlanCache::new(64, 4));
+        let shape = GemmShape::new(1920, 2000, 2000);
+        // Warm the key so the racing threads measure the *hit* path.
+        let canonical = cache
+            .get_or_build(shape, BlockShape::default(), 4, 120)
+            .unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let cache = cache.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                for _ in 0..50 {
+                    got.push(
+                        cache
+                            .get_or_build(shape, BlockShape::default(), 4, 120)
+                            .unwrap(),
+                    );
+                }
+                got
+            }));
+        }
+        for h in handles {
+            for plan in h.join().expect("no panics") {
+                assert!(
+                    Arc::ptr_eq(&plan, &canonical),
+                    "every thread shares the single cached plan"
+                );
+            }
+        }
+        let s = cache.stats();
+        assert_eq!(s.builds, 1, "warm key never rebuilds");
+        assert_eq!(s.hits, 8 * 50);
+        assert_eq!(s.entries, 1);
+    }
+
+    #[test]
+    fn warm_parallel_builds_cold_keys_once() {
+        let cache = Arc::new(PlanCache::new(64, 4));
+        let keys: Vec<PlanKey> =
+            (1..=6).map(|i| key(i * 128, 120)).collect();
+        let built = warm_parallel(&cache, &keys, 3);
+        assert_eq!(built, 6);
+        assert_eq!(cache.len(), 6);
+        // second warm is a no-op
+        assert_eq!(warm_parallel(&cache, &keys, 3), 0);
+    }
+
+    #[test]
+    fn degenerate_key_errors_without_poisoning_the_cache() {
+        let cache = PlanCache::new(8, 1);
+        assert!(cache
+            .get_or_build(GemmShape::new(0, 1, 1), BlockShape::default(), 4, 8)
+            .is_err());
+        assert_eq!(cache.len(), 0);
+        assert!(cache
+            .get_or_build(
+                GemmShape::new(64, 64, 64),
+                BlockShape::default(),
+                4,
+                8
+            )
+            .is_ok());
+    }
+}

@@ -1,0 +1,247 @@
+//! Plan cache — the zero-rebuild serving hot path.
+//!
+//! A [`Plan`] is everything derivable from `(shape, block, element
+//! width, CU count)` *before* a device or request shows up: the
+//! flattened Stream-K schedule ([`crate::decomp::FlatSchedule`]) plus
+//! the launch invariants the simulator needs (per-CU MAC flops and
+//! iteration counts, total HBM bytes for the phase-1 and fixup
+//! launches, MXU fill). With those precomputed, pricing a plan on a
+//! concrete device ([`Plan::time_on`]) is an O(CUs) arithmetic loop —
+//! no schedule construction, no nested `Vec<Vec<WorkItem>>`, no
+//! allocation at all.
+//!
+//! [`PlanCache`] (see [`cache`]) memoizes plans behind a sharded,
+//! LRU-bounded map; [`global`](cache::global) is the process-wide
+//! instance shared by the coordinator's fleet scheduler (placement
+//! priors), the tuner's top-K measurement loop
+//! ([`crate::tuner::measure`]), the interpreter runtime (gemm artifacts
+//! execute by walking the cached flat schedule), and the fleet traffic
+//! simulator — so a shape that repeats anywhere in the process never
+//! re-runs decomposition.
+//!
+//! Keying note: the issue of device identity resolves cleanly here —
+//! a plan depends on the device only through its CU count (per-CU
+//! speeds, bandwidth and overheads enter at [`Plan::time_on`] time), so
+//! the key is `(GemmShape, effective BlockShape, bytes/elem, cus)` and
+//! one cached plan legitimately serves every device with that grid
+//! width. That is strictly more sharing than fingerprint-keyed entries
+//! with identical contents.
+
+pub mod cache;
+
+pub use cache::{global, warm_parallel, PlanCache, PlanCacheStats};
+
+use crate::decomp::streamk::ScheduleError;
+use crate::decomp::{build_schedule, BlockShape, FlatSchedule, GemmShape};
+use crate::gpu_sim::gemm::{item_bytes, item_flops, mxu_fill};
+use crate::gpu_sim::{Device, SimResult};
+
+/// Cache key: exact shape × effective block × element width × CU count.
+/// The block is normalized through [`BlockShape::effective`] so two
+/// requested blocks that shrink to the same kernel share one plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub shape: GemmShape,
+    pub block: BlockShape,
+    pub bytes_per_elem: usize,
+    pub cus: usize,
+}
+
+impl PlanKey {
+    pub fn new(
+        shape: GemmShape,
+        block: BlockShape,
+        bytes_per_elem: usize,
+        cus: usize,
+    ) -> Self {
+        Self { shape, block: block.effective(shape), bytes_per_elem, cus }
+    }
+}
+
+/// A fully materialized, device-independent execution plan: the
+/// flattened schedule plus precomputed launch invariants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Plan {
+    pub key: PlanKey,
+    pub flat: FlatSchedule,
+    /// MXU systolic-array fill of the (effective) block — constant per
+    /// launch, precomputed once.
+    pub mxu_fill: f64,
+    /// Phase-1 MAC flops per CU (exact integer sums in f64).
+    pub cu_flops: Vec<f64>,
+    /// Phase-1 BK-deep MAC iterations per CU (drives iter_overhead).
+    pub cu_iters: Vec<f64>,
+    /// Phase-1 HBM bytes, accumulated in the simulator's item order.
+    pub bytes: f64,
+    /// Fixup-launch HBM bytes (0.0 when no fixup launch).
+    pub fixup_bytes: f64,
+    /// Total MAC flops across all CUs (reporting).
+    pub flops: f64,
+}
+
+impl Plan {
+    /// Build the plan for one key: run the decomposition once, flatten
+    /// it, and precompute every launch invariant. This is the *only*
+    /// place on the serving stack that still constructs a
+    /// [`crate::decomp::StreamKSchedule`]; everything downstream reuses
+    /// the result through the cache.
+    pub fn build(key: PlanKey) -> Result<Self, ScheduleError> {
+        let sched = build_schedule(key.shape, key.block, key.cus)?;
+        // build_schedule re-applies `effective`; keep the plan's block
+        // identical to the schedule it describes.
+        let block = sched.block;
+        let flat = FlatSchedule::from_schedule(&sched);
+        let bpe = key.bytes_per_elem;
+
+        let mut cu_flops = Vec::with_capacity(key.cus);
+        let mut cu_iters = Vec::with_capacity(key.cus);
+        let mut bytes = 0.0f64;
+        let mut flops = 0.0f64;
+        for cu in 0..key.cus {
+            let mut f = 0.0f64;
+            let mut it = 0usize;
+            for item in flat.cu_items(cu) {
+                f += item_flops(item, block);
+                it += item.k_iters;
+                bytes += item_bytes(item, block, bpe);
+            }
+            flops += f;
+            cu_flops.push(f);
+            cu_iters.push(it as f64);
+        }
+        let mut fixup_bytes = 0.0f64;
+        for cu in 0..key.cus {
+            for item in flat.cu_fixup_items(cu) {
+                fixup_bytes += item_bytes(item, block, bpe);
+            }
+        }
+
+        Ok(Self {
+            key: PlanKey { block, ..key },
+            flat,
+            mxu_fill: mxu_fill(block, bpe),
+            cu_flops,
+            cu_iters,
+            bytes,
+            fixup_bytes,
+            flops,
+        })
+    }
+
+    /// Predicted wall time of this plan on `dev` — the allocation-free
+    /// hot path. Reproduces `gpu_sim::gemm::simulate_streamk(...).total_s`
+    /// up to f64 summation order (per-CU flops are pre-summed; the sums
+    /// themselves are exact — integer-valued flop/iteration counts).
+    pub fn time_on(&self, dev: &Device) -> f64 {
+        assert_eq!(dev.num_cus, self.key.cus, "plan built for other grid");
+        let mut compute_span = 0.0f64;
+        for cu in 0..self.key.cus {
+            let speed = dev.flops_per_cu * dev.cu_speed[cu] * self.mxu_fill;
+            let busy = self.cu_flops[cu] / speed
+                + self.cu_iters[cu] * dev.iter_overhead;
+            compute_span = compute_span.max(busy);
+        }
+        let mem_span = self.bytes / dev.hbm_bw;
+        let mut total = compute_span.max(mem_span) + dev.launch_overhead;
+        if self.flat.has_fixup() {
+            // Fixup items carry no MAC work: compute span is zero and
+            // the launch is paced by its traffic alone.
+            total += self.fixup_bytes / dev.hbm_bw + dev.launch_overhead;
+        }
+        total
+    }
+
+    /// Full per-launch simulation of this plan on `dev` (utilization,
+    /// per-CU busy bars) — the reporting path; allocates.
+    pub fn simulate(&self, dev: &Device) -> SimResult {
+        crate::gpu_sim::simulate_flat(
+            dev,
+            self.key.shape,
+            &self.flat,
+            self.key.block,
+            self.key.bytes_per_elem,
+        )
+    }
+
+    /// Workspace bytes for the two-slot partials buffer.
+    pub fn partials_bytes(&self) -> usize {
+        self.key.cus * 2 * self.key.block.bm * self.key.block.bn * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu_sim::{simulate_streamk, DeviceKind};
+
+    fn mi200() -> Device {
+        Device::preset(DeviceKind::Mi200)
+    }
+
+    #[test]
+    fn plan_time_matches_full_simulation() {
+        let dev = mi200();
+        for (m, n, k) in [
+            (3840usize, 4096usize, 4096usize),
+            (1000, 1000, 1000), // ragged: fixup launch present
+            (3, 9, 9),
+            (480, 512, 512),
+        ] {
+            let shape = GemmShape::new(m, n, k);
+            let plan = Plan::build(PlanKey::new(
+                shape,
+                BlockShape::default(),
+                4,
+                dev.num_cus,
+            ))
+            .unwrap();
+            let sched =
+                build_schedule(shape, BlockShape::default(), dev.num_cus)
+                    .unwrap();
+            let full = simulate_streamk(&dev, &sched, 4);
+            let fast = plan.time_on(&dev);
+            assert!(
+                (fast - full.total_s).abs() <= full.total_s * 1e-9,
+                "{m}x{n}x{k}: plan {fast} vs sim {}",
+                full.total_s
+            );
+            let sim = plan.simulate(&dev);
+            assert_eq!(sim.launches.len(), full.launches.len());
+            assert_eq!(sim.total_s, full.total_s);
+        }
+    }
+
+    #[test]
+    fn plan_respects_heterogeneous_cu_speeds() {
+        let shape = GemmShape::new(3840, 4096, 4096);
+        let plan = Plan::build(PlanKey::new(
+            shape,
+            BlockShape::default(),
+            4,
+            120,
+        ))
+        .unwrap();
+        let fast = plan.time_on(&mi200());
+        let slow = plan.time_on(&mi200().with_throttled(2, 0.25));
+        assert!(slow > fast * 3.0, "throttled {slow} vs {fast}");
+    }
+
+    #[test]
+    fn key_normalizes_block_to_effective() {
+        let shape = GemmShape::new(3, 9, 9);
+        let a = PlanKey::new(shape, BlockShape::default(), 4, 8);
+        let b = PlanKey::new(shape, BlockShape::new(64, 64, 64), 4, 8);
+        assert_eq!(a, b, "both shrink to 3x9x9");
+    }
+
+    #[test]
+    fn degenerate_key_is_an_error() {
+        assert!(Plan::build(PlanKey::new(
+            GemmShape::new(0, 4, 4),
+            BlockShape::default(),
+            4,
+            8
+        ))
+        .is_err());
+    }
+}

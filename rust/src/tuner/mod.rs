@@ -46,9 +46,10 @@ pub use search::{
 pub use space::{enumerate, Candidate, PadPolicy, SpaceStats};
 
 use crate::decomp::GemmShape;
+use crate::exec::pool_map;
 use crate::gpu_sim::Device;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// The paper's Table-1 shape suite — the canonical tuning/bench targets
 /// (baseline, small, large uneven, medium).
@@ -399,6 +400,24 @@ impl Tuner {
     }
 }
 
+/// Tune several shapes concurrently over an [`crate::exec::ThreadPool`]
+/// — the offline sweep path (`streamk tune --suite`, bench warm-ups).
+/// Each job runs the full two-phase search; all of them share the
+/// process-wide plan cache, so candidate grids that repeat across
+/// shapes measure against already-flattened schedules. Results come
+/// back in input order; the cache sees the same inserts as a serial
+/// sweep (order of insertion may differ, contents do not).
+pub fn tune_many(
+    tuner: &Arc<Tuner>,
+    shapes: &[GemmShape],
+    threads: usize,
+) -> Vec<(GemmShape, Result<TuneReport, TuneError>)> {
+    let tuner = tuner.clone();
+    pool_map(threads, shapes.to_vec(), move |shape| {
+        (shape, tuner.tune_and_insert(shape))
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -595,6 +614,26 @@ mod tests {
         assert_eq!(report.checked, 1);
         assert_eq!(report.retuned, 0);
         assert_eq!(report.refreshed, 1);
+    }
+
+    #[test]
+    fn tune_many_matches_serial_tuning() {
+        let parallel = Arc::new(tuner());
+        let shapes: Vec<GemmShape> = TABLE1_SUITE
+            .iter()
+            .map(|&(m, n, k)| GemmShape::new(m, n, k))
+            .collect();
+        let results = tune_many(&parallel, &shapes, 4);
+        assert_eq!(results.len(), shapes.len());
+        for ((shape, result), want) in results.iter().zip(&shapes) {
+            assert_eq!(shape, want, "input order preserved");
+            let report = result.as_ref().expect("suite shapes tune");
+            assert!(report.best.measured_s > 0.0);
+            assert!(
+                parallel.lookup(*shape).is_some(),
+                "{shape:?} must land in the cache"
+            );
+        }
     }
 
     #[test]

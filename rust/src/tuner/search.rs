@@ -13,7 +13,7 @@
 use super::space::{enumerate, Candidate, PadPolicy, SpaceStats};
 use crate::decomp::{cdiv, GemmShape};
 use crate::exec::Stopwatch;
-use crate::gpu_sim::{gemm, Device};
+use crate::gpu_sim::Device;
 use crate::predict::{fit, CostModel};
 use std::time::Duration;
 
@@ -169,20 +169,27 @@ fn equiv_units(c: &Candidate, shape: GemmShape, max_iters: usize) -> usize {
 
 /// Measure one candidate on the simulator. Returns `None` when the
 /// schedule cannot be built (degenerate interplay of block and shape).
+///
+/// Goes through the process-wide plan cache ([`crate::plan::global`]):
+/// the decomposition + flattening runs once per (shape, block, width,
+/// grid) key and every later measurement — the tuner's top-K loop, a
+/// re-validation probe, every fleet-sim request in that bucket — is an
+/// allocation-free replay of the cached [`crate::plan::Plan`].
 pub fn measure(
     dev: &Device,
     shape: GemmShape,
     c: &Candidate,
 ) -> Option<f64> {
-    let sub = if c.cus == dev.num_cus {
-        dev.clone()
+    let plan = crate::plan::global()
+        .get_or_build(shape, c.params.block, c.params.bytes_per_elem, c.cus)
+        .ok()?;
+    let pad_s = pad_penalty_bytes(shape, c) / dev.hbm_bw;
+    if c.cus == dev.num_cus {
+        Some(plan.time_on(dev) + pad_s)
     } else {
-        dev.clone().with_cus(c.cus)
-    };
-    let sched =
-        crate::decomp::build_schedule(shape, c.params.block, c.cus).ok()?;
-    let r = gemm::simulate_streamk(&sub, &sched, c.params.bytes_per_elem);
-    Some(r.total_s + pad_penalty_bytes(shape, c) / dev.hbm_bw)
+        let sub = dev.clone().with_cus(c.cus);
+        Some(plan.time_on(&sub) + pad_s)
+    }
 }
 
 /// Fit the Block2Time cost model from probe launches of the default
