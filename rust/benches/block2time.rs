@@ -13,7 +13,9 @@
 use streamk::bench::Table;
 use streamk::decomp::{build_schedule, BlockShape, GemmShape};
 use streamk::gpu_sim::{gemm, Device, DeviceKind};
-use streamk::predict::{balance, fit, predicted_makespan, SpeedEstimator};
+use streamk::predict::{
+    balance_plan, fit, predicted_makespan_plan, SpeedEstimator,
+};
 use streamk::prop::Rng;
 
 fn simulate_makespan(dev: &Device, sched: &streamk::decomp::StreamKSchedule) -> f64 {
@@ -74,11 +76,21 @@ fn main() {
         let speeds = est.speeds().expect("speeds");
 
         let even = build_schedule(shape, block, dev.num_cus).unwrap();
-        let balanced = balance(shape, block, &speeds).unwrap();
+        // The weighted split comes from the plan cache (quantized
+        // per-CU weight key) — the dispatch path Block2Time uses.
+        let balanced = balance_plan(shape, block, &speeds, 4).unwrap();
+        // A re-scaled estimate of the same speeds must *reuse* the
+        // cached plan, not re-run the weighted decomposition.
+        let rescaled: Vec<f64> = speeds.iter().map(|s| s * 0.5).collect();
+        let again = balance_plan(shape, block, &rescaled, 4).unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(&balanced, &again),
+            "{label}: rescaled estimate must hit the weighted plan cache"
+        );
         let t_even = simulate_makespan(&dev, &even);
-        let t_bal = simulate_makespan(&dev, &balanced);
+        let t_bal = balanced.simulate(&dev).total_s;
         let pred =
-            predicted_makespan(&balanced, model, &dev.cu_speed) * 1e3;
+            predicted_makespan_plan(&balanced, model, &dev.cu_speed) * 1e3;
         t.row(&[
             label.into(),
             format!("{:.3}", t_even * 1e3),
@@ -99,9 +111,9 @@ fn main() {
     for factor in [0.9, 0.75, 0.5, 0.25, 0.1] {
         let dev = base.clone().with_throttled(4, factor);
         let even = build_schedule(shape, block, dev.num_cus).unwrap();
-        let balanced = balance(shape, block, &dev.cu_speed).unwrap();
+        let balanced = balance_plan(shape, block, &dev.cu_speed, 4).unwrap();
         let t_even = simulate_makespan(&dev, &even);
-        let t_bal = simulate_makespan(&dev, &balanced);
+        let t_bal = balanced.simulate(&dev).total_s;
         t.row(&[
             format!("{factor:.2}x"),
             format!("{:.3}", t_even * 1e3),
@@ -114,5 +126,15 @@ fn main() {
         "\nexpected shape: speedup grows as heterogeneity deepens \
          (even split is gated by the slowest CU; Block2Time shifts work \
          to fast CUs), and exactly 1.0x on a homogeneous device."
+    );
+    let stats = streamk::plan::global().stats();
+    println!(
+        "\nweighted-plan cache: {} hits / {} misses | {} builds \
+         ({} entries)",
+        stats.hits, stats.misses, stats.builds, stats.entries
+    );
+    assert!(
+        stats.hits >= 5,
+        "each condition's rescaled estimate must hit the cached plan"
     );
 }

@@ -9,7 +9,7 @@ mod channel;
 mod pool;
 
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender, TryRecvError};
-pub use pool::{pool_map, ThreadPool};
+pub use pool::{pool_map, scope_map_with, ThreadPool};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

@@ -96,6 +96,73 @@ where
         .collect()
 }
 
+/// Scatter borrowed `items` over `threads` *scoped* workers, gathering
+/// results in item order — the borrowing counterpart of [`pool_map`]
+/// for hot paths that must not copy their inputs (the blocked kernel
+/// executor fans GEMM work items out over slices of A and B). Each
+/// worker gets its own `init()` state (reusable scratch buffers);
+/// scheduling is dynamic (atomic work index), so uneven item costs
+/// balance. With `threads <= 1` everything runs inline on the caller.
+pub fn scope_map_with<T, S, R, FI, F>(
+    threads: usize,
+    items: &[T],
+    init: FI,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    FI: Fn() -> S + Sync,
+    F: Fn(&mut S, usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        let mut state = init();
+        return items
+            .iter()
+            .enumerate()
+            .map(|(i, t)| f(&mut state, i, t))
+            .collect();
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        // Each worker owns its (index, result) list — no shared lock on
+        // the completion path; the merge happens once at join time.
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut state = init();
+                    let mut got = Vec::new();
+                    loop {
+                        let i = next.fetch_add(
+                            1,
+                            std::sync::atomic::Ordering::Relaxed,
+                        );
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(&mut state, i, &items[i])));
+                    }
+                    got
+                })
+            })
+            .collect();
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for h in handles {
+            for (i, r) in h.join().expect("scope_map_with worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+        out.into_iter()
+            .map(|slot| slot.expect("worker filled every slot"))
+            .collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,6 +200,49 @@ mod tests {
         assert!(empty.is_empty());
         // more threads than jobs is fine (clamped)
         assert_eq!(pool_map(16, vec![7], |x: i32| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn scope_map_with_preserves_order_and_reuses_state() {
+        // Borrowed inputs (the whole point), per-worker scratch, dynamic
+        // scheduling — results must come back in item order.
+        let items: Vec<i64> = (0..200).collect();
+        let inits = Arc::new(AtomicUsize::new(0));
+        let inits2 = inits.clone();
+        let out = scope_map_with(
+            4,
+            &items,
+            move || {
+                inits2.fetch_add(1, Ordering::SeqCst);
+                Vec::<i64>::new() // per-worker scratch
+            },
+            |scratch, i, &x| {
+                scratch.push(x); // scratch persists across a worker's items
+                x * 2 + i as i64
+            },
+        );
+        assert_eq!(
+            out,
+            (0..200).map(|x| x * 3).collect::<Vec<_>>(),
+            "f(x) = 2x + i with x == i"
+        );
+        assert!(inits.load(Ordering::SeqCst) <= 4, "one init per worker");
+
+        let empty: Vec<i32> = scope_map_with(4, &[] as &[i32], || (), |_, _, &x| x);
+        assert!(empty.is_empty());
+        // serial path: exactly one init
+        let before = inits.load(Ordering::SeqCst);
+        let inits3 = inits.clone();
+        let one = scope_map_with(
+            1,
+            &items[..5],
+            move || {
+                inits3.fetch_add(1, Ordering::SeqCst);
+            },
+            |_, _, &x| x,
+        );
+        assert_eq!(one, items[..5].to_vec());
+        assert_eq!(inits.load(Ordering::SeqCst), before + 1);
     }
 
     #[test]

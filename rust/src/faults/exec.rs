@@ -1,13 +1,27 @@
 //! Reference executor: runs a Stream-K schedule over real f32 data.
 //!
-//! A third independent implementation of the Stream-K semantics (after
-//! the Pallas kernel and the jnp oracle): per-CU segments accumulate
-//! block partials, direct segments store, split tiles are finished by a
-//! fixup pass. Used by the fault-injection benches to produce *numeric*
-//! corruption (not just schedule diffs), and doubles as a semantic
-//! cross-check of `decomp::build_schedule`.
+//! Two implementations of the Stream-K execution semantics live here:
+//!
+//! - [`execute_flat_ref`] — the per-element reference: one indexed MAC
+//!   per (row, k, col), the masked/clamped edge addressing written out
+//!   literally. This is the semantic ground truth the blocked kernel
+//!   layer is property-tested against (bit-identical, including NaN/∞
+//!   propagation — zero operands are never skipped), and the baseline
+//!   `benches/kernel_exec.rs` measures the blocked path's speedup over.
+//! - [`execute_flat`] / [`execute_schedule`] — the production entries,
+//!   now executed through the blocked packed-tile layer
+//!   ([`crate::kernel`]): panel packing, register-blocked microkernel,
+//!   work items parallelized with deterministic fixup-ordered
+//!   reduction. Numerics are bit-identical to the reference by
+//!   construction (and by `kernel::exec`'s property tests).
+//!
+//! The fault-injection benches drive [`execute_schedule`] with
+//! deliberately broken schedules to produce *numeric* corruption; the
+//! blocked executor reproduces a broken schedule's corruption exactly,
+//! because it executes whatever work items the schedule describes.
 
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape, StreamKSchedule};
+use crate::kernel;
 
 /// Dense row-major f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -66,58 +80,11 @@ pub fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// Accumulate `k_len` BK-deep MAC steps of one tile into `acc`
-/// (clamped-overlap edge addressing identical to the Pallas kernel).
-fn accumulate_segment(
-    a: &Matrix,
-    b: &Matrix,
-    sched: &StreamKSchedule,
-    tile: usize,
-    k_start: usize,
-    k_len: usize,
-    acc: &mut [f32],
-) {
-    let blk = sched.block;
-    let (tm, tn) = sched.grid.tile_rc(tile);
-    let r0 = (tm * blk.bm).min(a.rows.saturating_sub(blk.bm));
-    let c0 = (tn * blk.bn).min(b.cols.saturating_sub(blk.bn));
-    let k_dim = a.cols;
-    for j in k_start..k_start + k_len {
-        let kg = j * blk.bk;
-        let ks = kg.min(k_dim.saturating_sub(blk.bk));
-        for r in 0..blk.bm {
-            for kk in 0..blk.bk {
-                let kcol = ks + kk;
-                if kcol < kg || kcol >= k_dim {
-                    continue; // the >=-mask of the nopad policy
-                }
-                let av = a.at(r0 + r, kcol);
-                if av == 0.0 {
-                    continue;
-                }
-                for cc in 0..blk.bn {
-                    acc[r * blk.bn + cc] += av * b.at(kcol, c0 + cc);
-                }
-            }
-        }
-    }
-}
-
-fn store_tile(c: &mut Matrix, sched: &StreamKSchedule, tile: usize, acc: &[f32]) {
-    let blk = sched.block;
-    let (tm, tn) = sched.grid.tile_rc(tile);
-    let r0 = (tm * blk.bm).min(c.rows.saturating_sub(blk.bm));
-    let c0 = (tn * blk.bn).min(c.cols.saturating_sub(blk.bn));
-    for r in 0..blk.bm {
-        for cc in 0..blk.bn {
-            c.set(r0 + r, c0 + cc, acc[r * blk.bn + cc]);
-        }
-    }
-}
-
-/// Execute a Stream-K schedule faithfully. Phase 1 (per CU, in CU order)
-/// then the fixup pass — semantically identical to the two Pallas
-/// kernels.
+/// Execute a Stream-K schedule faithfully over matrices — phase 1 (per
+/// CU, in CU order) then the fixup pass, semantically identical to the
+/// two Pallas kernels. Runs on the blocked kernel layer; the
+/// fault-injection benches feed this deliberately broken schedules and
+/// the corruption reproduces exactly (execution is schedule-driven).
 pub fn execute_schedule(
     a: &Matrix,
     b: &Matrix,
@@ -126,55 +93,20 @@ pub fn execute_schedule(
     assert_eq!(a.rows, sched.shape.m);
     assert_eq!(b.cols, sched.shape.n);
     assert_eq!(a.cols, sched.shape.k);
-    let blk = sched.block;
-    let mut c = Matrix::zeros(a.rows, b.cols);
-    // partials[cu][slot]
-    let mut partials =
-        vec![vec![vec![0.0f32; blk.bm * blk.bn]; 2]; sched.p];
-
-    for cu in 0..sched.p {
-        for tile in sched.direct_tiles(cu) {
-            let mut acc = vec![0.0f32; blk.bm * blk.bn];
-            accumulate_segment(
-                a, b, sched, tile, 0, sched.grid.iters_per_tile, &mut acc,
-            );
-            store_tile(&mut c, sched, tile, &acc);
-        }
-        for seg in &sched.segments[cu] {
-            let mut acc = vec![0.0f32; blk.bm * blk.bn];
-            accumulate_segment(
-                a, b, sched, seg.tile, seg.k_start, seg.k_len, &mut acc,
-            );
-            if seg.direct {
-                store_tile(&mut c, sched, seg.tile, &acc);
-            } else {
-                partials[cu][seg.slot] = acc;
-            }
-        }
-    }
-
-    for st in &sched.split_tiles {
-        let mut acc = vec![0.0f32; blk.bm * blk.bn];
-        for contrib in &st.contributors {
-            let frag = &partials[contrib.cu][contrib.slot];
-            for (dst, src) in acc.iter_mut().zip(frag) {
-                *dst += *src;
-            }
-        }
-        store_tile(&mut c, sched, st.tile, &acc);
-    }
-    c
+    let flat = FlatSchedule::from_schedule(sched);
+    let data = execute_flat(&a.data, &b.data, sched.shape, &flat, sched.block);
+    Matrix { rows: a.rows, cols: b.cols, data }
 }
 
 // ---------------------------------------------------------------------
-// Flat-schedule executor (the runtime's consumer)
+// Per-element reference (the bit-identical ground truth)
 // ---------------------------------------------------------------------
 
-/// Like [`accumulate_segment`] but over raw row-major slices and a
-/// [`FlatSchedule`], and — deliberately — *without* the `av == 0.0`
-/// skip: the interpreter runtime routes through this, and `0.0 * Inf`
-/// must stay NaN so non-finite inputs propagate exactly as the PJRT
-/// backend would.
+/// Accumulate `k_len` BK-deep MAC steps of one tile into `acc` over raw
+/// row-major slices — clamped-overlap edge addressing identical to the
+/// Pallas kernel, and — deliberately — *without* an `av == 0.0` skip:
+/// `0.0 * Inf` must stay NaN so non-finite inputs propagate exactly as
+/// the PJRT backend would.
 #[allow(clippy::too_many_arguments)]
 fn accumulate_segment_flat(
     a: &[f32],
@@ -228,13 +160,11 @@ fn store_tile_flat(
     }
 }
 
-/// Execute a *flattened* Stream-K schedule over row-major f32 slices —
-/// the executor the interpreter runtime drives from the plan cache.
-/// Phase 1 walks each CU's segment slice (DP quota then SK segments),
-/// the fixup pass sums split-tile contributors; semantics identical to
-/// [`execute_schedule`] except that zero operands are *not* skipped
-/// (see [`accumulate_segment_flat`]).
-pub fn execute_flat(
+/// Per-element reference execution of a flattened schedule: the exact
+/// FP semantics the blocked executor must reproduce bit-for-bit.
+/// Kept (and exported) as the property-test oracle and the
+/// `kernel_exec` bench baseline — do not optimize this.
+pub fn execute_flat_ref(
     a: &[f32],
     b: &[f32],
     shape: GemmShape,
@@ -291,6 +221,23 @@ pub fn execute_flat(
     c
 }
 
+/// Execute a *flattened* Stream-K schedule over row-major f32 slices —
+/// the executor the interpreter runtime drives from the plan cache.
+/// Runs on the blocked packed-tile kernel layer ([`crate::kernel`]):
+/// bit-identical to [`execute_flat_ref`] (property-tested there),
+/// several-fold faster, parallel over independent work items. Zero
+/// operands are never skipped, so NaN/∞ inputs propagate exactly as
+/// the PJRT backend would.
+pub fn execute_flat(
+    a: &[f32],
+    b: &[f32],
+    shape: GemmShape,
+    flat: &FlatSchedule,
+    blk: BlockShape,
+) -> Vec<f32> {
+    kernel::execute_flat_schedule(a, b, shape, flat, blk, kernel::Epilogue::None)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -326,7 +273,7 @@ mod tests {
     }
 
     #[test]
-    fn flat_executor_matches_nested_executor_and_naive() {
+    fn flat_executor_matches_reference_and_naive() {
         use crate::decomp::FlatSchedule;
         for (m, n, k, p) in [
             (96usize, 102usize, 100usize, 12usize), // ragged hybrid
@@ -351,6 +298,21 @@ mod tests {
                 &flat,
                 sched.block,
             );
+            // blocked == per-element reference, bit for bit
+            let reference = execute_flat_ref(
+                &a.data,
+                &b.data,
+                sched.shape,
+                &flat,
+                sched.block,
+            );
+            for (i, (g, w)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{m}x{n}x{k} p={p} elem {i}: {g} vs {w} (vs reference)"
+                );
+            }
             let want = naive_gemm(&a, &b);
             for (i, (g, w)) in got.iter().zip(&want.data).enumerate() {
                 assert!(
@@ -365,7 +327,7 @@ mod tests {
     fn flat_executor_propagates_non_finite_inputs() {
         use crate::decomp::FlatSchedule;
         // 0·Inf must stay NaN (the interpreter's PJRT-parity contract);
-        // the nested executor's zero-skip would lose it.
+        // a zero-skip would lose it.
         let m = 8;
         let mut a = Matrix::zeros(m, m);
         a.set(0, 0, f32::INFINITY);
@@ -380,6 +342,9 @@ mod tests {
         let got =
             execute_flat(&a.data, &b.data, sched.shape, &flat, sched.block);
         assert!(got[0].is_nan(), "0*Inf must propagate as NaN, got {}", got[0]);
+        let reference =
+            execute_flat_ref(&a.data, &b.data, sched.shape, &flat, sched.block);
+        assert!(reference[0].is_nan(), "reference must agree");
     }
 
     #[test]

@@ -10,7 +10,10 @@
 //! - [`exec`] — a pure-rust executor that runs a Stream-K schedule over
 //!   real f32 matrices (a third, independent implementation of the
 //!   semantics, cross-checked against naive GEMM and — via the parity
-//!   golden file — against the Pallas kernels);
+//!   golden file — against the Pallas kernels). Production entries run
+//!   on the blocked microkernel layer ([`crate::kernel`]); the
+//!   per-element reference ([`execute_flat_ref`]) stays as the
+//!   bit-identical oracle;
 //! - [`bugs`] — *injectable* recreations of both bug mechanisms;
 //! - [`validate`] — the element-error-rate metric the report quotes.
 
@@ -19,5 +22,7 @@ pub mod exec;
 pub mod validate;
 
 pub use bugs::{Fault, FaultyExecutor};
-pub use exec::{execute_flat, execute_schedule, naive_gemm, Matrix};
+pub use exec::{
+    execute_flat, execute_flat_ref, execute_schedule, naive_gemm, Matrix,
+};
 pub use validate::{error_rate, ErrorReport};

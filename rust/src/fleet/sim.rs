@@ -21,7 +21,7 @@ use crate::prop::Rng;
 use crate::tuner::{
     measure, Candidate, Observation, PadPolicy, ShapeBucket, Tuner,
 };
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::Arc;
 
 /// Weighted GEMM shape classes — the request-size mix.
@@ -295,7 +295,8 @@ pub fn gen_open_trace(
 
 /// Everything one open-loop run produced. Unlike the closed-loop
 /// [`SimReport`], the makespan here includes *queueing*: a request that
-/// arrives while its device is busy waits, and that wait is reported.
+/// arrives while its device is busy waits, and that wait is reported —
+/// as is the shed count when an admission bound is set.
 #[derive(Debug, Clone)]
 pub struct OpenReport {
     pub policy: PlacementPolicy,
@@ -309,6 +310,13 @@ pub struct OpenReport {
     pub queue_delay_mean_s: f64,
     /// 95th-percentile queueing delay.
     pub queue_delay_p95_s: f64,
+    /// Requests rejected by the queue-depth admission bound
+    /// (0 when the run is unbounded).
+    pub shed: u64,
+    /// Requests dropped because no schedule could be built for their
+    /// shape (distinct from shedding — these never reached a queue).
+    /// Invariant: `served + shed + dropped == requests`.
+    pub dropped: u64,
 }
 
 impl OpenReport {
@@ -319,6 +327,26 @@ impl OpenReport {
             0.0
         }
     }
+
+    /// Fraction of offered requests shed by the admission bound.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
+    }
+}
+
+/// Replay a timed trace as an event simulation with no admission bound
+/// — see [`run_trace_open_bounded`].
+pub fn run_trace_open(
+    fleet: &Fleet,
+    trace: &[TimedRequest],
+    policy: PlacementPolicy,
+    feedback: bool,
+) -> OpenReport {
+    run_trace_open_bounded(fleet, trace, policy, feedback, 0)
 }
 
 /// Replay a timed trace as an event simulation: each request arrives at
@@ -328,19 +356,33 @@ impl OpenReport {
 /// *measured* simulator time. With `feedback` on, measurements fold
 /// back through the online re-tuning loop exactly as in the closed
 /// loop.
-pub fn run_trace_open(
+///
+/// `max_queue` is the open-loop shedding knob (`streamk fleet
+/// --open-rate --max-queue`): when > 0, a request whose placed device
+/// already has that many requests outstanding (running + waiting) at
+/// its arrival instant is rejected instead of queued, and the shed
+/// count/rate is reported next to the queue-delay stats. 0 means admit
+/// everything (identical to the unbounded replay).
+pub fn run_trace_open_bounded(
     fleet: &Fleet,
     trace: &[TimedRequest],
     policy: PlacementPolicy,
     feedback: bool,
+    max_queue: usize,
 ) -> OpenReport {
     let n = fleet.len();
     let mut free = vec![0.0f64; n];
     let mut busy = vec![0.0f64; n];
     let mut counts = vec![0u64; n];
+    // Per-device completion times of admitted-but-unfinished requests:
+    // the queue depth the admission bound inspects.
+    let mut outstanding: Vec<VecDeque<f64>> =
+        (0..n).map(|_| VecDeque::new()).collect();
     let mut delays: Vec<f64> = Vec::with_capacity(trace.len());
     let mut total_flops = 0.0f64;
     let mut makespan = 0.0f64;
+    let mut shed = 0u64;
+    let mut dropped = 0u64;
 
     for (i, &(at_s, shape)) in trace.iter().enumerate() {
         let idx = match policy {
@@ -375,14 +417,26 @@ pub fn run_trace_open(
                 }
             }
         };
+        // Admission control: drop requests that arrive while the placed
+        // device already holds `max_queue` outstanding requests.
+        let q = &mut outstanding[idx];
+        while q.front().is_some_and(|&done| done <= at_s) {
+            q.pop_front();
+        }
+        if max_queue > 0 && q.len() >= max_queue {
+            shed += 1;
+            continue;
+        }
         let cand = tuned_candidate(fleet, idx, shape);
         let Some(exec_s) = measure(fleet.device(idx).device(), shape, &cand)
         else {
-            continue; // unbuildable schedule: request dropped
+            dropped += 1; // unbuildable schedule: request dropped
+            continue;
         };
         let start = free[idx].max(at_s);
         delays.push(start - at_s);
         free[idx] = start + exec_s;
+        outstanding[idx].push_back(free[idx]);
         makespan = makespan.max(free[idx]);
         busy[idx] += exec_s;
         counts[idx] += 1;
@@ -422,6 +476,8 @@ pub fn run_trace_open(
         device_requests: counts,
         queue_delay_mean_s: mean,
         queue_delay_p95_s: p95,
+        shed,
+        dropped,
     }
 }
 
@@ -577,6 +633,80 @@ mod tests {
         // round-robin at this rate visibly queues — the delay the
         // closed-loop report could never show
         assert!(rr.queue_delay_p95_s > 0.0);
+    }
+
+    #[test]
+    fn admission_bound_sheds_overload_and_caps_queueing() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        // Same overload construction as the queueing test: 2x what
+        // round-robin sustains.
+        let closed = run_trace(
+            &fleet,
+            &gen_trace(42, 60, &mix),
+            PlacementPolicy::RoundRobin,
+            false,
+        );
+        let rate = 2.0 * 60.0 / closed.makespan_s;
+        let trace = gen_open_trace(9, 120, &mix, Arrival::Poisson { rate });
+        let unbounded = run_trace_open_bounded(
+            &fleet,
+            &trace,
+            PlacementPolicy::RoundRobin,
+            false,
+            0,
+        );
+        let bounded = run_trace_open_bounded(
+            &fleet,
+            &trace,
+            PlacementPolicy::RoundRobin,
+            false,
+            2,
+        );
+        assert_eq!(unbounded.shed, 0, "max_queue 0 admits everything");
+        assert!(bounded.shed > 0, "overload against depth 2 must shed");
+        assert!(
+            bounded.shed_rate() > 0.0 && bounded.shed_rate() < 1.0,
+            "rate {}",
+            bounded.shed_rate()
+        );
+        assert_eq!(
+            (bounded.shed
+                + bounded.dropped
+                + bounded.device_requests.iter().sum::<u64>())
+                as usize,
+            trace.len(),
+            "every request is served, shed, or dropped"
+        );
+        assert_eq!(bounded.dropped, 0, "mix shapes all build");
+        // shedding is what bounds the tail: admitted requests wait at
+        // most (depth-1) service times instead of the unbounded backlog
+        assert!(
+            bounded.queue_delay_p95_s < unbounded.queue_delay_p95_s,
+            "bounded p95 {} vs unbounded {}",
+            bounded.queue_delay_p95_s,
+            unbounded.queue_delay_p95_s
+        );
+    }
+
+    #[test]
+    fn trickle_arrivals_shed_nothing_even_when_bounded() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        let trace =
+            gen_open_trace(5, 12, &mix, Arrival::Poisson { rate: 1.0 / 60.0 });
+        let r = run_trace_open_bounded(
+            &fleet,
+            &trace,
+            PlacementPolicy::Block2Time,
+            false,
+            1,
+        );
+        assert_eq!(r.shed, 0, "idle fleet must admit every trickle request");
+        assert_eq!(r.shed_rate(), 0.0);
+        assert_eq!(r.requests, 12);
     }
 
     #[test]

@@ -125,6 +125,49 @@ pub fn simulate_launch_flat(
     }
 }
 
+/// Launch stats straight from precomputed per-CU invariants — the
+/// plan-backed port of [`simulate_launch_flat`]: identical timing
+/// model, but the per-item walk happened once at plan-build time
+/// ([`crate::plan::Plan`] holds `cu_flops`/`cu_iters`/`bytes`), so the
+/// reporting path replays nothing. Agrees with the item-walking replay
+/// up to f64 summation order (the invariants are pre-summed).
+pub fn launch_from_invariants(
+    dev: &Device,
+    cu_flops: &[f64],
+    cu_iters: &[f64],
+    bytes: f64,
+    fill: f64,
+) -> LaunchStats {
+    assert_eq!(cu_flops.len(), dev.num_cus, "flops row per CU");
+    assert_eq!(cu_iters.len(), dev.num_cus, "iters row per CU");
+    let mut cu_busy = vec![0.0; dev.num_cus];
+    for cu in 0..dev.num_cus {
+        let speed = dev.flops_per_cu * dev.cu_speed[cu] * fill;
+        cu_busy[cu] =
+            cu_flops[cu] / speed + cu_iters[cu] * dev.iter_overhead;
+    }
+    let compute_span = cu_busy.iter().cloned().fold(0.0f64, f64::max);
+    let mem_span = bytes / dev.hbm_bw;
+    let memory_bound = mem_span > compute_span;
+    LaunchStats {
+        time_s: compute_span.max(mem_span) + dev.launch_overhead,
+        cu_busy,
+        bytes,
+        memory_bound,
+    }
+}
+
+/// Aggregate per-launch stats into a [`SimResult`] — public so the
+/// plan cache's invariants-based reporting path composes with the same
+/// accounting as the item-walking simulators.
+pub fn finish_launches(
+    dev: &Device,
+    shape: GemmShape,
+    launches: Vec<LaunchStats>,
+) -> SimResult {
+    finish(dev, shape, launches)
+}
+
 /// Simulate a full Stream-K execution from its flattened schedule:
 /// phase-1 launch + (if any split tiles) the fixup launch.
 pub fn simulate_flat(
@@ -328,6 +371,53 @@ mod tests {
         let thr = sk_sim(3840, 4096, 4096, &slow);
         // Even split waits on the slowest CU: ~4x slowdown.
         assert!(thr.total_s > fast.total_s * 3.0);
+    }
+
+    #[test]
+    fn invariant_launch_matches_item_walk() {
+        // Pre-summed invariants vs the per-item replay: same model, f64
+        // summation order apart.
+        let dev = mi200().with_throttled(3, 0.5);
+        let s = build_schedule(
+            GemmShape::new(1000, 1000, 1000),
+            BlockShape::default(),
+            dev.num_cus,
+        )
+        .unwrap();
+        let flat = FlatSchedule::from_schedule(&s);
+        let walked =
+            simulate_launch_flat(&dev, &flat.items, &flat.item_offsets, s.block, 4);
+        let fill = mxu_fill(s.block, 4);
+        let mut cu_flops = vec![0.0f64; dev.num_cus];
+        let mut cu_iters = vec![0.0f64; dev.num_cus];
+        let mut bytes = 0.0f64;
+        for cu in 0..dev.num_cus {
+            for item in flat.cu_items(cu) {
+                cu_flops[cu] += item_flops(item, s.block);
+                cu_iters[cu] += item.k_iters as f64;
+                bytes += item_bytes(item, s.block, 4);
+            }
+        }
+        let fast = launch_from_invariants(&dev, &cu_flops, &cu_iters, bytes, fill);
+        assert!(
+            (fast.time_s - walked.time_s).abs() <= walked.time_s * 1e-12,
+            "{} vs {}",
+            fast.time_s,
+            walked.time_s
+        );
+        assert_eq!(fast.memory_bound, walked.memory_bound);
+        assert_eq!(fast.bytes, walked.bytes);
+        for (a, b) in fast.cu_busy.iter().zip(&walked.cu_busy) {
+            assert!((a - b).abs() <= b.abs() * 1e-12 + 1e-18, "{a} vs {b}");
+        }
+        // and the aggregate accounting path is shared
+        let agg = finish_launches(
+            &dev,
+            GemmShape::new(1000, 1000, 1000),
+            vec![fast.clone()],
+        );
+        assert_eq!(agg.launches.len(), 1);
+        assert_eq!(agg.total_s, fast.time_s);
     }
 
     #[test]

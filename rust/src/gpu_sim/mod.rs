@@ -18,6 +18,6 @@ pub mod xfer;
 
 pub use device::{Device, DeviceKind};
 pub use gemm::{
-    simulate, simulate_flat, simulate_launch_flat, simulate_streamk,
-    LaunchStats, SimResult,
+    finish_launches, launch_from_invariants, simulate, simulate_flat,
+    simulate_launch_flat, simulate_streamk, LaunchStats, SimResult,
 };

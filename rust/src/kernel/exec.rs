@@ -1,0 +1,574 @@
+//! Per-work-item dispatch of a flattened Stream-K schedule over host
+//! data, plus the blocked dense [`matmul`] the MLP interpreter path
+//! uses.
+//!
+//! [`ExecDesc`] is the precomputed form of "what does each
+//! [`FlatSchedule`] work item touch": clamped tile origins, the
+//! contiguous valid-K column range (the per-element executor's
+//! `>=`-mask plus edge clamp collapse to one `[kc0, kc1)` interval per
+//! segment), partial-slot routing, and the fixup contributor → work-item
+//! index arena. Plans cache it ([`crate::plan::Plan::exec`]) so the
+//! serving hot path never recomputes a descriptor.
+//!
+//! Execution is three deterministic passes:
+//!
+//! 1. **compute** — every work item accumulates its tile slice into a
+//!    private accumulator via pack + microkernel; items are independent,
+//!    so they fan out over [`crate::exec::scope_map_with`] (each
+//!    worker reuses one [`PackBuf`]). Results are identical for every
+//!    thread count because nothing is shared.
+//! 2. **store** — direct stores are applied *in the reference's serial
+//!    order* (CU-major: DP quota, then segments). Clamped edge tiles
+//!    overlap their neighbours, so store order is part of the
+//!    bit-identical contract and is never raced.
+//! 3. **fixup** — split tiles sum their contributors in k-ascending
+//!    contributor order (the deterministic fixup-ordered reduction),
+//!    then store.
+//!
+//! The [`Epilogue`] hook runs inside the stores of passes 2–3, exactly
+//! once per output element.
+
+use super::micro::{block_update, KC};
+use super::pack::{pack_a, pack_b, PackBuf};
+use super::{default_threads, Epilogue};
+use crate::decomp::{BlockShape, FlatSchedule, GemmShape};
+use crate::exec::scope_map_with;
+
+/// Where one work item's accumulator goes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dest {
+    /// Full-K coverage: store straight into C (direct tile / segment).
+    Store,
+    /// Partial K segment: becomes partial buffer `(cu, slot)`, summed by
+    /// the fixup pass.
+    Partial { cu: usize, slot: usize },
+}
+
+/// One work item, fully resolved: which C tile, which A/B slices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TileJob {
+    pub tile: usize,
+    /// Clamped tile origin rows/cols (the kernel's edge addressing:
+    /// `min(tm·BM, M−BM)`).
+    pub r0: usize,
+    pub c0: usize,
+    /// Contiguous valid K columns `[kc0, kc1)` — the union of the
+    /// segment's BK-deep steps after the nopad `>=`-mask.
+    pub kc0: usize,
+    pub kc1: usize,
+    pub dest: Dest,
+}
+
+/// One fixup tile: origin plus its contributor range in
+/// [`ExecDesc::sources`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FixupTile {
+    pub tile: usize,
+    pub r0: usize,
+    pub c0: usize,
+    pub src_start: usize,
+    pub src_end: usize,
+}
+
+/// Precomputed per-work-item tile descriptors for one flat schedule —
+/// everything the dispatcher needs, allocation-free at execute time
+/// (modulo the per-item accumulators the reference also allocated).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecDesc {
+    pub shape: GemmShape,
+    pub block: BlockShape,
+    /// Phase-1 work items in the reference's serial store order
+    /// (CU-major; per CU: DP quota then SK segments).
+    pub jobs: Vec<TileJob>,
+    /// Split tiles in ascending tile order (the fixup pass order).
+    pub fixup: Vec<FixupTile>,
+    /// Contributor → phase-1 job index, in fixup-sum order.
+    pub sources: Vec<usize>,
+    /// Total MAC-FLOPs (drives the parallel/serial heuristic).
+    pub macs: u64,
+}
+
+impl ExecDesc {
+    /// Resolve every work item of `flat` against `shape`/`block`.
+    /// `block` must be the (effective) block the schedule was built
+    /// with — the same contract as the per-element executor.
+    pub fn new(shape: GemmShape, block: BlockShape, flat: &FlatSchedule) -> Self {
+        let (m, n, k) = (shape.m, shape.n, shape.k);
+        let (bm, bn, bk) = (block.bm, block.bn, block.bk);
+        let ipt = flat.grid.iters_per_tile;
+        let origin = |tile: usize| -> (usize, usize) {
+            let (tm, tn) = flat.grid.tile_rc(tile);
+            (
+                (tm * bm).min(m.saturating_sub(bm)),
+                (tn * bn).min(n.saturating_sub(bn)),
+            )
+        };
+
+        let mut jobs = Vec::with_capacity(flat.num_items());
+        // (cu, slot) → phase-1 job index; the reference's two-slot
+        // partial buffer, as indices (last write wins, like the buffer).
+        let mut partial_job = vec![usize::MAX; flat.p * 2];
+        let mut macs = 0u64;
+        for cu in 0..flat.p {
+            for tile in flat.direct_tiles(cu) {
+                let (r0, c0) = origin(tile);
+                let kc1 = k.min(ipt * bk);
+                macs += 2 * (bm * bn * kc1) as u64;
+                jobs.push(TileJob { tile, r0, c0, kc0: 0, kc1, dest: Dest::Store });
+            }
+            for seg in flat.cu_segments(cu) {
+                let (r0, c0) = origin(seg.tile);
+                // Clamp both ends: a (deliberately broken) schedule may
+                // carry a segment past K — the per-element reference
+                // masks every column of it out, i.e. an empty range.
+                let kc0 = (seg.k_start * bk).min(k);
+                let kc1 = k.min((seg.k_start + seg.k_len) * bk).max(kc0);
+                let dest = if seg.direct {
+                    Dest::Store
+                } else {
+                    partial_job[cu * 2 + seg.slot] = jobs.len();
+                    Dest::Partial { cu, slot: seg.slot }
+                };
+                macs += 2 * (bm * bn * (kc1 - kc0)) as u64;
+                jobs.push(TileJob { tile: seg.tile, r0, c0, kc0, kc1, dest });
+            }
+        }
+
+        let mut fixup = Vec::with_capacity(flat.split_tiles.len());
+        let mut sources = Vec::new();
+        for (i, &tile) in flat.split_tiles.iter().enumerate() {
+            let (r0, c0) = origin(tile);
+            let src_start = sources.len();
+            for cb in flat.tile_contributors(i) {
+                // usize::MAX marks a contributor whose (cu, slot) no
+                // partial segment wrote — possible only in broken
+                // (fault-injected) schedules. The reference reads the
+                // zero-initialized partials buffer there (a no-op add);
+                // the dispatcher skips the sentinel to match.
+                sources.push(partial_job[cb.cu * 2 + cb.slot]);
+            }
+            fixup.push(FixupTile {
+                tile,
+                r0,
+                c0,
+                src_start,
+                src_end: sources.len(),
+            });
+        }
+
+        Self { shape, block, jobs, fixup, sources, macs }
+    }
+}
+
+/// Execute a described schedule over row-major f32 slices; worker count
+/// chosen from the problem size. See [`execute_threads`].
+pub fn execute(
+    a: &[f32],
+    b: &[f32],
+    desc: &ExecDesc,
+    epilogue: Epilogue,
+) -> Vec<f32> {
+    execute_threads(a, b, desc, epilogue, default_threads(desc.macs))
+}
+
+/// How many work items are computed in parallel before their direct
+/// stores drain — bounds the transient accumulator memory at
+/// `WINDOW × BM × BN` f32 (8 MiB at the 128-wide default blocks)
+/// instead of one accumulator per work item for the whole run.
+const WINDOW: usize = 128;
+
+/// Execute with an explicit worker count (benches / determinism tests).
+/// Output is bit-identical for every `threads` value.
+pub fn execute_threads(
+    a: &[f32],
+    b: &[f32],
+    desc: &ExecDesc,
+    epilogue: Epilogue,
+    threads: usize,
+) -> Vec<f32> {
+    let GemmShape { m, n, k } = desc.shape;
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let (bm, bn) = (desc.block.bm, desc.block.bn);
+    let mut c = vec![0.0f32; m * n];
+    // Partial-segment accumulators (the reference's two-slot-per-CU
+    // buffer), kept alive until the fixup pass; direct accumulators
+    // drain window by window.
+    let mut partial_accs: Vec<Option<Vec<f32>>> = vec![None; desc.jobs.len()];
+
+    // Passes 1+2, windowed: compute a window of independent work items
+    // in parallel, then apply its stores in the reference's serial
+    // order. Windows ascend in job order, so the overall store order is
+    // exactly the reference's.
+    let mut start = 0;
+    while start < desc.jobs.len() {
+        let end = (start + WINDOW).min(desc.jobs.len());
+        let accs: Vec<Vec<f32>> = scope_map_with(
+            threads,
+            &desc.jobs[start..end],
+            PackBuf::new,
+            |buf, _, job| compute_job(a, b, k, n, bm, bn, job, buf),
+        );
+        for (off, acc) in accs.into_iter().enumerate() {
+            let job = &desc.jobs[start + off];
+            match job.dest {
+                Dest::Store => store_tile(
+                    &mut c, n, job.r0, job.c0, bm, bn, &acc, epilogue,
+                ),
+                Dest::Partial { .. } => {
+                    partial_accs[start + off] = Some(acc);
+                }
+            }
+        }
+        start = end;
+    }
+
+    // Pass 3: fixup-ordered reduction of partial K segments.
+    let mut facc = vec![0.0f32; bm * bn];
+    for ft in &desc.fixup {
+        facc.iter_mut().for_each(|v| *v = 0.0);
+        for &src in &desc.sources[ft.src_start..ft.src_end] {
+            if src == usize::MAX {
+                continue; // unwritten partial slot == all-zero buffer
+            }
+            let Some(frag) = partial_accs[src].as_ref() else {
+                continue; // ditto: slot declared but never produced
+            };
+            for (d, s) in facc.iter_mut().zip(frag) {
+                *d += *s;
+            }
+        }
+        store_tile(&mut c, n, ft.r0, ft.c0, bm, bn, &facc, epilogue);
+    }
+    c
+}
+
+/// Accumulate one work item: stream its K range in cache-sized chunks
+/// through pack + microkernel. K chunks ascend, so per-element FP order
+/// matches the reference exactly.
+#[allow(clippy::too_many_arguments)]
+fn compute_job(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    bm: usize,
+    bn: usize,
+    job: &TileJob,
+    buf: &mut PackBuf,
+) -> Vec<f32> {
+    let mut acc = vec![0.0f32; bm * bn];
+    let mut kc = job.kc0;
+    while kc < job.kc1 {
+        let kv = KC.min(job.kc1 - kc);
+        pack_a(&mut buf.a, a, k, job.r0, bm, kc, kv);
+        pack_b(&mut buf.b, b, n, job.c0, bn, kc, kv);
+        block_update(&buf.a, &buf.b, bm, bn, kv, &mut acc);
+        kc += kv;
+    }
+    acc
+}
+
+/// Store one `bm × bn` accumulator into C at its clamped origin, with
+/// the epilogue fused in.
+#[allow(clippy::too_many_arguments)]
+fn store_tile(
+    c: &mut [f32],
+    n: usize,
+    r0: usize,
+    c0: usize,
+    bm: usize,
+    bn: usize,
+    acc: &[f32],
+    epilogue: Epilogue,
+) {
+    for r in 0..bm {
+        let at = (r0 + r) * n + c0;
+        let row = &mut c[at..at + bn];
+        let src = &acc[r * bn..(r + 1) * bn];
+        if epilogue == Epilogue::None {
+            row.copy_from_slice(src);
+        } else {
+            for (d, &s) in row.iter_mut().zip(src) {
+                *d = epilogue.apply(s);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dense blocked matmul — the interpreter's plain-gemm / MLP path
+// ---------------------------------------------------------------------
+
+/// Row-major `C[m,n] = A[m,k] · B[k,n]` through the same K-chunked
+/// microkernel, parallel over row panels. Bit-identical to the naive
+/// triple loop *without* zero-skip (K ascends per element; `0·Inf`
+/// stays NaN), independent of thread count. Workers accumulate straight
+/// into disjoint row panels of the one output buffer — no per-panel
+/// staging, no final gather copy.
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let mut c = vec![0.0f32; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return c;
+    }
+    // Rows per panel: big enough to amortize dispatch, small enough to
+    // split MLP batches across workers.
+    const RB: usize = 32;
+    let threads =
+        default_threads(2 * (m * n) as u64 * k as u64).min(m.div_ceil(RB));
+    if threads <= 1 {
+        let mut buf = PackBuf::new();
+        for (i, panel) in c.chunks_mut(RB * n).enumerate() {
+            matmul_panel(a, b, k, n, i * RB, panel, &mut buf);
+        }
+        return c;
+    }
+    // Round-robin the row panels over scoped workers: panels are
+    // uniform, so static assignment balances and every worker writes
+    // its own disjoint slices of C.
+    let mut per_worker: Vec<Vec<(usize, &mut [f32])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (i, panel) in c.chunks_mut(RB * n).enumerate() {
+        per_worker[i % threads].push((i * RB, panel));
+    }
+    std::thread::scope(|scope| {
+        for work in per_worker {
+            scope.spawn(move || {
+                let mut buf = PackBuf::new();
+                for (r0, panel) in work {
+                    matmul_panel(a, b, k, n, r0, panel, &mut buf);
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Accumulate one row panel of C (`out` holds `out.len() / n` rows
+/// starting at row `r0`, zero-initialized) in ascending K chunks.
+fn matmul_panel(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    r0: usize,
+    out: &mut [f32],
+    buf: &mut PackBuf,
+) {
+    let rows = out.len() / n;
+    let mut kc = 0;
+    while kc < k {
+        let kv = KC.min(k - kc);
+        pack_a(&mut buf.a, a, k, r0, rows, kc, kv);
+        // B rows are already contiguous at full width: no pack.
+        block_update(&buf.a, &b[kc * n..(kc + kv) * n], rows, n, kv, out);
+        kc += kv;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decomp::{build_schedule, BlockShape, GemmShape};
+    use crate::faults::{execute_flat_ref, Matrix};
+    use crate::prop;
+
+    fn bits_equal(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len(), "{what}: length");
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "{what}: elem {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    fn flat_of(
+        m: usize,
+        n: usize,
+        k: usize,
+        p: usize,
+        block: BlockShape,
+    ) -> (GemmShape, crate::decomp::FlatSchedule, BlockShape) {
+        let shape = GemmShape::new(m, n, k);
+        let s = build_schedule(shape, block, p).unwrap();
+        (shape, crate::decomp::FlatSchedule::from_schedule(&s), s.block)
+    }
+
+    #[test]
+    fn blocked_matches_reference_bitwise_on_fixed_shapes() {
+        for (m, n, k, p) in [
+            (96usize, 102usize, 100usize, 12usize), // ragged hybrid
+            (3, 9, 9, 120),                         // tiny, idle CUs
+            (48, 64, 80, 1),                        // serial
+            (64, 64, 64, 7),                        // aligned, odd CUs
+            (60, 64, 64, 120),                      // deep multi-way splits
+        ] {
+            let mut rng = prop::Rng::new((m * 5 + n + k * 3 + p) as u64);
+            let a = Matrix::random(m, k, &mut rng);
+            let b = Matrix::random(k, n, &mut rng);
+            let (shape, flat, block) =
+                flat_of(m, n, k, p, BlockShape::new(16, 16, 8));
+            let want = execute_flat_ref(&a.data, &b.data, shape, &flat, block);
+            let desc = ExecDesc::new(shape, block, &flat);
+            for threads in [1usize, 4] {
+                let got = execute_threads(
+                    &a.data,
+                    &b.data,
+                    &desc,
+                    Epilogue::None,
+                    threads,
+                );
+                bits_equal(
+                    &got,
+                    &want,
+                    &format!("{m}x{n}x{k} p={p} threads={threads}"),
+                );
+            }
+        }
+    }
+
+    /// Satellite acceptance: blocked execution is bit-identical to the
+    /// per-element reference over random shapes/blocks/CU counts with
+    /// NaN/∞ inputs and fixup-segment reduction exercised.
+    #[test]
+    fn prop_blocked_bit_identical_including_non_finite() {
+        prop::check("blocked == per-element reference (bitwise)", 40, |rng| {
+            let m = rng.usize_in(1, 150);
+            let n = rng.usize_in(1, 150);
+            let k = rng.usize_in(1, 150);
+            let p = *rng.choose(&[1usize, 3, 16, 120]);
+            let bm = *rng.choose(&[8usize, 16, 33]);
+            let bn = *rng.choose(&[8usize, 16, 33]);
+            let bk = *rng.choose(&[2usize, 8, 16]);
+            let mut a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            // Seed non-finite values: NaN propagation is part of the
+            // contract (no zero-skip anywhere).
+            for _ in 0..rng.usize_in(0, 4) {
+                let at = rng.usize_in(0, m * k - 1);
+                a.data[at] =
+                    *rng.choose(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+            }
+            let (shape, flat, block) =
+                flat_of(m, n, k, p, BlockShape::new(bm, bn, bk));
+            let want =
+                execute_flat_ref(&a.data, &b.data, shape, &flat, block);
+            let desc = ExecDesc::new(shape, block, &flat);
+            let threads = *rng.choose(&[1usize, 2, 5]);
+            let got = execute_threads(
+                &a.data,
+                &b.data,
+                &desc,
+                Epilogue::None,
+                threads,
+            );
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                if g.to_bits() != w.to_bits() {
+                    return Err(format!(
+                        "{m}x{n}x{k} p={p} block {bm}x{bn}x{bk} \
+                         threads={threads} elem {i}: {g:?} vs {w:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fixup_reduction_is_contributor_ordered() {
+        // 60x64x64 with a 16x16x2 block on 120 CUs has >= 3-way split
+        // tiles (the medium-matrix-bug regime): the fixup sum order is
+        // observable in FP, so bit-equality proves the reduction runs
+        // in contributor order.
+        let (shape, flat, block) =
+            flat_of(60, 64, 64, 120, BlockShape::new(16, 16, 2));
+        assert!(
+            flat.contributors.len() >= 3,
+            "case must exercise multi-way fixups"
+        );
+        let mut rng = prop::Rng::new(123);
+        let a = Matrix::random(60, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let want = execute_flat_ref(&a.data, &b.data, shape, &flat, block);
+        let desc = ExecDesc::new(shape, block, &flat);
+        for threads in [1usize, 3, 8] {
+            let got =
+                execute_threads(&a.data, &b.data, &desc, Epilogue::None, threads);
+            bits_equal(&got, &want, &format!("threads={threads}"));
+        }
+    }
+
+    #[test]
+    fn epilogue_fuses_at_store_only() {
+        // relu at the store == relu over the final C; partials must not
+        // be clamped before the fixup sum (negative partials + positive
+        // partials can produce positive finals).
+        let (shape, flat, block) =
+            flat_of(60, 64, 64, 120, BlockShape::new(16, 16, 2));
+        let mut rng = prop::Rng::new(5);
+        let a = Matrix::random(60, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let desc = ExecDesc::new(shape, block, &flat);
+        let plain = execute(&a.data, &b.data, &desc, Epilogue::None);
+        let fused = execute(&a.data, &b.data, &desc, Epilogue::Relu);
+        let mut post = plain;
+        Epilogue::Relu.apply_slice(&mut post);
+        bits_equal(&fused, &post, "fused relu");
+        assert!(fused.iter().any(|&v| v > 0.0), "case must be non-trivial");
+    }
+
+    #[test]
+    fn descriptor_k_ranges_cover_the_mask_exactly() {
+        // Ragged K: 100 with bk=8 -> last step holds 4 valid columns.
+        let (shape, flat, block) =
+            flat_of(96, 102, 100, 12, BlockShape::new(16, 16, 8));
+        let desc = ExecDesc::new(shape, block, &flat);
+        assert_eq!(desc.shape, shape);
+        for job in &desc.jobs {
+            assert!(job.kc0 < job.kc1, "empty K range");
+            assert!(job.kc1 <= shape.k, "mask violated: {job:?}");
+            assert!(job.r0 + block.bm <= shape.m);
+            assert!(job.c0 + block.bn <= shape.n);
+        }
+        // every partial referenced by the fixup arena resolves
+        for &src in &desc.sources {
+            assert!(matches!(desc.jobs[src].dest, Dest::Partial { .. }));
+        }
+        assert!(desc.macs > 0);
+    }
+
+    #[test]
+    fn matmul_matches_naive_order_bitwise() {
+        let mut rng = prop::Rng::new(11);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (5, 7, 3), (33, 40, 65)] {
+            let a = rng.normal_f32_vec(m * k);
+            let b = rng.normal_f32_vec(k * n);
+            // naive k-ascending reference, no zero-skip
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for l in 0..k {
+                    let av = a[i * k + l];
+                    for j in 0..n {
+                        want[i * n + j] += av * b[l * n + j];
+                    }
+                }
+            }
+            let got = matmul(&a, &b, m, k, n);
+            bits_equal(&got, &want, &format!("{m}x{k}x{n}"));
+        }
+    }
+
+    #[test]
+    fn matmul_propagates_non_finite() {
+        let a = vec![f32::INFINITY, 0.0];
+        let b = vec![0.0, 0.0]; // 1x2 @ 2x1: Inf*0 + 0*0 = NaN
+        let got = matmul(&a, &b, 1, 2, 1);
+        assert!(got[0].is_nan());
+        assert!(matmul(&[], &[], 0, 0, 4).is_empty());
+        assert_eq!(matmul(&[], &[], 2, 0, 2), vec![0.0; 4]);
+    }
+}

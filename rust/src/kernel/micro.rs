@@ -1,0 +1,192 @@
+//! The cache-sized f32 microkernel.
+//!
+//! [`block_update`] computes `acc[r, c] += Σ_kk ap[r, kk] · bp[kk, c]`
+//! over packed panels, walking K in strictly ascending order with one
+//! sequential addition per (element, k) pair — the exact FP sequence of
+//! the per-element reference executor, so results are bit-identical
+//! (including NaN/∞ propagation: zero operands are never skipped).
+//!
+//! The speed comes from register blocking: the `MR × NR` inner kernel
+//! keeps a 4×8 accumulator block in registers across the whole K slice
+//! (the reference re-loads and re-stores every accumulator element once
+//! per MAC), and the packed panels make every inner-loop access
+//! unit-stride so the compiler vectorizes the NR lane. Edges that do
+//! not fill an `MR × NR` block fall back to a scalar dot loop with the
+//! same K order.
+
+/// K-chunk length: panels of `BM × KC` + `KC × BN` f32 stay
+/// cache-resident (≤ 64 KiB each at the 128-wide default blocks).
+pub(crate) const KC: usize = 128;
+
+/// Register block rows.
+const MR: usize = 4;
+/// Register block columns (one or two SIMD lanes of f32).
+const NR: usize = 8;
+
+/// `acc (bm × bn) += ap (bm × kv, row-major) · bp (kv × bn, row-major)`.
+///
+/// `bp` may be a view of a wider row-major matrix only when its row
+/// stride equals `bn` (the dispatcher packs panels; [`super::matmul`]
+/// passes full-width B rows directly).
+pub fn block_update(
+    ap: &[f32],
+    bp: &[f32],
+    bm: usize,
+    bn: usize,
+    kv: usize,
+    acc: &mut [f32],
+) {
+    debug_assert!(ap.len() >= bm * kv, "A panel short");
+    debug_assert!(bp.len() >= kv * bn, "B panel short");
+    debug_assert!(acc.len() >= bm * bn, "acc short");
+    if kv == 0 || bm == 0 || bn == 0 {
+        return;
+    }
+    let mut r0 = 0;
+    while r0 + MR <= bm {
+        let a_rows: [&[f32]; MR] = [
+            &ap[r0 * kv..][..kv],
+            &ap[(r0 + 1) * kv..][..kv],
+            &ap[(r0 + 2) * kv..][..kv],
+            &ap[(r0 + 3) * kv..][..kv],
+        ];
+        let mut c0 = 0;
+        while c0 + NR <= bn {
+            micro_block(&a_rows, bp, bn, kv, r0, c0, acc);
+            c0 += NR;
+        }
+        for r in r0..r0 + MR {
+            for c in c0..bn {
+                edge_dot(ap, bp, bn, kv, r, c, acc);
+            }
+        }
+        r0 += MR;
+    }
+    for r in r0..bm {
+        for c in 0..bn {
+            edge_dot(ap, bp, bn, kv, r, c, acc);
+        }
+    }
+}
+
+/// One `MR × NR` register block: load accumulators once, stream the K
+/// slice, store once.
+#[inline]
+fn micro_block(
+    a_rows: &[&[f32]; MR],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    let mut reg = [[0.0f32; NR]; MR];
+    for (i, regs) in reg.iter_mut().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        regs.copy_from_slice(&acc[at..at + NR]);
+    }
+    for kk in 0..kv {
+        let brow = &bp[kk * bn + c0..][..NR];
+        for i in 0..MR {
+            let av = a_rows[i][kk];
+            for j in 0..NR {
+                reg[i][j] += av * brow[j];
+            }
+        }
+    }
+    for (i, regs) in reg.iter().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        acc[at..at + NR].copy_from_slice(regs);
+    }
+}
+
+/// Scalar fallback for one edge element — identical K order.
+#[inline]
+fn edge_dot(
+    ap: &[f32],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r: usize,
+    c: usize,
+    acc: &mut [f32],
+) {
+    let arow = &ap[r * kv..][..kv];
+    let mut s = acc[r * bn + c];
+    for (kk, &av) in arow.iter().enumerate() {
+        s += av * bp[kk * bn + c];
+    }
+    acc[r * bn + c] = s;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::Rng;
+
+    /// The per-element reference order: for each element, K ascending,
+    /// one sequential add per MAC.
+    fn reference(
+        ap: &[f32],
+        bp: &[f32],
+        bm: usize,
+        bn: usize,
+        kv: usize,
+        acc: &mut [f32],
+    ) {
+        for r in 0..bm {
+            for kk in 0..kv {
+                let av = ap[r * kv + kk];
+                for c in 0..bn {
+                    acc[r * bn + c] += av * bp[kk * bn + c];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bit_identical_to_reference_over_odd_shapes() {
+        let mut rng = Rng::new(7);
+        for (bm, bn, kv) in [
+            (1usize, 1usize, 1usize),
+            (4, 8, 16),   // exact register blocks
+            (5, 9, 3),    // edges in both dimensions
+            (16, 16, 8),  // the faults-test block
+            (7, 130, 33), // wide with a 2-col edge
+            (12, 8, 0),   // empty K slice: no-op
+        ] {
+            let ap = rng.normal_f32_vec(bm * kv);
+            let bp = rng.normal_f32_vec(kv * bn);
+            let mut want = rng.normal_f32_vec(bm * bn); // nonzero start
+            let mut got = want.clone();
+            reference(&ap, &bp, bm, bn, kv, &mut want);
+            block_update(&ap, &bp, bm, bn, kv, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{bm}x{bn}x{kv} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn no_zero_skip_nan_propagates() {
+        // Inf * 0 must produce NaN inside the register block and at the
+        // scalar edge alike.
+        let bm = 5;
+        let bn = 9;
+        let kv = 2;
+        let mut ap = vec![0.0f32; bm * kv];
+        ap[0] = f32::INFINITY; // row 0 (register block)
+        ap[4 * kv] = f32::INFINITY; // row 4 (scalar edge row)
+        let bp = vec![0.0f32; kv * bn];
+        let mut acc = vec![0.0f32; bm * bn];
+        block_update(&ap, &bp, bm, bn, kv, &mut acc);
+        assert!(acc[0].is_nan(), "register path lost 0*Inf");
+        assert!(acc[4 * bn + 8].is_nan(), "edge path lost 0*Inf");
+        assert_eq!(acc[bn], 0.0, "untouched rows stay zero");
+    }
+}

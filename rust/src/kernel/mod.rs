@@ -1,0 +1,181 @@
+//! Blocked microkernel execution layer — how the functional backend
+//! actually runs a Stream-K schedule over host data.
+//!
+//! The interpreter runtime, the fault-injection executors and the
+//! kernel-equivalence bench all execute schedules on the CPU. The
+//! original per-element executors indexed `A[(r0+r)*k + kcol]` /
+//! `B[kcol*n + c0+cc]` once per MAC, which is several-fold off what a
+//! blocked CPU GEMM does. This layer executes a [`FlatSchedule`] the way
+//! the paper decomposes it — fixed-size block tiles streamed over the K
+//! dimension — with the classic packed-buffer structure of BLIS-style
+//! CPU GEMM (Huang et al., 2016):
+//!
+//! - [`pack`] — row-slice panel packing: the A panel (`BM × kc`) and the
+//!   B panel (`kc × BN`) of one tile's K-slice are copied into
+//!   contiguous scratch, so the inner loops walk unit-stride memory;
+//! - [`micro`] — a cache-sized, register-blocked f32 microkernel
+//!   (`MR × NR` accumulators) that streams the packed panels in strictly
+//!   ascending K order, so every output element sees the *exact* FP
+//!   addition sequence of the per-element reference — bit-identical
+//!   numerics, including NaN/∞ propagation (zero operands are never
+//!   skipped);
+//! - [`exec`] — per-work-item dispatch: [`exec::ExecDesc`] precomputes
+//!   one tile descriptor per [`FlatSchedule`] work item (clamped tile
+//!   origins, contiguous valid-K ranges, partial-slot routing), the
+//!   dispatcher computes independent work items in parallel over
+//!   [`crate::exec::scope_map_with`], then applies stores in the
+//!   reference's serial order and sums fixup contributors in
+//!   k-ascending contributor order — deterministic for every thread
+//!   count.
+//!
+//! The [`Epilogue`] hook fuses the artifact epilogue (relu / tanh-gelu)
+//! into the accumulate-into-C store, so the interpreter runtime does not
+//! re-walk C after a fused gemm.
+//!
+//! Consumers: [`crate::faults::execute_flat`] (interpreter runtime),
+//! [`crate::faults::execute_schedule`] (fault-injection replay),
+//! [`crate::runtime`]'s interpreter backend (Stream-K gemm artifacts and
+//! the MLP matmuls via [`matmul`]), and `benches/kernel_exec.rs`.
+
+pub mod exec;
+pub mod micro;
+pub mod pack;
+
+pub use exec::{execute, execute_threads, matmul, Dest, ExecDesc, TileJob};
+pub use pack::PackBuf;
+
+use crate::decomp::FlatSchedule;
+
+/// Below this many MAC-FLOPs the dispatcher stays single-threaded —
+/// scoped-thread spawn (~tens of µs) would dominate tiny problems.
+const PARALLEL_MIN_MACS: u64 = 1 << 23;
+
+/// Worker cap: the executor shares the machine with the coordinator's
+/// worker threads and the test harness; past 8 lanes the packed panels
+/// start fighting over shared cache anyway.
+const MAX_THREADS: usize = 8;
+
+/// Pick the worker count for `macs` MAC-FLOPs of schedule work.
+pub(crate) fn default_threads(macs: u64) -> usize {
+    if macs < PARALLEL_MIN_MACS {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(MAX_THREADS)
+}
+
+/// Elementwise epilogue fused into the accumulate-into-C store. Applied
+/// exactly once per output element (at the direct store or the fixup
+/// store — never to a partial), so fusing is bit-identical to a separate
+/// post-pass over C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Epilogue {
+    #[default]
+    None,
+    Relu,
+    /// jax.nn.gelu(approximate=True) — the tanh approximation the MLP
+    /// graph lowers (`python/compile/model.py`).
+    Gelu,
+}
+
+impl Epilogue {
+    /// Map an artifact-manifest epilogue name; `None` for unsupported
+    /// names (the runtime turns that into its typed backend error).
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "" | "none" => Some(Self::None),
+            "relu" => Some(Self::Relu),
+            "gelu" => Some(Self::Gelu),
+            _ => None,
+        }
+    }
+
+    #[inline]
+    pub fn apply(self, v: f32) -> f32 {
+        match self {
+            Self::None => v,
+            Self::Relu => v.max(0.0),
+            Self::Gelu => gelu(v),
+        }
+    }
+
+    /// Apply in place over a full buffer (the unfused fallback path).
+    pub fn apply_slice(self, c: &mut [f32]) {
+        if self != Self::None {
+            for v in c {
+                *v = self.apply(*v);
+            }
+        }
+    }
+}
+
+/// The tanh-approximate gelu, computed in f64 exactly as the original
+/// interpreter backend did (bit-compatible with the PJRT lowering).
+pub fn gelu(x: f32) -> f32 {
+    let x = x as f64;
+    let inner =
+        (2.0 / std::f64::consts::PI).sqrt() * (x + 0.044715 * x * x * x);
+    (0.5 * x * (1.0 + inner.tanh())) as f32
+}
+
+/// Convenience: descriptor + blocked execution for a flat schedule in
+/// one call (callers that replay repeatedly should cache the
+/// [`ExecDesc`] — [`crate::plan::Plan`] does).
+pub fn execute_flat_schedule(
+    a: &[f32],
+    b: &[f32],
+    shape: crate::decomp::GemmShape,
+    flat: &FlatSchedule,
+    block: crate::decomp::BlockShape,
+    epilogue: Epilogue,
+) -> Vec<f32> {
+    let desc = ExecDesc::new(shape, block, flat);
+    execute(a, b, &desc, epilogue)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epilogue_parsing_matches_manifest_names() {
+        assert_eq!(Epilogue::parse(""), Some(Epilogue::None));
+        assert_eq!(Epilogue::parse("none"), Some(Epilogue::None));
+        assert_eq!(Epilogue::parse("relu"), Some(Epilogue::Relu));
+        assert_eq!(Epilogue::parse("gelu"), Some(Epilogue::Gelu));
+        assert_eq!(Epilogue::parse("swish"), None);
+    }
+
+    #[test]
+    fn epilogue_apply_matches_slice_apply() {
+        let vals = [-2.5f32, -0.0, 0.0, 0.7, 10.0, f32::NAN];
+        for ep in [Epilogue::None, Epilogue::Relu, Epilogue::Gelu] {
+            let mut buf = vals.to_vec();
+            ep.apply_slice(&mut buf);
+            for (&v, &got) in vals.iter().zip(&buf) {
+                let want = ep.apply(v);
+                assert!(
+                    want.to_bits() == got.to_bits(),
+                    "{ep:?}({v}): {want} vs {got}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gelu_limits() {
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+        assert!(gelu(-10.0).abs() < 1e-4);
+        assert_eq!(gelu(0.0), 0.0);
+    }
+
+    #[test]
+    fn thread_heuristic_keeps_small_problems_serial() {
+        assert_eq!(default_threads(0), 1);
+        assert_eq!(default_threads(1 << 20), 1);
+        let big = default_threads(1 << 30);
+        assert!(big >= 1 && big <= MAX_THREADS);
+    }
+}

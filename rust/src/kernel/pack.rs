@@ -1,0 +1,94 @@
+//! Row-slice panel packing into contiguous scratch buffers.
+//!
+//! The microkernel wants unit-stride operands: the A panel as `rows ×
+//! kc` (row-major, one contiguous K slice per tile row) and the B panel
+//! as `kc × cols` (one contiguous BN-wide row per K column). Packing is
+//! a pure copy — values are untouched, so it cannot perturb the
+//! bit-identical numerics contract — and the buffers are reused across
+//! K chunks and across work items by each dispatcher worker
+//! ([`PackBuf`]), so the steady-state hot path allocates nothing.
+
+/// Per-worker packing scratch: one A panel + one B panel, grown once to
+/// the high-water panel size and reused for every subsequent chunk.
+#[derive(Debug, Default)]
+pub struct PackBuf {
+    pub(crate) a: Vec<f32>,
+    pub(crate) b: Vec<f32>,
+}
+
+impl PackBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Pack `rows` rows of `a` (row stride `stride`), columns
+/// `[kc0, kc0 + kv)`, into `buf` as a contiguous `rows × kv` panel.
+pub(crate) fn pack_a(
+    buf: &mut Vec<f32>,
+    a: &[f32],
+    stride: usize,
+    r0: usize,
+    rows: usize,
+    kc0: usize,
+    kv: usize,
+) {
+    buf.clear();
+    buf.reserve(rows * kv);
+    for r in 0..rows {
+        let src = &a[(r0 + r) * stride + kc0..][..kv];
+        buf.extend_from_slice(src);
+    }
+}
+
+/// Pack `kv` rows of `b` (row stride `stride`), columns
+/// `[c0, c0 + cols)`, into `buf` as a contiguous `kv × cols` panel.
+pub(crate) fn pack_b(
+    buf: &mut Vec<f32>,
+    b: &[f32],
+    stride: usize,
+    c0: usize,
+    cols: usize,
+    kc0: usize,
+    kv: usize,
+) {
+    buf.clear();
+    buf.reserve(kv * cols);
+    for kk in 0..kv {
+        let src = &b[(kc0 + kk) * stride + c0..][..cols];
+        buf.extend_from_slice(src);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn a_panel_is_row_major_slice_copy() {
+        // 3x4 matrix, pack rows 1..3, cols 1..3
+        let a: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut buf = Vec::new();
+        pack_a(&mut buf, &a, 4, 1, 2, 1, 2);
+        assert_eq!(buf, vec![5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn b_panel_is_k_major_slice_copy() {
+        // 4x3 matrix, pack k rows 2..4, cols 0..2
+        let b: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        let mut buf = Vec::new();
+        pack_b(&mut buf, &b, 3, 0, 2, 2, 2);
+        assert_eq!(buf, vec![6.0, 7.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn buffers_are_reused_without_stale_tails() {
+        let a: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let mut pb = PackBuf::new();
+        pack_a(&mut pb.a, &a, 4, 0, 4, 0, 4);
+        assert_eq!(pb.a.len(), 16);
+        pack_a(&mut pb.a, &a, 4, 0, 1, 0, 2);
+        assert_eq!(pb.a, vec![0.0, 1.0]);
+    }
+}

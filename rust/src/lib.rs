@@ -10,7 +10,9 @@
 //! - **L3** (this crate): the runtime — partition math ([`decomp`]), a
 //!   GPU-occupancy simulator ([`gpu_sim`]), the Block2Time predictive load
 //!   balancer ([`predict`]), a sharded plan cache over flattened Stream-K
-//!   schedules ([`plan`] — the zero-rebuild serving hot path), a
+//!   schedules ([`plan`] — the zero-rebuild serving hot path), a blocked
+//!   packed-tile microkernel execution layer ([`kernel`] — how the
+//!   functional backend runs those schedules over host data), a
 //!   legality-pruned autotuner with a persistent per-shape config cache
 //!   ([`tuner`]), a heterogeneous multi-device serving layer ([`fleet`]),
 //!   a PJRT artifact runtime ([`runtime`]), and the serving coordinator
@@ -29,6 +31,7 @@ pub mod faults;
 pub mod fleet;
 pub mod gpu_sim;
 pub mod json;
+pub mod kernel;
 pub mod plan;
 pub mod predict;
 pub mod prop;

@@ -24,8 +24,8 @@ use streamk::decomp::{
 };
 use streamk::exec::Stopwatch;
 use streamk::fleet::{
-    gen_open_trace, gen_trace, run_trace, run_trace_open, warm, Fleet,
-    PlacementPolicy, ShapeMix,
+    gen_open_trace, gen_trace, run_trace, run_trace_open_bounded, warm,
+    Fleet, PlacementPolicy, ShapeMix,
 };
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::plan::PlanCacheStats;
@@ -83,7 +83,8 @@ fn top_usage() -> String {
 fn plan_stats_line(s: &PlanCacheStats) -> String {
     format!(
         "plan cache: {} hits / {} misses ({:.1}% hit rate) | {} builds \
-         ({:.2} ms total build time) | {} entries | {} evictions",
+         ({:.2} ms total build time) | {} entries | {} evictions | \
+         hwm {} ({} busiest shard of {})",
         s.hits,
         s.misses,
         s.hit_rate() * 100.0,
@@ -91,6 +92,9 @@ fn plan_stats_line(s: &PlanCacheStats) -> String {
         s.build_time_s * 1e3,
         s.entries,
         s.evictions,
+        s.hwm_entries,
+        s.hwm_shard_max,
+        s.shards,
     )
 }
 
@@ -476,7 +480,24 @@ fn cmd_plan(argv: &[String]) -> i32 {
         hit_s * 1e6,
         build_s / hit_s.max(1e-12),
     );
-    println!("{}", plan_stats_line(&cache.stats()));
+    let stats = cache.stats();
+    println!("{}", plan_stats_line(&stats));
+    println!(
+        "  capacity: observed distinct-key high-water mark {} \
+         (busiest shard {}) -> recommended capacity {}{} \
+         (override with STREAMK_PLAN_CACHE_CAP)",
+        stats.hwm_entries,
+        stats.hwm_shard_max,
+        if stats.saturated() { "at least " } else { "" },
+        stats.recommended_capacity(),
+    );
+    if stats.saturated() {
+        println!(
+            "  note: shards evicted during this run, so the high-water \
+             mark is clipped — raise the capacity and re-measure for the \
+             true working set"
+        );
+    }
     0
 }
 
@@ -504,9 +525,15 @@ fn cmd_fleet(argv: &[String]) -> i32 {
         Some("0"),
         "open-loop Poisson arrivals at this req/s (0 = closed loop only)",
     ))
+    .opt(Opt::value(
+        "max-queue",
+        Some("0"),
+        "open-loop admission bound: shed past this per-device queue depth (0 = unbounded)",
+    ))
     .example("streamk fleet --requests 400")
     .example("streamk fleet --devices mi200,mi100 --no-warm")
-    .example("streamk fleet --open-rate 500   # queueing delay visible");
+    .example("streamk fleet --open-rate 500   # queueing delay visible")
+    .example("streamk fleet --open-rate 500 --max-queue 4   # shed rate visible");
     let args = parse_or_exit(&cmd, argv);
     let devices = match Device::parse_fleet_spec(args.str("devices")) {
         Ok(d) => d,
@@ -595,22 +622,38 @@ fn cmd_fleet(argv: &[String]) -> i32 {
 
     let open_rate = args.f64("open-rate").unwrap_or(0.0);
     if open_rate > 0.0 {
+        let max_queue = args.usize("max-queue").unwrap_or(0);
         let open = gen_open_trace(
             args.usize("seed").unwrap() as u64 ^ 0x5EED,
             n,
             &mix,
             Arrival::Poisson { rate: open_rate },
         );
-        let rr_o =
-            run_trace_open(&fleet, &open, PlacementPolicy::RoundRobin, false);
-        let b2t_o =
-            run_trace_open(&fleet, &open, PlacementPolicy::Block2Time, false);
+        let rr_o = run_trace_open_bounded(
+            &fleet,
+            &open,
+            PlacementPolicy::RoundRobin,
+            false,
+            max_queue,
+        );
+        let b2t_o = run_trace_open_bounded(
+            &fleet,
+            &open,
+            PlacementPolicy::Block2Time,
+            false,
+            max_queue,
+        );
         println!(
-            "\nopen loop (Poisson {open_rate:.0} req/s, {n} requests):"
+            "\nopen loop (Poisson {open_rate:.0} req/s, {n} requests{}):",
+            if max_queue > 0 {
+                format!(", max queue depth {max_queue}")
+            } else {
+                String::new()
+            }
         );
         let mut t = streamk::bench::Table::new(&[
             "policy", "makespan ms", "queue mean ms", "queue p95 ms",
-            "TFLOP/s",
+            "shed %", "TFLOP/s",
         ]);
         for r in [&rr_o, &b2t_o] {
             t.row(&[
@@ -618,6 +661,7 @@ fn cmd_fleet(argv: &[String]) -> i32 {
                 format!("{:.3}", r.makespan_s * 1e3),
                 format!("{:.3}", r.queue_delay_mean_s * 1e3),
                 format!("{:.3}", r.queue_delay_p95_s * 1e3),
+                format!("{:.1}", r.shed_rate() * 100.0),
                 format!("{:.2}", r.throughput_tflops()),
             ]);
         }

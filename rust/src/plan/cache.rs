@@ -21,16 +21,29 @@ use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-/// Default process-wide cache: plenty for every (shape bucket × config ×
-/// grid) combination a serving process sees, small enough to be
-/// negligible memory.
-const GLOBAL_CAPACITY: usize = 2048;
+/// Process-wide cache sizing, derived from the observed distinct-key
+/// high-water marks (`hwm_shard_max` in the stats) instead of the old
+/// hand-picked total of 2048 over 8 shards: the serving traces this
+/// repo ships (the `e2e_serve` coordinator smoke, `streamk fleet`, the
+/// tuner's Table-1 sweeps) peak below ~16 distinct keys per shard, so
+/// 64 per shard (512 total — a 4× cut from the old default) is 4×
+/// headroom over the observed demand. Operators with wider shape mixes
+/// can override via `STREAMK_PLAN_CACHE_CAP` (total plans across all
+/// shards); the `streamk plan` inspector prints the observed high-water
+/// mark and the capacity it recommends.
+const GLOBAL_PLANS_PER_SHARD: usize = 64;
 const GLOBAL_SHARDS: usize = 8;
+/// Environment override for the global cache's total capacity.
+pub const CAPACITY_ENV: &str = "STREAMK_PLAN_CACHE_CAP";
 
 /// One shard: MRU-first entries. Linear scan is fine at per-shard sizes
 /// (hundreds); the key compare is a handful of integer equalities.
 struct Shard {
     entries: Vec<(PlanKey, Arc<Plan>)>,
+    /// Distinct-key high-water mark: the most entries this shard ever
+    /// demanded at once (measured before eviction, so a saturated shard
+    /// reads `capacity + 1` — the "size me up" signal).
+    hwm: usize,
 }
 
 /// Sharded LRU plan cache. Cheap to share (`Arc<PlanCache>`); all
@@ -56,6 +69,13 @@ pub struct PlanCacheStats {
     pub build_time_s: f64,
     pub evictions: u64,
     pub entries: usize,
+    pub shards: usize,
+    /// Sum of per-shard distinct-key high-water marks — the peak
+    /// working set this process has demanded.
+    pub hwm_entries: usize,
+    /// The busiest shard's high-water mark — what capacity sizing keys
+    /// off (shards are hash-balanced, the max bounds them all).
+    pub hwm_shard_max: usize,
 }
 
 impl PlanCacheStats {
@@ -72,6 +92,25 @@ impl PlanCacheStats {
         }
     }
 
+    /// A shard hit its bound and evicted: the high-water mark is capped
+    /// at `per-shard capacity + 1`, so [`Self::recommended_capacity`]
+    /// is only a *lower bound* — raise the capacity and re-measure.
+    pub fn saturated(&self) -> bool {
+        self.evictions > 0
+    }
+
+    /// Capacity this trace's working set asks for: 2× the busiest
+    /// shard's high-water mark (headroom for mix drift), rounded up to
+    /// a power of two, across all shards — the number an operator (or
+    /// the next default) should hand `PlanCache::new` / set in
+    /// [`CAPACITY_ENV`]. When [`Self::saturated`] the hwm was clipped
+    /// by eviction and this is a lower bound, not the full demand.
+    pub fn recommended_capacity(&self) -> usize {
+        let per_shard =
+            (self.hwm_shard_max.max(1) * 2).next_power_of_two().clamp(8, 4096);
+        per_shard * self.shards.max(1)
+    }
+
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("hits", (self.hits as usize).into()),
@@ -81,6 +120,10 @@ impl PlanCacheStats {
             ("build_time_s", self.build_time_s.into()),
             ("evictions", (self.evictions as usize).into()),
             ("entries", self.entries.into()),
+            ("shards", self.shards.into()),
+            ("hwm_entries", self.hwm_entries.into()),
+            ("hwm_shard_max", self.hwm_shard_max.into()),
+            ("recommended_capacity", self.recommended_capacity().into()),
         ])
     }
 }
@@ -92,7 +135,7 @@ impl PlanCache {
         let shards = shards.min(capacity);
         Self {
             shards: (0..shards)
-                .map(|_| Mutex::new(Shard { entries: Vec::new() }))
+                .map(|_| Mutex::new(Shard { entries: Vec::new(), hwm: 0 }))
                 .collect(),
             per_shard_capacity: capacity.div_ceil(shards),
             hits: AtomicU64::new(0),
@@ -122,7 +165,33 @@ impl PlanCache {
         bytes_per_elem: usize,
         cus: usize,
     ) -> Result<Arc<Plan>, ScheduleError> {
-        let key = PlanKey::new(shape, block, bytes_per_elem, cus);
+        self.get_or_build_key(PlanKey::new(shape, block, bytes_per_elem, cus))
+    }
+
+    /// Memoized lookup of a Block2Time-weighted split: the per-CU weight
+    /// vector is quantized into the key (fixed-point 1/256 of the
+    /// fastest CU), so near-identical speed estimates reuse one plan
+    /// instead of re-running the weighted decomposition per estimate.
+    pub fn get_or_build_weighted(
+        &self,
+        shape: GemmShape,
+        block: BlockShape,
+        bytes_per_elem: usize,
+        weights: &[f64],
+    ) -> Result<Arc<Plan>, ScheduleError> {
+        self.get_or_build_key(PlanKey::weighted(
+            shape,
+            block,
+            bytes_per_elem,
+            weights,
+        ))
+    }
+
+    /// Core memoized lookup over a fully-formed key.
+    pub fn get_or_build_key(
+        &self,
+        key: PlanKey,
+    ) -> Result<Arc<Plan>, ScheduleError> {
         let shard = self.shard_for(&key);
         {
             let mut s = shard.lock().expect("plan shard");
@@ -139,7 +208,7 @@ impl PlanCache {
         self.misses.fetch_add(1, Ordering::Relaxed);
 
         let sw = Stopwatch::start();
-        let plan = Arc::new(Plan::build(key)?);
+        let plan = Arc::new(Plan::build(key.clone())?);
         self.builds.fetch_add(1, Ordering::Relaxed);
         self.build_ns.fetch_add(
             (sw.elapsed_secs() * 1e9) as u64,
@@ -155,6 +224,8 @@ impl PlanCache {
             return Ok(winner);
         }
         s.entries.insert(0, (key, plan.clone()));
+        // High-water mark before eviction: the shard's true demand.
+        s.hwm = s.hwm.max(s.entries.len());
         if s.entries.len() > self.per_shard_capacity {
             s.entries.truncate(self.per_shard_capacity);
             self.evictions.fetch_add(1, Ordering::Relaxed);
@@ -193,16 +264,25 @@ impl PlanCache {
     }
 
     pub fn stats(&self) -> PlanCacheStats {
+        let (mut entries, mut hwm_entries, mut hwm_shard_max) = (0, 0, 0);
+        for shard in &self.shards {
+            let s = shard.lock().expect("plan shard");
+            entries += s.entries.len();
+            hwm_entries += s.hwm;
+            hwm_shard_max = hwm_shard_max.max(s.hwm);
+        }
         PlanCacheStats {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             builds: self.builds.load(Ordering::Relaxed),
             build_time_s: self.build_ns.load(Ordering::Relaxed) as f64 / 1e9,
             evictions: self.evictions.load(Ordering::Relaxed),
-            entries: self.len(),
+            entries,
+            shards: self.shards.len(),
+            hwm_entries,
+            hwm_shard_max,
         }
     }
-
 }
 
 /// Build every missing plan in `keys` concurrently over an
@@ -217,12 +297,7 @@ pub fn warm_parallel(
     let before = cache.stats().builds;
     let shared = cache.clone();
     pool_map(threads, keys.to_vec(), move |key: PlanKey| {
-        let _ = shared.get_or_build(
-            key.shape,
-            key.block,
-            key.bytes_per_elem,
-            key.cus,
-        );
+        let _ = shared.get_or_build_key(key);
     });
     (cache.stats().builds - before) as usize
 }
@@ -230,10 +305,17 @@ pub fn warm_parallel(
 static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
 
 /// The process-wide plan cache shared by the coordinator, the fleet
-/// scheduler, the tuner, and the interpreter runtime.
+/// scheduler, the tuner, and the interpreter runtime. Capacity defaults
+/// to the hwm-derived [`GLOBAL_PLANS_PER_SHARD`]`×`[`GLOBAL_SHARDS`];
+/// [`CAPACITY_ENV`] overrides the total for wider shape mixes.
 pub fn global() -> &'static Arc<PlanCache> {
     GLOBAL.get_or_init(|| {
-        Arc::new(PlanCache::new(GLOBAL_CAPACITY, GLOBAL_SHARDS))
+        let capacity = std::env::var(CAPACITY_ENV)
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c > 0)
+            .unwrap_or(GLOBAL_PLANS_PER_SHARD * GLOBAL_SHARDS);
+        Arc::new(PlanCache::new(capacity, GLOBAL_SHARDS))
     })
 }
 
@@ -284,23 +366,83 @@ mod tests {
         // One shard, capacity 2: the third insert must evict the LRU.
         let cache = PlanCache::new(2, 1);
         let (k1, k2, k3) = (key(128, 8), key(256, 8), key(384, 8));
-        for k in [k1, k2] {
-            cache
-                .get_or_build(k.shape, k.block, k.bytes_per_elem, k.cus)
-                .unwrap();
+        for k in [&k1, &k2] {
+            cache.get_or_build_key(k.clone()).unwrap();
         }
         // touch k1 so k2 becomes LRU
-        cache
-            .get_or_build(k1.shape, k1.block, k1.bytes_per_elem, k1.cus)
-            .unwrap();
-        cache
-            .get_or_build(k3.shape, k3.block, k3.bytes_per_elem, k3.cus)
-            .unwrap();
+        cache.get_or_build_key(k1.clone()).unwrap();
+        cache.get_or_build_key(k3.clone()).unwrap();
         assert_eq!(cache.len(), 2);
         assert!(cache.peek(k2.shape, k2.block, 4, 8).is_none(), "k2 evicted");
         assert!(cache.peek(k1.shape, k1.block, 4, 8).is_some());
         assert!(cache.peek(k3.shape, k3.block, 4, 8).is_some());
-        assert_eq!(cache.stats().evictions, 1);
+        let s = cache.stats();
+        assert_eq!(s.evictions, 1);
+        // hwm reads capacity + 1: the shard's demand exceeded capacity
+        assert_eq!(s.hwm_shard_max, 3, "hwm measures demand, not residency");
+        assert_eq!(s.entries, 2);
+    }
+
+    /// Satellite acceptance: the distinct-key high-water mark tracks
+    /// peak demand per shard and drives the recommended capacity.
+    #[test]
+    fn hwm_tracks_peak_demand_and_sizes_capacity() {
+        let cache = PlanCache::new(64, 2);
+        assert_eq!(cache.stats().hwm_entries, 0);
+        for i in 1..=6 {
+            cache.get_or_build_key(key(i * 128, 8)).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.hwm_entries, 6, "no eviction: hwm == resident peak");
+        assert!(s.hwm_shard_max >= 3, "2 shards over 6 keys: max >= 3");
+        assert_eq!(s.shards, 2);
+        // hits never move the hwm
+        for i in 1..=6 {
+            cache.get_or_build_key(key(i * 128, 8)).unwrap();
+        }
+        assert_eq!(cache.stats().hwm_entries, 6);
+        let rec = s.recommended_capacity();
+        assert_eq!(
+            rec,
+            (s.hwm_shard_max * 2).next_power_of_two() * 2,
+            "2x busiest shard, pow2, times shards"
+        );
+        assert!(rec >= s.hwm_entries, "recommendation covers the demand");
+    }
+
+    /// Satellite acceptance: Block2Time-weighted splits get plan reuse
+    /// through the quantized weight key.
+    #[test]
+    fn weighted_splits_share_plans_across_jittered_estimates() {
+        let cache = PlanCache::new(16, 2);
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let blk = BlockShape::default();
+        let a = cache
+            .get_or_build_weighted(shape, blk, 4, &[0.25, 1.0, 1.0, 1.0])
+            .unwrap();
+        // a fresh speed estimate, jittered below the quantum + scaled
+        let b = cache
+            .get_or_build_weighted(shape, blk, 4, &[0.5001, 2.0, 2.0, 2.0])
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "jittered estimate must hit");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.builds), (1, 1));
+        // the weighted plan and the even plan for the same shape coexist
+        let even = cache.get_or_build(shape, blk, 4, 4).unwrap();
+        assert!(!Arc::ptr_eq(&a, &even));
+        assert_eq!(cache.len(), 2);
+        // and a genuinely different split builds its own plan
+        let c = cache
+            .get_or_build_weighted(shape, blk, 4, &[1.0, 1.0, 1.0, 1.0])
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        // weighted split follows the weights: CU 1 gets ~4x CU 0's work
+        let w0: f64 = a.cu_iters[0];
+        let w1: f64 = a.cu_iters[1];
+        assert!(
+            (w1 / w0 - 4.0).abs() < 0.3,
+            "weighted shares off: {w0} vs {w1}"
+        );
     }
 
     /// Satellite acceptance: one cache shared across threads — every

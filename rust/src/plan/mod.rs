@@ -25,26 +25,52 @@
 //! the key is `(GemmShape, effective BlockShape, bytes/elem, cus)` and
 //! one cached plan legitimately serves every device with that grid
 //! width. That is strictly more sharing than fingerprint-keyed entries
-//! with identical contents.
+//! with identical contents. The exception is a Block2Time-weighted
+//! split, whose work lists *do* depend on per-CU speeds: those keys
+//! carry the weight vector, quantized ([`PlanKey::weighted`]) so that
+//! jittery speed estimates still collapse onto one plan.
 
 pub mod cache;
 
 pub use cache::{global, warm_parallel, PlanCache, PlanCacheStats};
 
 use crate::decomp::streamk::ScheduleError;
-use crate::decomp::{build_schedule, BlockShape, FlatSchedule, GemmShape};
-use crate::gpu_sim::gemm::{item_bytes, item_flops, mxu_fill};
-use crate::gpu_sim::{Device, SimResult};
+use crate::decomp::{
+    build_schedule, build_weighted_schedule, BlockShape, FlatSchedule,
+    GemmShape,
+};
+use crate::gpu_sim::gemm::{
+    item_bytes, item_flops, launch_from_invariants, mxu_fill,
+};
+use crate::gpu_sim::{Device, LaunchStats, SimResult};
+use crate::kernel::ExecDesc;
+use std::sync::Arc;
 
-/// Cache key: exact shape × effective block × element width × CU count.
-/// The block is normalized through [`BlockShape::effective`] so two
-/// requested blocks that shrink to the same kernel share one plan.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Fixed-point denominator for quantized per-CU weights: 1/256 relative
+/// to the fastest CU. Coarse enough that jittery Block2Time speed
+/// estimates collapse onto one key (plan reuse), fine enough that the
+/// quantized split's predicted makespan is within ~0.4% of the exact
+/// one.
+pub const WEIGHT_QUANTUM: u16 = 256;
+
+/// Cache key: exact shape × effective block × element width × CU count,
+/// plus — for Block2Time-balanced splits — the per-CU weight vector,
+/// quantized to [`WEIGHT_QUANTUM`]ths of the fastest CU so that near-
+/// identical speed estimates share one cached plan. The block is
+/// normalized through [`BlockShape::effective`] so two requested blocks
+/// that shrink to the same kernel share one plan.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct PlanKey {
     pub shape: GemmShape,
     pub block: BlockShape,
     pub bytes_per_elem: usize,
     pub cus: usize,
+    /// `None` = even Stream-K split; `Some` = weighted split, one
+    /// quantized weight per CU (scale-invariant: `2×w` and `w` map to
+    /// the same key). A `0` entry marks an invalid — or unrepresentably
+    /// small, see [`quantize_weights`] — input weight and makes
+    /// [`Plan::build`] fail like `build_weighted_schedule` would.
+    pub weights: Option<Arc<[u16]>>,
 }
 
 impl PlanKey {
@@ -54,8 +80,68 @@ impl PlanKey {
         bytes_per_elem: usize,
         cus: usize,
     ) -> Self {
-        Self { shape, block: block.effective(shape), bytes_per_elem, cus }
+        Self {
+            shape,
+            block: block.effective(shape),
+            bytes_per_elem,
+            cus,
+            weights: None,
+        }
     }
+
+    /// Key for a Block2Time-weighted split: CU count is the weight
+    /// count, weights are quantized (and thereby deduplicated).
+    pub fn weighted(
+        shape: GemmShape,
+        block: BlockShape,
+        bytes_per_elem: usize,
+        weights: &[f64],
+    ) -> Self {
+        Self {
+            shape,
+            block: block.effective(shape),
+            bytes_per_elem,
+            cus: weights.len(),
+            weights: Some(quantize_weights(weights)),
+        }
+    }
+
+    /// The dequantized weight factors this key's plan is built with
+    /// (`None` for even-split keys).
+    pub fn weight_factors(&self) -> Option<Vec<f64>> {
+        self.weights.as_ref().map(|q| {
+            q.iter().map(|&v| v as f64 / WEIGHT_QUANTUM as f64).collect()
+        })
+    }
+}
+
+/// Scale-invariant fixed-point quantization: weight / max(weights) in
+/// 1/256 steps. Non-positive / non-finite inputs map to 0, which
+/// [`Plan::build`] rejects exactly like the unquantized builder — and
+/// so does a weight too small to represent (one that rounds to zero,
+/// i.e. below 1/(2·[`WEIGHT_QUANTUM`]) of the fastest CU): silently
+/// flooring it to one quantum would hand an effectively-dead CU up to
+/// [`WEIGHT_QUANTUM`]× its true capacity share and gate the whole
+/// split on it. Callers with such a skewed estimate should exclude
+/// the dead CU (or use the exact, uncached
+/// [`crate::predict::balance`]).
+fn quantize_weights(ws: &[f64]) -> Arc<[u16]> {
+    let maxw = ws
+        .iter()
+        .cloned()
+        .filter(|w| w.is_finite())
+        .fold(0.0f64, f64::max);
+    ws.iter()
+        .map(|&w| {
+            if w > 0.0 && w.is_finite() && maxw > 0.0 {
+                ((w / maxw) * WEIGHT_QUANTUM as f64)
+                    .round()
+                    .clamp(0.0, WEIGHT_QUANTUM as f64) as u16
+            } else {
+                0
+            }
+        })
+        .collect()
 }
 
 /// A fully materialized, device-independent execution plan: the
@@ -64,6 +150,10 @@ impl PlanKey {
 pub struct Plan {
     pub key: PlanKey,
     pub flat: FlatSchedule,
+    /// Precomputed per-work-item tile descriptors for the blocked
+    /// microkernel executor ([`crate::kernel`]) — the interpreter
+    /// runtime replays these with zero descriptor work per request.
+    pub exec: ExecDesc,
     /// MXU systolic-array fill of the (effective) block — constant per
     /// launch, precomputed once.
     pub mxu_fill: f64,
@@ -86,11 +176,20 @@ impl Plan {
     /// [`crate::decomp::StreamKSchedule`]; everything downstream reuses
     /// the result through the cache.
     pub fn build(key: PlanKey) -> Result<Self, ScheduleError> {
-        let sched = build_schedule(key.shape, key.block, key.cus)?;
+        let sched = match key.weight_factors() {
+            None => build_schedule(key.shape, key.block, key.cus)?,
+            // Build with the *quantized* weights, so the key fully
+            // determines the plan and every estimate that rounds to the
+            // same split shares one cached schedule.
+            Some(factors) => {
+                build_weighted_schedule(key.shape, key.block, &factors)?
+            }
+        };
         // build_schedule re-applies `effective`; keep the plan's block
         // identical to the schedule it describes.
         let block = sched.block;
         let flat = FlatSchedule::from_schedule(&sched);
+        let exec = ExecDesc::new(key.shape, block, &flat);
         let bpe = key.bytes_per_elem;
 
         let mut cu_flops = Vec::with_capacity(key.cus);
@@ -119,6 +218,7 @@ impl Plan {
         Ok(Self {
             key: PlanKey { block, ..key },
             flat,
+            exec,
             mxu_fill: mxu_fill(block, bpe),
             cu_flops,
             cu_iters,
@@ -134,6 +234,22 @@ impl Plan {
     /// themselves are exact — integer-valued flop/iteration counts).
     pub fn time_on(&self, dev: &Device) -> f64 {
         assert_eq!(dev.num_cus, self.key.cus, "plan built for other grid");
+        self.time_on_prefix(dev)
+    }
+
+    /// Like [`Self::time_on`], for a plan whose grid uses only the
+    /// first `key.cus` CUs of `dev` (the tuner's sub-grid candidates:
+    /// the report's "Compute Units" parameter). Numerically identical
+    /// to `time_on(&dev.clone().with_cus(key.cus))` without cloning the
+    /// device — [`crate::tuner::measure`] prices every candidate
+    /// through this, allocation-free.
+    pub fn time_on_prefix(&self, dev: &Device) -> f64 {
+        assert!(
+            self.key.cus <= dev.num_cus,
+            "plan needs {} CUs, device has {}",
+            self.key.cus,
+            dev.num_cus
+        );
         let mut compute_span = 0.0f64;
         for cu in 0..self.key.cus {
             let speed = dev.flops_per_cu * dev.cu_speed[cu] * self.mxu_fill;
@@ -152,15 +268,32 @@ impl Plan {
     }
 
     /// Full per-launch simulation of this plan on `dev` (utilization,
-    /// per-CU busy bars) — the reporting path; allocates.
+    /// per-CU busy bars) — the reporting path. Runs straight off the
+    /// precomputed launch invariants: no walk over work items, no
+    /// schedule replay (agrees with the item-walking simulator to f64
+    /// summation order).
     pub fn simulate(&self, dev: &Device) -> SimResult {
-        crate::gpu_sim::simulate_flat(
+        assert_eq!(dev.num_cus, self.key.cus, "plan built for other grid");
+        let mut launches = vec![launch_from_invariants(
             dev,
-            self.key.shape,
-            &self.flat,
-            self.key.block,
-            self.key.bytes_per_elem,
-        )
+            &self.cu_flops,
+            &self.cu_iters,
+            self.bytes,
+            self.mxu_fill,
+        )];
+        if self.flat.has_fixup() {
+            // Fixup items carry no MAC work: zero compute, paced by
+            // traffic alone — exactly what replaying the fixup items
+            // produces.
+            let mem_span = self.fixup_bytes / dev.hbm_bw;
+            launches.push(LaunchStats {
+                time_s: mem_span + dev.launch_overhead,
+                cu_busy: vec![0.0; dev.num_cus],
+                bytes: self.fixup_bytes,
+                memory_bound: mem_span > 0.0,
+            });
+        }
+        crate::gpu_sim::gemm::finish_launches(dev, self.key.shape, launches)
     }
 
     /// Workspace bytes for the two-slot partials buffer.
@@ -205,10 +338,139 @@ mod tests {
                 "{m}x{n}x{k}: plan {fast} vs sim {}",
                 full.total_s
             );
+            // The invariants-based simulation pre-sums per-CU flops, so
+            // it agrees with the item-walking replay up to f64
+            // summation order.
             let sim = plan.simulate(&dev);
             assert_eq!(sim.launches.len(), full.launches.len());
-            assert_eq!(sim.total_s, full.total_s);
+            assert!(
+                (sim.total_s - full.total_s).abs() <= full.total_s * 1e-9,
+                "{m}x{n}x{k}: invariant sim {} vs replay {}",
+                sim.total_s,
+                full.total_s
+            );
+            assert!(
+                (sim.utilization - full.utilization).abs() <= 1e-9,
+                "{m}x{n}x{k}: utilization {} vs {}",
+                sim.utilization,
+                full.utilization
+            );
         }
+    }
+
+    #[test]
+    fn prefix_pricing_matches_truncated_device() {
+        let dev = mi200();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        for cus in [1usize, 30, 120] {
+            let plan = Plan::build(PlanKey::new(
+                shape,
+                BlockShape::default(),
+                4,
+                cus,
+            ))
+            .unwrap();
+            let via_clone = plan.time_on(&dev.clone().with_cus(cus));
+            let via_prefix = plan.time_on_prefix(&dev);
+            assert_eq!(
+                via_prefix, via_clone,
+                "cus={cus}: prefix pricing must match the truncated device"
+            );
+        }
+    }
+
+    #[test]
+    fn plans_carry_executable_descriptors() {
+        let plan = Plan::build(PlanKey::new(
+            GemmShape::new(96, 102, 100),
+            BlockShape::new(16, 16, 8),
+            4,
+            12,
+        ))
+        .unwrap();
+        assert_eq!(plan.exec.jobs.len(), plan.flat.num_items());
+        assert_eq!(plan.exec.fixup.len(), plan.flat.split_tiles.len());
+        assert_eq!(plan.exec.block, plan.key.block);
+        // and they actually execute: quick numeric spot check
+        let mut rng = crate::prop::Rng::new(9);
+        let a = rng.normal_f32_vec(96 * 100);
+        let b = rng.normal_f32_vec(100 * 102);
+        let got = crate::kernel::execute(
+            &a,
+            &b,
+            &plan.exec,
+            crate::kernel::Epilogue::None,
+        );
+        let want = crate::faults::execute_flat_ref(
+            &a,
+            &b,
+            plan.key.shape,
+            &plan.flat,
+            plan.key.block,
+        );
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn weighted_keys_quantize_scale_invariantly() {
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let blk = BlockShape::default();
+        let a = PlanKey::weighted(shape, blk, 4, &[1.0, 1.0, 2.0, 4.0]);
+        let b = PlanKey::weighted(shape, blk, 4, &[0.5, 0.5, 1.0, 2.0]);
+        assert_eq!(a, b, "scaled weights share one key");
+        let c = PlanKey::weighted(shape, blk, 4, &[1.0, 1.0, 1.0, 1.0]);
+        assert_ne!(a, c, "different splits stay distinct");
+        // jitter below the quantum collapses onto the same key
+        let d = PlanKey::weighted(shape, blk, 4, &[1.0005, 1.0, 2.0, 4.0]);
+        assert_eq!(a, d, "sub-quantum jitter must reuse the plan");
+        assert_eq!(a.cus, 4);
+        assert_eq!(
+            a.weight_factors().unwrap(),
+            vec![0.25, 0.25, 0.5, 1.0]
+        );
+    }
+
+    #[test]
+    fn weighted_plan_builds_the_quantized_split() {
+        let shape = GemmShape::new(2048, 2048, 2048);
+        let blk = BlockShape::default();
+        let key = PlanKey::weighted(shape, blk, 4, &[1.0, 1.0, 2.0, 4.0]);
+        let factors = key.weight_factors().unwrap();
+        let plan = Plan::build(key).unwrap();
+        let sched =
+            crate::decomp::build_weighted_schedule(shape, blk, &factors)
+                .unwrap();
+        assert_eq!(plan.flat, FlatSchedule::from_schedule(&sched));
+        // weighted plans have no DP region: every tile is stream-k
+        assert_eq!(plan.flat.dp_tiles_per_cu, 0);
+    }
+
+    #[test]
+    fn weighted_plan_rejects_bad_weights() {
+        let shape = GemmShape::new(128, 128, 128);
+        for bad in [
+            vec![],
+            vec![1.0, 0.0],
+            vec![1.0, f64::NAN],
+            vec![1.0, f64::INFINITY],
+            vec![-1.0, 1.0],
+            // unrepresentably skewed: quantizing the 1e-6 CU to one
+            // quantum would hand it ~2000x its true share, so the key
+            // rejects instead of silently distorting the split
+            vec![1.0, 1e-6],
+        ] {
+            let key =
+                PlanKey::weighted(shape, BlockShape::default(), 4, &bad);
+            assert!(Plan::build(key).is_err(), "weights {bad:?}");
+        }
+        // the representable extreme still builds: exactly one quantum
+        let key = PlanKey::weighted(
+            shape,
+            BlockShape::default(),
+            4,
+            &[1.0, 1.0 / WEIGHT_QUANTUM as f64],
+        );
+        assert!(Plan::build(key).is_ok());
     }
 
     #[test]

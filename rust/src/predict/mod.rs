@@ -140,6 +140,33 @@ pub fn balance(
     build_weighted_schedule(shape, block, speeds)
 }
 
+/// The cached counterpart of [`balance`]: fetch (or build, once per
+/// quantized split) the weighted plan from the process-wide plan cache.
+/// Speed vectors are quantized to 1/256 of the fastest CU inside the
+/// key ([`crate::plan::PlanKey::weighted`]), so the jittery estimates a
+/// [`SpeedEstimator`] refines over time collapse onto one reusable
+/// plan instead of re-running the weighted decomposition per dispatch.
+/// A speed below 1/512 of the fastest CU is unrepresentable in the
+/// quantized key and comes back as an error (flooring it would hand a
+/// near-dead CU up to 256× its true share): exclude such a CU, or use
+/// the exact, uncached [`balance`].
+pub fn balance_plan(
+    shape: GemmShape,
+    block: BlockShape,
+    speeds: &[f64],
+    bytes_per_elem: usize,
+) -> Result<
+    std::sync::Arc<crate::plan::Plan>,
+    crate::decomp::streamk::ScheduleError,
+> {
+    crate::plan::global().get_or_build_weighted(
+        shape,
+        block,
+        bytes_per_elem,
+        speeds,
+    )
+}
+
 /// Predicted makespan of a schedule on CUs with the given per-iteration
 /// cost and speeds — used to pick even vs balanced at dispatch time.
 pub fn predicted_makespan(
@@ -149,6 +176,20 @@ pub fn predicted_makespan(
 ) -> f64 {
     (0..sched.p)
         .map(|cu| model.predict(sched.cu_iters(cu)) / speeds[cu])
+        .fold(0.0, f64::max)
+}
+
+/// [`predicted_makespan`] over a cached plan's precomputed per-CU
+/// iteration counts (the counts are exact integers stored in f64) —
+/// the [`balance_plan`] counterpart, so dispatch never needs the
+/// nested schedule just to price it.
+pub fn predicted_makespan_plan(
+    plan: &crate::plan::Plan,
+    model: CostModel,
+    speeds: &[f64],
+) -> f64 {
+    (0..plan.key.cus)
+        .map(|cu| model.predict(plan.cu_iters[cu] as usize) / speeds[cu])
         .fold(0.0, f64::max)
 }
 
@@ -259,6 +300,50 @@ mod tests {
             t_bal < t_even * 0.45,
             "balanced {t_bal} vs even {t_even}"
         );
+    }
+
+    #[test]
+    fn plan_makespan_agrees_with_schedule_makespan() {
+        let shape = GemmShape::new(1024, 1024, 1024);
+        let block = BlockShape::default();
+        let speeds = vec![0.5, 1.0, 1.0, 1.0];
+        let model = CostModel { a: 1e-6, b: 0.0 };
+        let plan = balance_plan(shape, block, &speeds, 4).unwrap();
+        // the same quantized split, priced through the nested schedule
+        let factors = plan.key.weight_factors().unwrap();
+        let sched = balance(shape, block, &factors).unwrap();
+        assert_eq!(
+            predicted_makespan_plan(&plan, model, &speeds),
+            predicted_makespan(&sched, model, &speeds),
+            "plan- and schedule-based makespans must agree exactly"
+        );
+    }
+
+    #[test]
+    fn balance_plan_reuses_quantized_splits() {
+        // Two dispatches with estimates that differ below the quantum
+        // must share one cached plan (global cache: assert per-key and
+        // Arc identity only — other tests touch other keys).
+        let shape = GemmShape::new(1536, 1536, 1536);
+        let block = BlockShape::default();
+        let a =
+            balance_plan(shape, block, &[0.25, 1.0, 1.0, 1.0], 4).unwrap();
+        let b = balance_plan(shape, block, &[0.2501, 1.0003, 1.0, 1.0], 4)
+            .unwrap();
+        assert!(
+            std::sync::Arc::ptr_eq(&a, &b),
+            "jittered estimate must reuse the cached plan"
+        );
+        // the plan is the quantized weighted schedule
+        let factors = a.key.weight_factors().expect("weighted key");
+        let sched = balance(shape, block, &factors).unwrap();
+        assert_eq!(
+            a.flat,
+            crate::decomp::FlatSchedule::from_schedule(&sched)
+        );
+        // bad speeds still fail like the uncached builder
+        assert!(balance_plan(shape, block, &[1.0, f64::NAN], 4).is_err());
+        assert!(balance_plan(shape, block, &[], 4).is_err());
     }
 
     #[test]

@@ -5,10 +5,11 @@
 //! - **PJRT** (`--features pjrt`): compiles the AOT HLO text on the XLA
 //!   CPU client — what production serves.
 //! - **Interpreter** (default): executes artifacts directly from their
-//!   manifest metadata (gemm → naive triple-loop + epilogue, mlp →
-//!   gelu two-layer) with identical numerics. Keeps the whole serving
-//!   stack — router, batcher, tuner, benches — runnable on a machine
-//!   without the xla_extension toolchain.
+//!   manifest metadata (gemm → the blocked packed-tile kernel layer
+//!   walking the cached Stream-K plan, mlp → blocked matmuls + gelu)
+//!   with numerics identical to the historical per-element loops. Keeps
+//!   the whole serving stack — router, batcher, tuner, benches —
+//!   runnable on a machine without the xla_extension toolchain.
 
 use super::{ArtifactMeta, Manifest, RuntimeError};
 use crate::exec::Stopwatch;
@@ -268,33 +269,26 @@ fn unpack_outputs(
 // Interpreter backend
 // ---------------------------------------------------------------------
 
-/// Row-major `C[m,n] += A[m,k] @ B[k,n]` with f32 accumulation — the
-/// same accumulation order/width as the naive ground-truth executor.
-/// No zero-skip shortcut: `0.0 * Inf` must stay NaN so non-finite
-/// inputs propagate exactly as the PJRT backend would.
+/// Row-major `C[m,n] = A[m,k] @ B[k,n]` with f32 accumulation — the
+/// blocked packed-tile matmul ([`crate::kernel::matmul`]): bit-identical
+/// to the historical naive triple loop (K ascends per element, no
+/// zero-skip shortcut, so `0.0 * Inf` stays NaN exactly as the PJRT
+/// backend would), parallel over row panels when the problem is big
+/// enough. This is the MLP serving path's hot loop.
 #[cfg(not(feature = "pjrt"))]
 fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        for l in 0..k {
-            let av = a[i * k + l];
-            let brow = &b[l * n..(l + 1) * n];
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cv, bv) in crow.iter_mut().zip(brow) {
-                *cv += av * bv;
-            }
-        }
-    }
-    c
+    crate::kernel::matmul(a, b, m, k, n)
 }
 
 /// Stream-K gemm execution through the plan cache: fetch (or build,
-/// once per shape×grid) the flattened schedule and walk it with the
-/// flat executor — per-CU phase-1 segments, two partial slots, fixup
-/// pass. This is the interpreter's analogue of launching the Pallas
-/// Stream-K kernel, and it makes the runtime a *consumer* of the same
-/// cached `FlatSchedule` the simulator and tuner replay: on a repeated
-/// shape the serving hot path never reconstructs a schedule.
+/// once per shape×grid) the plan and run its precomputed per-work-item
+/// tile descriptors through the blocked microkernel executor — per-CU
+/// phase-1 segments, two partial slots, fixup pass, with the artifact
+/// epilogue fused into the accumulate-into-C store. This is the
+/// interpreter's analogue of launching the Pallas Stream-K kernel, and
+/// it makes the runtime a *consumer* of the same cached plan the
+/// simulator and tuner replay: on a repeated shape the serving hot path
+/// neither reconstructs a schedule nor recomputes a descriptor.
 ///
 /// `None` when no plan can be built (degenerate shape) — the caller
 /// falls back to the plain matmul.
@@ -306,44 +300,31 @@ fn streamk_matmul(
     k: usize,
     n: usize,
     cus: usize,
+    epilogue: crate::kernel::Epilogue,
 ) -> Option<Vec<f32>> {
     use crate::decomp::{BlockShape, GemmShape};
     let shape = GemmShape::new(m, n, k);
     let plan = crate::plan::global()
         .get_or_build(shape, BlockShape::default(), 4, cus)
         .ok()?;
-    Some(crate::faults::execute_flat(
-        a,
-        b,
-        shape,
-        &plan.flat,
-        plan.key.block,
-    ))
+    Some(crate::kernel::execute(a, b, &plan.exec, epilogue))
 }
 
 /// jax.nn.gelu(approximate=True): the tanh approximation the MLP graph
-/// lowers (`model.py`).
+/// lowers (`model.py`). Lives in the kernel layer now (the epilogue
+/// hook); this alias keeps the interpreter code readable.
 #[cfg(not(feature = "pjrt"))]
 fn gelu(x: f32) -> f32 {
-    let x = x as f64;
-    let inner = (2.0 / std::f64::consts::PI).sqrt()
-        * (x + 0.044715 * x * x * x);
-    (0.5 * x * (1.0 + inner.tanh())) as f32
+    crate::kernel::gelu(x)
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn apply_epilogue(c: &mut [f32], epilogue: &str) -> Result<(), RuntimeError> {
-    match epilogue {
-        "" | "none" => {}
-        "relu" => c.iter_mut().for_each(|v| *v = v.max(0.0)),
-        "gelu" => c.iter_mut().for_each(|v| *v = gelu(*v)),
-        other => {
-            return Err(RuntimeError::Backend(format!(
-                "interp: unsupported epilogue {other:?}"
-            )))
-        }
-    }
-    Ok(())
+fn parse_epilogue(
+    name: &str,
+) -> Result<crate::kernel::Epilogue, RuntimeError> {
+    crate::kernel::Epilogue::parse(name).ok_or_else(|| {
+        RuntimeError::Backend(format!("interp: unsupported epilogue {name:?}"))
+    })
 }
 
 /// Execute one artifact from its metadata. Semantics mirror
@@ -398,16 +379,21 @@ fn interpret(
             let (m, k) = dims2(0)?;
             let (k2, n) = dims2(1)?;
             agree("A cols / B rows", k, k2)?;
-            // Stream-K artifacts execute by walking the cached flat
-            // schedule (same decomposition the kernel launches); the
-            // reference/tile/splitk artifacts keep the serial oracle.
-            let mut c = if meta.algo == "streamk" && meta.cus >= 1 {
-                streamk_matmul(inputs[0], inputs[1], m, k, n, meta.cus)
-                    .unwrap_or_else(|| matmul(inputs[0], inputs[1], m, k, n))
+            let ep = parse_epilogue(&meta.epilogue)?;
+            // Stream-K artifacts execute the cached plan's blocked tile
+            // descriptors with the epilogue fused into the store; the
+            // reference/tile/splitk artifacts run the blocked dense
+            // matmul with the epilogue applied after.
+            let c = if meta.algo == "streamk" && meta.cus >= 1 {
+                streamk_matmul(inputs[0], inputs[1], m, k, n, meta.cus, ep)
             } else {
-                matmul(inputs[0], inputs[1], m, k, n)
-            };
-            apply_epilogue(&mut c, &meta.epilogue)?;
+                None
+            }
+            .unwrap_or_else(|| {
+                let mut c = matmul(inputs[0], inputs[1], m, k, n);
+                ep.apply_slice(&mut c);
+                c
+            });
             Ok(vec![c])
         }
         "mlp" => {

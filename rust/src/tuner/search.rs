@@ -175,6 +175,8 @@ fn equiv_units(c: &Candidate, shape: GemmShape, max_iters: usize) -> usize {
 /// grid) key and every later measurement — the tuner's top-K loop, a
 /// re-validation probe, every fleet-sim request in that bucket — is an
 /// allocation-free replay of the cached [`crate::plan::Plan`].
+/// Sub-maximal-grid candidates price through
+/// [`crate::plan::Plan::time_on_prefix`], so even they clone nothing.
 pub fn measure(
     dev: &Device,
     shape: GemmShape,
@@ -184,12 +186,7 @@ pub fn measure(
         .get_or_build(shape, c.params.block, c.params.bytes_per_elem, c.cus)
         .ok()?;
     let pad_s = pad_penalty_bytes(shape, c) / dev.hbm_bw;
-    if c.cus == dev.num_cus {
-        Some(plan.time_on(dev) + pad_s)
-    } else {
-        let sub = dev.clone().with_cus(c.cus);
-        Some(plan.time_on(&sub) + pad_s)
-    }
+    Some(plan.time_on_prefix(dev) + pad_s)
 }
 
 /// Fit the Block2Time cost model from probe launches of the default
