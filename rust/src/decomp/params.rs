@@ -11,6 +11,17 @@
 
 use super::BlockShape;
 
+/// Default K-chunk length: how deep a K slice the executor packs and
+/// streams per panel pair ([`crate::kernel`] re-exports this as
+/// `micro::KC`). Chunking never changes numerics — K still ascends per
+/// element — so the axis is purely a locality knob.
+pub const KC_DEFAULT: usize = 128;
+
+/// Packed-panel budget for one K chunk: the `BM × KC` A panel plus the
+/// `KC × BN` B panel must stay cache-resident while the microkernel
+/// streams them (the CPU analogue of the VMEM streaming budget).
+pub const PACK_BUDGET_BYTES: usize = 512 * 1024;
+
 /// Full kernel parameter point (TPU adaptation of CK's template params —
 /// DESIGN.md §3 maps threadblock/XDL/LDS onto grid/MXU/VMEM).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -25,6 +36,9 @@ pub struct KernelParams {
     pub bytes_per_elem: usize,
     /// Double-buffer the HBM→VMEM stream (doubles VMEM footprint).
     pub double_buffer: bool,
+    /// K-chunk length the executor packs panels at (CK's K staging
+    /// depth; [`KC_DEFAULT`] unless tuned).
+    pub kc: usize,
 }
 
 impl KernelParams {
@@ -36,6 +50,7 @@ impl KernelParams {
             mxu_n: 128,
             bytes_per_elem,
             double_buffer: true,
+            kc: KC_DEFAULT,
         }
     }
 
@@ -77,6 +92,11 @@ pub enum Illegal {
     LaneMisaligned { dim: &'static str, value: usize },
     SublaneMisaligned { dim: &'static str, value: usize },
     KpackMisaligned { bk: usize, kpack: usize },
+    /// The K-chunk axis must respect the vector pack width.
+    KcMisaligned { kc: usize, kpack: usize },
+    /// One K chunk's packed A+B panels exceed the cache-residency
+    /// budget — the chunk would thrash instead of stream.
+    PackOverflow { need: usize, budget: usize },
     MxuUnderfilled { util_pct: usize },
     /// CK's 1024-thread/16×16-XDL failure mode: accumulator rows per MXU
     /// pass exceed what the tile provides, producing the FP errors the
@@ -98,6 +118,10 @@ impl Illegal {
                 "second-minor dim not sublane-aligned (8)"
             }
             Illegal::KpackMisaligned { .. } => "kpack misaligned",
+            Illegal::KcMisaligned { .. } => "KC not kpack-aligned",
+            Illegal::PackOverflow { .. } => {
+                "packed K-chunk panels overflow the cache budget"
+            }
             Illegal::MxuUnderfilled { .. } => {
                 "MXU utilization below 25% floor"
             }
@@ -124,6 +148,13 @@ impl std::fmt::Display for Illegal {
             Illegal::KpackMisaligned { bk, kpack } => {
                 write!(f, "bk={bk} not divisible by kpack={kpack}")
             }
+            Illegal::KcMisaligned { kc, kpack } => {
+                write!(f, "kc={kc} not divisible by kpack={kpack}")
+            }
+            Illegal::PackOverflow { need, budget } => write!(
+                f,
+                "packed K-chunk panels need {need} B > budget {budget} B"
+            ),
             Illegal::MxuUnderfilled { util_pct } => {
                 write!(f, "MXU utilization {util_pct}% below 25% floor")
             }
@@ -142,7 +173,7 @@ impl std::fmt::Display for Illegal {
 pub fn check(p: &KernelParams) -> Result<(), Vec<Illegal>> {
     let mut errs = Vec::new();
     let BlockShape { bm, bn, bk } = p.block;
-    if bm == 0 || bn == 0 || bk == 0 {
+    if bm == 0 || bn == 0 || bk == 0 || p.kc == 0 {
         errs.push(Illegal::ZeroDim);
         return Err(errs);
     }
@@ -154,6 +185,16 @@ pub fn check(p: &KernelParams) -> Result<(), Vec<Illegal>> {
     }
     if bm % SUBLANE != 0 {
         errs.push(Illegal::SublaneMisaligned { dim: "bm", value: bm });
+    }
+    if p.kc % p.kpack != 0 {
+        errs.push(Illegal::KcMisaligned { kc: p.kc, kpack: p.kpack });
+    }
+    let pack_need = (bm * p.kc + p.kc * bn) * p.bytes_per_elem;
+    if pack_need > PACK_BUDGET_BYTES {
+        errs.push(Illegal::PackOverflow {
+            need: pack_need,
+            budget: PACK_BUDGET_BYTES,
+        });
     }
     let need = p.vmem_bytes();
     if need > VMEM_BUDGET_BYTES {
@@ -193,12 +234,17 @@ pub fn exploration_grid_bpe(bytes_per_elem: usize) -> Vec<KernelParams> {
         for &bn in &[16usize, 32, 64, 128, 256, 512] {
             for &bk in &[8usize, 16, 32, 64, 128] {
                 for &db in &[false, true] {
-                    let mut p = KernelParams::new(
-                        BlockShape::new(bm, bn, bk),
-                        bytes_per_elem,
-                    );
-                    p.double_buffer = db;
-                    out.push(p);
+                    // KC_DEFAULT first: predicted ranking is stable, so
+                    // the default chunk wins cost-model ties.
+                    for &kc in &[KC_DEFAULT, 64, 256] {
+                        let mut p = KernelParams::new(
+                            BlockShape::new(bm, bn, bk),
+                            bytes_per_elem,
+                        );
+                        p.double_buffer = db;
+                        p.kc = kc;
+                        out.push(p);
+                    }
                 }
             }
         }
@@ -257,6 +303,38 @@ mod tests {
         let legal = grid.iter().filter(|p| check(p).is_ok()).count();
         assert!(legal * 2 < grid.len(), "{legal}/{} legal", grid.len());
         assert!(legal > 0);
+    }
+
+    #[test]
+    fn kc_axis_is_legality_pruned() {
+        // kpack misalignment is a named reason, not a silent skip
+        let mut p = KernelParams::new(BlockShape::default(), 4);
+        p.kc = 100;
+        let errs = check(&p).unwrap_err();
+        assert!(
+            errs.iter().any(|e| matches!(e, Illegal::KcMisaligned { .. })),
+            "{errs:?}"
+        );
+        // deep chunks on wide blocks blow the pack budget: 2·512·256·4 B
+        let mut p = KernelParams::new(BlockShape::new(512, 512, 64), 4);
+        p.kc = 256;
+        let errs = check(&p).unwrap_err();
+        assert!(
+            errs.iter().any(|e| matches!(e, Illegal::PackOverflow { .. })),
+            "{errs:?}"
+        );
+        // the same chunk on default blocks is comfortably legal
+        let mut p = KernelParams::new(BlockShape::default(), 4);
+        p.kc = 256;
+        assert_eq!(check(&p), Ok(()));
+        // kc == 0 is a zero dimension
+        p.kc = 0;
+        assert_eq!(check(&p), Err(vec![Illegal::ZeroDim]));
+        // the exploration grid enumerates the axis, default first
+        let grid = exploration_grid();
+        assert_eq!(grid[0].kc, KC_DEFAULT);
+        assert!(grid.iter().any(|p| p.kc == 64));
+        assert!(grid.iter().any(|p| p.kc == 256));
     }
 
     #[test]

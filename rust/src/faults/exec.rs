@@ -10,15 +10,21 @@
 //!   `benches/kernel_exec.rs` measures the blocked path's speedup over.
 //! - [`execute_flat`] / [`execute_schedule`] — the production entries,
 //!   now executed through the blocked packed-tile layer
-//!   ([`crate::kernel`]): panel packing, register-blocked microkernel,
-//!   work items parallelized with deterministic fixup-ordered
-//!   reduction. Numerics are bit-identical to the reference by
+//!   ([`crate::kernel`]): panel packing, SIMD-laned register-blocked
+//!   microkernel, work items parallelized with deterministic
+//!   fixup-ordered reduction, and tile-ownership direct-store
+//!   streaming (owned tiles write C in place from the workers; only
+//!   clamped-edge / multi-writer tiles keep the ordered windowed
+//!   path). Numerics are bit-identical to the reference by
 //!   construction (and by `kernel::exec`'s property tests).
 //!
 //! The fault-injection benches drive [`execute_schedule`] with
 //! deliberately broken schedules to produce *numeric* corruption; the
 //! blocked executor reproduces a broken schedule's corruption exactly,
-//! because it executes whatever work items the schedule describes.
+//! because it executes whatever work items the schedule describes —
+//! the ownership analysis counts duplicate writes per tile, so even a
+//! corrupted schedule's colliding stores stay in the reference's
+//! serial order.
 
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape, StreamKSchedule};
 use crate::kernel;
@@ -225,9 +231,10 @@ pub fn execute_flat_ref(
 /// the executor the interpreter runtime drives from the plan cache.
 /// Runs on the blocked packed-tile kernel layer ([`crate::kernel`]):
 /// bit-identical to [`execute_flat_ref`] (property-tested there),
-/// several-fold faster, parallel over independent work items. Zero
-/// operands are never skipped, so NaN/∞ inputs propagate exactly as
-/// the PJRT backend would.
+/// several-fold faster — explicit SIMD lanes, parallel work items,
+/// owned tiles streamed into C in place. Zero operands are never
+/// skipped, so NaN/∞ inputs propagate exactly as the PJRT backend
+/// would.
 pub fn execute_flat(
     a: &[f32],
     b: &[f32],

@@ -6,29 +6,51 @@
 //! [`FlatSchedule`] work item touch": clamped tile origins, the
 //! contiguous valid-K column range (the per-element executor's
 //! `>=`-mask plus edge clamp collapse to one `[kc0, kc1)` interval per
-//! segment), partial-slot routing, and the fixup contributor → work-item
-//! index arena. Plans cache it ([`crate::plan::Plan::exec`]) so the
-//! serving hot path never recomputes a descriptor.
+//! segment), partial-slot routing, the fixup contributor → work-item
+//! index arena — and the **tile-ownership class** of every store. Plans
+//! cache it lazily ([`crate::plan::Plan::exec`]) so the serving hot
+//! path never recomputes a descriptor.
 //!
-//! Execution is three deterministic passes:
+//! ## Ownership: who may stream and who must stay ordered
 //!
-//! 1. **compute** — every work item accumulates its tile slice into a
-//!    private accumulator via pack + microkernel; items are independent,
-//!    so they fan out over [`crate::exec::scope_map_with`] (each
-//!    worker reuses one [`PackBuf`]). Results are identical for every
-//!    thread count because nothing is shared.
-//! 2. **store** — direct stores are applied *in the reference's serial
+//! A store job *owns* its output tile when no other store in the whole
+//! run touches any element of its `BM × BN` region: the tile is written
+//! exactly once (one direct store, no fixup on the same tile id — also
+//! true under fault-injected duplicate writes, which are counted), and
+//! it is not involved in clamped-edge overlap (when a dimension is
+//! ragged, the *last* tile row/column is clamped back onto the
+//! *second-to-last* one, so both stay out of the owned class). Owned
+//! tiles are the common aligned case — on grid-aligned Table-1 shapes
+//! that is every direct store.
+//!
+//! Execution is then:
+//!
+//! 0. **direct-store streaming** — owned work items compute *and store*
+//!    in the worker threads: each worker reuses one accumulator + one
+//!    [`PackBuf`] and writes its finished tile straight into C (the
+//!    region is exclusively its own, so no ordering and no staging
+//!    arena exist for these items). Because each owned element is
+//!    written exactly once in the whole run, when it is written cannot
+//!    change the final bits.
+//! 1. **compute** — the remaining work items accumulate into private
+//!    accumulators via pack + microkernel, windowed so at most
+//!    `WINDOW × BM × BN` transient floats are in flight.
+//! 2. **store** — their direct stores apply *in the reference's serial
 //!    order* (CU-major: DP quota, then segments). Clamped edge tiles
 //!    overlap their neighbours, so store order is part of the
-//!    bit-identical contract and is never raced.
+//!    bit-identical contract here and is never raced.
 //! 3. **fixup** — split tiles sum their contributors in k-ascending
 //!    contributor order (the deterministic fixup-ordered reduction),
 //!    then store.
 //!
-//! The [`Epilogue`] hook runs inside the stores of passes 2–3, exactly
-//! once per output element.
+//! The [`Epilogue`] hook runs inside the stores of passes 0 and 2–3,
+//! exactly once per output element. The microkernel lanes
+//! ([`super::lane`]) and the dispatcher mode are selectable through
+//! [`ExecOpts`]; the bench pins the PR-4 configuration (scalar lanes,
+//! everything windowed) as its baseline.
 
-use super::micro::{block_update, KC};
+use super::lane::{self, LaneBackend};
+use super::micro::{block_update_with, KC};
 use super::pack::{pack_a, pack_b, PackBuf};
 use super::{default_threads, Epilogue};
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape};
@@ -57,6 +79,11 @@ pub struct TileJob {
     pub kc0: usize,
     pub kc1: usize,
     pub dest: Dest,
+    /// Tile-ownership class: `true` when this store is the *only* write
+    /// into its C region for the whole run (unclamped, overlap-free,
+    /// single-writer), so the dispatcher may stream it in place from
+    /// the worker thread. Always `false` for [`Dest::Partial`].
+    pub owned: bool,
 }
 
 /// One fixup tile: origin plus its contributor range in
@@ -77,6 +104,10 @@ pub struct FixupTile {
 pub struct ExecDesc {
     pub shape: GemmShape,
     pub block: BlockShape,
+    /// K-chunk length the dispatcher packs panels at
+    /// ([`crate::decomp::params::KC_DEFAULT`] unless overridden via
+    /// [`Self::with_kc`]). Chunk boundaries never change numerics.
+    pub kc: usize,
     /// Phase-1 work items in the reference's serial store order
     /// (CU-major; per CU: DP quota then SK segments).
     pub jobs: Vec<TileJob>,
@@ -114,7 +145,15 @@ impl ExecDesc {
                 let (r0, c0) = origin(tile);
                 let kc1 = k.min(ipt * bk);
                 macs += 2 * (bm * bn * kc1) as u64;
-                jobs.push(TileJob { tile, r0, c0, kc0: 0, kc1, dest: Dest::Store });
+                jobs.push(TileJob {
+                    tile,
+                    r0,
+                    c0,
+                    kc0: 0,
+                    kc1,
+                    dest: Dest::Store,
+                    owned: false,
+                });
             }
             for seg in flat.cu_segments(cu) {
                 let (r0, c0) = origin(seg.tile);
@@ -130,7 +169,15 @@ impl ExecDesc {
                     Dest::Partial { cu, slot: seg.slot }
                 };
                 macs += 2 * (bm * bn * (kc1 - kc0)) as u64;
-                jobs.push(TileJob { tile: seg.tile, r0, c0, kc0, kc1, dest });
+                jobs.push(TileJob {
+                    tile: seg.tile,
+                    r0,
+                    c0,
+                    kc0,
+                    kc1,
+                    dest,
+                    owned: false,
+                });
             }
         }
 
@@ -156,25 +203,120 @@ impl ExecDesc {
             });
         }
 
-        Self { shape, block, jobs, fixup, sources, macs }
+        // Tile-ownership analysis. A store may stream in place iff its
+        // region is written exactly once in the whole run:
+        // - single-writer by tile id (duplicate direct stores or a
+        //   fixup on the same tile — both possible in fault-injected
+        //   schedules — keep the ordered path);
+        // - no clamped-edge overlap: when a dimension is ragged the
+        //   last tile row/col is clamped back over the second-to-last,
+        //   so both stay ordered. Tiles outside the grid (broken
+        //   schedules) are never owned.
+        let grid = flat.grid;
+        let mut store_writes = vec![0u8; grid.num_tiles()];
+        // An out-of-grid tile id (broken schedules) clamps onto the
+        // last in-grid row's region via `origin`, so its write is
+        // booked against that aliased tile — otherwise the aliased
+        // tile could stream while the corrupt store races it.
+        let count_tile = |tile: usize| -> Option<usize> {
+            if grid.num_tiles() == 0 {
+                return None;
+            }
+            if tile < grid.num_tiles() {
+                return Some(tile);
+            }
+            let (tm, tn) = grid.tile_rc(tile);
+            Some(tm.min(grid.tiles_m - 1) * grid.tiles_n + tn)
+        };
+        for job in &jobs {
+            if matches!(job.dest, Dest::Store) {
+                if let Some(t) = count_tile(job.tile) {
+                    store_writes[t] = store_writes[t].saturating_add(1);
+                }
+            }
+        }
+        for &tile in &flat.split_tiles {
+            if let Some(t) = count_tile(tile) {
+                store_writes[t] = store_writes[t].saturating_add(1);
+            }
+        }
+        let rows_ragged = grid.tiles_m * bm != m;
+        let cols_ragged = grid.tiles_n * bn != n;
+        for job in &mut jobs {
+            if !matches!(job.dest, Dest::Store) {
+                continue;
+            }
+            let (tm, tn) = grid.tile_rc(job.tile);
+            let row_safe = !rows_ragged || tm + 2 < grid.tiles_m;
+            let col_safe = !cols_ragged || tn + 2 < grid.tiles_n;
+            let single =
+                store_writes.get(job.tile).is_some_and(|&w| w == 1);
+            job.owned = single && row_safe && col_safe;
+        }
+
+        Self { shape, block, kc: KC, jobs, fixup, sources, macs }
+    }
+
+    /// Override the K-chunk length (the tuner's KC axis); clamped to ≥1.
+    pub fn with_kc(mut self, kc: usize) -> Self {
+        self.kc = kc.max(1);
+        self
+    }
+
+    /// Per-class work-item counts:
+    /// `(owned direct-store, ordered store, partial)`.
+    pub fn class_counts(&self) -> (usize, usize, usize) {
+        let owned = self.jobs.iter().filter(|j| j.owned).count();
+        let partial = self
+            .jobs
+            .iter()
+            .filter(|j| matches!(j.dest, Dest::Partial { .. }))
+            .count();
+        (owned, self.jobs.len() - owned - partial, partial)
+    }
+}
+
+/// Dispatcher knobs. Production paths use [`ExecOpts::auto`] (detected
+/// SIMD lanes, direct-store streaming on); the bench pins the PR-4
+/// configuration (scalar lanes, everything windowed) as its baseline,
+/// and the identity tests sweep both axes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecOpts {
+    /// Microkernel lane backend.
+    pub backend: LaneBackend,
+    /// Stream owned tiles straight into C from the compute workers
+    /// (`false` ⇒ every store goes through the windowed ordered path).
+    pub direct_store: bool,
+    pub threads: usize,
+}
+
+impl ExecOpts {
+    /// The serving configuration for `macs` MAC-FLOPs of work.
+    pub fn auto(macs: u64) -> Self {
+        Self {
+            backend: lane::active(),
+            direct_store: true,
+            threads: default_threads(macs),
+        }
     }
 }
 
 /// Execute a described schedule over row-major f32 slices; worker count
-/// chosen from the problem size. See [`execute_threads`].
+/// chosen from the problem size. See [`execute_opts`].
 pub fn execute(
     a: &[f32],
     b: &[f32],
     desc: &ExecDesc,
     epilogue: Epilogue,
 ) -> Vec<f32> {
-    execute_threads(a, b, desc, epilogue, default_threads(desc.macs))
+    execute_opts(a, b, desc, epilogue, &ExecOpts::auto(desc.macs))
 }
 
-/// How many work items are computed in parallel before their direct
-/// stores drain — bounds the transient accumulator memory at
+/// How many non-owned work items are computed in parallel before their
+/// ordered stores drain — bounds the transient accumulator memory at
 /// `WINDOW × BM × BN` f32 (8 MiB at the 128-wide default blocks)
-/// instead of one accumulator per work item for the whole run.
+/// instead of one accumulator per work item for the whole run. Owned
+/// items never enter the window: they stream through per-worker scratch.
 const WINDOW: usize = 128;
 
 /// Execute with an explicit worker count (benches / determinism tests).
@@ -186,37 +328,126 @@ pub fn execute_threads(
     epilogue: Epilogue,
     threads: usize,
 ) -> Vec<f32> {
+    execute_opts(
+        a,
+        b,
+        desc,
+        epilogue,
+        &ExecOpts { threads, ..ExecOpts::auto(desc.macs) },
+    )
+}
+
+/// Raw C base pointer shared by the owned-store workers. Safety rests
+/// on the ownership analysis: every owned job writes a disjoint region
+/// of C, and no reference to C is alive while the workers run.
+#[derive(Clone, Copy)]
+struct SyncPtr(*mut f32);
+unsafe impl Send for SyncPtr {}
+unsafe impl Sync for SyncPtr {}
+
+/// Per-worker state of the streaming pass: pack scratch plus one
+/// reusable accumulator (no per-job allocation).
+#[derive(Default)]
+struct OwnedState {
+    buf: PackBuf,
+    acc: Vec<f32>,
+}
+
+/// Execute with explicit dispatcher options. Output is bit-identical
+/// across every `(backend, direct_store, threads)` combination.
+pub fn execute_opts(
+    a: &[f32],
+    b: &[f32],
+    desc: &ExecDesc,
+    epilogue: Epilogue,
+    opts: &ExecOpts,
+) -> Vec<f32> {
     let GemmShape { m, n, k } = desc.shape;
     assert_eq!(a.len(), m * k, "A shape");
     assert_eq!(b.len(), k * n, "B shape");
     let (bm, bn) = (desc.block.bm, desc.block.bn);
+    let threads = opts.threads.max(1);
+    let backend = opts.backend;
     let mut c = vec![0.0f32; m * n];
     // Partial-segment accumulators (the reference's two-slot-per-CU
-    // buffer), kept alive until the fixup pass; direct accumulators
-    // drain window by window.
+    // buffer), indexed by original job id, kept alive until the fixup
+    // pass; non-owned direct accumulators drain window by window.
     let mut partial_accs: Vec<Option<Vec<f32>>> = vec![None; desc.jobs.len()];
 
-    // Passes 1+2, windowed: compute a window of independent work items
-    // in parallel, then apply its stores in the reference's serial
-    // order. Windows ascend in job order, so the overall store order is
-    // exactly the reference's.
+    // Pass 0: owned tiles stream straight into C from the workers — no
+    // staging arena, no ordered drain. Each owned element is written
+    // exactly once in the whole run, so timing cannot change the bits.
+    if opts.direct_store {
+        let owned: Vec<usize> =
+            (0..desc.jobs.len()).filter(|&i| desc.jobs[i].owned).collect();
+        if !owned.is_empty() {
+            let cbase = SyncPtr(c.as_mut_ptr());
+            let kc = desc.kc;
+            scope_map_with(
+                threads,
+                &owned,
+                OwnedState::default,
+                move |st, _, &ji| {
+                    let job = &desc.jobs[ji];
+                    st.acc.clear();
+                    st.acc.resize(bm * bn, 0.0);
+                    accumulate_job(
+                        a, b, k, n, bm, bn, kc, backend, job, &mut st.buf,
+                        &mut st.acc,
+                    );
+                    unsafe {
+                        store_owned(
+                            cbase.0, n, job.r0, job.c0, bm, bn, &st.acc,
+                            epilogue,
+                        );
+                    }
+                },
+            );
+        }
+    }
+
+    // Passes 1+2, windowed over the remaining jobs: compute a window of
+    // independent work items in parallel, then apply its stores in the
+    // reference's serial order. Windows ascend in job order, so the
+    // ordered stores land exactly as the reference's (removing the
+    // owned, order-free items from the sequence cannot change it).
+    let rest: Vec<usize> = (0..desc.jobs.len())
+        .filter(|&i| !(opts.direct_store && desc.jobs[i].owned))
+        .collect();
     let mut start = 0;
-    while start < desc.jobs.len() {
-        let end = (start + WINDOW).min(desc.jobs.len());
+    while start < rest.len() {
+        let end = (start + WINDOW).min(rest.len());
         let accs: Vec<Vec<f32>> = scope_map_with(
             threads,
-            &desc.jobs[start..end],
+            &rest[start..end],
             PackBuf::new,
-            |buf, _, job| compute_job(a, b, k, n, bm, bn, job, buf),
+            |buf, _, &ji| {
+                let mut acc = vec![0.0f32; bm * bn];
+                accumulate_job(
+                    a,
+                    b,
+                    k,
+                    n,
+                    bm,
+                    bn,
+                    desc.kc,
+                    backend,
+                    &desc.jobs[ji],
+                    buf,
+                    &mut acc,
+                );
+                acc
+            },
         );
         for (off, acc) in accs.into_iter().enumerate() {
-            let job = &desc.jobs[start + off];
+            let ji = rest[start + off];
+            let job = &desc.jobs[ji];
             match job.dest {
                 Dest::Store => store_tile(
                     &mut c, n, job.r0, job.c0, bm, bn, &acc, epilogue,
                 ),
                 Dest::Partial { .. } => {
-                    partial_accs[start + off] = Some(acc);
+                    partial_accs[ji] = Some(acc);
                 }
             }
         }
@@ -243,30 +474,32 @@ pub fn execute_threads(
     c
 }
 
-/// Accumulate one work item: stream its K range in cache-sized chunks
-/// through pack + microkernel. K chunks ascend, so per-element FP order
-/// matches the reference exactly.
+/// Accumulate one work item into `acc` (zero-initialized by the
+/// caller): stream its K range in `kc`-deep chunks through pack +
+/// microkernel. K chunks ascend, so per-element FP order matches the
+/// reference exactly regardless of the chunk length.
 #[allow(clippy::too_many_arguments)]
-fn compute_job(
+fn accumulate_job(
     a: &[f32],
     b: &[f32],
     k: usize,
     n: usize,
     bm: usize,
     bn: usize,
+    kc: usize,
+    backend: LaneBackend,
     job: &TileJob,
     buf: &mut PackBuf,
-) -> Vec<f32> {
-    let mut acc = vec![0.0f32; bm * bn];
-    let mut kc = job.kc0;
-    while kc < job.kc1 {
-        let kv = KC.min(job.kc1 - kc);
-        pack_a(&mut buf.a, a, k, job.r0, bm, kc, kv);
-        pack_b(&mut buf.b, b, n, job.c0, bn, kc, kv);
-        block_update(&buf.a, &buf.b, bm, bn, kv, &mut acc);
-        kc += kv;
+    acc: &mut [f32],
+) {
+    let mut kcur = job.kc0;
+    while kcur < job.kc1 {
+        let kv = kc.max(1).min(job.kc1 - kcur);
+        pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
+        pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+        block_update_with(backend, &buf.a, &buf.b, bm, bn, kv, acc);
+        kcur += kv;
     }
-    acc
 }
 
 /// Store one `bm × bn` accumulator into C at its clamped origin, with
@@ -291,6 +524,35 @@ fn store_tile(
         } else {
             for (d, &s) in row.iter_mut().zip(src) {
                 *d = epilogue.apply(s);
+            }
+        }
+    }
+}
+
+/// Store one owned accumulator straight into C through the shared base
+/// pointer, epilogue fused. Safety: the caller guarantees the `bm × bn`
+/// region at `(r0, c0)` lies inside C and is written by no other job
+/// (the ownership analysis), so rows touch memory no other thread
+/// writes.
+#[allow(clippy::too_many_arguments)]
+unsafe fn store_owned(
+    c: *mut f32,
+    n: usize,
+    r0: usize,
+    c0: usize,
+    bm: usize,
+    bn: usize,
+    acc: &[f32],
+    epilogue: Epilogue,
+) {
+    for r in 0..bm {
+        let dst = c.add((r0 + r) * n + c0);
+        let src = &acc[r * bn..(r + 1) * bn];
+        if epilogue == Epilogue::None {
+            std::ptr::copy_nonoverlapping(src.as_ptr(), dst, bn);
+        } else {
+            for (j, &s) in src.iter().enumerate() {
+                *dst.add(j) = epilogue.apply(s);
             }
         }
     }
@@ -363,7 +625,14 @@ fn matmul_panel(
         let kv = KC.min(k - kc);
         pack_a(&mut buf.a, a, k, r0, rows, kc, kv);
         // B rows are already contiguous at full width: no pack.
-        block_update(&buf.a, &b[kc * n..(kc + kv) * n], rows, n, kv, out);
+        super::micro::block_update(
+            &buf.a,
+            &b[kc * n..(kc + kv) * n],
+            rows,
+            n,
+            kv,
+            out,
+        );
         kc += kv;
     }
 }
@@ -478,6 +747,162 @@ mod tests {
         });
     }
 
+    /// Satellite acceptance: the direct-store streaming dispatcher is
+    /// bit-identical to the all-windowed one (and both to the
+    /// reference) on random mixed-ownership grids — ragged edges,
+    /// fixups, NaN/∞ — across every runnable lane backend.
+    #[test]
+    fn prop_direct_store_matches_windowed_on_mixed_grids() {
+        prop::check("direct-store == windowed (bitwise)", 25, |rng| {
+            let m = rng.usize_in(20, 150);
+            let n = rng.usize_in(20, 150);
+            let k = rng.usize_in(1, 100);
+            let p = *rng.choose(&[1usize, 3, 16, 120]);
+            let bm = *rng.choose(&[8usize, 16]);
+            let bn = *rng.choose(&[8usize, 16]);
+            let bk = *rng.choose(&[2usize, 8]);
+            let mut a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            for _ in 0..rng.usize_in(0, 3) {
+                let at = rng.usize_in(0, m * k - 1);
+                a.data[at] =
+                    *rng.choose(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+            }
+            let (shape, flat, block) =
+                flat_of(m, n, k, p, BlockShape::new(bm, bn, bk));
+            let desc = ExecDesc::new(shape, block, &flat);
+            let want =
+                execute_flat_ref(&a.data, &b.data, shape, &flat, block);
+            let threads = *rng.choose(&[1usize, 4]);
+            for backend in lane::available() {
+                for direct_store in [false, true] {
+                    let got = execute_opts(
+                        &a.data,
+                        &b.data,
+                        &desc,
+                        Epilogue::None,
+                        &ExecOpts { backend, direct_store, threads },
+                    );
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        if g.to_bits() != w.to_bits() {
+                            return Err(format!(
+                                "{m}x{n}x{k} p={p} {backend:?} \
+                                 direct={direct_store} elem {i}: \
+                                 {g:?} vs {w:?}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ownership_classifies_aligned_and_edge_tiles() {
+        // Grid-aligned problem: every direct store is owned, nothing
+        // takes the ordered path.
+        let (shape, flat, block) =
+            flat_of(64, 64, 64, 7, BlockShape::new(16, 16, 8));
+        let desc = ExecDesc::new(shape, block, &flat);
+        let (owned, ordered, partial) = desc.class_counts();
+        assert_eq!(ordered, 0, "aligned grid must stream every store");
+        assert!(owned > 0);
+        assert!(partial > 0, "case must exercise fixups too");
+        for job in &desc.jobs {
+            match job.dest {
+                Dest::Store => assert!(job.owned, "{job:?}"),
+                Dest::Partial { .. } => assert!(!job.owned, "{job:?}"),
+            }
+        }
+        assert_eq!(owned + ordered + partial, desc.jobs.len());
+
+        // Ragged columns: the clamped last tile-column overlaps the
+        // second-to-last, so stores in both stay ordered; interior
+        // columns still stream.
+        let (shape, flat, block) =
+            flat_of(96, 102, 100, 12, BlockShape::new(16, 16, 8));
+        let desc = ExecDesc::new(shape, block, &flat);
+        let (owned, ordered, _) = desc.class_counts();
+        assert!(owned > 0, "interior tiles must stream");
+        assert!(ordered > 0, "clamped-edge tiles must stay ordered");
+        let tiles_n = flat.grid.tiles_n;
+        for job in &desc.jobs {
+            if !matches!(job.dest, Dest::Store) {
+                continue;
+            }
+            let (_, tn) = flat.grid.tile_rc(job.tile);
+            if tn + 2 >= tiles_n {
+                assert!(!job.owned, "edge-overlap tile streamed: {job:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_tile_writes_are_never_owned() {
+        // Fault-injected schedules can write one tile many times (the
+        // CU-bug remap); the ownership analysis must keep every such
+        // store ordered and the dispatcher must reproduce the broken
+        // schedule's corruption exactly, for every thread count.
+        let (shape, flat, block) =
+            flat_of(64, 64, 64, 7, BlockShape::new(16, 16, 8));
+        let mut broken = flat.clone();
+        for seg in &mut broken.segments {
+            seg.tile = 0; // collide every SK segment onto the DP tile 0
+        }
+        let desc = ExecDesc::new(shape, block, &broken);
+        let mut colliding = 0;
+        for job in &desc.jobs {
+            if job.tile == 0 && matches!(job.dest, Dest::Store) {
+                assert!(!job.owned, "multi-writer tile streamed: {job:?}");
+                colliding += 1;
+            }
+        }
+        assert!(colliding >= 2, "case must actually collide stores");
+        // untouched aligned single-writer tiles still stream
+        assert!(desc.jobs.iter().any(|j| j.owned));
+
+        let mut rng = prop::Rng::new(31);
+        let a = Matrix::random(64, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let want =
+            execute_flat_ref(&a.data, &b.data, shape, &broken, block);
+        for threads in [1usize, 4] {
+            let got = execute_threads(
+                &a.data,
+                &b.data,
+                &desc,
+                Epilogue::None,
+                threads,
+            );
+            bits_equal(&got, &want, &format!("broken threads={threads}"));
+        }
+
+        // Out-of-grid corruption: tile 18 of a 4x4 grid clamps onto
+        // tile (3,2)'s region, so that aliased in-grid tile must not
+        // stream either, and execution still matches the reference.
+        let mut oob = flat.clone();
+        oob.segments[0].tile = flat.grid.num_tiles() + 2;
+        let desc = ExecDesc::new(shape, block, &oob);
+        let aliased = (flat.grid.tiles_m - 1) * flat.grid.tiles_n + 2;
+        for job in &desc.jobs {
+            if job.tile == aliased || job.tile >= flat.grid.num_tiles() {
+                assert!(!job.owned, "aliased/out-of-grid streamed: {job:?}");
+            }
+        }
+        let want = execute_flat_ref(&a.data, &b.data, shape, &oob, block);
+        for threads in [1usize, 4] {
+            let got = execute_threads(
+                &a.data,
+                &b.data,
+                &desc,
+                Epilogue::None,
+                threads,
+            );
+            bits_equal(&got, &want, &format!("oob threads={threads}"));
+        }
+    }
+
     #[test]
     fn fixup_reduction_is_contributor_ordered() {
         // 60x64x64 with a 16x16x2 block on 120 CUs has >= 3-way split
@@ -519,6 +944,28 @@ mod tests {
         Epilogue::Relu.apply_slice(&mut post);
         bits_equal(&fused, &post, "fused relu");
         assert!(fused.iter().any(|&v| v > 0.0), "case must be non-trivial");
+    }
+
+    #[test]
+    fn kc_chunking_never_changes_bits() {
+        // The K-chunk length is a locality knob only: odd chunk lengths
+        // must reproduce the default bits exactly.
+        let (shape, flat, block) =
+            flat_of(96, 102, 100, 12, BlockShape::new(16, 16, 8));
+        let mut rng = prop::Rng::new(77);
+        let a = Matrix::random(96, 100, &mut rng);
+        let b = Matrix::random(100, 102, &mut rng);
+        let want = execute(
+            &a.data,
+            &b.data,
+            &ExecDesc::new(shape, block, &flat),
+            Epilogue::None,
+        );
+        for kc in [1usize, 7, 64, 256, 10_000] {
+            let desc = ExecDesc::new(shape, block, &flat).with_kc(kc);
+            let got = execute(&a.data, &b.data, &desc, Epilogue::None);
+            bits_equal(&got, &want, &format!("kc={kc}"));
+        }
     }
 
     #[test]

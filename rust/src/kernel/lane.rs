@@ -1,0 +1,350 @@
+//! Explicit SIMD lane backends for the microkernel's `MR × NR`
+//! register block.
+//!
+//! The PR-4 microkernel was scalar Rust the compiler auto-vectorized
+//! against the x86_64 *baseline* ISA (SSE2, 4-wide); this module makes
+//! the lanes explicit: a stable-Rust `std::arch` AVX2 path (8-wide, the
+//! full NR in one register), an SSE2 path (two 4-wide halves), and the
+//! scalar register block everything else falls back to. The backend is
+//! picked once per process by runtime feature detection
+//! ([`active`]), overridable with the `STREAMK_KERNEL_LANES`
+//! environment variable (`avx2` / `sse2` / `scalar`; anything else, or
+//! an unavailable backend, falls back to detection).
+//!
+//! **Bit-identity is the contract, not a best effort.** Every backend
+//! computes, per output element, the *same* FP sequence as the
+//! per-element reference executor: K ascending, one `mul` then one
+//! `add` per (element, k) pair with the intermediate product rounded to
+//! f32. Vectorizing is safe because the lanes run across the N
+//! (column) dimension — different output elements sit in different
+//! lanes, and `_mm*_mul_ps`/`_mm*_add_ps` are IEEE-exact per lane,
+//! identical to the scalar `mulss`/`addss` sequence (including NaN/∞
+//! propagation: `0 · ∞` produces the same quiet NaN scalar math does,
+//! and zero operands are never skipped). FMA (`_mm*_fmadd_ps`) is
+//! deliberately never used: it contracts the mul+add into one rounding,
+//! which would break bit-identity with the reference oracle.
+
+use std::sync::OnceLock;
+
+/// Register block rows of the microkernel.
+pub(crate) const MR: usize = 4;
+/// Register block columns (one AVX2 lane, or two SSE2 lanes, of f32).
+pub(crate) const NR: usize = 8;
+
+/// Environment override for the lane backend (`avx2`/`sse2`/`scalar`).
+pub const LANES_ENV: &str = "STREAMK_KERNEL_LANES";
+
+/// One microkernel lane implementation. Non-x86_64 targets only ever
+/// *run* `Scalar`; the other variants still parse/print there so cache
+/// files and CLI output stay portable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneBackend {
+    /// Scalar register block (the PR-4 microkernel, auto-vectorized at
+    /// whatever the build's baseline ISA allows).
+    Scalar,
+    /// Two 4-wide `__m128` lanes per register-block row.
+    Sse2,
+    /// One 8-wide `__m256` lane per register-block row.
+    Avx2,
+}
+
+impl LaneBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            LaneBackend::Scalar => "scalar",
+            LaneBackend::Sse2 => "sse2",
+            LaneBackend::Avx2 => "avx2",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(LaneBackend::Scalar),
+            "sse2" => Some(LaneBackend::Sse2),
+            "avx2" => Some(LaneBackend::Avx2),
+            _ => None,
+        }
+    }
+}
+
+/// Backends that can actually execute on this machine, scalar first.
+pub fn available() -> Vec<LaneBackend> {
+    let mut v = vec![LaneBackend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        v.push(LaneBackend::Sse2); // baseline ISA on x86_64
+        if std::is_x86_feature_detected!("avx2") {
+            v.push(LaneBackend::Avx2);
+        }
+    }
+    v
+}
+
+/// Best detected backend (no environment consultation).
+fn detect() -> LaneBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::is_x86_feature_detected!("avx2") {
+            return LaneBackend::Avx2;
+        }
+        return LaneBackend::Sse2;
+    }
+    #[allow(unreachable_code)]
+    LaneBackend::Scalar
+}
+
+/// The process-wide lane backend: `STREAMK_KERNEL_LANES` if it names an
+/// available backend, otherwise runtime detection. Resolved once and
+/// cached (the dispatcher reads this per `block_update` call).
+pub fn active() -> LaneBackend {
+    static ACTIVE: OnceLock<LaneBackend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| match std::env::var(LANES_ENV) {
+        Ok(v) => match LaneBackend::parse(v.trim()) {
+            Some(b) if available().contains(&b) => b,
+            _ => detect(),
+        },
+        Err(_) => detect(),
+    })
+}
+
+/// Downgrade a backend this machine cannot run to `Scalar` (same bits,
+/// slower lanes) — hoisted out of the per-block hot path by
+/// [`super::micro::block_update_with`], which resolves once per panel
+/// instead of once per `MR × NR` register block.
+pub(crate) fn resolve(backend: LaneBackend) -> LaneBackend {
+    match backend {
+        LaneBackend::Scalar => LaneBackend::Scalar,
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Sse2 => LaneBackend::Sse2,
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Avx2 => {
+            if std::is_x86_feature_detected!("avx2") {
+                LaneBackend::Avx2
+            } else {
+                LaneBackend::Scalar
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => LaneBackend::Scalar,
+    }
+}
+
+/// One `MR × NR` register block:
+/// `acc[(r0+i)·bn + c0 + j] += Σ_kk a_rows[i][kk] · bp[kk·bn + c0 + j]`
+/// — K strictly ascending, separate mul-then-add per (element, k), so
+/// every backend is bit-identical to the scalar reference.
+///
+/// Callers guarantee `a_rows[i].len() == kv`, `bp.len() >= kv * bn`,
+/// `c0 + NR <= bn`, and `acc.len() >= (r0 + MR) * bn` (the contract
+/// [`super::micro::block_update_with`] establishes). A backend the
+/// machine cannot run (an explicit `Avx2` request on non-AVX2 hardware)
+/// silently degrades to the scalar block — same bits, slower lanes.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_block(
+    backend: LaneBackend,
+    a_rows: &[&[f32]; MR],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    match backend {
+        LaneBackend::Scalar => {
+            micro_block_scalar(a_rows, bp, bn, kv, r0, c0, acc)
+        }
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Sse2 => unsafe {
+            // SSE2 is part of the x86_64 baseline: always runnable.
+            micro_block_sse2(a_rows, bp, bn, kv, r0, c0, acc)
+        },
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Avx2 => {
+            if std::is_x86_feature_detected!("avx2") {
+                unsafe { micro_block_avx2(a_rows, bp, bn, kv, r0, c0, acc) }
+            } else {
+                micro_block_scalar(a_rows, bp, bn, kv, r0, c0, acc)
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => micro_block_scalar(a_rows, bp, bn, kv, r0, c0, acc),
+    }
+}
+
+/// The scalar register block (PR-4's microkernel, unchanged): load
+/// accumulators once, stream the K slice, store once.
+#[allow(clippy::too_many_arguments)]
+fn micro_block_scalar(
+    a_rows: &[&[f32]; MR],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    let mut reg = [[0.0f32; NR]; MR];
+    for (i, regs) in reg.iter_mut().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        regs.copy_from_slice(&acc[at..at + NR]);
+    }
+    for kk in 0..kv {
+        let brow = &bp[kk * bn + c0..][..NR];
+        for i in 0..MR {
+            let av = a_rows[i][kk];
+            for j in 0..NR {
+                reg[i][j] += av * brow[j];
+            }
+        }
+    }
+    for (i, regs) in reg.iter().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        acc[at..at + NR].copy_from_slice(regs);
+    }
+}
+
+/// AVX2: the whole NR-wide row in one `__m256`. Safety: caller upholds
+/// the [`micro_block`] bounds contract and AVX2 is detected.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_block_avx2(
+    a_rows: &[&[f32]; MR],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(c0 + NR <= bn && acc.len() >= (r0 + MR) * bn);
+    debug_assert!(bp.len() >= kv * bn);
+    let base = acc.as_mut_ptr();
+    let bptr = bp.as_ptr();
+    let mut reg = [_mm256_setzero_ps(); MR];
+    for (i, r) in reg.iter_mut().enumerate() {
+        *r = _mm256_loadu_ps(base.add((r0 + i) * bn + c0));
+    }
+    for kk in 0..kv {
+        let brow = _mm256_loadu_ps(bptr.add(kk * bn + c0));
+        for (i, r) in reg.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*a_rows[i].get_unchecked(kk));
+            // mul then add — never _mm256_fmadd_ps, which would contract
+            // the two roundings and break bit-identity with the oracle
+            *r = _mm256_add_ps(*r, _mm256_mul_ps(av, brow));
+        }
+    }
+    for (i, r) in reg.iter().enumerate() {
+        _mm256_storeu_ps(base.add((r0 + i) * bn + c0), *r);
+    }
+}
+
+/// SSE2: two 4-wide halves per row. Safety: caller upholds the
+/// [`micro_block`] bounds contract (SSE2 is always present on x86_64).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_block_sse2(
+    a_rows: &[&[f32]; MR],
+    bp: &[f32],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(c0 + NR <= bn && acc.len() >= (r0 + MR) * bn);
+    debug_assert!(bp.len() >= kv * bn);
+    let base = acc.as_mut_ptr();
+    let bptr = bp.as_ptr();
+    let mut lo = [_mm_setzero_ps(); MR];
+    let mut hi = [_mm_setzero_ps(); MR];
+    for i in 0..MR {
+        let p = base.add((r0 + i) * bn + c0);
+        lo[i] = _mm_loadu_ps(p);
+        hi[i] = _mm_loadu_ps(p.add(4));
+    }
+    for kk in 0..kv {
+        let bl = _mm_loadu_ps(bptr.add(kk * bn + c0));
+        let bh = _mm_loadu_ps(bptr.add(kk * bn + c0 + 4));
+        for i in 0..MR {
+            let av = _mm_set1_ps(*a_rows[i].get_unchecked(kk));
+            // mul then add — never FMA (see the AVX2 block)
+            lo[i] = _mm_add_ps(lo[i], _mm_mul_ps(av, bl));
+            hi[i] = _mm_add_ps(hi[i], _mm_mul_ps(av, bh));
+        }
+    }
+    for i in 0..MR {
+        let p = base.add((r0 + i) * bn + c0);
+        _mm_storeu_ps(p, lo[i]);
+        _mm_storeu_ps(p.add(4), hi[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for b in [LaneBackend::Scalar, LaneBackend::Sse2, LaneBackend::Avx2] {
+            assert_eq!(LaneBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(LaneBackend::parse("neon"), None);
+    }
+
+    #[test]
+    fn scalar_is_always_available_and_active_is_runnable() {
+        let avail = available();
+        assert!(avail.contains(&LaneBackend::Scalar));
+        assert!(
+            avail.contains(&active()),
+            "active backend {:?} must be runnable here",
+            active()
+        );
+        #[cfg(target_arch = "x86_64")]
+        assert!(avail.contains(&LaneBackend::Sse2), "sse2 is baseline");
+    }
+
+    #[test]
+    fn every_backend_matches_scalar_bitwise_on_one_block() {
+        // One MR×NR block with non-finite values seeded: the lanes must
+        // reproduce the scalar block exactly, bit for bit.
+        let kv = 9;
+        let bn = NR + 3; // misaligned panel width exercises unaligned loads
+        let mut a = vec![0.0f32; MR * kv];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = (i as f32).sin();
+        }
+        a[3] = f32::INFINITY;
+        a[kv + 1] = f32::NAN;
+        let mut bp = vec![0.0f32; kv * bn];
+        for (i, v) in bp.iter_mut().enumerate() {
+            *v = (i as f32 * 0.7).cos();
+        }
+        bp[2 * bn] = 0.0; // 0 · Inf inside the block
+        let a_rows: [&[f32]; MR] = [
+            &a[0..kv],
+            &a[kv..2 * kv],
+            &a[2 * kv..3 * kv],
+            &a[3 * kv..4 * kv],
+        ];
+        let mut want = vec![0.1f32; MR * bn];
+        micro_block_scalar(&a_rows, &bp, bn, kv, 0, 0, &mut want);
+        for backend in available() {
+            let mut got = vec![0.1f32; MR * bn];
+            micro_block(backend, &a_rows, &bp, bn, kv, 0, 0, &mut got);
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.to_bits(),
+                    w.to_bits(),
+                    "{backend:?} elem {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}

@@ -2,33 +2,51 @@
 //!
 //! [`block_update`] computes `acc[r, c] += Σ_kk ap[r, kk] · bp[kk, c]`
 //! over packed panels, walking K in strictly ascending order with one
-//! sequential addition per (element, k) pair — the exact FP sequence of
-//! the per-element reference executor, so results are bit-identical
+//! separate mul-then-add per (element, k) pair — the exact FP sequence
+//! of the per-element reference executor, so results are bit-identical
 //! (including NaN/∞ propagation: zero operands are never skipped).
 //!
-//! The speed comes from register blocking: the `MR × NR` inner kernel
-//! keeps a 4×8 accumulator block in registers across the whole K slice
-//! (the reference re-loads and re-stores every accumulator element once
-//! per MAC), and the packed panels make every inner-loop access
-//! unit-stride so the compiler vectorizes the NR lane. Edges that do
-//! not fill an `MR × NR` block fall back to a scalar dot loop with the
-//! same K order.
+//! The speed comes from register blocking plus explicit SIMD lanes
+//! ([`super::lane`]): the `MR × NR` inner kernel keeps a 4×8
+//! accumulator block in registers across the whole K slice (the
+//! reference re-loads and re-stores every accumulator element once per
+//! MAC), and on x86_64 the NR lane runs as one AVX2 register (or two
+//! SSE2 registers) of IEEE-exact mul+add — never FMA, which would
+//! contract the two roundings and break the bit-identity contract.
+//! Edges that do not fill an `MR × NR` block fall back to a scalar dot
+//! loop with the same K order.
 
-/// K-chunk length: panels of `BM × KC` + `KC × BN` f32 stay
-/// cache-resident (≤ 64 KiB each at the 128-wide default blocks).
-pub(crate) const KC: usize = 128;
+use super::lane::{self, LaneBackend, MR, NR};
 
-/// Register block rows.
-const MR: usize = 4;
-/// Register block columns (one or two SIMD lanes of f32).
-const NR: usize = 8;
+/// Default K-chunk length: panels of `BM × KC` + `KC × BN` f32 stay
+/// cache-resident (≤ 64 KiB each at the 128-wide default blocks). The
+/// tuner can override per config ([`crate::decomp::params::KernelParams::kc`]);
+/// chunking never changes numerics (K still ascends per element).
+pub use crate::decomp::params::KC_DEFAULT as KC;
 
-/// `acc (bm × bn) += ap (bm × kv, row-major) · bp (kv × bn, row-major)`.
+/// `acc (bm × bn) += ap (bm × kv, row-major) · bp (kv × bn, row-major)`
+/// on the process-wide lane backend ([`lane::active`]).
 ///
 /// `bp` may be a view of a wider row-major matrix only when its row
 /// stride equals `bn` (the dispatcher packs panels; [`super::matmul`]
 /// passes full-width B rows directly).
 pub fn block_update(
+    ap: &[f32],
+    bp: &[f32],
+    bm: usize,
+    bn: usize,
+    kv: usize,
+    acc: &mut [f32],
+) {
+    block_update_with(lane::active(), ap, bp, bm, bn, kv, acc)
+}
+
+/// [`block_update`] on an explicit lane backend — the bit-identity
+/// property tests and the `kernel_exec` bench pin backends through
+/// this; production paths go through [`block_update`] /
+/// [`super::exec::ExecOpts`].
+pub fn block_update_with(
+    backend: LaneBackend,
     ap: &[f32],
     bp: &[f32],
     bm: usize,
@@ -42,6 +60,9 @@ pub fn block_update(
     if kv == 0 || bm == 0 || bn == 0 {
         return;
     }
+    // Downgrade an unrunnable backend once per panel, not once per
+    // register block inside the hot loop.
+    let backend = lane::resolve(backend);
     let mut r0 = 0;
     while r0 + MR <= bm {
         let a_rows: [&[f32]; MR] = [
@@ -52,7 +73,7 @@ pub fn block_update(
         ];
         let mut c0 = 0;
         while c0 + NR <= bn {
-            micro_block(&a_rows, bp, bn, kv, r0, c0, acc);
+            lane::micro_block(backend, &a_rows, bp, bn, kv, r0, c0, acc);
             c0 += NR;
         }
         for r in r0..r0 + MR {
@@ -69,39 +90,8 @@ pub fn block_update(
     }
 }
 
-/// One `MR × NR` register block: load accumulators once, stream the K
-/// slice, store once.
-#[inline]
-fn micro_block(
-    a_rows: &[&[f32]; MR],
-    bp: &[f32],
-    bn: usize,
-    kv: usize,
-    r0: usize,
-    c0: usize,
-    acc: &mut [f32],
-) {
-    let mut reg = [[0.0f32; NR]; MR];
-    for (i, regs) in reg.iter_mut().enumerate() {
-        let at = (r0 + i) * bn + c0;
-        regs.copy_from_slice(&acc[at..at + NR]);
-    }
-    for kk in 0..kv {
-        let brow = &bp[kk * bn + c0..][..NR];
-        for i in 0..MR {
-            let av = a_rows[i][kk];
-            for j in 0..NR {
-                reg[i][j] += av * brow[j];
-            }
-        }
-    }
-    for (i, regs) in reg.iter().enumerate() {
-        let at = (r0 + i) * bn + c0;
-        acc[at..at + NR].copy_from_slice(regs);
-    }
-}
-
-/// Scalar fallback for one edge element — identical K order.
+/// Scalar fallback for one edge element — identical K order (and
+/// identical on every backend, so edges never break lane bit-identity).
 #[inline]
 fn edge_dot(
     ap: &[f32],
@@ -172,10 +162,45 @@ mod tests {
         }
     }
 
+    /// Satellite acceptance: every runnable lane backend is
+    /// bit-identical to the per-element reference over odd shapes with
+    /// seeded NaN/∞ (forced through `block_update_with`, independent of
+    /// the process-wide backend).
+    #[test]
+    fn prop_every_lane_backend_matches_reference_bitwise() {
+        crate::prop::check("lane backends == reference (bitwise)", 30, |rng| {
+            let bm = rng.usize_in(1, 24);
+            let bn = rng.usize_in(1, 40);
+            let kv = rng.usize_in(1, 48);
+            let mut ap = rng.normal_f32_vec(bm * kv);
+            let bp = rng.normal_f32_vec(kv * bn);
+            for _ in 0..rng.usize_in(0, 3) {
+                let at = rng.usize_in(0, bm * kv - 1);
+                ap[at] =
+                    *rng.choose(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY]);
+            }
+            let start = rng.normal_f32_vec(bm * bn);
+            let mut want = start.clone();
+            reference(&ap, &bp, bm, bn, kv, &mut want);
+            for backend in lane::available() {
+                let mut got = start.clone();
+                block_update_with(backend, &ap, &bp, bm, bn, kv, &mut got);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    if g.to_bits() != w.to_bits() {
+                        return Err(format!(
+                            "{backend:?} {bm}x{bn}x{kv} elem {i}: {g:?} vs {w:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn no_zero_skip_nan_propagates() {
         // Inf * 0 must produce NaN inside the register block and at the
-        // scalar edge alike.
+        // scalar edge alike — on every runnable backend.
         let bm = 5;
         let bn = 9;
         let kv = 2;
@@ -183,10 +208,15 @@ mod tests {
         ap[0] = f32::INFINITY; // row 0 (register block)
         ap[4 * kv] = f32::INFINITY; // row 4 (scalar edge row)
         let bp = vec![0.0f32; kv * bn];
-        let mut acc = vec![0.0f32; bm * bn];
-        block_update(&ap, &bp, bm, bn, kv, &mut acc);
-        assert!(acc[0].is_nan(), "register path lost 0*Inf");
-        assert!(acc[4 * bn + 8].is_nan(), "edge path lost 0*Inf");
-        assert_eq!(acc[bn], 0.0, "untouched rows stay zero");
+        for backend in lane::available() {
+            let mut acc = vec![0.0f32; bm * bn];
+            block_update_with(backend, &ap, &bp, bm, bn, kv, &mut acc);
+            assert!(acc[0].is_nan(), "{backend:?}: register path lost 0*Inf");
+            assert!(
+                acc[4 * bn + 8].is_nan(),
+                "{backend:?}: edge path lost 0*Inf"
+            );
+            assert_eq!(acc[bn], 0.0, "{backend:?}: untouched rows stay zero");
+        }
     }
 }

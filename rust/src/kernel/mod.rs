@@ -13,6 +13,11 @@
 //! - [`pack`] — row-slice panel packing: the A panel (`BM × kc`) and the
 //!   B panel (`kc × BN`) of one tile's K-slice are copied into
 //!   contiguous scratch, so the inner loops walk unit-stride memory;
+//! - [`lane`] — explicit SIMD lane backends for the register block: a
+//!   stable-Rust `std::arch` AVX2/SSE2 path picked by runtime feature
+//!   detection (`STREAMK_KERNEL_LANES` overrides), scalar everywhere
+//!   else — separate mul-then-add per lane element, never FMA, so every
+//!   backend is bit-identical to the scalar reference;
 //! - [`micro`] — a cache-sized, register-blocked f32 microkernel
 //!   (`MR × NR` accumulators) that streams the packed panels in strictly
 //!   ascending K order, so every output element sees the *exact* FP
@@ -21,12 +26,14 @@
 //!   skipped);
 //! - [`exec`] — per-work-item dispatch: [`exec::ExecDesc`] precomputes
 //!   one tile descriptor per [`FlatSchedule`] work item (clamped tile
-//!   origins, contiguous valid-K ranges, partial-slot routing), the
-//!   dispatcher computes independent work items in parallel over
-//!   [`crate::exec::scope_map_with`], then applies stores in the
-//!   reference's serial order and sums fixup contributors in
-//!   k-ascending contributor order — deterministic for every thread
-//!   count.
+//!   origins, contiguous valid-K ranges, partial-slot routing, and the
+//!   tile-ownership class of every store). Owned tiles — unclamped,
+//!   single-writer, the common aligned case — stream their finished
+//!   accumulators straight into C from the compute workers (no staging
+//!   arena, no ordered drain); the rest compute in parallel over
+//!   [`crate::exec::scope_map_with`], store in the reference's serial
+//!   order, and sum fixup contributors in k-ascending contributor
+//!   order — deterministic for every thread count and dispatcher mode.
 //!
 //! The [`Epilogue`] hook fuses the artifact epilogue (relu / tanh-gelu)
 //! into the accumulate-into-C store, so the interpreter runtime does not
@@ -38,10 +45,15 @@
 //! the MLP matmuls via [`matmul`]), and `benches/kernel_exec.rs`.
 
 pub mod exec;
+pub mod lane;
 pub mod micro;
 pub mod pack;
 
-pub use exec::{execute, execute_threads, matmul, Dest, ExecDesc, TileJob};
+pub use exec::{
+    execute, execute_opts, execute_threads, matmul, Dest, ExecDesc,
+    ExecOpts, TileJob,
+};
+pub use lane::{LaneBackend, LANES_ENV};
 pub use pack::PackBuf;
 
 use crate::decomp::FlatSchedule;

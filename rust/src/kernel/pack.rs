@@ -1,12 +1,14 @@
 //! Row-slice panel packing into contiguous scratch buffers.
 //!
-//! The microkernel wants unit-stride operands: the A panel as `rows ×
-//! kc` (row-major, one contiguous K slice per tile row) and the B panel
-//! as `kc × cols` (one contiguous BN-wide row per K column). Packing is
-//! a pure copy — values are untouched, so it cannot perturb the
-//! bit-identical numerics contract — and the buffers are reused across
-//! K chunks and across work items by each dispatcher worker
-//! ([`PackBuf`]), so the steady-state hot path allocates nothing.
+//! The microkernel lanes want unit-stride operands: the A panel as
+//! `rows × kc` (row-major, one contiguous K slice per tile row) and the
+//! B panel as `kc × cols` (one contiguous BN-wide row per K column).
+//! Packing is a pure copy — values are untouched, so it cannot perturb
+//! the bit-identical numerics contract — and the buffers are reused
+//! across K chunks and across work items by each dispatcher worker
+//! ([`PackBuf`]; the direct-store streaming pass additionally reuses
+//! one accumulator per worker), so the steady-state hot path allocates
+//! nothing.
 
 /// Per-worker packing scratch: one A panel + one B panel, grown once to
 /// the high-water panel size and reused for every subsequent chunk.

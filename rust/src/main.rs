@@ -134,6 +134,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::value("fleet", None, "fleet spec, e.g. mi200,mi200x0.5"))
         .opt(Opt::value("drift-pct", None, "re-validate past this drift %"))
         .opt(Opt::value("cache-max-age-s", None, "age out entries older than"))
+        .opt(Opt::value(
+            "plan-hwm",
+            Some("plan_hwm.json"),
+            "persisted plan-cache hwm file: sizes the cache at startup, \
+             updated at shutdown (empty to disable)",
+        ))
         .example("streamk serve --requests 256 --max-batch 32")
         .example("streamk serve --tuner-cache tuner_cache.json")
         .example("streamk serve --fleet mi200,mi100 --requests 256")
@@ -147,6 +153,31 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
     };
     let requests = args.usize("requests").unwrap_or(64);
+
+    // Size the process-wide plan cache from the previous run's observed
+    // high-water mark, before anything touches it (the ROADMAP's
+    // "reported but not applied" follow-up). STREAMK_PLAN_CACHE_CAP
+    // still wins inside the initializer.
+    let hwm_path = args.str("plan-hwm").to_string();
+    if !hwm_path.is_empty() {
+        if let Some(cap) =
+            streamk::plan::load_hwm_capacity(Path::new(&hwm_path))
+        {
+            match streamk::plan::init_global_with_capacity(cap) {
+                Some(applied) if applied == cap => println!(
+                    "plan cache: capacity {applied} auto-applied from \
+                     {hwm_path} ({} overrides)",
+                    streamk::plan::CAPACITY_ENV
+                ),
+                Some(applied) => println!(
+                    "plan cache: capacity {applied} from {} (hwm file \
+                     {hwm_path} recommended {cap})",
+                    streamk::plan::CAPACITY_ENV
+                ),
+                None => {}
+            }
+        }
+    }
 
     let manifest = match Manifest::load(&settings.artifacts_dir) {
         Ok(m) => m,
@@ -217,6 +248,18 @@ fn cmd_serve(argv: &[String]) -> i32 {
         snap.throughput_rps,
     );
     println!("{}", plan_stats_line(&snap.plan));
+    if !hwm_path.is_empty() {
+        match streamk::plan::save_hwm(Path::new(&hwm_path), &snap.plan) {
+            Ok(()) => println!(
+                "plan-cache hwm persisted to {hwm_path} (recommended \
+                 capacity {}; the next serve starts there)",
+                snap.plan.recommended_capacity()
+            ),
+            Err(e) => {
+                eprintln!("warning: cannot persist plan hwm: {e}");
+            }
+        }
+    }
     if let Some(path) = args.get("metrics-out") {
         std::fs::write(
             path,

@@ -18,6 +18,7 @@ use crate::exec::{pool_map, Stopwatch};
 use crate::json::{obj, Value};
 use std::collections::hash_map::DefaultHasher;
 use std::hash::{Hash, Hasher};
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
@@ -287,8 +288,11 @@ impl PlanCache {
 
 /// Build every missing plan in `keys` concurrently over an
 /// [`crate::exec::ThreadPool`] — cold-start warm-up for serving and the
-/// benches. Returns how many plans were built (keys already cached or
-/// unbuildable count as 0).
+/// benches. Warmed plans arrive fully materialized: the lazily-built
+/// [`crate::kernel::ExecDesc`] is forced here so the first request per
+/// shape pays neither the decomposition nor the descriptor (laziness
+/// only benefits pricing-only paths that never warm). Returns how many
+/// plans were built (keys already cached or unbuildable count as 0).
 pub fn warm_parallel(
     cache: &Arc<PlanCache>,
     keys: &[PlanKey],
@@ -297,12 +301,21 @@ pub fn warm_parallel(
     let before = cache.stats().builds;
     let shared = cache.clone();
     pool_map(threads, keys.to_vec(), move |key: PlanKey| {
-        let _ = shared.get_or_build_key(key);
+        if let Ok(plan) = shared.get_or_build_key(key) {
+            let _ = plan.exec();
+        }
     });
     (cache.stats().builds - before) as usize
 }
 
 static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
+
+fn env_capacity() -> Option<usize> {
+    std::env::var(CAPACITY_ENV)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&c| c > 0)
+}
 
 /// The process-wide plan cache shared by the coordinator, the fleet
 /// scheduler, the tuner, and the interpreter runtime. Capacity defaults
@@ -310,13 +323,68 @@ static GLOBAL: OnceLock<Arc<PlanCache>> = OnceLock::new();
 /// [`CAPACITY_ENV`] overrides the total for wider shape mixes.
 pub fn global() -> &'static Arc<PlanCache> {
     GLOBAL.get_or_init(|| {
-        let capacity = std::env::var(CAPACITY_ENV)
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .filter(|&c| c > 0)
-            .unwrap_or(GLOBAL_PLANS_PER_SHARD * GLOBAL_SHARDS);
+        let capacity =
+            env_capacity().unwrap_or(GLOBAL_PLANS_PER_SHARD * GLOBAL_SHARDS);
         Arc::new(PlanCache::new(capacity, GLOBAL_SHARDS))
     })
+}
+
+/// Initialize the process-wide cache with `total` capacity — the
+/// `streamk serve` startup path, feeding [`load_hwm_capacity`]'s
+/// recommendation in before anything touches [`global`]. Returns the
+/// capacity actually applied — [`CAPACITY_ENV`] still wins over
+/// `total` when set, so an operator override always beats the
+/// persisted observation and the caller can report which source won —
+/// or `None` (nothing changed) when the cache was already initialized.
+pub fn init_global_with_capacity(total: usize) -> Option<usize> {
+    let mut applied = None;
+    GLOBAL.get_or_init(|| {
+        let capacity = env_capacity().unwrap_or(total.max(GLOBAL_SHARDS));
+        applied = Some(capacity);
+        Arc::new(PlanCache::new(capacity, GLOBAL_SHARDS))
+    });
+    applied
+}
+
+/// Format version of the persisted hwm file ([`save_hwm`]).
+const HWM_VERSION: usize = 1;
+
+/// Persist one run's capacity-sizing observation: the distinct-key
+/// high-water marks plus the capacity they recommend. `streamk serve`
+/// writes this at shutdown and resizes from it at the next startup —
+/// closing the "reported but not applied" gap on
+/// [`PlanCacheStats::recommended_capacity`].
+pub fn save_hwm(path: &Path, stats: &PlanCacheStats) -> std::io::Result<()> {
+    let v = obj(vec![
+        ("version", HWM_VERSION.into()),
+        ("hwm_entries", stats.hwm_entries.into()),
+        ("hwm_shard_max", stats.hwm_shard_max.into()),
+        ("shards", stats.shards.into()),
+        // A saturated run clipped its hwm at the bound: the
+        // recommendation is a lower bound, still worth applying.
+        ("saturated", stats.saturated().into()),
+        ("recommended_capacity", stats.recommended_capacity().into()),
+    ]);
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, crate::json::to_string_pretty(&v))
+}
+
+/// Read a persisted hwm file's recommended capacity. `None` when the
+/// file is missing, unparseable, from another format version, or
+/// carries a degenerate capacity — the caller just falls back to the
+/// default sizing (a stale observation must never wedge startup).
+pub fn load_hwm_capacity(path: &Path) -> Option<usize> {
+    let text = std::fs::read_to_string(path).ok()?;
+    let v = crate::json::parse(&text).ok()?;
+    if v.u("version").ok()? != HWM_VERSION {
+        return None;
+    }
+    let cap = v.u("recommended_capacity").ok()?;
+    (cap > 0).then_some(cap)
 }
 
 #[cfg(test)]
@@ -494,8 +562,42 @@ mod tests {
         let built = warm_parallel(&cache, &keys, 3);
         assert_eq!(built, 6);
         assert_eq!(cache.len(), 6);
+        // warmed plans arrive with the lazy descriptor already forced
+        for k in &keys {
+            let p = cache.peek(k.shape, k.block, 4, k.cus).unwrap();
+            assert!(p.exec_built(), "warm must materialize the desc");
+        }
         // second warm is a no-op
         assert_eq!(warm_parallel(&cache, &keys, 3), 0);
+    }
+
+    /// Satellite acceptance: the hwm observation round-trips through
+    /// disk and yields the capacity `streamk serve` auto-applies.
+    #[test]
+    fn hwm_file_round_trips_and_rejects_junk() {
+        let cache = PlanCache::new(64, 2);
+        for i in 1..=6 {
+            cache.get_or_build_key(key(i * 128, 8)).unwrap();
+        }
+        let stats = cache.stats();
+        let path = std::env::temp_dir().join(format!(
+            "streamk-plan-hwm-{}.json",
+            std::process::id()
+        ));
+        save_hwm(&path, &stats).unwrap();
+        assert_eq!(
+            load_hwm_capacity(&path),
+            Some(stats.recommended_capacity()),
+            "round trip must reproduce the recommendation"
+        );
+        // other format versions and junk come back as None, not errors
+        std::fs::write(&path, r#"{"version": 99, "recommended_capacity": 8}"#)
+            .unwrap();
+        assert_eq!(load_hwm_capacity(&path), None);
+        std::fs::write(&path, "not json").unwrap();
+        assert_eq!(load_hwm_capacity(&path), None);
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(load_hwm_capacity(&path), None, "missing file is a miss");
     }
 
     #[test]

@@ -32,7 +32,10 @@
 
 pub mod cache;
 
-pub use cache::{global, warm_parallel, PlanCache, PlanCacheStats};
+pub use cache::{
+    global, init_global_with_capacity, load_hwm_capacity, save_hwm,
+    warm_parallel, PlanCache, PlanCacheStats, CAPACITY_ENV,
+};
 
 use crate::decomp::streamk::ScheduleError;
 use crate::decomp::{
@@ -44,7 +47,7 @@ use crate::gpu_sim::gemm::{
 };
 use crate::gpu_sim::{Device, LaunchStats, SimResult};
 use crate::kernel::ExecDesc;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 /// Fixed-point denominator for quantized per-CU weights: 1/256 relative
 /// to the fastest CU. Coarse enough that jittery Block2Time speed
@@ -146,14 +149,18 @@ fn quantize_weights(ws: &[f64]) -> Arc<[u16]> {
 
 /// A fully materialized, device-independent execution plan: the
 /// flattened schedule plus precomputed launch invariants.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Plan {
     pub key: PlanKey,
     pub flat: FlatSchedule,
-    /// Precomputed per-work-item tile descriptors for the blocked
-    /// microkernel executor ([`crate::kernel`]) — the interpreter
-    /// runtime replays these with zero descriptor work per request.
-    pub exec: ExecDesc,
+    /// Per-work-item tile descriptors for the blocked microkernel
+    /// executor ([`crate::kernel`]), built lazily on first execution
+    /// ([`Self::exec`]): the tuner's pricing-only candidate plans never
+    /// execute data, so eager construction would double their build
+    /// cost and cache footprint for nothing. Once built, the
+    /// interpreter runtime replays it with zero descriptor work per
+    /// request — same steady state as the eager form.
+    exec: OnceLock<ExecDesc>,
     /// MXU systolic-array fill of the (effective) block — constant per
     /// launch, precomputed once.
     pub mxu_fill: f64,
@@ -189,7 +196,6 @@ impl Plan {
         // identical to the schedule it describes.
         let block = sched.block;
         let flat = FlatSchedule::from_schedule(&sched);
-        let exec = ExecDesc::new(key.shape, block, &flat);
         let bpe = key.bytes_per_elem;
 
         let mut cu_flops = Vec::with_capacity(key.cus);
@@ -218,7 +224,7 @@ impl Plan {
         Ok(Self {
             key: PlanKey { block, ..key },
             flat,
-            exec,
+            exec: OnceLock::new(),
             mxu_fill: mxu_fill(block, bpe),
             cu_flops,
             cu_iters,
@@ -226,6 +232,22 @@ impl Plan {
             fixup_bytes,
             flops,
         })
+    }
+
+    /// The executable per-work-item tile descriptors, built on first
+    /// use and cached for the plan's lifetime (thread-safe; concurrent
+    /// first calls race benignly, one result wins). Pricing paths
+    /// ([`Self::time_on`], [`Self::simulate`]) never touch this.
+    pub fn exec(&self) -> &ExecDesc {
+        self.exec.get_or_init(|| {
+            ExecDesc::new(self.key.shape, self.key.block, &self.flat)
+        })
+    }
+
+    /// Whether the descriptor has been materialized yet (tests, cache
+    /// footprint accounting).
+    pub fn exec_built(&self) -> bool {
+        self.exec.get().is_some()
     }
 
     /// Predicted wall time of this plan on `dev` — the allocation-free
@@ -299,6 +321,24 @@ impl Plan {
     /// Workspace bytes for the two-slot partials buffer.
     pub fn partials_bytes(&self) -> usize {
         self.key.cus * 2 * self.key.block.bm * self.key.block.bn * 4
+    }
+}
+
+/// Descriptor materialization is an execution-side cache, not part of a
+/// plan's identity: two plans with equal keys, schedules and launch
+/// invariants are equal whether or not either has built its
+/// [`ExecDesc`] yet (the manual impl the lazy `OnceLock` field needs —
+/// `OnceLock` itself has no `PartialEq`).
+impl PartialEq for Plan {
+    fn eq(&self, other: &Self) -> bool {
+        self.key == other.key
+            && self.flat == other.flat
+            && self.mxu_fill == other.mxu_fill
+            && self.cu_flops == other.cu_flops
+            && self.cu_iters == other.cu_iters
+            && self.bytes == other.bytes
+            && self.fixup_bytes == other.fixup_bytes
+            && self.flops == other.flops
     }
 }
 
@@ -388,9 +428,9 @@ mod tests {
             12,
         ))
         .unwrap();
-        assert_eq!(plan.exec.jobs.len(), plan.flat.num_items());
-        assert_eq!(plan.exec.fixup.len(), plan.flat.split_tiles.len());
-        assert_eq!(plan.exec.block, plan.key.block);
+        assert_eq!(plan.exec().jobs.len(), plan.flat.num_items());
+        assert_eq!(plan.exec().fixup.len(), plan.flat.split_tiles.len());
+        assert_eq!(plan.exec().block, plan.key.block);
         // and they actually execute: quick numeric spot check
         let mut rng = crate::prop::Rng::new(9);
         let a = rng.normal_f32_vec(96 * 100);
@@ -398,7 +438,7 @@ mod tests {
         let got = crate::kernel::execute(
             &a,
             &b,
-            &plan.exec,
+            plan.exec(),
             crate::kernel::Epilogue::None,
         );
         let want = crate::faults::execute_flat_ref(
@@ -409,6 +449,47 @@ mod tests {
             plan.key.block,
         );
         assert_eq!(got, want);
+    }
+
+    /// Satellite acceptance: pricing-only plans never pay for a
+    /// descriptor — it materializes on first execution and is cached.
+    #[test]
+    fn exec_desc_is_lazy_and_prices_without_building() {
+        let cus = 16;
+        let plan = Plan::build(PlanKey::new(
+            GemmShape::new(480, 512, 512),
+            BlockShape::default(),
+            4,
+            cus,
+        ))
+        .unwrap();
+        assert!(!plan.exec_built(), "build must not materialize the desc");
+        let dev = mi200().with_cus(cus);
+        let t = plan.time_on(&dev);
+        assert!(t > 0.0);
+        let sim = plan.simulate(&dev);
+        assert!(sim.total_s > 0.0);
+        assert!(
+            !plan.exec_built(),
+            "pricing and simulation are descriptor-free"
+        );
+        let first = plan.exec() as *const ExecDesc;
+        assert!(plan.exec_built());
+        assert_eq!(
+            first,
+            plan.exec() as *const ExecDesc,
+            "descriptor is built once and cached"
+        );
+        // equality ignores materialization state
+        let fresh = Plan::build(PlanKey::new(
+            GemmShape::new(480, 512, 512),
+            BlockShape::default(),
+            4,
+            cus,
+        ))
+        .unwrap();
+        assert!(!fresh.exec_built());
+        assert_eq!(plan, fresh, "lazy state must not affect plan identity");
     }
 
     #[test]

@@ -307,7 +307,7 @@ fn streamk_matmul(
     let plan = crate::plan::global()
         .get_or_build(shape, BlockShape::default(), 4, cus)
         .ok()?;
-    Some(crate::kernel::execute(a, b, &plan.exec, epilogue))
+    Some(crate::kernel::execute(a, b, plan.exec(), epilogue))
 }
 
 /// jax.nn.gelu(approximate=True): the tanh approximation the MLP graph

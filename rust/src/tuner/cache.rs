@@ -17,7 +17,7 @@
 use super::fingerprint::{DeviceFingerprint, ShapeBucket};
 use super::search::TunedConfig;
 use super::space::PadPolicy;
-use crate::decomp::params::KernelParams;
+use crate::decomp::params::{KernelParams, KC_DEFAULT};
 use crate::decomp::BlockShape;
 use crate::json::{self, obj, Value};
 use std::path::Path;
@@ -313,6 +313,7 @@ impl TuningCache {
                     ("mxu_n", c.params.mxu_n.into()),
                     ("bytes_per_elem", c.params.bytes_per_elem.into()),
                     ("double_buffer", c.params.double_buffer.into()),
+                    ("kc", c.params.kc.into()),
                     ("pad", c.pad.as_str().into()),
                     ("cus", c.cus.into()),
                     ("predicted_s", c.predicted_s.into()),
@@ -360,6 +361,10 @@ impl TuningCache {
             params.mxu_n = e.u("mxu_n").map_err(CacheError::Json)?;
             params.double_buffer =
                 e.b("double_buffer").map_err(CacheError::Json)?;
+            // The KC axis joined in v2's lifetime: entries written
+            // before it carry no "kc" field and mean the default chunk
+            // — a compatible read, not a format break.
+            params.kc = e.u("kc").unwrap_or(KC_DEFAULT);
             let cfg = TunedConfig {
                 params,
                 pad,
@@ -523,6 +528,7 @@ mod tests {
         let mut special = cfg(256, 1.5e-3);
         special.pad = PadPolicy::Physical;
         special.params.double_buffer = false;
+        special.params.kc = 64;
         special.cus = 60;
         special.observed_s = 1.4e-3;
         special.observed_n = 5;
@@ -603,6 +609,30 @@ mod tests {
         .unwrap();
         let err = TuningCache::load(&path, 4).unwrap_err();
         assert!(err.to_string().contains("diagonal"), "{err}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn entry_without_kc_loads_with_the_default() {
+        // v2 files written before the KC axis carry no "kc" field —
+        // they must load (same version, compatible format), meaning
+        // the default chunk length.
+        let path = tmpfile("no-kc");
+        std::fs::write(
+            &path,
+            r#"{"version": 2, "entries": [{
+               "key": "512x512x512@bpe4@test-cu120-gf375-bw1600-lo6.0-io150",
+               "bm": 128, "bn": 128, "bk": 64, "kpack": 8,
+               "mxu_m": 128, "mxu_n": 128, "bytes_per_elem": 4,
+               "double_buffer": true, "pad": "none", "cus": 120,
+               "predicted_s": 0.1, "measured_s": 0.1, "observed_s": 0.0,
+               "observed_n": 0, "created_s": 1, "last_used_s": 1}]}"#,
+        )
+        .unwrap();
+        let mut back = TuningCache::load(&path, 4).unwrap();
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let got = back.get(&b, 4, &fp()).expect("pre-KC entry must load");
+        assert_eq!(got.params.kc, KC_DEFAULT);
         std::fs::remove_file(&path).unwrap();
     }
 

@@ -285,6 +285,20 @@ pub fn tune(
         measure(dev, shape, &default_cand).ok_or(TuneError::NoLegalCandidate)?;
 
     // Phase 2: measured refinement of the top-K under the budget.
+    //
+    // Candidates differing only in `kc` price *and* measure identically
+    // on the simulator (the chunk length is a CPU-executor locality
+    // knob the cost model cannot see), so measurement promotes one
+    // representative per kc-equivalence class — the KC axis must not
+    // crowd distinct block configs out of the top-K budget.
+    let class_of = |c: &Candidate| {
+        (
+            c.params.block.effective(shape),
+            c.params.double_buffer,
+            c.pad,
+            c.cus,
+        )
+    };
     let top_k = opts.top_k.max(1);
     let mut best: Option<TunedConfig> = Some(TunedConfig {
         params: default_cand.params,
@@ -298,10 +312,17 @@ pub fn tune(
     let mut measured = 1; // the default baseline above
     let mut skipped = 0;
     let mut exhausted = false;
-    for (pred, cand) in ranked.iter().take(top_k) {
-        if *cand == default_cand {
-            continue; // already measured as the baseline
+    let mut seen_classes = std::collections::HashSet::new();
+    seen_classes.insert(class_of(&default_cand)); // baseline already measured
+    let mut promoted = 0usize;
+    for (pred, cand) in ranked.iter() {
+        if promoted >= top_k {
+            break;
         }
+        if !seen_classes.insert(class_of(cand)) {
+            continue; // kc twin / default twin: would measure identically
+        }
+        promoted += 1;
         if measured >= opts.budget.max_measurements
             || sw.elapsed() >= opts.budget.max_time
         {

@@ -139,7 +139,13 @@ pub fn enumerate(
         for pad in [PadPolicy::None, PadPolicy::Physical] {
             for &cus in &grid_sizes(tiles, dev_cus) {
                 stats.total += 1;
-                if seen.insert((eff_block, params.double_buffer, pad, cus)) {
+                if seen.insert((
+                    eff_block,
+                    params.double_buffer,
+                    params.kc,
+                    pad,
+                    cus,
+                )) {
                     stats.legal += 1;
                     out.push(Candidate { params, pad, cus });
                 } else {
@@ -199,6 +205,22 @@ mod tests {
         // the big shape has no dedup at all (all effective blocks distinct)
         let (_, big) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
         assert_eq!(big.deduped, 0, "{big:?}");
+    }
+
+    #[test]
+    fn kc_axis_survives_pruning_and_dedup() {
+        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        let kcs: std::collections::BTreeSet<usize> =
+            cands.iter().map(|c| c.params.kc).collect();
+        assert!(
+            kcs.len() >= 2,
+            "the KC axis must survive effective-block dedup: {kcs:?}"
+        );
+        // every surviving chunk length is kpack-aligned and within the
+        // pack budget (the legality predicate ran on all of them)
+        for c in &cands {
+            assert_eq!(c.params.kc % c.params.kpack, 0, "{c:?}");
+        }
     }
 
     #[test]
