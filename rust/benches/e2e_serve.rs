@@ -8,8 +8,10 @@
 //! CI smoke: `cargo bench --bench e2e_serve -- --test` — runs a
 //! repeated-shape GEMM trace through the full coordinator over the
 //! checked-in `examples/minimal_artifacts` manifest and asserts the
-//! plan cache's zero-rebuild hot path: >90% hit rate and zero schedule
-//! builds once warm.
+//! plan cache's zero-rebuild hot path (>90% hit rate and zero schedule
+//! builds once warm), then repeats the stream with structured tracing
+//! sampled on and asserts the exported Chrome trace parses, carries the
+//! full request span chain, and populated finite Block2Time residuals.
 
 use std::path::Path;
 
@@ -99,6 +101,108 @@ fn run_smoke() {
     println!("e2e_serve smoke OK ({:.1}% plan hit rate)", plan.hit_rate() * 100.0);
 }
 
+/// Tracing + Block2Time smoke: serve a short GEMM stream with tracing
+/// sampled on, assert the exported Chrome trace file re-parses through
+/// the in-tree JSON parser with the full request span chain present,
+/// and that measured residual stats landed in the metrics snapshot.
+fn run_traced_smoke() {
+    let _guard = streamk::trace::test_lock();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("minimal_artifacts");
+    let manifest = Manifest::load(&dir).expect("checked-in minimal manifest");
+    let (engine, _join) = spawn_engine(manifest).expect("engine");
+    let settings = Settings {
+        workers: 2,
+        tune_on_miss: false,
+        ..Settings::default()
+    };
+
+    streamk::trace::set_sample_every(1);
+    streamk::trace::set_enabled(true);
+    let _ = streamk::trace::drain(); // start from an empty ring
+
+    let coord = Coordinator::start(engine, &settings);
+    let handle = coord.handle.clone();
+    for _ in 0..8 {
+        let w = handle.submit_gemm(
+            128,
+            128,
+            128,
+            vec![1.0; 128 * 128],
+            vec![1.0; 128 * 128],
+        );
+        let resp = w.recv().expect("gemm reply");
+        assert!(resp.result.is_ok(), "traced gemm must succeed");
+    }
+    let snap = handle.metrics().snapshot();
+    coord.shutdown();
+    streamk::trace::set_enabled(false);
+
+    // Block2Time residuals: every completed GEMM paired the scheduler's
+    // prediction with its measured execution span.
+    assert!(
+        !snap.residuals.is_empty(),
+        "residual stats must populate under load"
+    );
+    for r in &snap.residuals {
+        assert!(r.count > 0, "{}: empty residual bucket", r.bucket);
+        assert!(
+            r.ewma_bias.is_finite()
+                && r.mean_ape.is_finite()
+                && r.p50_ape.is_finite()
+                && r.p95_ape.is_finite(),
+            "{}: residual stats must be finite",
+            r.bucket
+        );
+    }
+
+    let (events, threads, _dropped) = streamk::trace::drain();
+    for want in [
+        "request.gemm",
+        "coord.place",
+        "fleet.place",
+        "coord.tuner",
+        "coord.route",
+        "coord.execute",
+        "engine.execute",
+        "plan.lookup",
+        "kernel.execute",
+    ] {
+        assert!(
+            events.iter().any(|e| e.name == want),
+            "request span chain is missing {want:?}"
+        );
+    }
+    assert!(
+        events
+            .iter()
+            .any(|e| e.name.starts_with("kernel.") && e.name != "kernel.execute"),
+        "dispatcher pass spans (accumulate/store/fixup) must record"
+    );
+
+    // Export → file → re-parse through the in-tree JSON parser.
+    let doc = streamk::trace::chrome_trace_json(&events, &threads);
+    let path = std::env::temp_dir().join("streamk_e2e_trace.json");
+    std::fs::write(&path, streamk::json::to_string_pretty(&doc))
+        .expect("write trace file");
+    let text = std::fs::read_to_string(&path).expect("read trace back");
+    let parsed = streamk::json::parse(&text).expect("trace file must parse");
+    let records = parsed.arr("traceEvents").expect("traceEvents array");
+    assert!(
+        records.len() > events.len(),
+        "trace file must hold every span plus thread-name metadata"
+    );
+    let _ = std::fs::remove_file(&path);
+    println!(
+        "traced smoke OK: {} spans across {} threads, {} residual bucket(s)",
+        events.len(),
+        threads.len(),
+        snap.residuals.len()
+    );
+}
+
 fn run_stream(settings: &Settings, requests: usize) -> (f64, u64, f64, f64, f64) {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let manifest = Manifest::load(&dir).expect("run `make artifacts`");
@@ -145,6 +249,7 @@ fn main() {
     // unknown flag (harness = false).
     if std::env::args().skip(1).any(|a| a == "--test") {
         run_smoke();
+        run_traced_smoke();
         return;
     }
     println!("== 1. batching policy sweep ({REQUESTS} MLP requests) ==\n");

@@ -66,7 +66,7 @@ fn main() {
                         &b.data,
                         &desc,
                         Epilogue::None,
-                        &ExecOpts { backend, direct_store, threads },
+                        &ExecOpts { backend, direct_store, threads, kc: None },
                     );
                     let identical = got
                         .iter()
@@ -164,6 +164,7 @@ fn main() {
             backend: LaneBackend::Scalar,
             direct_store: false,
             threads: par_threads,
+            kc: None,
         };
         let baseline = bench(1, iters, || {
             keep(execute_opts(&a.data, &b.data, &desc, Epilogue::None, &pr4));
@@ -172,6 +173,7 @@ fn main() {
             backend: active,
             direct_store: true,
             threads: 1,
+            kc: None,
         };
         let serial = bench(1, iters, || {
             keep(execute_opts(&a.data, &b.data, &desc, Epilogue::None, &new1));
@@ -222,6 +224,57 @@ fn main() {
                  PR-4 blocked baseline: {best_vs_pr4:.2}x"
             );
         }
+    }
+
+    println!("\n== 4. tracing overhead gate (disabled path) ==\n");
+    {
+        assert!(
+            !streamk::trace::enabled(),
+            "tracing must be off for the overhead gate"
+        );
+        let (m, n, k) = (480usize, 512usize, 512usize);
+        let mut rng = Rng::new(9);
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        let shape = GemmShape::new(m, n, k);
+        let sched = build_schedule(shape, BlockShape::default(), 120).unwrap();
+        let flat = FlatSchedule::from_schedule(&sched);
+        let desc = ExecDesc::new(shape, sched.block, &flat);
+        let opts = ExecOpts {
+            backend: active,
+            direct_store: true,
+            threads: par_threads,
+            kc: None,
+        };
+        let dispatch = bench(1, if quick { 3 } else { 5 }, || {
+            keep(execute_opts(&a.data, &b.data, &desc, Epilogue::None, &opts));
+        });
+        // Cost of one disabled span hook: a single relaxed atomic load.
+        const SPANS_PER_SAMPLE: usize = 1_000_000;
+        let hook = bench(1, 3, || {
+            for _ in 0..SPANS_PER_SAMPLE {
+                drop(keep(streamk::trace::span("bench.noop")));
+            }
+        });
+        let per_span_s = hook.median / SPANS_PER_SAMPLE as f64;
+        // Upper bound on hooks one dispatch executes: one accumulate +
+        // one store span per job, the pass/window/fixup spans on top.
+        let hooks = desc.jobs.len() * 3 + 64;
+        let overhead = per_span_s * hooks as f64 / dispatch.median.max(1e-12);
+        println!(
+            "disabled span: {:.1} ns | {} hooks/dispatch (bound) | \
+             dispatch {:.2} ms | overhead {:.4}%",
+            per_span_s * 1e9,
+            hooks,
+            dispatch.median * 1e3,
+            overhead * 100.0,
+        );
+        assert!(
+            overhead <= 0.01,
+            "disabled tracing must stay within 1% of dispatch time: \
+             {:.4}%",
+            overhead * 100.0
+        );
     }
 
     println!("\nkernel_exec OK");

@@ -41,6 +41,10 @@ impl Batcher {
             Some(req) => req,
             None => rx.recv().ok()?,
         };
+        // Span opens after the blocking recv: it measures the batching
+        // window (coalescing time), not idle queue waiting.
+        let _collect =
+            crate::trace::span1("batch.collect", "first", first.id);
         let mut rows = first.rows;
         let mut requests = vec![first];
         let sw = Stopwatch::start();

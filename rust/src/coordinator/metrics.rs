@@ -47,18 +47,30 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from the bucket upper bounds.
+    /// Approximate quantile, interpolated linearly within the winning
+    /// log₂ bucket (assumes a uniform in-bucket distribution). The old
+    /// bucket-upper-bound answer overstated p50 by up to 2× — on
+    /// uniform 1..=1000µs samples it returned 512 for a true p50 of
+    /// 500; interpolation lands within a few percent.
     pub fn quantile_us(&self, q: f64) -> f64 {
         if self.count == 0 {
             return 0.0;
         }
-        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
-        let mut seen = 0;
+        let target = (q.clamp(0.0, 1.0) * self.count as f64)
+            .ceil()
+            .max(1.0) as u64;
+        let mut seen = 0u64;
         for (i, &c) in self.buckets.iter().enumerate() {
-            seen += c;
-            if seen >= target.max(1) {
-                return (1u64 << (i + 1)) as f64;
+            if c == 0 {
+                continue;
             }
+            if seen + c >= target {
+                let lo = (1u64 << i) as f64;
+                let hi = (1u64 << (i + 1)) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return lo + frac * (hi - lo);
+            }
+            seen += c;
         }
         self.max_us
     }
@@ -79,6 +91,9 @@ impl Histogram {
 #[derive(Debug, Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Block2Time prediction residuals per shape bucket — separate lock
+    /// so residual recording never contends with counter updates.
+    residuals: Mutex<crate::trace::ResidualTracker>,
 }
 
 #[derive(Debug, Default)]
@@ -135,6 +150,9 @@ pub struct MetricsSnapshot {
     pub execute: Histogram,
     pub e2e: Histogram,
     pub tune: Histogram,
+    /// Block2Time residuals (predicted vs. measured latency) per shape
+    /// bucket — empty until the first placement carries a prediction.
+    pub residuals: Vec<crate::trace::ResidualSnapshot>,
     pub elapsed_s: f64,
     pub throughput_rps: f64,
     pub tflops: f64,
@@ -205,6 +223,22 @@ impl Metrics {
         self.inner.lock().expect("metrics").tune.record_secs(secs);
     }
 
+    /// Pair a Block2Time prediction with the measured execute latency.
+    /// No-op when the placement carried no prediction (fallback path).
+    /// Returns the absolute percentage error when recorded.
+    pub fn on_residual(
+        &self,
+        bucket: &str,
+        predicted_s: Option<f64>,
+        measured_s: f64,
+    ) -> Option<f64> {
+        let predicted_s = predicted_s?;
+        self.residuals
+            .lock()
+            .expect("metrics residuals")
+            .observe(bucket, predicted_s, measured_s)
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let m = self.inner.lock().expect("metrics");
         let elapsed_s = m
@@ -233,6 +267,11 @@ impl Metrics {
             execute: m.execute.clone(),
             e2e: m.e2e.clone(),
             tune: m.tune.clone(),
+            residuals: self
+                .residuals
+                .lock()
+                .expect("metrics residuals")
+                .snapshot(),
             elapsed_s,
             throughput_rps: if elapsed_s > 0.0 {
                 m.completed as f64 / elapsed_s
@@ -285,6 +324,12 @@ impl MetricsSnapshot {
             ("execute", self.execute.to_json()),
             ("e2e", self.e2e.to_json()),
             ("tune", self.tune.to_json()),
+            (
+                "residuals",
+                Value::Arr(
+                    self.residuals.iter().map(|r| r.to_json()).collect(),
+                ),
+            ),
         ])
     }
 }
@@ -305,6 +350,33 @@ mod tests {
         let p99 = h.quantile_us(0.99);
         assert!(p50 <= p95 && p95 <= p99, "{p50} {p95} {p99}");
         assert!((h.mean_us() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_interpolate_within_buckets() {
+        // 100 identical 3µs samples land in bucket [2,4): every
+        // quantile interpolates inside that bucket instead of snapping
+        // to the upper bound 4.
+        let mut h = Histogram::default();
+        for _ in 0..100 {
+            h.record_secs(3e-6);
+        }
+        let p50 = h.quantile_us(0.5);
+        assert!((p50 - 3.0).abs() < 1e-9, "p50 {p50}");
+        assert!(h.quantile_us(0.95) < 4.0);
+        // uniform 1..=1000µs: exact p50 = 500, p90 = 900; the old
+        // upper-bound answer was 512 / 1024
+        let mut u = Histogram::default();
+        for i in 1..=1000 {
+            u.record_secs(i as f64 * 1e-6);
+        }
+        let p50 = u.quantile_us(0.5);
+        let p90 = u.quantile_us(0.9);
+        assert!((p50 - 500.0).abs() / 500.0 < 0.05, "p50 {p50}");
+        assert!((p90 - 900.0).abs() / 900.0 < 0.10, "p90 {p90}");
+        // extremes stay sane
+        assert!(u.quantile_us(0.0) >= 1.0);
+        assert!(u.quantile_us(1.0) <= 1024.0);
     }
 
     #[test]
@@ -360,6 +432,33 @@ mod tests {
         assert_eq!(arr.as_arr().unwrap().len(), 3);
         assert_eq!(j.u("placement_fallbacks").unwrap(), 1);
         assert_eq!(j.u("drift_revalidations").unwrap(), 1);
+    }
+
+    #[test]
+    fn residual_accounting_surfaces_in_snapshot_json() {
+        let m = Metrics::new();
+        // fallback placements carry no prediction: dropped
+        assert!(m.on_residual("128x128x128", None, 1e-3).is_none());
+        assert!(m.snapshot().residuals.is_empty());
+        for _ in 0..20 {
+            let ape = m.on_residual("128x128x128", Some(1.2e-3), 1e-3);
+            assert!((ape.unwrap() - 0.2).abs() < 1e-12);
+        }
+        m.on_residual("256x256x256", Some(0.9e-3), 1e-3);
+        let s = m.snapshot();
+        assert_eq!(s.residuals.len(), 2);
+        let r = &s.residuals[0];
+        assert_eq!(r.bucket, "128x128x128");
+        assert_eq!(r.count, 20);
+        assert!(r.ewma_bias > 0.19 && r.ewma_bias < 0.21);
+        assert!(r.p95_ape.is_finite() && r.p95_ape > 0.0);
+        let j = s.to_json();
+        let arr = j.arr("residuals").unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].s("bucket").unwrap(), "128x128x128");
+        assert!(arr[0].f("ewma_bias").unwrap() > 0.0);
+        assert!(arr[1].f("ewma_bias").unwrap() < 0.0);
+        assert!(arr[0].f("p95_ape").unwrap().is_finite());
     }
 
     #[test]

@@ -21,9 +21,10 @@ use crate::exec::{bounded, CancelToken, Receiver, Sender, Stopwatch};
 use crate::fleet::Fleet;
 use crate::gpu_sim::{Device, DeviceKind};
 use crate::runtime::EngineHandle;
+use crate::trace;
 use crate::tuner::{
-    Budget, DeviceFingerprint, Observation, StalenessPolicy, TuneOptions,
-    Tuner,
+    Budget, DeviceFingerprint, Observation, ShapeBucket, StalenessPolicy,
+    TuneOptions, Tuner,
 };
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -390,17 +391,29 @@ fn handle_gemm(
 ) {
     let GemmRequest { id, m, n, k, a, b, reply } = req;
     let shape = GemmShape::new(m, n, k);
+    // Sampled request-lifecycle tracing: every Nth request (see
+    // `trace::set_sample_every`) records the admit→execute span chain.
+    // Kernel/engine spans below this level follow the global gate alone.
+    let sampled = trace::request_sampled();
+    let _req_span =
+        trace::span2_if(sampled, "request.gemm", "id", id, "m", m as u64);
     // Fleet placement: lowest Block2Time-predicted completion time
     // given predicted work in flight; least-loaded fallback. Never
     // blocks, never panics on poisoned predictions.
-    let placement = fleet.place_gemm(shape);
+    let placement = {
+        let _s = trace::span_if(sampled, "coord.place");
+        fleet.place_gemm(shape)
+    };
     let device = placement.device;
     let fdev = fleet.device(device);
     metrics.on_place(device, placement.fallback);
     // Consult the owning device's tuning cache for this shape's
     // bucket. A hit steers routing (tuned pad policy first); a miss
     // enqueues a background tune without ever blocking the request.
-    let tuned = if shape.is_degenerate() { None } else { fdev.tuner.lookup(shape) };
+    let tuned = {
+        let _s = trace::span_if(sampled, "coord.tuner");
+        if shape.is_degenerate() { None } else { fdev.tuner.lookup(shape) }
+    };
     let pad_override = match &tuned {
         Some(cfg) => {
             metrics.on_tuner_hit();
@@ -415,27 +428,62 @@ fn handle_gemm(
             None
         }
     };
+    // Tuned-KC serving wiring: a cache hit's K-chunk rides the request
+    // into the engine so the kernel packs at the tuned chunk length
+    // (bit-neutral — `kc` only changes packing locality).
+    let kc_hint = tuned.as_ref().map(|cfg| cfg.params.kc);
     let engine = &engines[device];
-    let routed = router.route_gemm_fleet(
-        engine.manifest(),
-        m,
-        n,
-        k,
-        pad_override,
-        fdev.device().num_cus,
-    );
+    let routed = {
+        let _s = trace::span_if(sampled, "coord.route");
+        router.route_gemm_fleet(
+            engine.manifest(),
+            m,
+            n,
+            k,
+            pad_override,
+            fdev.device().num_cus,
+        )
+    };
     match routed {
         Ok(artifact) => {
+            let exec_span = trace::span2_if(
+                sampled,
+                "coord.execute",
+                "device",
+                device as u64,
+                "kc",
+                kc_hint.unwrap_or(0) as u64,
+            );
             let sw = Stopwatch::start();
-            match engine.run_f32(&artifact, vec![Arc::new(a), Arc::new(b)]) {
+            match engine.run_f32_kc(
+                &artifact,
+                vec![Arc::new(a), Arc::new(b)],
+                kc_hint,
+            ) {
                 Ok((mut outs, stats)) => {
                     let execute_s = sw.elapsed_secs();
+                    drop(exec_span);
                     fleet.complete(&placement);
+                    // Block2Time residual accounting: pair the
+                    // scheduler's prediction with the measured latency,
+                    // per shape bucket. The residual also drives the
+                    // drift loop below, so mis-predictions re-tune even
+                    // when the bucket has no cache entry yet.
+                    metrics.on_residual(
+                        &ShapeBucket::of(shape).key(),
+                        placement.predicted_s,
+                        execute_s,
+                    );
                     // Online Block2Time loop: fold the measured latency
                     // into the owning device's cache; drift past policy
                     // schedules a background re-tune.
-                    if let Observation::Drifted { .. } =
-                        fleet.observe(device, shape, execute_s)
+                    if let Observation::Drifted { .. } = fleet
+                        .observe_residual(
+                            device,
+                            shape,
+                            placement.predicted_s,
+                            execute_s,
+                        )
                     {
                         metrics.on_drift_revalidate();
                         let _ = tune_tx
@@ -558,6 +606,13 @@ mod tests {
         assert_eq!(snap.tuner_hits, 0);
         // single-device fleet: everything placed on device 0
         assert_eq!(snap.placements, vec![1]);
+        // residual accounting: the plan-backed placement prediction was
+        // paired with the measured latency under the shape's bucket
+        assert_eq!(snap.residuals.len(), 1, "{:?}", snap.residuals);
+        assert_eq!(snap.residuals[0].bucket, "64x64x64");
+        assert_eq!(snap.residuals[0].count, 1);
+        assert!(snap.residuals[0].ewma_bias.is_finite());
+        assert!(snap.residuals[0].p95_ape.is_finite());
 
         // the background worker tunes the bucket; wait for it
         let sw = Stopwatch::start();
@@ -843,6 +898,17 @@ fn mlp_batch_loop(
 ) {
     let params = mlp_params();
     while let Some(plan) = batcher.next_batch(&rx) {
+        // One sampling draw covers the whole batch: batches are the
+        // request unit on this path.
+        let sampled = trace::request_sampled();
+        let _batch_span = trace::span2_if(
+            sampled,
+            "request.mlp_batch",
+            "rows",
+            plan.total_rows as u64,
+            "requests",
+            plan.requests.len() as u64,
+        );
         let sw = Stopwatch::start();
         metrics.on_batch(plan.total_rows);
         // Place the whole batch as one unit, priced as its equivalent
@@ -877,28 +943,53 @@ fn mlp_batch_loop(
                 continue;
             }
         };
-        let (x, offsets) = plan.pack(params.d_in, batch);
-        let run = engine.run_f32(
-            &artifact,
-            vec![
-                Arc::new(x),
-                params.w1.clone(),
-                params.b1.clone(),
-                params.w2.clone(),
-                params.b2.clone(),
-            ],
-        );
+        let (x, offsets) = {
+            let _s = trace::span_if(sampled, "batch.pack");
+            plan.pack(params.d_in, batch)
+        };
+        let run = {
+            let _s = trace::span2_if(
+                sampled,
+                "batch.execute",
+                "device",
+                placement.device as u64,
+                "batch",
+                batch as u64,
+            );
+            engine.run_f32(
+                &artifact,
+                vec![
+                    Arc::new(x),
+                    params.w1.clone(),
+                    params.b1.clone(),
+                    params.w2.clone(),
+                    params.b2.clone(),
+                ],
+            )
+        };
         let execute_s = sw.elapsed_secs();
         fleet.complete(&placement);
         match run {
             Ok((outs, stats)) => {
+                // Residual accounting for the batch's GEMM-equivalent
+                // bucket, same as the GEMM path.
+                metrics.on_residual(
+                    &ShapeBucket::of(eq_shape).key(),
+                    placement.predicted_s,
+                    execute_s,
+                );
                 // Feed the feedback loop with the batch's GEMM-equivalent
                 // bucket. The batcher participates in the same
                 // tune-on-miss / drift-revalidation queue as the GEMM
                 // path: an untuned MLP bucket schedules a background
                 // tune so future placements of that batch size are
                 // priced from a real entry, and a drifted one re-tunes.
-                match fleet.observe(placement.device, eq_shape, execute_s) {
+                match fleet.observe_residual(
+                    placement.device,
+                    eq_shape,
+                    placement.predicted_s,
+                    execute_s,
+                ) {
                     Observation::NoEntry => {
                         // best-effort; shed on full
                         let _ = tune_tx.try_send(TuneJob::Miss {
@@ -915,7 +1006,10 @@ fn mlp_batch_loop(
                     }
                     Observation::Updated { .. } | Observation::Rejected => {}
                 }
-                let split = plan.unpack(&outs[0], params.d_out, &offsets);
+                let split = {
+                    let _s = trace::span_if(sampled, "batch.unpack");
+                    plan.unpack(&outs[0], params.d_out, &offsets)
+                };
                 for (req, y) in plan.requests.into_iter().zip(split) {
                     metrics.on_complete(0.0, execute_s, stats.flops);
                     req.reply.send(MlpResponse {

@@ -99,6 +99,13 @@ pub fn execute_schedule(
     assert_eq!(a.rows, sched.shape.m);
     assert_eq!(b.cols, sched.shape.n);
     assert_eq!(a.cols, sched.shape.k);
+    let _s = crate::trace::span2(
+        "replay.execute_schedule",
+        "m",
+        sched.shape.m as u64,
+        "n",
+        sched.shape.n as u64,
+    );
     let flat = FlatSchedule::from_schedule(sched);
     let data = execute_flat(&a.data, &b.data, sched.shape, &flat, sched.block);
     Matrix { rows: a.rows, cols: b.cols, data }
@@ -242,6 +249,8 @@ pub fn execute_flat(
     flat: &FlatSchedule,
     blk: BlockShape,
 ) -> Vec<f32> {
+    let _s =
+        crate::trace::span2("replay.execute_flat", "cus", flat.p as u64, "k", shape.k as u64);
     kernel::execute_flat_schedule(a, b, shape, flat, blk, kernel::Epilogue::None)
 }
 

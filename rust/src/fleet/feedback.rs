@@ -29,6 +29,38 @@ impl Fleet {
         self.device(idx).tuner.observe(shape, measured_s)
     }
 
+    /// [`Fleet::observe`] driven by the *measured* Block2Time residual:
+    /// alongside folding `measured_s` into the cache, compare it against
+    /// the prediction the scheduler actually placed with
+    /// (`predicted_s`, which may come from the plan-backed prior when
+    /// the bucket is untuned). A cold bucket whose prior is off by more
+    /// than the drift policy now reports [`Observation::Drifted`] too —
+    /// previously such requests came back [`Observation::NoEntry`] and
+    /// the mis-prediction persisted until a cache entry existed.
+    pub fn observe_residual(
+        &self,
+        idx: usize,
+        shape: GemmShape,
+        predicted_s: Option<f64>,
+        measured_s: f64,
+    ) -> Observation {
+        let obs = self.observe(idx, shape, measured_s);
+        if let (Observation::NoEntry, Some(pred)) = (&obs, predicted_s) {
+            if measured_s.is_finite()
+                && measured_s > 0.0
+                && pred.is_finite()
+                && pred > 0.0
+            {
+                let drift = (pred - measured_s).abs() / measured_s;
+                let policy = self.device(idx).tuner.staleness();
+                if drift.is_finite() && drift > policy.max_drift {
+                    return Observation::Drifted { drift };
+                }
+            }
+        }
+        obs
+    }
+
     /// Apply the staleness policy (age-out + drift flags) to every
     /// device's cache; one report per device, in registry order.
     pub fn sweep_stale(&self) -> Vec<SweepReport> {
@@ -79,6 +111,34 @@ mod tests {
             f.observe(1, GemmShape::new(480, 512, 512), 1e-3),
             Observation::NoEntry
         );
+    }
+
+    #[test]
+    fn measured_residual_drives_drift_even_without_a_cache_entry() {
+        let f = fleet();
+        let shape = GemmShape::new(480, 512, 512);
+        // Cold bucket + a scheduler prediction 10× off the measurement:
+        // the residual path must flag drift where plain observe cannot.
+        let measured = 1e-3;
+        let obs = f.observe_residual(0, shape, Some(10.0 * measured), measured);
+        assert!(
+            matches!(obs, Observation::Drifted { drift } if drift > 5.0),
+            "10x residual on a cold bucket must report Drifted, got {obs:?}"
+        );
+        // A prediction within policy stays NoEntry (nothing to re-tune
+        // beyond the miss-tune already queued by the serving path).
+        let obs = f.observe_residual(0, shape, Some(1.1 * measured), measured);
+        assert_eq!(obs, Observation::NoEntry);
+        // No prediction at all (fallback placement) degrades to observe.
+        let obs = f.observe_residual(0, shape, None, measured);
+        assert_eq!(obs, Observation::NoEntry);
+        // With a live entry the tuner's own drift logic owns the verdict.
+        f.device(0).tuner.tune_and_insert(shape).unwrap();
+        let pred = f.device(0).tuner.peek(shape).unwrap().predicted_s;
+        assert!(matches!(
+            f.observe_residual(0, shape, Some(pred), pred),
+            Observation::Updated { .. }
+        ));
     }
 
     #[test]

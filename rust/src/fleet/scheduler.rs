@@ -99,6 +99,8 @@ impl Fleet {
     /// fallback. Always returns a valid device index; never panics on
     /// poisoned predictions.
     pub fn place_gemm(&self, shape: GemmShape) -> Placement {
+        let _s =
+            crate::trace::span1("fleet.place", "devices", self.len() as u64);
         let mut best: Option<(f64, usize, f64)> = None; // (score, idx, pred)
         for idx in 0..self.len() {
             let Some(pred) = self.predict_exec(idx, shape) else {

@@ -18,6 +18,7 @@ use crate::decomp::params::KernelParams;
 use crate::decomp::{BlockShape, GemmShape};
 use crate::exec::pool_map;
 use crate::prop::Rng;
+use crate::trace::{ResidualSnapshot, ResidualTracker};
 use crate::tuner::{
     measure, Candidate, Observation, PadPolicy, ShapeBucket, Tuner,
 };
@@ -104,6 +105,10 @@ pub struct SimReport {
     pub revalidations: u64,
     /// Per-(device, bucket) drift trajectories (feedback runs only).
     pub drift: Vec<DriftSeries>,
+    /// Block2Time residual stats per shape bucket: the scheduler's
+    /// placement prediction vs. the measured simulator time. Empty
+    /// under round-robin (no prediction is made).
+    pub residuals: Vec<ResidualSnapshot>,
 }
 
 impl SimReport {
@@ -185,6 +190,7 @@ pub fn run_trace(
     let mut revalidations = 0u64;
     let mut drift_map: BTreeMap<(usize, String), Vec<f64>> = BTreeMap::new();
     let mut placements: Vec<Placement> = Vec::with_capacity(trace.len());
+    let mut residuals = ResidualTracker::new();
 
     for (i, &shape) in trace.iter().enumerate() {
         let placement = match policy {
@@ -207,6 +213,9 @@ pub fn run_trace(
         let Some(exec_s) = measure(fdev.device(), shape, &cand) else {
             continue; // unbuildable schedule: request dropped
         };
+        if let Some(pred) = placement.predicted_s {
+            residuals.observe(&ShapeBucket::of(shape).key(), pred, exec_s);
+        }
         busy[idx] += exec_s;
         counts[idx] += 1;
         total_flops += shape.flops() as f64;
@@ -262,6 +271,7 @@ pub fn run_trace(
                 drifts,
             })
             .collect(),
+        residuals: residuals.snapshot(),
     }
 }
 
@@ -537,6 +547,15 @@ mod tests {
         // every device participated under both policies
         assert!(b2t.device_requests.iter().all(|&c| c > 0));
         assert!(rr.device_requests.iter().all(|&c| c > 0));
+        // residual accounting: Block2Time predicted every placement, so
+        // every bucket in the mix has finite stats; round-robin made no
+        // predictions and must report none
+        assert!(!b2t.residuals.is_empty());
+        assert!(b2t
+            .residuals
+            .iter()
+            .all(|r| r.count > 0 && r.ewma_bias.is_finite() && r.p95_ape.is_finite()));
+        assert!(rr.residuals.is_empty());
     }
 
     #[test]

@@ -55,6 +55,7 @@ use super::pack::{pack_a, pack_b, PackBuf};
 use super::{default_threads, Epilogue};
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape};
 use crate::exec::scope_map_with;
+use crate::trace;
 
 /// Where one work item's accumulator goes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -288,6 +289,12 @@ pub struct ExecOpts {
     /// (`false` ⇒ every store goes through the windowed ordered path).
     pub direct_store: bool,
     pub threads: usize,
+    /// Per-call K-chunk override — the serving path threads the
+    /// tuner-cached `kc` here so a shared (plan-cache) descriptor can
+    /// execute at a tuned chunk length without being cloned. `None`
+    /// uses [`ExecDesc::kc`]. Chunk length never changes output bits
+    /// (`kc_chunking_never_changes_bits`).
+    pub kc: Option<usize>,
 }
 
 impl ExecOpts {
@@ -297,6 +304,7 @@ impl ExecOpts {
             backend: lane::active(),
             direct_store: true,
             threads: default_threads(macs),
+            kc: None,
         }
     }
 }
@@ -368,6 +376,7 @@ pub fn execute_opts(
     let (bm, bn) = (desc.block.bm, desc.block.bn);
     let threads = opts.threads.max(1);
     let backend = opts.backend;
+    let kc = opts.kc.unwrap_or(desc.kc).max(1);
     let mut c = vec![0.0f32; m * n];
     // Partial-segment accumulators (the reference's two-slot-per-CU
     // buffer), indexed by original job id, kept alive until the fixup
@@ -381,14 +390,27 @@ pub fn execute_opts(
         let owned: Vec<usize> =
             (0..desc.jobs.len()).filter(|&i| desc.jobs[i].owned).collect();
         if !owned.is_empty() {
+            let _sp = trace::span2(
+                "kernel.direct_store",
+                "jobs",
+                owned.len() as u64,
+                "threads",
+                threads as u64,
+            );
             let cbase = SyncPtr(c.as_mut_ptr());
-            let kc = desc.kc;
             scope_map_with(
                 threads,
                 &owned,
                 OwnedState::default,
                 move |st, _, &ji| {
                     let job = &desc.jobs[ji];
+                    let _sj = trace::span2(
+                        "kernel.accumulate",
+                        "tile",
+                        job.tile as u64,
+                        "job",
+                        ji as u64,
+                    );
                     st.acc.clear();
                     st.acc.resize(bm * bn, 0.0);
                     accumulate_job(
@@ -417,27 +439,52 @@ pub fn execute_opts(
     let mut start = 0;
     while start < rest.len() {
         let end = (start + WINDOW).min(rest.len());
-        let accs: Vec<Vec<f32>> = scope_map_with(
-            threads,
-            &rest[start..end],
-            PackBuf::new,
-            |buf, _, &ji| {
-                let mut acc = vec![0.0f32; bm * bn];
-                accumulate_job(
-                    a,
-                    b,
-                    k,
-                    n,
-                    bm,
-                    bn,
-                    desc.kc,
-                    backend,
-                    &desc.jobs[ji],
-                    buf,
-                    &mut acc,
-                );
-                acc
-            },
+        let accs: Vec<Vec<f32>> = {
+            let _sp = trace::span2(
+                "kernel.windowed",
+                "start",
+                start as u64,
+                "len",
+                (end - start) as u64,
+            );
+            scope_map_with(
+                threads,
+                &rest[start..end],
+                PackBuf::new,
+                |buf, _, &ji| {
+                    let job = &desc.jobs[ji];
+                    // partial segments carry their CU id; plain stores
+                    // are identified by job index
+                    let _sj = match job.dest {
+                        Dest::Partial { cu, .. } => trace::span2(
+                            "kernel.accumulate",
+                            "tile",
+                            job.tile as u64,
+                            "cu",
+                            cu as u64,
+                        ),
+                        Dest::Store => trace::span2(
+                            "kernel.accumulate",
+                            "tile",
+                            job.tile as u64,
+                            "job",
+                            ji as u64,
+                        ),
+                    };
+                    let mut acc = vec![0.0f32; bm * bn];
+                    accumulate_job(
+                        a, b, k, n, bm, bn, kc, backend, job, buf, &mut acc,
+                    );
+                    acc
+                },
+            )
+        };
+        let _ss = trace::span2(
+            "kernel.store",
+            "start",
+            start as u64,
+            "len",
+            (end - start) as u64,
         );
         for (off, acc) in accs.into_iter().enumerate() {
             let ji = rest[start + off];
@@ -451,10 +498,18 @@ pub fn execute_opts(
                 }
             }
         }
+        drop(_ss);
         start = end;
     }
 
     // Pass 3: fixup-ordered reduction of partial K segments.
+    let _sf = trace::span2(
+        "kernel.fixup",
+        "tiles",
+        desc.fixup.len() as u64,
+        "contributors",
+        desc.sources.len() as u64,
+    );
     let mut facc = vec![0.0f32; bm * bn];
     for ft in &desc.fixup {
         facc.iter_mut().for_each(|v| *v = 0.0);
@@ -495,8 +550,17 @@ fn accumulate_job(
     let mut kcur = job.kc0;
     while kcur < job.kc1 {
         let kv = kc.max(1).min(job.kc1 - kcur);
-        pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
-        pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+        {
+            let _sp = trace::span2(
+                "kernel.pack",
+                "tile",
+                job.tile as u64,
+                "kv",
+                kv as u64,
+            );
+            pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
+            pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+        }
         block_update_with(backend, &buf.a, &buf.b, bm, bn, kv, acc);
         kcur += kv;
     }
@@ -781,7 +845,7 @@ mod tests {
                         &b.data,
                         &desc,
                         Epilogue::None,
-                        &ExecOpts { backend, direct_store, threads },
+                        &ExecOpts { backend, direct_store, threads, kc: None },
                     );
                     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                         if g.to_bits() != w.to_bits() {
@@ -965,6 +1029,19 @@ mod tests {
             let desc = ExecDesc::new(shape, block, &flat).with_kc(kc);
             let got = execute(&a.data, &b.data, &desc, Epilogue::None);
             bits_equal(&got, &want, &format!("kc={kc}"));
+        }
+        // the per-call override (the serving path's tuned-KC hook) is
+        // equivalent to baking the same kc into the descriptor
+        let desc = ExecDesc::new(shape, block, &flat);
+        for kc in [1usize, 7, 256] {
+            let got = execute_opts(
+                &a.data,
+                &b.data,
+                &desc,
+                Epilogue::None,
+                &ExecOpts { kc: Some(kc), ..ExecOpts::auto(desc.macs) },
+            );
+            bits_equal(&got, &want, &format!("opts kc={kc}"));
         }
     }
 

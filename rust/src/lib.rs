@@ -15,8 +15,9 @@
 //!   functional backend runs those schedules over host data), a
 //!   legality-pruned autotuner with a persistent per-shape config cache
 //!   ([`tuner`]), a heterogeneous multi-device serving layer ([`fleet`]),
-//!   a PJRT artifact runtime ([`runtime`]), and the serving coordinator
-//!   ([`coordinator`]).
+//!   a PJRT artifact runtime ([`runtime`]), the serving coordinator
+//!   ([`coordinator`]), and a structured tracing + Block2Time residual
+//!   accounting layer ([`trace`]).
 //!
 //! Python never runs on the request path: `make artifacts` lowers everything
 //! once; the rust binary is self-contained afterwards.
@@ -36,4 +37,5 @@ pub mod plan;
 pub mod predict;
 pub mod prop;
 pub mod runtime;
+pub mod trace;
 pub mod tuner;

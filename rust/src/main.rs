@@ -8,6 +8,7 @@
 //!   sim        simulate a GEMM decomposition on the modeled GPU
 //!   sweep      CU-count utilization sweep (Figure-1 style, text plot)
 //!   route      show the router's artifact decision for a shape
+//!   trace      run one traced GEMM and pretty-print the span tree
 //!   intensity  arithmetic-intensity / roofline report for a shape
 //!   info       list artifacts in the manifest
 //!
@@ -30,8 +31,10 @@ use streamk::fleet::{
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::plan::PlanCacheStats;
 use streamk::runtime::{spawn_engine, Manifest};
+use streamk::trace;
 use streamk::tuner::{
-    tune_many, Budget, StalenessPolicy, TuneOptions, Tuner, TABLE1_SUITE,
+    tune_many, Budget, ShapeBucket, StalenessPolicy, TuneOptions, Tuner,
+    TABLE1_SUITE,
 };
 
 fn main() {
@@ -49,6 +52,7 @@ fn main() {
         "sim" => cmd_sim(&argv),
         "sweep" => cmd_sweep(&argv),
         "route" => cmd_route(&argv),
+        "trace" => cmd_trace(&argv),
         "intensity" => cmd_intensity(&argv),
         "info" => cmd_info(&argv),
         "--help" | "-h" | "help" => {
@@ -66,15 +70,17 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|intensity|info> [options]\n\
+     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|trace|intensity|info> [options]\n\
      \n\
      quickstart:\n\
        streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
        streamk tune --revalidate --cache tuner_cache.json # staleness sweep\n\
        streamk serve --tuner-cache tuner_cache.json      # serve with warm cache\n\
+       streamk serve --trace-out trace.json              # Perfetto-loadable spans\n\
        streamk fleet --requests 200                      # heterogeneous fleet sim\n\
        streamk fleet --open-rate 500                     # open-loop arrivals\n\
        streamk plan --m 1920 --n 2000 --k 2000           # inspect a cached plan\n\
+       streamk trace --m 256 --n 256 --k 256             # one traced GEMM, span tree\n\
      \n\
      run a subcommand with --help for its options"
         .to_string()
@@ -127,6 +133,17 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::value("algo", Some("streamk"), "routing algorithm"))
         .opt(Opt::value("pad", Some("none"), "padding policy"))
         .opt(Opt::value("metrics-out", None, "write metrics JSON here"))
+        .opt(Opt::value(
+            "trace-out",
+            None,
+            "enable structured tracing; write Chrome trace-event JSON here \
+             (load at ui.perfetto.dev)",
+        ))
+        .opt(Opt::value(
+            "trace-sample",
+            Some("1"),
+            "trace every Nth request's lifecycle spans",
+        ))
         .opt(Opt::value("tuner-cache", None, "persistent tuner cache file"))
         .opt(Opt::flag("no-tune-on-miss", "disable background tuning"))
         .opt(Opt::value("tune-budget-ms", None, "per-tune wall budget"))
@@ -143,6 +160,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .example("streamk serve --requests 256 --max-batch 32")
         .example("streamk serve --tuner-cache tuner_cache.json")
         .example("streamk serve --fleet mi200,mi100 --requests 256")
+        .example("streamk serve --trace-out trace.json --trace-sample 4")
         .example("streamk serve --artifacts examples/minimal_artifacts  # no make artifacts");
     let args = parse_or_exit(&cmd, argv);
     let settings = match Settings::default().apply_cli(&args) {
@@ -153,6 +171,18 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
     };
     let requests = args.usize("requests").unwrap_or(64);
+
+    // Structured tracing: compiled in everywhere, enabled only when a
+    // sink is named. Sampling thins the request-lifecycle spans;
+    // kernel/engine spans always record while the gate is on.
+    let trace_out = args.get("trace-out").map(str::to_string);
+    if trace_out.is_some() {
+        trace::set_sample_every(
+            args.usize("trace-sample").unwrap_or(1).max(1) as u64
+        );
+        trace::set_enabled(true);
+        let _ = trace::drain(); // start from an empty ring
+    }
 
     // Size the process-wide plan cache from the previous run's observed
     // high-water mark, before anything touches it (the ROADMAP's
@@ -260,6 +290,12 @@ fn cmd_serve(argv: &[String]) -> i32 {
             }
         }
     }
+    if !snap.residuals.is_empty() {
+        println!("block2time residuals (predicted vs measured):");
+        for r in &snap.residuals {
+            println!("  {}", r.summary());
+        }
+    }
     if let Some(path) = args.get("metrics-out") {
         std::fs::write(
             path,
@@ -269,6 +305,24 @@ fn cmd_serve(argv: &[String]) -> i32 {
         println!("metrics written to {path}");
     }
     coord.shutdown();
+    if let Some(path) = &trace_out {
+        trace::set_enabled(false);
+        let (events, threads, dropped) = trace::drain();
+        let doc = trace::chrome_trace_json(&events, &threads);
+        std::fs::write(path, streamk::json::to_string_pretty(&doc))
+            .expect("write trace");
+        println!(
+            "trace: {} spans across {} threads written to {path}{} — \
+             load at ui.perfetto.dev",
+            events.len(),
+            threads.len(),
+            if dropped > 0 {
+                format!(" ({dropped} dropped to ring overflow)")
+            } else {
+                String::new()
+            },
+        );
+    }
     if ok == requests {
         0
     } else {
@@ -646,6 +700,12 @@ fn cmd_fleet(argv: &[String]) -> i32 {
         "placements: {} fallback | re-validations {}",
         b2t.fallback_placements, b2t.revalidations
     );
+    if !b2t.residuals.is_empty() {
+        println!("block2time residuals (predicted vs measured, fleet placement):");
+        for r in &b2t.residuals {
+            println!("  {}", r.summary());
+        }
+    }
     if let Some(best) = b2t
         .drift
         .iter()
@@ -813,6 +873,120 @@ fn cmd_route(argv: &[String]) -> i32 {
             1
         }
     }
+}
+
+fn cmd_trace(argv: &[String]) -> i32 {
+    let cmd = shape_opts(Command::new(
+        "streamk trace",
+        "run one traced GEMM through the plan + kernel layers and \
+         pretty-print the span tree, with the Block2Time residual",
+    ))
+    .opt(Opt::value("cus", Some("8"), "compute units"))
+    .opt(Opt::value(
+        "out",
+        None,
+        "also write Chrome trace-event JSON here (load at ui.perfetto.dev)",
+    ))
+    .example("streamk trace --m 256 --n 256 --k 256")
+    .example("streamk trace --m 512 --n 512 --k 512 --out trace.json");
+    let args = parse_or_exit(&cmd, argv);
+    let shape = GemmShape::new(
+        args.usize("m").unwrap(),
+        args.usize("n").unwrap(),
+        args.usize("k").unwrap(),
+    );
+    let cus = args.usize("cus").unwrap().clamp(1, 120);
+    let dev = Device::preset(DeviceKind::Mi200).with_cus(cus);
+
+    trace::set_enabled(true);
+    trace::set_sample_every(1);
+    let _ = trace::drain(); // start from an empty ring
+
+    let mut rng = streamk::prop::Rng::new(7);
+    let a = rng.normal_f32_vec(shape.m * shape.k);
+    let b = rng.normal_f32_vec(shape.k * shape.n);
+    let (predicted_s, measured_s) = {
+        let _req = trace::span2(
+            "request.gemm",
+            "id",
+            0,
+            "m",
+            shape.m as u64,
+        );
+        let plan = {
+            let _s = trace::span1("plan.lookup", "cus", cus as u64);
+            match streamk::plan::global().get_or_build(
+                shape,
+                BlockShape::default(),
+                4,
+                cus,
+            ) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("cannot plan {shape:?}: {e}");
+                    return 1;
+                }
+            }
+        };
+        let predicted_s = plan.time_on(&dev);
+        let desc = plan.exec();
+        let sw = Stopwatch::start();
+        let c = {
+            let _s = trace::span2(
+                "kernel.execute",
+                "jobs",
+                desc.jobs.len() as u64,
+                "kc",
+                desc.kc as u64,
+            );
+            streamk::kernel::execute_opts(
+                &a,
+                &b,
+                desc,
+                streamk::kernel::Epilogue::None,
+                &streamk::kernel::ExecOpts::auto(desc.macs),
+            )
+        };
+        let measured_s = sw.elapsed_secs();
+        std::hint::black_box(c);
+        (predicted_s, measured_s)
+    };
+    trace::set_enabled(false);
+    let (events, threads, dropped) = trace::drain();
+
+    println!(
+        "traced gemm {}x{}x{} on mi200/{cus} — {} spans across {} threads{}\n",
+        shape.m,
+        shape.n,
+        shape.k,
+        events.len(),
+        threads.len(),
+        if dropped > 0 {
+            format!(" ({dropped} dropped to ring overflow)")
+        } else {
+            String::new()
+        },
+    );
+    print!("{}", trace::render_tree(&events, &threads));
+
+    let mut residuals = trace::ResidualTracker::new();
+    residuals.observe(&ShapeBucket::of(shape).key(), predicted_s, measured_s);
+    println!(
+        "\nblock2time: predicted {:.3} ms | measured {:.3} ms (host \
+         interpreter — the residual the serving loop re-tunes on)",
+        predicted_s * 1e3,
+        measured_s * 1e3,
+    );
+    for r in residuals.snapshot() {
+        println!("  {}", r.summary());
+    }
+    if let Some(path) = args.get("out") {
+        let doc = trace::chrome_trace_json(&events, &threads);
+        std::fs::write(path, streamk::json::to_string_pretty(&doc))
+            .expect("write trace");
+        println!("trace written to {path} — load at ui.perfetto.dev");
+    }
+    0
 }
 
 fn cmd_intensity(argv: &[String]) -> i32 {

@@ -149,6 +149,20 @@ impl Engine {
         name: &str,
         inputs: &[&[f32]],
     ) -> Result<(Vec<Vec<f32>>, ExecStats), RuntimeError> {
+        self.run_f32_kc(name, inputs, None)
+    }
+
+    /// [`Self::run_f32`] with a tuned K-chunk hint: the serving router
+    /// threads the tuner-cached `kc` here so Stream-K gemm artifacts
+    /// execute at the persisted chunk length (bit-neutral — chunking
+    /// never changes output bits). Ignored by non-Stream-K artifacts
+    /// and by the PJRT backend (the AOT kernel bakes its own blocking).
+    pub fn run_f32_kc(
+        &self,
+        name: &str,
+        inputs: &[&[f32]],
+        kc: Option<usize>,
+    ) -> Result<(Vec<Vec<f32>>, ExecStats), RuntimeError> {
         let meta = self.manifest.get(name)?.clone();
         self.validate_inputs(&meta, inputs)?;
 
@@ -162,6 +176,9 @@ impl Engine {
 
         #[cfg(feature = "pjrt")]
         let (outputs, execute_s) = {
+            let _ = kc;
+            let _sp =
+                crate::trace::span1("engine.execute", "flops", meta.flops);
             let literals = build_literals(&meta, inputs)?;
             let sw = Stopwatch::start();
             let result = exe.execute::<xla::Literal>(&literals)?[0][0]
@@ -171,8 +188,10 @@ impl Engine {
         };
         #[cfg(not(feature = "pjrt"))]
         let (outputs, execute_s) = {
+            let _sp =
+                crate::trace::span1("engine.execute", "flops", meta.flops);
             let sw = Stopwatch::start();
-            let outputs = interpret(&meta, inputs)?;
+            let outputs = interpret(&meta, inputs, kc)?;
             (outputs, sw.elapsed_secs())
         };
 
@@ -293,6 +312,7 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 /// `None` when no plan can be built (degenerate shape) — the caller
 /// falls back to the plain matmul.
 #[cfg(not(feature = "pjrt"))]
+#[allow(clippy::too_many_arguments)]
 fn streamk_matmul(
     a: &[f32],
     b: &[f32],
@@ -300,14 +320,30 @@ fn streamk_matmul(
     k: usize,
     n: usize,
     cus: usize,
+    kc: Option<usize>,
     epilogue: crate::kernel::Epilogue,
 ) -> Option<Vec<f32>> {
     use crate::decomp::{BlockShape, GemmShape};
     let shape = GemmShape::new(m, n, k);
-    let plan = crate::plan::global()
-        .get_or_build(shape, BlockShape::default(), 4, cus)
-        .ok()?;
-    Some(crate::kernel::execute(a, b, plan.exec(), epilogue))
+    let plan = {
+        let _sp = crate::trace::span1("plan.lookup", "cus", cus as u64);
+        crate::plan::global()
+            .get_or_build(shape, BlockShape::default(), 4, cus)
+            .ok()?
+    };
+    let desc = plan.exec();
+    let _sk = crate::trace::span2(
+        "kernel.execute",
+        "jobs",
+        desc.jobs.len() as u64,
+        "kc",
+        kc.unwrap_or(desc.kc) as u64,
+    );
+    let opts = crate::kernel::ExecOpts {
+        kc,
+        ..crate::kernel::ExecOpts::auto(desc.macs)
+    };
+    Some(crate::kernel::execute_opts(a, b, desc, epilogue, &opts))
 }
 
 /// jax.nn.gelu(approximate=True): the tanh approximation the MLP graph
@@ -339,6 +375,7 @@ fn parse_epilogue(
 fn interpret(
     meta: &ArtifactMeta,
     inputs: &[&[f32]],
+    kc: Option<usize>,
 ) -> Result<Vec<Vec<f32>>, RuntimeError> {
     let bad = |msg: String| {
         RuntimeError::Backend(format!("interp: artifact {}: {msg}", meta.name))
@@ -385,7 +422,9 @@ fn interpret(
             // reference/tile/splitk artifacts run the blocked dense
             // matmul with the epilogue applied after.
             let c = if meta.algo == "streamk" && meta.cus >= 1 {
-                streamk_matmul(inputs[0], inputs[1], m, k, n, meta.cus, ep)
+                streamk_matmul(
+                    inputs[0], inputs[1], m, k, n, meta.cus, kc, ep,
+                )
             } else {
                 None
             }
@@ -520,7 +559,7 @@ mod tests {
         let mut rng = crate::prop::Rng::new(3);
         let a = Matrix::random(5, 7, &mut rng);
         let b = Matrix::random(7, 3, &mut rng);
-        let got = interpret(&meta, &[&a.data, &b.data]).unwrap();
+        let got = interpret(&meta, &[&a.data, &b.data], None).unwrap();
         let want = naive_gemm(&a, &b);
         for (g, w) in got[0].iter().zip(&want.data) {
             assert!((g - w).abs() < 1e-5, "{g} vs {w}");
@@ -569,7 +608,7 @@ mod tests {
         let mut rng = crate::prop::Rng::new(17);
         let a = Matrix::random(m, k, &mut rng);
         let b = Matrix::random(k, n, &mut rng);
-        let got = interpret(&meta, &[&a.data, &b.data]).unwrap();
+        let got = interpret(&meta, &[&a.data, &b.data], None).unwrap();
         let want = naive_gemm(&a, &b);
         let rep = crate::faults::error_rate(&got[0], &want.data, 1e-3);
         assert!(rep.passed(), "{rep:?}");
@@ -585,7 +624,7 @@ mod tests {
             "first execution must leave the plan cached"
         );
         let hits_before = crate::plan::global().stats().hits;
-        let again = interpret(&meta, &[&a.data, &b.data]).unwrap();
+        let again = interpret(&meta, &[&a.data, &b.data], None).unwrap();
         assert_eq!(again[0], got[0], "cached replay is deterministic");
         assert!(crate::plan::global().stats().hits > hits_before);
     }
@@ -618,7 +657,7 @@ mod tests {
         };
         let x = vec![0.0f32; 8];
         let w = vec![0.0f32; 32];
-        let err = interpret(&base, &[&x, &w]).unwrap_err();
+        let err = interpret(&base, &[&x, &w], None).unwrap_err();
         assert!(err.to_string().contains("exactly 5 inputs"), "{err}");
 
         // gemm whose inner dims disagree: typed error, no OOB slice
@@ -627,7 +666,7 @@ mod tests {
         gemm.inputs = vec![t2(2, 4), t2(3, 8)]; // A cols 4 != B rows 3
         let a = vec![0.0f32; 8];
         let b = vec![0.0f32; 24];
-        let err = interpret(&gemm, &[&a, &b]).unwrap_err();
+        let err = interpret(&gemm, &[&a, &b], None).unwrap_err();
         assert!(err.to_string().contains("disagree"), "{err}");
     }
 

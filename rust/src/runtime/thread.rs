@@ -18,6 +18,9 @@ enum Msg {
     Run {
         name: String,
         inputs: Vec<Arc<Vec<f32>>>,
+        /// Tuned K-chunk hint for Stream-K gemm artifacts (the
+        /// coordinator's tuner-cache `kc` axis); `None` ⇒ default.
+        kc: Option<usize>,
         reply: Sender<ExecResult>,
     },
     Warmup {
@@ -57,10 +60,11 @@ pub fn spawn_engine(
             };
             while let Ok(msg) = rx.recv() {
                 match msg {
-                    Msg::Run { name, inputs, reply } => {
+                    Msg::Run { name, inputs, kc, reply } => {
                         let refs: Vec<&[f32]> =
                             inputs.iter().map(|v| v.as_slice()).collect();
-                        let _ = reply.send(engine.run_f32(&name, &refs));
+                        let _ =
+                            reply.send(engine.run_f32_kc(&name, &refs, kc));
                     }
                     Msg::Warmup { names, reply } => {
                         let refs: Vec<&str> =
@@ -89,9 +93,21 @@ impl EngineHandle {
         name: &str,
         inputs: Vec<Arc<Vec<f32>>>,
     ) -> ExecResult {
+        self.run_f32_kc(name, inputs, None)
+    }
+
+    /// [`Self::run_f32`] with the tuner-cached K-chunk hint — the
+    /// serving path's tuned-KC wiring. Bit-neutral: `kc` only changes
+    /// packing locality, never output bits.
+    pub fn run_f32_kc(
+        &self,
+        name: &str,
+        inputs: Vec<Arc<Vec<f32>>>,
+        kc: Option<usize>,
+    ) -> ExecResult {
         let (reply, waiter) = bounded(1);
         self.tx
-            .send(Msg::Run { name: name.to_string(), inputs, reply })
+            .send(Msg::Run { name: name.to_string(), inputs, kc, reply })
             .map_err(|_| RuntimeError::Backend("engine thread gone".into()))?;
         waiter
             .recv()

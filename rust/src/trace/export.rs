@@ -1,0 +1,234 @@
+//! Drain/export: Chrome trace-event JSON and a terminal span tree.
+//!
+//! The JSON form is the Trace Event Format's "X" (complete) events —
+//! load the file at <https://ui.perfetto.dev> (or chrome://tracing).
+//! Nesting is reconstructed by the viewer from time containment per
+//! track, which the recorder's RAII stack discipline guarantees; no
+//! parent ids are serialized.
+
+use super::{ThreadMeta, TraceEvent};
+use crate::json::{obj, Value};
+
+/// Build the `{"traceEvents": [...]}` document for a drained trace.
+/// Timestamps are microseconds (fractional) since the trace epoch.
+pub fn chrome_trace_json(
+    events: &[TraceEvent],
+    threads: &[ThreadMeta],
+) -> Value {
+    let mut arr = Vec::with_capacity(events.len() + threads.len());
+    for t in threads {
+        arr.push(obj(vec![
+            ("name", "thread_name".into()),
+            ("ph", "M".into()),
+            ("pid", 1usize.into()),
+            ("tid", (t.tid as usize).into()),
+            ("args", obj(vec![("name", t.name.as_str().into())])),
+        ]));
+    }
+    for e in events {
+        let args: Vec<(&str, Value)> = e
+            .args()
+            .iter()
+            .map(|&(k, v)| (k, (v as usize).into()))
+            .collect();
+        arr.push(obj(vec![
+            ("name", e.name.into()),
+            ("ph", "X".into()),
+            ("pid", 1usize.into()),
+            ("tid", (e.tid as usize).into()),
+            ("ts", Value::Num(e.start_ns as f64 / 1e3)),
+            ("dur", Value::Num(e.dur_ns as f64 / 1e3)),
+            ("args", obj(args)),
+        ]));
+    }
+    obj(vec![("traceEvents", Value::Arr(arr))])
+}
+
+/// Render the span forest as an indented text tree with per-stage
+/// times — the `streamk trace` subcommand's output. Events must be the
+/// sorted result of [`super::drain`] (by thread, then start, longest
+/// first at equal starts).
+pub fn render_tree(events: &[TraceEvent], threads: &[ThreadMeta]) -> String {
+    let mut out = String::new();
+    let name_of = |tid: u64| {
+        threads
+            .iter()
+            .find(|t| t.tid == tid)
+            .map(|t| t.name.as_str())
+            .unwrap_or("?")
+    };
+    let mut i = 0;
+    while i < events.len() {
+        let tid = events[i].tid;
+        out.push_str(&format!("thread {} ({})\n", tid, name_of(tid)));
+        // (end_ns) stack of currently-open ancestors on this track
+        let mut stack: Vec<u64> = Vec::new();
+        while i < events.len() && events[i].tid == tid {
+            let e = &events[i];
+            while let Some(&end) = stack.last() {
+                if e.start_ns >= end {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            out.push_str(&"  ".repeat(stack.len() + 1));
+            out.push_str(&format!(
+                "{}  {:.3} ms",
+                e.name,
+                e.dur_ns as f64 / 1e6
+            ));
+            for (k, v) in e.args() {
+                out.push_str(&format!("  {k}={v}"));
+            }
+            out.push('\n');
+            stack.push(e.start_ns + e.dur_ns);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use crate::prop;
+    use crate::trace;
+
+    #[test]
+    fn chrome_json_round_trips_and_is_well_formed() {
+        let _g = trace::test_lock();
+        trace::set_enabled(true);
+        let _ = trace::drain();
+        {
+            let _a = trace::span1("test.export.root", "req", 3);
+            let _b = trace::span("test.export.child");
+        }
+        trace::set_enabled(false);
+        let (events, threads, _) = trace::drain();
+        let events: Vec<_> = events
+            .into_iter()
+            .filter(|e| e.name.starts_with("test.export"))
+            .collect();
+        assert_eq!(events.len(), 2);
+        let doc = chrome_trace_json(&events, &threads);
+        let text = crate::json::to_string_pretty(&doc);
+        let back = parse(&text).expect("chrome trace json parses");
+        let evs = back.arr("traceEvents").unwrap();
+        // one metadata record per thread + one X record per span
+        let xs: Vec<_> = evs
+            .iter()
+            .filter(|e| e.s("ph").unwrap() == "X")
+            .collect();
+        assert_eq!(xs.len(), 2);
+        for x in &xs {
+            assert!(!x.s("name").unwrap().is_empty());
+            assert!(x.f("ts").unwrap() >= 0.0);
+            assert!(x.f("dur").unwrap() >= 0.0);
+            assert_eq!(x.u("pid").unwrap(), 1);
+        }
+        assert!(evs
+            .iter()
+            .any(|e| e.s("ph").map(|p| p == "M").unwrap_or(false)));
+        let tree = render_tree(&events, &threads);
+        assert!(tree.contains("test.export.root"));
+        assert!(tree.contains("  test.export.child") || tree.contains("test.export.child"));
+    }
+
+    /// Satellite: randomly nested/interleaved spans across `exec::pool`
+    /// workers drain to well-formed, properly parented Chrome trace
+    /// JSON that round-trips through the in-tree parser.
+    #[test]
+    fn prop_interleaved_worker_spans_export_well_formed() {
+        let _g = trace::test_lock();
+        // fixed name pool: span names must be &'static str
+        const NAMES: [&str; 4] = [
+            "test.prop.a",
+            "test.prop.b",
+            "test.prop.c",
+            "test.prop.d",
+        ];
+        prop::check("trace-export-well-formed", 8, |rng| {
+            trace::set_enabled(true);
+            let _ = trace::drain();
+            let seeds: Vec<u64> = (0..rng.usize_in(2, 5))
+                .map(|_| rng.next_u64())
+                .collect();
+            // each pool worker opens a random nested span tree
+            crate::exec::scope_map_with(
+                seeds.len(),
+                &seeds,
+                || (),
+                |_, idx, &seed| {
+                    let mut r = prop::Rng::new(seed);
+                    nest(&mut r, &NAMES, idx as u64, 3);
+                },
+            );
+            trace::set_enabled(false);
+            let (events, threads, _) = trace::drain();
+            let events: Vec<_> = events
+                .into_iter()
+                .filter(|e| e.name.starts_with("test.prop"))
+                .collect();
+            prop::ensure(!events.is_empty(), "no events recorded")?;
+            // proper parenting: on each track, every span is either
+            // disjoint from or fully contained in the one before it on
+            // the open stack (drain order is start-sorted per tid)
+            let mut stack: Vec<(u64, u64)> = Vec::new(); // (tid, end)
+            for e in &events {
+                while let Some(&(tid, end)) = stack.last() {
+                    if tid != e.tid || e.start_ns >= end {
+                        stack.pop();
+                    } else {
+                        break;
+                    }
+                }
+                if let Some(&(tid, end)) = stack.last() {
+                    if tid == e.tid {
+                        prop::ensure(
+                            e.start_ns + e.dur_ns <= end,
+                            format!(
+                                "span {} overlaps parent boundary",
+                                e.name
+                            ),
+                        )?;
+                    }
+                }
+                stack.push((e.tid, e.start_ns + e.dur_ns));
+            }
+            // round-trip through the in-tree json parser
+            let doc = chrome_trace_json(&events, &threads);
+            let text = doc.to_string();
+            let back = parse(&text).map_err(|e| e.to_string())?;
+            let evs = back.arr("traceEvents").map_err(|e| e.to_string())?;
+            let xs = evs
+                .iter()
+                .filter(|e| e.s("ph").map(|p| p == "X").unwrap_or(false))
+                .count();
+            prop::ensure_eq(xs, events.len(), "X event count")?;
+            for e in evs {
+                prop::ensure(
+                    e.s("ph").is_ok() && e.get("args").is_some(),
+                    "event missing ph/args",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// Recursive random span tree: each level opens a span, maybe
+    /// recurses (nested children), maybe opens siblings.
+    fn nest(rng: &mut prop::Rng, names: &[&'static str; 4], worker: u64, depth: usize) {
+        let name = names[rng.usize_in(0, names.len() - 1)];
+        let _s = trace::span1(name, "worker", worker);
+        if depth > 0 {
+            for _ in 0..rng.usize_in(0, 2) {
+                nest(rng, names, worker, depth - 1);
+            }
+        }
+        if rng.bool() {
+            std::thread::yield_now();
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! Structured tracing: per-thread ring-buffer span recorder.
+//!
+//! The paper's block-mapping bug ("could not fully resolve") and its
+//! Block2Time bet are both observability gaps: the runtime predicts
+//! everywhere but records nothing about what actually happened per stage
+//! or per CU. This module closes the recording half; [`residual`] closes
+//! the prediction-error half.
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Disabled is free.** Tracing is compiled in everywhere (no
+//!    feature flag to bit-rot) but runtime-gated: a disabled
+//!    [`span`] is one relaxed atomic load and a trivially-copyable
+//!    struct return. The kernel dispatcher calls it per tile job, so
+//!    this path is held to the ≤1% overhead gate in
+//!    `benches/kernel_exec.rs`.
+//! 2. **Zero heap on the hot path.** Span names are `&'static str`,
+//!    args are two fixed `(&'static str, u64)` slots, and events land
+//!    in a preallocated per-thread ring. The only allocation is the
+//!    one-time ring registration per thread.
+//! 3. **Threads die, events survive.** The kernel dispatcher spawns
+//!    scoped workers per window; their rings are `Arc`-shared with a
+//!    global registry so a drain after the scope closes still sees
+//!    their spans. Rings whose thread is gone are pruned after draining.
+//!
+//! Span identity is (thread, start, duration): export emits Chrome
+//! trace-event "X" (complete) events, and Perfetto reconstructs
+//! parent/child nesting from time containment on each track — RAII
+//! stack discipline guarantees spans on one thread properly nest, so no
+//! explicit parent ids are recorded.
+
+pub mod export;
+pub mod residual;
+
+pub use export::{chrome_trace_json, render_tree};
+pub use residual::{ResidualSnapshot, ResidualTracker};
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Events kept per thread; the ring overwrites the oldest beyond this.
+const RING_CAP: usize = 4096;
+
+/// Registry cap: rings registered beyond this are thread-local only
+/// (their events are recorded but never drained) so a pathological
+/// thread-spawn loop cannot grow the registry without bound.
+const MAX_RINGS: usize = 1024;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static SAMPLE_EVERY: AtomicU64 = AtomicU64::new(1);
+static REQ_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+/// Turn span recording on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Release);
+}
+
+/// The one-load gate every span constructor checks first.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Record request-lifecycle spans for every `n`-th request only
+/// (`streamk serve --trace-sample n`). Kernel/engine spans are not
+/// request-scoped and follow the global gate alone.
+pub fn set_sample_every(n: u64) {
+    SAMPLE_EVERY.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Per-request sampling decision: true when this request's lifecycle
+/// spans should be emitted. Approximate under concurrency (the counter
+/// is global), exact for any window of `n` consecutive requests.
+pub fn request_sampled() -> bool {
+    if !enabled() {
+        return false;
+    }
+    let n = SAMPLE_EVERY.load(Ordering::Relaxed);
+    REQ_COUNTER.fetch_add(1, Ordering::Relaxed) % n == 0
+}
+
+/// One completed span, as drained from a ring.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Trace-local thread id (registration order, not OS tid).
+    pub tid: u64,
+    /// Nanoseconds since the process trace epoch.
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub args: [(&'static str, u64); 2],
+    pub nargs: u8,
+}
+
+impl TraceEvent {
+    /// The populated arg slots.
+    pub fn args(&self) -> &[(&'static str, u64)] {
+        &self.args[..self.nargs as usize]
+    }
+}
+
+/// Thread metadata for export (one Chrome "M" record each).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ThreadMeta {
+    pub tid: u64,
+    pub name: String,
+}
+
+struct RingInner {
+    meta: ThreadMeta,
+    events: Vec<TraceEvent>,
+    /// Overwrite cursor once `events` reaches [`RING_CAP`].
+    head: usize,
+    dropped: u64,
+}
+
+type Ring = Arc<Mutex<RingInner>>;
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn registry() -> &'static Mutex<Vec<Ring>> {
+    static REG: OnceLock<Mutex<Vec<Ring>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: std::cell::RefCell<Option<Ring>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn register_ring() -> Ring {
+    let tid = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+    let name = std::thread::current()
+        .name()
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("thread-{tid}"));
+    let ring = Arc::new(Mutex::new(RingInner {
+        meta: ThreadMeta { tid, name },
+        events: Vec::with_capacity(64),
+        head: 0,
+        dropped: 0,
+    }));
+    let mut reg = registry().lock().expect("trace registry");
+    if reg.len() < MAX_RINGS {
+        reg.push(ring.clone());
+    }
+    ring
+}
+
+fn record(mut ev: TraceEvent) {
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(register_ring);
+        let mut inner = ring.lock().expect("trace ring");
+        ev.tid = inner.meta.tid;
+        if inner.events.len() < RING_CAP {
+            inner.events.push(ev);
+        } else {
+            let h = inner.head;
+            inner.events[h] = ev;
+            inner.head = (h + 1) % RING_CAP;
+            inner.dropped += 1;
+        }
+    });
+}
+
+/// RAII span guard: records one event on drop. Construct via [`span`],
+/// [`span1`], [`span2`] or [`span_if`]; bind it (`let _s = ...`) so it
+/// lives to the end of the scope it measures.
+#[must_use = "a span measures its guard's lifetime; bind it with `let`"]
+pub struct Span {
+    name: &'static str,
+    start_ns: u64,
+    args: [(&'static str, u64); 2],
+    nargs: u8,
+    live: bool,
+}
+
+impl Span {
+    const DEAD: Span = Span {
+        name: "",
+        start_ns: 0,
+        args: [("", 0), ("", 0)],
+        nargs: 0,
+        live: false,
+    };
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        let end = now_ns();
+        record(TraceEvent {
+            name: self.name,
+            tid: 0, // filled from the ring in record()
+            start_ns: self.start_ns,
+            dur_ns: end.saturating_sub(self.start_ns),
+            args: self.args,
+            nargs: self.nargs,
+        });
+    }
+}
+
+/// Open a span; the event is recorded when the guard drops.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return Span::DEAD;
+    }
+    Span { name, start_ns: now_ns(), args: [("", 0), ("", 0)], nargs: 0, live: true }
+}
+
+/// Span with one numeric arg (CU id, request id, tile count, ...).
+#[inline]
+pub fn span1(name: &'static str, k: &'static str, v: u64) -> Span {
+    if !enabled() {
+        return Span::DEAD;
+    }
+    Span { name, start_ns: now_ns(), args: [(k, v), ("", 0)], nargs: 1, live: true }
+}
+
+/// Span with two numeric args.
+#[inline]
+pub fn span2(
+    name: &'static str,
+    k1: &'static str,
+    v1: u64,
+    k2: &'static str,
+    v2: u64,
+) -> Span {
+    if !enabled() {
+        return Span::DEAD;
+    }
+    Span { name, start_ns: now_ns(), args: [(k1, v1), (k2, v2)], nargs: 2, live: true }
+}
+
+/// Conditionally-open span — the request-sampling hook: callers gate a
+/// whole lifecycle on one [`request_sampled`] draw and thread the bool
+/// through their child spans.
+#[inline]
+pub fn span_if(on: bool, name: &'static str) -> Span {
+    if on {
+        span(name)
+    } else {
+        Span::DEAD
+    }
+}
+
+/// Like [`span_if`] with two args.
+#[inline]
+pub fn span2_if(
+    on: bool,
+    name: &'static str,
+    k1: &'static str,
+    v1: u64,
+    k2: &'static str,
+    v2: u64,
+) -> Span {
+    if on {
+        span2(name, k1, v1, k2, v2)
+    } else {
+        Span::DEAD
+    }
+}
+
+/// Drain every registered ring: returns all recorded events (sorted by
+/// thread then start time) plus per-thread metadata, and empties the
+/// rings. Rings whose thread has exited (registry holds the only
+/// remaining reference) are pruned after draining, so scoped kernel
+/// workers don't accumulate. Total events dropped to ring overflow
+/// since the last drain are returned as the third element.
+pub fn drain() -> (Vec<TraceEvent>, Vec<ThreadMeta>, u64) {
+    let mut events = Vec::new();
+    let mut threads = Vec::new();
+    let mut dropped = 0u64;
+    let mut reg = registry().lock().expect("trace registry");
+    reg.retain(|ring| {
+        {
+            let mut inner = ring.lock().expect("trace ring");
+            if !inner.events.is_empty() {
+                threads.push(inner.meta.clone());
+            }
+            events.append(&mut inner.events);
+            inner.head = 0;
+            dropped += inner.dropped;
+            inner.dropped = 0;
+        }
+        Arc::strong_count(ring) > 1
+    });
+    drop(reg);
+    events.sort_by_key(|e| (e.tid, e.start_ns, std::cmp::Reverse(e.dur_ns)));
+    threads.sort_by_key(|t| t.tid);
+    (events, threads, dropped)
+}
+
+/// Serialized test access: tracing state (gate, rings, sample counter)
+/// is process-global, so tests that enable tracing and drain must not
+/// interleave. Library tests and the bench harness both use this.
+pub fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Events from this test process only — concurrent tests in other
+    /// modules may record spans while tracing is enabled here, so every
+    /// assertion filters to the names this module emits.
+    fn drain_named(prefix: &str) -> Vec<TraceEvent> {
+        let (events, _, _) = drain();
+        events.into_iter().filter(|e| e.name.starts_with(prefix)).collect()
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = test_lock();
+        set_enabled(false);
+        let _ = drain(); // clear leftovers
+        {
+            let _s = span("test.disabled");
+            let _t = span2("test.disabled.child", "a", 1, "b", 2);
+        }
+        assert!(drain_named("test.disabled").is_empty());
+    }
+
+    #[test]
+    fn spans_nest_by_stack_discipline() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        {
+            let _outer = span1("test.nest.outer", "req", 7);
+            std::thread::sleep(std::time::Duration::from_micros(200));
+            {
+                let _inner = span("test.nest.inner");
+                std::thread::sleep(std::time::Duration::from_micros(100));
+            }
+        }
+        set_enabled(false);
+        let evs = drain_named("test.nest");
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        let outer = evs.iter().find(|e| e.name == "test.nest.outer").unwrap();
+        let inner = evs.iter().find(|e| e.name == "test.nest.inner").unwrap();
+        assert_eq!(outer.tid, inner.tid);
+        assert_eq!(outer.args(), &[("req", 7)]);
+        // containment: inner starts after outer and ends before it
+        assert!(inner.start_ns >= outer.start_ns);
+        assert!(
+            inner.start_ns + inner.dur_ns <= outer.start_ns + outer.dur_ns,
+            "inner escapes outer: {inner:?} vs {outer:?}"
+        );
+        assert!(outer.dur_ns > inner.dur_ns);
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_but_keeps_cap() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        for i in 0..(RING_CAP + 500) {
+            let _s = span1("test.overflow", "i", i as u64);
+        }
+        set_enabled(false);
+        let (events, _, dropped) = drain();
+        let ours: Vec<_> =
+            events.into_iter().filter(|e| e.name == "test.overflow").collect();
+        assert_eq!(ours.len(), RING_CAP);
+        assert!(dropped >= 500);
+        // the survivors are the newest 4096 (oldest were overwritten)
+        let min_i = ours.iter().map(|e| e.args[0].1).min().unwrap();
+        assert!(min_i >= 500 - 1, "oldest surviving index {min_i}");
+    }
+
+    #[test]
+    fn dead_thread_events_survive_until_drained() {
+        let _g = test_lock();
+        set_enabled(true);
+        let _ = drain();
+        std::thread::spawn(|| {
+            let _s = span("test.deadthread");
+        })
+        .join()
+        .unwrap();
+        set_enabled(false);
+        let evs = drain_named("test.deadthread");
+        assert_eq!(evs.len(), 1);
+        // its ring was pruned: a second drain finds nothing
+        assert!(drain_named("test.deadthread").is_empty());
+    }
+
+    #[test]
+    fn sampling_selects_every_nth_request() {
+        let _g = test_lock();
+        set_enabled(true);
+        set_sample_every(3);
+        let hits =
+            (0..9).filter(|_| request_sampled()).count();
+        assert_eq!(hits, 3);
+        set_sample_every(1);
+        set_enabled(false);
+        // disabled: never sampled
+        assert!(!(0..5).any(|_| request_sampled()));
+        let _ = drain();
+    }
+}

@@ -1,0 +1,218 @@
+//! Block2Time residual accounting: predicted vs. measured latency.
+//!
+//! The paper closes on Block2Time being promising "in enhancing runtime
+//! predictions and optimizing load balancing" — which is only actionable
+//! if prediction error is *measured* (the multi-precision DMM tuning
+//! line of work tracks exactly this residual). Every executed request
+//! pairs the scheduler's predicted latency ([`crate::fleet::Placement`]
+//! `predicted_s`, itself `Plan::time_on` / tuner-cache backed) with the
+//! measured execute span, bucketed by [`crate::tuner::ShapeBucket`]:
+//!
+//! - **EWMA bias** — signed exponentially-weighted mean of
+//!   `(predicted − measured) / measured`; positive means the model is
+//!   optimistic about this bucket being slow (over-predicts), negative
+//!   means it under-predicts.
+//! - **APE distribution** — absolute percentage error per request in a
+//!   log₂ [`Histogram`] (recorded as fraction-seconds, so `p95/1e6` is
+//!   the p95 APE fraction), with linear in-bucket interpolation from
+//!   the quantile fix in this PR.
+//!
+//! The tracker lives in [`crate::coordinator::Metrics`] (serialized in
+//! the snapshot JSON under `"residuals"`), and the measured residual —
+//! not the blended tuner observation — is what trips drift re-tunes via
+//! `Fleet::observe_residual`.
+
+use crate::coordinator::Histogram;
+use crate::json::{obj, Value};
+
+/// EWMA smoothing for the signed bias (matches the tuner's observation
+/// alpha so the two feedback loops settle at comparable speed).
+const BIAS_ALPHA: f64 = 0.3;
+
+#[derive(Debug, Clone)]
+struct Bucket {
+    key: String,
+    count: u64,
+    ewma_bias: f64,
+    /// APE fractions recorded as "seconds" (fraction 0.25 → 250_000µs).
+    ape: Histogram,
+}
+
+/// Per-shape-bucket prediction residual statistics.
+#[derive(Debug, Default)]
+pub struct ResidualTracker {
+    buckets: Vec<Bucket>,
+}
+
+/// Point-in-time view of one bucket, for snapshots/serialization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResidualSnapshot {
+    pub bucket: String,
+    pub count: u64,
+    /// Signed EWMA of (predicted − measured) / measured.
+    pub ewma_bias: f64,
+    pub mean_ape: f64,
+    pub p50_ape: f64,
+    pub p95_ape: f64,
+}
+
+impl ResidualTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one (predicted, measured) pair for `bucket_key`. Returns
+    /// the absolute percentage error, or `None` when the pair is
+    /// degenerate (non-finite or non-positive measurement) and was
+    /// dropped.
+    pub fn observe(
+        &mut self,
+        bucket_key: &str,
+        predicted_s: f64,
+        measured_s: f64,
+    ) -> Option<f64> {
+        if !predicted_s.is_finite()
+            || !measured_s.is_finite()
+            || measured_s <= 0.0
+            || predicted_s < 0.0
+        {
+            return None;
+        }
+        let rel = (predicted_s - measured_s) / measured_s;
+        let ape = rel.abs();
+        let b = match self.buckets.iter_mut().find(|b| b.key == bucket_key) {
+            Some(b) => b,
+            None => {
+                self.buckets.push(Bucket {
+                    key: bucket_key.to_string(),
+                    count: 0,
+                    ewma_bias: 0.0,
+                    ape: Histogram::default(),
+                });
+                self.buckets.last_mut().expect("just pushed")
+            }
+        };
+        b.ewma_bias = if b.count == 0 {
+            rel
+        } else {
+            BIAS_ALPHA * rel + (1.0 - BIAS_ALPHA) * b.ewma_bias
+        };
+        b.count += 1;
+        b.ape.record_secs(ape);
+        Some(ape)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+
+    /// Per-bucket snapshot, insertion-ordered (first-seen bucket first).
+    pub fn snapshot(&self) -> Vec<ResidualSnapshot> {
+        self.buckets
+            .iter()
+            .map(|b| ResidualSnapshot {
+                bucket: b.key.clone(),
+                count: b.count,
+                ewma_bias: b.ewma_bias,
+                mean_ape: b.ape.mean_us() / 1e6,
+                p50_ape: b.ape.quantile_us(0.5) / 1e6,
+                p95_ape: b.ape.quantile_us(0.95) / 1e6,
+            })
+            .collect()
+    }
+}
+
+impl ResidualSnapshot {
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("bucket", self.bucket.as_str().into()),
+            ("count", (self.count as usize).into()),
+            ("ewma_bias", self.ewma_bias.into()),
+            ("mean_ape", self.mean_ape.into()),
+            ("p50_ape", self.p50_ape.into()),
+            ("p95_ape", self.p95_ape.into()),
+        ])
+    }
+
+    /// One-line human form for `streamk serve` / `streamk fleet`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: n={} bias={:+.1}% p50_ape={:.1}% p95_ape={:.1}%",
+            self.bucket,
+            self.count,
+            self.ewma_bias * 100.0,
+            self.p50_ape * 100.0,
+            self.p95_ape * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bias_is_signed_and_ape_is_not() {
+        let mut t = ResidualTracker::new();
+        // prediction consistently 20% low
+        for _ in 0..50 {
+            t.observe("128x128x128", 0.8e-3, 1.0e-3);
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        let s = &snap[0];
+        assert_eq!(s.bucket, "128x128x128");
+        assert_eq!(s.count, 50);
+        assert!(
+            (s.ewma_bias + 0.2).abs() < 1e-9,
+            "bias {}",
+            s.ewma_bias
+        );
+        // APE ~0.2; in-bucket interpolation keeps quantiles near truth
+        assert!((s.p50_ape - 0.2).abs() < 0.05, "p50 {}", s.p50_ape);
+        assert!((s.p95_ape - 0.2).abs() < 0.07, "p95 {}", s.p95_ape);
+        assert!((s.mean_ape - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ewma_tracks_regime_change() {
+        let mut t = ResidualTracker::new();
+        for _ in 0..30 {
+            t.observe("b", 1.0, 1.0); // perfect
+        }
+        assert!(t.snapshot()[0].ewma_bias.abs() < 1e-12);
+        for _ in 0..30 {
+            t.observe("b", 2.0, 1.0); // +100% over-prediction
+        }
+        let bias = t.snapshot()[0].ewma_bias;
+        assert!(bias > 0.99, "bias should converge up: {bias}");
+    }
+
+    #[test]
+    fn degenerate_pairs_are_dropped() {
+        let mut t = ResidualTracker::new();
+        assert!(t.observe("b", 1.0, 0.0).is_none());
+        assert!(t.observe("b", f64::NAN, 1.0).is_none());
+        assert!(t.observe("b", 1.0, f64::INFINITY).is_none());
+        assert!(t.observe("b", -1.0, 1.0).is_none());
+        assert!(t.is_empty());
+        assert!(t.observe("b", 1.0, 1.0).is_some());
+        assert_eq!(t.snapshot()[0].count, 1);
+    }
+
+    #[test]
+    fn buckets_are_independent_and_serialize() {
+        let mut t = ResidualTracker::new();
+        t.observe("a", 1.1, 1.0);
+        t.observe("b", 0.5, 1.0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert!(snap[0].ewma_bias > 0.0 && snap[1].ewma_bias < 0.0);
+        let j = snap[0].to_json();
+        assert_eq!(j.s("bucket").unwrap(), "a");
+        assert_eq!(j.u("count").unwrap(), 1);
+        assert!(j.f("ewma_bias").unwrap() > 0.0);
+        assert!(j.f("p95_ape").unwrap().is_finite());
+        assert!(snap[1].summary().contains("p95_ape"));
+    }
+}
