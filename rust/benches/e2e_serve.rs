@@ -11,7 +11,12 @@
 //! plan cache's zero-rebuild hot path (>90% hit rate and zero schedule
 //! builds once warm), then repeats the stream with structured tracing
 //! sampled on and asserts the exported Chrome trace parses, carries the
-//! full request span chain, and populated finite Block2Time residuals.
+//! full request span chain, and populated finite Block2Time residuals,
+//! and finally serves under a deliberately impossible `--slo` target
+//! and asserts the watchdog trips: forced re-validation fires, the
+//! metrics flight recorder fills, and `slo.breach` / `slo.retune`
+//! events land in the trace ring. Bench rows append to
+//! `BENCH_e2e_serve.json` for EXPERIMENTS.md bookkeeping.
 
 use std::path::Path;
 
@@ -203,6 +208,97 @@ fn run_traced_smoke() {
     );
 }
 
+/// SLO watchdog smoke: serve with a deliberately impossible p99 target
+/// and assert the watchdog trips within one sampling window — forced
+/// re-validation fires, the flight recorder captures the timeline, and
+/// the breach / re-tune events land in the trace ring.
+fn run_slo_smoke() {
+    let _guard = streamk::trace::test_lock();
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("examples")
+        .join("minimal_artifacts");
+    let manifest = Manifest::load(&dir).expect("checked-in minimal manifest");
+    let (engine, _join) = spawn_engine(manifest).expect("engine");
+    let settings = Settings {
+        workers: 2,
+        tune_on_miss: false,
+        metrics_interval_ms: 5,
+        metrics_window: 64,
+        slo: Some("p99_ms<=0.0001".into()),
+        ..Settings::default()
+    };
+
+    streamk::trace::set_sample_every(1);
+    streamk::trace::set_enabled(true);
+    let _ = streamk::trace::drain(); // start from an empty ring
+
+    let coord = Coordinator::start(engine, &settings);
+    let handle = coord.handle.clone();
+    for _ in 0..8 {
+        let w = handle.submit_gemm(
+            128,
+            128,
+            128,
+            vec![1.0; 128 * 128],
+            vec![1.0; 128 * 128],
+        );
+        let resp = w.recv().expect("gemm reply");
+        assert!(resp.result.is_ok(), "slo smoke gemm must succeed");
+    }
+    // Any completed request breaches a 0.1 µs p99 budget; the watchdog
+    // samples every 5 ms, so the forced re-tune lands promptly.
+    let sw = Stopwatch::start();
+    while handle.metrics().snapshot().drift_revalidations == 0 {
+        assert!(
+            sw.elapsed_secs() < 30.0,
+            "watchdog must trip the p99 rule within 30 s"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let sw = Stopwatch::start();
+    while coord.recorder().is_empty() {
+        assert!(
+            sw.elapsed_secs() < 30.0,
+            "flight recorder must capture a sample within 30 s"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let samples = coord.recorder().len();
+    let snap = handle.metrics().snapshot();
+    coord.shutdown();
+    streamk::trace::set_enabled(false);
+
+    let (events, _threads, _dropped) = streamk::trace::drain();
+    assert!(
+        events.iter().any(|e| e.name == "slo.breach"),
+        "watchdog must emit an slo.breach event"
+    );
+    assert!(
+        events.iter().any(|e| e.name == "slo.retune"),
+        "watchdog must force a re-tune on the breached bucket"
+    );
+
+    streamk::bench::dump_json(
+        "BENCH_e2e_serve.json",
+        streamk::json::obj(vec![
+            ("bench", "e2e_serve_slo_smoke".into()),
+            ("requests", (snap.requests as usize).into()),
+            ("p99_ms", (snap.e2e.quantile_us(0.99) / 1e3).into()),
+            (
+                "drift_revalidations",
+                (snap.drift_revalidations as usize).into(),
+            ),
+            ("recorder_samples", samples.into()),
+        ]),
+    );
+    println!(
+        "slo smoke OK: p99 rule tripped ({} forced re-validation(s), \
+         {} recorder sample(s))",
+        snap.drift_revalidations, samples
+    );
+}
+
 fn run_stream(settings: &Settings, requests: usize) -> (f64, u64, f64, f64, f64) {
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let manifest = Manifest::load(&dir).expect("run `make artifacts`");
@@ -250,6 +346,7 @@ fn main() {
     if std::env::args().skip(1).any(|a| a == "--test") {
         run_smoke();
         run_traced_smoke();
+        run_slo_smoke();
         return;
     }
     println!("== 1. batching policy sweep ({REQUESTS} MLP requests) ==\n");
@@ -280,6 +377,19 @@ fn main() {
             format!("{p50:.2}"),
             format!("{p95:.2}"),
         ]);
+        streamk::bench::dump_json(
+            "BENCH_e2e_serve.json",
+            streamk::json::obj(vec![
+                ("bench", "e2e_serve".into()),
+                ("max_batch", max_batch.into()),
+                ("window_us", (window_us as usize).into()),
+                ("rps", rps.into()),
+                ("batches", (batches as usize).into()),
+                ("mean_rows", rows.into()),
+                ("p50_ms", p50.into()),
+                ("p95_ms", p95.into()),
+            ]),
+        );
     }
     t.print();
     println!(

@@ -195,6 +195,23 @@ fn main() {
             format!("{vs_ref:.2}x"),
             format!("{vs_pr4:.2}x"),
         ]);
+        let flops = 2.0 * (m * n * k) as f64;
+        let bytes = 4.0 * (m * k + k * n + m * n) as f64;
+        let s = parallel.median.max(1e-12);
+        let roofline = streamk::trace::profile::host_roofline(par_threads);
+        streamk::bench::dump_json(
+            "BENCH_kernel_exec.json",
+            streamk::json::obj(vec![
+                ("bench", "kernel_exec".into()),
+                ("shape", format!("{m}x{n}x{k}").into()),
+                ("ms", (parallel.median * 1e3).into()),
+                ("gflops", (flops / s / 1e9).into()),
+                ("gbps", (bytes / s / 1e9).into()),
+                ("efficiency", (flops / s / roofline.peak_flops).into()),
+                ("vs_per_elem", vs_ref.into()),
+                ("vs_pr4", vs_pr4.into()),
+            ]),
+        );
     }
     t.print();
     println!(
@@ -274,6 +291,67 @@ fn main() {
             "disabled tracing must stay within 1% of dispatch time: \
              {:.4}%",
             overhead * 100.0
+        );
+
+        // The roofline profiler rides the same pattern: its hooks
+        // collapse to one relaxed atomic load while disabled.
+        assert!(
+            !streamk::trace::profile::enabled(),
+            "profiler must be off for the overhead gate"
+        );
+        let phook = bench(1, 3, || {
+            for _ in 0..SPANS_PER_SAMPLE {
+                keep(streamk::trace::profile::enabled());
+            }
+        });
+        let per_hook_s = phook.median / SPANS_PER_SAMPLE as f64;
+        // Bound: one gate check in each of the two passes per job,
+        // plus the per-dispatch aggregation bookkeeping.
+        let phooks = desc.jobs.len() * 2 + 64;
+        let poverhead =
+            per_hook_s * phooks as f64 / dispatch.median.max(1e-12);
+        println!(
+            "disabled profiler hook: {:.1} ns | {} hooks/dispatch \
+             (bound) | overhead {:.4}%",
+            per_hook_s * 1e9,
+            phooks,
+            poverhead * 100.0,
+        );
+        assert!(
+            poverhead <= 0.01,
+            "disabled profiling must stay within 1% of dispatch time: \
+             {:.4}%",
+            poverhead * 100.0
+        );
+
+        println!("\n== 5. roofline attribution (enabled path) ==\n");
+        streamk::trace::profile::set_enabled(true);
+        let _ = streamk::trace::profile::drain();
+        let attributed = bench(1, if quick { 2 } else { 3 }, || {
+            keep(execute_opts(&a.data, &b.data, &desc, Epilogue::None, &opts));
+        });
+        streamk::trace::profile::set_enabled(false);
+        let profiles = streamk::trace::profile::drain();
+        let roofline = streamk::trace::profile::host_roofline(par_threads);
+        let bucket = profiles
+            .iter()
+            .find(|p| p.bucket == "512x512x512")
+            .expect("dispatch must land in the 512x512x512 bucket");
+        println!("{}", bucket.summary(&roofline));
+        println!(
+            "enabled-profiler dispatch {:.2} ms (disabled {:.2} ms)",
+            attributed.median * 1e3,
+            dispatch.median * 1e3,
+        );
+        // Debug-profile CI timers are coarse; the full release run
+        // holds the paper-grade attribution bar.
+        let floor = if quick { 0.90 } else { 0.95 };
+        assert!(
+            bucket.accounted() >= floor,
+            "attributed phases must cover >= {:.0}% of dispatch wall \
+             time: {:.1}%",
+            floor * 100.0,
+            bucket.accounted() * 100.0
         );
     }
 

@@ -41,6 +41,15 @@ pub struct Settings {
     /// Heterogeneous fleet spec (`mi200,mi200x0.5,mi100:60`); `None`
     /// serves the classic single-device coordinator.
     pub fleet: Option<String>,
+    /// Flight recorder: sampling interval for periodic metrics
+    /// snapshots (milliseconds).
+    pub metrics_interval_ms: u64,
+    /// Flight recorder: ring capacity (snapshots kept).
+    pub metrics_window: usize,
+    /// Declarative SLO rules evaluated over the flight-recorder window
+    /// (`p99_ms<=5,shed<=0.05,ape<=0.5,eff>=0.3`); `None` disables the
+    /// watchdog.
+    pub slo: Option<String>,
 }
 
 impl Default for Settings {
@@ -61,6 +70,9 @@ impl Default for Settings {
             tune_drift_pct: 50,
             cache_max_age_s: 7 * 24 * 3600,
             fleet: None,
+            metrics_interval_ms: 500,
+            metrics_window: 256,
+            slo: None,
         }
     }
 }
@@ -195,6 +207,21 @@ impl Settings {
                     val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
                 )
             }
+            "metrics_interval_ms" => {
+                self.metrics_interval_ms = val
+                    .as_usize()
+                    .ok_or_else(|| bad("want non-negative integer"))?
+                    as u64
+            }
+            "metrics_window" => {
+                self.metrics_window =
+                    val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
+            "slo" => {
+                self.slo = Some(
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
+                )
+            }
             other => {
                 return Err(ConfigError::Bad {
                     key: other.into(),
@@ -265,6 +292,16 @@ impl Settings {
         if let Some(v) = args.get("fleet") {
             self.fleet = Some(v.to_string());
         }
+        if let Some(v) = args.get("metrics-interval-ms") {
+            self.metrics_interval_ms =
+                v.parse().map_err(|_| as_bad("metrics-interval-ms", v))?;
+        }
+        if let Some(v) = parse_usize("metrics-window")? {
+            self.metrics_window = v;
+        }
+        if let Some(v) = args.get("slo") {
+            self.slo = Some(v.to_string());
+        }
         self.validate()?;
         Ok(self)
     }
@@ -303,6 +340,17 @@ impl Settings {
         if let Some(spec) = &self.fleet {
             if let Err(e) = crate::gpu_sim::Device::parse_fleet_spec(spec) {
                 return bad("fleet", &e);
+            }
+        }
+        if self.metrics_interval_ms == 0 {
+            return bad("metrics_interval_ms", "must be positive");
+        }
+        if self.metrics_window == 0 {
+            return bad("metrics_window", "must be positive");
+        }
+        if let Some(spec) = &self.slo {
+            if let Err(e) = crate::coordinator::slo::parse_rules(spec) {
+                return bad("slo", &e);
             }
         }
         Ok(())
@@ -476,5 +524,55 @@ mod tests {
         assert_eq!(s.tune_budget_ms, 900);
         assert!(!s.tune_on_miss);
         assert_eq!(s.tuner_cache, Some(PathBuf::from("c.json")));
+    }
+
+    #[test]
+    fn observability_keys_layer_and_validate() {
+        let mut s = Settings::default();
+        assert_eq!(s.metrics_interval_ms, 500);
+        assert_eq!(s.metrics_window, 256);
+        assert!(s.slo.is_none());
+        let v = json::parse(
+            r#"{"metrics_interval_ms": 100, "metrics_window": 64,
+                "slo": "p99_ms<=5,shed<=0.05"}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.metrics_interval_ms, 100);
+        assert_eq!(s.metrics_window, 64);
+        assert_eq!(s.slo.as_deref(), Some("p99_ms<=5,shed<=0.05"));
+        s.validate().unwrap();
+
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("metrics-interval-ms", None, ""))
+            .opt(Opt::value("metrics-window", None, ""))
+            .opt(Opt::value("slo", None, ""));
+        let args = cmd
+            .parse(&[
+                "--metrics-interval-ms".into(),
+                "50".into(),
+                "--metrics-window".into(),
+                "32".into(),
+                "--slo".into(),
+                "ape<=0.5".into(),
+            ])
+            .unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.metrics_interval_ms, 50);
+        assert_eq!(s.metrics_window, 32);
+        assert_eq!(s.slo.as_deref(), Some("ape<=0.5"));
+
+        // malformed SLO specs and zero intervals fail validation
+        let mut bad = Settings::default();
+        bad.slo = Some("p99_ms>=5".into());
+        assert!(bad.validate().is_err());
+        bad.slo = Some("latency<=5".into());
+        assert!(bad.validate().is_err());
+        bad.slo = None;
+        bad.metrics_interval_ms = 0;
+        assert!(bad.validate().is_err());
+        bad.metrics_interval_ms = 1;
+        bad.metrics_window = 0;
+        assert!(bad.validate().is_err());
     }
 }

@@ -26,12 +26,16 @@
 
 mod batcher;
 mod metrics;
+pub mod recorder;
 mod request;
 mod router;
 mod service;
+pub mod slo;
 
 pub use batcher::{BatchPlan, Batcher};
 pub use metrics::{Histogram, Metrics, MetricsSnapshot};
+pub use recorder::{FlightRecorder, TimedSnapshot};
 pub use request::{GemmRequest, GemmResponse, MlpRequest, MlpResponse, ReplyTo};
 pub use router::{RouteError, Router};
 pub use service::{mlp_params, Coordinator, CoordinatorHandle, MlpParams};
+pub use slo::{parse_rules, Breach, SloRule};

@@ -1,0 +1,165 @@
+//! Metrics flight recorder: a fixed-capacity ring of periodic
+//! `MetricsSnapshot`s sampled inside `serve`, giving the SLO watchdog
+//! a sliding window to evaluate over and `--metrics-out` a JSON
+//! timeline instead of a single final snapshot.
+
+use super::metrics::MetricsSnapshot;
+use crate::json::{obj, Value};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// One recorded sample: a monotonically increasing sequence number,
+/// seconds since the recorder started, and the snapshot itself.
+#[derive(Debug, Clone)]
+pub struct TimedSnapshot {
+    pub seq: u64,
+    pub t_s: f64,
+    pub snap: MetricsSnapshot,
+}
+
+/// Overwrite-oldest ring of timed metrics snapshots.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    cap: usize,
+    start: Instant,
+    inner: Mutex<(u64, VecDeque<TimedSnapshot>)>,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Self {
+            cap,
+            start: Instant::now(),
+            inner: Mutex::new((0, VecDeque::with_capacity(cap))),
+        }
+    }
+
+    /// Append a sample, evicting the oldest past capacity.
+    pub fn record(&self, snap: MetricsSnapshot) {
+        let t_s = self.start.elapsed().as_secs_f64();
+        let mut g = self.inner.lock().expect("flight recorder");
+        let seq = g.0;
+        g.0 += 1;
+        g.1.push_back(TimedSnapshot { seq, t_s, snap });
+        while g.1.len() > self.cap {
+            g.1.pop_front();
+        }
+    }
+
+    /// Current window, oldest first.
+    pub fn window(&self) -> Vec<TimedSnapshot> {
+        self.inner
+            .lock()
+            .expect("flight recorder")
+            .1
+            .iter()
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("flight recorder").1.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Total samples ever recorded (including evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().expect("flight recorder").0
+    }
+
+    /// JSON timeline: `{"cap": N, "samples": [{seq, t_s, metrics}...]}`.
+    pub fn to_json(&self) -> Value {
+        let samples = self
+            .window()
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("seq", (s.seq as usize).into()),
+                    ("t_s", s.t_s.into()),
+                    ("metrics", s.snap.to_json()),
+                ])
+            })
+            .collect();
+        obj(vec![("cap", self.cap.into()), ("samples", Value::Arr(samples))])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use crate::prop;
+
+    #[test]
+    fn ring_wraparound_preserves_order_and_monotonic_timestamps() {
+        // Property: for random capacities and overfill counts, the
+        // window holds exactly the last `cap` samples with strictly
+        // increasing seq and non-decreasing timestamps.
+        prop::check("flight-recorder ring wraparound", 30, |rng| {
+            let cap = 1 + (rng.next_u64() % 16) as usize;
+            let extra = (rng.next_u64() % 24) as usize;
+            let total = cap + extra;
+            let rec = FlightRecorder::new(cap);
+            let m = Metrics::new();
+            for i in 0..total {
+                if i % 3 == 0 {
+                    m.on_submit();
+                }
+                rec.record(m.snapshot());
+            }
+            prop::ensure_eq(rec.len(), cap, "window is full")?;
+            prop::ensure_eq(
+                rec.recorded(),
+                total as u64,
+                "all records counted",
+            )?;
+            let w = rec.window();
+            for (i, s) in w.iter().enumerate() {
+                prop::ensure_eq(
+                    s.seq,
+                    (total - cap + i) as u64,
+                    "seq is the last cap values in order",
+                )?;
+            }
+            for pair in w.windows(2) {
+                prop::ensure(
+                    pair[1].t_s >= pair[0].t_s,
+                    "timestamps monotonic",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn capacity_floor_and_json_shape() {
+        let rec = FlightRecorder::new(0); // clamped to 1
+        assert_eq!(rec.cap(), 1);
+        assert!(rec.is_empty());
+        let m = Metrics::new();
+        m.on_submit();
+        m.on_complete(1e-4, 2e-4, 1000);
+        rec.record(m.snapshot());
+        rec.record(m.snapshot());
+        assert_eq!(rec.len(), 1);
+        let j = rec.to_json();
+        assert_eq!(j.u("cap").unwrap(), 1);
+        let samples = j.arr("samples").unwrap();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0].u("seq").unwrap(), 1);
+        assert!(samples[0].f("t_s").unwrap() >= 0.0);
+        assert_eq!(
+            samples[0].get("metrics").unwrap().u("completed").unwrap(),
+            1
+        );
+    }
+}

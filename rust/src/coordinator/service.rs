@@ -11,10 +11,12 @@
 
 use super::batcher::Batcher;
 use super::metrics::Metrics;
+use super::recorder::FlightRecorder;
 use super::request::{
     GemmRequest, GemmResponse, MlpRequest, MlpResponse, ReplyTo,
 };
 use super::router::Router;
+use super::slo::{self, SloRule};
 use crate::config::Settings;
 use crate::decomp::GemmShape;
 use crate::exec::{bounded, CancelToken, Receiver, Sender, Stopwatch};
@@ -78,6 +80,11 @@ pub struct Coordinator {
     /// extend process exit by queue-depth × budget.
     tune_stop: CancelToken,
     tuner_cache_path: Option<PathBuf>,
+    /// Periodic metrics-snapshot ring (the flight recorder); filled by
+    /// the sampler thread, exported by `streamk serve --metrics-out`.
+    recorder: Arc<FlightRecorder>,
+    /// Stops the metrics sampler / SLO watchdog thread at shutdown.
+    watch_stop: CancelToken,
 }
 
 impl Coordinator {
@@ -225,6 +232,38 @@ impl Coordinator {
         }
         drop(mlp_tx); // batcher exits when all workers are gone
 
+        // Metrics flight recorder + SLO watchdog: one sampler thread
+        // snapshots `Metrics` into a fixed ring every
+        // `metrics_interval_ms`, evaluates the declarative SLO rules
+        // against each sample, and wires breaches to actions — a
+        // latency/APE breach forces a re-validation tune of the worst
+        // bucket, visible as `slo.breach`/`slo.retune` trace spans.
+        let recorder = Arc::new(FlightRecorder::new(settings.metrics_window));
+        let watch_stop = CancelToken::new();
+        let slo_rules: Vec<SloRule> = settings
+            .slo
+            .as_deref()
+            .and_then(|spec| slo::parse_rules(spec).ok())
+            .unwrap_or_default();
+        {
+            let metrics = metrics.clone();
+            let recorder = recorder.clone();
+            let tune_tx = tune_tx.clone();
+            let stop = watch_stop.clone();
+            let interval = Duration::from_millis(settings.metrics_interval_ms);
+            workers.push(
+                std::thread::Builder::new()
+                    .name("streamk-metrics".into())
+                    .spawn(move || {
+                        watch_loop(
+                            metrics, recorder, slo_rules, tune_tx, stop,
+                            interval,
+                        )
+                    })
+                    .expect("spawn metrics sampler"),
+            );
+        }
+
         Coordinator {
             handle: CoordinatorHandle {
                 tx,
@@ -238,6 +277,8 @@ impl Coordinator {
             tune_tx: Some(tune_tx),
             tune_stop,
             tuner_cache_path: settings.tuner_cache.clone(),
+            recorder,
+            watch_stop,
         }
     }
 
@@ -249,6 +290,11 @@ impl Coordinator {
     /// The fleet behind this coordinator.
     pub fn fleet(&self) -> &Arc<Fleet> {
         &self.fleet
+    }
+
+    /// The metrics flight recorder (periodic snapshot ring).
+    pub fn recorder(&self) -> &Arc<FlightRecorder> {
+        &self.recorder
     }
 
     /// Graceful shutdown: drain queued work, then join all threads.
@@ -265,6 +311,7 @@ impl Coordinator {
         // no request will ever use, then release the coordinator's tune
         // sender so its channel disconnects once the workers exit.
         self.tune_stop.cancel();
+        self.watch_stop.cancel();
         drop(self.tune_tx.take());
         for w in self.workers.drain(..) {
             w.join().expect("coordinator worker panicked");
@@ -468,9 +515,11 @@ fn handle_gemm(
                     // scheduler's prediction with the measured latency,
                     // per shape bucket. The residual also drives the
                     // drift loop below, so mis-predictions re-tune even
-                    // when the bucket has no cache entry yet.
+                    // when the bucket has no cache entry yet. Fleets of
+                    // more than one device key per-device so a slow
+                    // outlier doesn't hide inside the shape's average.
                     metrics.on_residual(
-                        &ShapeBucket::of(shape).key(),
+                        &residual_key(fleet, device, shape),
                         placement.predicted_s,
                         execute_s,
                     );
@@ -797,6 +846,71 @@ mod tests {
         coord.shutdown();
         let _ = std::fs::remove_dir_all(&dir);
     }
+
+    #[test]
+    fn slo_watchdog_trips_p99_and_forces_retune() {
+        // An un-meetable p99 ceiling (0.1µs) must breach within one
+        // flight-recorder sampling window of the first completed
+        // request and force a re-validation tune, observable as
+        // `slo.breach`/`slo.retune` trace events plus the
+        // drift_revalidations counter.
+        let _g = trace::test_lock();
+        trace::set_enabled(true);
+        let _ = trace::drain();
+        let (manifest, dir) = test_manifest("slo");
+        let (engine, _join) = spawn_engine(manifest).unwrap();
+        let settings = Settings {
+            workers: 2,
+            metrics_interval_ms: 5,
+            metrics_window: 64,
+            slo: Some("p99_ms<=0.0001".into()),
+            ..Settings::default()
+        };
+        let coord = Coordinator::start(engine, &settings);
+        for _ in 0..4 {
+            let w = coord.handle.submit_gemm(
+                64,
+                64,
+                64,
+                vec![1.0; 64 * 64],
+                vec![1.0; 64 * 64],
+            );
+            assert!(w.recv().unwrap().result.is_ok());
+        }
+        // the watchdog increments drift_revalidations on every forced
+        // re-tune; wait for the first firing
+        let sw = Stopwatch::start();
+        while coord.handle.metrics().snapshot().drift_revalidations == 0
+            && sw.elapsed_secs() < 30.0
+        {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        let snap = coord.handle.metrics().snapshot();
+        assert!(
+            snap.drift_revalidations >= 1,
+            "SLO watchdog never forced a re-tune"
+        );
+        // give the sampler one more window so the recorder has samples
+        let sw = Stopwatch::start();
+        while coord.recorder().is_empty() && sw.elapsed_secs() < 30.0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(!coord.recorder().is_empty(), "flight recorder stayed empty");
+        let timeline = coord.recorder().to_json();
+        assert!(!timeline.arr("samples").unwrap().is_empty());
+        coord.shutdown();
+        trace::set_enabled(false);
+        let (events, _, _) = trace::drain();
+        assert!(
+            events.iter().any(|e| e.name == "slo.breach"),
+            "no slo.breach trace event"
+        );
+        assert!(
+            events.iter().any(|e| e.name == "slo.retune"),
+            "no slo.retune trace event"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
 }
 
 /// MLP weights are baked into the artifact? No — the MLP artifacts take
@@ -887,6 +1001,120 @@ fn tune_loop(
     }
 }
 
+/// Residual bucket key for a placement: bare shape bucket on a
+/// single-device fleet (existing dashboards/tests unchanged),
+/// `dev{idx}|{bucket}` once a real fleet is behind the coordinator.
+fn residual_key(fleet: &Arc<Fleet>, device: usize, shape: GemmShape) -> String {
+    let bucket = ShapeBucket::of(shape).key();
+    if fleet.len() > 1 {
+        crate::trace::residual::device_key(device, &bucket)
+    } else {
+        bucket
+    }
+}
+
+/// Metrics sampler + SLO watchdog. Every `interval` it snapshots
+/// `metrics` into the flight recorder and evaluates the SLO rules over
+/// the sample. Breaches emit `slo.breach` trace events; latency and
+/// prediction-error breaches additionally force a re-validation tune
+/// of the worst-offending bucket's representative shape on its device
+/// (`slo.retune`) — closing the loop the per-request drift policy only
+/// covers for shapes that keep arriving. A per-rule cooldown keeps a
+/// persistent breach from flooding the tune queue faster than tuning
+/// can help.
+fn watch_loop(
+    metrics: Arc<Metrics>,
+    recorder: Arc<FlightRecorder>,
+    rules: Vec<SloRule>,
+    tune_tx: Sender<TuneJob>,
+    stop: CancelToken,
+    interval: Duration,
+) {
+    /// Samples a breached rule stays quiet after firing its action.
+    const COOLDOWN_SAMPLES: u64 = 4;
+    let mut last_fired: Vec<Option<u64>> = vec![None; rules.len()];
+    let mut sample: u64 = 0;
+    loop {
+        // Sleep in short slices so shutdown never waits out a long
+        // sampling interval.
+        let t0 = Instant::now();
+        while t0.elapsed() < interval {
+            if stop.is_cancelled() {
+                return;
+            }
+            std::thread::sleep(interval.min(Duration::from_millis(5)));
+        }
+        if stop.is_cancelled() {
+            return;
+        }
+        let snap = metrics.snapshot();
+        for b in slo::evaluate(&rules, &snap, None) {
+            let cooling = matches!(
+                last_fired[b.index],
+                Some(at) if sample.saturating_sub(at) < COOLDOWN_SAMPLES
+            );
+            if cooling {
+                continue;
+            }
+            last_fired[b.index] = Some(sample);
+            // Alert: zero-duration span carrying the rule index and
+            // the breaching value in per-mille (integer args only).
+            drop(trace::span2(
+                "slo.breach",
+                "rule",
+                b.index as u64,
+                "pm",
+                (b.value * 1e3) as u64,
+            ));
+            eprintln!(
+                "slo: BREACH {}={:.4} limit={:.4}{}",
+                b.rule,
+                b.value,
+                b.limit,
+                b.bucket
+                    .as_deref()
+                    .map(|bk| format!(" bucket={bk}"))
+                    .unwrap_or_default(),
+            );
+            if !matches!(
+                rules[b.index],
+                SloRule::P99Ms(_) | SloRule::ApeCeil(_)
+            ) {
+                continue;
+            }
+            // Pick the bucket to re-tune: the breach's own (APE rules)
+            // or the worst-predicted residual bucket (latency rules
+            // carry none).
+            let target = b.bucket.or_else(|| {
+                snap.residuals
+                    .iter()
+                    .filter(|r| r.p95_ape.is_finite())
+                    .max_by(|a, b| {
+                        a.p95_ape
+                            .partial_cmp(&b.p95_ape)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                    })
+                    .map(|r| r.bucket.clone())
+            });
+            let Some(key) = target else { continue };
+            let (device, bucket_part) =
+                crate::trace::residual::split_device_key(&key);
+            let Some(bucket) = ShapeBucket::parse(bucket_part) else {
+                continue;
+            };
+            let device = device.unwrap_or(0);
+            metrics.on_drift_revalidate();
+            drop(trace::span1("slo.retune", "device", device as u64));
+            let _ = tune_tx.try_send(TuneJob::Revalidate {
+                device,
+                shape: bucket.representative(),
+            });
+        }
+        recorder.record(snap);
+        sample += 1;
+    }
+}
+
 fn mlp_batch_loop(
     engines: Vec<EngineHandle>,
     metrics: Arc<Metrics>,
@@ -972,9 +1200,10 @@ fn mlp_batch_loop(
         match run {
             Ok((outs, stats)) => {
                 // Residual accounting for the batch's GEMM-equivalent
-                // bucket, same as the GEMM path.
+                // bucket, same as the GEMM path (per-device keyed in
+                // multi-device fleets).
                 metrics.on_residual(
-                    &ShapeBucket::of(eq_shape).key(),
+                    &residual_key(&fleet, placement.device, eq_shape),
                     placement.predicted_s,
                     execute_s,
                 );

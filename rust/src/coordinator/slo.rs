@@ -1,0 +1,276 @@
+//! Declarative SLO rules and their evaluation over metrics snapshots.
+//!
+//! Rules are written as a comma-separated spec (the `--slo` flag /
+//! `"slo"` settings key):
+//!
+//! ```text
+//! p99_ms<=5,shed<=0.05,ape<=0.5,eff>=0.3
+//! ```
+//!
+//! - `p99_ms<=X` — end-to-end p99 latency ceiling in milliseconds;
+//! - `shed<=X`   — shed-rate ceiling (shed / submitted, 0..1);
+//! - `ape<=X`    — Block2Time residual p95 absolute-percentage-error
+//!   ceiling (fraction, 0.5 = 50%) per shape bucket;
+//! - `eff>=X`    — roofline-efficiency floor (only evaluated when the
+//!   caller supplies a measured efficiency, e.g. from the attribution
+//!   profiler).
+//!
+//! The watchdog in `coordinator::service` evaluates these over the
+//! flight-recorder sampling interval and wires breaches to actions:
+//! latency/APE breaches force a background re-tune of the offending
+//! bucket; shed breaches tighten the open-loop admission bound in the
+//! fleet sim (`fleet::sim::run_trace_open_adaptive`).
+
+use super::metrics::MetricsSnapshot;
+
+/// One declarative service-level objective.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SloRule {
+    /// End-to-end p99 latency ceiling, milliseconds.
+    P99Ms(f64),
+    /// Shed-rate ceiling, fraction of submitted requests.
+    ShedRate(f64),
+    /// Residual p95-APE ceiling, fraction.
+    ApeCeil(f64),
+    /// Roofline-efficiency floor, fraction.
+    EffFloor(f64),
+}
+
+impl SloRule {
+    /// Short stable name used in breach events and trace spans.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SloRule::P99Ms(_) => "p99_ms",
+            SloRule::ShedRate(_) => "shed",
+            SloRule::ApeCeil(_) => "ape",
+            SloRule::EffFloor(_) => "eff",
+        }
+    }
+
+    pub fn limit(&self) -> f64 {
+        match self {
+            SloRule::P99Ms(v)
+            | SloRule::ShedRate(v)
+            | SloRule::ApeCeil(v)
+            | SloRule::EffFloor(v) => *v,
+        }
+    }
+}
+
+/// Parse a comma-separated rule spec. Whitespace around rules is
+/// ignored; unknown rules and malformed thresholds are errors.
+pub fn parse_rules(spec: &str) -> Result<Vec<SloRule>, String> {
+    let mut rules = Vec::new();
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (rule, op, value) = if let Some((l, r)) = part.split_once("<=") {
+            (l.trim(), "<=", r.trim())
+        } else if let Some((l, r)) = part.split_once(">=") {
+            (l.trim(), ">=", r.trim())
+        } else {
+            return Err(format!(
+                "SLO rule {part:?}: expected `name<=value` or `name>=value`"
+            ));
+        };
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("SLO rule {part:?}: bad threshold {value:?}"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!(
+                "SLO rule {part:?}: threshold must be finite and >= 0"
+            ));
+        }
+        let parsed = match (rule, op) {
+            ("p99_ms", "<=") => SloRule::P99Ms(v),
+            ("shed", "<=") => SloRule::ShedRate(v),
+            ("ape", "<=") => SloRule::ApeCeil(v),
+            ("eff", ">=") => SloRule::EffFloor(v),
+            _ => {
+                return Err(format!(
+                    "SLO rule {part:?}: unknown rule/operator (expected \
+                     p99_ms<=, shed<=, ape<=, eff>=)"
+                ))
+            }
+        };
+        rules.push(parsed);
+    }
+    if rules.is_empty() {
+        return Err("empty SLO spec".into());
+    }
+    Ok(rules)
+}
+
+/// A rule violation observed on one snapshot.
+#[derive(Debug, Clone)]
+pub struct Breach {
+    /// Rule name (`p99_ms`, `shed`, `ape`, `eff`).
+    pub rule: String,
+    /// Index of the rule in the evaluated slice.
+    pub index: usize,
+    /// Observed value.
+    pub value: f64,
+    /// Configured threshold.
+    pub limit: f64,
+    /// Offending shape bucket, when the rule is bucket-scoped (APE).
+    pub bucket: Option<String>,
+}
+
+/// Evaluate `rules` against a snapshot. `min_eff` is the measured
+/// roofline efficiency when the caller has one (the profiler must be
+/// enabled for it to exist); `EffFloor` rules are skipped otherwise.
+pub fn evaluate(
+    rules: &[SloRule],
+    snap: &MetricsSnapshot,
+    min_eff: Option<f64>,
+) -> Vec<Breach> {
+    let mut out = Vec::new();
+    for (index, rule) in rules.iter().enumerate() {
+        let breach = match rule {
+            SloRule::P99Ms(limit) => {
+                if snap.e2e.count() == 0 {
+                    None
+                } else {
+                    let p99_ms = snap.e2e.quantile_us(0.99) / 1e3;
+                    (p99_ms > *limit).then(|| (p99_ms, *limit, None))
+                }
+            }
+            SloRule::ShedRate(limit) => {
+                if snap.requests == 0 {
+                    None
+                } else {
+                    let rate = snap.shed as f64 / snap.requests as f64;
+                    (rate > *limit).then(|| (rate, *limit, None))
+                }
+            }
+            SloRule::ApeCeil(limit) => snap
+                .residuals
+                .iter()
+                .filter(|r| r.p95_ape.is_finite())
+                .max_by(|a, b| {
+                    a.p95_ape
+                        .partial_cmp(&b.p95_ape)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                })
+                .and_then(|worst| {
+                    (worst.p95_ape > *limit).then(|| {
+                        (worst.p95_ape, *limit, Some(worst.bucket.clone()))
+                    })
+                }),
+            SloRule::EffFloor(limit) => min_eff
+                .and_then(|eff| (eff < *limit).then(|| (eff, *limit, None))),
+        };
+        if let Some((value, limit, bucket)) = breach {
+            out.push(Breach {
+                rule: rule.name().to_string(),
+                index,
+                value,
+                limit,
+                bucket,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+
+    #[test]
+    fn parse_round_trip_and_errors() {
+        let rules =
+            parse_rules(" p99_ms<=5 , shed<=0.05, ape<=0.5, eff>=0.3 ")
+                .unwrap();
+        assert_eq!(
+            rules,
+            vec![
+                SloRule::P99Ms(5.0),
+                SloRule::ShedRate(0.05),
+                SloRule::ApeCeil(0.5),
+                SloRule::EffFloor(0.3),
+            ]
+        );
+        assert_eq!(rules[0].name(), "p99_ms");
+        assert_eq!(rules[3].limit(), 0.3);
+        assert!(parse_rules("").is_err());
+        assert!(parse_rules("p99_ms<=nope").is_err());
+        assert!(parse_rules("latency<=5").is_err());
+        // wrong operator direction is rejected, not silently flipped
+        assert!(parse_rules("eff<=0.3").is_err());
+        assert!(parse_rules("p99_ms>=5").is_err());
+        assert!(parse_rules("p99_ms<=-1").is_err());
+        assert!(parse_rules("p99_ms<=inf").is_err());
+    }
+
+    #[test]
+    fn quiet_snapshot_never_breaches() {
+        let rules = parse_rules("p99_ms<=0.001,shed<=0.0,ape<=0.0").unwrap();
+        let snap = Metrics::new().snapshot();
+        // zero requests / no residuals: every rule is skipped
+        assert!(evaluate(&rules, &snap, None).is_empty());
+    }
+
+    #[test]
+    fn p99_and_shed_breach_on_real_metrics() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_submit();
+        }
+        for _ in 0..8 {
+            // ~10ms e2e latency
+            m.on_complete(2e-3, 8e-3, 1000);
+        }
+        m.on_shed();
+        m.on_shed();
+        let snap = m.snapshot();
+        let rules = parse_rules("p99_ms<=5,shed<=0.1").unwrap();
+        let breaches = evaluate(&rules, &snap, None);
+        assert_eq!(breaches.len(), 2);
+        let p99 = &breaches[0];
+        assert_eq!(p99.rule, "p99_ms");
+        assert_eq!(p99.index, 0);
+        assert!(p99.value > 5.0, "p99 {}", p99.value);
+        assert!(p99.bucket.is_none());
+        let shed = &breaches[1];
+        assert_eq!(shed.rule, "shed");
+        assert!((shed.value - 0.2).abs() < 1e-12);
+        // generous limits: no breach
+        let ok = parse_rules("p99_ms<=1000,shed<=0.5").unwrap();
+        assert!(evaluate(&ok, &snap, None).is_empty());
+    }
+
+    #[test]
+    fn ape_breach_carries_worst_bucket() {
+        let m = Metrics::new();
+        for _ in 0..10 {
+            m.on_residual("64x64x64", Some(1.05e-3), 1e-3); // 5% APE
+            m.on_residual("128x128x128", Some(2e-3), 1e-3); // 100% APE
+        }
+        let snap = m.snapshot();
+        let rules = parse_rules("ape<=0.5").unwrap();
+        let breaches = evaluate(&rules, &snap, None);
+        assert_eq!(breaches.len(), 1);
+        assert_eq!(breaches[0].rule, "ape");
+        assert_eq!(breaches[0].bucket.as_deref(), Some("128x128x128"));
+        assert!(breaches[0].value > 0.5);
+        // the tight bucket alone would pass
+        let loose = parse_rules("ape<=1.5").unwrap();
+        assert!(evaluate(&loose, &snap, None).is_empty());
+    }
+
+    #[test]
+    fn eff_floor_requires_a_measurement() {
+        let rules = parse_rules("eff>=0.5").unwrap();
+        let snap = Metrics::new().snapshot();
+        assert!(evaluate(&rules, &snap, None).is_empty());
+        let breaches = evaluate(&rules, &snap, Some(0.2));
+        assert_eq!(breaches.len(), 1);
+        assert_eq!(breaches[0].rule, "eff");
+        assert!((breaches[0].value - 0.2).abs() < 1e-12);
+        assert!(evaluate(&rules, &snap, Some(0.8)).is_empty());
+    }
+}

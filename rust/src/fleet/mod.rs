@@ -49,6 +49,6 @@ pub use registry::{demo_fleet_devices, Fleet, FleetDevice};
 pub use scheduler::Placement;
 pub use sim::{
     gen_open_trace, gen_trace, run_trace, run_trace_open,
-    run_trace_open_bounded, warm, OpenReport, PlacementPolicy, ShapeMix,
-    SimReport, TimedRequest,
+    run_trace_open_adaptive, run_trace_open_bounded, warm, OpenReport,
+    PlacementPolicy, ShapeMix, SimReport, TimedRequest,
 };

@@ -18,7 +18,7 @@ use crate::decomp::params::KernelParams;
 use crate::decomp::{BlockShape, GemmShape};
 use crate::exec::pool_map;
 use crate::prop::Rng;
-use crate::trace::{ResidualSnapshot, ResidualTracker};
+use crate::trace::{self, ResidualSnapshot, ResidualTracker};
 use crate::tuner::{
     measure, Candidate, Observation, PadPolicy, ShapeBucket, Tuner,
 };
@@ -214,7 +214,16 @@ pub fn run_trace(
             continue; // unbuildable schedule: request dropped
         };
         if let Some(pred) = placement.predicted_s {
-            residuals.observe(&ShapeBucket::of(shape).key(), pred, exec_s);
+            // Multi-device fleets key residuals per device: a slow
+            // outlier's mispredictions must not average away inside
+            // the shape bucket shared with faster devices.
+            let key = ShapeBucket::of(shape).key();
+            let key = if n > 1 {
+                trace::residual::device_key(idx, &key)
+            } else {
+                key
+            };
+            residuals.observe(&key, pred, exec_s);
         }
         busy[idx] += exec_s;
         counts[idx] += 1;
@@ -380,7 +389,44 @@ pub fn run_trace_open_bounded(
     feedback: bool,
     max_queue: usize,
 ) -> OpenReport {
+    // An infinite shed ceiling never adapts: identical to the fixed
+    // bound.
+    run_trace_open_adaptive(
+        fleet,
+        trace,
+        policy,
+        feedback,
+        max_queue,
+        f64::INFINITY,
+    )
+    .0
+}
+
+/// Arrivals per adaptation window of the SLO-coupled admission bound.
+const ADAPT_WINDOW: usize = 32;
+
+/// [`run_trace_open_bounded`] with an *adaptive* admission bound: the
+/// shed rate is evaluated over windows of [`ADAPT_WINDOW`] arrivals,
+/// and a window whose rate exceeds `shed_ceiling` tightens the bound to
+/// ¾ of its current value (floor 1) — the fleet-sim realization of the
+/// SLO watchdog's `shed<=X` rule (each tightening emits `slo.breach` /
+/// `slo.adapt` trace events). Tightening trades more shedding at
+/// admission for shorter queues: under sustained overload the tail
+/// latency of *admitted* requests is what the SLO protects. A
+/// `max_queue` of 0 (unbounded) never adapts — there is no bound to
+/// tighten. Returns the report and the final bound.
+pub fn run_trace_open_adaptive(
+    fleet: &Fleet,
+    trace: &[TimedRequest],
+    policy: PlacementPolicy,
+    feedback: bool,
+    max_queue: usize,
+    shed_ceiling: f64,
+) -> (OpenReport, usize) {
     let n = fleet.len();
+    let mut bound = max_queue;
+    let mut window_shed = 0u64;
+    let mut window_n = 0usize;
     let mut free = vec![0.0f64; n];
     let mut busy = vec![0.0f64; n];
     let mut counts = vec![0u64; n];
@@ -428,13 +474,28 @@ pub fn run_trace_open_bounded(
             }
         };
         // Admission control: drop requests that arrive while the placed
-        // device already holds `max_queue` outstanding requests.
+        // device already holds `bound` outstanding requests.
         let q = &mut outstanding[idx];
         while q.front().is_some_and(|&done| done <= at_s) {
             q.pop_front();
         }
-        if max_queue > 0 && q.len() >= max_queue {
+        let this_shed = bound > 0 && q.len() >= bound;
+        if this_shed {
             shed += 1;
+            window_shed += 1;
+        }
+        window_n += 1;
+        if window_n >= ADAPT_WINDOW {
+            let rate = window_shed as f64 / window_n as f64;
+            if bound > 0 && rate > shed_ceiling {
+                drop(trace::span1("slo.breach", "pm", (rate * 1e3) as u64));
+                bound = (bound * 3 / 4).max(1);
+                drop(trace::span1("slo.adapt", "bound", bound as u64));
+            }
+            window_shed = 0;
+            window_n = 0;
+        }
+        if this_shed {
             continue;
         }
         let cand = tuned_candidate(fleet, idx, shape);
@@ -477,18 +538,21 @@ pub fn run_trace_open_bounded(
             - 1;
         delays[idx]
     };
-    OpenReport {
-        policy,
-        requests: trace.len(),
-        makespan_s: makespan,
-        total_flops,
-        device_busy_s: busy,
-        device_requests: counts,
-        queue_delay_mean_s: mean,
-        queue_delay_p95_s: p95,
-        shed,
-        dropped,
-    }
+    (
+        OpenReport {
+            policy,
+            requests: trace.len(),
+            makespan_s: makespan,
+            total_flops,
+            device_busy_s: busy,
+            device_requests: counts,
+            queue_delay_mean_s: mean,
+            queue_delay_p95_s: p95,
+            shed,
+            dropped,
+        },
+        bound,
+    )
 }
 
 #[cfg(test)]
@@ -707,6 +771,77 @@ mod tests {
             bounded.queue_delay_p95_s,
             unbounded.queue_delay_p95_s
         );
+    }
+
+    #[test]
+    fn adaptive_bound_tightens_under_sustained_overload() {
+        let fleet = quick_fleet();
+        let mix = ShapeMix::skewed_default();
+        warm(&fleet, &mix.shapes());
+        // Same overload construction as the shedding test: 2x what
+        // round-robin sustains, long enough for several adapt windows.
+        let closed = run_trace(
+            &fleet,
+            &gen_trace(42, 60, &mix),
+            PlacementPolicy::RoundRobin,
+            false,
+        );
+        let rate = 2.0 * 60.0 / closed.makespan_s;
+        let trace = gen_open_trace(9, 200, &mix, Arrival::Poisson { rate });
+        let (report, bound) = run_trace_open_adaptive(
+            &fleet,
+            &trace,
+            PlacementPolicy::RoundRobin,
+            false,
+            8,
+            0.01, // any real shedding breaches and tightens
+        );
+        assert!(report.shed > 0, "overload must shed");
+        assert!(
+            bound < 8,
+            "sustained shed breach must tighten the bound: {bound}"
+        );
+        assert!(bound >= 1, "the bound never collapses to zero");
+        assert_eq!(
+            (report.shed
+                + report.dropped
+                + report.device_requests.iter().sum::<u64>())
+                as usize,
+            trace.len(),
+            "every request is served, shed, or dropped"
+        );
+        // an infinite ceiling is exactly the fixed bound
+        let (fixed, same) = run_trace_open_adaptive(
+            &fleet,
+            &trace,
+            PlacementPolicy::RoundRobin,
+            false,
+            8,
+            f64::INFINITY,
+        );
+        assert_eq!(same, 8);
+        assert_eq!(
+            fixed.shed,
+            run_trace_open_bounded(
+                &fleet,
+                &trace,
+                PlacementPolicy::RoundRobin,
+                false,
+                8,
+            )
+            .shed
+        );
+        // unbounded runs have nothing to tighten even at ceiling 0
+        let (unbounded, still_zero) = run_trace_open_adaptive(
+            &fleet,
+            &trace,
+            PlacementPolicy::RoundRobin,
+            false,
+            0,
+            0.0,
+        );
+        assert_eq!(still_zero, 0);
+        assert_eq!(unbounded.shed, 0);
     }
 
     #[test]

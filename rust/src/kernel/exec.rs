@@ -56,6 +56,8 @@ use super::{default_threads, Epilogue};
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape};
 use crate::exec::scope_map_with;
 use crate::trace;
+use std::sync::atomic::Ordering;
+use std::time::Instant;
 
 /// Where one work item's accumulator goes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -383,9 +385,21 @@ pub fn execute_opts(
     // pass; non-owned direct accumulators drain window by window.
     let mut partial_accs: Vec<Option<Vec<f32>>> = vec![None; desc.jobs.len()];
 
+    // Roofline attribution: disabled is one relaxed load plus `Option`
+    // branches (held to the same ≤1% gate as the span hook); enabled,
+    // workers bump the shared counters and the dispatching thread times
+    // each pass — the passes run sequentially here, so their sum is the
+    // accounted share of the dispatch wall time.
+    let prof = trace::profile::enabled();
+    let counters = prof.then(trace::profile::DispatchCounters::default);
+    let ctr = counters.as_ref();
+    let mut times = trace::profile::PassTimes::default();
+    let t_all = prof.then(Instant::now);
+
     // Pass 0: owned tiles stream straight into C from the workers — no
     // staging arena, no ordered drain. Each owned element is written
     // exactly once in the whole run, so timing cannot change the bits.
+    let t_pass = prof.then(Instant::now);
     if opts.direct_store {
         let owned: Vec<usize> =
             (0..desc.jobs.len()).filter(|&i| desc.jobs[i].owned).collect();
@@ -415,7 +429,7 @@ pub fn execute_opts(
                     st.acc.resize(bm * bn, 0.0);
                     accumulate_job(
                         a, b, k, n, bm, bn, kc, backend, job, &mut st.buf,
-                        &mut st.acc,
+                        &mut st.acc, ctr,
                     );
                     unsafe {
                         store_owned(
@@ -423,9 +437,18 @@ pub fn execute_opts(
                             epilogue,
                         );
                     }
+                    if let Some(c) = ctr {
+                        c.store_bytes.fetch_add(
+                            (bm * bn * 4) as u64,
+                            Ordering::Relaxed,
+                        );
+                    }
                 },
             );
         }
+    }
+    if let Some(t) = t_pass {
+        times.direct_ns += t.elapsed().as_nanos() as u64;
     }
 
     // Passes 1+2, windowed over the remaining jobs: compute a window of
@@ -439,6 +462,7 @@ pub fn execute_opts(
     let mut start = 0;
     while start < rest.len() {
         let end = (start + WINDOW).min(rest.len());
+        let t_pass = prof.then(Instant::now);
         let accs: Vec<Vec<f32>> = {
             let _sp = trace::span2(
                 "kernel.windowed",
@@ -474,11 +498,16 @@ pub fn execute_opts(
                     let mut acc = vec![0.0f32; bm * bn];
                     accumulate_job(
                         a, b, k, n, bm, bn, kc, backend, job, buf, &mut acc,
+                        ctr,
                     );
                     acc
                 },
             )
         };
+        if let Some(t) = t_pass {
+            times.windowed_ns += t.elapsed().as_nanos() as u64;
+        }
+        let t_pass = prof.then(Instant::now);
         let _ss = trace::span2(
             "kernel.store",
             "start",
@@ -490,19 +519,31 @@ pub fn execute_opts(
             let ji = rest[start + off];
             let job = &desc.jobs[ji];
             match job.dest {
-                Dest::Store => store_tile(
-                    &mut c, n, job.r0, job.c0, bm, bn, &acc, epilogue,
-                ),
+                Dest::Store => {
+                    store_tile(
+                        &mut c, n, job.r0, job.c0, bm, bn, &acc, epilogue,
+                    );
+                    if let Some(ct) = ctr {
+                        ct.store_bytes.fetch_add(
+                            (bm * bn * 4) as u64,
+                            Ordering::Relaxed,
+                        );
+                    }
+                }
                 Dest::Partial { .. } => {
                     partial_accs[ji] = Some(acc);
                 }
             }
         }
         drop(_ss);
+        if let Some(t) = t_pass {
+            times.store_ns += t.elapsed().as_nanos() as u64;
+        }
         start = end;
     }
 
     // Pass 3: fixup-ordered reduction of partial K segments.
+    let t_pass = prof.then(Instant::now);
     let _sf = trace::span2(
         "kernel.fixup",
         "tiles",
@@ -525,6 +566,23 @@ pub fn execute_opts(
             }
         }
         store_tile(&mut c, n, ft.r0, ft.c0, bm, bn, &facc, epilogue);
+        if let Some(ct) = ctr {
+            ct.store_bytes
+                .fetch_add((bm * bn * 4) as u64, Ordering::Relaxed);
+        }
+    }
+    if let Some(t) = t_pass {
+        times.fixup_ns += t.elapsed().as_nanos() as u64;
+    }
+    if let Some(counters) = counters.as_ref() {
+        trace::profile::record_dispatch(
+            desc.shape,
+            desc.class_counts(),
+            desc.fixup.len(),
+            counters,
+            &times,
+            t_all.expect("profiler epoch").elapsed().as_nanos() as u64,
+        );
     }
     c
 }
@@ -532,7 +590,9 @@ pub fn execute_opts(
 /// Accumulate one work item into `acc` (zero-initialized by the
 /// caller): stream its K range in `kc`-deep chunks through pack +
 /// microkernel. K chunks ascend, so per-element FP order matches the
-/// reference exactly regardless of the chunk length.
+/// reference exactly regardless of the chunk length. When the
+/// attribution profiler is on, `ctr` receives this job's exact flop
+/// and packed-byte counts plus the time spent packing.
 #[allow(clippy::too_many_arguments)]
 fn accumulate_job(
     a: &[f32],
@@ -546,11 +606,20 @@ fn accumulate_job(
     job: &TileJob,
     buf: &mut PackBuf,
     acc: &mut [f32],
+    ctr: Option<&trace::profile::DispatchCounters>,
 ) {
+    if let Some(c) = ctr {
+        let kspan = job.kc1 - job.kc0;
+        c.flops
+            .fetch_add(2 * (bm * bn * kspan) as u64, Ordering::Relaxed);
+        c.pack_bytes
+            .fetch_add(((bm + bn) * kspan * 4) as u64, Ordering::Relaxed);
+    }
     let mut kcur = job.kc0;
     while kcur < job.kc1 {
         let kv = kc.max(1).min(job.kc1 - kcur);
         {
+            let t = ctr.map(|_| Instant::now());
             let _sp = trace::span2(
                 "kernel.pack",
                 "tile",
@@ -560,6 +629,12 @@ fn accumulate_job(
             );
             pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
             pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+            if let (Some(c), Some(t)) = (ctr, t) {
+                c.pack_ns.fetch_add(
+                    t.elapsed().as_nanos() as u64,
+                    Ordering::Relaxed,
+                );
+            }
         }
         block_update_with(backend, &buf.a, &buf.b, bm, bn, kv, acc);
         kcur += kv;
@@ -1094,5 +1169,139 @@ mod tests {
         assert!(got[0].is_nan());
         assert!(matmul(&[], &[], 0, 0, 4).is_empty());
         assert_eq!(matmul(&[], &[], 2, 0, 2), vec![0.0; 4]);
+    }
+
+    /// The attribution counters are *exact*, not sampled: one profiled
+    /// dispatch books precisely the descriptor's MAC-FLOPs, the packed
+    /// panel bytes, one store per output tile, and the per-class tile
+    /// counts. (Shape chosen so its pow2 bucket collides with no other
+    /// test that executes concurrently without the trace lock.)
+    #[test]
+    fn profiler_counters_are_exact_per_dispatch() {
+        let _g = crate::trace::test_lock();
+        let (shape, flat, block) =
+            flat_of(320, 320, 320, 7, BlockShape::new(16, 16, 8));
+        let desc = ExecDesc::new(shape, block, &flat);
+        let mut rng = prop::Rng::new(2024);
+        let a = Matrix::random(320, 320, &mut rng);
+        let b = Matrix::random(320, 320, &mut rng);
+
+        trace::profile::set_enabled(true);
+        let _ = trace::profile::drain();
+        let got = execute_threads(&a.data, &b.data, &desc, Epilogue::None, 4);
+        trace::profile::set_enabled(false);
+        let profiles = trace::profile::drain();
+
+        let key = crate::tuner::ShapeBucket::of(shape).key();
+        let p = profiles
+            .iter()
+            .find(|p| p.bucket == key)
+            .expect("profiled bucket present");
+        assert_eq!(p.dispatches, 1);
+        // flops match the descriptor's MAC count exactly
+        assert_eq!(p.flops, desc.macs);
+        // aligned covering schedule: every output element stored once
+        assert_eq!(p.store_bytes, (320 * 320 * 4) as u64);
+        // pack traffic: (bm + bn) · K-span · 4 bytes summed over jobs
+        let want_pack: u64 = desc
+            .jobs
+            .iter()
+            .map(|j| ((block.bm + block.bn) * (j.kc1 - j.kc0) * 4) as u64)
+            .sum();
+        assert_eq!(p.pack_bytes, want_pack);
+        // per-class tile counts mirror the descriptor
+        let (owned, ordered, partial) = desc.class_counts();
+        assert_eq!(
+            (p.owned, p.ordered, p.partial),
+            (owned as u64, ordered as u64, partial as u64)
+        );
+        assert_eq!(p.fixup_tiles, desc.fixup.len() as u64);
+        assert!(p.total_ns > 0);
+        assert!(p.achieved_gflops() > 0.0);
+        // the four sequential passes account for (nearly) all of the
+        // dispatch wall time — the release bench gates this at 95%
+        assert!(p.accounted() > 0.8, "accounted {}", p.accounted());
+        assert!(p.accounted() <= 1.05, "accounted {}", p.accounted());
+
+        // the profiled run still produces the reference bits
+        let want = execute_flat_ref(&a.data, &b.data, shape, &flat, block);
+        bits_equal(&got, &want, "profiled run");
+
+        // all-windowed dispatch books identical byte/flop totals
+        trace::profile::set_enabled(true);
+        let _ = trace::profile::drain();
+        let _ = execute_opts(
+            &a.data,
+            &b.data,
+            &desc,
+            Epilogue::None,
+            &ExecOpts {
+                direct_store: false,
+                threads: 2,
+                ..ExecOpts::auto(desc.macs)
+            },
+        );
+        trace::profile::set_enabled(false);
+        let profiles = trace::profile::drain();
+        let w = profiles.iter().find(|p| p.bucket == key).unwrap();
+        assert_eq!(w.flops, desc.macs);
+        assert_eq!(w.store_bytes, (320 * 320 * 4) as u64);
+        assert_eq!(w.pack_bytes, want_pack);
+        // nothing streams: direct pass is (near) empty, windowed busy
+        assert!(w.windowed_ns > 0);
+    }
+
+    /// Satellite property: attribution survives interleaved dispatches
+    /// from independent `exec::pool` workers — each dispatching thread
+    /// times its own passes, so per-bucket pass sums stay within
+    /// tolerance of the booked wall time and counters stay exact.
+    #[test]
+    fn profiler_attribution_holds_under_interleaved_pool_dispatch() {
+        let _g = crate::trace::test_lock();
+        let (shape, flat, block) =
+            flat_of(288, 288, 96, 5, BlockShape::new(16, 16, 8));
+        let desc = ExecDesc::new(shape, block, &flat);
+        let macs = desc.macs;
+
+        trace::profile::set_enabled(true);
+        let _ = trace::profile::drain();
+        let runs = 4usize;
+        let outs = crate::exec::pool_map(runs, (0..runs).collect(), {
+            move |seed: usize| {
+                let s = GemmShape::new(288, 288, 96);
+                let schedule = crate::decomp::build_schedule(
+                    s,
+                    BlockShape::new(16, 16, 8),
+                    5,
+                )
+                .unwrap();
+                let flat =
+                    crate::decomp::FlatSchedule::from_schedule(&schedule);
+                let desc = ExecDesc::new(s, schedule.block, &flat);
+                let mut rng = prop::Rng::new(seed as u64 + 7);
+                let a = Matrix::random(288, 96, &mut rng);
+                let b = Matrix::random(96, 288, &mut rng);
+                execute_threads(&a.data, &b.data, &desc, Epilogue::None, 2)
+                    .len()
+            }
+        });
+        trace::profile::set_enabled(false);
+        let profiles = trace::profile::drain();
+        assert!(outs.iter().all(|&l| l == 288 * 288));
+
+        let key = crate::tuner::ShapeBucket::of(shape).key();
+        let p = profiles
+            .iter()
+            .find(|p| p.bucket == key)
+            .expect("interleaved bucket present");
+        assert_eq!(p.dispatches, runs as u64);
+        assert_eq!(p.flops, macs * runs as u64);
+        assert_eq!(p.store_bytes, (288 * 288 * 4 * runs) as u64);
+        // pass times are sub-intervals of each dispatch's wall time:
+        // their sum can never meaningfully exceed it, and on real work
+        // it covers most of it even with worker interleaving
+        assert!(p.accounted() <= 1.05, "accounted {}", p.accounted());
+        assert!(p.accounted() > 0.5, "accounted {}", p.accounted());
+        assert!(p.total_ns > 0);
     }
 }

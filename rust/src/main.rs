@@ -9,6 +9,7 @@
 //!   sweep      CU-count utilization sweep (Figure-1 style, text plot)
 //!   route      show the router's artifact decision for a shape
 //!   trace      run one traced GEMM and pretty-print the span tree
+//!   profile    roofline attribution profile for repeated dispatches
 //!   intensity  arithmetic-intensity / roofline report for a shape
 //!   info       list artifacts in the manifest
 //!
@@ -25,8 +26,8 @@ use streamk::decomp::{
 };
 use streamk::exec::Stopwatch;
 use streamk::fleet::{
-    gen_open_trace, gen_trace, run_trace, run_trace_open_bounded, warm,
-    Fleet, PlacementPolicy, ShapeMix,
+    gen_open_trace, gen_trace, run_trace, run_trace_open_adaptive,
+    run_trace_open_bounded, warm, Fleet, PlacementPolicy, ShapeMix,
 };
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::plan::PlanCacheStats;
@@ -53,6 +54,7 @@ fn main() {
         "sweep" => cmd_sweep(&argv),
         "route" => cmd_route(&argv),
         "trace" => cmd_trace(&argv),
+        "profile" => cmd_profile(&argv),
         "intensity" => cmd_intensity(&argv),
         "info" => cmd_info(&argv),
         "--help" | "-h" | "help" => {
@@ -70,7 +72,7 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|trace|intensity|info> [options]\n\
+     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|trace|profile|intensity|info> [options]\n\
      \n\
      quickstart:\n\
        streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
@@ -81,6 +83,8 @@ fn top_usage() -> String {
        streamk fleet --open-rate 500                     # open-loop arrivals\n\
        streamk plan --m 1920 --n 2000 --k 2000           # inspect a cached plan\n\
        streamk trace --m 256 --n 256 --k 256             # one traced GEMM, span tree\n\
+       streamk profile --m 512 --n 512 --k 512           # roofline attribution\n\
+       streamk serve --slo \"p99_ms<=5,shed<=0.05\"        # SLO watchdog on\n\
      \n\
      run a subcommand with --help for its options"
         .to_string()
@@ -132,7 +136,26 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::value("max-batch", Some("16"), "dynamic batcher limit"))
         .opt(Opt::value("algo", Some("streamk"), "routing algorithm"))
         .opt(Opt::value("pad", Some("none"), "padding policy"))
-        .opt(Opt::value("metrics-out", None, "write metrics JSON here"))
+        .opt(Opt::value(
+            "metrics-out",
+            None,
+            "write final metrics + flight-recorder timeline JSON here",
+        ))
+        .opt(Opt::value(
+            "metrics-interval-ms",
+            None,
+            "flight-recorder sampling interval (default 500)",
+        ))
+        .opt(Opt::value(
+            "metrics-window",
+            None,
+            "flight-recorder ring capacity in samples (default 256)",
+        ))
+        .opt(Opt::value(
+            "slo",
+            None,
+            "SLO watchdog rules, e.g. p99_ms<=5,shed<=0.05,ape<=0.5",
+        ))
         .opt(Opt::value(
             "trace-out",
             None,
@@ -161,6 +184,7 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .example("streamk serve --tuner-cache tuner_cache.json")
         .example("streamk serve --fleet mi200,mi100 --requests 256")
         .example("streamk serve --trace-out trace.json --trace-sample 4")
+        .example("streamk serve --slo \"p99_ms<=5,shed<=0.05\" --metrics-interval-ms 100")
         .example("streamk serve --artifacts examples/minimal_artifacts  # no make artifacts");
     let args = parse_or_exit(&cmd, argv);
     let settings = match Settings::default().apply_cli(&args) {
@@ -297,12 +321,18 @@ fn cmd_serve(argv: &[String]) -> i32 {
         }
     }
     if let Some(path) = args.get("metrics-out") {
-        std::fs::write(
-            path,
-            streamk::json::to_string_pretty(&snap.to_json()),
-        )
-        .expect("write metrics");
-        println!("metrics written to {path}");
+        // Final snapshot plus the flight-recorder timeline: the last
+        // `--metrics-window` periodic samples, each timestamped.
+        let doc = streamk::json::obj(vec![
+            ("final", snap.to_json()),
+            ("timeline", coord.recorder().to_json()),
+        ]);
+        std::fs::write(path, streamk::json::to_string_pretty(&doc))
+            .expect("write metrics");
+        println!(
+            "metrics written to {path} ({} timeline samples)",
+            coord.recorder().len()
+        );
     }
     coord.shutdown();
     if let Some(path) = &trace_out {
@@ -627,10 +657,17 @@ fn cmd_fleet(argv: &[String]) -> i32 {
         Some("0"),
         "open-loop admission bound: shed past this per-device queue depth (0 = unbounded)",
     ))
+    .opt(Opt::value(
+        "shed-slo",
+        None,
+        "adaptive admission: tighten --max-queue while the windowed shed \
+         rate exceeds this fraction (needs --open-rate and --max-queue)",
+    ))
     .example("streamk fleet --requests 400")
     .example("streamk fleet --devices mi200,mi100 --no-warm")
     .example("streamk fleet --open-rate 500   # queueing delay visible")
-    .example("streamk fleet --open-rate 500 --max-queue 4   # shed rate visible");
+    .example("streamk fleet --open-rate 500 --max-queue 4   # shed rate visible")
+    .example("streamk fleet --open-rate 500 --max-queue 8 --shed-slo 0.05");
     let args = parse_or_exit(&cmd, argv);
     let devices = match Device::parse_fleet_spec(args.str("devices")) {
         Ok(d) => d,
@@ -769,6 +806,25 @@ fn cmd_fleet(argv: &[String]) -> i32 {
             ]);
         }
         t.print();
+        if let Some(ceiling) = args.f64("shed-slo") {
+            let start = max_queue.max(1);
+            let (adapt, bound) = run_trace_open_adaptive(
+                &fleet,
+                &open,
+                PlacementPolicy::Block2Time,
+                false,
+                start,
+                ceiling,
+            );
+            println!(
+                "shed SLO <= {:.1}%: admission bound {start} -> {bound} | \
+                 shed {:.1}% | queue p95 {:.3} ms (tightening trades \
+                 admission for the admitted tail)",
+                ceiling * 100.0,
+                adapt.shed_rate() * 100.0,
+                adapt.queue_delay_p95_s * 1e3,
+            );
+        }
     }
     println!("\n{}", plan_stats_line(&streamk::plan::global().stats()));
     0
@@ -887,8 +943,13 @@ fn cmd_trace(argv: &[String]) -> i32 {
         None,
         "also write Chrome trace-event JSON here (load at ui.perfetto.dev)",
     ))
+    .opt(Opt::flag(
+        "top",
+        "also print a flat hottest-spans-by-self-time summary",
+    ))
     .example("streamk trace --m 256 --n 256 --k 256")
-    .example("streamk trace --m 512 --n 512 --k 512 --out trace.json");
+    .example("streamk trace --m 512 --n 512 --k 512 --out trace.json")
+    .example("streamk trace --m 512 --n 512 --k 512 --top");
     let args = parse_or_exit(&cmd, argv);
     let shape = GemmShape::new(
         args.usize("m").unwrap(),
@@ -969,6 +1030,28 @@ fn cmd_trace(argv: &[String]) -> i32 {
     );
     print!("{}", trace::render_tree(&events, &threads));
 
+    if args.flag("top") {
+        let mut t = streamk::bench::Table::new(&[
+            "span", "count", "total ms", "self ms", "self %",
+        ]);
+        let rows = trace::top_spans(&events);
+        let all_self: u64 = rows.iter().map(|r| r.3).sum();
+        for (name, count, total_ns, self_ns) in &rows {
+            t.row(&[
+                name.to_string(),
+                count.to_string(),
+                format!("{:.3}", *total_ns as f64 / 1e6),
+                format!("{:.3}", *self_ns as f64 / 1e6),
+                format!(
+                    "{:.1}",
+                    *self_ns as f64 / (all_self.max(1)) as f64 * 100.0
+                ),
+            ]);
+        }
+        println!("\nhottest spans by self time:");
+        t.print();
+    }
+
     let mut residuals = trace::ResidualTracker::new();
     residuals.observe(&ShapeBucket::of(shape).key(), predicted_s, measured_s);
     println!(
@@ -985,6 +1068,130 @@ fn cmd_trace(argv: &[String]) -> i32 {
         std::fs::write(path, streamk::json::to_string_pretty(&doc))
             .expect("write trace");
         println!("trace written to {path} — load at ui.perfetto.dev");
+    }
+    0
+}
+
+fn cmd_profile(argv: &[String]) -> i32 {
+    let cmd = shape_opts(Command::new(
+        "streamk profile",
+        "roofline attribution profile: execute a GEMM with per-phase \
+         counters enabled and report achieved GFLOPS / GB/s against the \
+         host roofline, with the direct/windowed/store/fixup breakdown",
+    ))
+    .opt(Opt::value("cus", Some("8"), "compute units"))
+    .opt(Opt::value("runs", Some("3"), "profiled dispatches"))
+    .opt(Opt::value("out", None, "also write the profile JSON here"))
+    .example("streamk profile --m 512 --n 512 --k 512")
+    .example("streamk profile --m 1920 --n 2000 --k 2000 --runs 5 --out profile.json");
+    let args = parse_or_exit(&cmd, argv);
+    let shape = GemmShape::new(
+        args.usize("m").unwrap(),
+        args.usize("n").unwrap(),
+        args.usize("k").unwrap(),
+    );
+    let cus = args.usize("cus").unwrap().clamp(1, 120);
+    let runs = args.usize("runs").unwrap().max(1);
+
+    let plan = match streamk::plan::global().get_or_build(
+        shape,
+        BlockShape::default(),
+        4,
+        cus,
+    ) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("cannot plan {shape:?}: {e}");
+            return 1;
+        }
+    };
+    let desc = plan.exec();
+    let opts = streamk::kernel::ExecOpts::auto(desc.macs);
+    let threads = opts.threads;
+
+    let mut rng = streamk::prop::Rng::new(7);
+    let a = rng.normal_f32_vec(shape.m * shape.k);
+    let b = rng.normal_f32_vec(shape.k * shape.n);
+
+    trace::profile::set_enabled(true);
+    let _ = trace::profile::drain(); // start from an empty registry
+    for _ in 0..runs {
+        let c = streamk::kernel::execute_opts(
+            &a,
+            &b,
+            desc,
+            streamk::kernel::Epilogue::None,
+            &opts,
+        );
+        std::hint::black_box(c);
+    }
+    trace::profile::set_enabled(false);
+    let profiles = trace::profile::drain();
+    let roofline = trace::profile::host_roofline(threads);
+
+    println!(
+        "roofline attribution: {}x{}x{} × {runs} dispatches on {threads} \
+         threads ({} jobs, kc {})\n",
+        shape.m,
+        shape.n,
+        shape.k,
+        desc.jobs.len(),
+        desc.kc,
+    );
+    let mut t = streamk::bench::Table::new(&[
+        "bucket", "disp", "ms", "GFLOPS", "GB/s", "ai", "eff %", "direct %",
+        "windowed %", "store %", "fixup %", "acct %",
+    ]);
+    for p in &profiles {
+        let pct = |ns: u64| {
+            if p.total_ns == 0 {
+                0.0
+            } else {
+                ns as f64 / p.total_ns as f64 * 100.0
+            }
+        };
+        t.row(&[
+            p.bucket.clone(),
+            p.dispatches.to_string(),
+            format!("{:.2}", p.total_ns as f64 / 1e6),
+            format!("{:.2}", p.achieved_gflops()),
+            format!("{:.2}", p.achieved_gbps()),
+            format!("{:.1}", p.ai()),
+            format!("{:.1}", p.efficiency(&roofline) * 100.0),
+            format!("{:.0}", pct(p.direct_ns)),
+            format!("{:.0}", pct(p.windowed_ns)),
+            format!("{:.0}", pct(p.store_ns)),
+            format!("{:.0}", pct(p.fixup_ns)),
+            format!("{:.0}", p.accounted() * 100.0),
+        ]);
+    }
+    t.print();
+    println!();
+    for p in &profiles {
+        println!("{}", p.summary(&roofline));
+    }
+    println!(
+        "\n(host roofline: {:.1} GFLOP/s peak across {threads} \
+         thread(s), {:.1} GB/s — the interpreter stand-in for the \
+         paper's MI200 numbers; attribution sums dispatcher pass wall \
+         times, acct >= 95% is the integration gate)",
+        roofline.peak_flops / 1e9,
+        roofline.mem_bw / 1e9,
+    );
+    if let Some(path) = args.get("out") {
+        let doc = streamk::json::obj(vec![(
+            "buckets",
+            streamk::json::Value::Arr(
+                profiles.iter().map(|p| p.to_json()).collect(),
+            ),
+        )]);
+        std::fs::write(path, streamk::json::to_string_pretty(&doc))
+            .expect("write profile");
+        println!("profile written to {path}");
+    }
+    if profiles.is_empty() {
+        eprintln!("error: no dispatches were profiled");
+        return 1;
     }
     0
 }

@@ -89,6 +89,64 @@ pub fn render_tree(events: &[TraceEvent], threads: &[ThreadMeta]) -> String {
     out
 }
 
+/// Flat summary of the hottest spans by *self* time (span duration
+/// minus the time covered by its direct children on the same track).
+/// Returns `(name, count, total_ns, self_ns)` rows sorted hottest-self
+/// first. Events must be the sorted result of [`super::drain`].
+pub fn top_spans(
+    events: &[TraceEvent],
+) -> Vec<(&'static str, u64, u64, u64)> {
+    struct Frame {
+        name: &'static str,
+        end_ns: u64,
+        dur_ns: u64,
+        child_ns: u64,
+    }
+    let mut totals: Vec<(&'static str, u64, u64, u64)> = Vec::new();
+    let mut credit = |name: &'static str, dur: u64, self_ns: u64| {
+        match totals.iter_mut().find(|t| t.0 == name) {
+            Some(t) => {
+                t.1 += 1;
+                t.2 += dur;
+                t.3 += self_ns;
+            }
+            None => totals.push((name, 1, dur, self_ns)),
+        }
+    };
+    let mut stack: Vec<Frame> = Vec::new();
+    let mut pop = |stack: &mut Vec<Frame>,
+                   credit: &mut dyn FnMut(&'static str, u64, u64)| {
+        let f = stack.pop().expect("pop on empty span stack");
+        credit(f.name, f.dur_ns, f.dur_ns.saturating_sub(f.child_ns));
+        if let Some(parent) = stack.last_mut() {
+            parent.child_ns += f.dur_ns;
+        }
+    };
+    let mut prev_tid: Option<u64> = None;
+    for e in events {
+        // track switch or sibling start: close finished frames
+        while let Some(top) = stack.last() {
+            if prev_tid != Some(e.tid) || e.start_ns >= top.end_ns {
+                pop(&mut stack, &mut credit);
+            } else {
+                break;
+            }
+        }
+        prev_tid = Some(e.tid);
+        stack.push(Frame {
+            name: e.name,
+            end_ns: e.start_ns + e.dur_ns,
+            dur_ns: e.dur_ns,
+            child_ns: 0,
+        });
+    }
+    while !stack.is_empty() {
+        pop(&mut stack, &mut credit);
+    }
+    totals.sort_by(|a, b| b.3.cmp(&a.3));
+    totals
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -215,6 +273,42 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn top_spans_attributes_self_time() {
+        let _g = trace::test_lock();
+        trace::set_enabled(true);
+        let _ = trace::drain();
+        {
+            let _root = trace::span("test.top.root");
+            for _ in 0..3 {
+                let _child = trace::span("test.top.child");
+                std::hint::black_box(
+                    (0..2000u64).fold(0u64, |a, b| a.wrapping_add(b)),
+                );
+            }
+        }
+        trace::set_enabled(false);
+        let (events, _, _) = trace::drain();
+        let events: Vec<_> = events
+            .into_iter()
+            .filter(|e| e.name.starts_with("test.top"))
+            .collect();
+        let top = top_spans(&events);
+        assert_eq!(top.len(), 2);
+        let root = top.iter().find(|t| t.0 == "test.top.root").unwrap();
+        let child = top.iter().find(|t| t.0 == "test.top.child").unwrap();
+        assert_eq!(root.1, 1);
+        assert_eq!(child.1, 3);
+        // leaf spans: self == total; parent: self = total − children
+        assert_eq!(child.2, child.3);
+        assert!(root.3 < root.2, "root self {} total {}", root.3, root.2);
+        assert!(root.2 >= child.2, "root contains children");
+        assert_eq!(root.3, root.2 - child.2);
+        // total time is conserved: Σself == Σroot durations
+        let self_sum: u64 = top.iter().map(|t| t.3).sum();
+        assert_eq!(self_sum, root.2);
     }
 
     /// Recursive random span tree: each level opens a span, maybe

@@ -30,9 +30,10 @@
 //! explicit parent ids are recorded.
 
 pub mod export;
+pub mod profile;
 pub mod residual;
 
-pub use export::{chrome_trace_json, render_tree};
+pub use export::{chrome_trace_json, render_tree, top_spans};
 pub use residual::{ResidualSnapshot, ResidualTracker};
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -122,6 +122,29 @@ impl ResidualTracker {
     }
 }
 
+/// Bucket key carrying a fleet device dimension: `dev{idx}|{bucket}`.
+/// Without it, residuals from a heterogeneous fleet (a 4×-speed-range
+/// device set) collapse into one shape bucket and skew the EWMA bias
+/// that drives re-tunes. Single-device serving keeps the bare shape
+/// key so existing dashboards (and tests) are unchanged.
+pub fn device_key(device: usize, bucket: &str) -> String {
+    format!("dev{device}|{bucket}")
+}
+
+/// Split a bucket key back into its optional device index and the
+/// shape-bucket part. Keys without a `dev<idx>|` prefix return
+/// `(None, key)` unchanged.
+pub fn split_device_key(key: &str) -> (Option<usize>, &str) {
+    if let Some(rest) = key.strip_prefix("dev") {
+        if let Some((idx, bucket)) = rest.split_once('|') {
+            if let Ok(idx) = idx.parse::<usize>() {
+                return (Some(idx), bucket);
+            }
+        }
+    }
+    (None, key)
+}
+
 impl ResidualSnapshot {
     pub fn to_json(&self) -> Value {
         obj(vec![
@@ -198,6 +221,26 @@ mod tests {
         assert!(t.is_empty());
         assert!(t.observe("b", 1.0, 1.0).is_some());
         assert_eq!(t.snapshot()[0].count, 1);
+    }
+
+    #[test]
+    fn device_keys_round_trip() {
+        let k = device_key(3, "128x128x128");
+        assert_eq!(k, "dev3|128x128x128");
+        assert_eq!(split_device_key(&k), (Some(3), "128x128x128"));
+        // bare shape keys pass through untouched
+        assert_eq!(split_device_key("64x64x64"), (None, "64x64x64"));
+        // malformed prefixes are not device keys
+        assert_eq!(split_device_key("devx|64"), (None, "devx|64"));
+        assert_eq!(split_device_key("dev12"), (None, "dev12"));
+        // device-keyed buckets track independently
+        let mut t = ResidualTracker::new();
+        t.observe(&device_key(0, "64x64x64"), 1.1, 1.0);
+        t.observe(&device_key(1, "64x64x64"), 0.5, 1.0);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].bucket, "dev0|64x64x64");
+        assert_eq!(snap[1].bucket, "dev1|64x64x64");
     }
 
     #[test]
