@@ -1,0 +1,213 @@
+//! SCENARIOS — the adversarial-scenario fleet as CI gates.
+//!
+//! Every scenario in [`streamk::bench::workload::catalogue`] runs
+//! open-loop through the churn-capable simulator and must hold its SLO
+//! rules while conserving every request (served + shed + dropped =
+//! offered) and never serving a corrupted result. The sections:
+//!
+//! 1. flash-crowd      — diurnal load with a 10× mid-trace spike
+//! 2. drifting-hotset  — power-law shape popularity, rotating hot set
+//! 3. device-churn     — fastest device leaves; warm joiner replaces it
+//! 4. slow-node        — silent 0.3× decay the re-tune loop must chase
+//! 5. fault-injection  — corrupted results detected and re-placed
+//! 6. warm-vs-cold     — churn control arm: cold joiner converges later
+//!
+//! Run: `cargo bench --bench scenarios`
+//! CI smoke: `cargo bench --bench scenarios -- --test`
+//! Rows append to `BENCH_scenarios.json` (one JSON object per run).
+
+use streamk::bench::workload::{catalogue, scenario, Scenario};
+use streamk::bench::Table;
+use streamk::fleet::{run_scenario, ScenarioReport, ScenarioRunOptions};
+
+/// The gates every scenario must clear regardless of its script.
+fn gate(sc: &Scenario, r: &ScenarioReport) {
+    assert!(
+        r.conserved(),
+        "{}: request conservation violated: served {} + shed {} + \
+         dropped {} != offered {}",
+        sc.name,
+        r.served,
+        r.shed,
+        r.dropped,
+        r.requests,
+    );
+    assert_eq!(
+        r.wrong_results, 0,
+        "{}: {} corrupted result(s) reached a client",
+        sc.name, r.wrong_results
+    );
+    assert!(r.served > 0, "{}: nothing served", sc.name);
+    assert!(
+        r.breaches.is_empty(),
+        "{}: SLO breached ({}): {:?}",
+        sc.name,
+        sc.slo,
+        r.breaches
+    );
+    assert!(
+        r.shed_rate().is_finite() && r.throughput_tflops().is_finite(),
+        "{}: non-finite report rates",
+        sc.name
+    );
+}
+
+fn main() {
+    // `cargo bench --bench scenarios -- --test` forwards `--test`;
+    // cargo itself may inject `--bench`, ignored (harness = false).
+    let quick = std::env::args().skip(1).any(|a| a == "--test");
+    println!(
+        "== adversarial scenario fleet ({} mode) ==",
+        if quick { "smoke" } else { "full" }
+    );
+
+    let mut table = Table::new(&[
+        "scenario", "req", "served", "shed %", "requeued", "faults",
+        "quar", "p99 ms", "TFLOP/s", "slo",
+    ]);
+    let mut churn_warm: Option<ScenarioReport> = None;
+
+    for (i, sc) in catalogue().iter().enumerate() {
+        // Smoke mode offers ~40% of the scripted load (floored so every
+        // scripted event still lands inside the trace with room to
+        // observe its aftermath).
+        let requests =
+            if quick { Some((sc.requests * 2 / 5).max(140)) } else { None };
+        println!("\n== {}. {} ==\n   {}", i + 1, sc.name, sc.about);
+        let r = run_scenario(
+            sc,
+            &ScenarioRunOptions { requests, cold_joins: false },
+        );
+        println!("   {}", r.summary());
+        gate(sc, &r);
+
+        match sc.name {
+            "flash-crowd" => {
+                // The spike must actually stress admission: either the
+                // bounded queues shed or everything still completed.
+                assert!(
+                    r.shed > 0 || r.served == r.requests as u64,
+                    "flash-crowd: spike left requests unaccounted"
+                );
+            }
+            "drifting-hotset" => {
+                // Rotations force misses on the new hot bucket; the
+                // inline tune path must have fired.
+                assert!(
+                    r.tunes_on_miss > 0,
+                    "drifting-hotset: hot-set rotation never missed \
+                     the cache"
+                );
+            }
+            "device-churn" => {
+                assert_eq!(r.leaves, 1, "device-churn: scripted leave");
+                assert!(
+                    r.requeued > 0,
+                    "device-churn: in-flight work was not re-placed"
+                );
+                let j = r
+                    .joins
+                    .first()
+                    .expect("device-churn: scripted join missing");
+                assert!(j.warm && j.seeded > 0,
+                        "device-churn: joiner must be warm-seeded");
+                assert!(
+                    j.requests_to_converge.is_some(),
+                    "device-churn: warm joiner never converged"
+                );
+                churn_warm = Some(r.clone());
+            }
+            "slow-node" => {
+                assert!(
+                    r.retune_convergence_s.is_some(),
+                    "slow-node: drift re-tune loop never recovered \
+                     the degraded device"
+                );
+                assert!(
+                    r.revalidations > 0,
+                    "slow-node: degradation tripped no re-validation"
+                );
+            }
+            "fault-injection" => {
+                assert!(
+                    r.faults_detected > 0,
+                    "fault-injection: no fault was ever detected"
+                );
+                assert!(
+                    r.quarantined >= 1,
+                    "fault-injection: no faulty device was quarantined"
+                );
+                assert!(
+                    r.requeued > 0,
+                    "fault-injection: detected faults must re-place"
+                );
+            }
+            other => panic!("unknown catalogue scenario '{other}'"),
+        }
+
+        table.row(&[
+            r.name.clone(),
+            r.requests.to_string(),
+            r.served.to_string(),
+            format!("{:.1}", r.shed_rate() * 100.0),
+            r.requeued.to_string(),
+            r.faults_detected.to_string(),
+            r.quarantined.to_string(),
+            format!("{:.3}", r.latency_p99_ms),
+            format!("{:.2}", r.throughput_tflops()),
+            "pass".into(),
+        ]);
+        streamk::bench::dump_json("BENCH_scenarios.json", r.to_json());
+    }
+
+    // 6. Control arm: re-run device-churn with the cache transfer
+    // disabled. The cold joiner must tune more and converge later than
+    // the warm one — the cross-device cache-transfer acceptance gate.
+    println!("\n== 6. warm-vs-cold joiner (cache-transfer control) ==");
+    let sc = scenario("device-churn").expect("catalogue has device-churn");
+    let requests =
+        if quick { Some((sc.requests * 2 / 5).max(140)) } else { None };
+    let cold = run_scenario(
+        &sc,
+        &ScenarioRunOptions { requests, cold_joins: true },
+    );
+    println!("   cold: {}", cold.summary());
+    gate(&sc, &cold);
+    let warm = churn_warm.expect("device-churn ran above");
+    let cj = cold.joins.first().expect("cold joiner missing");
+    let wj = warm.joins.first().expect("warm joiner missing");
+    assert!(!cj.warm && cj.seeded == 0, "control arm must join cold");
+    assert!(
+        cold.tunes_on_miss > warm.tunes_on_miss,
+        "cold joiner must tune from scratch: cold {} vs warm {} misses",
+        cold.tunes_on_miss,
+        warm.tunes_on_miss
+    );
+    let w = wj.requests_to_converge.expect("warm joiner converged above");
+    match cj.requests_to_converge {
+        // Cold converging strictly later (or never) is the acceptance
+        // criterion for seeding the joiner from a peer's fingerprint.
+        Some(c) => assert!(
+            w < c,
+            "warm joiner must converge first: warm {w} vs cold {c}"
+        ),
+        None => {}
+    }
+    println!(
+        "   warm converged after {w} requests ({} seeded entries); \
+         cold after {} ({} extra inline tunes)",
+        wj.seeded,
+        cj.requests_to_converge
+            .map(|c| c.to_string())
+            .unwrap_or_else(|| "never".into()),
+        cold.tunes_on_miss - warm.tunes_on_miss,
+    );
+
+    println!();
+    table.print();
+    println!(
+        "\nscenarios OK: {} catalogue scenarios + warm-vs-cold control \
+         held their SLOs with zero wrong results",
+        catalogue().len()
+    );
+}

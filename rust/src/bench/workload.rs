@@ -5,7 +5,18 @@
 //! Generates deterministic request traces: arrival processes (closed
 //! loop, Poisson open loop, bursts) over a mix of request classes, so
 //! every bench and example can replay the exact same stream.
+//!
+//! The adversarial half of the module is the scenario DSL: a
+//! [`Scenario`] composes a time-varying arrival [`RateCurve`] (diurnal
+//! load, flash crowds), a [`DriftingMix`] of GEMM shapes (power-law
+//! popularity with a rotating hot set), and a script of [`FleetEvent`]s
+//! (device join/leave, slow-node degradation, serving-time fault
+//! injection). `fleet::scenario` replays these against the simulated
+//! fleet; `benches/scenarios.rs` and `streamk fleet --scenario` gate
+//! them with SLO assertions.
 
+use crate::decomp::GemmShape;
+use crate::faults::Fault;
 use crate::prop::Rng;
 
 /// One synthetic request to replay.
@@ -123,12 +134,385 @@ pub fn stats(trace: &[TraceEntry]) -> TraceStats {
             total_rows as f64 / requests as f64
         },
         duration_s,
+        // 0, not ∞: a zero-duration (closed-loop or empty) trace has no
+        // meaningful rate, and an infinity here poisons downstream SLO
+        // arithmetic the same way a NaN shed rate would.
         mean_rate: if duration_s > 0.0 {
             requests as f64 / duration_s
         } else {
-            f64::INFINITY
+            0.0
         },
     }
+}
+
+// ---------------------------------------------------------------------
+// Scenario DSL: arrival curve × shape mix × fleet events
+// ---------------------------------------------------------------------
+
+/// A multiplicative modifier layered on a base arrival rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RateMod {
+    /// Smooth day/night swing: the factor runs `floor` at phase 0,
+    /// peaks at 1 mid-period, and returns — `floor + (1 − floor) ·
+    /// ½(1 − cos 2πt/period)`.
+    Diurnal { period_s: f64, floor: f64 },
+    /// A flash crowd: the rate multiplies by `factor` on
+    /// `[at_s, at_s + dur_s)`.
+    Flash { at_s: f64, dur_s: f64, factor: f64 },
+}
+
+impl RateMod {
+    fn factor_at(&self, t: f64) -> f64 {
+        match *self {
+            RateMod::Diurnal { period_s, floor } => {
+                if period_s <= 0.0 {
+                    return 1.0;
+                }
+                let phase = std::f64::consts::TAU * t / period_s;
+                floor + (1.0 - floor) * 0.5 * (1.0 - phase.cos())
+            }
+            RateMod::Flash { at_s, dur_s, factor } => {
+                if t >= at_s && t < at_s + dur_s {
+                    factor
+                } else {
+                    1.0
+                }
+            }
+        }
+    }
+
+    /// Stretch this modifier's time fields by `time_scale` (catalogue
+    /// scenarios declare times as fractions of the nominal trace span).
+    fn time_scaled(&self, time_scale: f64) -> Self {
+        match *self {
+            RateMod::Diurnal { period_s, floor } => RateMod::Diurnal {
+                period_s: period_s * time_scale,
+                floor,
+            },
+            RateMod::Flash { at_s, dur_s, factor } => RateMod::Flash {
+                at_s: at_s * time_scale,
+                dur_s: dur_s * time_scale,
+                factor,
+            },
+        }
+    }
+}
+
+/// A time-varying arrival rate: a base rate with multiplicative
+/// [`RateMod`]s layered on top. Catalogue scenarios keep the base in
+/// *relative* units (1.0 = the fleet's calibrated closed-loop service
+/// rate) and mod times as fractions of the nominal span; the scenario
+/// runner turns them absolute with [`RateCurve::scaled`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateCurve {
+    pub base: f64,
+    pub mods: Vec<RateMod>,
+}
+
+impl RateCurve {
+    pub fn constant(base: f64) -> Self {
+        assert!(base > 0.0 && base.is_finite(), "rate must be positive");
+        Self { base, mods: Vec::new() }
+    }
+
+    pub fn with_mod(mut self, m: RateMod) -> Self {
+        self.mods.push(m);
+        self
+    }
+
+    /// Instantaneous arrival rate at `t` (requests/second once the
+    /// curve is absolute). Floored at a small fraction of the base so
+    /// a zero-floor diurnal trough cannot stall the generator.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        let mut r = self.base;
+        for m in &self.mods {
+            r *= m.factor_at(t);
+        }
+        r.max(self.base * 1e-3)
+    }
+
+    /// Multiply the base rate by `rate_scale` and every modifier's time
+    /// fields by `time_scale` — relative catalogue units → absolute.
+    pub fn scaled(&self, rate_scale: f64, time_scale: f64) -> Self {
+        Self {
+            base: self.base * rate_scale,
+            mods: self
+                .mods
+                .iter()
+                .map(|m| m.time_scaled(time_scale))
+                .collect(),
+        }
+    }
+
+    /// Deterministic non-homogeneous Poisson arrival times: each
+    /// inter-arrival gap is exponential at the rate in effect when the
+    /// previous request landed (a stepwise approximation — exact for
+    /// piecewise-constant curves away from boundaries, and plenty to
+    /// make a 10× flash crowd look like one).
+    pub fn gen_times(&self, seed: u64, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            t += -rng.f64_unit().max(1e-12).ln() / self.rate_at(t);
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Power-law shape popularity with a rotating hot set: rank `r` gets
+/// weight `1/(r+1)^exponent`, and every `rotate_every` requests the
+/// rank→shape mapping rotates by one — yesterday's cold tail becomes
+/// today's hot bucket, which is exactly the drift the per-shape tuner
+/// caches must chase.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftingMix {
+    pub shapes: Vec<GemmShape>,
+    /// Zipf-style exponent (0 = uniform; ~1.3 = strongly skewed).
+    pub exponent: f64,
+    /// Requests per popularity epoch (0 = the hot set never moves).
+    pub rotate_every: usize,
+}
+
+impl DriftingMix {
+    pub fn new(
+        shapes: Vec<GemmShape>,
+        exponent: f64,
+        rotate_every: usize,
+    ) -> Self {
+        assert!(!shapes.is_empty(), "empty shape mix");
+        assert!(exponent >= 0.0 && exponent.is_finite());
+        Self { shapes, exponent, rotate_every }
+    }
+
+    /// The distinct shapes (cache-warming targets), rotation-invariant.
+    pub fn shapes(&self) -> Vec<GemmShape> {
+        self.shapes.clone()
+    }
+
+    /// (shape, weight) pairs in effect for request `index`.
+    pub fn weights_at(&self, index: usize) -> Vec<(GemmShape, f64)> {
+        let k = self.shapes.len();
+        let epoch = if self.rotate_every > 0 {
+            index / self.rotate_every
+        } else {
+            0
+        };
+        (0..k)
+            .map(|rank| {
+                let shape = self.shapes[(rank + epoch) % k];
+                (shape, 1.0 / ((rank + 1) as f64).powf(self.exponent))
+            })
+            .collect()
+    }
+
+    /// Draw the shape of request `index` (deterministic per rng state).
+    pub fn sample(&self, rng: &mut Rng, index: usize) -> GemmShape {
+        let weights = self.weights_at(index);
+        let total: f64 = weights.iter().map(|(_, w)| w).sum();
+        let mut u = rng.f64_unit() * total;
+        for &(shape, w) in &weights {
+            if u < w {
+                return shape;
+            }
+            u -= w;
+        }
+        weights.last().expect("non-empty mix").0
+    }
+}
+
+/// Something that happens *to the fleet* mid-scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetAction {
+    /// A device joins ([`crate::gpu_sim::Device::parse_spec`] syntax).
+    /// `warm` asks for a cross-device cache transfer from the nearest
+    /// existing fingerprint; cold joiners start with an empty cache.
+    Join { spec: String, warm: bool },
+    /// A device leaves mid-flight; its in-flight requests requeue.
+    Leave { device: usize },
+    /// Slow-node decay: the device's effective speed multiplies by
+    /// `factor` (< 1 = slower). Cached predictions are now stale — the
+    /// drift re-tune loop has to chase the new reality.
+    Degrade { device: usize, factor: f64 },
+    /// Serving-time fault injection: from this point the device's
+    /// results are corrupted per [`Fault`]. Spot-check validation must
+    /// detect it; a wrong result must never reach a client.
+    Inject { device: usize, fault: Fault },
+}
+
+/// A scripted fleet event at a fraction `at` ∈ [0, 1] of the trace span
+/// (the runner resolves it against the last generated arrival time).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetEvent {
+    pub at: f64,
+    pub action: FleetAction,
+}
+
+/// One named adversarial scenario: arrival curve × shape mix × fleet
+/// events, plus the SLO contract it is gated on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub seed: u64,
+    /// Offered requests over the whole scenario.
+    pub requests: usize,
+    /// Relative arrival curve (base 1.0 = calibrated fleet capacity).
+    pub curve: RateCurve,
+    pub mix: DriftingMix,
+    /// Sorted-by-`at` script of fleet events.
+    pub events: Vec<FleetEvent>,
+    /// Initial fleet ([`crate::gpu_sim::Device::parse_fleet_spec`]).
+    pub fleet_spec: &'static str,
+    /// Per-device admission bound (0 = admit everything).
+    pub max_queue: usize,
+    /// SLO rules ([`crate::coordinator::slo::parse_rules`] syntax)
+    /// evaluated over the run's final metrics snapshot.
+    pub slo: &'static str,
+}
+
+impl Scenario {
+    /// Shrink/grow the offered load (bench `--test` smoke mode).
+    pub fn with_requests(mut self, n: usize) -> Self {
+        self.requests = n.max(1);
+        self
+    }
+}
+
+/// The four-shape serving mix every catalogue scenario draws from —
+/// the same skewed set as `fleet::sim::ShapeMix::skewed_default`, none
+/// sitting on its pow2 bucket representative.
+fn scenario_shapes() -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(480, 512, 512),
+        GemmShape::new(1920, 2000, 2000),
+        GemmShape::new(960, 1024, 1024),
+        GemmShape::new(3840, 4096, 4096),
+    ]
+}
+
+const SCENARIO_FLEET: &str = "mi200,mi200x0.5,mi100,mi100:60";
+
+/// The named scenario catalogue — every entry is a CI-gated bench
+/// section in `benches/scenarios.rs` and runnable via
+/// `streamk fleet --scenario <name>`.
+pub fn catalogue() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "flash-crowd",
+            about: "diurnal base load with a 10x flash crowd mid-trace; \
+                    the admission bound must shed the spike instead of \
+                    letting the tail latency of admitted requests grow \
+                    without bound",
+            seed: 11,
+            requests: 320,
+            curve: RateCurve::constant(0.55)
+                .with_mod(RateMod::Diurnal { period_s: 1.0, floor: 0.55 })
+                .with_mod(RateMod::Flash {
+                    at_s: 0.4,
+                    dur_s: 0.15,
+                    factor: 10.0,
+                }),
+            mix: DriftingMix::new(scenario_shapes(), 0.8, 0),
+            events: vec![],
+            fleet_spec: SCENARIO_FLEET,
+            max_queue: 6,
+            slo: "p99_ms<=4000,shed<=0.8",
+        },
+        Scenario {
+            name: "drifting-hotset",
+            about: "power-law shape popularity whose hot set rotates \
+                    every quarter of the trace; per-shape caches keep \
+                    predictions tight through the popularity flips",
+            seed: 12,
+            requests: 320,
+            curve: RateCurve::constant(0.5),
+            mix: DriftingMix::new(scenario_shapes(), 1.3, 80),
+            events: vec![],
+            fleet_spec: SCENARIO_FLEET,
+            max_queue: 8,
+            slo: "p99_ms<=4000,shed<=0.2,ape<=0.75",
+        },
+        Scenario {
+            name: "device-churn",
+            about: "the fastest device leaves mid-flight (in-flight \
+                    requests requeue, none lost), then a replacement \
+                    joins warm via cross-device cache transfer",
+            seed: 13,
+            requests: 360,
+            curve: RateCurve::constant(0.45),
+            mix: DriftingMix::new(scenario_shapes(), 0.8, 0),
+            events: vec![
+                FleetEvent {
+                    at: 0.25,
+                    action: FleetAction::Leave { device: 0 },
+                },
+                FleetEvent {
+                    at: 0.5,
+                    action: FleetAction::Join {
+                        spec: "mi200".into(),
+                        warm: true,
+                    },
+                },
+            ],
+            fleet_spec: SCENARIO_FLEET,
+            max_queue: 8,
+            slo: "p99_ms<=4000,shed<=0.35",
+        },
+        Scenario {
+            name: "slow-node",
+            about: "one device silently decays to 0.3x speed; stale \
+                    predictions overload it until the drift re-tune \
+                    loop chases the measured latencies back down",
+            seed: 14,
+            requests: 320,
+            curve: RateCurve::constant(0.45),
+            mix: DriftingMix::new(scenario_shapes(), 0.8, 0),
+            events: vec![FleetEvent {
+                at: 0.3,
+                action: FleetAction::Degrade { device: 0, factor: 0.3 },
+            }],
+            fleet_spec: SCENARIO_FLEET,
+            max_queue: 8,
+            slo: "p99_ms<=4000,shed<=0.3,ape<=2.5",
+        },
+        Scenario {
+            name: "fault-injection",
+            about: "two devices start corrupting results mid-trace (the \
+                    report's CU-mapping and fixup-overflow bugs); \
+                    spot-check validation must detect every fault, \
+                    re-place the work, and return zero wrong results",
+            seed: 15,
+            requests: 280,
+            curve: RateCurve::constant(0.4),
+            mix: DriftingMix::new(scenario_shapes(), 0.8, 0),
+            events: vec![
+                FleetEvent {
+                    at: 0.25,
+                    action: FleetAction::Inject {
+                        device: 1,
+                        fault: Fault::CuMapping { hw_cus: 30 },
+                    },
+                },
+                FleetEvent {
+                    at: 0.5,
+                    action: FleetAction::Inject {
+                        device: 3,
+                        fault: Fault::FixupOverflow,
+                    },
+                },
+            ],
+            fleet_spec: SCENARIO_FLEET,
+            max_queue: 8,
+            slo: "p99_ms<=4000,shed<=0.25",
+        },
+    ]
+}
+
+/// Look one catalogue scenario up by name.
+pub fn scenario(name: &str) -> Option<Scenario> {
+    catalogue().into_iter().find(|s| s.name == name)
 }
 
 #[cfg(test)]
@@ -190,6 +574,126 @@ mod tests {
             }
         }
         assert!(max_same >= 8, "burst run {max_same}");
+    }
+
+    #[test]
+    fn zero_duration_traces_report_zero_rate_not_infinity() {
+        let s = stats(&[]);
+        assert_eq!(s.mean_rate, 0.0);
+        assert_eq!(s.duration_s, 0.0);
+        let closed = generate(1, 8, Arrival::ClosedLoop, &SizeMix(vec![(1, 1.0)]));
+        let s = stats(&closed);
+        assert_eq!(s.mean_rate, 0.0, "closed loop has no arrival rate");
+        assert!(s.mean_rate.is_finite());
+    }
+
+    #[test]
+    fn rate_curve_mods_shape_the_arrival_stream() {
+        // flash crowd: 10x the arrivals land inside the window
+        let flash = RateCurve::constant(100.0).with_mod(RateMod::Flash {
+            at_s: 1.0,
+            dur_s: 1.0,
+            factor: 10.0,
+        });
+        assert_eq!(flash.rate_at(0.5), 100.0);
+        assert_eq!(flash.rate_at(1.5), 1000.0);
+        assert_eq!(flash.rate_at(2.5), 100.0);
+        let times = flash.gen_times(3, 2000);
+        assert_eq!(times, flash.gen_times(3, 2000), "deterministic");
+        for w in times.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        let inside =
+            times.iter().filter(|&&t| (1.0..2.0).contains(&t)).count();
+        let before = times.iter().filter(|&&t| t < 1.0).count();
+        // ~100 arrive before the flash, ~1000 inside it
+        assert!(
+            inside > 4 * before.max(1),
+            "flash must crowd: {inside} in-window vs {before} before"
+        );
+
+        // diurnal: trough at phase 0, peak mid-period
+        let diurnal = RateCurve::constant(100.0)
+            .with_mod(RateMod::Diurnal { period_s: 10.0, floor: 0.2 });
+        assert!((diurnal.rate_at(0.0) - 20.0).abs() < 1e-9);
+        assert!((diurnal.rate_at(5.0) - 100.0).abs() < 1e-9);
+        // zero floor never stalls the generator
+        let hard = RateCurve::constant(100.0)
+            .with_mod(RateMod::Diurnal { period_s: 10.0, floor: 0.0 });
+        assert!(hard.rate_at(0.0) > 0.0);
+
+        // scaled(): base multiplies, mod times stretch
+        let abs = flash.scaled(2.0, 10.0);
+        assert_eq!(abs.base, 200.0);
+        assert_eq!(abs.rate_at(5.0), 200.0, "flash moved to [10, 20)");
+        assert_eq!(abs.rate_at(15.0), 2000.0);
+    }
+
+    #[test]
+    fn drifting_mix_rotates_the_hot_set() {
+        let shapes = vec![
+            GemmShape::new(480, 512, 512),
+            GemmShape::new(1920, 2000, 2000),
+            GemmShape::new(960, 1024, 1024),
+        ];
+        let mix = DriftingMix::new(shapes.clone(), 1.3, 100);
+        // epoch 0: rank 0 (heaviest) is shapes[0]
+        let w0 = mix.weights_at(0);
+        assert_eq!(w0[0].0, shapes[0]);
+        assert!(w0[0].1 > w0[1].1 && w0[1].1 > w0[2].1, "power law");
+        // epoch 1: the mapping rotated by one
+        let w1 = mix.weights_at(100);
+        assert_eq!(w1[0].0, shapes[1]);
+        // full cycle returns
+        assert_eq!(mix.weights_at(300)[0].0, shapes[0]);
+        // sampling respects the skew: the hot shape dominates its epoch
+        let mut rng = prop::Rng::new(5);
+        let hot = (0..600)
+            .filter(|_| mix.sample(&mut rng, 0) == shapes[0])
+            .count() as f64
+            / 600.0;
+        let expect = w0[0].1 / (w0[0].1 + w0[1].1 + w0[2].1);
+        assert!(
+            (hot - expect).abs() < 0.07,
+            "P(hot) = {hot} vs expected {expect}"
+        );
+        // rotate_every = 0 never rotates
+        let frozen = DriftingMix::new(shapes.clone(), 1.0, 0);
+        assert_eq!(frozen.weights_at(10_000)[0].0, shapes[0]);
+    }
+
+    #[test]
+    fn catalogue_names_are_unique_and_wired() {
+        let cat = catalogue();
+        assert!(cat.len() >= 5, "at least five named scenarios");
+        let mut names: Vec<&str> = cat.iter().map(|s| s.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), cat.len(), "names must be unique");
+        for required in [
+            "flash-crowd",
+            "drifting-hotset",
+            "device-churn",
+            "slow-node",
+            "fault-injection",
+        ] {
+            let sc = scenario(required)
+                .unwrap_or_else(|| panic!("{required} missing"));
+            assert!(sc.requests > 0);
+            assert!(!sc.mix.shapes.is_empty());
+            // every SLO spec and fleet spec must parse
+            crate::coordinator::slo::parse_rules(sc.slo)
+                .unwrap_or_else(|e| panic!("{required}: bad slo: {e}"));
+            crate::gpu_sim::Device::parse_fleet_spec(sc.fleet_spec)
+                .unwrap_or_else(|e| panic!("{required}: bad fleet: {e}"));
+            // events stay inside the trace span and reference devices
+            for ev in &sc.events {
+                assert!((0.0..=1.0).contains(&ev.at), "{required}: {ev:?}");
+            }
+        }
+        assert!(scenario("no-such-scenario").is_none());
+        let shrunk = scenario("flash-crowd").unwrap().with_requests(10);
+        assert_eq!(shrunk.requests, 10);
     }
 
     #[test]

@@ -38,6 +38,12 @@ pub struct Settings {
     pub tune_drift_pct: u64,
     /// Staleness: cache entries untouched longer than this age out.
     pub cache_max_age_s: u64,
+    /// EWMA weight on each measured serving latency
+    /// ([`crate::tuner::BlendConfig::observe_alpha`]); (0, 1].
+    pub observe_alpha: f64,
+    /// How far each observation pulls the cached prediction toward the
+    /// measurement ([`crate::tuner::BlendConfig::predict_blend`]); (0, 1].
+    pub predict_blend: f64,
     /// Heterogeneous fleet spec (`mi200,mi200x0.5,mi100:60`); `None`
     /// serves the classic single-device coordinator.
     pub fleet: Option<String>,
@@ -54,6 +60,9 @@ pub struct Settings {
 
 impl Default for Settings {
     fn default() -> Self {
+        // Env overrides (STREAMK_OBSERVE_ALPHA / STREAMK_PREDICT_BLEND)
+        // seed the defaults, so the layering is env < file < CLI.
+        let blend = crate::tuner::BlendConfig::from_env();
         Self {
             artifacts_dir: PathBuf::from("artifacts"),
             cus: 120, // MI200-class device, as in the report
@@ -69,6 +78,8 @@ impl Default for Settings {
             tune_top_k: 8,
             tune_drift_pct: 50,
             cache_max_age_s: 7 * 24 * 3600,
+            observe_alpha: blend.observe_alpha,
+            predict_blend: blend.predict_blend,
             fleet: None,
             metrics_interval_ms: 500,
             metrics_window: 256,
@@ -202,6 +213,14 @@ impl Settings {
                     .ok_or_else(|| bad("want non-negative integer"))?
                     as u64
             }
+            "observe_alpha" => {
+                self.observe_alpha =
+                    val.as_f64().ok_or_else(|| bad("want number"))?
+            }
+            "predict_blend" => {
+                self.predict_blend =
+                    val.as_f64().ok_or_else(|| bad("want number"))?
+            }
             "fleet" => {
                 self.fleet = Some(
                     val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
@@ -289,6 +308,14 @@ impl Settings {
             self.cache_max_age_s =
                 v.parse().map_err(|_| as_bad("cache-max-age-s", v))?;
         }
+        if let Some(v) = args.get("observe-alpha") {
+            self.observe_alpha =
+                v.parse().map_err(|_| as_bad("observe-alpha", v))?;
+        }
+        if let Some(v) = args.get("predict-blend") {
+            self.predict_blend =
+                v.parse().map_err(|_| as_bad("predict-blend", v))?;
+        }
         if let Some(v) = args.get("fleet") {
             self.fleet = Some(v.to_string());
         }
@@ -337,6 +364,16 @@ impl Settings {
         if self.cache_max_age_s == 0 {
             return bad("cache_max_age_s", "must be positive");
         }
+        let blend = crate::tuner::BlendConfig {
+            observe_alpha: self.observe_alpha,
+            predict_blend: self.predict_blend,
+        };
+        if !blend.is_valid() {
+            return bad(
+                "observe_alpha/predict_blend",
+                "must be finite, > 0 and <= 1",
+            );
+        }
         if let Some(spec) = &self.fleet {
             if let Err(e) = crate::gpu_sim::Device::parse_fleet_spec(spec) {
                 return bad("fleet", &e);
@@ -354,6 +391,15 @@ impl Settings {
             }
         }
         Ok(())
+    }
+
+    /// The online-feedback smoothing constants this configuration asks
+    /// for, as the tuner consumes them.
+    pub fn blend(&self) -> crate::tuner::BlendConfig {
+        crate::tuner::BlendConfig {
+            observe_alpha: self.observe_alpha,
+            predict_blend: self.predict_blend,
+        }
     }
 
     /// The fleet devices this configuration asks for: the parsed
@@ -524,6 +570,43 @@ mod tests {
         assert_eq!(s.tune_budget_ms, 900);
         assert!(!s.tune_on_miss);
         assert_eq!(s.tuner_cache, Some(PathBuf::from("c.json")));
+    }
+
+    #[test]
+    fn blend_keys_layer_and_validate() {
+        let mut s = Settings::default();
+        assert!(s.blend().is_valid());
+        let v = json::parse(
+            r#"{"observe_alpha": 0.5, "predict_blend": 0.1}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.observe_alpha, 0.5);
+        assert_eq!(s.predict_blend, 0.1);
+
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("observe-alpha", None, ""))
+            .opt(Opt::value("predict-blend", None, ""));
+        let args = cmd
+            .parse(&[
+                "--observe-alpha".into(),
+                "0.7".into(),
+                "--predict-blend".into(),
+                "0.4".into(),
+            ])
+            .unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.observe_alpha, 0.7);
+        assert_eq!(s.predict_blend, 0.4);
+        assert!(s.validate().is_ok());
+
+        let mut bad = Settings::default();
+        bad.observe_alpha = 0.0;
+        assert!(bad.validate().is_err());
+        bad.observe_alpha = 2.0;
+        assert!(bad.validate().is_err());
+        bad.observe_alpha = f64::NAN;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -130,11 +130,12 @@ impl Coordinator {
             max_drift: settings.tune_drift_pct as f64 / 100.0,
             ..StalenessPolicy::default()
         };
-        let fleet = Arc::new(Fleet::new(
+        let fleet = Arc::new(Fleet::new_with_blend(
             devices,
             opts,
             staleness,
             TUNER_CACHE_CAPACITY,
+            settings.blend(),
         ));
         if let Some(path) = &settings.tuner_cache {
             match fleet.load_cache(path) {

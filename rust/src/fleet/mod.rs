@@ -38,14 +38,24 @@
 //!   (drift → re-validate, untouched → age out);
 //! - [`sim`] — deterministic fleet traffic simulation shared by
 //!   `streamk fleet` and `cargo bench --bench fleet_throughput`
-//!   (Block2Time-guided placement vs round-robin on a skewed mix).
+//!   (Block2Time-guided placement vs round-robin on a skewed mix);
+//! - [`scenario`] — the adversarial-scenario runner: named
+//!   [`crate::bench::workload::Scenario`]s (flash crowds, drifting hot
+//!   sets, device churn, slow-node decay, serving-time fault
+//!   injection) executed open-loop with spot-check validation and
+//!   SLO-gated reports (`cargo bench --bench scenarios`,
+//!   `streamk fleet --scenario <name>`).
 
 pub mod feedback;
 pub mod registry;
+pub mod scenario;
 pub mod scheduler;
 pub mod sim;
 
 pub use registry::{demo_fleet_devices, Fleet, FleetDevice};
+pub use scenario::{
+    run_scenario, JoinerReport, ScenarioReport, ScenarioRunOptions,
+};
 pub use scheduler::Placement;
 pub use sim::{
     gen_open_trace, gen_trace, run_trace, run_trace_open,

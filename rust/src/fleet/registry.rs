@@ -11,9 +11,11 @@
 
 use crate::gpu_sim::{Device, DeviceKind};
 use crate::tuner::{
-    CacheError, StalenessPolicy, TuneOptions, Tuner, TuningCache,
+    cache::split_key, BlendConfig, CacheError, StalenessPolicy, TuneOptions,
+    Tuner, TuningCache,
 };
 use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Scheduler bookkeeping for one device (see `scheduler.rs`).
@@ -36,11 +38,20 @@ pub struct FleetDevice {
     pub name: String,
     pub tuner: Arc<Tuner>,
     pub(super) queue: Mutex<QueueState>,
+    /// Churn flag: inactive devices stay registered (stable indices,
+    /// cache retained for a possible rejoin) but the scheduler never
+    /// places on them.
+    active: AtomicBool,
 }
 
 impl FleetDevice {
     pub fn device(&self) -> &Device {
         self.tuner.device()
+    }
+
+    /// Is this device currently accepting placements?
+    pub fn is_active(&self) -> bool {
+        self.active.load(Ordering::Relaxed)
     }
 
     /// Predicted seconds of work currently placed on this device.
@@ -59,6 +70,13 @@ impl FleetDevice {
 pub struct Fleet {
     devices: Vec<FleetDevice>,
     bytes_per_elem: usize,
+    // Construction parameters, retained so devices joining later
+    // ([`Fleet::add_device`]) get tuners built exactly like the
+    // original members'.
+    opts: TuneOptions,
+    staleness: StalenessPolicy,
+    cache_capacity: usize,
+    blend: BlendConfig,
 }
 
 impl Fleet {
@@ -70,29 +88,146 @@ impl Fleet {
         staleness: StalenessPolicy,
         cache_capacity: usize,
     ) -> Self {
+        Self::new_with_blend(
+            devices,
+            opts,
+            staleness,
+            cache_capacity,
+            BlendConfig::from_env(),
+        )
+    }
+
+    /// [`Fleet::new`] with explicit feedback smoothing constants (the
+    /// serve path threads `config::Settings` values through here).
+    pub fn new_with_blend(
+        devices: Vec<Device>,
+        opts: TuneOptions,
+        staleness: StalenessPolicy,
+        cache_capacity: usize,
+        blend: BlendConfig,
+    ) -> Self {
         assert!(!devices.is_empty(), "a fleet needs at least one device");
-        let devices = devices
-            .into_iter()
-            .enumerate()
-            .map(|(id, dev)| {
-                let name = format!("{}#{id}", dev.name);
-                FleetDevice {
-                    id,
-                    name,
-                    tuner: Arc::new(
-                        Tuner::new(dev, opts, cache_capacity)
-                            .with_staleness(staleness),
-                    ),
-                    queue: Mutex::new(QueueState::default()),
-                }
-            })
-            .collect();
-        Self { devices, bytes_per_elem: opts.bytes_per_elem }
+        let mut fleet = Self {
+            devices: Vec::new(),
+            bytes_per_elem: opts.bytes_per_elem,
+            opts,
+            staleness,
+            cache_capacity,
+            blend,
+        };
+        for dev in devices {
+            fleet.add_device(dev);
+        }
+        fleet
     }
 
     /// Convenience constructor with the default staleness policy.
     pub fn from_devices(devices: Vec<Device>, opts: TuneOptions) -> Self {
         Self::new(devices, opts, StalenessPolicy::default(), 256)
+    }
+
+    /// A device joins the fleet mid-flight: it is appended (indices of
+    /// existing members never move), gets a fresh tuner built with the
+    /// same options/staleness/blend as the founding members, and starts
+    /// active with a cold cache. Returns its index; see
+    /// [`Fleet::transfer_cache`] for warm-seeding the joiner.
+    pub fn add_device(&mut self, dev: Device) -> usize {
+        let id = self.devices.len();
+        let name = format!("{}#{id}", dev.name);
+        self.devices.push(FleetDevice {
+            id,
+            name,
+            tuner: Arc::new(
+                Tuner::new(dev, self.opts, self.cache_capacity)
+                    .with_staleness(self.staleness)
+                    .with_blend(self.blend),
+            ),
+            queue: Mutex::new(QueueState::default()),
+            active: AtomicBool::new(true),
+        });
+        id
+    }
+
+    /// Mark a device active/inactive. Leaving is a soft-remove: the
+    /// entry (and its tuner cache) stays registered under a stable
+    /// index so in-flight bookkeeping and a later rejoin both work;
+    /// the scheduler simply stops placing there.
+    pub fn set_active(&self, idx: usize, active: bool) {
+        self.devices[idx].active.store(active, Ordering::Relaxed);
+    }
+
+    pub fn is_active(&self, idx: usize) -> bool {
+        self.devices[idx].is_active()
+    }
+
+    /// Indices of the currently active members.
+    pub fn active_indices(&self) -> Vec<usize> {
+        (0..self.len()).filter(|&i| self.is_active(i)).collect()
+    }
+
+    /// Number of currently active members.
+    pub fn active_len(&self) -> usize {
+        self.devices.iter().filter(|d| d.is_active()).count()
+    }
+
+    /// Cross-device cache transfer: seed `joiner`'s tuner cache from
+    /// the *nearest* existing member — the active device (with a
+    /// non-empty cache) whose peak FLOPS is closest in log-ratio —
+    /// scaling every donor time by the donor:joiner peak-flops ratio
+    /// (time ∝ 1/throughput to first order). Transplanted entries keep
+    /// the donor's config but reset the observation EWMA: they are
+    /// estimates, and the online loop must re-learn reality on the new
+    /// silicon. Grid CU counts are clamped to the joiner's hardware.
+    /// Returns the number of entries seeded (0 when no donor exists).
+    pub fn transfer_cache(&self, joiner: usize) -> usize {
+        let jtuner = &self.device(joiner).tuner;
+        let jdev = jtuner.device();
+        let jpeak = jdev.peak_flops();
+        if !(jpeak.is_finite() && jpeak > 0.0) {
+            return 0;
+        }
+        let mut donor: Option<(f64, usize)> = None;
+        for idx in 0..self.len() {
+            if idx == joiner || !self.is_active(idx) {
+                continue;
+            }
+            let d = self.device(idx);
+            if d.tuner.matching_entries() == 0 {
+                continue;
+            }
+            let peak = d.device().peak_flops();
+            if !(peak.is_finite() && peak > 0.0) {
+                continue;
+            }
+            let dist = (peak / jpeak).ln().abs();
+            if donor.map_or(true, |(best, _)| dist < best) {
+                donor = Some((dist, idx));
+            }
+        }
+        let Some((_, didx)) = donor else {
+            return 0;
+        };
+        let dtuner = &self.device(didx).tuner;
+        let dpeak = dtuner.device().peak_flops();
+        let scale = dpeak / jpeak; // donor faster → joiner times grow
+        let snapshot = dtuner.cache_snapshot();
+        let mut seeded = 0;
+        for (key, mut cfg) in snapshot.entries_for(dtuner.fingerprint()) {
+            let Some((bucket, bpe, _)) = split_key(&key) else {
+                continue;
+            };
+            if bpe != self.bytes_per_elem {
+                continue;
+            }
+            cfg.predicted_s *= scale;
+            cfg.measured_s *= scale;
+            cfg.observed_s = 0.0;
+            cfg.observed_n = 0;
+            cfg.cus = cfg.cus.min(jdev.num_cus).max(1);
+            jtuner.insert_config(bucket.representative(), cfg);
+            seeded += 1;
+        }
+        seeded
     }
 
     pub fn len(&self) -> usize {
@@ -199,6 +334,88 @@ mod tests {
                 "device {idx} must not see device 0's entries"
             );
         }
+    }
+
+    #[test]
+    fn join_and_leave_preserve_indices_and_flags() {
+        let mut f = fleet();
+        assert_eq!(f.active_len(), 4);
+        assert!(f.devices().iter().all(|d| d.is_active()));
+
+        // leave: soft-remove under a stable index
+        f.set_active(1, false);
+        assert!(!f.is_active(1));
+        assert_eq!(f.active_len(), 3);
+        assert_eq!(f.active_indices(), vec![0, 2, 3]);
+        assert_eq!(f.len(), 4, "departed devices stay registered");
+        assert_eq!(f.device(1).name, "mi200b#1", "index stability");
+
+        // join: appended, active, same tuner parameters
+        let idx =
+            f.add_device(Device::preset(DeviceKind::Mi200).renamed("late"));
+        assert_eq!(idx, 4);
+        assert!(f.is_active(idx));
+        assert_eq!(f.device(idx).name, "late#4");
+        assert_eq!(
+            f.device(idx).tuner.options(),
+            f.device(0).tuner.options()
+        );
+        assert_eq!(
+            f.device(idx).tuner.staleness(),
+            f.device(0).tuner.staleness()
+        );
+        assert_eq!(f.device(idx).tuner.blend(), f.device(0).tuner.blend());
+
+        // rejoin: the flag flips back, cache intact
+        f.set_active(1, true);
+        assert_eq!(f.active_len(), 5);
+    }
+
+    #[test]
+    fn cache_transfer_seeds_joiner_from_nearest_donor_scaled() {
+        let mut f = fleet();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        // two potential donors at different speeds, both tuned
+        f.device(0).tuner.tune_and_insert(shape).unwrap(); // mi200 (full)
+        f.device(1).tuner.tune_and_insert(shape).unwrap(); // mi200 × 0.5
+        let donor_full = f.device(0).tuner.lookup(shape).unwrap();
+
+        // joiner is another full-speed mi200: device 0 is the nearest
+        // donor (identical peak), so entries land unscaled
+        let idx =
+            f.add_device(Device::preset(DeviceKind::Mi200).renamed("twin"));
+        let seeded = f.transfer_cache(idx);
+        assert_eq!(seeded, 1);
+        let got = f.device(idx).tuner.lookup(shape).unwrap();
+        assert!((got.predicted_s - donor_full.predicted_s).abs() < 1e-12);
+        assert_eq!(got.observed_n, 0, "transplants reset observations");
+        assert_eq!(got.observed_s, 0.0);
+
+        // a half-speed joiner picks the half-speed donor; had it picked
+        // the full-speed one, the scale would still make times larger.
+        let half = Device::preset(DeviceKind::Mi200)
+            .with_flops_scale(0.5)
+            .renamed("halfling");
+        let half_peak = half.peak_flops();
+        let hidx = f.add_device(half);
+        let seeded = f.transfer_cache(hidx);
+        assert_eq!(seeded, 1);
+        let donor_half = f.device(1).tuner.lookup(shape).unwrap();
+        let got = f.device(hidx).tuner.lookup(shape).unwrap();
+        let expect = donor_half.predicted_s
+            * (f.device(1).device().peak_flops() / half_peak);
+        assert!(
+            (got.predicted_s - expect).abs() < expect * 1e-9,
+            "scaled transfer: {} vs {expect}",
+            got.predicted_s
+        );
+
+        // no donors → nothing to seed
+        let lonely = Fleet::from_devices(
+            vec![Device::preset(DeviceKind::Mi100)],
+            TuneOptions::default(),
+        );
+        assert_eq!(lonely.transfer_cache(0), 0);
     }
 
     #[test]

@@ -1,0 +1,982 @@
+//! Adversarial-scenario runner — churn, skew, degradation, and
+//! serving-time fault injection as deterministic, SLO-gated runs.
+//!
+//! The scenario DSL lives in [`crate::bench::workload`] (arrival curve
+//! × drifting shape mix × scripted fleet events); this module executes
+//! one [`Scenario`] against a simulated [`Fleet`] and reports what the
+//! CI gates assert on:
+//!
+//! - **Open-loop with churn** — arrivals come from the (calibrated,
+//!   absolute) rate curve; devices join mid-run ([`Fleet::add_device`],
+//!   warm-seeded via [`Fleet::transfer_cache`] when asked), leave
+//!   mid-flight (their queued work is requeued, never lost), decay to a
+//!   fraction of their speed (the drift re-tune loop has to chase), or
+//!   start corrupting results ([`crate::faults::Fault`]).
+//! - **Spot-check validation** — every completed request is validated
+//!   by re-running a small canary GEMM through the device's (possibly
+//!   faulted) executor against ground truth, with *two* schedules
+//!   (full-CU and sub-maximal) so each of the report's bug mechanisms
+//!   trips at least one. A failed check counts the fault, requeues the
+//!   request on another device, and quarantines the device after
+//!   repeated hits — a wrong result is never served.
+//! - **Conservation** — every offered request terminates exactly once:
+//!   served, shed at admission, or dropped (unbuildable / attempts
+//!   exhausted / no active device). [`ScenarioReport::conserved`] is a
+//!   structural invariant the property tests and bench gates check.
+//!
+//! Everything is deterministic per scenario seed: arrivals, shape
+//! draws, canary data, and the simulated execution times
+//! ([`crate::tuner::measure`] on the owning device, divided by the
+//! device's current degradation speed).
+
+use super::registry::Fleet;
+use super::sim::{tuned_candidate, warm};
+use crate::bench::workload::{FleetAction, Scenario};
+use crate::coordinator::slo;
+use crate::coordinator::{Breach, Metrics};
+use crate::decomp::{build_schedule, BlockShape, GemmShape, StreamKSchedule};
+use crate::faults::{error_rate, naive_gemm, Fault, FaultyExecutor, Matrix};
+use crate::gpu_sim::Device;
+use crate::json::{obj, Value};
+use crate::prop::Rng;
+use crate::trace::residual::device_key;
+use crate::trace::ResidualSnapshot;
+use crate::tuner::{
+    measure, Budget, Observation, ShapeBucket, StalenessPolicy, TuneOptions,
+};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BinaryHeap, VecDeque};
+use std::sync::OnceLock;
+
+/// Spot-check failures on one device before it is quarantined.
+const QUARANTINE_HITS: u32 = 3;
+/// Placement attempts per request before it is dropped (first try +
+/// fault re-placements).
+const MAX_ATTEMPTS: u32 = 4;
+/// Consecutive tuner-cache hits a joiner needs to count as converged.
+const JOIN_STREAK: u32 = 3;
+/// Consecutive within-drift-policy completions the degraded device
+/// needs before the re-tune loop counts as recovered.
+const RECOVERY_STREAK: u32 = 5;
+/// Closed-loop requests used to calibrate the fleet's service rate.
+const CALIBRATION_REQUESTS: usize = 40;
+
+/// Knobs for one scenario run.
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioRunOptions {
+    /// Override the scenario's offered request count (bench `--test`
+    /// smoke mode shrinks, stress runs grow).
+    pub requests: Option<usize>,
+    /// Force every `Join { warm: true }` to join cold instead — the
+    /// control arm of the warm-vs-cold convergence comparison.
+    pub cold_joins: bool,
+}
+
+/// One mid-run joiner's convergence story.
+#[derive(Debug, Clone)]
+pub struct JoinerReport {
+    pub device: usize,
+    pub name: String,
+    /// Whether the joiner was warm-seeded via cache transfer.
+    pub warm: bool,
+    /// Entries transplanted into the joiner's cache at join time.
+    pub seeded: usize,
+    /// Requests served by the joiner until its first
+    /// [`JOIN_STREAK`]-long run of consecutive tuner-cache hits
+    /// (`None` = never converged within the run).
+    pub requests_to_converge: Option<u64>,
+    pub served: u64,
+}
+
+/// Everything one scenario run produced — counters first (the CI
+/// gates), then the latency/residual detail.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub name: String,
+    /// Offered requests (after any [`ScenarioRunOptions::requests`]
+    /// override).
+    pub requests: usize,
+    pub served: u64,
+    pub shed: u64,
+    pub dropped: u64,
+    /// Re-placements (fault detections + device-leave evacuations).
+    pub requeued: u64,
+    /// Spot-check failures — every one re-placed, never served.
+    pub faults_detected: u64,
+    /// Served results whose device had an active fault the spot check
+    /// missed. Structurally zero for the catalogue faults; the bench
+    /// gate asserts it.
+    pub wrong_results: u64,
+    /// Devices deactivated after repeated spot-check failures.
+    pub quarantined: u64,
+    /// Scripted device departures.
+    pub leaves: u64,
+    pub joins: Vec<JoinerReport>,
+    /// Drift-triggered observation-keeping re-tunes.
+    pub revalidations: u64,
+    /// Inline tunes for shapes missing from the placed device's cache.
+    pub tunes_on_miss: u64,
+    /// Completion time of the last served request (simulated seconds).
+    pub makespan_s: f64,
+    pub total_flops: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p99_ms: f64,
+    pub queue_delay_mean_s: f64,
+    /// Seconds from the first Degrade event until the degraded device
+    /// logged [`RECOVERY_STREAK`] consecutive within-policy
+    /// completions (`None` = no Degrade event, or never recovered).
+    pub retune_convergence_s: Option<f64>,
+    pub residuals: Vec<ResidualSnapshot>,
+    /// SLO breaches over the final metrics snapshot (empty = pass).
+    pub breaches: Vec<Breach>,
+    /// The admission bound the run used (from the scenario).
+    pub final_bound: usize,
+    /// Measured execution times per `dev{i}|bucket` key, in completion
+    /// order — the trace [`crate::tuner::BlendConfig::fit`] consumes.
+    pub measured_series: Vec<(String, Vec<f64>)>,
+}
+
+impl ScenarioReport {
+    /// Shed fraction of offered load; 0.0 (not NaN) when nothing was
+    /// offered, so SLO arithmetic downstream stays finite.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests > 0 {
+            self.shed as f64 / self.requests as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Served TFLOP/s at the makespan; 0.0 (not NaN/∞) when nothing
+    /// completed.
+    pub fn throughput_tflops(&self) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.total_flops / self.makespan_s / 1e12
+        } else {
+            0.0
+        }
+    }
+
+    /// Every offered request terminated exactly once: served, shed, or
+    /// dropped. Requeues move a request, they never duplicate it.
+    pub fn conserved(&self) -> bool {
+        self.served + self.shed + self.dropped == self.requests as u64
+    }
+
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("scenario", self.name.as_str().into()),
+            ("requests", self.requests.into()),
+            ("served", (self.served as usize).into()),
+            ("shed", (self.shed as usize).into()),
+            ("dropped", (self.dropped as usize).into()),
+            ("requeued", (self.requeued as usize).into()),
+            ("faults_detected", (self.faults_detected as usize).into()),
+            ("wrong_results", (self.wrong_results as usize).into()),
+            ("quarantined", (self.quarantined as usize).into()),
+            ("leaves", (self.leaves as usize).into()),
+            ("revalidations", (self.revalidations as usize).into()),
+            ("tunes_on_miss", (self.tunes_on_miss as usize).into()),
+            ("shed_rate", self.shed_rate().into()),
+            ("makespan_s", self.makespan_s.into()),
+            ("throughput_tflops", self.throughput_tflops().into()),
+            ("latency_p50_ms", self.latency_p50_ms.into()),
+            ("latency_p99_ms", self.latency_p99_ms.into()),
+            ("queue_delay_mean_s", self.queue_delay_mean_s.into()),
+            (
+                "retune_convergence_s",
+                match self.retune_convergence_s {
+                    Some(s) => s.into(),
+                    None => Value::Null,
+                },
+            ),
+            ("conserved", self.conserved().into()),
+            (
+                "joins",
+                Value::Arr(
+                    self.joins
+                        .iter()
+                        .map(|j| {
+                            obj(vec![
+                                ("device", j.device.into()),
+                                ("name", j.name.as_str().into()),
+                                ("warm", j.warm.into()),
+                                ("seeded", j.seeded.into()),
+                                (
+                                    "requests_to_converge",
+                                    match j.requests_to_converge {
+                                        Some(n) => (n as usize).into(),
+                                        None => Value::Null,
+                                    },
+                                ),
+                                ("served", (j.served as usize).into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "breaches",
+                Value::Arr(
+                    self.breaches
+                        .iter()
+                        .map(|b| {
+                            obj(vec![
+                                ("rule", b.rule.as_str().into()),
+                                ("value", b.value.into()),
+                                ("limit", b.limit.into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// One-line human form for `streamk fleet --scenario`.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: {}/{} served | shed {:.1}% | dropped {} | requeued {} | \
+             faults {} (wrong {}) | p99 {:.2} ms | breaches {}",
+            self.name,
+            self.served,
+            self.requests,
+            self.shed_rate() * 100.0,
+            self.dropped,
+            self.requeued,
+            self.faults_detected,
+            self.wrong_results,
+            self.latency_p99_ms,
+            self.breaches.len(),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spot-check canary
+// ---------------------------------------------------------------------
+
+struct CanaryKit {
+    a: Matrix,
+    b: Matrix,
+    want: Matrix,
+    /// Full-CU and sub-maximal schedules of the same shape: the fixup
+    /// overflow (≥3-way split tiles) and a CU-mapping mismatch against
+    /// *any* `hw_cus` each corrupt at least one of the two.
+    scheds: Vec<StreamKSchedule>,
+}
+
+static CANARY: OnceLock<CanaryKit> = OnceLock::new();
+
+fn canary() -> &'static CanaryKit {
+    CANARY.get_or_init(|| {
+        let shape = GemmShape::new(60, 64, 64);
+        let blk = BlockShape::new(16, 16, 2);
+        let mut rng = Rng::new(0xCA_4A_11);
+        let a = Matrix::random(60, 64, &mut rng);
+        let b = Matrix::random(64, 64, &mut rng);
+        let want = naive_gemm(&a, &b);
+        let scheds = vec![
+            build_schedule(shape, blk, 120).expect("canary schedule p=120"),
+            build_schedule(shape, blk, 30).expect("canary schedule p=30"),
+        ];
+        CanaryKit { a, b, want, scheds }
+    })
+}
+
+/// Run the canary GEMMs through an executor carrying `fault` and
+/// compare against ground truth. `true` = output is bit-clean on both
+/// schedules (the device's results can be trusted).
+fn spot_check(fault: Fault) -> bool {
+    let kit = canary();
+    let exec = FaultyExecutor::new(fault);
+    kit.scheds.iter().all(|s| {
+        let got = exec.run(&kit.a, &kit.b, s);
+        error_rate(&got.data, &kit.want.data, 1e-3).rate == 0.0
+    })
+}
+
+// ---------------------------------------------------------------------
+// Event-driven runner
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct Request {
+    at_s: f64,
+    shape: GemmShape,
+    /// Placement attempts consumed by fault re-placements (a device
+    /// *leaving* evacuates without charging the request).
+    attempts: u32,
+    /// Re-placements avoid the device that just failed the request.
+    last_device: Option<usize>,
+    /// Requeued work was already admitted once — it bypasses the
+    /// admission bound instead of risking a double shed.
+    redelivery: bool,
+}
+
+#[derive(Debug, Clone)]
+enum Work {
+    Arrive(Request),
+    Event(FleetAction),
+}
+
+/// Heap slot ordered by (time, insertion seq) — the seq tiebreak keeps
+/// the run deterministic and processes scripted events before arrivals
+/// that land on the same instant.
+struct Slot {
+    t: f64,
+    seq: u64,
+    work: Work,
+}
+
+impl PartialEq for Slot {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.total_cmp(&other.t).is_eq() && self.seq == other.seq
+    }
+}
+impl Eq for Slot {}
+impl PartialOrd for Slot {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Slot {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Pending {
+    req: Request,
+    start_s: f64,
+    done_s: f64,
+    pred: Option<f64>,
+    exec_s: f64,
+    cache_hit: bool,
+}
+
+struct Runner {
+    fleet: Fleet,
+    sc: Scenario,
+    cold_joins: bool,
+    heap: BinaryHeap<Reverse<Slot>>,
+    seq: u64,
+    /// Per-device absolute time the device next comes free.
+    free: Vec<f64>,
+    /// Degradation multiplier on service speed (1.0 = nominal).
+    speed: Vec<f64>,
+    faults: Vec<Fault>,
+    fault_hits: Vec<u32>,
+    pending: Vec<VecDeque<Pending>>,
+    metrics: Metrics,
+    series: BTreeMap<String, Vec<f64>>,
+    joins: Vec<JoinerReport>,
+    join_streaks: BTreeMap<usize, u32>,
+    served: u64,
+    shed: u64,
+    dropped: u64,
+    requeued: u64,
+    faults_detected: u64,
+    wrong_results: u64,
+    quarantined: u64,
+    leaves: u64,
+    revalidations: u64,
+    tunes_on_miss: u64,
+    makespan_s: f64,
+    total_flops: f64,
+    degraded: Option<usize>,
+    degrade_at: Option<f64>,
+    degrade_streak: u32,
+    retune_convergence_s: Option<f64>,
+}
+
+impl Runner {
+    fn new(fleet: Fleet, sc: Scenario, cold_joins: bool) -> Self {
+        let n = fleet.len();
+        Self {
+            fleet,
+            sc,
+            cold_joins,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            free: vec![0.0; n],
+            speed: vec![1.0; n],
+            faults: vec![Fault::None; n],
+            fault_hits: vec![0; n],
+            pending: (0..n).map(|_| VecDeque::new()).collect(),
+            metrics: Metrics::new(),
+            series: BTreeMap::new(),
+            joins: Vec::new(),
+            join_streaks: BTreeMap::new(),
+            served: 0,
+            shed: 0,
+            dropped: 0,
+            requeued: 0,
+            faults_detected: 0,
+            wrong_results: 0,
+            quarantined: 0,
+            leaves: 0,
+            revalidations: 0,
+            tunes_on_miss: 0,
+            makespan_s: 0.0,
+            total_flops: 0.0,
+            degraded: None,
+            degrade_at: None,
+            degrade_streak: 0,
+            retune_convergence_s: None,
+        }
+    }
+
+    fn push(&mut self, t: f64, work: Work) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Reverse(Slot { t, seq, work }));
+    }
+
+    /// Closed-loop calibration: greedily place a short burst on the
+    /// warmed fleet to learn its aggregate service rate, so the
+    /// scenario's *relative* curve (base 1.0 = capacity) can be made
+    /// absolute. Run before any events, on the founding fleet.
+    fn calibrate(&self) -> f64 {
+        let mut rng = Rng::new(self.sc.seed ^ 0xCA11_B8A7E);
+        let mut busy = vec![0.0f64; self.fleet.len()];
+        let mut served = 0usize;
+        for i in 0..CALIBRATION_REQUESTS {
+            let shape = self.sc.mix.sample(&mut rng, i);
+            let idx = (0..self.fleet.len())
+                .min_by(|&x, &y| {
+                    let sx = busy[x]
+                        + self.fleet.predict_exec(x, shape).unwrap_or(0.0);
+                    let sy = busy[y]
+                        + self.fleet.predict_exec(y, shape).unwrap_or(0.0);
+                    sx.total_cmp(&sy)
+                })
+                .expect("non-empty fleet");
+            let cand = tuned_candidate(&self.fleet, idx, shape);
+            if let Some(e) =
+                measure(self.fleet.device(idx).device(), shape, &cand)
+            {
+                busy[idx] += e;
+                served += 1;
+            }
+        }
+        let makespan = busy.iter().cloned().fold(0.0f64, f64::max);
+        if makespan > 0.0 && served > 0 {
+            served as f64 / makespan
+        } else {
+            1.0
+        }
+    }
+
+    fn run(mut self) -> ScenarioReport {
+        let cal_rate = self.calibrate();
+        let n = self.sc.requests;
+        // Nominal span: n arrivals at the curve's base fraction of the
+        // calibrated capacity. Mod times in the catalogue are fractions
+        // of this span.
+        let span = n as f64 / (self.sc.curve.base * cal_rate).max(1e-12);
+        let curve = self.sc.curve.scaled(cal_rate, span);
+        let arrivals = curve.gen_times(self.sc.seed, n);
+        let span_end = arrivals.last().copied().unwrap_or(0.0);
+        // Events are anchored to the *generated* trace (a flash crowd
+        // compresses arrivals, so the nominal span overshoots).
+        for ev in self.sc.events.clone() {
+            let t = ev.at.clamp(0.0, 1.0) * span_end;
+            self.push(t, Work::Event(ev.action));
+        }
+        let mut shape_rng = Rng::new(self.sc.seed ^ 0x5AFE_C0DE);
+        for (i, &t) in arrivals.iter().enumerate() {
+            let shape = self.sc.mix.sample(&mut shape_rng, i);
+            self.push(
+                t,
+                Work::Arrive(Request {
+                    at_s: t,
+                    shape,
+                    attempts: 0,
+                    last_device: None,
+                    redelivery: false,
+                }),
+            );
+        }
+
+        // Global time order across three streams: completions, scripted
+        // events, arrivals. Completions at time T commit before any
+        // same-T heap work, so admission sees an up-to-date queue and
+        // fault requeues re-enter after the device freed the slot.
+        loop {
+            let next_heap = self.heap.peek().map(|Reverse(s)| s.t);
+            let next_done = self.earliest_done();
+            match (next_heap, next_done) {
+                (None, None) => break,
+                (ht, Some((idx, d)))
+                    if ht.map_or(true, |ht| d <= ht) =>
+                {
+                    self.commit_head(idx);
+                }
+                _ => {
+                    let Reverse(slot) =
+                        self.heap.pop().expect("heap non-empty");
+                    match slot.work {
+                        Work::Arrive(req) => self.place(req, slot.t),
+                        Work::Event(action) => {
+                            self.apply_event(action, slot.t)
+                        }
+                    }
+                }
+            }
+        }
+        self.finish()
+    }
+
+    /// The globally earliest uncommitted completion. Per-device queues
+    /// complete in push order (service is FIFO per device), so only
+    /// queue heads need scanning.
+    fn earliest_done(&self) -> Option<(usize, f64)> {
+        self.pending
+            .iter()
+            .enumerate()
+            .filter_map(|(i, q)| q.front().map(|p| (i, p.done_s)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+    }
+
+    fn place(&mut self, req: Request, now: f64) {
+        if !req.redelivery {
+            self.metrics.on_submit();
+        }
+        let mut cands = self.fleet.active_indices();
+        if cands.is_empty() {
+            self.dropped += 1;
+            self.metrics.on_fail();
+            return;
+        }
+        if let Some(last) = req.last_device {
+            if cands.len() > 1 {
+                cands.retain(|&d| d != last);
+            }
+        }
+        let shape = req.shape;
+        let best = cands
+            .iter()
+            .copied()
+            .min_by(|&x, &y| {
+                let sx = self.free[x].max(now)
+                    + self.fleet.predict_exec(x, shape).unwrap_or(0.0);
+                let sy = self.free[y].max(now)
+                    + self.fleet.predict_exec(y, shape).unwrap_or(0.0);
+                sx.total_cmp(&sy)
+            })
+            .expect("candidates non-empty");
+        if !req.redelivery
+            && self.sc.max_queue > 0
+            && self.pending[best].len() >= self.sc.max_queue
+        {
+            self.shed += 1;
+            self.metrics.on_shed();
+            return;
+        }
+        let tuner = &self.fleet.device(best).tuner;
+        let cache_hit = tuner.lookup(shape).is_some();
+        if !cache_hit {
+            self.tunes_on_miss += 1;
+            let _ = tuner.tune_and_insert(shape);
+        }
+        let pred = self.fleet.predict_exec(best, shape);
+        let cand = tuned_candidate(&self.fleet, best, shape);
+        let Some(base) =
+            measure(self.fleet.device(best).device(), shape, &cand)
+        else {
+            self.dropped += 1;
+            self.metrics.on_fail();
+            return;
+        };
+        let exec_s = base / self.speed[best].max(1e-12);
+        let start_s = self.free[best].max(now);
+        let done_s = start_s + exec_s;
+        self.free[best] = done_s;
+        self.pending[best].push_back(Pending {
+            req,
+            start_s,
+            done_s,
+            pred,
+            exec_s,
+            cache_hit,
+        });
+    }
+
+    fn apply_event(&mut self, action: FleetAction, t: f64) {
+        match action {
+            FleetAction::Leave { device }
+                if device < self.fleet.len() =>
+            {
+                self.fleet.set_active(device, false);
+                self.leaves += 1;
+                // Evacuate in-flight work (completions ≤ t already
+                // committed). The device failed, not the request, so
+                // no attempt is charged.
+                let inflight: Vec<Pending> =
+                    self.pending[device].drain(..).collect();
+                self.free[device] = t;
+                for p in inflight {
+                    self.requeued += 1;
+                    let mut req = p.req;
+                    req.last_device = Some(device);
+                    req.redelivery = true;
+                    self.push(t, Work::Arrive(req));
+                }
+            }
+            FleetAction::Leave { .. } => {}
+            FleetAction::Join { spec, warm } => {
+                let Ok(dev) = Device::parse_spec(&spec) else {
+                    return;
+                };
+                let idx = self.fleet.add_device(dev);
+                self.free.push(t);
+                self.speed.push(1.0);
+                self.faults.push(Fault::None);
+                self.fault_hits.push(0);
+                self.pending.push(VecDeque::new());
+                let warm = warm && !self.cold_joins;
+                let seeded = if warm {
+                    self.fleet.transfer_cache(idx)
+                } else {
+                    0
+                };
+                self.join_streaks.insert(idx, 0);
+                self.joins.push(JoinerReport {
+                    device: idx,
+                    name: self.fleet.device(idx).name.clone(),
+                    warm,
+                    seeded,
+                    requests_to_converge: None,
+                    served: 0,
+                });
+            }
+            FleetAction::Degrade { device, factor } => {
+                if device < self.speed.len()
+                    && factor.is_finite()
+                    && factor > 0.0
+                {
+                    self.speed[device] *= factor;
+                    if self.degrade_at.is_none() {
+                        self.degraded = Some(device);
+                        self.degrade_at = Some(t);
+                    }
+                }
+            }
+            FleetAction::Inject { device, fault } => {
+                if device < self.faults.len() {
+                    self.faults[device] = fault;
+                }
+            }
+        }
+    }
+
+    fn commit_head(&mut self, idx: usize) {
+        let p = self.pending[idx].pop_front().expect("queue head");
+        self.makespan_s = self.makespan_s.max(p.done_s);
+        let fault = self.faults[idx];
+        if spot_check(fault) {
+            if fault != Fault::None {
+                // An active fault slipped past both canaries — the
+                // result cannot be trusted and the bench gate treats
+                // any non-zero count as a hard failure.
+                self.wrong_results += 1;
+            }
+            self.serve(idx, p);
+        } else {
+            self.faults_detected += 1;
+            self.fault_hits[idx] += 1;
+            if self.fault_hits[idx] >= QUARANTINE_HITS
+                && self.fleet.is_active(idx)
+            {
+                self.fleet.set_active(idx, false);
+                self.quarantined += 1;
+            }
+            let mut req = p.req;
+            req.attempts += 1;
+            req.last_device = Some(idx);
+            req.redelivery = true;
+            if req.attempts >= MAX_ATTEMPTS {
+                self.dropped += 1;
+                self.metrics.on_fail();
+            } else {
+                self.requeued += 1;
+                self.push(p.done_s, Work::Arrive(req));
+            }
+        }
+    }
+
+    fn serve(&mut self, idx: usize, p: Pending) {
+        let shape = p.req.shape;
+        self.served += 1;
+        self.total_flops += shape.flops() as f64;
+        let queue_s = (p.start_s - p.req.at_s).max(0.0);
+        self.metrics.on_complete(queue_s, p.exec_s, shape.flops());
+        let key = device_key(idx, &ShapeBucket::of(shape).key());
+        self.metrics.on_residual(&key, p.pred, p.exec_s);
+        self.series.entry(key).or_default().push(p.exec_s);
+        let ape = p.pred.map(|pr| (pr - p.exec_s).abs() / p.exec_s);
+        if let Observation::Drifted { .. } =
+            self.fleet.observe(idx, shape, p.exec_s)
+        {
+            self.revalidations += 1;
+            let _ = self
+                .fleet
+                .device(idx)
+                .tuner
+                .retune_keeping_observations(shape);
+        }
+        // Slow-node recovery clock: consecutive within-policy
+        // completions on the degraded device, measured from the first
+        // Degrade event.
+        if let (Some(d), Some(t0)) = (self.degraded, self.degrade_at) {
+            if idx == d
+                && p.done_s >= t0
+                && self.retune_convergence_s.is_none()
+            {
+                let max_drift =
+                    self.fleet.device(idx).tuner.staleness().max_drift;
+                if ape.map_or(false, |a| a <= max_drift) {
+                    self.degrade_streak += 1;
+                } else {
+                    self.degrade_streak = 0;
+                }
+                if self.degrade_streak >= RECOVERY_STREAK {
+                    self.retune_convergence_s = Some(p.done_s - t0);
+                }
+            }
+        }
+        // Joiner convergence: consecutive tuner-cache hits.
+        if let Some(j) = self.joins.iter_mut().find(|j| j.device == idx) {
+            j.served += 1;
+            let streak = self.join_streaks.entry(idx).or_insert(0);
+            if p.cache_hit {
+                *streak += 1;
+            } else {
+                *streak = 0;
+            }
+            if *streak >= JOIN_STREAK && j.requests_to_converge.is_none() {
+                j.requests_to_converge = Some(j.served);
+            }
+        }
+    }
+
+    fn finish(self) -> ScenarioReport {
+        let snapshot = self.metrics.snapshot();
+        let rules =
+            slo::parse_rules(self.sc.slo).expect("catalogue SLO parses");
+        let breaches = slo::evaluate(&rules, &snapshot, None);
+        ScenarioReport {
+            name: self.sc.name.to_string(),
+            requests: self.sc.requests,
+            served: self.served,
+            shed: self.shed,
+            dropped: self.dropped,
+            requeued: self.requeued,
+            faults_detected: self.faults_detected,
+            wrong_results: self.wrong_results,
+            quarantined: self.quarantined,
+            leaves: self.leaves,
+            joins: self.joins,
+            revalidations: self.revalidations,
+            tunes_on_miss: self.tunes_on_miss,
+            makespan_s: self.makespan_s,
+            total_flops: self.total_flops,
+            latency_p50_ms: snapshot.e2e.quantile_us(0.50) / 1e3,
+            latency_p99_ms: snapshot.e2e.quantile_us(0.99) / 1e3,
+            queue_delay_mean_s: snapshot.queue.mean_us() / 1e6,
+            retune_convergence_s: self.retune_convergence_s,
+            residuals: snapshot.residuals,
+            breaches,
+            final_bound: self.sc.max_queue,
+            measured_series: self.series.into_iter().collect(),
+        }
+    }
+}
+
+/// Run one scenario end to end on a fresh fleet built from its spec.
+/// Deterministic per (scenario, options).
+pub fn run_scenario(
+    sc: &Scenario,
+    opts: &ScenarioRunOptions,
+) -> ScenarioReport {
+    let sc = match opts.requests {
+        Some(n) => sc.clone().with_requests(n),
+        None => sc.clone(),
+    };
+    let devices = Device::parse_fleet_spec(sc.fleet_spec)
+        .expect("scenario fleet spec parses");
+    let fleet = Fleet::new(
+        devices,
+        TuneOptions {
+            top_k: 4,
+            budget: Budget::from_millis(40),
+            bytes_per_elem: 4,
+        },
+        StalenessPolicy::default(),
+        64,
+    );
+    warm(&fleet, &sc.mix.shapes());
+    Runner::new(fleet, sc, opts.cold_joins).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::workload::{
+        scenario, DriftingMix, FleetEvent, RateCurve,
+    };
+    use crate::prop;
+
+    fn shrunk(name: &str, n: usize) -> ScenarioReport {
+        let sc = scenario(name).expect("catalogue scenario");
+        run_scenario(
+            &sc,
+            &ScenarioRunOptions { requests: Some(n), cold_joins: false },
+        )
+    }
+
+    #[test]
+    fn canary_catches_every_catalogue_fault() {
+        assert!(spot_check(Fault::None), "fixed path must be clean");
+        // Sub-maximal hw_cus corrupts the full-CU canary schedule.
+        assert!(!spot_check(Fault::CuMapping { hw_cus: 30 }));
+        // Full-CU hw_cus is identity on p=120 but corrupts p=30 — the
+        // second canary exists exactly for this case.
+        assert!(!spot_check(Fault::CuMapping { hw_cus: 120 }));
+        // The canary shape has ≥3-way split tiles at p=120.
+        assert!(!spot_check(Fault::FixupOverflow));
+    }
+
+    #[test]
+    fn scenario_runs_are_deterministic() {
+        let a = shrunk("flash-crowd", 60);
+        let b = shrunk("flash-crowd", 60);
+        assert_eq!(a.served, b.served);
+        assert_eq!(a.shed, b.shed);
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert!(a.conserved(), "{a:?}");
+        assert!(a.served > 0);
+        assert!(a.shed_rate().is_finite());
+        assert!(a.throughput_tflops().is_finite());
+    }
+
+    #[test]
+    fn fault_injection_detects_and_never_serves_wrong_results() {
+        let r = shrunk("fault-injection", 100);
+        assert!(r.conserved(), "{r:?}");
+        assert!(r.faults_detected > 0, "faults must trip the spot check");
+        assert_eq!(r.wrong_results, 0, "a wrong result was served: {r:?}");
+        assert!(r.quarantined >= 1, "repeat offenders must be benched");
+        assert!(r.requeued > 0, "detected faults must re-place the work");
+        assert!(r.served > 0, "healthy devices must absorb the load");
+    }
+
+    #[test]
+    fn device_churn_requeues_inflight_and_joiner_serves() {
+        let r = shrunk("device-churn", 120);
+        assert!(r.conserved(), "{r:?}");
+        assert_eq!(r.leaves, 1);
+        assert_eq!(r.joins.len(), 1);
+        let j = &r.joins[0];
+        assert!(j.warm && j.seeded > 0, "join must seed via transfer");
+        assert!(j.served > 0, "joiner must take traffic");
+        assert_eq!(
+            j.requests_to_converge,
+            Some(u64::from(JOIN_STREAK)),
+            "a fully warm-seeded joiner hits the cache from request 1"
+        );
+    }
+
+    #[test]
+    fn warm_joiner_converges_before_cold() {
+        let sc = scenario("device-churn").unwrap();
+        let warm = run_scenario(
+            &sc,
+            &ScenarioRunOptions { requests: Some(120), cold_joins: false },
+        );
+        let cold = run_scenario(
+            &sc,
+            &ScenarioRunOptions { requests: Some(120), cold_joins: true },
+        );
+        let w = warm.joins[0]
+            .requests_to_converge
+            .expect("warm joiner converges");
+        // The cold joiner's first request is necessarily a cache miss,
+        // so its streak cannot complete before request JOIN_STREAK + 1.
+        match cold.joins[0].requests_to_converge {
+            Some(c) => assert!(w < c, "warm {w} must beat cold {c}"),
+            None => {} // never converged: warm wins by definition
+        }
+        assert_eq!(cold.joins[0].seeded, 0);
+        assert!(cold.tunes_on_miss > warm.tunes_on_miss);
+    }
+
+    #[test]
+    fn slow_node_recovery_clock_runs() {
+        let r = shrunk("slow-node", 140);
+        assert!(r.conserved(), "{r:?}");
+        assert!(
+            r.retune_convergence_s.is_some(),
+            "drift re-tunes must chase the degraded device: {r:?}"
+        );
+        assert!(r.revalidations > 0, "degradation must trip drift");
+    }
+
+    #[test]
+    fn prop_leave_conserves_every_request() {
+        // Random leave instants and seeds: no request is ever lost or
+        // duplicated across the evacuation/requeue path.
+        prop::check("device-leave conservation", 4, |rng| {
+            let at = 0.1 + 0.8 * rng.f64_unit();
+            let device = rng.usize_in(0, 3);
+            let sc = Scenario {
+                name: "prop-leave",
+                about: "conservation probe",
+                seed: rng.next_u64() | 1,
+                requests: 40,
+                curve: RateCurve::constant(0.6),
+                mix: DriftingMix::new(
+                    crate::fleet::sim::ShapeMix::skewed_default().shapes(),
+                    1.0,
+                    13,
+                ),
+                events: vec![FleetEvent {
+                    at,
+                    action: FleetAction::Leave { device },
+                }],
+                fleet_spec: "mi200,mi200x0.5,mi100,mi100:60",
+                max_queue: 4,
+                slo: "shed<=1.0",
+            };
+            let r = run_scenario(&sc, &ScenarioRunOptions::default());
+            prop::ensure(
+                r.conserved(),
+                format!(
+                    "leave@{at:.2} dev{device}: served {} + shed {} + \
+                     dropped {} != {}",
+                    r.served, r.shed, r.dropped, r.requests
+                ),
+            )?;
+            prop::ensure(r.leaves == 1, "leave must fire".into())
+        });
+    }
+
+    #[test]
+    fn zero_request_report_stays_finite() {
+        let sc = scenario("drifting-hotset").unwrap();
+        let r = run_scenario(
+            &sc,
+            &ScenarioRunOptions { requests: Some(1), cold_joins: false },
+        );
+        assert!(r.conserved());
+        assert!(r.shed_rate().is_finite());
+        assert!(r.throughput_tflops().is_finite());
+        // And the report serializes.
+        let j = r.to_json();
+        assert_eq!(j.s("scenario").unwrap(), "drifting-hotset");
+        assert!(j.f("shed_rate").unwrap().is_finite());
+    }
+}

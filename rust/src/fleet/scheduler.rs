@@ -103,6 +103,9 @@ impl Fleet {
             crate::trace::span1("fleet.place", "devices", self.len() as u64);
         let mut best: Option<(f64, usize, f64)> = None; // (score, idx, pred)
         for idx in 0..self.len() {
+            if !self.device(idx).is_active() {
+                continue; // churned-out member: never place there
+            }
             let Some(pred) = self.predict_exec(idx, shape) else {
                 continue;
             };
@@ -163,13 +166,19 @@ impl Fleet {
         }
     }
 
-    /// The least-loaded device: fewest outstanding requests, ties by
-    /// predicted in-flight seconds (non-finite treated as saturated),
-    /// then by index for determinism.
+    /// The least-loaded *active* device: fewest outstanding requests,
+    /// ties by predicted in-flight seconds (non-finite treated as
+    /// saturated), then by index for determinism. Falls back to
+    /// device 0 only in the pathological all-inactive fleet (placement
+    /// must return *some* index; the caller sees every device refusing
+    /// work through its own queue accounting).
     fn least_loaded(&self) -> usize {
         let mut best = 0usize;
         let mut best_key = (usize::MAX, f64::INFINITY);
         for (idx, d) in self.devices().iter().enumerate() {
+            if !d.is_active() {
+                continue;
+            }
             let q = d.queue.lock().expect("fleet queue");
             let inflight =
                 if q.in_flight_s.is_finite() { q.in_flight_s } else { f64::INFINITY };
@@ -310,6 +319,34 @@ mod tests {
             fleet.device(0).tuner.lookup(shape).unwrap().predicted_s;
         assert_eq!(cached, exact, "cache entry must drive the estimate");
         assert!(prior > 0.0 && prior.is_finite());
+    }
+
+    #[test]
+    fn inactive_devices_never_receive_placements() {
+        let fleet = two_device_fleet(1.0);
+        let shape = GemmShape::new(1024, 1024, 1024);
+        fleet.set_active(0, false);
+        let mut placements = Vec::new();
+        for _ in 0..20 {
+            let p = fleet.place_gemm(shape);
+            assert_eq!(p.device, 1, "only the active device may serve");
+            placements.push(p);
+        }
+        // the degenerate-shape fallback also respects the flag
+        let p = fleet.place_gemm(GemmShape::new(0, 4, 4));
+        assert!(p.fallback);
+        assert_eq!(p.device, 1);
+        placements.push(p);
+        for p in &placements {
+            fleet.complete(p);
+        }
+        // rejoin: both serve again
+        fleet.set_active(0, true);
+        let mut counts = [0usize; 2];
+        for _ in 0..40 {
+            counts[fleet.place_gemm(shape).device] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0, "{counts:?}");
     }
 
     #[test]

@@ -153,7 +153,12 @@ pub fn warm(fleet: &Fleet, shapes: &[GemmShape]) -> usize {
 /// The execution config both replay loops share: the device's tuned
 /// config when cached, else the one-config-per-precision default —
 /// the same rule for every policy, so comparisons isolate *placement*.
-fn tuned_candidate(fleet: &Fleet, idx: usize, shape: GemmShape) -> Candidate {
+/// `pub(super)` so the scenario runner executes requests identically.
+pub(super) fn tuned_candidate(
+    fleet: &Fleet,
+    idx: usize,
+    shape: GemmShape,
+) -> Candidate {
     match fleet.device(idx).tuner.lookup(shape) {
         Some(cfg) => Candidate {
             params: cfg.params,

@@ -17,7 +17,7 @@
 
 use std::path::Path;
 
-use streamk::bench::workload::Arrival;
+use streamk::bench::workload::{self, Arrival};
 use streamk::cli::{Command, Opt};
 use streamk::config::Settings;
 use streamk::coordinator::{Coordinator, Router};
@@ -26,16 +26,17 @@ use streamk::decomp::{
 };
 use streamk::exec::Stopwatch;
 use streamk::fleet::{
-    gen_open_trace, gen_trace, run_trace, run_trace_open_adaptive,
-    run_trace_open_bounded, warm, Fleet, PlacementPolicy, ShapeMix,
+    gen_open_trace, gen_trace, run_scenario, run_trace,
+    run_trace_open_adaptive, run_trace_open_bounded, warm, Fleet,
+    PlacementPolicy, ScenarioRunOptions, ShapeMix,
 };
 use streamk::gpu_sim::{self, Device, DeviceKind};
 use streamk::plan::PlanCacheStats;
 use streamk::runtime::{spawn_engine, Manifest};
 use streamk::trace;
 use streamk::tuner::{
-    tune_many, Budget, ShapeBucket, StalenessPolicy, TuneOptions, Tuner,
-    TABLE1_SUITE,
+    tune_many, BlendConfig, Budget, ShapeBucket, StalenessPolicy,
+    TuneOptions, Tuner, TABLE1_SUITE,
 };
 
 fn main() {
@@ -172,6 +173,16 @@ fn cmd_serve(argv: &[String]) -> i32 {
         .opt(Opt::value("tune-budget-ms", None, "per-tune wall budget"))
         .opt(Opt::value("tune-top-k", None, "measured candidates per tune"))
         .opt(Opt::value("fleet", None, "fleet spec, e.g. mi200,mi200x0.5"))
+        .opt(Opt::value(
+            "observe-alpha",
+            None,
+            "EWMA weight folding measured latencies into the cache (0,1]",
+        ))
+        .opt(Opt::value(
+            "predict-blend",
+            None,
+            "weight pulling predictions toward observed EWMA (0,1]",
+        ))
         .opt(Opt::value("drift-pct", None, "re-validate past this drift %"))
         .opt(Opt::value("cache-max-age-s", None, "age out entries older than"))
         .opt(Opt::value(
@@ -663,12 +674,51 @@ fn cmd_fleet(argv: &[String]) -> i32 {
         "adaptive admission: tighten --max-queue while the windowed shed \
          rate exceeds this fraction (needs --open-rate and --max-queue)",
     ))
+    .opt(Opt::value(
+        "scenario",
+        None,
+        "run a named adversarial scenario instead of the plain trace \
+         (see --list-scenarios); exits non-zero on SLO breach",
+    ))
+    .opt(Opt::value(
+        "scenario-requests",
+        None,
+        "override the scenario's built-in request count",
+    ))
+    .opt(Opt::flag(
+        "cold-joins",
+        "scenario joiners start cold: skip cross-device cache transfer",
+    ))
+    .opt(Opt::flag(
+        "list-scenarios",
+        "list the adversarial scenario catalogue and exit",
+    ))
+    .opt(Opt::flag(
+        "fit-blend",
+        "after a scenario, least-squares-fit the EWMA/blend constants \
+         from the recorded per-bucket latency series",
+    ))
     .example("streamk fleet --requests 400")
+    .example("streamk fleet --list-scenarios")
+    .example("streamk fleet --scenario device-churn")
+    .example("streamk fleet --scenario slow-node --fit-blend")
     .example("streamk fleet --devices mi200,mi100 --no-warm")
     .example("streamk fleet --open-rate 500   # queueing delay visible")
     .example("streamk fleet --open-rate 500 --max-queue 4   # shed rate visible")
     .example("streamk fleet --open-rate 500 --max-queue 8 --shed-slo 0.05");
     let args = parse_or_exit(&cmd, argv);
+    if args.flag("list-scenarios") {
+        println!("adversarial scenario catalogue:");
+        for sc in workload::catalogue() {
+            println!("  {:<18} {}", sc.name, sc.about);
+            println!("  {:<18}   slo: {} | {} requests on {}",
+                     "", sc.slo, sc.requests, sc.fleet_spec);
+        }
+        return 0;
+    }
+    if let Some(name) = args.get("scenario") {
+        return cmd_fleet_scenario(name, &args);
+    }
     let devices = match Device::parse_fleet_spec(args.str("devices")) {
         Ok(d) => d,
         Err(e) => {
@@ -828,6 +878,132 @@ fn cmd_fleet(argv: &[String]) -> i32 {
     }
     println!("\n{}", plan_stats_line(&streamk::plan::global().stats()));
     0
+}
+
+/// `streamk fleet --scenario <name>`: run one adversarial scenario
+/// open-loop and gate the exit code on its SLO rules plus request
+/// conservation, mirroring what `cargo bench --bench scenarios` asserts.
+fn cmd_fleet_scenario(name: &str, args: &streamk::cli::Args) -> i32 {
+    let Some(sc) = workload::scenario(name) else {
+        eprintln!("error: unknown scenario '{name}'; available:");
+        for s in workload::catalogue() {
+            eprintln!("  {}", s.name);
+        }
+        return 2;
+    };
+    let requests = match args.get("scenario-requests") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => {
+                eprintln!(
+                    "error: --scenario-requests expects an unsigned \
+                     integer, got '{v}'"
+                );
+                return 2;
+            }
+        },
+        None => None,
+    };
+    println!("scenario {}: {}", sc.name, sc.about);
+    println!("  fleet {} | slo {}", sc.fleet_spec, sc.slo);
+    let report = run_scenario(
+        &sc,
+        &ScenarioRunOptions {
+            requests,
+            cold_joins: args.flag("cold-joins"),
+        },
+    );
+    println!("\n{}", report.summary());
+    println!(
+        "  shed rate {:.1}% | throughput {:.2} TFLOP/s | p50 {:.3} ms | \
+         p99 {:.3} ms | queue mean {:.3} ms",
+        report.shed_rate() * 100.0,
+        report.throughput_tflops(),
+        report.latency_p50_ms,
+        report.latency_p99_ms,
+        report.queue_delay_mean_s * 1e3,
+    );
+    for j in &report.joins {
+        println!(
+            "  joiner {} ({}): seeded {} entries, converged after {} \
+             requests, served {}",
+            j.name,
+            if j.warm { "warm" } else { "cold" },
+            j.seeded,
+            j.requests_to_converge
+                .map(|n| n.to_string())
+                .unwrap_or_else(|| "-".into()),
+            j.served,
+        );
+    }
+    if let Some(s) = report.retune_convergence_s {
+        println!("  slow-node re-tune converged {s:.3} s after degradation");
+    }
+    if !report.residuals.is_empty() {
+        println!("  block2time residuals:");
+        for r in &report.residuals {
+            println!("    {}", r.summary());
+        }
+    }
+    if args.flag("fit-blend") {
+        let series: Vec<Vec<f64>> = report
+            .measured_series
+            .iter()
+            .map(|(_, v)| v.clone())
+            .collect();
+        match BlendConfig::fit(&series) {
+            Some(fit) => println!(
+                "  fit-blend: observe_alpha {:.2} predict_blend {:.2} \
+                 (defaults {:.2}/{:.2}; apply via --observe-alpha / \
+                 --predict-blend or STREAMK_OBSERVE_ALPHA / \
+                 STREAMK_PREDICT_BLEND)",
+                fit.observe_alpha,
+                fit.predict_blend,
+                BlendConfig::default().observe_alpha,
+                BlendConfig::default().predict_blend,
+            ),
+            None => println!(
+                "  fit-blend: not enough latency observations to fit"
+            ),
+        }
+    }
+    let mut rc = 0;
+    if !report.conserved() {
+        eprintln!(
+            "FAIL: request conservation: served {} + shed {} + dropped {} \
+             != {} submitted",
+            report.served, report.shed, report.dropped, report.requests,
+        );
+        rc = 1;
+    }
+    if report.wrong_results > 0 {
+        eprintln!(
+            "FAIL: {} corrupted result(s) served to clients",
+            report.wrong_results
+        );
+        rc = 1;
+    }
+    for b in &report.breaches {
+        eprintln!(
+            "FAIL: SLO breach: {}{} = {:.4} > {:.4}",
+            b.rule,
+            b.bucket
+                .as_deref()
+                .map(|s| format!(" [{s}]"))
+                .unwrap_or_default(),
+            b.value,
+            b.limit,
+        );
+        rc = 1;
+    }
+    if rc == 0 {
+        println!("\nscenario {} PASS ({} SLO rules held)", sc.name, {
+            streamk::coordinator::slo::parse_rules(sc.slo)
+                .map(|r| r.len())
+                .unwrap_or(0)
+        });
+    }
+    rc
 }
 
 fn cmd_sim(argv: &[String]) -> i32 {

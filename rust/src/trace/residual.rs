@@ -25,9 +25,20 @@
 use crate::coordinator::Histogram;
 use crate::json::{obj, Value};
 
-/// EWMA smoothing for the signed bias (matches the tuner's observation
-/// alpha so the two feedback loops settle at comparable speed).
+/// Default EWMA smoothing for the signed bias (matches the tuner's
+/// observation alpha so the two feedback loops settle at comparable
+/// speed). Overridable per tracker ([`ResidualTracker::with_alpha`])
+/// and process-wide via `STREAMK_OBSERVE_ALPHA` — the same knob that
+/// steers [`crate::tuner::BlendConfig`], keeping the two loops in sync.
 const BIAS_ALPHA: f64 = 0.3;
+
+fn default_alpha() -> f64 {
+    std::env::var("STREAMK_OBSERVE_ALPHA")
+        .ok()
+        .and_then(|v| v.trim().parse::<f64>().ok())
+        .filter(|v| v.is_finite() && *v > 0.0 && *v <= 1.0)
+        .unwrap_or(BIAS_ALPHA)
+}
 
 #[derive(Debug, Clone)]
 struct Bucket {
@@ -39,9 +50,16 @@ struct Bucket {
 }
 
 /// Per-shape-bucket prediction residual statistics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct ResidualTracker {
     buckets: Vec<Bucket>,
+    alpha: f64,
+}
+
+impl Default for ResidualTracker {
+    fn default() -> Self {
+        Self { buckets: Vec::new(), alpha: default_alpha() }
+    }
 }
 
 /// Point-in-time view of one bucket, for snapshots/serialization.
@@ -59,6 +77,15 @@ pub struct ResidualSnapshot {
 impl ResidualTracker {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Override the bias-EWMA smoothing weight (must be in (0, 1];
+    /// out-of-range values keep the current weight).
+    pub fn with_alpha(mut self, alpha: f64) -> Self {
+        if alpha.is_finite() && alpha > 0.0 && alpha <= 1.0 {
+            self.alpha = alpha;
+        }
+        self
     }
 
     /// Record one (predicted, measured) pair for `bucket_key`. Returns
@@ -95,7 +122,7 @@ impl ResidualTracker {
         b.ewma_bias = if b.count == 0 {
             rel
         } else {
-            BIAS_ALPHA * rel + (1.0 - BIAS_ALPHA) * b.ewma_bias
+            self.alpha * rel + (1.0 - self.alpha) * b.ewma_bias
         };
         b.count += 1;
         b.ape.record_secs(ape);
@@ -209,6 +236,23 @@ mod tests {
         }
         let bias = t.snapshot()[0].ewma_bias;
         assert!(bias > 0.99, "bias should converge up: {bias}");
+    }
+
+    #[test]
+    fn alpha_override_changes_settling_speed() {
+        // alpha = 1.0: the bias IS the last relative error.
+        let mut fast = ResidualTracker::new().with_alpha(1.0);
+        fast.observe("b", 1.0, 1.0);
+        fast.observe("b", 2.0, 1.0);
+        assert!((fast.snapshot()[0].ewma_bias - 1.0).abs() < 1e-12);
+        // a tiny alpha barely moves off the first sample
+        let mut slow = ResidualTracker::new().with_alpha(0.01);
+        slow.observe("b", 1.0, 1.0);
+        slow.observe("b", 2.0, 1.0);
+        assert!(slow.snapshot()[0].ewma_bias < 0.05);
+        // invalid overrides are ignored
+        let t = ResidualTracker::new().with_alpha(f64::NAN).with_alpha(2.0);
+        assert!((t.alpha - default_alpha()).abs() < 1e-12);
     }
 
     #[test]

@@ -60,13 +60,119 @@ pub const TABLE1_SUITE: &[(usize, usize, usize)] = &[
     (480, 512, 512),
 ];
 
-/// EWMA weight of one new serving observation in `observed_s`.
+/// Default EWMA weight of one new serving observation in `observed_s`.
 const OBSERVE_ALPHA: f64 = 0.3;
-/// How far one observation pulls the cached prediction toward the
-/// measured latency — the online Block2Time re-tuning step. Geometric:
-/// after k same-valued observations the prediction error shrinks by
-/// (1 − PREDICT_BLEND)^k.
+/// Default prediction blend: how far one observation pulls the cached
+/// prediction toward the measured latency — the online Block2Time
+/// re-tuning step. Geometric: after k same-valued observations the
+/// prediction error shrinks by (1 − PREDICT_BLEND)^k.
 const PREDICT_BLEND: f64 = 0.25;
+
+/// The two online-feedback smoothing constants, made configurable
+/// (settings key / env override) instead of hard-coded: the observation
+/// EWMA weight and the prediction blend used by [`Tuner::observe`].
+/// Both live in (0, 1]; higher chases regime changes faster, lower
+/// rejects noise harder.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlendConfig {
+    /// EWMA weight of one new serving observation in `observed_s`.
+    pub observe_alpha: f64,
+    /// How far one observation pulls the cached prediction toward the
+    /// measured latency.
+    pub predict_blend: f64,
+}
+
+impl Default for BlendConfig {
+    fn default() -> Self {
+        Self { observe_alpha: OBSERVE_ALPHA, predict_blend: PREDICT_BLEND }
+    }
+}
+
+fn env_unit_fraction(key: &str) -> Option<f64> {
+    std::env::var(key)
+        .ok()?
+        .trim()
+        .parse::<f64>()
+        .ok()
+        .filter(|v| v.is_finite() && *v > 0.0 && *v <= 1.0)
+}
+
+impl BlendConfig {
+    /// Defaults overridden by `STREAMK_OBSERVE_ALPHA` /
+    /// `STREAMK_PREDICT_BLEND` (each a fraction in (0, 1]; malformed or
+    /// out-of-range values are ignored, never panicked on).
+    pub fn from_env() -> Self {
+        let mut c = Self::default();
+        if let Some(v) = env_unit_fraction("STREAMK_OBSERVE_ALPHA") {
+            c.observe_alpha = v;
+        }
+        if let Some(v) = env_unit_fraction("STREAMK_PREDICT_BLEND") {
+            c.predict_blend = v;
+        }
+        c
+    }
+
+    pub fn is_valid(&self) -> bool {
+        let ok = |v: f64| v.is_finite() && v > 0.0 && v <= 1.0;
+        ok(self.observe_alpha) && ok(self.predict_blend)
+    }
+
+    /// Least-squares estimate of the smoothing constants from recorded
+    /// scenario traces: one measured-latency series per (device,
+    /// bucket). Picks the coefficient minimizing the summed one-step-
+    /// ahead squared prediction error of the EWMA across all series
+    /// (see [`fit_ewma_alpha`]); both constants smooth the same signal
+    /// toward measured latency, so the fitted tracking coefficient
+    /// applies to each. `None` when no series has ≥ 3 finite samples.
+    pub fn fit(series: &[Vec<f64>]) -> Option<Self> {
+        let alpha = fit_ewma_alpha_many(series)?;
+        Some(Self { observe_alpha: alpha, predict_blend: alpha })
+    }
+}
+
+/// Least-squares fit of a single EWMA smoothing coefficient to one
+/// recorded series: the α in (0, 1] minimizing
+/// Σₜ (EWMA_{t−1}(α) − xₜ)² — i.e. the best one-step-ahead tracker of
+/// the measured latencies. Evaluated on a fine grid (the objective is
+/// cheap and not guaranteed convex across regime changes). Returns
+/// `None` for fewer than 3 finite samples.
+pub fn fit_ewma_alpha(series: &[f64]) -> Option<f64> {
+    fit_ewma_alpha_many(std::slice::from_ref(&series.to_vec()))
+}
+
+fn fit_ewma_alpha_many(series: &[Vec<f64>]) -> Option<f64> {
+    let cleaned: Vec<Vec<f64>> = series
+        .iter()
+        .map(|s| {
+            s.iter().copied().filter(|v| v.is_finite() && *v > 0.0).collect()
+        })
+        .filter(|s: &Vec<f64>| s.len() >= 3)
+        .collect();
+    if cleaned.is_empty() {
+        return None;
+    }
+    let sse = |alpha: f64| -> f64 {
+        let mut total = 0.0;
+        for s in &cleaned {
+            let mut ewma = s[0];
+            for &x in &s[1..] {
+                let err = ewma - x;
+                total += err * err;
+                ewma = (1.0 - alpha) * ewma + alpha * x;
+            }
+        }
+        total
+    };
+    let mut best = (f64::INFINITY, OBSERVE_ALPHA);
+    for step in 1..=100 {
+        let alpha = step as f64 / 100.0;
+        let e = sse(alpha);
+        if e < best.0 {
+            best = (e, alpha);
+        }
+    }
+    Some(best.1)
+}
 
 /// Outcome of folding one measured serving latency into the cache.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -107,6 +213,7 @@ pub struct Tuner {
     dev: Device,
     opts: TuneOptions,
     staleness: StalenessPolicy,
+    blend: BlendConfig,
     fingerprint: DeviceFingerprint,
     capacity: usize,
     cache: Mutex<TuningCache>,
@@ -119,6 +226,7 @@ impl Tuner {
             dev,
             opts,
             staleness: StalenessPolicy::default(),
+            blend: BlendConfig::from_env(),
             fingerprint,
             capacity,
             cache: Mutex::new(TuningCache::new(capacity)),
@@ -129,6 +237,20 @@ impl Tuner {
     pub fn with_staleness(mut self, policy: StalenessPolicy) -> Self {
         self.staleness = policy;
         self
+    }
+
+    /// Override the feedback smoothing constants (ignores invalid
+    /// configs, keeping the current one — a bad settings file must not
+    /// freeze or explode the feedback loop).
+    pub fn with_blend(mut self, blend: BlendConfig) -> Self {
+        if blend.is_valid() {
+            self.blend = blend;
+        }
+        self
+    }
+
+    pub fn blend(&self) -> BlendConfig {
+        self.blend
     }
 
     pub fn device(&self) -> &Device {
@@ -288,13 +410,13 @@ impl Tuner {
                 {
                     measured_s
                 } else {
-                    (1.0 - OBSERVE_ALPHA) * cfg.observed_s
-                        + OBSERVE_ALPHA * measured_s
+                    (1.0 - self.blend.observe_alpha) * cfg.observed_s
+                        + self.blend.observe_alpha * measured_s
                 };
                 cfg.predicted_s =
                     if cfg.predicted_s.is_finite() && cfg.predicted_s > 0.0 {
-                        (1.0 - PREDICT_BLEND) * cfg.predicted_s
-                            + PREDICT_BLEND * measured_s
+                        (1.0 - self.blend.predict_blend) * cfg.predicted_s
+                            + self.blend.predict_blend * measured_s
                     } else {
                         measured_s
                     };
@@ -634,6 +756,68 @@ mod tests {
                 "{shape:?} must land in the cache"
             );
         }
+    }
+
+    #[test]
+    fn blend_config_overrides_the_smoothing_constants() {
+        let defaults = BlendConfig::default();
+        assert_eq!(defaults.observe_alpha, 0.3);
+        assert_eq!(defaults.predict_blend, 0.25);
+        assert!(defaults.is_valid());
+        assert!(!BlendConfig { observe_alpha: 0.0, ..defaults }.is_valid());
+        assert!(
+            !BlendConfig { predict_blend: f64::NAN, ..defaults }.is_valid()
+        );
+        assert!(!BlendConfig { observe_alpha: 1.5, ..defaults }.is_valid());
+
+        // predict_blend = 1.0: one observation snaps the prediction to
+        // the measurement exactly.
+        let t = tuner().with_blend(BlendConfig {
+            observe_alpha: 1.0,
+            predict_blend: 1.0,
+        });
+        let shape = GemmShape::new(480, 512, 512);
+        t.tune_and_insert(shape).unwrap();
+        let real = t.lookup(shape).unwrap().predicted_s * 1.4;
+        t.observe(shape, real);
+        let cfg = t.lookup(shape).unwrap();
+        assert!((cfg.predicted_s - real).abs() < 1e-15);
+        assert!((cfg.observed_s - real).abs() < 1e-15);
+
+        // an invalid override is ignored, not installed
+        let t = tuner().with_blend(BlendConfig {
+            observe_alpha: -1.0,
+            predict_blend: 0.5,
+        });
+        assert_eq!(t.blend(), BlendConfig::default());
+    }
+
+    #[test]
+    fn fit_ewma_alpha_tracks_the_series_dynamics() {
+        // A step change held for many samples rewards fast tracking.
+        let mut step = vec![1.0; 5];
+        step.extend(std::iter::repeat(4.0).take(40));
+        let fast = fit_ewma_alpha(&step).unwrap();
+        assert!(fast > 0.5, "step series wants a fast alpha: {fast}");
+
+        // Alternating noise around a fixed mean rewards heavy smoothing.
+        let noisy: Vec<f64> = (0..60)
+            .map(|i| if i % 2 == 0 { 0.5 } else { 1.5 })
+            .collect();
+        let slow = fit_ewma_alpha(&noisy).unwrap();
+        assert!(slow < fast, "noise wants a slower alpha: {slow} vs {fast}");
+
+        // Degenerate inputs: too short, or nothing finite.
+        assert!(fit_ewma_alpha(&[1.0, 2.0]).is_none());
+        assert!(fit_ewma_alpha(&[f64::NAN, -1.0, 0.0, f64::INFINITY])
+            .is_none());
+
+        // The multi-series fit returns a valid config and applies the
+        // same coefficient to both constants.
+        let cfg =
+            BlendConfig::fit(&[step.clone(), noisy.clone()]).unwrap();
+        assert!(cfg.is_valid());
+        assert_eq!(cfg.observe_alpha, cfg.predict_blend);
     }
 
     #[test]
