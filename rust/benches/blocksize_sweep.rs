@@ -94,7 +94,7 @@ fn main() {
         }
         let point_sw = Stopwatch::start();
         let sched = build_schedule(shape, p.block, dev.num_cus).unwrap();
-        let r = gemm::simulate_streamk(&dev, &sched, p.bytes_per_elem);
+        let r = gemm::simulate_streamk(&dev, &sched, p.bytes_per_elem());
         if point_sw.elapsed() > SLOW_POINT {
             eprintln!(
                 "  [slow] point {}x{}x{} dbuf={} took {:.2}s (> {:?}) — \

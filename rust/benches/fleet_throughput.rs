@@ -29,7 +29,7 @@ fn main() {
     let opts = TuneOptions {
         top_k: 8,
         budget: Budget::from_millis(budget_ms),
-        bytes_per_elem: 4,
+        ..TuneOptions::default()
     };
     // High drift threshold: this bench demonstrates the *blending* half
     // of the loop, so re-tunes must not reset predictions mid-series

@@ -29,7 +29,7 @@ fn main() {
     let opts = TuneOptions {
         top_k: 8,
         budget: Budget::from_millis(budget_ms),
-        bytes_per_elem: 4,
+        ..TuneOptions::default()
     };
     let tuner = Tuner::new(dev, opts, 64);
 

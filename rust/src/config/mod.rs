@@ -25,6 +25,9 @@ pub struct Settings {
     pub pad_policy: String,
     /// Default algorithm for artifact routing.
     pub algo: String,
+    /// Element width served and tuned ("f32" | "bf16" | "f16"): artifact
+    /// routing dtype, tuner width axis, and kernel lane selection.
+    pub dtype: String,
     /// Persistent tuner-cache file (None = in-memory only).
     pub tuner_cache: Option<PathBuf>,
     /// Tune shape buckets in the background when the cache misses.
@@ -72,6 +75,7 @@ impl Default for Settings {
             batch_window_us: 200,
             pad_policy: "none".into(),
             algo: "streamk".into(),
+            dtype: "f32".into(),
             tuner_cache: None,
             tune_on_miss: true,
             tune_budget_ms: 250,
@@ -178,6 +182,10 @@ impl Settings {
             }
             "algo" => {
                 self.algo =
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string()
+            }
+            "dtype" => {
+                self.dtype =
                     val.as_str().ok_or_else(|| bad("want string"))?.to_string()
             }
             "tuner_cache" => {
@@ -287,6 +295,9 @@ impl Settings {
         if let Some(v) = args.get("algo") {
             self.algo = v.to_string();
         }
+        if let Some(v) = args.get("dtype") {
+            self.dtype = v.to_string();
+        }
         if let Some(v) = args.get("tuner-cache") {
             self.tuner_cache = Some(PathBuf::from(v));
         }
@@ -352,6 +363,9 @@ impl Settings {
         if !matches!(self.algo.as_str(), "streamk" | "tile" | "splitk" | "ref") {
             return bad("algo", "must be streamk|tile|splitk|ref");
         }
+        if crate::kernel::Width::parse(&self.dtype).is_none() {
+            return bad("dtype", "must be f32|bf16|f16");
+        }
         if self.tune_budget_ms == 0 {
             return bad("tune_budget_ms", "must be positive");
         }
@@ -391,6 +405,14 @@ impl Settings {
             }
         }
         Ok(())
+    }
+
+    /// The element width this configuration asks for, as the tuner and
+    /// kernel layer consume it. An unvalidated dtype string (validate()
+    /// rejects those) degrades to f32 rather than panicking.
+    pub fn width(&self) -> crate::kernel::Width {
+        crate::kernel::Width::parse(&self.dtype)
+            .unwrap_or(crate::kernel::Width::F32)
     }
 
     /// The online-feedback smoothing constants this configuration asks
@@ -570,6 +592,28 @@ mod tests {
         assert_eq!(s.tune_budget_ms, 900);
         assert!(!s.tune_on_miss);
         assert_eq!(s.tuner_cache, Some(PathBuf::from("c.json")));
+    }
+
+    #[test]
+    fn dtype_key_layers_and_validates() {
+        let mut s = Settings::default();
+        assert_eq!(s.dtype, "f32");
+        assert_eq!(s.width(), crate::kernel::Width::F32);
+        s.apply_json(&json::parse(r#"{"dtype": "bf16"}"#).unwrap()).unwrap();
+        assert_eq!(s.width(), crate::kernel::Width::Bf16);
+        s.validate().unwrap();
+
+        let cmd =
+            Command::new("t", "t").opt(Opt::value("dtype", None, ""));
+        let args =
+            cmd.parse(&["--dtype".into(), "f16".into()]).unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.dtype, "f16");
+        assert_eq!(s.width(), crate::kernel::Width::F16);
+
+        let mut bad = Settings::default();
+        bad.dtype = "f64".into();
+        assert!(bad.validate().is_err());
     }
 
     #[test]

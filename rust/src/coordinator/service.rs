@@ -114,7 +114,8 @@ impl Coordinator {
         let (tx, rx) = bounded::<Work>(settings.queue_cap);
         let metrics = Arc::new(Metrics::new());
         let cancel = CancelToken::new();
-        let router = Router::new(&settings.algo, &settings.pad_policy, "f32");
+        let router =
+            Router::new(&settings.algo, &settings.pad_policy, &settings.dtype);
 
         // Per-device tuners under the fleet: the scheduler consults the
         // caches on every GEMM; misses fall back to defaults and (when
@@ -123,7 +124,8 @@ impl Coordinator {
         let opts = TuneOptions {
             top_k: settings.tune_top_k,
             budget: Budget::from_millis(settings.tune_budget_ms),
-            bytes_per_elem: 4,
+            width: settings.width(),
+            ..TuneOptions::default()
         };
         let staleness = StalenessPolicy {
             max_age_s: settings.cache_max_age_s,
@@ -1003,10 +1005,15 @@ fn tune_loop(
 }
 
 /// Residual bucket key for a placement: bare shape bucket on a
-/// single-device fleet (existing dashboards/tests unchanged),
-/// `dev{idx}|{bucket}` once a real fleet is behind the coordinator.
+/// single-device f32 fleet (existing dashboards/tests unchanged),
+/// `{bucket}@{width}` at 16-bit widths so a bf16 bucket's residuals
+/// never average into f32's, and `dev{idx}|{bucket}` once a real fleet
+/// is behind the coordinator.
 fn residual_key(fleet: &Arc<Fleet>, device: usize, shape: GemmShape) -> String {
-    let bucket = ShapeBucket::of(shape).key();
+    let bucket = crate::trace::profile::width_key(
+        &ShapeBucket::of(shape).key(),
+        fleet.width(),
+    );
     if fleet.len() > 1 {
         crate::trace::residual::device_key(device, &bucket)
     } else {

@@ -10,6 +10,7 @@
 //! BLK experiment).
 
 use super::BlockShape;
+use crate::kernel::{RegBlock, Width};
 
 /// Default K-chunk length: how deep a K slice the executor packs and
 /// streams per panel pair ([`crate::kernel`] re-exports this as
@@ -32,8 +33,16 @@ pub struct KernelParams {
     /// MXU tile the inner product maps to (CK's "M/N per XDL").
     pub mxu_m: usize,
     pub mxu_n: usize,
-    /// f32=4, bf16=2.
-    pub bytes_per_elem: usize,
+    /// Element width the A/B panels stream at (f32 / bf16 / f16).
+    /// Accumulation and C output stay f32 at every width, so this is a
+    /// pure precision-vs-bandwidth axis — 16-bit widths halve streamed
+    /// panel bytes and double the VMEM headroom.
+    pub width: Width,
+    /// Register block (MR×NR accumulator tile) the lane kernels run.
+    /// Searched per width: f32 is pinned to the baseline block (its
+    /// bit-identity contract is frozen), 16-bit widths may take the
+    /// wide block.
+    pub reg: RegBlock,
     /// Double-buffer the HBM→VMEM stream (doubles VMEM footprint).
     pub double_buffer: bool,
     /// K-chunk length the executor packs panels at (CK's K staging
@@ -42,23 +51,35 @@ pub struct KernelParams {
 }
 
 impl KernelParams {
+    /// Back-compat constructor speaking bytes-per-element (2 → bf16,
+    /// anything else → f32, see [`Width::from_bpe`]).
     pub fn new(block: BlockShape, bytes_per_elem: usize) -> Self {
+        Self::new_w(block, Width::from_bpe(bytes_per_elem))
+    }
+
+    pub fn new_w(block: BlockShape, width: Width) -> Self {
         Self {
             block,
             kpack: 8,
             mxu_m: 128,
             mxu_n: 128,
-            bytes_per_elem,
+            width,
+            reg: RegBlock::BASE,
             double_buffer: true,
             kc: KC_DEFAULT,
         }
+    }
+
+    /// Streamed bytes per panel element at this point's width.
+    pub fn bytes_per_elem(&self) -> usize {
+        self.width.bytes()
     }
 
     /// VMEM bytes the kernel holds resident: A-block + B-block (possibly
     /// double-buffered) + f32 accumulator + two partial slots.
     pub fn vmem_bytes(&self) -> usize {
         let BlockShape { bm, bn, bk } = self.block;
-        let stream = (bm * bk + bk * bn) * self.bytes_per_elem;
+        let stream = (bm * bk + bk * bn) * self.bytes_per_elem();
         let stream = if self.double_buffer { 2 * stream } else { stream };
         let acc = bm * bn * 4;
         let partials = 2 * bm * bn * 4;
@@ -102,6 +123,11 @@ pub enum Illegal {
     /// pass exceed what the tile provides, producing the FP errors the
     /// report saw. We reject the combination statically.
     MxuTileMismatch { bm: usize, bn: usize, mxu_m: usize, mxu_n: usize },
+    /// Register block not offered at this element width: the wide
+    /// accumulator tile exists only for 16-bit lanes (f32 is pinned to
+    /// the baseline block — its bit-identity contract is frozen), and
+    /// arbitrary MR/NR pairs have no lane kernel at all.
+    RegIllegal { mr: usize, nr: usize, width: Width },
 }
 
 impl Illegal {
@@ -127,6 +153,9 @@ impl Illegal {
             }
             Illegal::MxuTileMismatch { .. } => {
                 "block smaller than MXU tile (CK 16x16-per-XDL FP-error mode)"
+            }
+            Illegal::RegIllegal { .. } => {
+                "register block not offered at this element width"
             }
         }
     }
@@ -163,6 +192,10 @@ impl std::fmt::Display for Illegal {
                 "block {bm}x{bn} smaller than MXU tile {mxu_m}x{mxu_n} \
                  (CK's 16x16-per-XDL runtime-FP-error mode)"
             ),
+            Illegal::RegIllegal { mr, nr, width } => write!(
+                f,
+                "register block {mr}x{nr} has no {width} lane kernel"
+            ),
         }
     }
 }
@@ -189,7 +222,14 @@ pub fn check(p: &KernelParams) -> Result<(), Vec<Illegal>> {
     if p.kc % p.kpack != 0 {
         errs.push(Illegal::KcMisaligned { kc: p.kc, kpack: p.kpack });
     }
-    let pack_need = (bm * p.kc + p.kc * bn) * p.bytes_per_elem;
+    if !p.reg.is_legal(p.width) {
+        errs.push(Illegal::RegIllegal {
+            mr: p.reg.mr,
+            nr: p.reg.nr,
+            width: p.width,
+        });
+    }
+    let pack_need = (bm * p.kc + p.kc * bn) * p.bytes_per_elem();
     if pack_need > PACK_BUDGET_BYTES {
         errs.push(Illegal::PackOverflow {
             need: pack_need,
@@ -229,6 +269,13 @@ pub fn exploration_grid() -> Vec<KernelParams> {
 /// The same grid at an arbitrary element width (bf16 doubles the VMEM
 /// headroom, so its legal set is larger) — the tuner's block axes.
 pub fn exploration_grid_bpe(bytes_per_elem: usize) -> Vec<KernelParams> {
+    exploration_grid_w(Width::from_bpe(bytes_per_elem))
+}
+
+/// Width-native grid: block/double-buffer/KC axes crossed with the
+/// per-width register-block options ([`RegBlock::options`] — one entry
+/// at f32, base + wide at 16-bit).
+pub fn exploration_grid_w(width: Width) -> Vec<KernelParams> {
     let mut out = Vec::new();
     for &bm in &[16usize, 32, 64, 128, 256, 512] {
         for &bn in &[16usize, 32, 64, 128, 256, 512] {
@@ -237,13 +284,17 @@ pub fn exploration_grid_bpe(bytes_per_elem: usize) -> Vec<KernelParams> {
                     // KC_DEFAULT first: predicted ranking is stable, so
                     // the default chunk wins cost-model ties.
                     for &kc in &[KC_DEFAULT, 64, 256] {
-                        let mut p = KernelParams::new(
-                            BlockShape::new(bm, bn, bk),
-                            bytes_per_elem,
-                        );
-                        p.double_buffer = db;
-                        p.kc = kc;
-                        out.push(p);
+                        // BASE first, same tie-break convention.
+                        for &reg in RegBlock::options(width) {
+                            let mut p = KernelParams::new_w(
+                                BlockShape::new(bm, bn, bk),
+                                width,
+                            );
+                            p.double_buffer = db;
+                            p.kc = kc;
+                            p.reg = reg;
+                            out.push(p);
+                        }
                     }
                 }
             }
@@ -335,6 +386,51 @@ mod tests {
         assert_eq!(grid[0].kc, KC_DEFAULT);
         assert!(grid.iter().any(|p| p.kc == 64));
         assert!(grid.iter().any(|p| p.kc == 256));
+    }
+
+    #[test]
+    fn reg_block_legality_is_width_gated() {
+        // f32 is pinned to the baseline block.
+        let mut p = KernelParams::new(BlockShape::default(), 4);
+        assert_eq!(p.width, Width::F32);
+        p.reg = RegBlock::WIDE;
+        let errs = check(&p).unwrap_err();
+        assert!(
+            errs.iter().any(|e| matches!(e, Illegal::RegIllegal { .. })),
+            "{errs:?}"
+        );
+        // The wide block is legal at 16-bit widths…
+        for w in [Width::Bf16, Width::F16] {
+            let mut p = KernelParams::new_w(BlockShape::default(), w);
+            p.reg = RegBlock::WIDE;
+            assert_eq!(check(&p), Ok(()), "{w}");
+        }
+        // …but an arbitrary MR/NR pair has no lane kernel anywhere.
+        let mut p = KernelParams::new_w(BlockShape::default(), Width::Bf16);
+        p.reg = RegBlock { mr: 3, nr: 5 };
+        assert!(check(&p).is_err());
+    }
+
+    #[test]
+    fn width_grid_crosses_reg_axis_and_widens_the_legal_set() {
+        let f32_grid = exploration_grid_w(Width::F32);
+        let bf_grid = exploration_grid_w(Width::Bf16);
+        // 16-bit widths add exactly one extra reg option per point.
+        assert_eq!(bf_grid.len(), 2 * f32_grid.len());
+        assert!(f32_grid.iter().all(|p| p.reg == RegBlock::BASE));
+        assert!(bf_grid.iter().any(|p| p.reg == RegBlock::WIDE));
+        // Halved element bytes double the VMEM headroom → more legal
+        // points, never fewer (reg-illegal points aren't in the grid).
+        let legal = |g: &[KernelParams]| {
+            g.iter().filter(|p| check(p).is_ok()).count()
+        };
+        assert!(legal(&bf_grid) > legal(&f32_grid));
+        // The bpe spelling is the same grid.
+        assert_eq!(exploration_grid_bpe(2), bf_grid);
+        assert_eq!(exploration_grid_bpe(4), f32_grid);
+        // Default-first tie-break holds on the new axis too.
+        assert_eq!(bf_grid[0].reg, RegBlock::BASE);
+        assert_eq!(bf_grid[0].kc, KC_DEFAULT);
     }
 
     #[test]

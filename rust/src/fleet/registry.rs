@@ -69,7 +69,7 @@ impl FleetDevice {
 /// placement and the online re-tuning loop.
 pub struct Fleet {
     devices: Vec<FleetDevice>,
-    bytes_per_elem: usize,
+    width: crate::kernel::Width,
     // Construction parameters, retained so devices joining later
     // ([`Fleet::add_device`]) get tuners built exactly like the
     // original members'.
@@ -109,7 +109,7 @@ impl Fleet {
         assert!(!devices.is_empty(), "a fleet needs at least one device");
         let mut fleet = Self {
             devices: Vec::new(),
-            bytes_per_elem: opts.bytes_per_elem,
+            width: opts.width,
             opts,
             staleness,
             cache_capacity,
@@ -213,10 +213,10 @@ impl Fleet {
         let snapshot = dtuner.cache_snapshot();
         let mut seeded = 0;
         for (key, mut cfg) in snapshot.entries_for(dtuner.fingerprint()) {
-            let Some((bucket, bpe, _)) = split_key(&key) else {
+            let Some((bucket, width, _)) = split_key(&key) else {
                 continue;
             };
-            if bpe != self.bytes_per_elem {
+            if width != self.width {
                 continue;
             }
             cfg.predicted_s *= scale;
@@ -247,7 +247,12 @@ impl Fleet {
     }
 
     pub fn bytes_per_elem(&self) -> usize {
-        self.bytes_per_elem
+        self.width.bytes()
+    }
+
+    /// The element width this fleet tunes and serves at.
+    pub fn width(&self) -> crate::kernel::Width {
+        self.width
     }
 
     /// Warm every device's cache from one merged file. Each tuner loads

@@ -812,7 +812,7 @@ pub fn run_scenario(
         TuneOptions {
             top_k: 4,
             budget: Budget::from_millis(40),
-            bytes_per_elem: 4,
+            ..TuneOptions::default()
         },
         StalenessPolicy::default(),
         64,

@@ -79,10 +79,10 @@ impl Fleet {
         // same model the simulator measures with, and the hot path
         // never rebuilds a schedule for a shape it has seen.
         let dev = d.device();
-        if let Ok(plan) = crate::plan::global().get_or_build(
+        if let Ok(plan) = crate::plan::global().get_or_build_w(
             shape,
             crate::decomp::BlockShape::default(),
-            self.bytes_per_elem(),
+            self.width(),
             dev.num_cus,
         ) {
             let t = plan.time_on(dev);

@@ -166,9 +166,9 @@ pub(super) fn tuned_candidate(
             cus: cfg.cus,
         },
         None => Candidate {
-            params: KernelParams::new(
+            params: KernelParams::new_w(
                 BlockShape::default(),
-                fleet.bytes_per_elem(),
+                fleet.width(),
             ),
             pad: PadPolicy::None,
             cus: fleet.device(idx).device().num_cus,
@@ -570,7 +570,7 @@ mod tests {
         let opts = TuneOptions {
             top_k: 4,
             budget: Budget::from_millis(50),
-            bytes_per_elem: 4,
+            ..TuneOptions::default()
         };
         // High drift threshold: unit tests exercise the blending, the
         // revalidation path is covered in tuner::tests.

@@ -49,9 +49,10 @@
 //! [`ExecOpts`]; the bench pins the PR-4 configuration (scalar lanes,
 //! everything windowed) as its baseline.
 
-use super::lane::{self, LaneBackend};
-use super::micro::{block_update_with, KC};
-use super::pack::{pack_a, pack_b, PackBuf};
+use super::lane::{self, LaneBackend, RegBlock};
+use super::micro::{block_update_w, block_update_with, KC};
+use super::pack::{pack_a, pack_a16, pack_b, pack_b16, PackBuf};
+use super::width::Width;
 use super::{default_threads, Epilogue};
 use crate::decomp::{BlockShape, FlatSchedule, GemmShape};
 use crate::exec::scope_map_with;
@@ -111,6 +112,13 @@ pub struct ExecDesc {
     /// ([`crate::decomp::params::KC_DEFAULT`] unless overridden via
     /// [`Self::with_kc`]). Chunk boundaries never change numerics.
     pub kc: usize,
+    /// Element width the A/B panels stream at ([`Width::F32`] unless
+    /// overridden via [`Self::with_width`] — [`crate::plan::Plan::exec`]
+    /// threads its key's width here). 16-bit widths pack through the
+    /// convert-on-pack path and widen in registers; accumulation and C
+    /// stay f32, and per-width results are bit-identical to the
+    /// per-element oracle over quantized inputs.
+    pub width: Width,
     /// Phase-1 work items in the reference's serial store order
     /// (CU-major; per CU: DP quota then SK segments).
     pub jobs: Vec<TileJob>,
@@ -257,12 +265,27 @@ impl ExecDesc {
             job.owned = single && row_safe && col_safe;
         }
 
-        Self { shape, block, kc: KC, jobs, fixup, sources, macs }
+        Self {
+            shape,
+            block,
+            kc: KC,
+            width: Width::F32,
+            jobs,
+            fixup,
+            sources,
+            macs,
+        }
     }
 
     /// Override the K-chunk length (the tuner's KC axis); clamped to ≥1.
     pub fn with_kc(mut self, kc: usize) -> Self {
         self.kc = kc.max(1);
+        self
+    }
+
+    /// Override the panel element width (the tuner's width axis).
+    pub fn with_width(mut self, width: Width) -> Self {
+        self.width = width;
         self
     }
 
@@ -297,6 +320,11 @@ pub struct ExecOpts {
     /// uses [`ExecDesc::kc`]. Chunk length never changes output bits
     /// (`kc_chunking_never_changes_bits`).
     pub kc: Option<usize>,
+    /// Register-block override for 16-bit widths (the tuner's per-width
+    /// MR/NR axis; [`RegBlock::BASE`] when `None`). Ignored on the f32
+    /// path, which is pinned to the PR-5 `4×8` block. Like `kc`, the
+    /// block shape never changes output bits.
+    pub reg: Option<RegBlock>,
 }
 
 impl ExecOpts {
@@ -307,6 +335,7 @@ impl ExecOpts {
             direct_store: true,
             threads: default_threads(macs),
             kc: None,
+            reg: None,
         }
     }
 }
@@ -379,6 +408,8 @@ pub fn execute_opts(
     let threads = opts.threads.max(1);
     let backend = opts.backend;
     let kc = opts.kc.unwrap_or(desc.kc).max(1);
+    let width = desc.width;
+    let reg = opts.reg.unwrap_or(RegBlock::BASE);
     let mut c = vec![0.0f32; m * n];
     // Partial-segment accumulators (the reference's two-slot-per-CU
     // buffer), indexed by original job id, kept alive until the fixup
@@ -428,8 +459,8 @@ pub fn execute_opts(
                     st.acc.clear();
                     st.acc.resize(bm * bn, 0.0);
                     accumulate_job(
-                        a, b, k, n, bm, bn, kc, backend, job, &mut st.buf,
-                        &mut st.acc, ctr,
+                        a, b, k, n, bm, bn, kc, width, reg, backend, job,
+                        &mut st.buf, &mut st.acc, ctr,
                     );
                     unsafe {
                         store_owned(
@@ -497,8 +528,8 @@ pub fn execute_opts(
                     };
                     let mut acc = vec![0.0f32; bm * bn];
                     accumulate_job(
-                        a, b, k, n, bm, bn, kc, backend, job, buf, &mut acc,
-                        ctr,
+                        a, b, k, n, bm, bn, kc, width, reg, backend, job, buf,
+                        &mut acc, ctr,
                     );
                     acc
                 },
@@ -577,6 +608,7 @@ pub fn execute_opts(
     if let Some(counters) = counters.as_ref() {
         trace::profile::record_dispatch(
             desc.shape,
+            desc.width,
             desc.class_counts(),
             desc.fixup.len(),
             counters,
@@ -590,9 +622,11 @@ pub fn execute_opts(
 /// Accumulate one work item into `acc` (zero-initialized by the
 /// caller): stream its K range in `kc`-deep chunks through pack +
 /// microkernel. K chunks ascend, so per-element FP order matches the
-/// reference exactly regardless of the chunk length. When the
-/// attribution profiler is on, `ctr` receives this job's exact flop
-/// and packed-byte counts plus the time spent packing.
+/// reference exactly regardless of the chunk length. At 16-bit widths
+/// the chunks go through convert-on-pack + the widening microkernel.
+/// When the attribution profiler is on, `ctr` receives this job's
+/// exact flop and packed-byte counts (at the *descriptor's* width —
+/// streamed panel bytes halve at 16 bits) plus the time spent packing.
 #[allow(clippy::too_many_arguments)]
 fn accumulate_job(
     a: &[f32],
@@ -602,6 +636,8 @@ fn accumulate_job(
     bm: usize,
     bn: usize,
     kc: usize,
+    width: Width,
+    reg: RegBlock,
     backend: LaneBackend,
     job: &TileJob,
     buf: &mut PackBuf,
@@ -612,8 +648,13 @@ fn accumulate_job(
         let kspan = job.kc1 - job.kc0;
         c.flops
             .fetch_add(2 * (bm * bn * kspan) as u64, Ordering::Relaxed);
-        c.pack_bytes
-            .fetch_add(((bm + bn) * kspan * 4) as u64, Ordering::Relaxed);
+        // Width-exact pack accounting: 2 bytes/elem at bf16/f16, 4 at
+        // f32 — never a hardcoded 4 (C stores stay ×4; C is f32 at
+        // every width).
+        c.pack_bytes.fetch_add(
+            ((bm + bn) * kspan * width.bytes()) as u64,
+            Ordering::Relaxed,
+        );
     }
     let mut kcur = job.kc0;
     while kcur < job.kc1 {
@@ -627,8 +668,13 @@ fn accumulate_job(
                 "kv",
                 kv as u64,
             );
-            pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
-            pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+            if width == Width::F32 {
+                pack_a(&mut buf.a, a, k, job.r0, bm, kcur, kv);
+                pack_b(&mut buf.b, b, n, job.c0, bn, kcur, kv);
+            } else {
+                pack_a16(&mut buf.a16, width, a, k, job.r0, bm, kcur, kv);
+                pack_b16(&mut buf.b16, width, b, n, job.c0, bn, kcur, kv);
+            }
             if let (Some(c), Some(t)) = (ctr, t) {
                 c.pack_ns.fetch_add(
                     t.elapsed().as_nanos() as u64,
@@ -636,7 +682,13 @@ fn accumulate_job(
                 );
             }
         }
-        block_update_with(backend, &buf.a, &buf.b, bm, bn, kv, acc);
+        if width == Width::F32 {
+            block_update_with(backend, &buf.a, &buf.b, bm, bn, kv, acc);
+        } else {
+            block_update_w(
+                backend, width, reg, &buf.a16, &buf.b16, bm, bn, kv, acc,
+            );
+        }
         kcur += kv;
     }
 }
@@ -920,7 +972,13 @@ mod tests {
                         &b.data,
                         &desc,
                         Epilogue::None,
-                        &ExecOpts { backend, direct_store, threads, kc: None },
+                        &ExecOpts {
+                            backend,
+                            direct_store,
+                            threads,
+                            kc: None,
+                            reg: None,
+                        },
                     );
                     for (i, (g, w)) in got.iter().zip(&want).enumerate() {
                         if g.to_bits() != w.to_bits() {
@@ -1120,6 +1178,117 @@ mod tests {
         }
     }
 
+    /// Tentpole acceptance: a 16-bit descriptor is bit-identical to the
+    /// per-element oracle over *quantized* inputs (the pack → widen →
+    /// accumulate reference), across backends, dispatcher modes, and
+    /// both register blocks — the f32 oracle generalizes per width
+    /// instead of being weakened.
+    #[test]
+    fn prop_sixteen_bit_widths_match_quantized_oracle_bitwise() {
+        prop::check("16-bit widths == quantized oracle (bitwise)", 12, |rng| {
+            let width = *rng.choose(&[Width::Bf16, Width::F16]);
+            let m = rng.usize_in(20, 120);
+            let n = rng.usize_in(20, 120);
+            let k = rng.usize_in(1, 90);
+            let p = *rng.choose(&[1usize, 3, 16]);
+            let mut a = Matrix::random(m, k, rng);
+            let b = Matrix::random(k, n, rng);
+            for _ in 0..rng.usize_in(0, 3) {
+                let at = rng.usize_in(0, m * k - 1);
+                a.data[at] = *rng.choose(&[
+                    f32::NAN,
+                    f32::INFINITY,
+                    f32::NEG_INFINITY,
+                    1.0e-41,
+                ]);
+            }
+            let (shape, flat, block) =
+                flat_of(m, n, k, p, BlockShape::new(16, 16, 8));
+            let desc = ExecDesc::new(shape, block, &flat).with_width(width);
+            let aq = width.quantize_slice(&a.data);
+            let bq = width.quantize_slice(&b.data);
+            let want = execute_flat_ref(&aq, &bq, shape, &flat, block);
+            let threads = *rng.choose(&[1usize, 4]);
+            for backend in lane::available() {
+                for direct_store in [false, true] {
+                    for reg in [None, Some(RegBlock::WIDE)] {
+                        let got = execute_opts(
+                            &a.data,
+                            &b.data,
+                            &desc,
+                            Epilogue::None,
+                            &ExecOpts {
+                                backend,
+                                direct_store,
+                                threads,
+                                kc: None,
+                                reg,
+                            },
+                        );
+                        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                            if g.to_bits() != w.to_bits() {
+                                return Err(format!(
+                                    "{m}x{n}x{k} p={p} {width} {backend:?} \
+                                     direct={direct_store} reg={reg:?} \
+                                     elem {i}: {g:?} vs {w:?}"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn width_is_a_pure_precision_knob_kc_and_reg_never_change_bits() {
+        // Same descriptor, every (kc, reg) combination: identical bits
+        // per width. And the f32 descriptor ignores `reg` entirely.
+        let (shape, flat, block) =
+            flat_of(96, 102, 100, 12, BlockShape::new(16, 16, 8));
+        let mut rng = prop::Rng::new(404);
+        let a = Matrix::random(96, 100, &mut rng);
+        let b = Matrix::random(100, 102, &mut rng);
+        for width in [Width::Bf16, Width::F16] {
+            let desc = ExecDesc::new(shape, block, &flat).with_width(width);
+            let want = execute(&a.data, &b.data, &desc, Epilogue::None);
+            for kc in [1usize, 7, 256] {
+                for reg in [RegBlock::BASE, RegBlock::WIDE] {
+                    let got = execute_opts(
+                        &a.data,
+                        &b.data,
+                        &desc,
+                        Epilogue::None,
+                        &ExecOpts {
+                            kc: Some(kc),
+                            reg: Some(reg),
+                            ..ExecOpts::auto(desc.macs)
+                        },
+                    );
+                    bits_equal(
+                        &got,
+                        &want,
+                        &format!("{width} kc={kc} reg={}", reg.label()),
+                    );
+                }
+            }
+        }
+        let f32_desc = ExecDesc::new(shape, block, &flat);
+        let want = execute(&a.data, &b.data, &f32_desc, Epilogue::None);
+        let got = execute_opts(
+            &a.data,
+            &b.data,
+            &f32_desc,
+            Epilogue::None,
+            &ExecOpts {
+                reg: Some(RegBlock::WIDE),
+                ..ExecOpts::auto(f32_desc.macs)
+            },
+        );
+        bits_equal(&got, &want, "f32 ignores reg");
+    }
+
     #[test]
     fn descriptor_k_ranges_cover_the_mask_exactly() {
         // Ragged K: 100 with bk=8 -> last step holds 4 valid columns.
@@ -1249,6 +1418,46 @@ mod tests {
         assert_eq!(w.pack_bytes, want_pack);
         // nothing streams: direct pass is (near) empty, windowed busy
         assert!(w.windowed_ns > 0);
+    }
+
+    /// Satellite acceptance: profiled byte accounting takes the width
+    /// from the descriptor — a bf16 dispatch books *half* the f32 pack
+    /// bytes, full f32 store bytes (C stays f32), and lands in a
+    /// width-suffixed bucket so per-width GB/s never mix.
+    #[test]
+    fn profiler_pack_bytes_follow_descriptor_width() {
+        let _g = crate::trace::test_lock();
+        let (shape, flat, block) =
+            flat_of(320, 320, 320, 7, BlockShape::new(16, 16, 8));
+        let mut rng = prop::Rng::new(909);
+        let a = Matrix::random(320, 320, &mut rng);
+        let b = Matrix::random(320, 320, &mut rng);
+        let f32_pack: u64 = {
+            let desc = ExecDesc::new(shape, block, &flat);
+            desc.jobs
+                .iter()
+                .map(|j| ((block.bm + block.bn) * (j.kc1 - j.kc0) * 4) as u64)
+                .sum()
+        };
+        for width in [Width::Bf16, Width::F16] {
+            let desc = ExecDesc::new(shape, block, &flat).with_width(width);
+            trace::profile::set_enabled(true);
+            let _ = trace::profile::drain();
+            let _ = execute_threads(&a.data, &b.data, &desc, Epilogue::None, 2);
+            trace::profile::set_enabled(false);
+            let profiles = trace::profile::drain();
+            let key = trace::profile::width_key(
+                &crate::tuner::ShapeBucket::of(shape).key(),
+                width,
+            );
+            let p = profiles
+                .iter()
+                .find(|p| p.bucket == key)
+                .expect("width-suffixed bucket present");
+            assert_eq!(p.pack_bytes, f32_pack / 2, "{width}: panel bytes halve");
+            assert_eq!(p.store_bytes, (320 * 320 * 4) as u64, "C stays f32");
+            assert_eq!(p.width(), width);
+        }
     }
 
     /// Satellite property: attribution survives interleaved dispatches

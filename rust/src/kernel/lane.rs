@@ -24,12 +24,90 @@
 //! deliberately never used: it contracts the mul+add into one rounding,
 //! which would break bit-identity with the reference oracle.
 
+//!
+//! **16-bit widths.** The widening kernels ([`micro_block_w`]) stream
+//! bf16/f16 panels packed by [`super::pack`] and convert in registers:
+//! bf16 widens with a 16-bit left shift (`_mm256_cvtepu16_epi32` +
+//! `_mm256_slli_epi32`), f16 with `_mm256_cvtph_ps` when `f16c` is
+//! detected and a bit-identical software conversion otherwise.
+//! Accumulation stays f32 mul-then-add, so per-width bit-identity holds
+//! against the per-element oracle run over quantized inputs.
+
+use super::width::Width;
 use std::sync::OnceLock;
 
 /// Register block rows of the microkernel.
 pub(crate) const MR: usize = 4;
 /// Register block columns (one AVX2 lane, or two SSE2 lanes, of f32).
 pub(crate) const NR: usize = 8;
+/// Widest supported register-block column count (16-bit lanes only).
+pub(crate) const NR_WIDE: usize = 16;
+
+/// A searched `MR × NR` register-block shape. The f32 path is pinned to
+/// the PR-5 `4×8` block (its bit-identity baseline); 16-bit widths may
+/// additionally run the `4×16` block — halving the panel element size
+/// frees enough register pressure for two B vectors per row — searched
+/// as a tuner axis ([`RegBlock::options`]). Column grouping never
+/// changes per-element FP order (lanes run across N), so `reg` is a
+/// pure performance knob: every legal block is bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct RegBlock {
+    pub mr: usize,
+    pub nr: usize,
+}
+
+impl RegBlock {
+    /// The PR-5 baseline block, legal at every width.
+    pub const BASE: RegBlock = RegBlock { mr: MR, nr: NR };
+    /// The wide block for 16-bit lanes.
+    pub const WIDE: RegBlock = RegBlock { mr: MR, nr: NR_WIDE };
+
+    /// Blocks the tuner may search at `width`.
+    pub fn options(width: Width) -> &'static [RegBlock] {
+        match width {
+            Width::F32 => &[RegBlock::BASE],
+            Width::Bf16 | Width::F16 => &[RegBlock::BASE, RegBlock::WIDE],
+        }
+    }
+
+    pub fn is_legal(self, width: Width) -> bool {
+        RegBlock::options(width).contains(&self)
+    }
+
+    pub fn label(self) -> String {
+        format!("{}x{}", self.mr, self.nr)
+    }
+
+    pub fn parse(s: &str) -> Option<RegBlock> {
+        let (m, n) = s.split_once('x')?;
+        Some(RegBlock { mr: m.parse().ok()?, nr: n.parse().ok()? })
+    }
+}
+
+impl Default for RegBlock {
+    fn default() -> Self {
+        RegBlock::BASE
+    }
+}
+
+/// Whether the hardware f16 widen (`_mm256_cvtph_ps`) is usable: both
+/// `f16c` and `avx2` detected. The software fallback is bit-identical,
+/// so this only gates tuner exploration and lane selection, never
+/// correctness.
+pub fn f16c_available() -> bool {
+    static F16C: OnceLock<bool> = OnceLock::new();
+    *F16C.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            std::is_x86_feature_detected!("f16c")
+                && std::is_x86_feature_detected!("avx2")
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            false
+        }
+    })
+}
 
 /// Environment override for the lane backend (`avx2`/`sse2`/`scalar`).
 pub const LANES_ENV: &str = "STREAMK_KERNEL_LANES";
@@ -285,6 +363,275 @@ unsafe fn micro_block_sse2(
     }
 }
 
+/// One widening `MR × nr` register block over 16-bit panels:
+/// `acc[(r0+i)·bn + c0 + j] += Σ_kk widen(a_rows[i][kk]) · widen(bp[kk·bn + c0 + j])`
+/// — K strictly ascending, separate mul-then-add per (element, k).
+/// Widening is an exact per-element conversion (hardware and software
+/// paths agree bit-for-bit, including NaN quieting), so every backend
+/// and both block widths are bit-identical to the scalar widening
+/// block, which in turn matches the per-element oracle over quantized
+/// inputs.
+///
+/// Callers guarantee `width != F32`, `nr ∈ {8, 16}`, `c0 + nr <= bn`,
+/// and the same bounds contract as [`micro_block`]. The B row is
+/// widened once per k and reused across all MR rows (same value as
+/// widening per use — `widen` is pure — but ~MR× fewer conversions).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_block_w(
+    backend: LaneBackend,
+    width: Width,
+    nr: usize,
+    a_rows: &[&[u16]; MR],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    debug_assert!(width != Width::F32, "f32 panels use micro_block");
+    debug_assert!(nr == NR || nr == NR_WIDE);
+    match backend {
+        LaneBackend::Scalar => {
+            micro_block_w_scalar(width, nr, a_rows, bp, bn, kv, r0, c0, acc)
+        }
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Sse2 => match width {
+            Width::Bf16 => unsafe {
+                micro_block_w_sse2_bf16(nr / NR, a_rows, bp, bn, kv, r0, c0, acc)
+            },
+            // No SSE2 f16 widen in hardware; the software-widened scalar
+            // block computes the identical bits.
+            _ => micro_block_w_scalar(width, nr, a_rows, bp, bn, kv, r0, c0, acc),
+        },
+        #[cfg(target_arch = "x86_64")]
+        LaneBackend::Avx2 => {
+            if !std::is_x86_feature_detected!("avx2") {
+                return micro_block_w_scalar(
+                    width, nr, a_rows, bp, bn, kv, r0, c0, acc,
+                );
+            }
+            match width {
+                Width::Bf16 => unsafe {
+                    micro_block_w_avx2_bf16(nr / NR, a_rows, bp, bn, kv, r0, c0, acc)
+                },
+                Width::F16 if f16c_available() => unsafe {
+                    micro_block_w_avx2_f16(nr / NR, a_rows, bp, bn, kv, r0, c0, acc)
+                },
+                _ => micro_block_w_scalar(width, nr, a_rows, bp, bn, kv, r0, c0, acc),
+            }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => micro_block_w_scalar(width, nr, a_rows, bp, bn, kv, r0, c0, acc),
+    }
+}
+
+/// Scalar widening register block — the reference every SIMD widening
+/// lane must match bitwise, at either block width.
+#[allow(clippy::too_many_arguments)]
+fn micro_block_w_scalar(
+    width: Width,
+    nr: usize,
+    a_rows: &[&[u16]; MR],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    let mut reg = [[0.0f32; NR_WIDE]; MR];
+    for (i, regs) in reg.iter_mut().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        regs[..nr].copy_from_slice(&acc[at..at + nr]);
+    }
+    let mut bw = [0.0f32; NR_WIDE];
+    for kk in 0..kv {
+        let brow = &bp[kk * bn + c0..][..nr];
+        for (w, &h) in bw[..nr].iter_mut().zip(brow) {
+            *w = width.widen(h);
+        }
+        for i in 0..MR {
+            let av = width.widen(a_rows[i][kk]);
+            for j in 0..nr {
+                reg[i][j] += av * bw[j];
+            }
+        }
+    }
+    for (i, regs) in reg.iter().enumerate() {
+        let at = (r0 + i) * bn + c0;
+        acc[at..at + nr].copy_from_slice(&regs[..nr]);
+    }
+}
+
+/// AVX2 bf16: widen each 8-wide B group with zero-extend + 16-bit left
+/// shift; broadcast A via the scalar shift-widen. Safety: caller
+/// upholds the [`micro_block_w`] bounds contract and AVX2 is detected.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_block_w_avx2_bf16(
+    nb: usize,
+    a_rows: &[&[u16]; MR],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(nb >= 1 && nb <= 2);
+    debug_assert!(c0 + nb * NR <= bn && acc.len() >= (r0 + MR) * bn);
+    debug_assert!(bp.len() >= kv * bn);
+    let base = acc.as_mut_ptr();
+    let bptr = bp.as_ptr();
+    let mut reg = [[_mm256_setzero_ps(); 2]; MR];
+    for (i, row) in reg.iter_mut().enumerate() {
+        for (jb, r) in row[..nb].iter_mut().enumerate() {
+            *r = _mm256_loadu_ps(base.add((r0 + i) * bn + c0 + jb * NR));
+        }
+    }
+    for kk in 0..kv {
+        let mut brow = [_mm256_setzero_ps(); 2];
+        for (jb, b) in brow[..nb].iter_mut().enumerate() {
+            let raw = _mm_loadu_si128(
+                bptr.add(kk * bn + c0 + jb * NR) as *const __m128i
+            );
+            *b = _mm256_castsi256_ps(_mm256_slli_epi32(
+                _mm256_cvtepu16_epi32(raw),
+                16,
+            ));
+        }
+        for (i, row) in reg.iter_mut().enumerate() {
+            let h = *a_rows[i].get_unchecked(kk);
+            let av = _mm256_set1_ps(f32::from_bits((h as u32) << 16));
+            for (jb, r) in row[..nb].iter_mut().enumerate() {
+                // mul then add — never FMA (see micro_block_avx2)
+                *r = _mm256_add_ps(*r, _mm256_mul_ps(av, brow[jb]));
+            }
+        }
+    }
+    for (i, row) in reg.iter().enumerate() {
+        for (jb, r) in row[..nb].iter().enumerate() {
+            _mm256_storeu_ps(base.add((r0 + i) * bn + c0 + jb * NR), *r);
+        }
+    }
+}
+
+/// AVX2 + F16C: widen each 8-wide B group with `_mm256_cvtph_ps`;
+/// broadcast A via the (bit-identical) software widen. Safety: caller
+/// upholds the [`micro_block_w`] bounds contract; AVX2 and F16C are
+/// detected.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,f16c")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_block_w_avx2_f16(
+    nb: usize,
+    a_rows: &[&[u16]; MR],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(nb >= 1 && nb <= 2);
+    debug_assert!(c0 + nb * NR <= bn && acc.len() >= (r0 + MR) * bn);
+    debug_assert!(bp.len() >= kv * bn);
+    let base = acc.as_mut_ptr();
+    let bptr = bp.as_ptr();
+    let mut reg = [[_mm256_setzero_ps(); 2]; MR];
+    for (i, row) in reg.iter_mut().enumerate() {
+        for (jb, r) in row[..nb].iter_mut().enumerate() {
+            *r = _mm256_loadu_ps(base.add((r0 + i) * bn + c0 + jb * NR));
+        }
+    }
+    for kk in 0..kv {
+        let mut brow = [_mm256_setzero_ps(); 2];
+        for (jb, b) in brow[..nb].iter_mut().enumerate() {
+            let raw = _mm_loadu_si128(
+                bptr.add(kk * bn + c0 + jb * NR) as *const __m128i
+            );
+            *b = _mm256_cvtph_ps(raw);
+        }
+        for (i, row) in reg.iter_mut().enumerate() {
+            let h = *a_rows[i].get_unchecked(kk);
+            let av = _mm256_set1_ps(super::width::f16_to_f32(h));
+            for (jb, r) in row[..nb].iter_mut().enumerate() {
+                // mul then add — never FMA (see micro_block_avx2)
+                *r = _mm256_add_ps(*r, _mm256_mul_ps(av, brow[jb]));
+            }
+        }
+    }
+    for (i, row) in reg.iter().enumerate() {
+        for (jb, r) in row[..nb].iter().enumerate() {
+            _mm256_storeu_ps(base.add((r0 + i) * bn + c0 + jb * NR), *r);
+        }
+    }
+}
+
+/// SSE2 bf16: widen each 8-wide B group into two 4-wide halves with
+/// `unpacklo/hi(0, v)` (interleaving zeros below each u16 *is* the
+/// 16-bit left shift). Safety: caller upholds the [`micro_block_w`]
+/// bounds contract (SSE2 is always present on x86_64).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn micro_block_w_sse2_bf16(
+    nb: usize,
+    a_rows: &[&[u16]; MR],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r0: usize,
+    c0: usize,
+    acc: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert!(nb >= 1 && nb <= 2);
+    debug_assert!(c0 + nb * NR <= bn && acc.len() >= (r0 + MR) * bn);
+    debug_assert!(bp.len() >= kv * bn);
+    let base = acc.as_mut_ptr();
+    let bptr = bp.as_ptr();
+    let mut reg = [[_mm_setzero_ps(); 4]; MR];
+    for (i, row) in reg.iter_mut().enumerate() {
+        for jb in 0..nb {
+            let p = base.add((r0 + i) * bn + c0 + jb * NR);
+            row[2 * jb] = _mm_loadu_ps(p);
+            row[2 * jb + 1] = _mm_loadu_ps(p.add(4));
+        }
+    }
+    let zero = _mm_setzero_si128();
+    for kk in 0..kv {
+        let mut brow = [_mm_setzero_ps(); 4];
+        for jb in 0..nb {
+            let raw = _mm_loadu_si128(
+                bptr.add(kk * bn + c0 + jb * NR) as *const __m128i
+            );
+            brow[2 * jb] = _mm_castsi128_ps(_mm_unpacklo_epi16(zero, raw));
+            brow[2 * jb + 1] = _mm_castsi128_ps(_mm_unpackhi_epi16(zero, raw));
+        }
+        for (i, row) in reg.iter_mut().enumerate() {
+            let h = *a_rows[i].get_unchecked(kk);
+            let av = _mm_set1_ps(f32::from_bits((h as u32) << 16));
+            for (h4, r) in row[..2 * nb].iter_mut().enumerate() {
+                // mul then add — never FMA (see the AVX2 block)
+                *r = _mm_add_ps(*r, _mm_mul_ps(av, brow[h4]));
+            }
+        }
+    }
+    for (i, row) in reg.iter().enumerate() {
+        for jb in 0..nb {
+            let p = base.add((r0 + i) * bn + c0 + jb * NR);
+            _mm_storeu_ps(p, row[2 * jb]);
+            _mm_storeu_ps(p.add(4), row[2 * jb + 1]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,5 +693,104 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// 16-bit panel with every special class seeded: ∞, quiet NaN,
+    /// *signaling* NaN (hardware and software widens must both quieten
+    /// it identically), subnormals, and a 0·∞ pair inside the block.
+    fn seeded_panel_u16(width: Width, n: usize, seed: u64) -> Vec<u16> {
+        let mut rng = crate::prop::Rng::new(seed);
+        let mut v: Vec<u16> = (0..n)
+            .map(|_| width.narrow(rng.f32_in(-4.0, 4.0)))
+            .collect();
+        let (inf, qnan, snan, sub) = match width {
+            Width::F16 => (0x7C00, 0x7E01, 0x7C01, 0x0001),
+            _ => (0x7F80, 0xFFC1, 0x7F81, 0x0001),
+        };
+        if n >= 8 {
+            v[1] = inf;
+            v[3] = qnan;
+            v[5] = snan;
+            v[6] = sub;
+            v[7] = 0;
+        }
+        v
+    }
+
+    #[test]
+    fn widening_backends_match_scalar_bitwise_per_width_and_block() {
+        for width in [Width::Bf16, Width::F16] {
+            for nr in [NR, NR_WIDE] {
+                let kv = 9;
+                let bn = nr + 3;
+                let a = seeded_panel_u16(width, MR * kv, 0xA11CE);
+                let mut bp = seeded_panel_u16(width, kv * bn, 0xB0B);
+                bp[bn + 1] = 0; // column hit by A's ∞ row → 0 · ∞
+                let a_rows: [&[u16]; MR] = [
+                    &a[0..kv],
+                    &a[kv..2 * kv],
+                    &a[2 * kv..3 * kv],
+                    &a[3 * kv..4 * kv],
+                ];
+                let mut want = vec![0.1f32; MR * bn];
+                micro_block_w_scalar(width, nr, &a_rows, &bp, bn, kv, 0, 0, &mut want);
+                for backend in available() {
+                    let mut got = vec![0.1f32; MR * bn];
+                    micro_block_w(backend, width, nr, &a_rows, &bp, bn, kv, 0, 0, &mut got);
+                    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            w.to_bits(),
+                            "{backend:?}/{width}/nr={nr} elem {i}: {g} vs {w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_block_is_bit_identical_to_two_base_blocks() {
+        // Column grouping must not change per-element FP order: one
+        // 4×16 call equals two adjacent 4×8 calls, at every backend.
+        for width in [Width::Bf16, Width::F16] {
+            let kv = 7;
+            let bn = NR_WIDE + 1;
+            let a = seeded_panel_u16(width, MR * kv, 0xCAFE);
+            let bp = seeded_panel_u16(width, kv * bn, 0xD00D);
+            let a_rows: [&[u16]; MR] = [
+                &a[0..kv],
+                &a[kv..2 * kv],
+                &a[2 * kv..3 * kv],
+                &a[3 * kv..4 * kv],
+            ];
+            for backend in available() {
+                let mut wide = vec![0.25f32; MR * bn];
+                micro_block_w(backend, width, NR_WIDE, &a_rows, &bp, bn, kv, 0, 0, &mut wide);
+                let mut base = vec![0.25f32; MR * bn];
+                micro_block_w(backend, width, NR, &a_rows, &bp, bn, kv, 0, 0, &mut base);
+                micro_block_w(backend, width, NR, &a_rows, &bp, bn, kv, 0, NR, &mut base);
+                for (i, (g, w)) in wide.iter().zip(&base).enumerate() {
+                    assert_eq!(g.to_bits(), w.to_bits(), "{backend:?}/{width} elem {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reg_block_legality_and_labels() {
+        assert_eq!(RegBlock::options(Width::F32), &[RegBlock::BASE]);
+        assert_eq!(
+            RegBlock::options(Width::Bf16),
+            &[RegBlock::BASE, RegBlock::WIDE]
+        );
+        assert!(RegBlock::WIDE.is_legal(Width::F16));
+        assert!(!RegBlock::WIDE.is_legal(Width::F32));
+        assert!(!RegBlock { mr: 6, nr: 8 }.is_legal(Width::Bf16));
+        for r in [RegBlock::BASE, RegBlock::WIDE] {
+            assert_eq!(RegBlock::parse(&r.label()), Some(r));
+        }
+        assert_eq!(RegBlock::parse("4x"), None);
+        assert_eq!(RegBlock::default(), RegBlock::BASE);
     }
 }

@@ -16,7 +16,8 @@
 //! Edges that do not fill an `MR × NR` block fall back to a scalar dot
 //! loop with the same K order.
 
-use super::lane::{self, LaneBackend, MR, NR};
+use super::lane::{self, LaneBackend, RegBlock, MR, NR};
+use super::width::Width;
 
 /// Default K-chunk length: panels of `BM × KC` + `KC × BN` f32 stay
 /// cache-resident (≤ 64 KiB each at the 128-wide default blocks). The
@@ -90,6 +91,64 @@ pub fn block_update_with(
     }
 }
 
+/// 16-bit variant of [`block_update_with`]: panels hold pack-narrowed
+/// `width` elements ([`super::pack::pack_a16`]); lanes widen in
+/// registers and accumulate f32. `reg` picks the register-block shape
+/// ([`RegBlock::options`]); column grouping never changes per-element
+/// FP order, so every legal `reg` is bit-identical to the per-element
+/// oracle over quantized inputs.
+#[allow(clippy::too_many_arguments)]
+pub fn block_update_w(
+    backend: LaneBackend,
+    width: Width,
+    reg: RegBlock,
+    ap: &[u16],
+    bp: &[u16],
+    bm: usize,
+    bn: usize,
+    kv: usize,
+    acc: &mut [f32],
+) {
+    debug_assert!(ap.len() >= bm * kv, "A panel short");
+    debug_assert!(bp.len() >= kv * bn, "B panel short");
+    debug_assert!(acc.len() >= bm * bn, "acc short");
+    if kv == 0 || bm == 0 || bn == 0 {
+        return;
+    }
+    let backend = lane::resolve(backend);
+    let nr = if reg.is_legal(width) { reg.nr } else { NR };
+    let mut r0 = 0;
+    while r0 + MR <= bm {
+        let a_rows: [&[u16]; MR] = [
+            &ap[r0 * kv..][..kv],
+            &ap[(r0 + 1) * kv..][..kv],
+            &ap[(r0 + 2) * kv..][..kv],
+            &ap[(r0 + 3) * kv..][..kv],
+        ];
+        let mut c0 = 0;
+        while c0 + nr <= bn {
+            lane::micro_block_w(backend, width, nr, &a_rows, bp, bn, kv, r0, c0, acc);
+            c0 += nr;
+        }
+        // A base-width block still fits in the wide-reg column edge.
+        if nr > NR && c0 + NR <= bn {
+            lane::micro_block_w(backend, width, NR, &a_rows, bp, bn, kv, r0, c0, acc);
+            c0 += NR;
+        }
+        for r in r0..r0 + MR {
+            for c in c0..bn {
+                edge_dot_w(width, ap, bp, bn, kv, r, c, acc);
+            }
+        }
+        r0 += MR;
+    }
+    for r in r0..bm {
+        for c in 0..bn {
+            edge_dot_w(width, ap, bp, bn, kv, r, c, acc);
+        }
+    }
+}
+
 /// Scalar fallback for one edge element — identical K order (and
 /// identical on every backend, so edges never break lane bit-identity).
 #[inline]
@@ -106,6 +165,27 @@ fn edge_dot(
     let mut s = acc[r * bn + c];
     for (kk, &av) in arow.iter().enumerate() {
         s += av * bp[kk * bn + c];
+    }
+    acc[r * bn + c] = s;
+}
+
+/// 16-bit edge element: widen both operands, then the same mul-then-add
+/// K order as [`edge_dot`].
+#[inline]
+fn edge_dot_w(
+    width: Width,
+    ap: &[u16],
+    bp: &[u16],
+    bn: usize,
+    kv: usize,
+    r: usize,
+    c: usize,
+    acc: &mut [f32],
+) {
+    let arow = &ap[r * kv..][..kv];
+    let mut s = acc[r * bn + c];
+    for (kk, &ah) in arow.iter().enumerate() {
+        s += width.widen(ah) * width.widen(bp[kk * bn + c]);
     }
     acc[r * bn + c] = s;
 }
@@ -189,6 +269,84 @@ mod tests {
                     if g.to_bits() != w.to_bits() {
                         return Err(format!(
                             "{backend:?} {bm}x{bn}x{kv} elem {i}: {g:?} vs {w:?}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// Per-width oracle: widen each panel element, then the identical
+    /// per-element K-ascending order as `reference`. Equivalently: the
+    /// f32 reference over quantized inputs.
+    fn reference_w(
+        width: Width,
+        ap: &[u16],
+        bp: &[u16],
+        bm: usize,
+        bn: usize,
+        kv: usize,
+        acc: &mut [f32],
+    ) {
+        for r in 0..bm {
+            for kk in 0..kv {
+                let av = width.widen(ap[r * kv + kk]);
+                for c in 0..bn {
+                    acc[r * bn + c] += av * width.widen(bp[kk * bn + c]);
+                }
+            }
+        }
+    }
+
+    /// Tentpole acceptance: every backend × 16-bit width × register
+    /// block is bit-identical to the per-width per-element oracle over
+    /// odd shapes with seeded NaN/∞/subnormals — and identical to the
+    /// f32 path run over quantized operands, which ties the widening
+    /// kernels back to the existing f32 oracle machinery.
+    #[test]
+    fn prop_widening_backends_match_per_width_reference_bitwise() {
+        crate::prop::check("widening lanes == oracle (bitwise)", 24, |rng| {
+            let width = *rng.choose(&[Width::Bf16, Width::F16]);
+            let reg = *rng.choose(RegBlock::options(width));
+            let bm = rng.usize_in(1, 24);
+            let bn = rng.usize_in(1, 40);
+            let kv = rng.usize_in(1, 48);
+            let mut af = rng.normal_f32_vec(bm * kv);
+            for _ in 0..rng.usize_in(0, 3) {
+                let at = rng.usize_in(0, bm * kv - 1);
+                af[at] = *rng.choose(&[
+                    f32::NAN,
+                    f32::INFINITY,
+                    f32::NEG_INFINITY,
+                    1.0e-41, // f32 subnormal after narrowing
+                ]);
+            }
+            let bf = rng.normal_f32_vec(kv * bn);
+            let ap: Vec<u16> = af.iter().map(|&x| width.narrow(x)).collect();
+            let bp: Vec<u16> = bf.iter().map(|&x| width.narrow(x)).collect();
+            let start = rng.normal_f32_vec(bm * bn);
+            let mut want = start.clone();
+            reference_w(width, &ap, &bp, bm, bn, kv, &mut want);
+            // The same bits must fall out of the f32 kernel over
+            // quantized operands (narrow∘widen per element).
+            let aq = width.quantize_slice(&af);
+            let bq = width.quantize_slice(&bf);
+            let mut via_f32 = start.clone();
+            block_update(&aq, &bq, bm, bn, kv, &mut via_f32);
+            for backend in lane::available() {
+                let mut got = start.clone();
+                block_update_w(backend, width, reg, &ap, &bp, bm, bn, kv, &mut got);
+                for i in 0..bm * bn {
+                    if got[i].to_bits() != want[i].to_bits() {
+                        return Err(format!(
+                            "{backend:?}/{width}/{} {bm}x{bn}x{kv} elem {i}: {:?} vs {:?}",
+                            reg.label(), got[i], want[i]
+                        ));
+                    }
+                    if got[i].to_bits() != via_f32[i].to_bits() {
+                        return Err(format!(
+                            "{backend:?}/{width} disagrees with f32-over-quantized at {i}"
                         ));
                     }
                 }

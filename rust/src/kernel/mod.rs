@@ -12,7 +12,9 @@
 //!
 //! - [`pack`] — row-slice panel packing: the A panel (`BM × kc`) and the
 //!   B panel (`kc × BN`) of one tile's K-slice are copied into
-//!   contiguous scratch, so the inner loops walk unit-stride memory;
+//!   contiguous scratch, so the inner loops walk unit-stride memory; at
+//!   16-bit widths ([`width::Width`]) the packer narrows on the copy
+//!   (convert-on-pack), halving streamed panel bytes;
 //! - [`lane`] — explicit SIMD lane backends for the register block: a
 //!   stable-Rust `std::arch` AVX2/SSE2 path picked by runtime feature
 //!   detection (`STREAMK_KERNEL_LANES` overrides), scalar everywhere
@@ -48,13 +50,15 @@ pub mod exec;
 pub mod lane;
 pub mod micro;
 pub mod pack;
+pub mod width;
 
 pub use exec::{
     execute, execute_opts, execute_threads, matmul, Dest, ExecDesc,
     ExecOpts, TileJob,
 };
-pub use lane::{LaneBackend, LANES_ENV};
+pub use lane::{f16c_available, LaneBackend, RegBlock, LANES_ENV};
 pub use pack::PackBuf;
+pub use width::Width;
 
 use crate::decomp::FlatSchedule;
 

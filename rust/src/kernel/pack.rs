@@ -3,19 +3,29 @@
 //! The microkernel lanes want unit-stride operands: the A panel as
 //! `rows × kc` (row-major, one contiguous K slice per tile row) and the
 //! B panel as `kc × cols` (one contiguous BN-wide row per K column).
-//! Packing is a pure copy — values are untouched, so it cannot perturb
-//! the bit-identical numerics contract — and the buffers are reused
+//! At f32 packing is a pure copy — values are untouched, so it cannot
+//! perturb the bit-identical numerics contract. At 16-bit widths
+//! packing is *convert-on-pack* ([`pack_a16`]/[`pack_b16`]): each
+//! source element is narrowed exactly once (RNE, NaNs quieted — see
+//! [`super::width`]), halving the streamed panel bytes; the widening
+//! lane kernels convert back in registers. The buffers are reused
 //! across K chunks and across work items by each dispatcher worker
 //! ([`PackBuf`]; the direct-store streaming pass additionally reuses
 //! one accumulator per worker), so the steady-state hot path allocates
 //! nothing.
 
-/// Per-worker packing scratch: one A panel + one B panel, grown once to
-/// the high-water panel size and reused for every subsequent chunk.
+use super::width::Width;
+
+/// Per-worker packing scratch: one A panel + one B panel per element
+/// width, grown once to the high-water panel size and reused for every
+/// subsequent chunk. Only the pair matching the dispatch width is
+/// touched, so mixed-width traffic through one worker stays cheap.
 #[derive(Debug, Default)]
 pub struct PackBuf {
     pub(crate) a: Vec<f32>,
     pub(crate) b: Vec<f32>,
+    pub(crate) a16: Vec<u16>,
+    pub(crate) b16: Vec<u16>,
 }
 
 impl PackBuf {
@@ -62,6 +72,46 @@ pub(crate) fn pack_b(
     }
 }
 
+/// Convert-on-pack variant of [`pack_a`]: narrow each element of the
+/// `rows × kv` A panel to `width` (bf16/f16) while copying.
+pub(crate) fn pack_a16(
+    buf: &mut Vec<u16>,
+    width: Width,
+    a: &[f32],
+    stride: usize,
+    r0: usize,
+    rows: usize,
+    kc0: usize,
+    kv: usize,
+) {
+    buf.clear();
+    buf.reserve(rows * kv);
+    for r in 0..rows {
+        let src = &a[(r0 + r) * stride + kc0..][..kv];
+        buf.extend(src.iter().map(|&x| width.narrow(x)));
+    }
+}
+
+/// Convert-on-pack variant of [`pack_b`]: narrow each element of the
+/// `kv × cols` B panel to `width` while copying.
+pub(crate) fn pack_b16(
+    buf: &mut Vec<u16>,
+    width: Width,
+    b: &[f32],
+    stride: usize,
+    c0: usize,
+    cols: usize,
+    kc0: usize,
+    kv: usize,
+) {
+    buf.clear();
+    buf.reserve(kv * cols);
+    for kk in 0..kv {
+        let src = &b[(kc0 + kk) * stride + c0..][..cols];
+        buf.extend(src.iter().map(|&x| width.narrow(x)));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +142,21 @@ mod tests {
         assert_eq!(pb.a.len(), 16);
         pack_a(&mut pb.a, &a, 4, 0, 1, 0, 2);
         assert_eq!(pb.a, vec![0.0, 1.0]);
+    }
+
+    #[test]
+    fn sixteen_bit_pack_narrows_each_element_exactly_once() {
+        let a: Vec<f32> = vec![1.0, 1.0009765625, -2.5, f32::NAN, 3.0e38, 1.0e-40];
+        let mut pb = PackBuf::new();
+        for w in [Width::Bf16, Width::F16] {
+            pack_a16(&mut pb.a16, w, &a, 3, 0, 2, 0, 3);
+            let want: Vec<u16> = a.iter().map(|&x| w.narrow(x)).collect();
+            assert_eq!(pb.a16, want, "{w}: pack must equal per-element narrow");
+            pack_b16(&mut pb.b16, w, &a, 3, 1, 2, 0, 2);
+            assert_eq!(pb.b16, vec![w.narrow(a[1]), w.narrow(a[2]), w.narrow(a[4]), w.narrow(a[5])]);
+        }
+        // Reuse shrinks without stale tails, same as the f32 path.
+        pack_a16(&mut pb.a16, Width::Bf16, &a, 3, 0, 1, 0, 1);
+        assert_eq!(pb.a16, vec![Width::Bf16.narrow(1.0)]);
     }
 }

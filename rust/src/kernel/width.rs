@@ -1,0 +1,363 @@
+//! Element widths for the streamed operand panels.
+//!
+//! The kernel streams A/B panels at one of three widths — `f32` (the
+//! PR-5 baseline), `bf16`, or `f16` — and always accumulates in `f32`.
+//! C output stays `f32` at every width. 16-bit panels are produced by
+//! *convert-on-pack* ([`super::pack::pack_a16`]): the packer narrows
+//! each source element once with round-to-nearest-even, and the lane
+//! kernels widen in registers per use. Widening is exact (every 16-bit
+//! value is representable in `f32`), so the per-element oracle for a
+//! 16-bit width is simply the f32 oracle run over *quantized* inputs
+//! (`widen(narrow(x))` per element) — same values, same ascending-K
+//! mul-then-add order, bit-identical results.
+//!
+//! NaN handling: both narrows quiet NaNs (set the quiet bit, keep the
+//! sign and the top payload bits). This guarantees packed panels never
+//! contain a signaling NaN, so the hardware f16 widen
+//! (`_mm256_cvtph_ps`, which quiets sNaNs) and the software widen
+//! (payload passthrough) agree bit-for-bit on everything the kernel
+//! can ever see.
+
+/// Element width of the streamed A/B panels.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Width {
+    /// 32-bit float panels — the PR-5 baseline path, bit-identical to it.
+    #[default]
+    F32,
+    /// bfloat16: top 16 bits of f32. Widen is a 16-bit left shift.
+    Bf16,
+    /// IEEE binary16. Widen uses `_mm256_cvtph_ps` when `f16c` is
+    /// detected, a bit-identical software conversion otherwise.
+    F16,
+}
+
+impl Width {
+    /// Bytes per streamed panel element. C output is always 4 (f32).
+    pub fn bytes(self) -> usize {
+        match self {
+            Width::F32 => 4,
+            Width::Bf16 | Width::F16 => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Width::F32 => "f32",
+            Width::Bf16 => "bf16",
+            Width::F16 => "f16",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Width> {
+        match s {
+            "f32" | "fp32" => Some(Width::F32),
+            "bf16" | "bfloat16" => Some(Width::Bf16),
+            "f16" | "fp16" | "half" => Some(Width::F16),
+            _ => None,
+        }
+    }
+
+    /// Back-compat derivation for pre-width cache entries and APIs that
+    /// still speak bytes-per-element: 2 bytes always meant bf16 before
+    /// f16 existed, anything else is the f32 baseline.
+    pub fn from_bpe(bytes_per_elem: usize) -> Width {
+        match bytes_per_elem {
+            2 => Width::Bf16,
+            _ => Width::F32,
+        }
+    }
+
+    /// Segment used in tuner-cache composite keys. `4` and `2` are the
+    /// historical bpe segments (f32 / bf16 entries round-trip
+    /// unchanged); f16 gets a new segment so it never collides.
+    pub fn cache_tag(self) -> &'static str {
+        match self {
+            Width::F32 => "4",
+            Width::Bf16 => "2",
+            Width::F16 => "2f16",
+        }
+    }
+
+    pub fn parse_cache_tag(s: &str) -> Option<Width> {
+        match s {
+            "4" => Some(Width::F32),
+            "2" => Some(Width::Bf16),
+            "2f16" => Some(Width::F16),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [Width; 3] {
+        [Width::F32, Width::Bf16, Width::F16]
+    }
+
+    /// Widths the tuner explores on this host, pruned by CPU feature
+    /// detection: f16 is only offered when the `f16c` widen is in
+    /// hardware (the scalar fallback stays *correct* everywhere, but a
+    /// software-widened f16 lane is never a tuning win).
+    pub fn tunable() -> Vec<Width> {
+        let mut w = vec![Width::F32, Width::Bf16];
+        if super::lane::f16c_available() {
+            w.push(Width::F16);
+        }
+        w
+    }
+
+    /// Narrow one f32 to this width's bit pattern (RNE, NaNs quieted).
+    /// `F32` is identity on the bottom 16 bits' discard — callers never
+    /// narrow on the f32 path; this exists so oracles can be generic.
+    pub fn narrow(self, x: f32) -> u16 {
+        match self {
+            Width::F32 => unreachable!("f32 panels are never narrowed"),
+            Width::Bf16 => f32_to_bf16(x),
+            Width::F16 => f32_to_f16(x),
+        }
+    }
+
+    /// Widen one packed element back to f32 (exact).
+    pub fn widen(self, h: u16) -> f32 {
+        match self {
+            Width::F32 => unreachable!("f32 panels are never widened"),
+            Width::Bf16 => bf16_to_f32(h),
+            Width::F16 => f16_to_f32(h),
+        }
+    }
+
+    /// `widen(narrow(x))` — the value the kernel actually multiplies
+    /// with when streaming at this width. Identity for `F32`.
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Width::F32 => x,
+            _ => self.widen(self.narrow(x)),
+        }
+    }
+
+    /// Quantize a whole matrix: the per-width oracle input. Running the
+    /// per-element f32 reference over `quantize_slice`d operands *is*
+    /// the pack→widen→accumulate reference, because narrow∘widen is a
+    /// pure per-element function applied exactly once per element.
+    pub fn quantize_slice(self, xs: &[f32]) -> Vec<f32> {
+        match self {
+            Width::F32 => xs.to_vec(),
+            _ => xs.iter().map(|&x| self.quantize(x)).collect(),
+        }
+    }
+}
+
+impl std::fmt::Display for Width {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// bf16 → f32: exact, a 16-bit left shift.
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 → bf16 with round-to-nearest-even on bit 16. NaNs are quieted
+/// (quiet bit set, sign + top payload preserved) so rounding can never
+/// turn a NaN payload into ∞.
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    (bits.wrapping_add(round) >> 16) as u16
+}
+
+/// f16 → f32: exact. Subnormals are renormalized; Inf/NaN payloads are
+/// carried left-aligned into the f32 mantissa with the quiet bit set,
+/// matching what `VCVTPH2PS` produces for every packed value the
+/// kernel can see (pack-narrowed NaNs are already quiet).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        let mut m = man << 13;
+        if man != 0 {
+            m |= 0x0040_0000;
+        }
+        sign | 0x7F80_0000 | m
+    } else if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            let mut e32: u32 = 113; // 127 - 15 + 1
+            let mut m = man;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e32 -= 1;
+            }
+            sign | (e32 << 23) | ((m & 0x03FF) << 13)
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 → f16 with round-to-nearest-even, overflow to ±∞, gradual
+/// underflow through f16 subnormals, NaNs quieted with the top 9
+/// payload bits preserved.
+#[inline(always)]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        if man == 0 {
+            return sign | 0x7C00; // ±∞
+        }
+        return sign | 0x7E00 | ((man >> 13) as u16 & 0x01FF); // quiet NaN
+    }
+    let e = exp - 112; // f16-biased exponent
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → ±∞
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below half the smallest subnormal → ±0
+        }
+        let m = man | 0x0080_0000;
+        let shift = (14 - e) as u32;
+        let mut hm = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        if rem > half || (rem == half && hm & 1 == 1) {
+            hm += 1; // carry into exp 1 (== smallest normal) is correct
+        }
+        return sign | hm as u16;
+    }
+    let mut h = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) {
+        h += 1; // mantissa carry may bump the exponent, up to ∞ — correct RNE
+    }
+    sign | h as u16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn is_f16_snan(h: u16) -> bool {
+        (h >> 10) & 0x1F == 0x1F && h & 0x03FF != 0 && h & 0x0200 == 0
+    }
+
+    fn is_bf16_snan(h: u16) -> bool {
+        (h >> 7) & 0xFF == 0xFF && h & 0x7F != 0 && h & 0x0040 == 0
+    }
+
+    #[test]
+    fn bf16_round_trips_every_bit_pattern() {
+        for h in 0..=u16::MAX {
+            let back = f32_to_bf16(bf16_to_f32(h));
+            if is_bf16_snan(h) {
+                assert_eq!(back, h | 0x0040, "sNaN {h:#06x} must quieten only");
+            } else {
+                assert_eq!(back, h, "bf16 {h:#06x} must round-trip exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_round_trips_every_bit_pattern() {
+        for h in 0..=u16::MAX {
+            let wide = f16_to_f32(h);
+            let back = f32_to_f16(wide);
+            if is_f16_snan(h) {
+                assert!(wide.is_nan() && back & 0x0200 != 0, "sNaN {h:#06x} quietens");
+                assert_eq!(back & !0x0200, h & !0x0200, "payload preserved");
+            } else {
+                assert_eq!(back, h, "f16 {h:#06x} must round-trip exactly");
+            }
+        }
+    }
+
+    #[test]
+    fn narrow_rounds_to_nearest_even() {
+        // Exactly halfway between two bf16 values: 1.0 + 2^-9 has bit 16
+        // set and nothing below — ties to the even neighbour (1.0).
+        let tie = f32::from_bits(0x3F80_8000);
+        assert_eq!(f32_to_bf16(tie), 0x3F80);
+        // Just above the tie rounds up.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F80_8001)), 0x3F81);
+        // Odd mantissa ties round up to even.
+        assert_eq!(f32_to_bf16(f32::from_bits(0x3F81_8000)), 0x3F82);
+
+        // f16: 1.0 + 2^-11 is halfway, ties to even (1.0).
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1000)), 0x3C00);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_1001)), 0x3C01);
+        assert_eq!(f32_to_f16(f32::from_bits(0x3F80_3000)), 0x3C02);
+    }
+
+    #[test]
+    fn narrow_handles_overflow_underflow_and_specials() {
+        assert_eq!(f32_to_f16(1.0e9), 0x7C00);
+        assert_eq!(f32_to_f16(-1.0e9), 0xFC00);
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        // Largest f32 rounds to bf16 ∞ (it sits above the bf16 max).
+        assert_eq!(f32_to_bf16(f32::MAX), 0x7F80);
+        assert_eq!(f32_to_bf16(f32::INFINITY), 0x7F80);
+        // Smallest f16 subnormal survives; half of it ties to zero.
+        assert_eq!(f16_to_f32(0x0001), 2.0f32.powi(-24));
+        assert_eq!(f32_to_f16(2.0f32.powi(-24)), 0x0001);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25)), 0x0000);
+        assert_eq!(f32_to_f16(2.0f32.powi(-25) * 1.5), 0x0001);
+        // NaNs stay NaN and come out quiet.
+        let q = f32_to_f16(f32::NAN);
+        assert!(f16_to_f32(q).is_nan() && q & 0x0200 != 0);
+        let qb = f32_to_bf16(f32::NAN);
+        assert!(bf16_to_f32(qb).is_nan() && qb & 0x0040 != 0);
+        // An f32 sNaN whose payload lives below bf16's 7 kept bits must
+        // not collapse to ∞ — quieting guarantees a NaN comes back.
+        let snan = f32::from_bits(0x7F80_0001);
+        assert!(bf16_to_f32(f32_to_bf16(snan)).is_nan());
+        assert!(f16_to_f32(f32_to_f16(snan)).is_nan());
+    }
+
+    #[test]
+    fn quantize_is_idempotent_per_width() {
+        let mut rng = crate::prop::Rng::new(0x5eed_11);
+        for w in [Width::Bf16, Width::F16] {
+            for _ in 0..2000 {
+                let x = (rng.normal() as f32) * 10.0f32.powi(rng.usize_in(0, 12) as i32 - 6);
+                let q = w.quantize(x);
+                let qq = w.quantize(q);
+                assert_eq!(q.to_bits(), qq.to_bits(), "{w} quantize must be idempotent");
+            }
+            for x in [0.0, -0.0, f32::INFINITY, f32::NEG_INFINITY, 1e-40, -1e-42] {
+                let q = w.quantize(x);
+                assert_eq!(q.to_bits(), w.quantize(q).to_bits());
+            }
+            assert!(w.quantize(f32::NAN).is_nan());
+        }
+    }
+
+    #[test]
+    fn names_tags_and_bpe_round_trip() {
+        for w in Width::all() {
+            assert_eq!(Width::parse(w.name()), Some(w));
+            assert_eq!(Width::parse_cache_tag(w.cache_tag()), Some(w));
+        }
+        assert_eq!(Width::from_bpe(4), Width::F32);
+        assert_eq!(Width::from_bpe(2), Width::Bf16);
+        assert_eq!(Width::F32.bytes(), 4);
+        assert_eq!(Width::Bf16.bytes(), 2);
+        assert_eq!(Width::F16.bytes(), 2);
+        assert_eq!(Width::parse("half"), Some(Width::F16));
+        assert_eq!(Width::parse("i8"), None);
+        let t = Width::tunable();
+        assert!(t.contains(&Width::F32) && t.contains(&Width::Bf16));
+    }
+}

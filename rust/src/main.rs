@@ -383,19 +383,41 @@ fn cmd_tune(argv: &[String]) -> i32 {
     .opt(Opt::value("budget-ms", Some("250"), "wall budget per tune"))
     .opt(Opt::value("top-k", Some("8"), "measured candidates per tune"))
     .opt(Opt::value("bytes", Some("4"), "bytes per element (4=f32, 2=bf16)"))
+    .opt(Opt::value("width", None, "element width (f32|bf16|f16; overrides --bytes)"))
+    .opt(Opt::flag("measure", "price measured candidates by wall-clock runs of the CPU blocked executor instead of the simulator"))
     .opt(Opt::value("cache", None, "tuner cache file to warm (load+merge+store)"))
     .opt(Opt::value("drift-pct", Some("50"), "re-validate past this drift %"))
     .opt(Opt::value("max-age-s", Some("604800"), "age out entries older than"))
     .example("streamk tune --suite --cache tuner_cache.json")
     .example("streamk tune --m 1920 --n 2000 --k 2000 --budget-ms 500")
+    .example("streamk tune --suite --width bf16 --measure")
     .example("streamk tune --revalidate --cache tuner_cache.json")
     .example("streamk serve --tuner-cache tuner_cache.json   # then serve warm");
     let args = parse_or_exit(&cmd, argv);
     let cus = args.usize("cus").unwrap().clamp(1, 120);
+    let width = match args.get("width") {
+        Some(s) => match streamk::kernel::Width::parse(s) {
+            Some(w) => w,
+            None => {
+                eprintln!("unknown width {s:?} (want f32|bf16|f16)");
+                return 2;
+            }
+        },
+        None => streamk::kernel::Width::from_bpe(args.usize("bytes").unwrap()),
+    };
+    if !streamk::kernel::Width::tunable().contains(&width) {
+        // Correct everywhere (scalar widen), but a software-widened
+        // lane is never a tuning win — say so instead of failing.
+        eprintln!(
+            "note: {width} has no hardware widen on this host \
+             (f16c missing); tuning proceeds on the scalar path"
+        );
+    }
     let opts = TuneOptions {
         top_k: args.usize("top-k").unwrap().max(1),
         budget: Budget::from_millis(args.usize("budget-ms").unwrap() as u64),
-        bytes_per_elem: args.usize("bytes").unwrap(),
+        width,
+        measure_cpu: args.flag("measure"),
     };
     let staleness = StalenessPolicy {
         max_drift: args.usize("drift-pct").unwrap() as f64 / 100.0,
@@ -530,8 +552,10 @@ fn cmd_plan(argv: &[String]) -> i32 {
     ))
     .opt(Opt::value("cus", Some("120"), "compute units"))
     .opt(Opt::value("bytes", Some("4"), "bytes per element (4=f32, 2=bf16)"))
+    .opt(Opt::value("width", None, "element width (f32|bf16|f16; overrides --bytes)"))
     .opt(Opt::value("repeats", Some("1000"), "cached lookups to time"))
     .example("streamk plan --m 1920 --n 2000 --k 2000")
+    .example("streamk plan --m 1920 --n 2000 --k 2000 --width bf16")
     .example("streamk plan --m 3840 --n 4096 --k 4096 --cus 60");
     let args = parse_or_exit(&cmd, argv);
     let shape = GemmShape::new(
@@ -540,12 +564,22 @@ fn cmd_plan(argv: &[String]) -> i32 {
         args.usize("k").unwrap(),
     );
     let cus = args.usize("cus").unwrap().clamp(1, 120);
-    let bpe = args.usize("bytes").unwrap();
+    let width = match args.get("width") {
+        Some(s) => match streamk::kernel::Width::parse(s) {
+            Some(w) => w,
+            None => {
+                eprintln!("unknown width {s:?} (want f32|bf16|f16)");
+                return 2;
+            }
+        },
+        None => streamk::kernel::Width::from_bpe(args.usize("bytes").unwrap()),
+    };
     let repeats = args.usize("repeats").unwrap().max(1);
     let cache = streamk::plan::global();
 
     let sw = Stopwatch::start();
-    let plan = match cache.get_or_build(shape, BlockShape::default(), bpe, cus)
+    let plan = match cache
+        .get_or_build_w(shape, BlockShape::default(), width, cus)
     {
         Ok(p) => p,
         Err(e) => {
@@ -558,8 +592,14 @@ fn cmd_plan(argv: &[String]) -> i32 {
     let flat = &plan.flat;
     let blk = plan.key.block;
     println!(
-        "plan {}x{}x{} @ {bpe}B/elem on {cus} CUs (block {}x{}x{})",
-        shape.m, shape.n, shape.k, blk.bm, blk.bn, blk.bk
+        "plan {}x{}x{} @ {width} ({}B/elem) on {cus} CUs (block {}x{}x{})",
+        shape.m,
+        shape.n,
+        shape.k,
+        width.bytes(),
+        blk.bm,
+        blk.bn,
+        blk.bk
     );
     println!(
         "  grid: {}x{} tiles x {} k-iters | {} phase-1 work items | \
@@ -605,7 +645,7 @@ fn cmd_plan(argv: &[String]) -> i32 {
     let mut acc = 0.0f64;
     for _ in 0..repeats {
         let p = cache
-            .get_or_build(shape, BlockShape::default(), bpe, cus)
+            .get_or_build_w(shape, BlockShape::default(), width, cus)
             .expect("cached plan");
         acc += p.time_on(&dev);
     }
@@ -729,7 +769,7 @@ fn cmd_fleet(argv: &[String]) -> i32 {
     let opts = TuneOptions {
         top_k: args.usize("top-k").unwrap().max(1),
         budget: Budget::from_millis(args.usize("budget-ms").unwrap() as u64),
-        bytes_per_elem: 4,
+        ..TuneOptions::default()
     };
     let staleness = StalenessPolicy {
         max_drift: args.usize("drift-pct").unwrap() as f64 / 100.0,
@@ -1080,7 +1120,8 @@ fn cmd_route(argv: &[String]) -> i32 {
     ))
     .opt(Opt::value("artifacts", Some("artifacts"), "artifact directory"))
     .opt(Opt::value("algo", Some("streamk"), "preferred algorithm"))
-    .opt(Opt::value("pad", Some("none"), "padding policy"));
+    .opt(Opt::value("pad", Some("none"), "padding policy"))
+    .opt(Opt::value("dtype", Some("f32"), "artifact element width (f32|bf16|f16)"));
     let args = parse_or_exit(&cmd, argv);
     let manifest = match Manifest::load(Path::new(args.str("artifacts"))) {
         Ok(m) => m,
@@ -1089,7 +1130,7 @@ fn cmd_route(argv: &[String]) -> i32 {
             return 1;
         }
     };
-    let router = Router::new(args.str("algo"), args.str("pad"), "f32");
+    let router = Router::new(args.str("algo"), args.str("pad"), args.str("dtype"));
     match router.route_gemm(
         &manifest,
         args.usize("m").unwrap(),
@@ -1257,8 +1298,10 @@ fn cmd_profile(argv: &[String]) -> i32 {
     ))
     .opt(Opt::value("cus", Some("8"), "compute units"))
     .opt(Opt::value("runs", Some("3"), "profiled dispatches"))
+    .opt(Opt::value("width", Some("f32"), "element width (f32|bf16|f16)"))
     .opt(Opt::value("out", None, "also write the profile JSON here"))
     .example("streamk profile --m 512 --n 512 --k 512")
+    .example("streamk profile --m 512 --n 512 --k 512 --width bf16")
     .example("streamk profile --m 1920 --n 2000 --k 2000 --runs 5 --out profile.json");
     let args = parse_or_exit(&cmd, argv);
     let shape = GemmShape::new(
@@ -1268,11 +1311,23 @@ fn cmd_profile(argv: &[String]) -> i32 {
     );
     let cus = args.usize("cus").unwrap().clamp(1, 120);
     let runs = args.usize("runs").unwrap().max(1);
+    let width = match streamk::kernel::Width::parse(
+        args.get("width").unwrap_or("f32"),
+    ) {
+        Some(w) => w,
+        None => {
+            eprintln!(
+                "unknown width {:?} (want f32|bf16|f16)",
+                args.get("width").unwrap_or("?")
+            );
+            return 2;
+        }
+    };
 
-    let plan = match streamk::plan::global().get_or_build(
+    let plan = match streamk::plan::global().get_or_build_w(
         shape,
         BlockShape::default(),
-        4,
+        width,
         cus,
     ) {
         Ok(p) => p,

@@ -169,6 +169,18 @@ impl PlanCache {
         self.get_or_build_key(PlanKey::new(shape, block, bytes_per_elem, cus))
     }
 
+    /// Width-native spelling of [`Self::get_or_build`] — the tuner's
+    /// width axis and the runtime's dtype routing come through here.
+    pub fn get_or_build_w(
+        &self,
+        shape: GemmShape,
+        block: BlockShape,
+        width: crate::kernel::Width,
+        cus: usize,
+    ) -> Result<Arc<Plan>, ScheduleError> {
+        self.get_or_build_key(PlanKey::new_w(shape, block, width, cus))
+    }
+
     /// Memoized lookup of a Block2Time-weighted split: the per-CU weight
     /// vector is quantized into the key (fixed-point 1/256 of the
     /// fastest CU), so near-identical speed estimates reuse one plan

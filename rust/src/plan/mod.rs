@@ -46,7 +46,7 @@ use crate::gpu_sim::gemm::{
     item_bytes, item_flops, launch_from_invariants, mxu_fill,
 };
 use crate::gpu_sim::{Device, LaunchStats, SimResult};
-use crate::kernel::ExecDesc;
+use crate::kernel::{ExecDesc, Width};
 use std::sync::{Arc, OnceLock};
 
 /// Fixed-point denominator for quantized per-CU weights: 1/256 relative
@@ -66,7 +66,11 @@ pub const WEIGHT_QUANTUM: u16 = 256;
 pub struct PlanKey {
     pub shape: GemmShape,
     pub block: BlockShape,
-    pub bytes_per_elem: usize,
+    /// Element width the A/B panels stream at. Streamed bytes, launch
+    /// invariants and the executable descriptor all derive from it, so
+    /// a bf16 plan and an f32 plan of the same shape never share an
+    /// entry.
+    pub width: Width,
     pub cus: usize,
     /// `None` = even Stream-K split; `Some` = weighted split, one
     /// quantized weight per CU (scale-invariant: `2×w` and `w` map to
@@ -77,19 +81,35 @@ pub struct PlanKey {
 }
 
 impl PlanKey {
+    /// Back-compat constructor speaking bytes-per-element (2 → bf16,
+    /// else f32 — [`Width::from_bpe`]).
     pub fn new(
         shape: GemmShape,
         block: BlockShape,
         bytes_per_elem: usize,
         cus: usize,
     ) -> Self {
+        Self::new_w(shape, block, Width::from_bpe(bytes_per_elem), cus)
+    }
+
+    pub fn new_w(
+        shape: GemmShape,
+        block: BlockShape,
+        width: Width,
+        cus: usize,
+    ) -> Self {
         Self {
             shape,
             block: block.effective(shape),
-            bytes_per_elem,
+            width,
             cus,
             weights: None,
         }
+    }
+
+    /// Streamed bytes per panel element at this key's width.
+    pub fn bytes_per_elem(&self) -> usize {
+        self.width.bytes()
     }
 
     /// Key for a Block2Time-weighted split: CU count is the weight
@@ -103,7 +123,7 @@ impl PlanKey {
         Self {
             shape,
             block: block.effective(shape),
-            bytes_per_elem,
+            width: Width::from_bpe(bytes_per_elem),
             cus: weights.len(),
             weights: Some(quantize_weights(weights)),
         }
@@ -196,7 +216,7 @@ impl Plan {
         // identical to the schedule it describes.
         let block = sched.block;
         let flat = FlatSchedule::from_schedule(&sched);
-        let bpe = key.bytes_per_elem;
+        let bpe = key.bytes_per_elem();
 
         let mut cu_flops = Vec::with_capacity(key.cus);
         let mut cu_iters = Vec::with_capacity(key.cus);
@@ -241,6 +261,7 @@ impl Plan {
     pub fn exec(&self) -> &ExecDesc {
         self.exec.get_or_init(|| {
             ExecDesc::new(self.key.shape, self.key.block, &self.flat)
+                .with_width(self.key.width)
         })
     }
 
@@ -490,6 +511,41 @@ mod tests {
         .unwrap();
         assert!(!fresh.exec_built());
         assert_eq!(plan, fresh, "lazy state must not affect plan identity");
+    }
+
+    /// Tentpole invariant: a 16-bit plan halves streamed panel bytes in
+    /// the launch invariants (Block2Time honesty) and threads the width
+    /// into its executable descriptor, while the schedule itself — a
+    /// pure index computation — is width-independent.
+    #[test]
+    fn sixteen_bit_plans_halve_streamed_bytes_and_tag_the_desc() {
+        let shape = GemmShape::new(1920, 2000, 2000);
+        let blk = BlockShape::default();
+        let f32p =
+            Plan::build(PlanKey::new_w(shape, blk, Width::F32, 120)).unwrap();
+        for w in [Width::Bf16, Width::F16] {
+            let p = Plan::build(PlanKey::new_w(shape, blk, w, 120)).unwrap();
+            assert_eq!(p.flat, f32p.flat, "schedule is width-independent");
+            assert!(
+                (p.bytes - f32p.bytes / 2.0).abs() <= f32p.bytes * 1e-12,
+                "{w}: {} vs f32 {}",
+                p.bytes,
+                f32p.bytes
+            );
+            assert_eq!(p.exec().width, w, "desc carries the key width");
+            assert_ne!(p.key, f32p.key, "widths never share a cache entry");
+            // Pricing sees the halved traffic: never slower, and the
+            // memory span itself strictly shrinks (whether that shows
+            // in the total depends on the device's compute/mem balance).
+            let dev = mi200();
+            assert!(p.time_on(&dev) <= f32p.time_on(&dev));
+        }
+        assert_eq!(f32p.exec().width, Width::F32);
+        assert_eq!(PlanKey::new(shape, blk, 2, 120).width, Width::Bf16);
+        assert_eq!(
+            PlanKey::new(shape, blk, 2, 120).bytes_per_elem(),
+            2
+        );
     }
 
     #[test]

@@ -239,6 +239,7 @@ fn build_literals(
             let lit = match tm.dtype.as_str() {
                 "f32" => lit,
                 "bf16" => lit.convert(xla::PrimitiveType::Bf16)?,
+                "f16" => lit.convert(xla::PrimitiveType::F16)?,
                 other => {
                     return Err(RuntimeError::Backend(format!(
                         "unsupported input dtype {other}"
@@ -272,7 +273,7 @@ fn unpack_outputs(
         .map(|(lit, tm)| {
             let lit = match tm.dtype.as_str() {
                 "f32" => lit,
-                "bf16" => lit.convert(xla::PrimitiveType::F32)?,
+                "bf16" | "f16" => lit.convert(xla::PrimitiveType::F32)?,
                 other => {
                     return Err(RuntimeError::Backend(format!(
                         "unsupported output dtype {other}"
@@ -322,13 +323,14 @@ fn streamk_matmul(
     cus: usize,
     kc: Option<usize>,
     epilogue: crate::kernel::Epilogue,
+    width: crate::kernel::Width,
 ) -> Option<Vec<f32>> {
     use crate::decomp::{BlockShape, GemmShape};
     let shape = GemmShape::new(m, n, k);
     let plan = {
         let _sp = crate::trace::span1("plan.lookup", "cus", cus as u64);
         crate::plan::global()
-            .get_or_build(shape, BlockShape::default(), 4, cus)
+            .get_or_build_w(shape, BlockShape::default(), width, cus)
             .ok()?
     };
     let desc = plan.exec();
@@ -417,19 +419,36 @@ fn interpret(
             let (k2, n) = dims2(1)?;
             agree("A cols / B rows", k, k2)?;
             let ep = parse_epilogue(&meta.epilogue)?;
+            // The artifact dtype picks the kernel element width: the
+            // Stream-K path streams converted 16-bit panels through
+            // the widening lanes; unknown dtypes route as f32.
+            let width = meta
+                .width()
+                .unwrap_or(crate::kernel::Width::F32);
             // Stream-K artifacts execute the cached plan's blocked tile
             // descriptors with the epilogue fused into the store; the
             // reference/tile/splitk artifacts run the blocked dense
-            // matmul with the epilogue applied after.
+            // matmul with the epilogue applied after — over inputs
+            // quantized to the artifact width, matching the widening
+            // lanes' pack→widen→accumulate semantics exactly.
             let c = if meta.algo == "streamk" && meta.cus >= 1 {
                 streamk_matmul(
-                    inputs[0], inputs[1], m, k, n, meta.cus, kc, ep,
+                    inputs[0], inputs[1], m, k, n, meta.cus, kc, ep, width,
                 )
             } else {
                 None
             }
             .unwrap_or_else(|| {
-                let mut c = matmul(inputs[0], inputs[1], m, k, n);
+                let mut c = match width {
+                    crate::kernel::Width::F32 => {
+                        matmul(inputs[0], inputs[1], m, k, n)
+                    }
+                    w => {
+                        let qa = w.quantize_slice(inputs[0]);
+                        let qb = w.quantize_slice(inputs[1]);
+                        matmul(&qa, &qb, m, k, n)
+                    }
+                };
                 ep.apply_slice(&mut c);
                 c
             });
@@ -627,6 +646,64 @@ mod tests {
         let again = interpret(&meta, &[&a.data, &b.data], None).unwrap();
         assert_eq!(again[0], got[0], "cached replay is deterministic");
         assert!(crate::plan::global().stats().hits > hits_before);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn interp_sixteen_bit_artifacts_match_the_quantized_oracle() {
+        use crate::faults::Matrix;
+        use crate::kernel::Width;
+        // A 16-bit artifact must produce *exactly* the result of the
+        // f32 reference over width-quantized inputs — the per-width
+        // bit-identity contract, here end to end through artifact
+        // routing, the plan cache, and the widening lanes.
+        let (m, n, k) = (33usize, 41usize, 57usize);
+        let mut rng = crate::prop::Rng::new(29);
+        let a = Matrix::random(m, k, &mut rng);
+        let b = Matrix::random(k, n, &mut rng);
+        for dtype in ["bf16", "f16"] {
+            let meta = ArtifactMeta {
+                name: format!("sk-{dtype}"),
+                file: "sk16.hlo.txt".into(),
+                experiment: "test".into(),
+                kind: "gemm".into(),
+                inputs: vec![
+                    super::super::TensorMeta {
+                        shape: vec![m, k],
+                        dtype: dtype.into(),
+                    },
+                    super::super::TensorMeta {
+                        shape: vec![k, n],
+                        dtype: dtype.into(),
+                    },
+                ],
+                outputs: vec![super::super::TensorMeta {
+                    shape: vec![m, n],
+                    dtype: "f32".into(),
+                }],
+                flops: 0,
+                m,
+                n,
+                k,
+                algo: "streamk".into(),
+                pad: "none".into(),
+                dtype: dtype.into(),
+                cus: 4,
+                epilogue: "none".into(),
+                batch: 0,
+            };
+            let width = meta.width().unwrap();
+            assert_ne!(width, Width::F32);
+            let got = interpret(&meta, &[&a.data, &b.data], None).unwrap();
+            let qa = width.quantize_slice(&a.data);
+            let qb = width.quantize_slice(&b.data);
+            let want = crate::kernel::matmul(&qa, &qb, m, k, n);
+            assert_eq!(
+                got[0], want,
+                "{dtype}: widening lanes must be bit-identical to the \
+                 quantized f32 oracle"
+            );
+        }
     }
 
     #[cfg(not(feature = "pjrt"))]

@@ -43,6 +43,15 @@ pub struct ArtifactMeta {
     pub batch: usize,
 }
 
+impl ArtifactMeta {
+    /// The kernel element width this artifact streams at, when its
+    /// dtype names a supported width (`f32` | `bf16` | `f16`). `None`
+    /// for anything else — callers choose their own fallback.
+    pub fn width(&self) -> Option<crate::kernel::Width> {
+        crate::kernel::Width::parse(&self.dtype)
+    }
+}
+
 /// The parsed manifest with name- and shape-indexed lookups.
 #[derive(Debug, Clone)]
 pub struct Manifest {

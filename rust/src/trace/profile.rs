@@ -22,6 +22,7 @@
 use crate::decomp::intensity::{Roofline, CPU_1CORE};
 use crate::decomp::GemmShape;
 use crate::json::{obj, Value};
+use crate::kernel::Width;
 use crate::tuner::ShapeBucket;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -70,6 +71,7 @@ pub struct PassTimes {
 #[derive(Debug, Default, Clone)]
 struct BucketTotals {
     key: String,
+    width: Width,
     dispatches: u64,
     flops: u64,
     pack_bytes: u64,
@@ -91,23 +93,50 @@ fn registry() -> &'static Mutex<Vec<BucketTotals>> {
     REG.get_or_init(|| Mutex::new(Vec::new()))
 }
 
+/// Bucket key for one (shape bucket, element width) attribution slot.
+/// f32 keeps the bare bucket key (back-compatible with existing lookups
+/// and the bench's headline rows); 16-bit widths get an `@width` suffix
+/// so per-width GB/s and residual APE never mix — streamed bytes halve
+/// at bf16/f16 and averaging across widths would hide exactly the
+/// accounting drift this profiler exists to expose.
+pub fn width_key(bucket: &str, width: Width) -> String {
+    match width {
+        Width::F32 => bucket.to_string(),
+        w => format!("{bucket}@{w}"),
+    }
+}
+
+/// Inverse of [`width_key`]: split a registry key back into the bare
+/// bucket key and the element width (f32 when no suffix is present).
+pub fn split_width_key(key: &str) -> (&str, Width) {
+    if let Some((bucket, tag)) = key.rsplit_once('@') {
+        if let Some(w) = Width::parse(tag) {
+            return (bucket, w);
+        }
+    }
+    (key, Width::F32)
+}
+
 /// Fold one finished dispatch into the per-bucket registry.
 /// `classes` is the descriptor's (owned, ordered, partial) tile-store
-/// class counts; `total_ns` is the dispatch wall time.
+/// class counts; `total_ns` is the dispatch wall time. `width` is the
+/// dispatch's element width — it selects the attribution slot (see
+/// [`width_key`]) and is echoed in the JSON report.
 pub fn record_dispatch(
     shape: GemmShape,
+    width: Width,
     classes: (usize, usize, usize),
     fixup_tiles: usize,
     ctr: &DispatchCounters,
     times: &PassTimes,
     total_ns: u64,
 ) {
-    let key = ShapeBucket::of(shape).key();
+    let key = width_key(&ShapeBucket::of(shape).key(), width);
     let mut reg = registry().lock().unwrap_or_else(|e| e.into_inner());
     let slot = match reg.iter_mut().find(|b| b.key == key) {
         Some(b) => b,
         None => {
-            reg.push(BucketTotals { key, ..BucketTotals::default() });
+            reg.push(BucketTotals { key, width, ..BucketTotals::default() });
             reg.last_mut().expect("just pushed")
         }
     };
@@ -131,6 +160,7 @@ pub fn record_dispatch(
 #[derive(Debug, Clone)]
 pub struct BucketProfile {
     pub bucket: String,
+    pub width: Width,
     pub dispatches: u64,
     pub flops: u64,
     pub pack_bytes: u64,
@@ -151,6 +181,7 @@ impl BucketProfile {
     fn from_totals(t: &BucketTotals) -> Self {
         Self {
             bucket: t.key.clone(),
+            width: t.width,
             dispatches: t.dispatches,
             flops: t.flops,
             pack_bytes: t.pack_bytes,
@@ -220,9 +251,15 @@ impl BucketProfile {
             / self.total_ns as f64
     }
 
+    /// The dispatch element width this bucket aggregates.
+    pub fn width(&self) -> Width {
+        self.width
+    }
+
     pub fn to_json(&self) -> Value {
         obj(vec![
             ("bucket", self.bucket.clone().into()),
+            ("width", self.width.name().into()),
             ("dispatches", (self.dispatches as usize).into()),
             ("flops", (self.flops as usize).into()),
             ("pack_bytes", (self.pack_bytes as usize).into()),
@@ -347,6 +384,7 @@ mod tests {
         };
         record_dispatch(
             shape,
+            Width::F32,
             (3, 2, 1),
             4,
             &counters(2_000_000, 1000, 500, 17),
@@ -355,6 +393,7 @@ mod tests {
         );
         record_dispatch(
             shape,
+            Width::F32,
             (3, 2, 1),
             4,
             &counters(2_000_000, 1000, 500, 17),
@@ -364,6 +403,7 @@ mod tests {
         // a different bucket stays separate
         record_dispatch(
             GemmShape::new(300, 300, 300),
+            Width::F32,
             (1, 0, 0),
             0,
             &counters(1, 1, 1, 1),
@@ -407,6 +447,7 @@ mod tests {
         // 1 GFLOP in 1 second at high AI → 1 GFLOPS achieved
         record_dispatch(
             GemmShape::new(64, 64, 64),
+            Width::F32,
             (1, 0, 0),
             0,
             &counters(1_000_000_000, 1000, 1000, 0),
@@ -439,5 +480,86 @@ mod tests {
         assert_eq!(p.ai(), 0.0);
         assert_eq!(p.accounted(), 0.0);
         assert_eq!(p.efficiency(&host_roofline(4)), 0.0);
+    }
+
+    /// Satellite zero-guard: a bucket can legitimately record bytes and
+    /// pass time with zero wall time (sub-nanosecond dispatch rounded
+    /// down by the clock). Every derived rate must return 0, never
+    /// NaN/∞ — these feed the metrics JSON and the SLO watchdog.
+    #[test]
+    fn bytes_with_zero_wall_time_yield_zero_rates_not_nan() {
+        let _g = crate::trace::test_lock();
+        drain();
+        record_dispatch(
+            GemmShape::new(8, 8, 8),
+            Width::Bf16,
+            (1, 0, 0),
+            0,
+            &counters(1024, 4096, 256, 9),
+            &PassTimes { direct_ns: 3, ..Default::default() },
+            0,
+        );
+        let p = drain().remove(0);
+        assert!(p.pack_bytes > 0 && p.total_ns == 0);
+        assert_eq!(p.accounted(), 0.0);
+        assert_eq!(p.achieved_gflops(), 0.0);
+        assert_eq!(p.achieved_gbps(), 0.0);
+        assert_eq!(p.efficiency(&host_roofline(4)), 0.0);
+        for key in ["accounted", "gflops", "gbps"] {
+            let v = p.to_json().f(key).unwrap();
+            assert!(v.is_finite(), "{key} must stay finite, got {v}");
+        }
+    }
+
+    /// Width-suffixed bucket keys: f32 stays bare (back-compat with
+    /// every existing lookup), 16-bit widths append `@width`, and the
+    /// split is the exact inverse for every bucket key shape.
+    #[test]
+    fn width_keys_round_trip_and_keep_f32_bare() {
+        assert_eq!(width_key("512x512x512", Width::F32), "512x512x512");
+        assert_eq!(width_key("512x512x512", Width::Bf16), "512x512x512@bf16");
+        assert_eq!(width_key("3x9x9", Width::F16), "3x9x9@f16");
+        for bucket in ["512x512x512", "3840x4096x4096", "3x9x9"] {
+            for w in Width::all() {
+                let key = width_key(bucket, w);
+                assert_eq!(split_width_key(&key), (bucket, w));
+            }
+        }
+        // An unknown suffix is not a width tag — the whole key is the
+        // bucket and the width defaults to f32.
+        assert_eq!(split_width_key("odd@tag"), ("odd@tag", Width::F32));
+    }
+
+    /// Same shape at two widths lands in two separate slots; per-width
+    /// byte totals never mix.
+    #[test]
+    fn widths_get_separate_attribution_slots() {
+        let _g = crate::trace::test_lock();
+        drain();
+        let shape = GemmShape::new(200, 200, 200);
+        for (w, bytes) in [(Width::F32, 4000u64), (Width::Bf16, 2000u64)] {
+            record_dispatch(
+                shape,
+                w,
+                (1, 0, 0),
+                0,
+                &counters(100, bytes, 16, 1),
+                &PassTimes { direct_ns: 10, ..Default::default() },
+                10,
+            );
+        }
+        let snap = drain();
+        assert_eq!(snap.len(), 2);
+        let bucket = ShapeBucket::of(shape).key();
+        let f32p = snap.iter().find(|p| p.bucket == bucket).unwrap();
+        let bf = snap
+            .iter()
+            .find(|p| p.bucket == width_key(&bucket, Width::Bf16))
+            .unwrap();
+        assert_eq!(f32p.pack_bytes, 4000);
+        assert_eq!(bf.pack_bytes, 2000);
+        assert_eq!(f32p.width(), Width::F32);
+        assert_eq!(bf.width(), Width::Bf16);
+        assert_eq!(bf.to_json().s("width").unwrap(), "bf16");
     }
 }

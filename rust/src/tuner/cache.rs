@@ -1,6 +1,6 @@
 //! Persistent per-shape tuning cache with an in-memory LRU front.
 //!
-//! Keyed by `(ShapeBucket, bytes_per_elem, DeviceFingerprint)`;
+//! Keyed by `(ShapeBucket, element width, DeviceFingerprint)`;
 //! serialized through the
 //! in-tree `json` module with an explicit format version — a mismatched
 //! version is *rejected*, never reinterpreted, because a stale entry
@@ -20,6 +20,7 @@ use super::space::PadPolicy;
 use crate::decomp::params::{KernelParams, KC_DEFAULT};
 use crate::decomp::BlockShape;
 use crate::json::{self, obj, Value};
+use crate::kernel::{RegBlock, Width};
 use std::path::Path;
 
 /// Bump on any change to the entry layout.
@@ -110,22 +111,26 @@ impl From<json::JsonError> for CacheError {
 /// traffic of f32, so a config tuned at one width must never be served
 /// at another. The device fingerprint stays the suffix (see
 /// [`TuningCache::count_for`]).
+/// The width segment reuses the historical bytes-per-element spelling
+/// ([`Width::cache_tag`]: f32 → `bpe4`, bf16 → `bpe2`), so every
+/// pre-width key round-trips unchanged; f16 gets the new `bpe2f16`
+/// segment and can never collide with a bf16 entry.
 fn composite_key(
     bucket: &ShapeBucket,
-    bytes_per_elem: usize,
+    width: Width,
     dev: &DeviceFingerprint,
 ) -> String {
-    format!("{}@bpe{}@{}", bucket.key(), bytes_per_elem, dev.as_str())
+    format!("{}@bpe{}@{}", bucket.key(), width.cache_tag(), dev.as_str())
 }
 
 /// Inverse of [`composite_key`] (used by re-validation, which walks the
 /// persisted entries back to tunable buckets).
-pub fn split_key(key: &str) -> Option<(ShapeBucket, usize, &str)> {
+pub fn split_key(key: &str) -> Option<(ShapeBucket, Width, &str)> {
     let (bucket_str, rest) = key.split_once("@bpe")?;
-    let (bpe_str, dev) = rest.split_once('@')?;
+    let (tag, dev) = rest.split_once('@')?;
     let bucket = ShapeBucket::parse(bucket_str)?;
-    let bpe = bpe_str.parse().ok()?;
-    Some((bucket, bpe, dev))
+    let width = Width::parse_cache_tag(tag)?;
+    Some((bucket, width, dev))
 }
 
 /// One cached config plus its staleness bookkeeping.
@@ -191,10 +196,10 @@ impl TuningCache {
     pub fn peek(
         &self,
         bucket: &ShapeBucket,
-        bytes_per_elem: usize,
+        width: Width,
         dev: &DeviceFingerprint,
     ) -> Option<TunedConfig> {
-        let key = composite_key(bucket, bytes_per_elem, dev);
+        let key = composite_key(bucket, width, dev);
         self.entries.iter().find(|(k, _)| *k == key).map(|(_, e)| e.cfg)
     }
 
@@ -202,10 +207,10 @@ impl TuningCache {
     pub fn get(
         &mut self,
         bucket: &ShapeBucket,
-        bytes_per_elem: usize,
+        width: Width,
         dev: &DeviceFingerprint,
     ) -> Option<TunedConfig> {
-        let key = composite_key(bucket, bytes_per_elem, dev);
+        let key = composite_key(bucket, width, dev);
         let idx = self.entries.iter().position(|(k, _)| *k == key)?;
         let mut entry = self.entries.remove(idx);
         entry.1.last_used_s = now_epoch_s();
@@ -218,11 +223,11 @@ impl TuningCache {
     pub fn insert(
         &mut self,
         bucket: &ShapeBucket,
-        bytes_per_elem: usize,
+        width: Width,
         dev: &DeviceFingerprint,
         cfg: TunedConfig,
     ) {
-        let key = composite_key(bucket, bytes_per_elem, dev);
+        let key = composite_key(bucket, width, dev);
         let now = now_epoch_s();
         self.entries.retain(|(k, _)| *k != key);
         self.entries.insert(
@@ -238,11 +243,11 @@ impl TuningCache {
     pub fn update<F: FnOnce(&mut TunedConfig)>(
         &mut self,
         bucket: &ShapeBucket,
-        bytes_per_elem: usize,
+        width: Width,
         dev: &DeviceFingerprint,
         f: F,
     ) -> bool {
-        let key = composite_key(bucket, bytes_per_elem, dev);
+        let key = composite_key(bucket, width, dev);
         let Some(idx) = self.entries.iter().position(|(k, _)| *k == key)
         else {
             return false;
@@ -311,7 +316,10 @@ impl TuningCache {
                     ("kpack", c.params.kpack.into()),
                     ("mxu_m", c.params.mxu_m.into()),
                     ("mxu_n", c.params.mxu_n.into()),
-                    ("bytes_per_elem", c.params.bytes_per_elem.into()),
+                    ("bytes_per_elem", c.params.bytes_per_elem().into()),
+                    ("width", c.params.width.name().into()),
+                    ("mr", c.params.reg.mr.into()),
+                    ("nr", c.params.reg.nr.into()),
                     ("double_buffer", c.params.double_buffer.into()),
                     ("kc", c.params.kc.into()),
                     ("pad", c.pad.as_str().into()),
@@ -352,10 +360,18 @@ impl TuningCache {
                 e.u("bn").map_err(CacheError::Json)?,
                 e.u("bk").map_err(CacheError::Json)?,
             );
-            let mut params = KernelParams::new(
-                block,
-                e.u("bytes_per_elem").map_err(CacheError::Json)?,
-            );
+            // The width axis joined in v2's lifetime: entries written
+            // before it carry only "bytes_per_elem" (which determines
+            // the width — 2 always meant bf16) — a compatible read, not
+            // a format break. Newer entries spell the width explicitly
+            // so bf16 and f16 (both 2 bytes) stay distinct.
+            let bpe = e.u("bytes_per_elem").map_err(CacheError::Json)?;
+            let width = e
+                .s("width")
+                .ok()
+                .and_then(Width::parse)
+                .unwrap_or(Width::from_bpe(bpe));
+            let mut params = KernelParams::new_w(block, width);
             params.kpack = e.u("kpack").map_err(CacheError::Json)?;
             params.mxu_m = e.u("mxu_m").map_err(CacheError::Json)?;
             params.mxu_n = e.u("mxu_n").map_err(CacheError::Json)?;
@@ -365,6 +381,12 @@ impl TuningCache {
             // before it carry no "kc" field and mean the default chunk
             // — a compatible read, not a format break.
             params.kc = e.u("kc").unwrap_or(KC_DEFAULT);
+            // Same deal for the per-width register block: absent
+            // means the baseline MR×NR.
+            params.reg = match (e.u("mr"), e.u("nr")) {
+                (Ok(mr), Ok(nr)) => RegBlock { mr, nr },
+                _ => RegBlock::BASE,
+            };
             let cfg = TunedConfig {
                 params,
                 pad,
@@ -484,15 +506,15 @@ mod tests {
             ShapeBucket::of(GemmShape::new(1000, 1000, 1000)),
             ShapeBucket::of(GemmShape::new(4000, 4000, 4000)),
         );
-        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
-        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        c.insert(&b1, Width::F32, &fp(), cfg(128, 1.0));
+        c.insert(&b2, Width::F32, &fp(), cfg(256, 2.0));
         // touch b1 so b2 becomes LRU
-        assert!(c.get(&b1, 4, &fp()).is_some());
-        c.insert(&b3, 4, &fp(), cfg(64, 3.0));
+        assert!(c.get(&b1, Width::F32, &fp()).is_some());
+        c.insert(&b3, Width::F32, &fp(), cfg(64, 3.0));
         assert_eq!(c.len(), 2);
-        assert!(c.get(&b2, 4, &fp()).is_none(), "b2 must be evicted");
-        assert!(c.get(&b1, 4, &fp()).is_some());
-        assert!(c.get(&b3, 4, &fp()).is_some());
+        assert!(c.get(&b2, Width::F32, &fp()).is_none(), "b2 must be evicted");
+        assert!(c.get(&b1, Width::F32, &fp()).is_some());
+        assert!(c.get(&b3, Width::F32, &fp()).is_some());
     }
 
     #[test]
@@ -500,11 +522,11 @@ mod tests {
         let mut c = TuningCache::new(8);
         let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
         let other = DeviceFingerprint("mi100-cu120".into());
-        c.insert(&b, 4, &fp(), cfg(128, 1.0));
-        assert!(c.get(&b, 4, &other).is_none());
-        c.insert(&b, 4, &other, cfg(256, 2.0));
-        assert_eq!(c.get(&b, 4, &fp()).unwrap().params.block.bm, 128);
-        assert_eq!(c.get(&b, 4, &other).unwrap().params.block.bm, 256);
+        c.insert(&b, Width::F32, &fp(), cfg(128, 1.0));
+        assert!(c.get(&b, Width::F32, &other).is_none());
+        c.insert(&b, Width::F32, &other, cfg(256, 2.0));
+        assert_eq!(c.get(&b, Width::F32, &fp()).unwrap().params.block.bm, 128);
+        assert_eq!(c.get(&b, Width::F32, &other).unwrap().params.block.bm, 256);
     }
 
     #[test]
@@ -513,11 +535,11 @@ mod tests {
         // lookups — the legal set and traffic model differ.
         let mut c = TuningCache::new(8);
         let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
-        c.insert(&b, 2, &fp(), cfg(256, 1.0));
-        assert!(c.get(&b, 4, &fp()).is_none());
-        c.insert(&b, 4, &fp(), cfg(128, 2.0));
-        assert_eq!(c.get(&b, 2, &fp()).unwrap().params.block.bm, 256);
-        assert_eq!(c.get(&b, 4, &fp()).unwrap().params.block.bm, 128);
+        c.insert(&b, Width::Bf16, &fp(), cfg(256, 1.0));
+        assert!(c.get(&b, Width::F32, &fp()).is_none());
+        c.insert(&b, Width::F32, &fp(), cfg(128, 2.0));
+        assert_eq!(c.get(&b, Width::Bf16, &fp()).unwrap().params.block.bm, 256);
+        assert_eq!(c.get(&b, Width::F32, &fp()).unwrap().params.block.bm, 128);
     }
 
     #[test]
@@ -532,17 +554,17 @@ mod tests {
         special.cus = 60;
         special.observed_s = 1.4e-3;
         special.observed_n = 5;
-        c.insert(&b1, 4, &fp(), cfg(128, 2.5e-3));
-        c.insert(&b2, 4, &fp(), special);
+        c.insert(&b1, Width::F32, &fp(), cfg(128, 2.5e-3));
+        c.insert(&b2, Width::F32, &fp(), special);
 
         let path = tmpfile("roundtrip");
         c.store(&path).unwrap();
         let mut back = TuningCache::load(&path, 8).unwrap();
         assert_eq!(back.len(), 2);
         // b2 was inserted last → MRU, survives as-is with every field
-        let got = back.get(&b2, 4, &fp()).unwrap();
+        let got = back.get(&b2, Width::F32, &fp()).unwrap();
         assert_eq!(got, special);
-        let got1 = back.get(&b1, 4, &fp()).unwrap();
+        let got1 = back.get(&b1, Width::F32, &fp()).unwrap();
         assert_eq!(got1.params.block.bm, 128);
         assert!((got1.measured_s - 2.5e-3).abs() < 1e-12);
         std::fs::remove_file(&path).unwrap();
@@ -631,8 +653,59 @@ mod tests {
         .unwrap();
         let mut back = TuningCache::load(&path, 4).unwrap();
         let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
-        let got = back.get(&b, 4, &fp()).expect("pre-KC entry must load");
+        let got = back.get(&b, Width::F32, &fp()).expect("pre-KC entry must load");
         assert_eq!(got.params.kc, KC_DEFAULT);
+        // pre-width fields default the same way: bpe determines the
+        // width, the register block falls back to the baseline
+        assert_eq!(got.params.width, Width::F32);
+        assert_eq!(got.params.reg, RegBlock::BASE);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn pre_width_bf16_entry_loads_at_bf16_with_base_reg() {
+        // Entries written when "bytes_per_elem": 2 was the only 16-bit
+        // spelling must come back as bf16 (2 always meant bf16) and
+        // answer bf16 lookups under the unchanged `@bpe2@` key.
+        let path = tmpfile("pre-width");
+        std::fs::write(
+            &path,
+            r#"{"version": 2, "entries": [{
+               "key": "512x512x512@bpe2@test-cu120-gf375-bw1600-lo6.0-io150",
+               "bm": 128, "bn": 128, "bk": 64, "kpack": 8,
+               "mxu_m": 128, "mxu_n": 128, "bytes_per_elem": 2,
+               "double_buffer": true, "pad": "none", "cus": 120,
+               "predicted_s": 0.1, "measured_s": 0.1, "observed_s": 0.0,
+               "observed_n": 0, "created_s": 1, "last_used_s": 1}]}"#,
+        )
+        .unwrap();
+        let mut back = TuningCache::load(&path, 4).unwrap();
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let got =
+            back.get(&b, Width::Bf16, &fp()).expect("pre-width entry loads");
+        assert_eq!(got.params.width, Width::Bf16);
+        assert_eq!(got.params.bytes_per_elem(), 2);
+        assert_eq!(got.params.reg, RegBlock::BASE);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn width_and_reg_round_trip_through_disk() {
+        let mut c = TuningCache::new(8);
+        let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
+        let mut wide = cfg(128, 1.0e-3);
+        wide.params =
+            KernelParams::new_w(BlockShape::new(128, 128, 64), Width::F16);
+        wide.params.reg = RegBlock::WIDE;
+        c.insert(&b, Width::F16, &fp(), wide);
+        let path = tmpfile("width-reg");
+        c.store(&path).unwrap();
+        let mut back = TuningCache::load(&path, 8).unwrap();
+        let got = back.get(&b, Width::F16, &fp()).unwrap();
+        assert_eq!(got.params.width, Width::F16);
+        assert_eq!(got.params.reg, RegBlock::WIDE);
+        // the f16 key segment is distinct from bf16's despite equal bpe
+        assert!(back.get(&b, Width::Bf16, &fp()).is_none());
         std::fs::remove_file(&path).unwrap();
     }
 
@@ -641,7 +714,7 @@ mod tests {
         let mut c = TuningCache::new(16);
         for i in 1..=10usize {
             let b = ShapeBucket::of(GemmShape::new(i * 128, 128, 128));
-            c.insert(&b, 4, &fp(), cfg(128, i as f64));
+            c.insert(&b, Width::F32, &fp(), cfg(128, i as f64));
         }
         let path = tmpfile("capacity");
         c.store(&path).unwrap();
@@ -653,11 +726,17 @@ mod tests {
     #[test]
     fn key_splits_back_into_parts() {
         let b = ShapeBucket::of(GemmShape::new(480, 512, 512));
-        let key = composite_key(&b, 4, &fp());
-        let (bucket, bpe, dev) = split_key(&key).unwrap();
-        assert_eq!(bucket, b);
-        assert_eq!(bpe, 4);
-        assert_eq!(dev, fp().as_str());
+        for w in Width::all() {
+            let key = composite_key(&b, w, &fp());
+            let (bucket, width, dev) = split_key(&key).unwrap();
+            assert_eq!(bucket, b);
+            assert_eq!(width, w);
+            assert_eq!(dev, fp().as_str());
+        }
+        // pre-width keys spell the f32/bf16 segments identically, so
+        // old persisted keys parse unchanged
+        assert!(composite_key(&b, Width::F32, &fp()).contains("@bpe4@"));
+        assert!(composite_key(&b, Width::Bf16, &fp()).contains("@bpe2@"));
         assert!(split_key("garbage").is_none());
         assert!(split_key("1x2x3@bpeX@dev").is_none());
     }
@@ -670,30 +749,30 @@ mod tests {
             ShapeBucket::of(GemmShape::new(1000, 1000, 1000)),
             ShapeBucket::of(GemmShape::new(4000, 4000, 4000)),
         );
-        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
-        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        c.insert(&b1, Width::F32, &fp(), cfg(128, 1.0));
+        c.insert(&b2, Width::F32, &fp(), cfg(256, 2.0));
         // peeking the LRU entry must NOT rescue it from eviction
-        assert_eq!(c.peek(&b1, 4, &fp()).unwrap().params.block.bm, 128);
-        c.insert(&b3, 4, &fp(), cfg(64, 3.0));
-        assert!(c.peek(&b1, 4, &fp()).is_none(), "b1 stayed LRU");
-        assert!(c.peek(&b2, 4, &fp()).is_some());
+        assert_eq!(c.peek(&b1, Width::F32, &fp()).unwrap().params.block.bm, 128);
+        c.insert(&b3, Width::F32, &fp(), cfg(64, 3.0));
+        assert!(c.peek(&b1, Width::F32, &fp()).is_none(), "b1 stayed LRU");
+        assert!(c.peek(&b2, Width::F32, &fp()).is_some());
     }
 
     #[test]
     fn update_mutates_in_place_and_touches() {
         let mut c = TuningCache::new(4);
         let b = ShapeBucket::of(GemmShape::new(512, 512, 512));
-        c.insert(&b, 4, &fp(), cfg(128, 1.0));
-        assert!(c.update(&b, 4, &fp(), |cfg| {
+        c.insert(&b, Width::F32, &fp(), cfg(128, 1.0));
+        assert!(c.update(&b, Width::F32, &fp(), |cfg| {
             cfg.observed_s = 0.8;
             cfg.observed_n = 1;
         }));
-        let got = c.get(&b, 4, &fp()).unwrap();
+        let got = c.get(&b, Width::F32, &fp()).unwrap();
         assert_eq!(got.observed_n, 1);
         assert!((got.observed_s - 0.8).abs() < 1e-12);
         // miss → false, nothing inserted
         let other = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
-        assert!(!c.update(&other, 4, &fp(), |_| unreachable!()));
+        assert!(!c.update(&other, Width::F32, &fp(), |_| unreachable!()));
         assert_eq!(c.len(), 1);
     }
 
@@ -702,8 +781,8 @@ mod tests {
         let mut c = TuningCache::new(8);
         let b1 = ShapeBucket::of(GemmShape::new(512, 512, 512));
         let b2 = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
-        c.insert(&b1, 4, &fp(), cfg(128, 1.0));
-        c.insert(&b2, 4, &fp(), cfg(256, 2.0));
+        c.insert(&b1, Width::F32, &fp(), cfg(128, 1.0));
+        c.insert(&b2, Width::F32, &fp(), cfg(256, 2.0));
         let policy = StalenessPolicy { max_age_s: 100, ..Default::default() };
         // "now" far in the future: everything ages out
         let report = c.sweep_stale(now_epoch_s() + 1000, &policy);
@@ -719,13 +798,13 @@ mod tests {
         drifty.predicted_s = 1.0e-3;
         drifty.observed_s = 3.0e-3; // 67% off
         drifty.observed_n = 5;
-        c.insert(&b, 4, &fp(), drifty);
+        c.insert(&b, Width::F32, &fp(), drifty);
         let fresh_b = ShapeBucket::of(GemmShape::new(4000, 4000, 4000));
         let mut ok = cfg(256, 2.0e-3);
         ok.predicted_s = 2.0e-3;
         ok.observed_s = 2.1e-3;
         ok.observed_n = 5;
-        c.insert(&fresh_b, 4, &fp(), ok);
+        c.insert(&fresh_b, Width::F32, &fp(), ok);
 
         let report = c.sweep_stale(now_epoch_s(), &StalenessPolicy::default());
         assert_eq!(report.aged_out, 0);
@@ -742,7 +821,7 @@ mod tests {
         let mut noisy = cfg(128, 1.0e-3);
         noisy.observed_s = 9.0e-3;
         noisy.observed_n = 1; // below min_observations
-        c.insert(&b, 4, &fp(), noisy);
+        c.insert(&b, Width::F32, &fp(), noisy);
         let report = c.sweep_stale(now_epoch_s(), &StalenessPolicy::default());
         assert!(report.drifted.is_empty());
         assert_eq!(report.fresh, 1);
@@ -754,15 +833,15 @@ mod tests {
         let mut b = TuningCache::new(8);
         let bucket = ShapeBucket::of(GemmShape::new(512, 512, 512));
         let other_dev = DeviceFingerprint("mi100-cu60".into());
-        a.insert(&bucket, 4, &fp(), cfg(128, 1.0));
-        b.insert(&bucket, 4, &other_dev, cfg(256, 2.0));
+        a.insert(&bucket, Width::F32, &fp(), cfg(128, 1.0));
+        b.insert(&bucket, Width::F32, &other_dev, cfg(256, 2.0));
         // overlapping key: a's copy wins
-        b.insert(&bucket, 4, &fp(), cfg(64, 9.0));
+        b.insert(&bucket, Width::F32, &fp(), cfg(64, 9.0));
         a.absorb(&b);
         assert_eq!(a.len(), 2);
-        assert_eq!(a.get(&bucket, 4, &fp()).unwrap().params.block.bm, 128);
+        assert_eq!(a.get(&bucket, Width::F32, &fp()).unwrap().params.block.bm, 128);
         assert_eq!(
-            a.get(&bucket, 4, &other_dev).unwrap().params.block.bm,
+            a.get(&bucket, Width::F32, &other_dev).unwrap().params.block.bm,
             256
         );
     }

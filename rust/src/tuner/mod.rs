@@ -293,7 +293,7 @@ impl Tuner {
         let bucket = ShapeBucket::of(shape);
         self.cache.lock().expect("tuner cache").get(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
         )
     }
@@ -306,7 +306,7 @@ impl Tuner {
         let bucket = ShapeBucket::of(shape);
         self.cache.lock().expect("tuner cache").peek(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
         )
     }
@@ -323,7 +323,7 @@ impl Tuner {
         let report = tune(bucket.representative(), &self.dev, &self.opts)?;
         self.cache.lock().expect("tuner cache").insert(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
             report.best,
         );
@@ -346,7 +346,7 @@ impl Tuner {
         let bucket = ShapeBucket::of(shape);
         let previous = self.cache.lock().expect("tuner cache").peek(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
         );
         let report = self.tune_and_insert(shape)?;
@@ -357,7 +357,7 @@ impl Tuner {
             {
                 self.cache.lock().expect("tuner cache").update(
                     &bucket,
-                    self.opts.bytes_per_elem,
+                    self.opts.width,
                     &self.fingerprint,
                     |cfg| {
                         cfg.observed_s = old.observed_s;
@@ -375,7 +375,7 @@ impl Tuner {
         let bucket = ShapeBucket::of(shape);
         self.cache.lock().expect("tuner cache").insert(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
             cfg,
         );
@@ -395,7 +395,7 @@ impl Tuner {
         let mut observations = 0u64;
         let updated = self.cache.lock().expect("tuner cache").update(
             &bucket,
-            self.opts.bytes_per_elem,
+            self.opts.width,
             &self.fingerprint,
             |cfg| {
                 drift = if cfg.predicted_s.is_finite() && cfg.predicted_s > 0.0
@@ -459,11 +459,11 @@ impl Tuner {
             cache.entries_for(&self.fingerprint)
         };
         for (key, cfg) in entries {
-            let Some((bucket, bpe, _)) = cache::split_key(&key) else {
+            let Some((bucket, width, _)) = cache::split_key(&key) else {
                 report.skipped += 1;
                 continue;
             };
-            if bpe != self.opts.bytes_per_elem {
+            if width != self.opts.width {
                 report.skipped += 1;
                 continue;
             }
@@ -490,7 +490,7 @@ impl Tuner {
                 let t = fresh.expect("non-stale implies a fresh probe");
                 self.cache.lock().expect("tuner cache").update(
                     &bucket,
-                    bpe,
+                    width,
                     &self.fingerprint,
                     |c| c.measured_s = t,
                 );

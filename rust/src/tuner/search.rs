@@ -14,6 +14,7 @@ use super::space::{enumerate, Candidate, PadPolicy, SpaceStats};
 use crate::decomp::{cdiv, GemmShape};
 use crate::exec::Stopwatch;
 use crate::gpu_sim::Device;
+use crate::kernel::Width;
 use crate::predict::{fit, CostModel};
 use std::time::Duration;
 
@@ -44,12 +45,33 @@ pub struct TuneOptions {
     /// Candidates promoted from predicted ranking to measurement.
     pub top_k: usize,
     pub budget: Budget,
-    pub bytes_per_elem: usize,
+    /// Element width the search runs at. One tune run explores one
+    /// width; callers sweeping the axis tune per width and compare
+    /// measured times (each width has its own cache key).
+    pub width: Width,
+    /// Price phase-2 candidates off wall-clock blocked-executor runs
+    /// on this host instead of the simulator (`streamk tune
+    /// --measure`). The simulator cannot see CPU-locality knobs — `kc`
+    /// and the register block price identically there — so real
+    /// measurement is what makes those axes discriminating.
+    pub measure_cpu: bool,
 }
 
 impl Default for TuneOptions {
     fn default() -> Self {
-        Self { top_k: 8, budget: Budget::default(), bytes_per_elem: 4 }
+        Self {
+            top_k: 8,
+            budget: Budget::default(),
+            width: Width::F32,
+            measure_cpu: false,
+        }
+    }
+}
+
+impl TuneOptions {
+    /// Streamed bytes per panel element at the search width.
+    pub fn bytes_per_elem(&self) -> usize {
+        self.width.bytes()
     }
 }
 
@@ -135,8 +157,8 @@ fn work_counts(shape: GemmShape, c: &Candidate) -> (usize, f64) {
     let max_iters = (dp_tiles / p) * ipt + cdiv(sk_iters, p);
     let bytes = (tiles * ipt * (block.bm * block.bk + block.bk * block.bn))
         as f64
-        * c.params.bytes_per_elem as f64
-        + (tiles * block.bm * block.bn * c.params.bytes_per_elem) as f64;
+        * c.params.bytes_per_elem() as f64
+        + (tiles * block.bm * block.bn * c.params.bytes_per_elem()) as f64;
     (max_iters, bytes)
 }
 
@@ -151,7 +173,7 @@ fn pad_penalty_bytes(shape: GemmShape, c: &Candidate) -> f64 {
     let mp = cdiv(m, block.bm) * block.bm;
     let np = cdiv(n, block.bn) * block.bn;
     let kp = cdiv(k, block.bk) * block.bk;
-    c.params.bytes_per_elem as f64
+    c.params.bytes_per_elem() as f64
         * ((mp * kp + kp * np) + (mp * kp - m * k) + (kp * np - k * n)) as f64
 }
 
@@ -183,21 +205,60 @@ pub fn measure(
     c: &Candidate,
 ) -> Option<f64> {
     let plan = crate::plan::global()
-        .get_or_build(shape, c.params.block, c.params.bytes_per_elem, c.cus)
+        .get_or_build_w(shape, c.params.block, c.params.width, c.cus)
         .ok()?;
     let pad_s = pad_penalty_bytes(shape, c) / dev.hbm_bw;
     Some(plan.time_on_prefix(dev) + pad_s)
+}
+
+/// Measure one candidate by actually running the blocked executor on
+/// this host (`streamk tune --measure`): real packing, real lanes, real
+/// caches — wall-clock truth for the axes the simulator is blind to
+/// (`kc`, register block, element width). The operand buffers are
+/// generated once per tune run and shared across candidates; `kc` and
+/// the register block thread through [`crate::kernel::ExecOpts`] so the
+/// cached plan descriptor is reused unmodified.
+pub fn measure_cpu(
+    a: &[f32],
+    b: &[f32],
+    shape: GemmShape,
+    c: &Candidate,
+) -> Option<f64> {
+    let plan = crate::plan::global()
+        .get_or_build_w(shape, c.params.block, c.params.width, c.cus)
+        .ok()?;
+    let desc = plan.exec();
+    let opts = crate::kernel::ExecOpts {
+        kc: Some(c.params.kc),
+        reg: Some(c.params.reg),
+        ..crate::kernel::ExecOpts::auto(desc.macs)
+    };
+    let sw = Stopwatch::start();
+    let out = crate::kernel::execute_opts(
+        a,
+        b,
+        desc,
+        crate::kernel::Epilogue::None,
+        &opts,
+    );
+    let t = sw.elapsed_secs();
+    std::hint::black_box(&out);
+    Some(t)
 }
 
 /// Fit the Block2Time cost model from probe launches of the default
 /// config at three K depths. Falls back to the analytic roofline slope
 /// when the fit is degenerate (e.g. a problem so small every probe
 /// collapses to one iteration).
-fn probe_cost_model(dev: &Device, shape: GemmShape, bpe: usize) -> CostModel {
+fn probe_cost_model(
+    dev: &Device,
+    shape: GemmShape,
+    width: Width,
+) -> CostModel {
     let default = Candidate {
-        params: crate::decomp::params::KernelParams::new(
+        params: crate::decomp::params::KernelParams::new_w(
             crate::decomp::BlockShape::default(),
-            bpe,
+            width,
         ),
         pad: PadPolicy::None,
         cus: dev.num_cus,
@@ -258,13 +319,33 @@ pub fn tune(
     }
     let sw = Stopwatch::start();
     let (mut candidates, space) =
-        enumerate(shape, dev.num_cus, opts.bytes_per_elem);
+        enumerate(shape, dev.num_cus, opts.width);
     if candidates.is_empty() {
         return Err(TuneError::NoLegalCandidate);
     }
 
+    // CPU-measure mode: deterministic operand buffers, generated once
+    // and shared by every phase-2 run (seeded from the shape so a
+    // re-tune of the same problem measures the same data).
+    let cpu_operands = opts.measure_cpu.then(|| {
+        let seed = 0x7A11_0C10u64
+            ^ ((shape.m as u64) << 42)
+            ^ ((shape.n as u64) << 21)
+            ^ shape.k as u64;
+        let mut rng = crate::prop::Rng::new(seed);
+        let a = rng.normal_f32_vec(shape.m * shape.k);
+        let b = rng.normal_f32_vec(shape.k * shape.n);
+        (a, b)
+    });
+    let run = |c: &Candidate| -> Option<f64> {
+        match &cpu_operands {
+            Some((a, b)) => measure_cpu(a, b, shape, c),
+            None => measure(dev, shape, c),
+        }
+    };
+
     // Phase 1: Block2Time-predicted ranking.
-    let model = probe_cost_model(dev, shape, opts.bytes_per_elem);
+    let model = probe_cost_model(dev, shape, opts.width);
     let mut ranked: Vec<(f64, Candidate)> = candidates
         .drain(..)
         .map(|c| (predicted(&model, dev, shape, &c), c))
@@ -274,29 +355,33 @@ pub fn tune(
     // The default config always competes in phase 2, so "tuned" can
     // never measure worse than the baseline.
     let default_cand = Candidate {
-        params: crate::decomp::params::KernelParams::new(
+        params: crate::decomp::params::KernelParams::new_w(
             crate::decomp::BlockShape::default(),
-            opts.bytes_per_elem,
+            opts.width,
         ),
         pad: PadPolicy::None,
         cus: dev.num_cus,
     };
     let default_s =
-        measure(dev, shape, &default_cand).ok_or(TuneError::NoLegalCandidate)?;
+        run(&default_cand).ok_or(TuneError::NoLegalCandidate)?;
 
     // Phase 2: measured refinement of the top-K under the budget.
     //
-    // Candidates differing only in `kc` price *and* measure identically
-    // on the simulator (the chunk length is a CPU-executor locality
-    // knob the cost model cannot see), so measurement promotes one
-    // representative per kc-equivalence class — the KC axis must not
-    // crowd distinct block configs out of the top-K budget.
+    // Candidates differing only in `kc` or the register block price
+    // *and* measure identically on the simulator (both are
+    // CPU-executor locality knobs the cost model cannot see), so
+    // simulator measurement promotes one representative per
+    // equivalence class — those axes must not crowd distinct block
+    // configs out of the top-K budget. CPU measurement *can* tell them
+    // apart (that is its whole point), so there the class includes
+    // them and every variant competes on wall-clock.
     let class_of = |c: &Candidate| {
         (
             c.params.block.effective(shape),
             c.params.double_buffer,
             c.pad,
             c.cus,
+            opts.measure_cpu.then(|| (c.params.kc, c.params.reg)),
         )
     };
     let top_k = opts.top_k.max(1);
@@ -330,7 +415,7 @@ pub fn tune(
             skipped += 1;
             continue;
         }
-        let Some(t) = measure(dev, shape, cand) else { continue };
+        let Some(t) = run(cand) else { continue };
         measured += 1;
         let better = match &best {
             Some(b) => t < b.measured_s,
@@ -446,6 +531,66 @@ mod tests {
         // generous slack: budget + a couple of simulator launches
         assert!(sw.elapsed_secs() < 10.0, "tune ran {}s", sw.elapsed_secs());
         assert!(r.elapsed_s < 10.0);
+    }
+
+    /// Satellite acceptance (`streamk tune --measure`): CPU pricing
+    /// runs the real blocked executor, so the kc / register-block
+    /// equivalence classes the simulator collapses become separately
+    /// measured candidates.
+    #[test]
+    fn cpu_measure_mode_makes_locality_axes_discriminating() {
+        let dev = mi200();
+        let shape = GemmShape::new(96, 128, 192); // small: µs-scale runs
+        let wide = TuneOptions { top_k: 32, ..TuneOptions::default() };
+        let sim = tune(shape, &dev, &wide).unwrap();
+        let cpu_opts = TuneOptions {
+            top_k: 32,
+            measure_cpu: true,
+            budget: Budget {
+                max_measurements: 64,
+                max_time: Duration::from_secs(20),
+            },
+            ..TuneOptions::default()
+        };
+        let cpu = tune(shape, &dev, &cpu_opts).unwrap();
+        // Finer equivalence classes ⇒ at least as many distinct
+        // measurements (kc variants no longer collapse).
+        assert!(
+            cpu.measured >= sim.measured,
+            "cpu measured {} < sim measured {}",
+            cpu.measured,
+            sim.measured
+        );
+        assert!(cpu.measured > 1, "CPU mode must measure real candidates");
+        assert!(cpu.best.measured_s > 0.0, "wall-clock, not simulated");
+        assert!(check_legal(&cpu));
+        // The never-loses-to-default guarantee holds on wall-clock too.
+        assert!(cpu.best.measured_s <= cpu.default_s * (1.0 + 1e-9));
+    }
+
+    /// Width is a tuner axis: a bf16 search returns bf16 params, prices
+    /// the halved panel traffic, and never loses to the f32 run on the
+    /// same (memory-bound-or-not) problem.
+    #[test]
+    fn width_axis_tunes_bf16_no_worse_than_f32() {
+        let dev = mi200();
+        let shape = GemmShape::new(1920, 2000, 2000);
+        let f = tune(shape, &dev, &TuneOptions::default()).unwrap();
+        let b = tune(
+            shape,
+            &dev,
+            &TuneOptions { width: Width::Bf16, ..TuneOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(b.best.params.width, Width::Bf16);
+        assert_eq!(f.best.params.width, Width::F32);
+        assert!(check_legal(&b));
+        assert!(
+            b.best.measured_s <= f.best.measured_s * (1.0 + 1e-9),
+            "bf16 {} vs f32 {}",
+            b.best.measured_s,
+            f.best.measured_s
+        );
     }
 
     #[test]

@@ -9,8 +9,9 @@
 //! reason.
 
 use crate::decomp::occupancy::dp_efficiency;
-use crate::decomp::params::{check, exploration_grid_bpe, KernelParams};
+use crate::decomp::params::{check, exploration_grid_w, KernelParams};
 use crate::decomp::{GemmShape, TileGrid};
+use crate::kernel::Width;
 use std::collections::BTreeMap;
 
 /// Artifact padding policy, as a typed axis (the router's "none" /
@@ -116,12 +117,12 @@ fn grid_sizes(tiles: usize, dev_cus: usize) -> Vec<usize> {
 pub fn enumerate(
     shape: GemmShape,
     dev_cus: usize,
-    bytes_per_elem: usize,
+    width: Width,
 ) -> (Vec<Candidate>, SpaceStats) {
     let mut stats = SpaceStats::default();
     let mut out = Vec::new();
     let mut seen = std::collections::HashSet::new();
-    for params in exploration_grid_bpe(bytes_per_elem) {
+    for params in exploration_grid_w(width) {
         // Legality depends only on the block parameters: check once per
         // grid point, count each rejection reason once per grid point.
         stats.block_points += 1;
@@ -143,6 +144,8 @@ pub fn enumerate(
                     eff_block,
                     params.double_buffer,
                     params.kc,
+                    params.width,
+                    params.reg,
                     pad,
                     cus,
                 )) {
@@ -165,7 +168,7 @@ mod tests {
     #[test]
     fn pruning_removes_the_majority_like_ck() {
         let (cands, stats) =
-            enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+            enumerate(GemmShape::new(3840, 4096, 4096), 120, Width::F32);
         assert!(stats.block_points > 0);
         assert!(!cands.is_empty());
         // the report: "the vast majority … fail to compile" — of the
@@ -199,17 +202,17 @@ mod tests {
     fn dedup_is_booked_separately_from_legality() {
         // Tiny shape: nearly every legal candidate collapses by dedup;
         // the gap must show up in `deduped`, not be blamed on legality.
-        let (_, stats) = enumerate(GemmShape::new(3, 9, 9), 120, 4);
+        let (_, stats) = enumerate(GemmShape::new(3, 9, 9), 120, Width::F32);
         assert!(stats.deduped > 0, "{stats:?}");
         assert_eq!(stats.legal + stats.deduped, stats.total);
         // the big shape has no dedup at all (all effective blocks distinct)
-        let (_, big) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        let (_, big) = enumerate(GemmShape::new(3840, 4096, 4096), 120, Width::F32);
         assert_eq!(big.deduped, 0, "{big:?}");
     }
 
     #[test]
     fn kc_axis_survives_pruning_and_dedup() {
-        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, Width::F32);
         let kcs: std::collections::BTreeSet<usize> =
             cands.iter().map(|c| c.params.kc).collect();
         assert!(
@@ -224,8 +227,28 @@ mod tests {
     }
 
     #[test]
+    fn reg_axis_survives_only_at_sixteen_bit_widths() {
+        use crate::kernel::RegBlock;
+        let shape = GemmShape::new(3840, 4096, 4096);
+        let (f32c, _) = enumerate(shape, 120, Width::F32);
+        assert!(f32c.iter().all(|c| c.params.reg == RegBlock::BASE));
+        let (bfc, _) = enumerate(shape, 120, Width::Bf16);
+        let regs: std::collections::BTreeSet<_> =
+            bfc.iter().map(|c| c.params.reg).collect();
+        assert!(
+            regs.contains(&RegBlock::BASE) && regs.contains(&RegBlock::WIDE),
+            "the per-width reg axis must survive dedup: {regs:?}"
+        );
+        // Every candidate carries the width it was enumerated at.
+        assert!(bfc.iter().all(|c| c.params.width == Width::Bf16));
+        // Halved bytes widen the legal set (more VMEM headroom) and the
+        // reg axis doubles the candidate list on top.
+        assert!(bfc.len() > f32c.len(), "{} vs {}", bfc.len(), f32c.len());
+    }
+
+    #[test]
     fn report_16x16_config_is_never_visited() {
-        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, 4);
+        let (cands, _) = enumerate(GemmShape::new(3840, 4096, 4096), 120, Width::F32);
         assert!(cands
             .iter()
             .all(|c| c.params.block != BlockShape::new(16, 16, 64)));
@@ -235,8 +258,8 @@ mod tests {
     fn tiny_shape_deduplicates_effective_blocks() {
         let tiny = GemmShape::new(3, 9, 9);
         let big = GemmShape::new(3840, 4096, 4096);
-        let (t, _) = enumerate(tiny, 120, 4);
-        let (b, _) = enumerate(big, 120, 4);
+        let (t, _) = enumerate(tiny, 120, Width::F32);
+        let (b, _) = enumerate(big, 120, Width::F32);
         // every legal block shrinks to (3,9,9): far fewer distinct points
         assert!(t.len() < b.len(), "{} vs {}", t.len(), b.len());
     }
