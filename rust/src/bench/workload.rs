@@ -515,6 +515,21 @@ pub fn scenario(name: &str) -> Option<Scenario> {
     catalogue().into_iter().find(|s| s.name == name)
 }
 
+/// Scale a shape for LIVE replay against a real `streamk serve
+/// --listen` daemon ([`crate::net::e2e`]). The interpreter backend
+/// executes every GEMM for real, so full-size scenario shapes would
+/// turn a CI smoke into minutes of arithmetic; dividing every dimension
+/// by 8 (floor 1) keeps the mix's skew — and the off-pow2 bucketing of
+/// the originals — at ~1/512 the flops.
+pub fn live_shape(s: &GemmShape) -> GemmShape {
+    GemmShape::new((s.m / 8).max(1), (s.n / 8).max(1), (s.k / 8).max(1))
+}
+
+/// [`live_shape`] over a whole shape mix.
+pub fn live_scale(shapes: &[GemmShape]) -> Vec<GemmShape> {
+    shapes.iter().map(live_shape).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -694,6 +709,23 @@ mod tests {
         assert!(scenario("no-such-scenario").is_none());
         let shrunk = scenario("flash-crowd").unwrap().with_requests(10);
         assert_eq!(shrunk.requests, 10);
+    }
+
+    #[test]
+    fn live_scaling_shrinks_catalogue_shapes() {
+        let scaled = live_scale(&scenario_shapes());
+        assert_eq!(scaled[0], GemmShape::new(60, 64, 64));
+        assert_eq!(scaled[1], GemmShape::new(240, 250, 250));
+        assert_eq!(scaled[2], GemmShape::new(120, 128, 128));
+        assert_eq!(scaled[3], GemmShape::new(480, 512, 512));
+        for s in &scaled {
+            assert!(!s.is_degenerate(), "{s:?} must stay servable");
+        }
+        // tiny dims floor at 1 instead of degenerating to 0
+        assert_eq!(
+            live_shape(&GemmShape::new(3, 2, 1)),
+            GemmShape::new(1, 1, 1)
+        );
     }
 
     #[test]

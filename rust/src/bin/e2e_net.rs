@@ -1,0 +1,80 @@
+//! `e2e_net` — process-level e2e driver for the TCP serving tier.
+//!
+//! Spawns REAL `streamk serve --listen` daemons on loopback and drives
+//! them through the wire protocol (see [`streamk::net::e2e`] for the
+//! individual runs and their gates):
+//!
+//! ```text
+//! e2e_net --smoke                      # 1 daemon + 1 client process
+//! e2e_net --kill-one                   # 2 daemons, one SIGKILLed mid-run
+//! e2e_net --scenario fault-injection   # live adversarial replay
+//! e2e_net --scenario flash-crowd
+//! e2e_net                              # all of the above
+//! ```
+//!
+//! The `streamk` binary must already be built in the same profile
+//! (`cargo build [--release]`); `STREAMK_BIN` overrides discovery.
+//! Exit code 0 only if every selected run passes.
+
+use streamk::net::e2e;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut smoke = args.iter().any(|a| a == "--smoke");
+    let mut kill_one = args.iter().any(|a| a == "--kill-one");
+    let mut scenarios: Vec<String> = args
+        .iter()
+        .zip(args.iter().skip(1))
+        .filter(|(a, _)| a.as_str() == "--scenario")
+        .map(|(_, name)| name.clone())
+        .collect();
+    // cargo bench forwards `--bench`; ignore it like the other e2e
+    // drivers. No selection = run everything.
+    let selected = smoke || kill_one || !scenarios.is_empty();
+    if !selected {
+        smoke = true;
+        kill_one = true;
+        scenarios =
+            vec!["fault-injection".to_string(), "flash-crowd".to_string()];
+    }
+
+    let bin = match e2e::find_streamk_bin() {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("e2e_net: {e}");
+            std::process::exit(2);
+        }
+    };
+    println!("e2e_net: driving {}", bin.display());
+
+    let mut failures = 0usize;
+    let mut report = |what: &str, r: Result<String, String>| match r {
+        Ok(msg) => println!("PASS {what}: {msg}"),
+        Err(e) => {
+            failures += 1;
+            eprintln!("FAIL {what}: {e}");
+        }
+    };
+
+    if smoke {
+        report("smoke", e2e::run_smoke(&bin));
+    }
+    if kill_one {
+        report("kill-one", e2e::run_kill_one(&bin));
+    }
+    for name in &scenarios {
+        // Live replay executes every GEMM for real; cap the offered
+        // load well under the sim-scale request counts.
+        report(
+            &format!("scenario {name}"),
+            e2e::run_scenario_live(&bin, name, 40),
+        );
+    }
+    drop(report);
+
+    if failures > 0 {
+        eprintln!("e2e_net: {failures} run(s) FAILED");
+        std::process::exit(1);
+    }
+    println!("e2e_net OK");
+}

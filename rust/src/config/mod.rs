@@ -59,6 +59,17 @@ pub struct Settings {
     /// (`p99_ms<=5,shed<=0.05,ape<=0.5,eff>=0.3`); `None` disables the
     /// watchdog.
     pub slo: Option<String>,
+    /// TCP listen address (`host:port`, port 0 = ephemeral); `None`
+    /// keeps `serve` on the classic in-process synthetic stream.
+    pub listen: Option<String>,
+    /// Serving-tier admission bound: shed (typed SHED response) once
+    /// this many requests are outstanding — the same
+    /// [`crate::fleet::admits`] predicate the open-loop fleet simulator
+    /// applies. 0 admits everything.
+    pub admission_bound: usize,
+    /// Server-side deadline applied to requests that carry none
+    /// (milliseconds; 0 = unlimited).
+    pub default_deadline_ms: u64,
 }
 
 impl Default for Settings {
@@ -88,6 +99,9 @@ impl Default for Settings {
             metrics_interval_ms: 500,
             metrics_window: 256,
             slo: None,
+            listen: None,
+            admission_bound: 0,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -249,6 +263,21 @@ impl Settings {
                     val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
                 )
             }
+            "listen" => {
+                self.listen = Some(
+                    val.as_str().ok_or_else(|| bad("want string"))?.to_string(),
+                )
+            }
+            "admission_bound" => {
+                self.admission_bound =
+                    val.as_usize().ok_or_else(|| bad("want usize"))?
+            }
+            "default_deadline_ms" => {
+                self.default_deadline_ms = val
+                    .as_usize()
+                    .ok_or_else(|| bad("want non-negative integer"))?
+                    as u64
+            }
             other => {
                 return Err(ConfigError::Bad {
                     key: other.into(),
@@ -340,6 +369,16 @@ impl Settings {
         if let Some(v) = args.get("slo") {
             self.slo = Some(v.to_string());
         }
+        if let Some(v) = args.get("listen") {
+            self.listen = Some(v.to_string());
+        }
+        if let Some(v) = parse_usize("admission-bound")? {
+            self.admission_bound = v;
+        }
+        if let Some(v) = args.get("default-deadline-ms") {
+            self.default_deadline_ms =
+                v.parse().map_err(|_| as_bad("default-deadline-ms", v))?;
+        }
         self.validate()?;
         Ok(self)
     }
@@ -402,6 +441,11 @@ impl Settings {
         if let Some(spec) = &self.slo {
             if let Err(e) = crate::coordinator::slo::parse_rules(spec) {
                 return bad("slo", &e);
+            }
+        }
+        if let Some(addr) = &self.listen {
+            if !addr.contains(':') {
+                return bad("listen", "must be host:port (port 0 = ephemeral)");
             }
         }
         Ok(())
@@ -700,6 +744,48 @@ mod tests {
         assert!(bad.validate().is_err());
         bad.metrics_interval_ms = 1;
         bad.metrics_window = 0;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn serving_tier_keys_layer_and_validate() {
+        let mut s = Settings::default();
+        assert!(s.listen.is_none());
+        assert_eq!(s.admission_bound, 0);
+        assert_eq!(s.default_deadline_ms, 0);
+        let v = json::parse(
+            r#"{"listen": "127.0.0.1:7070", "admission_bound": 64,
+                "default_deadline_ms": 250}"#,
+        )
+        .unwrap();
+        s.apply_json(&v).unwrap();
+        assert_eq!(s.listen.as_deref(), Some("127.0.0.1:7070"));
+        assert_eq!(s.admission_bound, 64);
+        assert_eq!(s.default_deadline_ms, 250);
+        s.validate().unwrap();
+
+        let cmd = Command::new("t", "t")
+            .opt(Opt::value("listen", None, ""))
+            .opt(Opt::value("admission-bound", None, ""))
+            .opt(Opt::value("default-deadline-ms", None, ""));
+        let args = cmd
+            .parse(&[
+                "--listen".into(),
+                "0.0.0.0:0".into(),
+                "--admission-bound".into(),
+                "8".into(),
+                "--default-deadline-ms".into(),
+                "100".into(),
+            ])
+            .unwrap();
+        let s = s.apply_cli(&args).unwrap();
+        assert_eq!(s.listen.as_deref(), Some("0.0.0.0:0"));
+        assert_eq!(s.admission_bound, 8);
+        assert_eq!(s.default_deadline_ms, 100);
+
+        // a listen address without a port is a config error
+        let mut bad = Settings::default();
+        bad.listen = Some("localhost".into());
         assert!(bad.validate().is_err());
     }
 }

@@ -37,6 +37,10 @@ pub struct GemmResponse {
     pub result: Result<Vec<f32>, String>,
     /// Which artifact served it (observability: the router's decision).
     pub artifact: String,
+    /// Fleet device the scheduler placed it on — the serving tier
+    /// forwards this on the wire so clients can attribute observed
+    /// latency to the right device's tuner cache.
+    pub device: usize,
     pub queue_s: f64,
     pub execute_s: f64,
 }

@@ -384,6 +384,27 @@ impl CoordinatorHandle {
         }
     }
 
+    /// Submit MLP activations without blocking; sheds load when the
+    /// queue is full (returns `None`) — the serving tier's SHED path.
+    pub fn try_submit_mlp(
+        &self,
+        rows: usize,
+        x: Vec<f32>,
+    ) -> Option<Receiver<MlpResponse>> {
+        let (reply, waiter) = ReplyTo::pair();
+        let req = MlpRequest { id: self.id(), rows, x, reply };
+        match self.tx.try_send(Work::Mlp(req, Instant::now())) {
+            Ok(()) => {
+                self.metrics.on_submit();
+                Some(waiter)
+            }
+            Err(_) => {
+                self.metrics.on_shed();
+                None
+            }
+        }
+    }
+
     /// Submit `rows` MLP activations of width d_in.
     pub fn submit_mlp(&self, rows: usize, x: Vec<f32>) -> Receiver<MlpResponse> {
         let (reply, waiter) = ReplyTo::pair();
@@ -546,6 +567,7 @@ fn handle_gemm(
                         id,
                         result: Ok(outs.swap_remove(0)),
                         artifact,
+                        device,
                         queue_s,
                         execute_s,
                     });
@@ -557,6 +579,7 @@ fn handle_gemm(
                         id,
                         result: Err(e.to_string()),
                         artifact,
+                        device,
                         queue_s,
                         execute_s: 0.0,
                     });
@@ -570,6 +593,7 @@ fn handle_gemm(
                 id,
                 result: Err(e.to_string()),
                 artifact: String::new(),
+                device,
                 queue_s,
                 execute_s: 0.0,
             });

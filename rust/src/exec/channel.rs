@@ -41,6 +41,12 @@ pub enum TryRecvError {
     Disconnected,
 }
 
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeoutError {
+    Timeout,
+    Disconnected,
+}
+
 /// Create a bounded channel with the given capacity (> 0).
 pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
     assert!(capacity > 0, "channel capacity must be positive");
@@ -137,6 +143,42 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Blocking receive with a deadline — the network serving tier's
+    /// per-request deadline primitive. `Timeout` when nothing arrived
+    /// within `dur`; `Disconnected` mirrors [`Receiver::recv`].
+    pub fn recv_timeout(
+        &self,
+        dur: std::time::Duration,
+    ) -> Result<T, RecvTimeoutError> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut state = self.shared.queue.lock().expect("channel poisoned");
+        loop {
+            if let Some(item) = state.items.pop_front() {
+                self.shared.not_full.notify_one();
+                return Ok(item);
+            }
+            if state.senders == 0 {
+                return Err(RecvTimeoutError::Disconnected);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(RecvTimeoutError::Timeout);
+            }
+            let (guard, res) = self
+                .shared
+                .not_empty
+                .wait_timeout(state, deadline - now)
+                .expect("channel poisoned");
+            state = guard;
+            if res.timed_out() && state.items.is_empty() {
+                if state.senders == 0 {
+                    return Err(RecvTimeoutError::Disconnected);
+                }
+                return Err(RecvTimeoutError::Timeout);
+            }
+        }
+    }
+
     pub fn try_recv(&self) -> Result<T, TryRecvError> {
         let mut state = self.shared.queue.lock().expect("channel poisoned");
         if let Some(item) = state.items.pop_front() {
@@ -216,6 +258,26 @@ mod tests {
         handle.join().unwrap().unwrap();
         assert_eq!(rx.recv().unwrap(), 2);
         assert_eq!(rx.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn recv_timeout_times_out_then_delivers() {
+        let (tx, rx) = bounded::<i32>(2);
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(10)),
+            Err(RecvTimeoutError::Timeout)
+        );
+        let handle = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            tx.send(9).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_secs(10)), Ok(9));
+        handle.join().unwrap();
+        // all senders gone -> Disconnected, not Timeout
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(5)),
+            Err(RecvTimeoutError::Disconnected)
+        );
     }
 
     #[test]

@@ -8,7 +8,9 @@
 mod channel;
 mod pool;
 
-pub use channel::{bounded, Receiver, RecvError, SendError, Sender, TryRecvError};
+pub use channel::{
+    bounded, Receiver, RecvError, RecvTimeoutError, SendError, Sender, TryRecvError,
+};
 pub use pool::{pool_map, scope_map_with, ThreadPool};
 
 use std::sync::atomic::{AtomicBool, Ordering};

@@ -58,7 +58,7 @@ pub use scenario::{
 };
 pub use scheduler::Placement;
 pub use sim::{
-    gen_open_trace, gen_trace, run_trace, run_trace_open,
+    admits, gen_open_trace, gen_trace, run_trace, run_trace_open,
     run_trace_open_adaptive, run_trace_open_bounded, warm, OpenReport,
     PlacementPolicy, ShapeMix, SimReport, TimedRequest,
 };

@@ -387,6 +387,16 @@ pub fn run_trace_open(
 /// its arrival instant is rejected instead of queued, and the shed
 /// count/rate is reported next to the queue-delay stats. 0 means admit
 /// everything (identical to the unbounded replay).
+/// The admission predicate shared by the open-loop fleet simulator and
+/// the TCP serving tier (`net::server`): with `bound == 0` everything
+/// is admitted; otherwise a request is admitted only while fewer than
+/// `bound` requests are outstanding. Keeping sim and daemon on one
+/// predicate means the simulated shed behaviour *is* the live SHED
+/// behaviour.
+pub fn admits(outstanding: usize, bound: usize) -> bool {
+    bound == 0 || outstanding < bound
+}
+
 pub fn run_trace_open_bounded(
     fleet: &Fleet,
     trace: &[TimedRequest],
@@ -484,7 +494,7 @@ pub fn run_trace_open_adaptive(
         while q.front().is_some_and(|&done| done <= at_s) {
             q.pop_front();
         }
-        let this_shed = bound > 0 && q.len() >= bound;
+        let this_shed = !admits(q.len(), bound);
         if this_shed {
             shed += 1;
             window_shed += 1;

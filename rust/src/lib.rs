@@ -33,6 +33,7 @@ pub mod fleet;
 pub mod gpu_sim;
 pub mod json;
 pub mod kernel;
+pub mod net;
 pub mod plan;
 pub mod predict;
 pub mod prop;

@@ -48,6 +48,7 @@ fn main() {
     let sub = argv.remove(0);
     let code = match sub.as_str() {
         "serve" => cmd_serve(&argv),
+        "client" => cmd_client(&argv),
         "fleet" => cmd_fleet(&argv),
         "tune" => cmd_tune(&argv),
         "plan" => cmd_plan(&argv),
@@ -73,13 +74,15 @@ fn main() {
 fn top_usage() -> String {
     "streamk — Stream-K GEMM serving & exploration framework\n\
      \n\
-     usage: streamk <serve|fleet|tune|plan|sim|sweep|route|trace|profile|intensity|info> [options]\n\
+     usage: streamk <serve|client|fleet|tune|plan|sim|sweep|route|trace|profile|intensity|info> [options]\n\
      \n\
      quickstart:\n\
        streamk tune --suite --cache tuner_cache.json     # warm Table-1 suite\n\
        streamk tune --revalidate --cache tuner_cache.json # staleness sweep\n\
        streamk serve --tuner-cache tuner_cache.json      # serve with warm cache\n\
        streamk serve --trace-out trace.json              # Perfetto-loadable spans\n\
+       streamk serve --listen 127.0.0.1:7070             # TCP daemon (wire protocol)\n\
+       streamk client --connect 127.0.0.1:7070           # drive a daemon over TCP\n\
        streamk fleet --requests 200                      # heterogeneous fleet sim\n\
        streamk fleet --open-rate 500                     # open-loop arrivals\n\
        streamk plan --m 1920 --n 2000 --k 2000           # inspect a cached plan\n\
@@ -191,7 +194,26 @@ fn cmd_serve(argv: &[String]) -> i32 {
             "persisted plan-cache hwm file: sizes the cache at startup, \
              updated at shutdown (empty to disable)",
         ))
+        .opt(Opt::value(
+            "listen",
+            None,
+            "run as a TCP daemon on this address (host:port, port 0 = \
+             ephemeral) instead of the synthetic stream; drains \
+             gracefully on SIGINT/SIGTERM or a wire DRAIN frame",
+        ))
+        .opt(Opt::value(
+            "admission-bound",
+            None,
+            "shed (SHED status) once this many requests are outstanding \
+             (0 = admit everything)",
+        ))
+        .opt(Opt::value(
+            "default-deadline-ms",
+            None,
+            "deadline applied to requests that carry none (0 = unlimited)",
+        ))
         .example("streamk serve --requests 256 --max-batch 32")
+        .example("streamk serve --listen 127.0.0.1:7070 --admission-bound 64")
         .example("streamk serve --tuner-cache tuner_cache.json")
         .example("streamk serve --fleet mi200,mi100 --requests 256")
         .example("streamk serve --trace-out trace.json --trace-sample 4")
@@ -287,6 +309,19 @@ fn cmd_serve(argv: &[String]) -> i32 {
 
     let coord = Coordinator::start_fleet(engines, devices, &settings);
     let handle = coord.handle.clone();
+
+    // ── TCP daemon mode (`--listen`): serve the wire protocol until a
+    // drain signal instead of the in-process synthetic stream. ──
+    if settings.listen.is_some() {
+        return run_net_daemon(
+            coord,
+            &settings,
+            &hwm_path,
+            args.get("metrics-out"),
+            trace_out.as_deref(),
+        );
+    }
+
     let mut rng = streamk::prop::Rng::new(42);
     let mut waiters = Vec::new();
     for _ in 0..requests {
@@ -313,8 +348,87 @@ fn cmd_serve(argv: &[String]) -> i32 {
         snap.throughput_rps,
     );
     println!("{}", plan_stats_line(&snap.plan));
+    flush_serve_outputs(
+        coord,
+        &snap,
+        &hwm_path,
+        args.get("metrics-out"),
+        trace_out.as_deref(),
+    );
+    if ok == requests {
+        0
+    } else {
+        1
+    }
+}
+
+/// Run the coordinator as a TCP daemon until drained (SIGINT/SIGTERM
+/// or a wire DRAIN frame), then flush state and report conservation.
+fn run_net_daemon(
+    coord: Coordinator,
+    settings: &Settings,
+    hwm_path: &str,
+    metrics_out: Option<&str>,
+    trace_out: Option<&str>,
+) -> i32 {
+    use streamk::net::server::signal;
+    use streamk::net::{Server, ServerConfig};
+    signal::install();
+    let cfg = ServerConfig {
+        listen: settings.listen.clone().expect("daemon mode needs listen"),
+        admission_bound: settings.admission_bound,
+        default_deadline_ms: settings.default_deadline_ms,
+    };
+    let server =
+        match Server::start(coord.handle.clone(), coord.fleet().clone(), &cfg)
+        {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("cannot listen on {}: {e}", cfg.listen);
+                coord.shutdown();
+                return 1;
+            }
+        };
+    println!("listening on {}", server.local_addr());
+    if cfg.admission_bound > 0 {
+        println!("admission bound: {} outstanding", cfg.admission_bound);
+    }
+    if cfg.default_deadline_ms > 0 {
+        println!("default deadline: {} ms", cfg.default_deadline_ms);
+    }
+    while !server.is_draining() {
+        if signal::triggered() {
+            server.request_drain();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    eprintln!("drain: stopped accepting, finishing in-flight requests");
+    let net_snap = server.join();
+    let snap = coord.handle.metrics().snapshot();
+    println!("{}", net_snap.summary_line());
+    println!("{}", plan_stats_line(&snap.plan));
+    flush_serve_outputs(coord, &snap, hwm_path, metrics_out, trace_out);
+    if net_snap.conserved() {
+        0
+    } else {
+        eprintln!("error: request conservation violated");
+        1
+    }
+}
+
+/// The serve shutdown path shared by the synthetic stream and the TCP
+/// daemon. Every persistence step degrades to a stderr warning on an
+/// unwritable path — drain must always complete.
+fn flush_serve_outputs(
+    coord: Coordinator,
+    snap: &streamk::coordinator::MetricsSnapshot,
+    hwm_path: &str,
+    metrics_out: Option<&str>,
+    trace_out: Option<&str>,
+) {
     if !hwm_path.is_empty() {
-        match streamk::plan::save_hwm(Path::new(&hwm_path), &snap.plan) {
+        match streamk::plan::save_hwm(Path::new(hwm_path), &snap.plan) {
             Ok(()) => println!(
                 "plan-cache hwm persisted to {hwm_path} (recommended \
                  capacity {}; the next serve starts there)",
@@ -331,43 +445,277 @@ fn cmd_serve(argv: &[String]) -> i32 {
             println!("  {}", r.summary());
         }
     }
-    if let Some(path) = args.get("metrics-out") {
+    if let Some(path) = metrics_out {
         // Final snapshot plus the flight-recorder timeline: the last
         // `--metrics-window` periodic samples, each timestamped.
         let doc = streamk::json::obj(vec![
             ("final", snap.to_json()),
             ("timeline", coord.recorder().to_json()),
         ]);
-        std::fs::write(path, streamk::json::to_string_pretty(&doc))
-            .expect("write metrics");
-        println!(
-            "metrics written to {path} ({} timeline samples)",
-            coord.recorder().len()
-        );
+        match std::fs::write(path, streamk::json::to_string_pretty(&doc)) {
+            Ok(()) => println!(
+                "metrics written to {path} ({} timeline samples)",
+                coord.recorder().len()
+            ),
+            Err(e) => {
+                eprintln!("warning: cannot write metrics to {path}: {e}")
+            }
+        }
     }
     coord.shutdown();
-    if let Some(path) = &trace_out {
+    if let Some(path) = trace_out {
         trace::set_enabled(false);
         let (events, threads, dropped) = trace::drain();
         let doc = trace::chrome_trace_json(&events, &threads);
-        std::fs::write(path, streamk::json::to_string_pretty(&doc))
-            .expect("write trace");
+        match std::fs::write(path, streamk::json::to_string_pretty(&doc)) {
+            Ok(()) => println!(
+                "trace: {} spans across {} threads written to {path}{} — \
+                 load at ui.perfetto.dev",
+                events.len(),
+                threads.len(),
+                if dropped > 0 {
+                    format!(" ({dropped} dropped to ring overflow)")
+                } else {
+                    String::new()
+                },
+            ),
+            Err(e) => {
+                eprintln!("warning: cannot write trace to {path}: {e}")
+            }
+        }
+    }
+}
+
+fn cmd_client(argv: &[String]) -> i32 {
+    use std::time::Duration;
+    use streamk::net::{Client, ClientError, ClientOptions, RetryPolicy, Status};
+
+    let cmd = Command::new(
+        "streamk client",
+        "drive a `streamk serve --listen` daemon over the wire protocol",
+    )
+    .opt(Opt::value(
+        "connect",
+        None,
+        "comma-separated server list, e.g. 127.0.0.1:7070[,host:port...] (required)",
+    ))
+    .opt(Opt::value("requests", Some("64"), "requests to send"))
+    .opt(Opt::value("mode", Some("gemm"), "request kind: gemm | mlp"))
+    .opt(Opt::value("m", Some("64"), "GEMM M dimension"))
+    .opt(Opt::value("n", Some("64"), "GEMM N dimension"))
+    .opt(Opt::value("k", Some("64"), "GEMM K dimension"))
+    .opt(Opt::value("rows", Some("8"), "MLP batch rows (mode mlp)"))
+    .opt(Opt::value(
+        "deadline-ms",
+        Some("0"),
+        "per-request deadline carried on the wire (0 = server default)",
+    ))
+    .opt(Opt::value("timeout-ms", Some("30000"), "client-side wait per attempt"))
+    .opt(Opt::value("retries", Some("4"), "max attempts per request (bounded)"))
+    .opt(Opt::value(
+        "backoff-base-ms",
+        Some("10"),
+        "first retry backoff; doubles each retry, jittered 50-100%",
+    ))
+    .opt(Opt::value("backoff-cap-ms", Some("500"), "backoff ceiling"))
+    .opt(Opt::value(
+        "pipeline",
+        Some("0"),
+        "pipelined burst size on one connection (0 = one request at a time)",
+    ))
+    .opt(Opt::value("seed", Some("42"), "jitter RNG seed"))
+    .opt(Opt::flag(
+        "drain",
+        "send DRAIN to every server after the run (graceful shutdown)",
+    ))
+    .example("streamk client --connect 127.0.0.1:7070 --requests 128")
+    .example("streamk client --connect 127.0.0.1:7070,127.0.0.1:7071 --retries 4")
+    .example("streamk client --connect 127.0.0.1:7070 --requests 0 --drain");
+    let args = parse_or_exit(&cmd, argv);
+
+    let servers: Vec<String> = args
+        .get("connect")
+        .map(|list| {
+            list.split(',')
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    if servers.is_empty() {
+        eprintln!("error: --connect is required\n\n{}", cmd.usage());
+        return 2;
+    }
+    let requests = args.usize("requests").unwrap_or(64);
+    let mode = args.str("mode").to_string();
+    if mode != "gemm" && mode != "mlp" {
+        eprintln!("error: --mode must be gemm or mlp, got {mode:?}");
+        return 2;
+    }
+    let m = args.usize("m").unwrap_or(64) as u32;
+    let n = args.usize("n").unwrap_or(64) as u32;
+    let k = args.usize("k").unwrap_or(64) as u32;
+    let rows = args.usize("rows").unwrap_or(8) as u32;
+    let deadline = match args.usize("deadline-ms").unwrap_or(0) {
+        0 => None,
+        ms => Some(Duration::from_millis(ms as u64)),
+    };
+    let pipeline = args.usize("pipeline").unwrap_or(0);
+    let opts = ClientOptions {
+        timeout: Duration::from_millis(
+            args.usize("timeout-ms").unwrap_or(30_000) as u64
+        ),
+        retry: RetryPolicy {
+            max_attempts: args.usize("retries").unwrap_or(4).max(1) as u32,
+            base: Duration::from_millis(
+                args.usize("backoff-base-ms").unwrap_or(10) as u64,
+            ),
+            cap: Duration::from_millis(
+                args.usize("backoff-cap-ms").unwrap_or(500) as u64,
+            ),
+        },
+        seed: args.usize("seed").unwrap_or(42) as u64,
+        ..ClientOptions::default()
+    };
+    let mut client = Client::new(servers.clone(), opts);
+
+    // All-ones operands make correctness exact: every element of
+    // ones(m×k)·ones(k×n) is exactly k in f32 regardless of the
+    // kernel's summation order, so "wrong result" is a strict compare.
+    let (mut ok, mut wrong, mut exhausted) = (0usize, 0usize, 0usize);
+    let (mut deadline_hit, mut rejected) = (0usize, 0usize);
+    let mut rtt_total = Duration::ZERO;
+    let mut note_rejected = |status: Status, msg: &str| match status {
+        Status::DeadlineExceeded => {
+            deadline_hit += 1;
+        }
+        _ => {
+            rejected += 1;
+            eprintln!("rejected: {status}: {msg}");
+        }
+    };
+
+    if mode == "gemm" {
+        let a = vec![1.0f32; m as usize * k as usize];
+        let b = vec![1.0f32; k as usize * n as usize];
+        let expect = k as f32;
+        let want = m as usize * n as usize;
+        let verify = |c: &[f32]| c.len() == want && c.iter().all(|&v| v == expect);
+        if pipeline > 0 {
+            let mut sent = 0usize;
+            while sent < requests {
+                let burst = pipeline.min(requests - sent);
+                let reqs: Vec<_> = (0..burst)
+                    .map(|_| (m, n, k, a.clone(), b.clone()))
+                    .collect();
+                match client.gemm_pipelined(&reqs, deadline) {
+                    Ok(resps) => {
+                        for r in resps {
+                            if r.status == Status::Ok {
+                                if verify(&r.floats()) {
+                                    ok += 1;
+                                } else {
+                                    wrong += 1;
+                                }
+                            } else {
+                                note_rejected(r.status, &r.message());
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("pipelined burst of {burst} failed: {e}");
+                        exhausted += burst;
+                    }
+                }
+                sent += burst;
+            }
+        } else {
+            for i in 0..requests {
+                match client.gemm(m, n, k, &a, &b, deadline) {
+                    Ok(reply) => {
+                        rtt_total += reply.rtt;
+                        if verify(&reply.c) {
+                            ok += 1;
+                        } else {
+                            wrong += 1;
+                            eprintln!("request {i}: wrong result");
+                        }
+                    }
+                    Err(ClientError::Rejected { status, message }) => {
+                        note_rejected(status, &message);
+                    }
+                    Err(e) => {
+                        exhausted += 1;
+                        if exhausted <= 3 {
+                            eprintln!("request {i}: {e}");
+                        }
+                    }
+                }
+            }
+        }
+    } else {
+        let d = streamk::coordinator::mlp_params();
+        let x = vec![1.0f32; rows as usize * d.d_in];
+        let want = rows as usize * d.d_out;
+        for i in 0..requests {
+            match client.mlp(rows, d.d_in as u32, d.d_out as u32, &x, deadline)
+            {
+                Ok((y, rtt, _)) => {
+                    rtt_total += rtt;
+                    if y.len() == want && y.iter().all(|v| v.is_finite()) {
+                        ok += 1;
+                    } else {
+                        wrong += 1;
+                        eprintln!("request {i}: wrong result shape");
+                    }
+                }
+                Err(ClientError::Rejected { status, message }) => {
+                    note_rejected(status, &message);
+                }
+                Err(e) => {
+                    exhausted += 1;
+                    if exhausted <= 3 {
+                        eprintln!("request {i}: {e}");
+                    }
+                }
+            }
+        }
+    }
+    drop(note_rejected);
+
+    if args.flag("drain") {
+        for (i, addr) in servers.iter().enumerate() {
+            match client.drain_server(i) {
+                Ok(()) => println!("drain acknowledged by {addr}"),
+                Err(e) => eprintln!("warning: drain {addr} failed: {e}"),
+            }
+        }
+    }
+
+    let s = &client.stats;
+    println!(
+        "client: sent={requests} ok={ok} wrong={wrong} exhausted={exhausted} \
+         deadline={deadline_hit} rejected={rejected} attempts={} retries={} \
+         failovers={} sheds_seen={} io_errors={} observes={}",
+        s.attempts,
+        s.retries,
+        s.failovers,
+        s.sheds_seen,
+        s.io_errors,
+        s.observes_sent,
+    );
+    if ok > 0 {
         println!(
-            "trace: {} spans across {} threads written to {path}{} — \
-             load at ui.perfetto.dev",
-            events.len(),
-            threads.len(),
-            if dropped > 0 {
-                format!(" ({dropped} dropped to ring overflow)")
-            } else {
-                String::new()
-            },
+            "client: mean rtt {:.3} ms over {ok} ok responses",
+            rtt_total.as_secs_f64() * 1e3 / ok as f64
         );
     }
-    if ok == requests {
-        0
-    } else {
+    let failures = wrong + exhausted + rejected;
+    if failures > 0 {
+        eprintln!("error: {failures} request(s) failed");
         1
+    } else {
+        0
     }
 }
 

@@ -1,0 +1,636 @@
+//! Client library for the TCP serving tier: per-request timeout,
+//! jittered exponential backoff, bounded retries, and failover across
+//! a server list.
+//!
+//! Retry semantics follow the status taxonomy: SHED and INTERNAL are
+//! server-side conditions another replica may not share, so they (and
+//! transport errors) rotate to the next server and retry with backoff;
+//! BAD_REQUEST and DEADLINE_EXCEEDED travel with the request and are
+//! surfaced immediately ([`ClientError::Rejected`]). After every OK
+//! the client fire-and-forgets an OBSERVE frame carrying the measured
+//! round-trip latency, closing the paper's Block2Time loop with
+//! *client-observed* numbers instead of simulated ones.
+
+use std::fmt;
+use std::io::Write as _;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::{Duration, Instant};
+
+use super::wire::{
+    decode_frame, encode_request, read_frame, FrameRead, Message, Request,
+    Response, Status,
+};
+use crate::prop::Rng;
+
+/// Socket read-poll cadence while waiting for a response.
+const POLL: Duration = Duration::from_millis(10);
+
+/// Bounded retries with jittered exponential backoff.
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included). 1 = no retries.
+    pub max_attempts: u32,
+    pub base: Duration,
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Backoff before retry number `retry` (1-based): full-jitter-ish
+    /// `uniform(0.5, 1.0) × min(cap, base·2^(retry-1))`.
+    pub fn delay(&self, retry: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32 << (retry - 1).min(16))
+            .min(self.cap);
+        exp.mul_f64(0.5 + 0.5 * rng.f64_unit())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ClientOptions {
+    /// Per-attempt wait for a response before the attempt is failed.
+    pub timeout: Duration,
+    pub connect_timeout: Duration,
+    pub retry: RetryPolicy,
+    /// Jitter seed (deterministic backoff schedules in tests).
+    pub seed: u64,
+}
+
+impl Default for ClientOptions {
+    fn default() -> Self {
+        ClientOptions {
+            timeout: Duration::from_secs(30),
+            connect_timeout: Duration::from_secs(2),
+            retry: RetryPolicy::default(),
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// Why a request ultimately failed. `Rejected` carries a terminal
+/// status verbatim from the server; `Exhausted` means every attempt
+/// (including failovers) was spent on retryable failures.
+#[derive(Debug)]
+pub enum ClientError {
+    Rejected { status: Status, message: String },
+    Exhausted {
+        attempts: u32,
+        last: String,
+        last_status: Option<Status>,
+    },
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Rejected { status, message } => {
+                write!(f, "rejected: {status}: {message}")
+            }
+            ClientError::Exhausted { attempts, last, last_status } => {
+                match last_status {
+                    Some(s) => write!(
+                        f,
+                        "exhausted after {attempts} attempts \
+                         (last status {s}): {last}"
+                    ),
+                    None => write!(
+                        f,
+                        "exhausted after {attempts} attempts: {last}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+/// A successful GEMM round trip, with everything the caller needs to
+/// attribute it: which server/device served it, server-side queue and
+/// execute time, the client-observed RTT, and how many attempts it
+/// took.
+#[derive(Debug)]
+pub struct GemmReply {
+    pub c: Vec<f32>,
+    pub device: u32,
+    pub queue_us: u64,
+    pub execute_us: u64,
+    pub rtt: Duration,
+    pub attempts: u32,
+    /// Index into the client's server list.
+    pub server: usize,
+}
+
+/// Client-side counters (diagnosability: shed vs. crash vs. timeout is
+/// visible without server logs).
+#[derive(Debug, Default, Clone)]
+pub struct ClientStats {
+    pub attempts: u64,
+    pub retries: u64,
+    pub failovers: u64,
+    pub sheds_seen: u64,
+    pub internals_seen: u64,
+    pub deadline_seen: u64,
+    pub io_errors: u64,
+    pub observes_sent: u64,
+}
+
+pub struct Client {
+    servers: Vec<String>,
+    opts: ClientOptions,
+    rng: Rng,
+    /// (server index, live stream); dropped on any failure so the next
+    /// attempt reconnects cleanly.
+    conn: Option<(usize, TcpStream)>,
+    /// Which server the next connect tries first (rotated on failure).
+    prefer: usize,
+    next_id: u64,
+    pub stats: ClientStats,
+}
+
+impl Client {
+    /// Lazy client over a non-empty server list; no I/O until the
+    /// first request.
+    pub fn new(servers: Vec<String>, opts: ClientOptions) -> Client {
+        assert!(!servers.is_empty(), "client needs at least one server");
+        let seed = opts.seed;
+        Client {
+            servers,
+            opts,
+            rng: Rng::new(seed),
+            conn: None,
+            prefer: 0,
+            next_id: 1,
+            stats: ClientStats::default(),
+        }
+    }
+
+    fn id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Index of the server the current/next connection uses.
+    pub fn current_server(&self) -> usize {
+        self.conn.as_ref().map(|(i, _)| *i).unwrap_or(self.prefer)
+    }
+
+    fn drop_conn(&mut self) {
+        self.conn = None;
+    }
+
+    fn rotate(&mut self) {
+        self.prefer = (self.prefer + 1) % self.servers.len();
+        self.drop_conn();
+    }
+
+    fn ensure_conn(&mut self) -> Result<(), String> {
+        if self.conn.is_some() {
+            return Ok(());
+        }
+        let mut last = String::from("no servers");
+        for off in 0..self.servers.len() {
+            let idx = (self.prefer + off) % self.servers.len();
+            match connect(&self.servers[idx], self.opts.connect_timeout) {
+                Ok(stream) => {
+                    if off > 0 {
+                        self.stats.failovers += 1;
+                    }
+                    self.prefer = idx;
+                    self.conn = Some((idx, stream));
+                    return Ok(());
+                }
+                Err(e) => last = format!("{}: {e}", self.servers[idx]),
+            }
+        }
+        Err(last)
+    }
+
+    /// One request/response exchange on the live connection. Any
+    /// failure drops the connection (a later attempt reconnects, maybe
+    /// elsewhere) so a stale in-flight response can never be
+    /// mis-matched to a new request.
+    fn request_once(
+        &mut self,
+        frame: &[u8],
+        want_id: u64,
+    ) -> Result<Response, String> {
+        self.ensure_conn()?;
+        let (_, stream) = self.conn.as_mut().expect("ensured");
+        if let Err(e) = stream.write_all(frame).and_then(|_| stream.flush()) {
+            self.drop_conn();
+            return Err(format!("write: {e}"));
+        }
+        let deadline = Instant::now() + self.opts.timeout;
+        loop {
+            let (_, stream) = self.conn.as_mut().expect("ensured");
+            match read_frame(stream) {
+                Ok(FrameRead::Frame(body)) => match decode_frame(&body) {
+                    Ok(Message::Response(r)) if r.id == want_id => {
+                        return Ok(r)
+                    }
+                    Ok(other) => {
+                        self.drop_conn();
+                        return Err(format!(
+                            "unexpected frame while awaiting {want_id}: \
+                             {other:?}"
+                        ));
+                    }
+                    Err(e) => {
+                        self.drop_conn();
+                        return Err(format!("decode: {e}"));
+                    }
+                },
+                Ok(FrameRead::Idle) => {
+                    if Instant::now() >= deadline {
+                        self.drop_conn();
+                        return Err(format!(
+                            "no response within {:?}",
+                            self.opts.timeout
+                        ));
+                    }
+                }
+                Ok(FrameRead::Eof) => {
+                    self.drop_conn();
+                    return Err("server closed connection".into());
+                }
+                Err(e) => {
+                    self.drop_conn();
+                    return Err(format!("read: {e}"));
+                }
+            }
+        }
+    }
+
+    /// The shared retry driver: encode-with-fresh-id, send, classify.
+    /// `expect_floats` validates an OK payload length (None = any).
+    fn retried(
+        &mut self,
+        mut make: impl FnMut(u64) -> Request,
+        expect_floats: Option<usize>,
+    ) -> Result<(Response, Duration, u32), ClientError> {
+        let mut last = String::new();
+        let mut last_status = None;
+        let max = self.opts.retry.max_attempts.max(1);
+        for attempt in 1..=max {
+            if attempt > 1 {
+                let d = self.opts.retry.delay(attempt - 1, &mut self.rng);
+                std::thread::sleep(d);
+                self.stats.retries += 1;
+            }
+            self.stats.attempts += 1;
+            let id = self.id();
+            let frame = encode_request(&make(id));
+            let t0 = Instant::now();
+            match self.request_once(&frame, id) {
+                Ok(resp) => match resp.status {
+                    Status::Ok => {
+                        if let Some(want) = expect_floats {
+                            if resp.payload.len() != want * 4 {
+                                // A short OK payload is server
+                                // misbehaviour — treat like INTERNAL
+                                // and fail over.
+                                self.stats.internals_seen += 1;
+                                last = format!(
+                                    "OK payload {} bytes, want {}",
+                                    resp.payload.len(),
+                                    want * 4
+                                );
+                                last_status = Some(Status::Internal);
+                                self.rotate();
+                                continue;
+                            }
+                        }
+                        return Ok((resp, t0.elapsed(), attempt));
+                    }
+                    s if s.retryable() => {
+                        match s {
+                            Status::Shed => self.stats.sheds_seen += 1,
+                            _ => self.stats.internals_seen += 1,
+                        }
+                        last = resp.message();
+                        last_status = Some(s);
+                        self.rotate();
+                    }
+                    s => {
+                        if s == Status::DeadlineExceeded {
+                            self.stats.deadline_seen += 1;
+                        }
+                        return Err(ClientError::Rejected {
+                            status: s,
+                            message: resp.message(),
+                        });
+                    }
+                },
+                Err(e) => {
+                    self.stats.io_errors += 1;
+                    last = e;
+                    last_status = None;
+                    self.rotate();
+                }
+            }
+        }
+        Err(ClientError::Exhausted { attempts: max, last, last_status })
+    }
+
+    /// Round-trip one GEMM. `deadline` rides the wire and is enforced
+    /// server-side; the client's own `timeout` bounds the wait.
+    pub fn gemm(
+        &mut self,
+        m: u32,
+        n: u32,
+        k: u32,
+        a: &[f32],
+        b: &[f32],
+        deadline: Option<Duration>,
+    ) -> Result<GemmReply, ClientError> {
+        let deadline_us = deadline.map(|d| d.as_micros() as u64).unwrap_or(0);
+        let (resp, rtt, attempts) = self.retried(
+            |id| Request::Gemm {
+                id,
+                deadline_us,
+                m,
+                n,
+                k,
+                a: a.to_vec(),
+                b: b.to_vec(),
+            },
+            Some(m as usize * n as usize),
+        )?;
+        self.observe(resp.device, m, n, k, rtt);
+        Ok(GemmReply {
+            c: resp.floats(),
+            device: resp.device,
+            queue_us: resp.queue_us,
+            execute_us: resp.execute_us,
+            rtt,
+            attempts,
+            server: self.current_server(),
+        })
+    }
+
+    /// Round-trip one MLP batch (`rows` activations of width `d_in`).
+    pub fn mlp(
+        &mut self,
+        rows: u32,
+        d_in: u32,
+        d_out: u32,
+        x: &[f32],
+        deadline: Option<Duration>,
+    ) -> Result<(Vec<f32>, Duration, u32), ClientError> {
+        let deadline_us = deadline.map(|d| d.as_micros() as u64).unwrap_or(0);
+        let (resp, rtt, attempts) = self.retried(
+            |id| Request::Mlp {
+                id,
+                deadline_us,
+                rows,
+                d_in,
+                x: x.to_vec(),
+            },
+            Some(rows as usize * d_out as usize),
+        )?;
+        Ok((resp.floats(), rtt, attempts))
+    }
+
+    pub fn ping(&mut self) -> Result<Duration, ClientError> {
+        let (_, rtt, _) = self.retried(|id| Request::Ping { id }, None)?;
+        Ok(rtt)
+    }
+
+    /// Pipelined burst on ONE connection: write every request frame,
+    /// then collect responses in order. Single attempt, no retries —
+    /// the pipelining e2e wants raw in-order semantics.
+    pub fn gemm_pipelined(
+        &mut self,
+        reqs: &[(u32, u32, u32, Vec<f32>, Vec<f32>)],
+        deadline: Option<Duration>,
+    ) -> Result<Vec<Response>, ClientError> {
+        let deadline_us = deadline.map(|d| d.as_micros() as u64).unwrap_or(0);
+        let exhausted = |last: String| ClientError::Exhausted {
+            attempts: 1,
+            last,
+            last_status: None,
+        };
+        self.ensure_conn().map_err(exhausted)?;
+        let ids: Vec<u64> = reqs.iter().map(|_| self.id()).collect();
+        {
+            let (_, stream) = self.conn.as_mut().expect("ensured");
+            let mut buf = Vec::new();
+            for (id, (m, n, k, a, b)) in ids.iter().zip(reqs) {
+                buf.extend_from_slice(&encode_request(&Request::Gemm {
+                    id: *id,
+                    deadline_us,
+                    m: *m,
+                    n: *n,
+                    k: *k,
+                    a: a.clone(),
+                    b: b.clone(),
+                }));
+            }
+            self.stats.attempts += reqs.len() as u64;
+            if let Err(e) =
+                stream.write_all(&buf).and_then(|_| stream.flush())
+            {
+                self.drop_conn();
+                return Err(exhausted(format!("write: {e}")));
+            }
+        }
+        let mut out = Vec::with_capacity(reqs.len());
+        let deadline_at = Instant::now() + self.opts.timeout;
+        for want in &ids {
+            loop {
+                let (_, stream) = self.conn.as_mut().expect("ensured");
+                match read_frame(stream) {
+                    Ok(FrameRead::Frame(body)) => match decode_frame(&body) {
+                        Ok(Message::Response(r)) if r.id == *want => {
+                            out.push(r);
+                            break;
+                        }
+                        other => {
+                            self.drop_conn();
+                            return Err(exhausted(format!(
+                                "awaiting {want}: {other:?}"
+                            )));
+                        }
+                    },
+                    Ok(FrameRead::Idle) => {
+                        if Instant::now() >= deadline_at {
+                            self.drop_conn();
+                            return Err(exhausted(
+                                "pipelined responses timed out".into(),
+                            ));
+                        }
+                    }
+                    Ok(FrameRead::Eof) => {
+                        self.drop_conn();
+                        return Err(exhausted("server closed".into()));
+                    }
+                    Err(e) => {
+                        self.drop_conn();
+                        return Err(exhausted(format!("read: {e}")));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Ask a specific server (by list index) to drain gracefully.
+    pub fn drain_server(&mut self, server: usize) -> Result<(), ClientError> {
+        let exhausted = |last: String| ClientError::Exhausted {
+            attempts: 1,
+            last,
+            last_status: None,
+        };
+        let addr = self.servers[server].clone();
+        let mut stream = connect(&addr, self.opts.connect_timeout)
+            .map_err(|e| exhausted(format!("{addr}: {e}")))?;
+        let id = self.id();
+        let frame = encode_request(&Request::Drain { id });
+        stream
+            .write_all(&frame)
+            .and_then(|_| stream.flush())
+            .map_err(|e| exhausted(format!("write: {e}")))?;
+        let deadline = Instant::now() + self.opts.timeout;
+        loop {
+            match read_frame(&mut stream) {
+                Ok(FrameRead::Frame(body)) => {
+                    return match decode_frame(&body) {
+                        Ok(Message::Response(r))
+                            if r.id == id && r.status == Status::Ok =>
+                        {
+                            Ok(())
+                        }
+                        other => Err(exhausted(format!("drain: {other:?}"))),
+                    }
+                }
+                Ok(FrameRead::Idle) => {
+                    if Instant::now() >= deadline {
+                        return Err(exhausted("drain ack timed out".into()));
+                    }
+                }
+                Ok(FrameRead::Eof) => {
+                    return Err(exhausted("server closed".into()))
+                }
+                Err(e) => return Err(exhausted(format!("read: {e}"))),
+            }
+        }
+    }
+
+    /// Fire-and-forget the measured RTT back to the server
+    /// (best-effort; a lost OBSERVE only skips one feedback sample).
+    fn observe(&mut self, device: u32, m: u32, n: u32, k: u32, rtt: Duration) {
+        if rtt.is_zero() {
+            return;
+        }
+        let id = self.id();
+        let frame = encode_request(&Request::Observe {
+            id,
+            device,
+            m,
+            n,
+            k,
+            latency_us: rtt.as_micros().max(1) as u64,
+        });
+        if let Some((_, stream)) = self.conn.as_mut() {
+            if stream.write_all(&frame).and_then(|_| stream.flush()).is_ok() {
+                self.stats.observes_sent += 1;
+            }
+        }
+    }
+}
+
+fn connect(addr: &str, timeout: Duration) -> std::io::Result<TcpStream> {
+    let resolved = addr.to_socket_addrs()?.next().ok_or_else(|| {
+        std::io::Error::new(
+            std::io::ErrorKind::AddrNotAvailable,
+            format!("{addr}: no addresses"),
+        )
+    })?;
+    let stream = TcpStream::connect_timeout(&resolved, timeout)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(POLL))?;
+    Ok(stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_jittered_exponential_and_capped() {
+        let p = RetryPolicy {
+            max_attempts: 8,
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+        };
+        let mut rng = Rng::new(7);
+        for retry in 1..=10u32 {
+            let exp = Duration::from_millis(10)
+                .saturating_mul(1 << (retry - 1).min(16))
+                .min(Duration::from_millis(500));
+            for _ in 0..50 {
+                let d = p.delay(retry, &mut rng);
+                assert!(d >= exp.mul_f64(0.5), "retry {retry}: {d:?} < half");
+                assert!(d <= exp, "retry {retry}: {d:?} > cap {exp:?}");
+            }
+        }
+        // growth: median of retry 3 exceeds max of retry 1
+        let d1 = p.delay(1, &mut rng);
+        assert!(d1 <= Duration::from_millis(10));
+        let d3 = p.delay(3, &mut rng);
+        assert!(d3 >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn client_error_display_is_distinct() {
+        let rejected = ClientError::Rejected {
+            status: Status::BadRequest,
+            message: "zero dim".into(),
+        };
+        assert_eq!(rejected.to_string(), "rejected: BAD_REQUEST: zero dim");
+        let exhausted = ClientError::Exhausted {
+            attempts: 4,
+            last: "queue full".into(),
+            last_status: Some(Status::Shed),
+        };
+        let s = exhausted.to_string();
+        assert!(s.contains("4 attempts"), "{s}");
+        assert!(s.contains("SHED"), "{s}");
+    }
+
+    #[test]
+    fn exhausted_without_any_server() {
+        // nothing listens on this port (reserved/unroutable quickly on
+        // loopback); every attempt is an io error, bounded by policy
+        let mut c = Client::new(
+            vec!["127.0.0.1:1".into()],
+            ClientOptions {
+                timeout: Duration::from_millis(200),
+                connect_timeout: Duration::from_millis(200),
+                retry: RetryPolicy {
+                    max_attempts: 2,
+                    base: Duration::from_millis(1),
+                    cap: Duration::from_millis(2),
+                },
+                seed: 3,
+            },
+        );
+        match c.ping() {
+            Err(ClientError::Exhausted { attempts: 2, .. }) => {}
+            other => panic!("expected Exhausted(2), got {other:?}"),
+        }
+        assert_eq!(c.stats.attempts, 2);
+        assert_eq!(c.stats.io_errors, 2);
+        assert_eq!(c.stats.retries, 1);
+    }
+}

@@ -1,0 +1,717 @@
+//! Process-spawning e2e harness for the TCP serving tier.
+//!
+//! Everything here drives REAL processes: it spawns `streamk serve
+//! --listen 127.0.0.1:0` daemons (ephemeral ports, parsed from their
+//! stdout), drives them with either the `streamk client` subcommand or
+//! the in-process [`crate::net::Client`], kills daemons mid-run to
+//! exercise failover, and asserts the serving tier's contract:
+//!
+//! - **zero wrong results** — all-ones operands make `C = k`
+//!   everywhere an exact f32 compare;
+//! - **bounded retries** — every request lands within the client's
+//!   retry budget even with one of two servers SIGKILLed mid-run;
+//! - **conservation** — the surviving daemon's summary satisfies
+//!   `served + shed + deadline + bad_request + internal = offered`;
+//! - **graceful drain** — a wire DRAIN frame stops the acceptor,
+//!   finishes in-flight work, flushes `plan_hwm.json`/metrics, and the
+//!   daemon exits 0.
+//!
+//! Entry points: [`run_smoke`], [`run_kill_one`], and
+//! [`run_scenario_live`] (live replay of the PR-8 adversarial
+//! scenarios through the wire protocol). They are shared by
+//! `src/bin/e2e_net.rs` (CI) and `tests/net_e2e.rs`.
+
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::bench::workload;
+use crate::coordinator::{parse_rules, SloRule};
+use crate::decomp::GemmShape;
+use crate::net::server::NetStatsSnapshot;
+use crate::net::{Client, ClientError, ClientOptions, RetryPolicy, Status};
+use crate::prop::Rng;
+
+/// How long a freshly spawned daemon gets to print its listen address
+/// (it compiles/warms the MLP artifacts first).
+const SPAWN_WINDOW: Duration = Duration::from_secs(60);
+/// How long a drained daemon gets to finish in-flight work and exit.
+const DRAIN_WINDOW: Duration = Duration::from_secs(60);
+
+/// Locate the `streamk` binary. `STREAMK_BIN` overrides; otherwise it
+/// is expected next to the current executable (integration tests and
+/// benches run from `target/<profile>/deps/`, the binary one level up).
+pub fn find_streamk_bin() -> Result<PathBuf, String> {
+    if let Ok(p) = std::env::var("STREAMK_BIN") {
+        let p = PathBuf::from(p);
+        return if p.exists() {
+            Ok(p)
+        } else {
+            Err(format!("STREAMK_BIN={} does not exist", p.display()))
+        };
+    }
+    let me = std::env::current_exe()
+        .map_err(|e| format!("current_exe: {e}"))?;
+    let mut dir = me.parent().map(Path::to_path_buf).unwrap_or_default();
+    for _ in 0..3 {
+        for name in ["streamk", "streamk.exe"] {
+            let cand = dir.join(name);
+            if cand.is_file() {
+                return Ok(cand);
+            }
+        }
+        if !dir.pop() {
+            break;
+        }
+    }
+    Err("cannot find the streamk binary near the test executable; \
+         run `cargo build` first or set STREAMK_BIN"
+        .into())
+}
+
+fn temp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir()
+        .join(format!("streamk_net_e2e_{}_{tag}", std::process::id()))
+}
+
+/// Write a self-contained interpreter-servable artifact directory: a
+/// `manifest.json` with a streamk + ref GEMM entry per shape (exact
+/// m/n/k — the router requires exact-shape artifacts) plus the three
+/// MLP batch sizes `streamk serve` warms up unconditionally. The
+/// referenced `.hlo.txt` files intentionally do not exist — the
+/// interpreter backend executes from metadata alone, exactly like the
+/// checked-in `examples/minimal_artifacts`.
+pub fn write_live_artifacts(
+    dir: &Path,
+    shapes: &[GemmShape],
+) -> std::io::Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut entries: Vec<String> = Vec::new();
+    let mut seen: Vec<GemmShape> = Vec::new();
+    for s in shapes {
+        if seen.contains(s) {
+            continue;
+        }
+        seen.push(*s);
+        let (m, n, k) = (s.m, s.n, s.k);
+        let flops = 2 * m * n * k;
+        entries.push(format!(
+            r#"    {{
+      "name": "gemm_streamk_nopad_f32_{m}x{n}x{k}_cu8",
+      "file": "unused.hlo.txt", "experiment": "net_e2e", "kind": "gemm",
+      "flops": {flops},
+      "inputs": [{{"shape": [{m}, {k}], "dtype": "f32"}}, {{"shape": [{k}, {n}], "dtype": "f32"}}],
+      "outputs": [{{"shape": [{m}, {n}], "dtype": "f32"}}],
+      "m": {m}, "n": {n}, "k": {k},
+      "algo": "streamk", "pad": "none", "dtype": "f32", "cus": 8
+    }}"#
+        ));
+        entries.push(format!(
+            r#"    {{
+      "name": "gemm_ref_nopad_f32_{m}x{n}x{k}",
+      "file": "unused.hlo.txt", "experiment": "net_e2e", "kind": "gemm",
+      "flops": {flops},
+      "inputs": [{{"shape": [{m}, {k}], "dtype": "f32"}}, {{"shape": [{k}, {n}], "dtype": "f32"}}],
+      "outputs": [{{"shape": [{m}, {n}], "dtype": "f32"}}],
+      "m": {m}, "n": {n}, "k": {k},
+      "algo": "ref", "pad": "none", "dtype": "f32", "cus": 0
+    }}"#
+        ));
+    }
+    for batch in [8usize, 32, 128] {
+        let flops = 2 * batch * (256 * 512 + 512 * 256);
+        entries.push(format!(
+            r#"    {{
+      "name": "mlp_streamk_f32_b{batch}_256x512x256",
+      "file": "unused.hlo.txt", "experiment": "net_e2e", "kind": "mlp",
+      "flops": {flops},
+      "inputs": [{{"shape": [{batch}, 256], "dtype": "f32"}}, {{"shape": [256, 512], "dtype": "f32"}}, {{"shape": [512], "dtype": "f32"}}, {{"shape": [512, 256], "dtype": "f32"}}, {{"shape": [256], "dtype": "f32"}}],
+      "outputs": [{{"shape": [{batch}, 256], "dtype": "f32"}}],
+      "dtype": "f32", "batch": {batch}
+    }}"#
+        ));
+    }
+    let manifest = format!(
+        "{{\n  \"version\": 2,\n  \"artifacts\": [\n{}\n  ]\n}}\n",
+        entries.join(",\n")
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)
+}
+
+/// One spawned `streamk serve --listen` daemon with its stdout drained
+/// into memory by a background thread (so the pipe never blocks it).
+pub struct ServeProc {
+    pub addr: String,
+    child: Child,
+    lines: Arc<Mutex<Vec<String>>>,
+    reader: Option<thread::JoinHandle<()>>,
+}
+
+/// Spawn `streamk serve --listen 127.0.0.1:0 --artifacts <dir> ...`
+/// and block until it prints `listening on <addr>`.
+pub fn spawn_serve(
+    bin: &Path,
+    artifacts: &Path,
+    extra: &[String],
+) -> Result<ServeProc, String> {
+    let mut child = Command::new(bin)
+        .arg("serve")
+        .arg("--listen")
+        .arg("127.0.0.1:0")
+        .arg("--artifacts")
+        .arg(artifacts)
+        .arg("--plan-hwm")
+        .arg(artifacts.join("plan_hwm.json"))
+        .args(extra)
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| format!("spawn {}: {e}", bin.display()))?;
+    let stdout = child.stdout.take().expect("stdout piped above");
+    let lines: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = lines.clone();
+    let reader = thread::Builder::new()
+        .name("e2e-serve-stdout".into())
+        .spawn(move || {
+            for line in std::io::BufReader::new(stdout).lines() {
+                match line {
+                    Ok(l) => sink.lock().expect("stdout sink").push(l),
+                    Err(_) => break,
+                }
+            }
+        })
+        .map_err(|e| format!("spawn stdout reader: {e}"))?;
+
+    let deadline = Instant::now() + SPAWN_WINDOW;
+    let addr = loop {
+        let found = lines
+            .lock()
+            .expect("stdout sink")
+            .iter()
+            .find_map(|l| l.strip_prefix("listening on ").map(str::to_string));
+        if let Some(a) = found {
+            break a;
+        }
+        if let Ok(Some(status)) = child.try_wait() {
+            return Err(format!(
+                "serve exited early ({status}); stdout: {:?}",
+                lines.lock().expect("stdout sink")
+            ));
+        }
+        if Instant::now() >= deadline {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err("serve never printed its listen address".into());
+        }
+        thread::sleep(Duration::from_millis(10));
+    };
+    Ok(ServeProc { addr, child, lines, reader: Some(reader) })
+}
+
+impl ServeProc {
+    /// SIGKILL — the fault-injection path; nothing graceful about it.
+    pub fn kill(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+
+    /// Everything the daemon printed so far.
+    pub fn lines(&self) -> Vec<String> {
+        self.lines.lock().expect("stdout sink").clone()
+    }
+
+    /// Wait for a (drained) daemon to exit on its own; returns its
+    /// exit code and full stdout.
+    pub fn finish(mut self) -> Result<(i32, Vec<String>), String> {
+        let deadline = Instant::now() + DRAIN_WINDOW;
+        let status = loop {
+            match self.child.try_wait() {
+                Ok(Some(s)) => break s,
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        let _ = self.child.kill();
+                        let _ = self.child.wait();
+                        return Err(
+                            "serve did not exit after drain".to_string()
+                        );
+                    }
+                    thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(format!("wait on serve: {e}")),
+            }
+        };
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+        let lines = self.lines.lock().expect("stdout sink").clone();
+        Ok((status.code().unwrap_or(-1), lines))
+    }
+}
+
+impl Drop for ServeProc {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+/// Last `net: offered=... conserved=...` summary in a daemon's stdout.
+pub fn net_summary(lines: &[String]) -> Option<NetStatsSnapshot> {
+    lines.iter().rev().find_map(|l| NetStatsSnapshot::parse_summary_line(l))
+}
+
+/// Hit rate out of the last `plan cache: ... (NN.N% hit rate) ...`
+/// line, as a fraction in [0, 1].
+pub fn plan_hit_rate(lines: &[String]) -> Option<f64> {
+    let line = lines.iter().rev().find(|l| l.starts_with("plan cache:"))?;
+    let rest = &line[line.find('(')? + 1..];
+    let pct: f64 = rest.split('%').next()?.trim().parse().ok()?;
+    Some(pct / 100.0)
+}
+
+/// Pull `key=value` out of the client's `client: sent=... ok=...`
+/// summary line.
+pub fn client_field(out: &str, key: &str) -> Option<u64> {
+    let line = out.lines().rev().find(|l| l.starts_with("client: sent="))?;
+    let prefix = format!("{key}=");
+    line.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(&prefix))
+        .and_then(|v| v.parse().ok())
+}
+
+fn no_tune() -> Vec<String> {
+    vec!["--no-tune-on-miss".to_string()]
+}
+
+/// CI smoke: one daemon + one `streamk client` process on loopback.
+/// Gates: client exit 0 with zero wrong results, daemon drains to exit
+/// code 0, >90% plan-cache hit rate, nonzero served count,
+/// conservation, and the plan hwm + metrics files flushed on drain.
+pub fn run_smoke(bin: &Path) -> Result<String, String> {
+    let dir = temp_dir("smoke");
+    write_live_artifacts(&dir, &[GemmShape::new(128, 128, 128)])
+        .map_err(|e| format!("write artifacts: {e}"))?;
+    let metrics_path = dir.join("metrics.json");
+    let mut extra = no_tune();
+    extra.push("--metrics-out".into());
+    extra.push(metrics_path.display().to_string());
+    let serve = spawn_serve(bin, &dir, &extra)?;
+
+    let out = Command::new(bin)
+        .args([
+            "client",
+            "--connect",
+            serve.addr.as_str(),
+            "--requests",
+            "48",
+            "--m",
+            "128",
+            "--n",
+            "128",
+            "--k",
+            "128",
+            "--drain",
+        ])
+        .stdin(Stdio::null())
+        .output()
+        .map_err(|e| format!("run client: {e}"))?;
+    let cout = String::from_utf8_lossy(&out.stdout).to_string();
+    if !out.status.success() {
+        return Err(format!(
+            "client failed ({}):\n{cout}{}",
+            out.status,
+            String::from_utf8_lossy(&out.stderr)
+        ));
+    }
+    if client_field(&cout, "ok") != Some(48)
+        || client_field(&cout, "wrong") != Some(0)
+    {
+        return Err(format!("client summary off: {cout}"));
+    }
+
+    let (code, lines) = serve.finish()?;
+    if code != 0 {
+        return Err(format!("serve exited {code}; stdout: {lines:?}"));
+    }
+    let snap = net_summary(&lines)
+        .ok_or_else(|| format!("no net summary in {lines:?}"))?;
+    if !snap.conserved() {
+        return Err(format!("conservation violated: {}", snap.summary_line()));
+    }
+    if snap.served == 0 {
+        return Err("daemon served nothing".into());
+    }
+    let hit = plan_hit_rate(&lines).ok_or("no plan cache line")?;
+    if hit <= 0.9 {
+        return Err(format!("plan hit rate {:.1}% <= 90%", hit * 100.0));
+    }
+    for flushed in [&dir.join("plan_hwm.json"), &metrics_path] {
+        if !flushed.is_file() {
+            return Err(format!("{} not flushed on drain", flushed.display()));
+        }
+    }
+    let summary = format!(
+        "smoke OK: {} | plan hit rate {:.1}%",
+        snap.summary_line(),
+        hit * 100.0
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(summary)
+}
+
+/// The tentpole e2e: 1 client process + 2 serve processes; one server
+/// is SIGKILLed mid-run. Gates: the client fails over to the survivor
+/// within its bounded retry budget, zero wrong results, clean drain of
+/// the survivor, and conservation on the survivor's summary.
+pub fn run_kill_one(bin: &Path) -> Result<String, String> {
+    let dir = temp_dir("kill_one");
+    write_live_artifacts(&dir, &[GemmShape::new(128, 128, 128)])
+        .map_err(|e| format!("write artifacts: {e}"))?;
+    let mut a = spawn_serve(bin, &dir, &no_tune())?;
+    let b = spawn_serve(bin, &dir, &no_tune())?;
+    let connect = format!("{},{}", a.addr, b.addr);
+
+    // Sized so the run comfortably outlasts the kill delay below in
+    // either build profile: the unoptimized interpreter takes tens of
+    // milliseconds per 128^3 GEMM, the optimized one ~1 ms plus two
+    // loopback syscall round trips.
+    let requests = if cfg!(debug_assertions) { 60usize } else { 400 };
+    let requests_arg = requests.to_string();
+    let mut client = Command::new(bin)
+        .args([
+            "client",
+            "--connect",
+            connect.as_str(),
+            "--requests",
+            requests_arg.as_str(),
+            "--m",
+            "128",
+            "--n",
+            "128",
+            "--k",
+            "128",
+            "--retries",
+            "4",
+            "--backoff-base-ms",
+            "5",
+            "--drain",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .map_err(|e| format!("spawn client: {e}"))?;
+
+    // Let the client start hammering server A (first in its list),
+    // then pull the plug mid-run. Even if the kill lands before the
+    // client's first connect, attempt 1 fails over to B and the
+    // failover counter still moves.
+    thread::sleep(Duration::from_millis(100));
+    a.kill();
+
+    let out = client
+        .wait_with_output()
+        .map_err(|e| format!("wait on client: {e}"))?;
+    let cout = String::from_utf8_lossy(&out.stdout).to_string();
+    if !out.status.success() {
+        return Err(format!(
+            "client failed after server kill ({}):\n{cout}",
+            out.status
+        ));
+    }
+    let ok = client_field(&cout, "ok").unwrap_or(0);
+    let wrong = client_field(&cout, "wrong").unwrap_or(u64::MAX);
+    let exhausted = client_field(&cout, "exhausted").unwrap_or(u64::MAX);
+    let failovers = client_field(&cout, "failovers").unwrap_or(0);
+    if ok != requests as u64 || wrong != 0 || exhausted != 0 {
+        return Err(format!(
+            "client summary off (want ok={requests} wrong=0 \
+             exhausted=0): {cout}"
+        ));
+    }
+    if failovers == 0 {
+        return Err(format!(
+            "client never failed over — kill landed outside the run? \
+             {cout}"
+        ));
+    }
+
+    let (code, lines) = b.finish()?;
+    if code != 0 {
+        return Err(format!("survivor exited {code}; stdout: {lines:?}"));
+    }
+    let snap = net_summary(&lines)
+        .ok_or_else(|| format!("no net summary in {lines:?}"))?;
+    if !snap.conserved() {
+        return Err(format!(
+            "survivor conservation violated: {}",
+            snap.summary_line()
+        ));
+    }
+    if snap.served == 0 {
+        return Err("survivor served nothing — failover went nowhere".into());
+    }
+    let summary = format!(
+        "kill-one OK: {requests} requests, {failovers} failover(s), \
+         survivor {}",
+        snap.summary_line()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(summary)
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 * q).ceil() as usize)
+        .clamp(1, sorted.len())
+        - 1;
+    sorted[idx]
+}
+
+/// Live replay of a PR-8 adversarial scenario through the wire: the
+/// scenario's arrival curve and drifting shape mix drive a real daemon
+/// via the client library, with shapes scaled by
+/// [`workload::live_shape`]. Scenarios with scripted faults get a
+/// second daemon, and the primary is SIGKILLed at the first event's
+/// trace fraction — the live analogue of mid-trace fault injection.
+/// Gates: the scenario's own p99/shed SLO rules (ape/eff are
+/// sim-only), zero wrong results, bounded retries, conservation.
+pub fn run_scenario_live(
+    bin: &Path,
+    name: &str,
+    requests: usize,
+) -> Result<String, String> {
+    let sc = workload::scenario(name)
+        .ok_or_else(|| format!("unknown scenario {name:?}"))?
+        .with_requests(requests);
+    let rules = parse_rules(sc.slo).map_err(|e| format!("slo: {e}"))?;
+    let shapes = workload::live_scale(&sc.mix.shapes());
+    let dir = temp_dir(&format!("scenario_{name}"));
+    write_live_artifacts(&dir, &shapes)
+        .map_err(|e| format!("write artifacts: {e}"))?;
+
+    let mut extra = no_tune();
+    extra.push("--admission-bound".into());
+    extra.push(sc.max_queue.to_string());
+    let mut primary = spawn_serve(bin, &dir, &extra)?;
+    let with_fault = !sc.events.is_empty();
+    let backup =
+        if with_fault { Some(spawn_serve(bin, &dir, &extra)?) } else { None };
+
+    let mut servers = vec![primary.addr.clone()];
+    if let Some(b) = &backup {
+        servers.push(b.addr.clone());
+    }
+    let mut client = Client::new(
+        servers,
+        ClientOptions {
+            retry: RetryPolicy {
+                max_attempts: 5,
+                base: Duration::from_millis(5),
+                cap: Duration::from_millis(100),
+            },
+            seed: sc.seed,
+            ..ClientOptions::default()
+        },
+    );
+
+    // Compress the scenario's relative arrival curve into a short
+    // wall-clock span; the curve's *shape* (diurnal base, 10x flash)
+    // survives the normalization.
+    let wall_s = 2.0f64;
+    let times = sc.curve.gen_times(sc.seed, sc.requests);
+    let span = times.last().copied().unwrap_or(0.0).max(1e-9);
+    let kill_at_s = sc.events.first().map(|ev| ev.at * wall_s);
+    let mut killed = false;
+
+    let mut rng = Rng::new(sc.seed ^ 0x11f3);
+    let mut rtts: Vec<f64> = Vec::new();
+    let (mut ok, mut wrong, mut shed, mut failed) =
+        (0usize, 0usize, 0usize, 0usize);
+    let start = Instant::now();
+    for (i, t) in times.iter().enumerate() {
+        let at = t / span * wall_s;
+        if let Some(kill_at) = kill_at_s {
+            if !killed && at >= kill_at {
+                primary.kill();
+                killed = true;
+            }
+        }
+        let elapsed = start.elapsed().as_secs_f64();
+        if at > elapsed {
+            thread::sleep(Duration::from_secs_f64(at - elapsed));
+        }
+        let shape = workload::live_shape(&sc.mix.sample(&mut rng, i));
+        let ones_a = vec![1.0f32; shape.m * shape.k];
+        let ones_b = vec![1.0f32; shape.k * shape.n];
+        match client.gemm(
+            shape.m as u32,
+            shape.n as u32,
+            shape.k as u32,
+            &ones_a,
+            &ones_b,
+            None,
+        ) {
+            Ok(reply) => {
+                rtts.push(reply.rtt.as_secs_f64());
+                let want = shape.m * shape.n;
+                let expect = shape.k as f32;
+                if reply.c.len() == want
+                    && reply.c.iter().all(|&v| v == expect)
+                {
+                    ok += 1;
+                } else {
+                    wrong += 1;
+                }
+            }
+            Err(ClientError::Exhausted {
+                last_status: Some(Status::Shed),
+                ..
+            }) => shed += 1,
+            Err(_) => failed += 1,
+        }
+    }
+
+    // Graceful drain of whoever is still alive, then gate.
+    let n_servers = 1 + backup.is_some() as usize;
+    for idx in 0..n_servers {
+        let _ = client.drain_server(idx);
+    }
+    let survivor = match backup {
+        Some(b) => b,
+        None => primary,
+    };
+    let (code, lines) = survivor.finish()?;
+    if code != 0 {
+        return Err(format!(
+            "{name}: daemon exited {code}; stdout: {lines:?}"
+        ));
+    }
+    let snap = net_summary(&lines)
+        .ok_or_else(|| format!("{name}: no net summary in {lines:?}"))?;
+    if !snap.conserved() {
+        return Err(format!(
+            "{name}: conservation violated: {}",
+            snap.summary_line()
+        ));
+    }
+    if wrong > 0 {
+        return Err(format!("{name}: {wrong} WRONG result(s)"));
+    }
+    if failed > 0 {
+        return Err(format!(
+            "{name}: {failed} request(s) died inside the retry budget"
+        ));
+    }
+    rtts.sort_by(|x, y| x.total_cmp(y));
+    let p99_ms = quantile(&rtts, 0.99) * 1e3;
+    let shed_rate = shed as f64 / sc.requests as f64;
+    for rule in &rules {
+        match rule {
+            SloRule::P99Ms(limit) => {
+                if p99_ms > *limit {
+                    return Err(format!(
+                        "{name}: client p99 {p99_ms:.1} ms > SLO {limit} ms"
+                    ));
+                }
+            }
+            SloRule::ShedRate(limit) => {
+                if shed_rate > *limit {
+                    return Err(format!(
+                        "{name}: shed rate {shed_rate:.3} > SLO {limit}"
+                    ));
+                }
+            }
+            // Residual-APE and roofline-efficiency rules need the
+            // sim's internals; the live replay gates on what a client
+            // can observe.
+            SloRule::ApeCeil(_) | SloRule::EffFloor(_) => {}
+        }
+    }
+    let summary = format!(
+        "{name} live OK: {ok} ok / {shed} shed of {} \
+         (p99 {p99_ms:.1} ms, shed rate {shed_rate:.3}{}), {}",
+        sc.requests,
+        if killed { ", primary killed mid-trace" } else { "" },
+        snap.summary_line()
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_manifest_loads_and_routes() {
+        let dir = temp_dir("manifest_unit");
+        let shapes = [
+            GemmShape::new(60, 64, 64),
+            GemmShape::new(128, 128, 128),
+            GemmShape::new(128, 128, 128), // dup must collapse
+        ];
+        write_live_artifacts(&dir, &shapes).expect("write manifest");
+        let m = crate::runtime::Manifest::load(&dir).expect("load back");
+        for s in &shapes {
+            assert!(
+                m.find_gemm(s.m, s.n, s.k, "streamk", "none", "f32")
+                    .is_some(),
+                "missing streamk artifact for {s:?}"
+            );
+            assert!(
+                m.find_gemm(s.m, s.n, s.k, "ref", "none", "f32").is_some(),
+                "missing ref artifact for {s:?}"
+            );
+        }
+        for batch in [8usize, 32, 128] {
+            m.get(&format!("mlp_streamk_f32_b{batch}_256x512x256"))
+                .expect("warmup MLP artifact");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn output_parsers_pull_the_gated_numbers() {
+        let lines = vec![
+            "listening on 127.0.0.1:41234".to_string(),
+            "plan cache: 94 hits / 2 misses (97.9% hit rate) | 2 builds \
+             (0.51 ms total build time) | 2 entries | 0 evictions | \
+             hwm 2 (1 busiest shard of 16)"
+                .to_string(),
+            "net: offered=48 served=48 shed=0 deadline_exceeded=0 \
+             bad_request=0 internal=0 observed=48 conserved=true"
+                .to_string(),
+        ];
+        let hit = plan_hit_rate(&lines).expect("hit rate parses");
+        assert!((hit - 0.979).abs() < 1e-9);
+        let snap = net_summary(&lines).expect("summary parses");
+        assert_eq!(snap.offered, 48);
+        assert_eq!(snap.served, 48);
+        assert!(snap.conserved());
+
+        let cout = "warmup: compiled\nclient: sent=300 ok=300 wrong=0 \
+                    exhausted=0 deadline=0 rejected=0 attempts=304 \
+                    retries=4 failovers=1 sheds_seen=0 io_errors=4 \
+                    observes=300\n";
+        assert_eq!(client_field(cout, "ok"), Some(300));
+        assert_eq!(client_field(cout, "wrong"), Some(0));
+        assert_eq!(client_field(cout, "failovers"), Some(1));
+        assert_eq!(client_field(cout, "nope"), None);
+    }
+
+    #[test]
+    fn quantile_is_sane() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(quantile(&v, 0.99), 99.0);
+        assert_eq!(quantile(&v, 0.5), 50.0);
+        assert_eq!(quantile(&[], 0.99), 0.0);
+        assert_eq!(quantile(&[7.0], 0.99), 7.0);
+    }
+}

@@ -1,0 +1,41 @@
+//! The TCP serving tier — ROADMAP item 1's "real daemon".
+//!
+//! Everything below is std-only (DESIGN.md §2), like the rest of the
+//! crate:
+//!
+//! - [`wire`] — the framed request/response protocol: length-prefixed,
+//!   versioned, checksummed frames with a typed status taxonomy
+//!   (OK / SHED / DEADLINE_EXCEEDED / BAD_REQUEST / INTERNAL).
+//!   Malformed or truncated frames decode to typed errors, never
+//!   panics, and never misframe the following request.
+//! - [`server`] — `streamk serve --listen`: the coordinator promoted to
+//!   a long-running TCP daemon. Per-connection pipelining (reader +
+//!   writer thread pair over a bounded in-order channel), socket-level
+//!   batching into the existing MLP batcher, admission control shared
+//!   with the fleet simulator ([`crate::fleet::admits`] — overload is
+//!   an explicit SHED, not a hang), server-side deadline enforcement,
+//!   and graceful drain (stop accepting, finish in-flight, flush
+//!   state) on a shutdown signal or a wire DRAIN frame.
+//! - [`client`] — the client library: per-request timeout, jittered
+//!   exponential backoff, bounded retries failing over across a server
+//!   list, and OBSERVE reporting so the *measured client-observed*
+//!   latency of every OK response feeds `Tuner::observe` and the
+//!   Block2Time residual tracker on the server.
+//! - [`e2e`] — the process-spawning harness behind `e2e_net`: spawn
+//!   real `streamk serve` daemons on loopback, drive them with the
+//!   client, kill one mid-run, and assert failover, zero wrong
+//!   results, and request conservation
+//!   (served + shed + deadline + bad + internal = offered).
+
+pub mod client;
+pub mod e2e;
+pub mod server;
+pub mod wire;
+
+pub use client::{Client, ClientError, ClientOptions, GemmReply, RetryPolicy};
+pub use server::{NetStats, NetStatsSnapshot, Server, ServerConfig};
+pub use wire::{
+    decode_frame, encode_request, encode_response, read_frame, write_frame,
+    FrameRead, Message, Request, Response, Status, WireError, MAX_FRAME,
+    VERSION,
+};

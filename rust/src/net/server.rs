@@ -1,0 +1,791 @@
+//! The TCP daemon: coordinator + fleet behind a listener.
+//!
+//! Thread model — one acceptor, two threads per connection:
+//!
+//! ```text
+//! acceptor (nonblocking, polls drain flag)
+//!   └─ per connection:
+//!      reader ──(bounded in-order Pending channel)──▶ writer
+//!        │ decode, validate, admission-check,           │ await reply
+//!        │ try_submit_* (never blocks the socket)       │ with deadline
+//!        ▼                                              ▼
+//!      coordinator queue → workers / MLP batcher → reply channels
+//! ```
+//!
+//! The Pending channel is the pipelining window: the reader keeps
+//! decoding while earlier requests execute, responses go out in
+//! arrival order, and the bounded capacity backpressures a client that
+//! pipelines faster than it drains responses.
+//!
+//! Admission control is the same [`crate::fleet::admits`] predicate
+//! the open-loop fleet simulator applies: `--admission-bound N` sheds
+//! (typed SHED response, never a hang) once N requests are outstanding
+//! across all connections, on top of the coordinator queue's own
+//! `try_submit` shedding.
+//!
+//! Deadlines are enforced server-side at the response point: the writer
+//! waits on the reply channel no longer than the request's remaining
+//! budget ([`crate::exec::Receiver::recv_timeout`]) and answers
+//! DEADLINE_EXCEEDED when it expires — the late result is dropped on
+//! the floor (its reply channel tolerates a dropped waiter).
+//!
+//! Drain (wire DRAIN frame, SIGINT/SIGTERM via [`signal`], or
+//! [`Server::request_drain`]): the acceptor stops accepting, readers
+//! stop consuming new frames at their next idle poll, writers finish
+//! every in-flight response, then [`Server::join`] returns the final
+//! conservation counters.
+
+use std::io::{BufWriter, Write as _};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::wire::{
+    decode_frame, encode_response, gemm_fits, read_frame, FrameRead, Message,
+    Request, Response, Status, WireError,
+};
+use crate::coordinator::{
+    mlp_params, CoordinatorHandle, GemmResponse, MlpResponse,
+};
+use crate::decomp::GemmShape;
+use crate::exec::{bounded, Receiver, RecvTimeoutError, Sender};
+use crate::fleet::{admits, Fleet};
+use crate::tuner::ShapeBucket;
+
+/// How long the acceptor sleeps between nonblocking accept polls.
+const ACCEPT_POLL: Duration = Duration::from_millis(2);
+
+/// Per-connection socket read timeout — the cadence at which an idle
+/// reader notices the drain flag.
+const READ_TIMEOUT: Duration = Duration::from_millis(5);
+
+/// Pipelining window per connection: responses in flight between the
+/// reader and the writer. A client pipelining deeper than this is
+/// backpressured at the socket, not shed.
+const PIPELINE_WINDOW: usize = 128;
+
+/// Serving-tier configuration (a slice of [`crate::config::Settings`]).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `127.0.0.1:7070` (port 0 = ephemeral).
+    pub listen: String,
+    /// Outstanding-request admission bound shared with the fleet
+    /// simulator's open-loop shedding ([`crate::fleet::admits`]);
+    /// 0 admits everything.
+    pub admission_bound: usize,
+    /// Deadline applied to requests that carry none (0 = unlimited).
+    pub default_deadline_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            admission_bound: 0,
+            default_deadline_ms: 0,
+        }
+    }
+}
+
+/// Request-conservation counters. Every decoded GEMM/MLP request and
+/// every undecodable frame increments `offered` and exactly one of the
+/// outcome counters, so `served + shed + deadline_exceeded +
+/// bad_request + internal == offered` holds at drain — the invariant
+/// the e2e gates assert. PING/DRAIN/OBSERVE frames are control traffic
+/// and count only `observed` (OBSERVE).
+#[derive(Debug, Default)]
+pub struct NetStats {
+    offered: AtomicU64,
+    served: AtomicU64,
+    shed: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    bad_request: AtomicU64,
+    internal: AtomicU64,
+    observed: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NetStatsSnapshot {
+    pub offered: u64,
+    pub served: u64,
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub bad_request: u64,
+    pub internal: u64,
+    pub observed: u64,
+}
+
+impl NetStats {
+    pub fn snapshot(&self) -> NetStatsSnapshot {
+        NetStatsSnapshot {
+            offered: self.offered.load(Ordering::SeqCst),
+            served: self.served.load(Ordering::SeqCst),
+            shed: self.shed.load(Ordering::SeqCst),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::SeqCst),
+            bad_request: self.bad_request.load(Ordering::SeqCst),
+            internal: self.internal.load(Ordering::SeqCst),
+            observed: self.observed.load(Ordering::SeqCst),
+        }
+    }
+
+    fn count(&self, status: Status) {
+        match status {
+            Status::Ok => &self.served,
+            Status::Shed => &self.shed,
+            Status::DeadlineExceeded => &self.deadline_exceeded,
+            Status::BadRequest => &self.bad_request,
+            Status::Internal => &self.internal,
+        }
+        .fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+impl NetStatsSnapshot {
+    /// served + shed + deadline + bad + internal == offered.
+    pub fn conserved(&self) -> bool {
+        self.served
+            + self.shed
+            + self.deadline_exceeded
+            + self.bad_request
+            + self.internal
+            == self.offered
+    }
+
+    /// The stable one-line form the daemon prints at drain and the e2e
+    /// harness parses back.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "net: offered={} served={} shed={} deadline_exceeded={} \
+             bad_request={} internal={} observed={} conserved={}",
+            self.offered,
+            self.served,
+            self.shed,
+            self.deadline_exceeded,
+            self.bad_request,
+            self.internal,
+            self.observed,
+            self.conserved(),
+        )
+    }
+
+    /// Parse a [`NetStatsSnapshot::summary_line`] back (harness side).
+    pub fn parse_summary_line(line: &str) -> Option<NetStatsSnapshot> {
+        let rest = line.trim().strip_prefix("net: ")?;
+        let mut snap = NetStatsSnapshot {
+            offered: 0,
+            served: 0,
+            shed: 0,
+            deadline_exceeded: 0,
+            bad_request: 0,
+            internal: 0,
+            observed: 0,
+        };
+        for field in rest.split_whitespace() {
+            let (key, val) = field.split_once('=')?;
+            if key == "conserved" {
+                continue;
+            }
+            let val: u64 = val.parse().ok()?;
+            match key {
+                "offered" => snap.offered = val,
+                "served" => snap.served = val,
+                "shed" => snap.shed = val,
+                "deadline_exceeded" => snap.deadline_exceeded = val,
+                "bad_request" => snap.bad_request = val,
+                "internal" => snap.internal = val,
+                "observed" => snap.observed = val,
+                _ => return None,
+            }
+        }
+        Some(snap)
+    }
+}
+
+/// State shared by the acceptor and every connection thread.
+struct Shared {
+    handle: CoordinatorHandle,
+    fleet: Arc<Fleet>,
+    stats: NetStats,
+    /// Requests submitted but not yet answered, across all
+    /// connections — the operand of [`admits`].
+    in_flight: AtomicUsize,
+    drain: AtomicBool,
+    bound: usize,
+    default_deadline: Option<Duration>,
+}
+
+/// A running daemon. Dropping it does NOT stop it; call
+/// [`Server::request_drain`] + [`Server::join`].
+pub struct Server {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    acceptor: JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind and start serving. The coordinator handle and fleet come
+    /// from a running [`crate::coordinator::Coordinator`].
+    pub fn start(
+        handle: CoordinatorHandle,
+        fleet: Arc<Fleet>,
+        cfg: &ServerConfig,
+    ) -> std::io::Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            handle,
+            fleet,
+            stats: NetStats::default(),
+            in_flight: AtomicUsize::new(0),
+            drain: AtomicBool::new(false),
+            bound: cfg.admission_bound,
+            default_deadline: match cfg.default_deadline_ms {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+        });
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("streamk-net-accept".into())
+                .spawn(move || accept_loop(listener, shared))
+                .expect("spawn acceptor")
+        };
+        Ok(Server { shared, local_addr, acceptor })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Begin graceful drain: stop accepting, let in-flight finish.
+    pub fn request_drain(&self) {
+        self.shared.drain.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.drain.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> NetStatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Wait for the acceptor (and through it every connection) to
+    /// finish; returns the final conservation counters. Call
+    /// [`Server::request_drain`] first or this blocks until a wire
+    /// DRAIN / signal arrives.
+    pub fn join(self) -> NetStatsSnapshot {
+        self.acceptor.join().expect("net acceptor panicked");
+        self.shared.stats.snapshot()
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut conns: Vec<JoinHandle<()>> = Vec::new();
+    while !shared.drain.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                let shared = shared.clone();
+                match std::thread::Builder::new()
+                    .name(format!("streamk-net-conn-{peer}"))
+                    .spawn(move || serve_connection(stream, shared))
+                {
+                    Ok(h) => conns.push(h),
+                    Err(e) => eprintln!("net: WARNING: spawn failed: {e}"),
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => {
+                eprintln!("net: WARNING: accept error: {e}");
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+        // Reap finished connections so a long-lived daemon doesn't
+        // accumulate joined-out handles.
+        if conns.len() >= 32 {
+            conns.retain(|h| !h.is_finished());
+        }
+    }
+    drop(listener); // stop accepting before waiting on in-flight work
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// In-order handoff from reader to writer — the pipelining window.
+enum Pending {
+    /// Response already materialized (PING/DRAIN acks, SHED,
+    /// BAD_REQUEST).
+    Ready(Response),
+    Gemm {
+        id: u64,
+        waiter: Receiver<GemmResponse>,
+        deadline: Option<Instant>,
+    },
+    Mlp {
+        id: u64,
+        waiter: Receiver<MlpResponse>,
+        deadline: Option<Instant>,
+    },
+}
+
+fn serve_connection(stream: TcpStream, shared: Arc<Shared>) {
+    // Accepted sockets on some platforms inherit the listener's
+    // nonblocking mode; normalize, then poll via read timeout.
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(READ_TIMEOUT)).is_err() {
+        return;
+    }
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("net: WARNING: clone failed: {e}");
+            return;
+        }
+    };
+    let (tx, rx) = bounded::<Pending>(PIPELINE_WINDOW);
+    let writer = {
+        let shared = shared.clone();
+        std::thread::Builder::new()
+            .name("streamk-net-writer".into())
+            .spawn(move || writer_loop(write_half, rx, shared))
+            .expect("spawn writer")
+    };
+    reader_loop(stream, tx, &shared);
+    // tx dropped above ends the writer after it flushes the window.
+    let _ = writer.join();
+}
+
+fn reader_loop(mut stream: TcpStream, tx: Sender<Pending>, shared: &Shared) {
+    loop {
+        let body = match read_frame(&mut stream) {
+            Ok(FrameRead::Frame(b)) => b,
+            Ok(FrameRead::Idle) => {
+                if shared.drain.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Ok(FrameRead::Eof) => return,
+            Err(e) => {
+                // Stream-level failure (oversized/truncated length,
+                // stall, io): framing is unrecoverable — close.
+                if !matches!(e, WireError::Io(_)) {
+                    eprintln!("net: closing connection: {e}");
+                }
+                let _ = stream.shutdown(Shutdown::Both);
+                return;
+            }
+        };
+        let req = match decode_frame(&body) {
+            Ok(Message::Request(r)) => r,
+            Ok(Message::Response(r)) => {
+                // A response frame client→server is a protocol misuse;
+                // answer typed, keep the stream (framing is intact).
+                shared.stats.offered.fetch_add(1, Ordering::SeqCst);
+                shared.stats.count(Status::BadRequest);
+                let resp = Response::error(
+                    r.id,
+                    Status::BadRequest,
+                    "unexpected response frame",
+                );
+                if tx.send(Pending::Ready(resp)).is_err() {
+                    return;
+                }
+                continue;
+            }
+            Err(e) => {
+                // Body-level corruption: the length prefix still
+                // delimited the frame, so the stream stays in sync —
+                // reply BAD_REQUEST and keep serving.
+                shared.stats.offered.fetch_add(1, Ordering::SeqCst);
+                shared.stats.count(Status::BadRequest);
+                let resp = Response::error(
+                    0,
+                    Status::BadRequest,
+                    &format!("decode: {e}"),
+                );
+                if tx.send(Pending::Ready(resp)).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        if !handle_request(req, &tx, shared) {
+            return;
+        }
+    }
+}
+
+/// Returns false when the connection should close (writer gone).
+fn handle_request(req: Request, tx: &Sender<Pending>, shared: &Shared) -> bool {
+    match req {
+        Request::Ping { id } => tx
+            .send(Pending::Ready(Response {
+                id,
+                status: Status::Ok,
+                device: 0,
+                queue_us: 0,
+                execute_us: 0,
+                payload: Vec::new(),
+            }))
+            .is_ok(),
+        Request::Drain { id } => {
+            shared.drain.store(true, Ordering::SeqCst);
+            tx.send(Pending::Ready(Response {
+                id,
+                status: Status::Ok,
+                device: 0,
+                queue_us: 0,
+                execute_us: 0,
+                payload: Vec::new(),
+            }))
+            .is_ok()
+        }
+        Request::Observe { device, m, n, k, latency_us, .. } => {
+            observe(shared, device, m, n, k, latency_us);
+            true
+        }
+        Request::Gemm { id, deadline_us, m, n, k, a, b } => {
+            shared.stats.offered.fetch_add(1, Ordering::SeqCst);
+            if !gemm_fits(m, n, k) {
+                shared.stats.count(Status::BadRequest);
+                return tx
+                    .send(Pending::Ready(Response::error(
+                        id,
+                        Status::BadRequest,
+                        &format!("{m}x{n}x{k} result exceeds max frame"),
+                    )))
+                    .is_ok();
+            }
+            if !admits(shared.in_flight.load(Ordering::SeqCst), shared.bound)
+            {
+                shared.stats.count(Status::Shed);
+                return tx
+                    .send(Pending::Ready(Response::error(
+                        id,
+                        Status::Shed,
+                        "admission bound reached",
+                    )))
+                    .is_ok();
+            }
+            match shared.handle.try_submit_gemm(
+                m as usize, n as usize, k as usize, a, b,
+            ) {
+                Some(waiter) => {
+                    shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                    tx.send(Pending::Gemm {
+                        id,
+                        waiter,
+                        deadline: deadline_of(deadline_us, shared),
+                    })
+                    .is_ok()
+                }
+                None => {
+                    shared.stats.count(Status::Shed);
+                    tx.send(Pending::Ready(Response::error(
+                        id,
+                        Status::Shed,
+                        "coordinator queue full",
+                    )))
+                    .is_ok()
+                }
+            }
+        }
+        Request::Mlp { id, deadline_us, rows, d_in, x } => {
+            shared.stats.offered.fetch_add(1, Ordering::SeqCst);
+            let want = mlp_params().d_in;
+            if d_in as usize != want {
+                shared.stats.count(Status::BadRequest);
+                return tx
+                    .send(Pending::Ready(Response::error(
+                        id,
+                        Status::BadRequest,
+                        &format!("mlp d_in {d_in} != served width {want}"),
+                    )))
+                    .is_ok();
+            }
+            if !admits(shared.in_flight.load(Ordering::SeqCst), shared.bound)
+            {
+                shared.stats.count(Status::Shed);
+                return tx
+                    .send(Pending::Ready(Response::error(
+                        id,
+                        Status::Shed,
+                        "admission bound reached",
+                    )))
+                    .is_ok();
+            }
+            match shared.handle.try_submit_mlp(rows as usize, x) {
+                Some(waiter) => {
+                    shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                    tx.send(Pending::Mlp {
+                        id,
+                        waiter,
+                        deadline: deadline_of(deadline_us, shared),
+                    })
+                    .is_ok()
+                }
+                None => {
+                    shared.stats.count(Status::Shed);
+                    tx.send(Pending::Ready(Response::error(
+                        id,
+                        Status::Shed,
+                        "coordinator queue full",
+                    )))
+                    .is_ok()
+                }
+            }
+        }
+    }
+}
+
+fn deadline_of(deadline_us: u64, shared: &Shared) -> Option<Instant> {
+    match deadline_us {
+        0 => shared.default_deadline.map(|d| Instant::now() + d),
+        us => Some(Instant::now() + Duration::from_micros(us)),
+    }
+}
+
+/// Fold a client-observed latency into the owning device's online
+/// Block2Time loop: `Tuner::observe` via
+/// [`Fleet::observe_residual`], and the metrics residual tracker under
+/// a `net|`-prefixed bucket so network-path residuals stay separable
+/// from in-process execute residuals.
+fn observe(shared: &Shared, device: u32, m: u32, n: u32, k: u32, us: u64) {
+    let idx = device as usize;
+    if idx >= shared.fleet.len() || us == 0 {
+        return;
+    }
+    let shape = GemmShape::new(m as usize, n as usize, k as usize);
+    if shape.is_degenerate() {
+        return;
+    }
+    let measured_s = us as f64 / 1e6;
+    let predicted = shared.fleet.predict_exec(idx, shape);
+    shared.fleet.observe_residual(idx, shape, predicted, measured_s);
+    let bucket = crate::trace::profile::width_key(
+        &ShapeBucket::of(shape).key(),
+        shared.fleet.width(),
+    );
+    shared.handle.metrics().on_residual(
+        &format!("net|{bucket}"),
+        predicted,
+        measured_s,
+    );
+    shared.stats.observed.fetch_add(1, Ordering::SeqCst);
+}
+
+fn writer_loop(stream: TcpStream, rx: Receiver<Pending>, shared: Arc<Shared>) {
+    let mut w = BufWriter::new(stream);
+    // After a write failure the peer is gone: keep draining the window
+    // so every in-flight request is still accounted (INTERNAL) and
+    // `in_flight` returns to balance, but write nothing.
+    let mut broken = false;
+    while let Ok(p) = rx.recv() {
+        let resp = match p {
+            Pending::Ready(r) => r,
+            Pending::Gemm { id, waiter, deadline } => {
+                let resp = await_gemm(id, waiter, deadline);
+                shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                shared.stats.count(resp.status);
+                resp
+            }
+            Pending::Mlp { id, waiter, deadline } => {
+                let resp = await_mlp(id, waiter, deadline);
+                shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                shared.stats.count(resp.status);
+                resp
+            }
+        };
+        if !broken {
+            let frame = encode_response(&resp);
+            if w.write_all(&frame).and_then(|_| w.flush()).is_err() {
+                broken = true;
+            }
+        }
+    }
+}
+
+fn f32_bytes(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn await_gemm(
+    id: u64,
+    waiter: Receiver<GemmResponse>,
+    deadline: Option<Instant>,
+) -> Response {
+    match wait(&waiter, deadline) {
+        Ok(g) => match g.result {
+            Ok(c) => Response {
+                id,
+                status: Status::Ok,
+                device: g.device as u32,
+                queue_us: (g.queue_s * 1e6) as u64,
+                execute_us: (g.execute_s * 1e6) as u64,
+                payload: f32_bytes(&c),
+            },
+            Err(msg) => {
+                let mut r = Response::error(id, Status::Internal, &msg);
+                r.device = g.device as u32;
+                r
+            }
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            Response::error(id, Status::DeadlineExceeded, "deadline expired")
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            Response::error(id, Status::Internal, "coordinator gone")
+        }
+    }
+}
+
+fn await_mlp(
+    id: u64,
+    waiter: Receiver<MlpResponse>,
+    deadline: Option<Instant>,
+) -> Response {
+    match wait(&waiter, deadline) {
+        Ok(m) => match m.result {
+            Ok(y) => Response {
+                id,
+                status: Status::Ok,
+                device: 0,
+                queue_us: (m.queue_s * 1e6) as u64,
+                execute_us: (m.execute_s * 1e6) as u64,
+                payload: f32_bytes(&y),
+            },
+            Err(msg) => Response::error(id, Status::Internal, &msg),
+        },
+        Err(RecvTimeoutError::Timeout) => {
+            Response::error(id, Status::DeadlineExceeded, "deadline expired")
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            Response::error(id, Status::Internal, "coordinator gone")
+        }
+    }
+}
+
+fn wait<T>(
+    waiter: &Receiver<T>,
+    deadline: Option<Instant>,
+) -> Result<T, RecvTimeoutError> {
+    match deadline {
+        None => waiter.recv().map_err(|_| RecvTimeoutError::Disconnected),
+        Some(d) => {
+            waiter.recv_timeout(d.saturating_duration_since(Instant::now()))
+        }
+    }
+}
+
+/// Process-signal → drain-flag bridge, std-only: `std` already links
+/// libc on unix, so `signal(2)` is reachable without a crate. The
+/// handler only stores an `AtomicBool` (async-signal-safe); the
+/// daemon's main loop polls [`triggered`] and converts it into
+/// [`Server::request_drain`].
+pub mod signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALLED.store(true, Ordering::SeqCst);
+    }
+
+    /// Route SIGINT and SIGTERM to the drain flag.
+    #[cfg(unix)]
+    pub fn install() {
+        extern "C" {
+            fn signal(
+                signum: i32,
+                handler: extern "C" fn(i32),
+            ) -> usize;
+        }
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal);
+            signal(SIGTERM, on_signal);
+        }
+    }
+
+    #[cfg(not(unix))]
+    pub fn install() {}
+
+    pub fn triggered() -> bool {
+        SIGNALLED.load(Ordering::SeqCst)
+    }
+
+    /// Test hook: pretend a signal arrived / clear it again.
+    pub fn set(v: bool) {
+        SIGNALLED.store(v, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_conservation_and_summary_roundtrip() {
+        let stats = NetStats::default();
+        for (status, times) in [
+            (Status::Ok, 5),
+            (Status::Shed, 2),
+            (Status::DeadlineExceeded, 1),
+            (Status::BadRequest, 1),
+            (Status::Internal, 1),
+        ] {
+            for _ in 0..times {
+                stats.offered.fetch_add(1, Ordering::SeqCst);
+                stats.count(status);
+            }
+        }
+        stats.observed.fetch_add(5, Ordering::SeqCst);
+        let snap = stats.snapshot();
+        assert!(snap.conserved());
+        assert_eq!(snap.offered, 10);
+        let line = snap.summary_line();
+        assert_eq!(
+            NetStatsSnapshot::parse_summary_line(&line),
+            Some(snap),
+            "{line}"
+        );
+        assert_eq!(NetStatsSnapshot::parse_summary_line("plan: x"), None);
+    }
+
+    #[test]
+    fn admission_predicate_matches_sim() {
+        // bound 0 admits everything; otherwise strict outstanding <
+        // bound — the exact predicate `fleet::sim` sheds with.
+        assert!(admits(1_000_000, 0));
+        assert!(admits(0, 1));
+        assert!(!admits(1, 1));
+        assert!(admits(7, 8));
+        assert!(!admits(8, 8));
+    }
+
+    #[test]
+    fn signal_flag_bridges() {
+        signal::set(false);
+        assert!(!signal::triggered());
+        signal::set(true);
+        assert!(signal::triggered());
+        signal::set(false);
+    }
+}

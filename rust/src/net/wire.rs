@@ -1,0 +1,967 @@
+//! Framed wire protocol for the TCP serving tier (DESIGN.md §2:
+//! std-only, hand-rolled like the rest of the crate).
+//!
+//! Every message is one length-prefixed frame:
+//!
+//! ```text
+//! u32 LE   body length (≤ MAX_FRAME)
+//! body:
+//!   [0..2]   magic "SK"
+//!   [2]      version (VERSION = 1)
+//!   [3]      kind (GEMM=1, MLP=2, PING=3, DRAIN=4, OBSERVE=5,
+//!            RESPONSE=0x80)
+//!   [4..8]   u32 LE FNV-1a checksum over body[8..]
+//!   [8..16]  u64 LE request id
+//!   [16..]   kind-specific payload (all ints LE, all floats f32 LE)
+//! ```
+//!
+//! Kind payloads:
+//!
+//! | kind     | payload                                               |
+//! |----------|-------------------------------------------------------|
+//! | GEMM     | deadline_us u64, m u32, n u32, k u32, a (m·k f32), b (k·n f32) |
+//! | MLP      | deadline_us u64, rows u32, d_in u32, x (rows·d_in f32) |
+//! | PING     | empty                                                 |
+//! | DRAIN    | empty                                                 |
+//! | OBSERVE  | device u32, m u32, n u32, k u32, latency_us u64       |
+//! | RESPONSE | status u8, device u32, queue_us u64, execute_us u64, payload |
+//!
+//! A RESPONSE payload is the f32 result matrix when status is OK and a
+//! UTF-8 diagnostic otherwise. OBSERVE is one-way (client → server):
+//! the client's *measured* round-trip latency for a completed request,
+//! folded into the owning device's Block2Time residual loop.
+//!
+//! Corruption model: a bit flip in `body[8..]` trips the checksum; a
+//! flip in the header trips the magic/version/kind checks; a flip in
+//! the checksum field itself mismatches. Decode therefore returns a
+//! typed [`WireError`] — never panics — and because the length prefix
+//! delimits the frame independently of the body contents, a corrupt
+//! body never misframes the *next* request on the stream. Only a
+//! corrupt length prefix (caught as [`WireError::Oversized`] or a
+//! mid-frame EOF) loses sync, and the connection is closed.
+
+use std::fmt;
+use std::io::{ErrorKind, Read, Write};
+
+/// Protocol version spoken by this build.
+pub const VERSION: u8 = 1;
+
+/// Frame body cap: 64 MiB — a 2048³ f32 GEMM request (a‖b) fits with
+/// headroom, and a hostile length prefix can't OOM the daemon.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Per-dimension cap on m/n/k/rows (keeps payload-size arithmetic far
+/// from overflow even before the MAX_FRAME check).
+pub const MAX_DIM: u32 = 1 << 16;
+
+const MAGIC: [u8; 2] = *b"SK";
+const HEADER: usize = 16;
+
+const KIND_GEMM: u8 = 1;
+const KIND_MLP: u8 = 2;
+const KIND_PING: u8 = 3;
+const KIND_DRAIN: u8 = 4;
+const KIND_OBSERVE: u8 = 5;
+const KIND_RESPONSE: u8 = 0x80;
+
+/// Typed response status — the wire error taxonomy. Shed vs. crash vs.
+/// caller bug is diagnosable from the client side.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    /// Admission control rejected the request (overload). Retryable.
+    Shed,
+    /// The request's deadline expired before execution finished.
+    DeadlineExceeded,
+    /// Malformed request (decode error, zero dim, oversized). Terminal.
+    BadRequest,
+    /// Engine/coordinator failure. Retryable (fail over).
+    Internal,
+}
+
+impl Status {
+    pub fn code(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Shed => 1,
+            Status::DeadlineExceeded => 2,
+            Status::BadRequest => 3,
+            Status::Internal => 4,
+        }
+    }
+
+    pub fn from_code(code: u8) -> Option<Status> {
+        match code {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Shed),
+            2 => Some(Status::DeadlineExceeded),
+            3 => Some(Status::BadRequest),
+            4 => Some(Status::Internal),
+            _ => None,
+        }
+    }
+
+    /// Whether a client should retry (possibly on another server).
+    /// SHED and INTERNAL are server-side conditions another replica may
+    /// not share; BAD_REQUEST and DEADLINE_EXCEEDED travel with the
+    /// request itself.
+    pub fn retryable(self) -> bool {
+        matches!(self, Status::Shed | Status::Internal)
+    }
+}
+
+impl fmt::Display for Status {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Status::Ok => "OK",
+            Status::Shed => "SHED",
+            Status::DeadlineExceeded => "DEADLINE_EXCEEDED",
+            Status::BadRequest => "BAD_REQUEST",
+            Status::Internal => "INTERNAL",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Typed decode/transport errors. Decoding malformed bytes returns one
+/// of these — it must never panic the daemon.
+#[derive(Debug)]
+pub enum WireError {
+    Io(std::io::Error),
+    /// Frame body shorter than its layout requires.
+    Truncated { need: usize, got: usize },
+    /// Length prefix beyond [`MAX_FRAME`].
+    Oversized { len: usize, max: usize },
+    BadMagic([u8; 2]),
+    BadVersion(u8),
+    BadKind(u8),
+    BadChecksum { expect: u32, got: u32 },
+    /// Structurally valid header, inconsistent payload (wrong length,
+    /// zero/oversized dims, unknown status code, ...).
+    BadPayload(String),
+    /// Peer stalled mid-frame past the reader's patience.
+    Stalled,
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "io: {e}"),
+            WireError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            WireError::Oversized { len, max } => {
+                write!(f, "oversized frame: {len} bytes > max {max}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad magic {m:02x?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            WireError::BadChecksum { expect, got } => write!(
+                f,
+                "checksum mismatch: expect {expect:#010x}, got {got:#010x}"
+            ),
+            WireError::BadPayload(msg) => write!(f, "bad payload: {msg}"),
+            WireError::Stalled => write!(f, "peer stalled mid-frame"),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+/// A decoded client → server frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Gemm {
+        id: u64,
+        /// 0 = no deadline; otherwise µs from server receipt.
+        deadline_us: u64,
+        m: u32,
+        n: u32,
+        k: u32,
+        a: Vec<f32>,
+        b: Vec<f32>,
+    },
+    Mlp {
+        id: u64,
+        deadline_us: u64,
+        rows: u32,
+        d_in: u32,
+        x: Vec<f32>,
+    },
+    Ping { id: u64 },
+    /// Admin: begin graceful drain (stop accepting, finish in-flight).
+    Drain { id: u64 },
+    /// One-way client-observed latency report for a completed request.
+    Observe {
+        id: u64,
+        device: u32,
+        m: u32,
+        n: u32,
+        k: u32,
+        latency_us: u64,
+    },
+}
+
+impl Request {
+    pub fn id(&self) -> u64 {
+        match self {
+            Request::Gemm { id, .. }
+            | Request::Mlp { id, .. }
+            | Request::Ping { id }
+            | Request::Drain { id }
+            | Request::Observe { id, .. } => *id,
+        }
+    }
+}
+
+/// A decoded server → client frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub status: Status,
+    /// Fleet device that served it (attribution for OBSERVE).
+    pub device: u32,
+    pub queue_us: u64,
+    pub execute_us: u64,
+    /// f32 LE result when status is OK, UTF-8 diagnostic otherwise.
+    pub payload: Vec<u8>,
+}
+
+impl Response {
+    /// Error-path response carrying a diagnostic message.
+    pub fn error(id: u64, status: Status, message: &str) -> Self {
+        Response {
+            id,
+            status,
+            device: 0,
+            queue_us: 0,
+            execute_us: 0,
+            payload: message.as_bytes().to_vec(),
+        }
+    }
+
+    /// The OK payload as f32s; the diagnostic string otherwise.
+    pub fn floats(&self) -> Vec<f32> {
+        self.payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+
+    pub fn message(&self) -> String {
+        String::from_utf8_lossy(&self.payload).into_owned()
+    }
+}
+
+/// Any decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Request(Request),
+    Response(Response),
+}
+
+/// FNV-1a 32-bit (public-domain constants).
+pub fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Assemble a full frame (length prefix + body) for a kind + id +
+/// already-encoded payload, patching in the checksum.
+fn frame(kind: u8, id: u64, payload: &[u8]) -> Vec<u8> {
+    let body_len = HEADER + payload.len();
+    assert!(
+        body_len <= MAX_FRAME,
+        "frame body {body_len} exceeds MAX_FRAME — callers must size-check \
+         before encoding"
+    );
+    let mut out = Vec::with_capacity(4 + body_len);
+    push_u32(&mut out, body_len as u32);
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(kind);
+    push_u32(&mut out, 0); // checksum placeholder
+    push_u64(&mut out, id);
+    out.extend_from_slice(payload);
+    let sum = fnv1a(&out[12..]); // body[8..] = frame[12..]
+    out[8..12].copy_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// Whether a GEMM of this shape fits both its request frame (a‖b) and
+/// its response frame (m·n result) under [`MAX_FRAME`]. Clients check
+/// before encoding; the server checks before executing so an
+/// unanswerable request gets BAD_REQUEST instead of a panic.
+pub fn gemm_fits(m: u32, n: u32, k: u32) -> bool {
+    let (m, n, k) = (m as u128, n as u128, k as u128);
+    let req = (HEADER + 20) as u128 + 4 * (m * k + k * n);
+    let resp = (HEADER + 21) as u128 + 4 * m * n;
+    req <= MAX_FRAME as u128 && resp <= MAX_FRAME as u128
+}
+
+/// Encode a request as a full frame (length prefix included).
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Gemm { id, deadline_us, m, n, k, a, b } => {
+            let mut p = Vec::with_capacity(20 + (a.len() + b.len()) * 4);
+            push_u64(&mut p, *deadline_us);
+            push_u32(&mut p, *m);
+            push_u32(&mut p, *n);
+            push_u32(&mut p, *k);
+            push_f32s(&mut p, a);
+            push_f32s(&mut p, b);
+            frame(KIND_GEMM, *id, &p)
+        }
+        Request::Mlp { id, deadline_us, rows, d_in, x } => {
+            let mut p = Vec::with_capacity(16 + x.len() * 4);
+            push_u64(&mut p, *deadline_us);
+            push_u32(&mut p, *rows);
+            push_u32(&mut p, *d_in);
+            push_f32s(&mut p, x);
+            frame(KIND_MLP, *id, &p)
+        }
+        Request::Ping { id } => frame(KIND_PING, *id, &[]),
+        Request::Drain { id } => frame(KIND_DRAIN, *id, &[]),
+        Request::Observe { id, device, m, n, k, latency_us } => {
+            let mut p = Vec::with_capacity(24);
+            push_u32(&mut p, *device);
+            push_u32(&mut p, *m);
+            push_u32(&mut p, *n);
+            push_u32(&mut p, *k);
+            push_u64(&mut p, *latency_us);
+            frame(KIND_OBSERVE, *id, &p)
+        }
+    }
+}
+
+/// Encode a response as a full frame (length prefix included).
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut p = Vec::with_capacity(21 + resp.payload.len());
+    p.push(resp.status.code());
+    push_u32(&mut p, resp.device);
+    push_u64(&mut p, resp.queue_us);
+    push_u64(&mut p, resp.execute_us);
+    p.extend_from_slice(&resp.payload);
+    frame(KIND_RESPONSE, resp.id, &p)
+}
+
+/// Little cursor over a frame body; every read is bounds-checked into
+/// [`WireError::Truncated`].
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let end = self.pos.checked_add(n).ok_or(WireError::Truncated {
+            need: usize::MAX,
+            got: self.buf.len(),
+        })?;
+        if end > self.buf.len() {
+            return Err(WireError::Truncated { need: end, got: self.buf.len() });
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn f32s_exact(bytes: &[u8], want: usize, what: &str) -> Result<Vec<f32>, WireError> {
+    let want_bytes = want.checked_mul(4).ok_or_else(|| {
+        WireError::BadPayload(format!("{what}: element count overflows"))
+    })?;
+    if bytes.len() != want_bytes {
+        return Err(WireError::BadPayload(format!(
+            "{what}: expected {want_bytes} payload bytes ({want} f32s), got {}",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn check_dim(v: u32, what: &str) -> Result<usize, WireError> {
+    if v == 0 {
+        return Err(WireError::BadPayload(format!("{what} is zero")));
+    }
+    if v > MAX_DIM {
+        return Err(WireError::BadPayload(format!(
+            "{what} {v} exceeds max {MAX_DIM}"
+        )));
+    }
+    Ok(v as usize)
+}
+
+/// Decode one frame *body* (the bytes after the length prefix) into a
+/// typed message. All failure modes are typed errors; never panics.
+pub fn decode_frame(body: &[u8]) -> Result<Message, WireError> {
+    if body.len() < HEADER {
+        return Err(WireError::Truncated { need: HEADER, got: body.len() });
+    }
+    if body[0..2] != MAGIC {
+        return Err(WireError::BadMagic([body[0], body[1]]));
+    }
+    if body[2] != VERSION {
+        return Err(WireError::BadVersion(body[2]));
+    }
+    let kind = body[3];
+    let expect = u32::from_le_bytes([body[4], body[5], body[6], body[7]]);
+    let got = fnv1a(&body[8..]);
+    if expect != got {
+        return Err(WireError::BadChecksum { expect, got });
+    }
+    let mut c = Cursor::new(&body[8..]);
+    let id = c.u64()?;
+    match kind {
+        KIND_GEMM => {
+            let deadline_us = c.u64()?;
+            let m = c.u32()?;
+            let n = c.u32()?;
+            let k = c.u32()?;
+            let (mu, nu, ku) =
+                (check_dim(m, "m")?, check_dim(n, "n")?, check_dim(k, "k")?);
+            let a_len = mu * ku; // ≤ 2^32, no overflow after check_dim
+            let b_len = ku * nu;
+            let rest = c.rest();
+            let a_bytes = a_len.checked_mul(4).and_then(|v| {
+                if v <= rest.len() { Some(v) } else { None }
+            });
+            let Some(a_bytes) = a_bytes else {
+                return Err(WireError::BadPayload(format!(
+                    "gemm a: expected {a_len} f32s, payload has {} bytes",
+                    rest.len()
+                )));
+            };
+            let a = f32s_exact(&rest[..a_bytes], a_len, "gemm a")?;
+            let b = f32s_exact(&rest[a_bytes..], b_len, "gemm b")?;
+            Ok(Message::Request(Request::Gemm {
+                id,
+                deadline_us,
+                m,
+                n,
+                k,
+                a,
+                b,
+            }))
+        }
+        KIND_MLP => {
+            let deadline_us = c.u64()?;
+            let rows = c.u32()?;
+            let d_in = c.u32()?;
+            let (r, d) =
+                (check_dim(rows, "rows")?, check_dim(d_in, "d_in")?);
+            let x = f32s_exact(c.rest(), r * d, "mlp x")?;
+            Ok(Message::Request(Request::Mlp {
+                id,
+                deadline_us,
+                rows,
+                d_in,
+                x,
+            }))
+        }
+        KIND_PING | KIND_DRAIN => {
+            if c.remaining() != 0 {
+                return Err(WireError::BadPayload(format!(
+                    "kind {kind} carries {} unexpected payload bytes",
+                    c.remaining()
+                )));
+            }
+            Ok(Message::Request(if kind == KIND_PING {
+                Request::Ping { id }
+            } else {
+                Request::Drain { id }
+            }))
+        }
+        KIND_OBSERVE => {
+            let device = c.u32()?;
+            let m = c.u32()?;
+            let n = c.u32()?;
+            let k = c.u32()?;
+            let latency_us = c.u64()?;
+            if c.remaining() != 0 {
+                return Err(WireError::BadPayload(format!(
+                    "observe carries {} trailing bytes",
+                    c.remaining()
+                )));
+            }
+            Ok(Message::Request(Request::Observe {
+                id,
+                device,
+                m,
+                n,
+                k,
+                latency_us,
+            }))
+        }
+        KIND_RESPONSE => {
+            let code = c.u8()?;
+            let status = Status::from_code(code).ok_or(
+                WireError::BadPayload(format!("unknown status code {code}")),
+            )?;
+            let device = c.u32()?;
+            let queue_us = c.u64()?;
+            let execute_us = c.u64()?;
+            let payload = c.rest().to_vec();
+            Ok(Message::Response(Response {
+                id,
+                status,
+                device,
+                queue_us,
+                execute_us,
+                payload,
+            }))
+        }
+        other => Err(WireError::BadKind(other)),
+    }
+}
+
+/// Outcome of one [`read_frame`] poll.
+#[derive(Debug)]
+pub enum FrameRead {
+    /// One complete frame body (length prefix stripped, not decoded).
+    Frame(Vec<u8>),
+    /// Read timeout fired *between* frames — nothing in flight. The
+    /// server's idle/drain check point.
+    Idle,
+    /// Clean EOF at a frame boundary.
+    Eof,
+}
+
+/// Consecutive mid-frame read timeouts tolerated before declaring the
+/// peer stalled. With the server's ~5 ms read timeout this is ≈2 s.
+const STALL_PATIENCE: u32 = 400;
+
+fn read_byte(r: &mut impl Read) -> Result<Option<u8>, std::io::Error> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None),
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Fill `buf` completely, tolerating up to [`STALL_PATIENCE`]
+/// consecutive timeouts (mid-frame, a slow peer gets bounded patience,
+/// then the connection is dropped rather than wedging a reader thread).
+fn read_full(r: &mut impl Read, buf: &mut [u8]) -> Result<(), WireError> {
+    let mut filled = 0;
+    let mut stalls = 0u32;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return Err(WireError::Truncated {
+                    need: buf.len(),
+                    got: filled,
+                })
+            }
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e)
+                if e.kind() == ErrorKind::WouldBlock
+                    || e.kind() == ErrorKind::TimedOut =>
+            {
+                stalls += 1;
+                if stalls >= STALL_PATIENCE {
+                    return Err(WireError::Stalled);
+                }
+            }
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// Read one frame from a stream. Only the wait for the *first* byte of
+/// the length prefix treats a read timeout as [`FrameRead::Idle`]; once
+/// a frame has started, reads push through timeouts (bounded by
+/// [`STALL_PATIENCE`]) so a timeout can never split a frame.
+pub fn read_frame(r: &mut impl Read) -> Result<FrameRead, WireError> {
+    let first = match read_byte(r) {
+        Ok(Some(b)) => b,
+        Ok(None) => return Ok(FrameRead::Eof),
+        Err(e)
+            if e.kind() == ErrorKind::WouldBlock
+                || e.kind() == ErrorKind::TimedOut =>
+        {
+            return Ok(FrameRead::Idle)
+        }
+        Err(e) => return Err(WireError::Io(e)),
+    };
+    let mut len_rest = [0u8; 3];
+    read_full(r, &mut len_rest)?;
+    let len = u32::from_le_bytes([first, len_rest[0], len_rest[1], len_rest[2]])
+        as usize;
+    if len > MAX_FRAME {
+        return Err(WireError::Oversized { len, max: MAX_FRAME });
+    }
+    if len < HEADER {
+        return Err(WireError::Truncated { need: HEADER, got: len });
+    }
+    let mut body = vec![0u8; len];
+    read_full(r, &mut body)?;
+    Ok(FrameRead::Frame(body))
+}
+
+/// Write one already-encoded frame (length prefix included).
+pub fn write_frame(w: &mut impl Write, frame: &[u8]) -> Result<(), WireError> {
+    w.write_all(frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop::{check, ensure, ensure_eq, Rng};
+
+    fn arb_request(rng: &mut Rng) -> Request {
+        match rng.usize_in(0, 4) {
+            0 => {
+                let m = rng.usize_in(1, 12) as u32;
+                let n = rng.usize_in(1, 12) as u32;
+                let k = rng.usize_in(1, 12) as u32;
+                let a = rng.normal_f32_vec((m * k) as usize);
+                let b = rng.normal_f32_vec((k * n) as usize);
+                Request::Gemm {
+                    id: rng.next_u64(),
+                    deadline_us: rng.range(0, 10_000_000),
+                    m,
+                    n,
+                    k,
+                    a,
+                    b,
+                }
+            }
+            1 => {
+                let rows = rng.usize_in(1, 16) as u32;
+                let d_in = rng.usize_in(1, 16) as u32;
+                let x = rng.normal_f32_vec((rows * d_in) as usize);
+                Request::Mlp {
+                    id: rng.next_u64(),
+                    deadline_us: rng.range(0, 10_000_000),
+                    rows,
+                    d_in,
+                    x,
+                }
+            }
+            2 => Request::Ping { id: rng.next_u64() },
+            3 => Request::Drain { id: rng.next_u64() },
+            _ => Request::Observe {
+                id: rng.next_u64(),
+                device: rng.range(0, 7) as u32,
+                m: rng.usize_in(1, 4096) as u32,
+                n: rng.usize_in(1, 4096) as u32,
+                k: rng.usize_in(1, 4096) as u32,
+                latency_us: rng.range(1, 50_000_000),
+            },
+        }
+    }
+
+    fn arb_response(rng: &mut Rng) -> Response {
+        let status = *rng.choose(&[
+            Status::Ok,
+            Status::Shed,
+            Status::DeadlineExceeded,
+            Status::BadRequest,
+            Status::Internal,
+        ]);
+        let payload = if status == Status::Ok {
+            let floats = rng.normal_f32_vec(rng.usize_in(0, 64));
+            let mut p = Vec::new();
+            super::push_f32s(&mut p, &floats);
+            p
+        } else {
+            format!("diag {}", rng.next_u64()).into_bytes()
+        };
+        Response {
+            id: rng.next_u64(),
+            status,
+            device: rng.range(0, 7) as u32,
+            queue_us: rng.range(0, 1_000_000),
+            execute_us: rng.range(0, 1_000_000),
+            payload,
+        }
+    }
+
+    /// f32 equality by bit pattern — roundtrip must be lossless even
+    /// through NaN-adjacent values.
+    fn req_eq(a: &Request, b: &Request) -> bool {
+        match (a, b) {
+            (
+                Request::Gemm { id, deadline_us, m, n, k, a: aa, b: ab },
+                Request::Gemm {
+                    id: i2,
+                    deadline_us: d2,
+                    m: m2,
+                    n: n2,
+                    k: k2,
+                    a: ba,
+                    b: bb,
+                },
+            ) => {
+                id == i2
+                    && deadline_us == d2
+                    && m == m2
+                    && n == n2
+                    && k == k2
+                    && bits(aa) == bits(ba)
+                    && bits(ab) == bits(bb)
+            }
+            (
+                Request::Mlp { id, deadline_us, rows, d_in, x },
+                Request::Mlp {
+                    id: i2,
+                    deadline_us: d2,
+                    rows: r2,
+                    d_in: di2,
+                    x: x2,
+                },
+            ) => {
+                id == i2
+                    && deadline_us == d2
+                    && rows == r2
+                    && d_in == di2
+                    && bits(x) == bits(x2)
+            }
+            _ => a == b,
+        }
+    }
+
+    fn bits(xs: &[f32]) -> Vec<u32> {
+        xs.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn roundtrip_requests_and_responses() {
+        check("wire roundtrip", 200, |rng| {
+            let req = arb_request(rng);
+            let frame = encode_request(&req);
+            let body = &frame[4..];
+            ensure_eq(
+                u32::from_le_bytes([frame[0], frame[1], frame[2], frame[3]])
+                    as usize,
+                body.len(),
+                "length prefix",
+            )?;
+            match decode_frame(body) {
+                Ok(Message::Request(got)) => {
+                    ensure(req_eq(&req, &got), format!("request mismatch: {got:?}"))?
+                }
+                other => return Err(format!("decode: {other:?}")),
+            }
+            let resp = arb_response(rng);
+            let frame = encode_response(&resp);
+            match decode_frame(&frame[4..]) {
+                Ok(Message::Response(got)) => {
+                    ensure_eq(got, resp.clone(), "response roundtrip")?
+                }
+                other => return Err(format!("decode resp: {other:?}")),
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn truncation_is_typed_never_panics() {
+        check("wire truncation", 200, |rng| {
+            let frame = encode_request(&arb_request(rng));
+            let body = &frame[4..];
+            let cut = rng.usize_in(0, body.len() - 1);
+            match decode_frame(&body[..cut]) {
+                Err(_) => Ok(()),
+                Ok(m) => Err(format!("truncated body decoded as {m:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_typed() {
+        let huge = ((MAX_FRAME + 1) as u32).to_le_bytes();
+        let mut cur = std::io::Cursor::new(huge.to_vec());
+        match read_frame(&mut cur) {
+            Err(WireError::Oversized { .. }) => {}
+            other => panic!("expected Oversized, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stream_truncated_mid_frame_is_typed() {
+        let frame = encode_request(&Request::Ping { id: 7 });
+        let mut cur = std::io::Cursor::new(frame[..frame.len() - 3].to_vec());
+        match read_frame(&mut cur) {
+            Err(WireError::Truncated { .. }) => {}
+            other => panic!("expected Truncated, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bit_flip_anywhere_in_body_is_typed() {
+        check("wire bit flip", 300, |rng| {
+            let frame = encode_request(&arb_request(rng));
+            let mut body = frame[4..].to_vec();
+            let byte = rng.usize_in(0, body.len() - 1);
+            let bit = rng.usize_in(0, 7);
+            body[byte] ^= 1 << bit;
+            match decode_frame(&body) {
+                Err(_) => Ok(()),
+                Ok(m) => Err(format!(
+                    "flipped bit {bit} of byte {byte} decoded as {m:?}"
+                )),
+            }
+        });
+    }
+
+    #[test]
+    fn corrupt_body_never_misframes_the_next_request() {
+        check("wire resync", 100, |rng| {
+            let first = arb_request(rng);
+            let second = Request::Ping { id: rng.next_u64() };
+            let mut f1 = encode_request(&first);
+            let f2 = encode_request(&second);
+            // Corrupt the first frame's *body* (never its length
+            // prefix): the length still delimits it, so the second
+            // frame must decode untouched.
+            let byte = rng.usize_in(4, f1.len() - 1);
+            f1[byte] ^= 1 << rng.usize_in(0, 7);
+            let mut stream = f1;
+            stream.extend_from_slice(&f2);
+            let mut cur = std::io::Cursor::new(stream);
+            let b1 = match read_frame(&mut cur) {
+                Ok(FrameRead::Frame(b)) => b,
+                other => return Err(format!("first read: {other:?}")),
+            };
+            ensure(
+                decode_frame(&b1).is_err(),
+                "corrupt first body must not decode",
+            )?;
+            let b2 = match read_frame(&mut cur) {
+                Ok(FrameRead::Frame(b)) => b,
+                other => return Err(format!("second read: {other:?}")),
+            };
+            match decode_frame(&b2) {
+                Ok(Message::Request(got)) => {
+                    ensure(req_eq(&second, &got), "second frame corrupted")
+                }
+                other => Err(format!("second decode: {other:?}")),
+            }
+        });
+    }
+
+    #[test]
+    fn random_garbage_never_panics() {
+        check("wire garbage", 300, |rng| {
+            let n = rng.usize_in(0, 256);
+            let bytes: Vec<u8> =
+                (0..n).map(|_| rng.range(0, 255) as u8).collect();
+            let _ = decode_frame(&bytes);
+            let mut cur = std::io::Cursor::new(bytes);
+            loop {
+                match read_frame(&mut cur) {
+                    Ok(FrameRead::Frame(b)) => {
+                        let _ = decode_frame(&b);
+                    }
+                    Ok(FrameRead::Eof) | Ok(FrameRead::Idle) => break,
+                    Err(_) => break,
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn status_codes_roundtrip_and_display() {
+        for s in [
+            Status::Ok,
+            Status::Shed,
+            Status::DeadlineExceeded,
+            Status::BadRequest,
+            Status::Internal,
+        ] {
+            assert_eq!(Status::from_code(s.code()), Some(s));
+        }
+        assert_eq!(Status::from_code(99), None);
+        assert_eq!(Status::DeadlineExceeded.to_string(), "DEADLINE_EXCEEDED");
+        assert!(Status::Shed.retryable());
+        assert!(!Status::BadRequest.retryable());
+    }
+
+    #[test]
+    fn zero_dims_rejected() {
+        let req = Request::Gemm {
+            id: 1,
+            deadline_us: 0,
+            m: 0,
+            n: 4,
+            k: 4,
+            a: vec![],
+            b: vec![0.0; 16],
+        };
+        let frame = encode_request(&req);
+        match decode_frame(&frame[4..]) {
+            Err(WireError::BadPayload(_)) => {}
+            other => panic!("expected BadPayload, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Integration e2e for the TCP serving tier: spawns REAL `streamk
+//! serve --listen` daemon processes (cargo builds the binary for us —
+//! `CARGO_BIN_EXE_streamk`) and drives them over loopback.
+//!
+//! The full gate matrix lives in [`streamk::net::e2e`]; this test runs
+//! the two profile-independent pieces — the smoke (1 daemon + 1 client
+//! process, graceful drain, conservation, >90% plan hit rate) and the
+//! tentpole kill-one-of-two failover run. The live adversarial
+//! scenario replays execute big GEMMs for real and stay in the
+//! optimized `e2e_net` driver (`cargo run --release --bin e2e_net`).
+
+use std::path::Path;
+
+use streamk::net::e2e;
+
+fn bin() -> &'static Path {
+    Path::new(env!("CARGO_BIN_EXE_streamk"))
+}
+
+#[test]
+fn serve_daemon_smoke_over_tcp() {
+    let msg = e2e::run_smoke(bin()).expect("net smoke must pass");
+    println!("{msg}");
+}
+
+#[test]
+fn kill_one_of_two_servers_mid_run() {
+    let msg = e2e::run_kill_one(bin()).expect("kill-one e2e must pass");
+    println!("{msg}");
+}
